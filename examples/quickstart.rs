@@ -1,0 +1,46 @@
+//! Quickstart: a 4-client heterogeneous federation in ~30 lines.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Four clients with different consumer GPUs train a shared CNN for five
+//! rounds; BouquetFL wraps each `fit` in a hardware-restricted environment,
+//! so the loss curve comes from *real* AOT/PJRT training while the round
+//! durations come from the emulated devices.
+
+use bouquetfl::fl::launcher::{launch, HardwareSource, LaunchOptions};
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let opts = LaunchOptions {
+        clients: 4,
+        rounds: 5,
+        samples_per_client: 96,
+        local_steps: 2,
+        batch: 32,
+        eval_every: 5,
+        hardware: HardwareSource::Manual(vec![
+            "gtx-1060".into(),   // 2016 mid-range
+            "gtx-1650".into(),   // 2019 budget
+            "rtx-2070".into(),   // 2018 high-end
+            "rtx-3060".into(),   // 2021 mid-range
+        ]),
+        ..Default::default()
+    };
+
+    println!("host: {}", opts.host.describe());
+    let outcome = launch(&opts)?;
+
+    println!("\nclient hardware:");
+    for (i, p) in outcome.profiles.iter().enumerate() {
+        println!("  client {i}: {}", p.describe());
+    }
+
+    println!("\nround  train-loss  emu-round");
+    for r in &outcome.history.rounds {
+        println!(
+            "{:>5}  {:>10.4}  {:>8.3}s",
+            r.round, r.train_loss, r.emu_round_s
+        );
+    }
+    println!("\n{}", outcome.history.summary());
+    Ok(())
+}

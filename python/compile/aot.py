@@ -1,0 +1,156 @@
+"""AOT bridge: lower every L2 entry point to HLO *text* + manifest.json.
+
+Run once by `make artifacts`; Python is never on the request path.  The Rust
+runtime (rust/src/runtime/) loads these with `HloModuleProto::from_text_file`,
+compiles them on the PJRT CPU client, and executes them from the L3 hot path.
+
+HLO TEXT, not `.serialize()`: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids which xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`);
+the text parser reassigns ids, so text round-trips cleanly.  See
+/opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# Artifact matrix. Kept deliberately small: each variant is one HLO module
+# the Rust runtime compiles at startup (compile time matters on 1 vCPU).
+TRAIN_BATCHES = (16, 32)
+SCAN_VARIANTS = ((4, 32),)  # (K local steps, batch)
+EVAL_BATCHES = (128,)
+AGG_KS = (4, 8, 16)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def build_artifacts() -> dict[str, object]:
+    """Returns {filename: lowered-jax-computation} plus the manifest dict."""
+    p = model.NUM_PARAMS
+    hw, c = model.IMAGE_HW, model.IMAGE_C
+    lowered: dict[str, object] = {}
+    entries: list[dict[str, object]] = []
+
+    def add(name: str, kind: str, fn, args, **meta):
+        lowered[f"{name}.hlo.txt"] = jax.jit(fn).lower(*args)
+        entries.append({"name": name, "file": f"{name}.hlo.txt", "kind": kind, **meta})
+
+    add("init_params", "init", model.init_params, (_spec((), jnp.int32),))
+
+    for b in TRAIN_BATCHES:
+        add(
+            f"train_step_b{b}",
+            "train",
+            model.train_step,
+            (_spec((p,)), _spec((b, hw, hw, c)), _spec((b,), jnp.int32), _spec(())),
+            batch=b,
+        )
+
+    for b in TRAIN_BATCHES:
+        add(
+            f"train_step_prox_b{b}",
+            "train_prox",
+            model.train_step_prox,
+            (
+                _spec((p,)),
+                _spec((p,)),
+                _spec((b, hw, hw, c)),
+                _spec((b,), jnp.int32),
+                _spec(()),
+                _spec(()),
+            ),
+            batch=b,
+        )
+
+    for k, b in SCAN_VARIANTS:
+        add(
+            f"train_steps_k{k}_b{b}",
+            "train_scan",
+            model.train_steps,
+            (
+                _spec((p,)),
+                _spec((k, b, hw, hw, c)),
+                _spec((k, b), jnp.int32),
+                _spec(()),
+            ),
+            batch=b,
+            k=k,
+        )
+
+    for b in EVAL_BATCHES:
+        add(
+            f"eval_step_b{b}",
+            "eval",
+            model.eval_step,
+            (_spec((p,)), _spec((b, hw, hw, c)), _spec((b,), jnp.int32)),
+            batch=b,
+        )
+
+    for k in AGG_KS:
+        add(
+            f"aggregate_k{k}",
+            "aggregate",
+            model.aggregate,
+            (_spec((k, p)), _spec((k,))),
+            k=k,
+        )
+
+    manifest = {
+        "schema_version": 1,
+        "num_params": p,
+        "image_hw": hw,
+        "image_c": c,
+        "num_classes": model.NUM_CLASSES,
+        "param_specs": [
+            {"name": name, "shape": list(shape)} for name, shape in model.PARAM_SPECS
+        ],
+        "artifacts": entries,
+    }
+    return {"lowered": lowered, "manifest": manifest}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    built = build_artifacts()
+    total = 0
+    for fname, lowered in built["lowered"].items():
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        total += len(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(built["manifest"], f, indent=2)
+    print(f"wrote {mpath}; {len(built['lowered'])} HLO modules, {total} chars total")
+
+
+if __name__ == "__main__":
+    main()

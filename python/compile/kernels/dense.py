@@ -1,0 +1,153 @@
+"""L1 Pallas kernels: tiled dense (fully-connected) layer, forward + backward.
+
+This is the compute hot-spot of the executed model (the FC layer dominates
+its FLOPs).  The paper's workload is CUDA training; per DESIGN.md
+§Hardware-Adaptation we do not port CUDA threadblock tiling mechanically but
+restate it for TPU:
+
+  * the matmul is tiled for VMEM with ``BlockSpec`` blocks of
+    (BM, BK) x (BK, BN) feeding the MXU systolic array;
+  * the grid iterates (M/BM, N/BN, K/BK) with the K axis innermost, and the
+    output block is accumulated in place across the K steps — the TPU
+    analogue of a CUDA shared-memory K-loop;
+  * the backward pass is two more tiled matmuls (dX = dY·Wᵀ, dW = Xᵀ·dY)
+    wired through ``jax.custom_vjp`` so the whole training step lowers into
+    a single HLO module.
+
+Kernels run with ``interpret=True``: the CPU PJRT client cannot execute
+Mosaic custom-calls, so the kernel is lowered to plain HLO (a sequential
+grid loop).  Real-TPU VMEM/MXU estimates live in DESIGN.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes.  (128, 128) output tiles with a 512-deep K block:
+#   VMEM per grid step = BM*BK + BK*BN + BM*BN floats
+#                      = (128*512 + 512*128 + 128*128) * 4 B = 576 KiB,
+# comfortably inside a 16 MiB VMEM budget even with double buffering.
+BM = 128
+BN = 128
+BK = 512
+
+# Flag threaded through pallas_call so tests can flip it; CPU must interpret.
+INTERPRET = True
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    """One (BM, BN) output tile; accumulates over the K grid axis."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+def _ceil_to(value: int, mult: int) -> int:
+    return ((value + mult - 1) // mult) * mult
+
+
+def _pick_blocks(m: int, k: int, n: int) -> tuple[int, int, int]:
+    """Shrink the default tiles for small problems (tests sweep tiny shapes)."""
+    bm = min(BM, _ceil_to(m, 8))
+    bn = min(BN, _ceil_to(n, 8))
+    bk = min(BK, _ceil_to(k, 8))
+    return bm, bn, bk
+
+
+def matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Tiled Pallas matmul ``x @ w`` for arbitrary (M, K) x (K, N) f32 inputs.
+
+    Inputs whose dimensions are not multiples of the tile sizes are
+    zero-padded up to the next multiple (zero padding is exact for matmul)
+    and the result is sliced back.
+    """
+    if x.ndim != 2 or w.ndim != 2:
+        raise ValueError(f"matmul expects 2-D operands, got {x.shape} @ {w.shape}")
+    m, k = x.shape
+    k2, n = w.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: {x.shape} @ {w.shape}")
+
+    bm, bn, bk = _pick_blocks(m, k, n)
+    mp, kp, np_ = _ceil_to(m, bm), _ceil_to(k, bk), _ceil_to(n, bn)
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    wp = jnp.pad(w, ((0, kp - k), (0, np_ - n)))
+
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(mp // bm, np_ // bn, kp // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        interpret=INTERPRET,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+def _bias_kernel(y_ref, b_ref, o_ref):
+    o_ref[...] = y_ref[...] + b_ref[...]
+
+
+def add_bias(y: jax.Array, b: jax.Array) -> jax.Array:
+    """Row-broadcast bias add as a (bandwidth-bound) Pallas kernel."""
+    m, n = y.shape
+    bm, bn, _ = _pick_blocks(m, 8, n)
+    mp, np_ = _ceil_to(m, bm), _ceil_to(n, bn)
+    yp = jnp.pad(y, ((0, mp - m), (0, np_ - n)))
+    bp = jnp.pad(b.reshape(1, -1), ((0, 0), (0, np_ - n)))
+    out = pl.pallas_call(
+        _bias_kernel,
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), y.dtype),
+        interpret=INTERPRET,
+    )(yp, bp)
+    return out[:m, :n]
+
+
+@jax.custom_vjp
+def dense(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Fully-connected layer ``x @ w + b`` built from Pallas kernels.
+
+    Differentiable via a custom VJP whose backward pass is itself two tiled
+    Pallas matmuls, so fwd+bwd of the training step stay on the kernel path.
+    """
+    return add_bias(matmul(x, w), b)
+
+
+def _dense_fwd(x, w, b):
+    return dense(x, w, b), (x, w)
+
+
+def _dense_bwd(residuals, g):
+    x, w = residuals
+    dx = matmul(g, w.T)        # dX = dY · Wᵀ
+    dw = matmul(x.T, g)        # dW = Xᵀ · dY
+    db = jnp.sum(g, axis=0)    # bias reduce (XLA fuses this)
+    return dx, dw, db
+
+
+dense.defvjp(_dense_fwd, _dense_bwd)
+
+
+@functools.lru_cache(maxsize=None)
+def vmem_bytes(bm: int = BM, bn: int = BN, bk: int = BK, dtype_bytes: int = 4) -> int:
+    """VMEM working-set estimate for one grid step (used by DESIGN.md §Perf)."""
+    return (bm * bk + bk * bn + bm * bn) * dtype_bytes

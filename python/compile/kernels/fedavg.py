@@ -1,0 +1,65 @@
+"""L1 Pallas kernel: FedAvg weighted aggregation over stacked client updates.
+
+Aggregation is the server-side hot loop of FedAvg: given K client parameter
+vectors stacked as ``updates[K, P]`` and per-client weights ``w[K]`` (already
+normalised by total example count), produce ``sum_k w[k] * updates[k]``.
+
+The kernel is bandwidth-bound: each grid step streams one ``[K, BP]`` block
+from HBM into VMEM and contracts it against the weight vector on the MXU
+(as a (1,K)x(K,BP) matmul).  ``BlockSpec`` expresses the HBM→VMEM streaming
+schedule that a CUDA implementation would express with threadblocks.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# One block = K * BP * 4 bytes of VMEM; for K<=32, BP=8192 that is <= 1 MiB.
+BP = 8192
+
+INTERPRET = True
+
+
+def _fedavg_kernel(w_ref, u_ref, o_ref):
+    # (1, K) @ (K, BP) -> (1, BP): a rank-1 MXU contraction per block.
+    o_ref[...] = jnp.dot(
+        w_ref[...], u_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+def _ceil_to(value: int, mult: int) -> int:
+    return ((value + mult - 1) // mult) * mult
+
+
+def aggregate(updates: jax.Array, weights: jax.Array) -> jax.Array:
+    """Weighted sum ``sum_k weights[k] * updates[k, :]`` via Pallas.
+
+    ``updates``: f32[K, P] stacked client parameter vectors.
+    ``weights``: f32[K] aggregation weights (caller normalises).
+    Returns f32[P].
+    """
+    if updates.ndim != 2:
+        raise ValueError(f"updates must be [K, P], got {updates.shape}")
+    k, p = updates.shape
+    if weights.shape != (k,):
+        raise ValueError(f"weights must be [{k}], got {weights.shape}")
+
+    bp = min(BP, _ceil_to(p, 8))
+    pp = _ceil_to(p, bp)
+    up = jnp.pad(updates, ((0, 0), (0, pp - p)))
+    wrow = weights.reshape(1, k)
+
+    out = pl.pallas_call(
+        _fedavg_kernel,
+        grid=(pp // bp,),
+        in_specs=[
+            pl.BlockSpec((1, k), lambda i: (0, 0)),
+            pl.BlockSpec((k, bp), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, bp), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, pp), updates.dtype),
+        interpret=INTERPRET,
+    )(wrow, up)
+    return out[0, :p]

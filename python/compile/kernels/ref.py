@@ -1,0 +1,26 @@
+"""Pure-jnp oracles for every Pallas kernel — the correctness ground truth.
+
+pytest (python/tests/test_kernels.py) sweeps shapes/dtypes with hypothesis
+and asserts `assert_allclose(kernel(...), ref(...))`.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    return jnp.dot(x, w)
+
+
+def dense_ref(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.dot(x, w) + b[None, :]
+
+
+def aggregate_ref(updates: jax.Array, weights: jax.Array) -> jax.Array:
+    return jnp.einsum("k,kp->p", weights, updates)
+
+
+def sgd_update_ref(params: jax.Array, grads: jax.Array, lr) -> jax.Array:
+    return params - jnp.asarray(lr, params.dtype) * grads

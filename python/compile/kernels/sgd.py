@@ -1,0 +1,52 @@
+"""L1 Pallas kernel: fused SGD parameter update over the flat parameter vector.
+
+``params' = params - lr * grads`` fused into one streaming pass: both vectors
+are read once from HBM, combined in VMEM, written once.  Keeping the update
+as a single fused kernel (instead of per-tensor XLA ops) is what makes the
+optimiser step bandwidth-optimal — 3 * P * 4 bytes of traffic, the floor.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BP = 8192
+
+INTERPRET = True
+
+
+def _sgd_kernel(lr_ref, p_ref, g_ref, o_ref):
+    o_ref[...] = p_ref[...] - lr_ref[0, 0] * g_ref[...]
+
+
+def _ceil_to(value: int, mult: int) -> int:
+    return ((value + mult - 1) // mult) * mult
+
+
+def sgd_update(params: jax.Array, grads: jax.Array, lr: jax.Array) -> jax.Array:
+    """Fused ``params - lr * grads`` for flat f32[P] vectors; ``lr`` is a scalar."""
+    if params.shape != grads.shape or params.ndim != 1:
+        raise ValueError(f"expected matching 1-D shapes, got {params.shape} / {grads.shape}")
+    p = params.shape[0]
+    bp = min(BP, _ceil_to(p, 8))
+    pp = _ceil_to(p, bp)
+    pp_pad = pp - p
+    pv = jnp.pad(params.reshape(1, -1), ((0, 0), (0, pp_pad)))
+    gv = jnp.pad(grads.reshape(1, -1), ((0, 0), (0, pp_pad)))
+    lr2 = jnp.asarray(lr, dtype=params.dtype).reshape(1, 1)
+
+    out = pl.pallas_call(
+        _sgd_kernel,
+        grid=(pp // bp,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, bp), lambda i: (0, i)),
+            pl.BlockSpec((1, bp), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, bp), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, pp), params.dtype),
+        interpret=INTERPRET,
+    )(lr2, pv, gv)
+    return out[0, :p]

@@ -1,0 +1,204 @@
+"""L2: the federated workload's compute graph in JAX, calling the L1 kernels.
+
+The executed model (DESIGN.md §7) is a compact CNN over 32x32x3 synthetic
+CIFAR-like data — small enough that fwd+bwd at batch 32 runs in ~0.1 s on the
+single-vCPU PJRT-CPU host, so a few hundred federated steps are feasible.
+The paper's ResNet-18 is carried on the Rust side as a *cost descriptor*
+(`modelcost::resnet`) for the Fig. 2 timing study.
+
+Every exported function works over a **flat f32[P] parameter vector** so the
+Rust runtime never needs pytree logic; `PARAM_SPECS` (mirrored into
+artifacts/manifest.json) defines the layout.
+
+Exported entry points (lowered to HLO text by aot.py):
+  train_step(params, x, y, lr)        -> (params', loss)
+  train_steps(params, xs, ys, lr)     -> (params', mean_loss)   # lax.scan, K local steps in ONE HLO call
+  eval_step(params, x, y)             -> (loss, correct_count)
+  init_params(seed)                   -> params
+  aggregate(stacked, weights)         -> params                 # Pallas FedAvg kernel
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from compile.kernels import dense as dense_k
+from compile.kernels import fedavg as fedavg_k
+from compile.kernels import sgd as sgd_k
+
+# ---------------------------------------------------------------------------
+# Architecture constants (mirrored in rust/src/modelcost/cnn.rs and manifest)
+# ---------------------------------------------------------------------------
+
+IMAGE_HW = 32
+IMAGE_C = 3
+NUM_CLASSES = 10
+
+#: (name, shape) in flat-vector order.
+PARAM_SPECS: list[tuple[str, tuple[int, ...]]] = [
+    ("conv1/w", (3, 3, IMAGE_C, 16)),
+    ("conv1/b", (16,)),
+    ("conv2/w", (3, 3, 16, 32)),
+    ("conv2/b", (32,)),
+    ("conv3/w", (3, 3, 32, 64)),
+    ("conv3/b", (64,)),
+    ("fc1/w", (8 * 8 * 64, 128)),
+    ("fc1/b", (128,)),
+    ("fc2/w", (128, NUM_CLASSES)),
+    ("fc2/b", (NUM_CLASSES,)),
+]
+
+#: Total parameter count P.
+NUM_PARAMS = sum(math.prod(shape) for _, shape in PARAM_SPECS)
+
+
+def unflatten(flat: jax.Array) -> dict[str, jax.Array]:
+    """Split the flat f32[P] vector into named tensors per PARAM_SPECS."""
+    params = {}
+    offset = 0
+    for name, shape in PARAM_SPECS:
+        size = math.prod(shape)
+        params[name] = flat[offset : offset + size].reshape(shape)
+        offset += size
+    assert offset == NUM_PARAMS
+    return params
+
+
+def flatten(params: dict[str, jax.Array]) -> jax.Array:
+    """Inverse of `unflatten`."""
+    return jnp.concatenate([params[name].reshape(-1) for name, _ in PARAM_SPECS])
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+
+def _conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """3x3 SAME conv, NHWC / HWIO."""
+    y = lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(1, 1),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return y + b[None, None, None, :]
+
+
+def _maxpool2(x: jax.Array) -> jax.Array:
+    """2x2 max-pool, stride 2."""
+    return lax.reduce_window(
+        x, -jnp.inf, lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def forward(flat: jax.Array, x: jax.Array) -> jax.Array:
+    """Logits for a batch ``x: f32[B, 32, 32, 3]`` -> f32[B, NUM_CLASSES]."""
+    p = unflatten(flat)
+    h = jax.nn.relu(_conv(x, p["conv1/w"], p["conv1/b"]))   # [B,32,32,16]
+    h = _maxpool2(h)                                        # [B,16,16,16]
+    h = jax.nn.relu(_conv(h, p["conv2/w"], p["conv2/b"]))   # [B,16,16,32]
+    h = _maxpool2(h)                                        # [B, 8, 8,32]
+    h = jax.nn.relu(_conv(h, p["conv3/w"], p["conv3/b"]))   # [B, 8, 8,64]
+    h = h.reshape(h.shape[0], -1)                           # [B, 4096]
+    # The FLOP hot-spot: Pallas tiled dense (fwd AND bwd via custom_vjp).
+    h = jax.nn.relu(dense_k.dense(h, p["fc1/w"], p["fc1/b"]))  # [B, 128]
+    return dense_k.dense(h, p["fc2/w"], p["fc2/b"])         # [B, 10]
+
+
+def loss_fn(flat: jax.Array, x: jax.Array, y: jax.Array) -> jax.Array:
+    """Mean softmax cross-entropy; ``y: i32[B]`` class labels."""
+    logits = forward(flat, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[:, None].astype(jnp.int32), axis=-1)
+    return jnp.mean(nll)
+
+
+# ---------------------------------------------------------------------------
+# Exported entry points
+# ---------------------------------------------------------------------------
+
+
+def train_step(flat, x, y, lr):
+    """One SGD step. Returns (params', loss).
+
+    Single `value_and_grad` — loss and gradients share the forward pass
+    (no recompute), and the update is the fused Pallas SGD kernel.
+    """
+    loss, grads = jax.value_and_grad(loss_fn)(flat, x, y)
+    return sgd_k.sgd_update(flat, grads, lr), loss
+
+
+def train_steps(flat, xs, ys, lr):
+    """K local SGD steps fused into ONE HLO call via `lax.scan`.
+
+    ``xs: f32[K, B, 32, 32, 3]``, ``ys: i32[K, B]``.  Returns
+    (params', mean_loss).  Amortises the per-call PJRT overhead — the L2
+    optimisation recorded in EXPERIMENTS.md §Perf.
+    """
+
+    def body(carry, batch):
+        bx, by = batch
+        new_flat, loss = train_step(carry, bx, by, lr)
+        return new_flat, loss
+
+    # unroll=True: a rolled `while` loop blocks XLA-CPU fusion across the
+    # scan body (measured 3x slower per step than a single train_step call
+    # — EXPERIMENTS.md §Perf); fully unrolling restores fusion while keeping
+    # the K steps in ONE PJRT call.
+    final, losses = lax.scan(body, flat, (xs, ys), unroll=True)
+    return final, jnp.mean(losses)
+
+
+def train_step_prox(flat, global_flat, x, y, lr, mu):
+    """FedProx local step: loss + (mu/2)·||w − w_global||² (Li et al., 2020).
+
+    Used by the Rust `fl::strategy::FedProx`; the proximal term regularises
+    client drift under heterogeneous local epochs — the statistical
+    counterpart of the hardware heterogeneity BouquetFL emulates.
+    """
+
+    def prox_loss(f, gx, x, y):
+        diff = f - gx
+        return loss_fn(f, x, y) + 0.5 * mu * jnp.vdot(diff, diff)
+
+    loss, grads = jax.value_and_grad(prox_loss)(flat, global_flat, x, y)
+    return sgd_k.sgd_update(flat, grads, lr), loss
+
+
+def eval_step(flat, x, y):
+    """Returns (mean loss, correct-prediction count) for one eval batch."""
+    logits = forward(flat, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[:, None].astype(jnp.int32), axis=-1)
+    correct = jnp.sum(
+        (jnp.argmax(logits, axis=-1) == y.astype(jnp.int32)).astype(jnp.float32)
+    )
+    return jnp.mean(nll), correct
+
+
+def init_params(seed):
+    """He-normal init from an i32 seed -> flat f32[P]."""
+    key = jax.random.PRNGKey(seed.astype(jnp.uint32))
+    parts = []
+    for name, shape in PARAM_SPECS:
+        key, sub = jax.random.split(key)
+        if name.endswith("/b"):
+            parts.append(jnp.zeros(shape, jnp.float32).reshape(-1))
+        else:
+            fan_in = math.prod(shape[:-1])
+            std = math.sqrt(2.0 / fan_in)
+            parts.append(
+                (jax.random.normal(sub, shape, jnp.float32) * std).reshape(-1)
+            )
+    return jnp.concatenate(parts)
+
+
+def aggregate(stacked, weights):
+    """FedAvg: weighted sum of K stacked flat updates via the Pallas kernel."""
+    return fedavg_k.aggregate(stacked, weights)

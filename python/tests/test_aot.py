@@ -1,0 +1,55 @@
+"""AOT bridge: artifacts lower to valid HLO text, manifest is consistent."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def built():
+    return aot.build_artifacts()
+
+
+def test_manifest_consistency(built):
+    m = built["manifest"]
+    assert m["num_params"] == model.NUM_PARAMS
+    assert m["image_hw"] == model.IMAGE_HW
+    assert m["num_classes"] == model.NUM_CLASSES
+    files = {e["file"] for e in m["artifacts"]}
+    assert files == set(built["lowered"].keys())
+    kinds = {e["kind"] for e in m["artifacts"]}
+    assert kinds == {"init", "train", "train_prox", "train_scan", "eval", "aggregate"}
+
+
+def test_param_specs_in_manifest_match_model(built):
+    specs = built["manifest"]["param_specs"]
+    assert [(s["name"], tuple(s["shape"])) for s in specs] == model.PARAM_SPECS
+
+
+def test_every_artifact_lowers_to_hlo_text(built):
+    for fname, lowered in built["lowered"].items():
+        text = aot.to_hlo_text(lowered)
+        assert text.startswith("HloModule"), fname
+        assert "ENTRY" in text, fname
+        # f32 params appear in every module signature
+        assert "f32" in text, fname
+
+
+def test_written_artifacts_match_repo(tmp_path):
+    """If artifacts/ exists at the repo root, it must be up to date."""
+    root = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    mpath = os.path.join(root, "manifest.json")
+    if not os.path.exists(mpath):
+        pytest.skip("artifacts/ not built")
+    with open(mpath) as f:
+        m = json.load(f)
+    assert m["num_params"] == model.NUM_PARAMS
+    for e in m["artifacts"]:
+        path = os.path.join(root, e["file"])
+        assert os.path.exists(path), e["file"]
+        with open(path) as f:
+            head = f.read(64)
+        assert head.startswith("HloModule"), e["file"]

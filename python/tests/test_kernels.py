@@ -1,0 +1,200 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes (including awkward non-tile-aligned ones) and
+random payloads; assert_allclose against the oracle is the core signal.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import dense, fedavg, ref, sgd
+
+SETTINGS = dict(deadline=None, max_examples=25)
+
+
+def _arr(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 70),
+    n=st.integers(1, 70),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, w = _arr(rng, m, k), _arr(rng, k, n)
+    np.testing.assert_allclose(
+        dense.matmul(x, w), ref.matmul_ref(x, w), rtol=1e-4, atol=1e-4
+    )
+
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [
+        (1, 1, 1),
+        (128, 512, 128),     # exactly one default tile
+        (129, 513, 129),     # one past the tile boundary
+        (32, 4096, 128),     # the model's fc1 shape
+        (32, 128, 10),       # the model's fc2 shape (non-aligned N)
+        (256, 8, 256),       # shallow K
+    ],
+)
+def test_matmul_shapes(m, k, n):
+    rng = np.random.default_rng(0)
+    x, w = _arr(rng, m, k), _arr(rng, k, n)
+    np.testing.assert_allclose(
+        dense.matmul(x, w), ref.matmul_ref(x, w), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_matmul_rejects_bad_shapes():
+    rng = np.random.default_rng(0)
+    with pytest.raises(ValueError):
+        dense.matmul(_arr(rng, 3, 4), _arr(rng, 5, 6))
+    with pytest.raises(ValueError):
+        dense.matmul(_arr(rng, 3), _arr(rng, 3, 2))
+
+
+def test_matmul_zero_input_gives_zero():
+    z = jnp.zeros((16, 32), jnp.float32)
+    w = jnp.ones((32, 8), jnp.float32)
+    assert float(jnp.abs(dense.matmul(z, w)).max()) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# dense (+ custom VJP)
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 40),
+    k=st.integers(1, 60),
+    n=st.integers(1, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dense_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, w, b = _arr(rng, m, k), _arr(rng, k, n), _arr(rng, n)
+    np.testing.assert_allclose(
+        dense.dense(x, w, b), ref.dense_ref(x, w, b), rtol=1e-4, atol=1e-4
+    )
+
+
+@settings(deadline=None, max_examples=10)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_dense_grads_match_autodiff_of_ref(seed):
+    """The hand-written Pallas VJP must equal autodiff of the oracle."""
+    rng = np.random.default_rng(seed)
+    x, w, b = _arr(rng, 8, 24), _arr(rng, 24, 12), _arr(rng, 12)
+
+    def loss_k(x, w, b):
+        return jnp.sum(jax.nn.relu(dense.dense(x, w, b)) ** 2)
+
+    def loss_r(x, w, b):
+        return jnp.sum(jax.nn.relu(ref.dense_ref(x, w, b)) ** 2)
+
+    gk = jax.grad(loss_k, argnums=(0, 1, 2))(x, w, b)
+    gr = jax.grad(loss_r, argnums=(0, 1, 2))(x, w, b)
+    for a, b_ in zip(gk, gr):
+        np.testing.assert_allclose(a, b_, rtol=1e-3, atol=1e-3)
+
+
+def test_dense_jit_and_vmap_compose():
+    rng = np.random.default_rng(1)
+    x, w, b = _arr(rng, 4, 16), _arr(rng, 16, 8), _arr(rng, 8)
+    jitted = jax.jit(dense.dense)
+    np.testing.assert_allclose(jitted(x, w, b), ref.dense_ref(x, w, b), rtol=1e-4, atol=1e-4)
+
+
+def test_vmem_estimate_default_tiles_fit_budget():
+    # (128, 128, 512) tiles: must fit in 1/4 of a 16 MiB VMEM (double-buffer headroom).
+    assert dense.vmem_bytes() <= 16 * 1024 * 1024 // 4
+
+
+# ---------------------------------------------------------------------------
+# fedavg aggregation
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    k=st.integers(1, 12),
+    p=st.integers(1, 5000),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_aggregate_matches_ref(k, p, seed):
+    rng = np.random.default_rng(seed)
+    u = _arr(rng, k, p)
+    w = jnp.asarray(rng.random(k), jnp.float32)
+    np.testing.assert_allclose(
+        fedavg.aggregate(u, w), ref.aggregate_ref(u, w), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_aggregate_identity_weight():
+    """Weight vector e_i selects exactly client i's update."""
+    rng = np.random.default_rng(0)
+    u = _arr(rng, 5, 999)
+    for i in range(5):
+        w = jnp.zeros(5, jnp.float32).at[i].set(1.0)
+        np.testing.assert_allclose(fedavg.aggregate(u, w), u[i], rtol=1e-5, atol=1e-5)
+
+
+def test_aggregate_uniform_weights_is_mean():
+    rng = np.random.default_rng(0)
+    u = _arr(rng, 8, 4321)
+    w = jnp.full((8,), 1.0 / 8.0, jnp.float32)
+    np.testing.assert_allclose(fedavg.aggregate(u, w), jnp.mean(u, 0), rtol=1e-4, atol=1e-5)
+
+
+def test_aggregate_rejects_bad_shapes():
+    rng = np.random.default_rng(0)
+    with pytest.raises(ValueError):
+        fedavg.aggregate(_arr(rng, 4, 10), jnp.ones(3, jnp.float32))
+    with pytest.raises(ValueError):
+        fedavg.aggregate(_arr(rng, 10), jnp.ones(1, jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# sgd update
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    p=st.integers(1, 20000),
+    lr=st.floats(0.0, 1.0, allow_nan=False),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sgd_matches_ref(p, lr, seed):
+    rng = np.random.default_rng(seed)
+    params, grads = _arr(rng, p), _arr(rng, p)
+    np.testing.assert_allclose(
+        sgd.sgd_update(params, grads, jnp.float32(lr)),
+        ref.sgd_update_ref(params, grads, lr),
+        rtol=1e-5,
+        atol=1e-5,
+    )
+
+
+def test_sgd_zero_lr_is_identity():
+    rng = np.random.default_rng(0)
+    params, grads = _arr(rng, 777), _arr(rng, 777)
+    np.testing.assert_allclose(sgd.sgd_update(params, grads, jnp.float32(0.0)), params)
+
+
+def test_sgd_rejects_mismatched_shapes():
+    with pytest.raises(ValueError):
+        sgd.sgd_update(jnp.zeros(4), jnp.zeros(5), jnp.float32(0.1))

@@ -1,0 +1,145 @@
+"""L2 correctness: shapes, determinism, learning dynamics, flat-param layout."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+
+@pytest.fixture(scope="module")
+def params():
+    return jax.jit(model.init_params)(jnp.int32(7))
+
+
+def _synth(n, seed=0, noise=0.3):
+    """Learnable synthetic data: class-prototype images + gaussian noise."""
+    rs = np.random.RandomState(seed)
+    protos = rs.randn(model.NUM_CLASSES, model.IMAGE_HW, model.IMAGE_HW, model.IMAGE_C)
+    y = rs.randint(0, model.NUM_CLASSES, n)
+    x = protos[y] + noise * rs.randn(n, model.IMAGE_HW, model.IMAGE_HW, model.IMAGE_C)
+    return jnp.asarray(x, jnp.float32), jnp.asarray(y, jnp.int32)
+
+
+def test_num_params_matches_specs():
+    assert model.NUM_PARAMS == sum(math.prod(s) for _, s in model.PARAM_SPECS)
+    assert model.NUM_PARAMS == 549_290  # mirrored in rust/src/modelcost/cnn.rs
+
+
+def test_flatten_unflatten_roundtrip(params):
+    tree = model.unflatten(params)
+    assert set(tree) == {name for name, _ in model.PARAM_SPECS}
+    np.testing.assert_array_equal(model.flatten(tree), params)
+
+
+def test_init_deterministic_and_seed_sensitive():
+    a = jax.jit(model.init_params)(jnp.int32(3))
+    b = jax.jit(model.init_params)(jnp.int32(3))
+    c = jax.jit(model.init_params)(jnp.int32(4))
+    np.testing.assert_array_equal(a, b)
+    assert float(jnp.abs(a - c).max()) > 0
+
+
+def test_init_biases_zero(params):
+    tree = model.unflatten(params)
+    for name, _ in model.PARAM_SPECS:
+        if name.endswith("/b"):
+            assert float(jnp.abs(tree[name]).max()) == 0.0
+
+
+def test_forward_shape(params):
+    x, _ = _synth(5)
+    logits = model.forward(params, x)
+    assert logits.shape == (5, model.NUM_CLASSES)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_eval_step_counts_correct(params):
+    x, y = _synth(16)
+    loss, correct = jax.jit(model.eval_step)(params, x, y)
+    assert 0.0 <= float(correct) <= 16.0
+    assert float(loss) > 0.0
+
+
+def test_train_step_reduces_loss(params):
+    x, y = _synth(32, seed=1)
+    ts = jax.jit(model.train_step)
+    flat = params
+    first = None
+    for _ in range(25):
+        flat, loss = ts(flat, x, y, jnp.float32(0.02))
+        first = first if first is not None else float(loss)
+    assert float(loss) < 0.5 * first, (first, float(loss))
+
+
+def test_train_step_preserves_shape_and_finiteness(params):
+    x, y = _synth(32)
+    new, loss = jax.jit(model.train_step)(params, x, y, jnp.float32(0.01))
+    assert new.shape == (model.NUM_PARAMS,)
+    assert bool(jnp.isfinite(loss))
+    assert bool(jnp.all(jnp.isfinite(new)))
+
+
+def test_train_steps_scan_equals_unrolled(params):
+    """K fused local steps (lax.scan) == K sequential train_step calls."""
+    k, b = 3, 8
+    xs = jnp.stack([_synth(b, seed=i)[0] for i in range(k)])
+    ys = jnp.stack([_synth(b, seed=i)[1] for i in range(k)])
+    lr = jnp.float32(0.05)
+
+    seq = params
+    losses = []
+    ts = jax.jit(model.train_step)
+    for i in range(k):
+        seq, loss = ts(seq, xs[i], ys[i], lr)
+        losses.append(float(loss))
+
+    fused, mean_loss = jax.jit(model.train_steps)(params, xs, ys, lr)
+    np.testing.assert_allclose(fused, seq, rtol=2e-4, atol=2e-5)
+    np.testing.assert_allclose(float(mean_loss), np.mean(losses), rtol=1e-4)
+
+
+def test_aggregate_is_weighted_mean(params):
+    k = 4
+    rs = np.random.RandomState(0)
+    stacked = jnp.asarray(rs.randn(k, model.NUM_PARAMS), jnp.float32)
+    w = jnp.asarray([0.4, 0.3, 0.2, 0.1], jnp.float32)
+    out = jax.jit(model.aggregate)(stacked, w)
+    np.testing.assert_allclose(
+        out, jnp.einsum("k,kp->p", w, stacked), rtol=1e-4, atol=1e-5
+    )
+
+
+def test_prox_step_mu_zero_equals_plain_step(params):
+    x, y = _synth(16)
+    lr = jnp.float32(0.05)
+    plain, l1 = jax.jit(model.train_step)(params, x, y, lr)
+    prox, l2 = jax.jit(model.train_step_prox)(
+        params, params, x, y, lr, jnp.float32(0.0)
+    )
+    np.testing.assert_allclose(prox, plain, rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(float(l2), float(l1), rtol=1e-6)
+
+
+def test_prox_step_pulls_towards_global(params):
+    """With huge mu the update must shrink the distance to the global params."""
+    x, y = _synth(16)
+    rs = np.random.RandomState(3)
+    local = params + jnp.asarray(
+        0.1 * rs.randn(model.NUM_PARAMS), jnp.float32
+    )
+    before = float(jnp.linalg.norm(local - params))
+    new, _ = jax.jit(model.train_step_prox)(
+        local, params, x, y, jnp.float32(0.01), jnp.float32(50.0)
+    )
+    after = float(jnp.linalg.norm(new - params))
+    assert after < before
+
+
+def test_zero_lr_train_step_is_identity(params):
+    x, y = _synth(16)
+    new, _ = jax.jit(model.train_step)(params, x, y, jnp.float32(0.0))
+    np.testing.assert_allclose(new, params, atol=1e-7)

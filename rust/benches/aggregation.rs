@@ -1,0 +1,63 @@
+//! Aggregation hot-path benchmark: Rust weighted-sum vs the Pallas HLO
+//! aggregate artifact vs robust trimmed-mean, at the real parameter count
+//! (P = 549,290) across fan-ins.
+//!
+//!     cargo bench --bench aggregation
+
+use bouquetfl::fl::ParamVector;
+use bouquetfl::runtime::ModelExecutor;
+use bouquetfl::util::benchkit::{section, Bench};
+use bouquetfl::util::rng::Pcg;
+
+fn updates(k: usize, p: usize, seed: u64) -> Vec<ParamVector> {
+    let mut rng = Pcg::seeded(seed);
+    (0..k)
+        .map(|_| ParamVector::from_vec((0..p).map(|_| rng.f32() - 0.5).collect()))
+        .collect()
+}
+
+fn main() {
+    let p = 549_290;
+    section(&format!("aggregation over flat f32[{p}] updates"));
+
+    let mut b = Bench::new(2.0);
+    for k in [4usize, 8, 16, 32] {
+        let us = updates(k, p, k as u64);
+        let w = vec![1.0 / k as f32; k];
+        b.run(&format!("rust weighted_sum (blocked) k={k}"), || {
+            ParamVector::weighted_sum(&us, &w).as_slice()[0]
+        });
+        b.run(&format!("rust weighted_sum (naive)   k={k}"), || {
+            ParamVector::weighted_sum_naive(&us, &w).as_slice()[0]
+        });
+    }
+
+
+    for k in [8usize, 16] {
+        let us = updates(k, p, 100 + k as u64);
+        b.run(&format!("rust trimmed_mean k={k} trim=1"), || {
+            ParamVector::trimmed_mean(&us, 1).as_slice()[0]
+        });
+    }
+
+    section("Pallas HLO aggregate artifact (includes literal marshalling)");
+    match ModelExecutor::new("artifacts") {
+        Ok(mut ex) => {
+            let mut b = Bench::new(3.0).with_max_iters(30);
+            for k in ex.runtime().manifest.agg_ks() {
+                let us = updates(k as usize, p, 200 + k as u64);
+                let weights = vec![1.0 / k as f32; k as usize];
+                b.run(&format!("hlo aggregate k={k}"), || {
+                    ex.aggregate(&us, &weights).expect("agg").as_slice()[0]
+                });
+            }
+            println!(
+                "note: the HLO path pays host<->literal copies (~{} MiB per call at k=16);\n\
+                 the Rust kernel is the production default, the HLO kernel exercises the\n\
+                 Pallas aggregation path end-to-end.",
+                (16 * p * 4) / (1024 * 1024)
+            );
+        }
+        Err(e) => println!("skipping HLO aggregation ({e}) — run `make artifacts`"),
+    }
+}

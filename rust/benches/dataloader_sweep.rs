@@ -1,0 +1,41 @@
+//! Regenerates the paper's **§4.2 dataloader claim**: "data loading speed
+//! differences by emulating CPUs with different core counts" — the
+//! loader-bound -> compute-bound transition across the CPU database.
+//!
+//!     cargo bench --bench dataloader_sweep
+
+use bouquetfl::analysis::claims::dataloader_sweep;
+use bouquetfl::emu::DataLoaderModel;
+use bouquetfl::hardware::cpu_by_slug;
+use bouquetfl::modelcost::resnet18_cifar;
+use bouquetfl::util::benchkit::{section, Bench};
+
+fn main() {
+    section("§4.2 dataloader sweep: step time vs host CPU (RTX 4070 Super)");
+    let (table, rows) = dataloader_sweep("rtx-4070-super", 32);
+    println!("{}", table.render());
+    let bound = rows.iter().filter(|(_, _, b)| *b).count();
+    println!("loader-bound CPUs at batch 32: {bound}/{}", rows.len());
+
+    section("same sweep on a slower GPU (GTX 1060): fewer CPUs bottleneck");
+    let (table, rows) = dataloader_sweep("gtx-1060", 32);
+    println!("{}", table.render());
+    let bound = rows.iter().filter(|(_, _, b)| *b).count();
+    println!("loader-bound CPUs at batch 32: {bound}/{}", rows.len());
+
+    section("worker-count scaling (Ryzen 7 1800X)");
+    let cpu = cpu_by_slug("ryzen-7-1800x").unwrap();
+    let w = resnet18_cifar();
+    for workers in [1u32, 2, 4, 8] {
+        let m = DataLoaderModel::new(cpu).with_workers(workers);
+        println!(
+            "  {workers} workers: {:>8.0} samples/s, batch-32 in {:.2} ms",
+            m.samples_per_sec(w.input_bytes),
+            m.batch_seconds(&w, 32) * 1e3
+        );
+    }
+
+    section("harness cost");
+    let mut b = Bench::new(0.3);
+    b.run("full cpu sweep", || dataloader_sweep("rtx-4070-super", 32).1.len());
+}

@@ -1,0 +1,64 @@
+//! End-to-end round benchmark: a real federated round through the full
+//! stack (PJRT training + BouquetFL restriction + aggregation), plus the
+//! L3 hot-path components in isolation.
+//!
+//!     cargo bench --bench e2e_round
+
+use bouquetfl::fl::launcher::{launch, HardwareSource, LaunchOptions};
+use bouquetfl::util::benchkit::{section, Bench};
+
+fn opts(rounds: u32, parallel: usize) -> LaunchOptions {
+    LaunchOptions {
+        clients: 4,
+        rounds,
+        samples_per_client: 64,
+        eval_samples: 0,
+        batch: 32,
+        local_steps: 4,
+        eval_every: 0,
+        max_parallel: parallel,
+        hardware: HardwareSource::Manual(vec![
+            "gtx-1060".into(),
+            "gtx-1650".into(),
+            "rtx-2070".into(),
+            "rtx-3060".into(),
+        ]),
+        seed: 1,
+        ..Default::default()
+    }
+}
+
+fn main() {
+    section("end-to-end federated round (4 clients x 4 local steps, batch 32)");
+    let mut b = Bench::new(20.0).with_max_iters(3);
+    b.run("full round, sequential", || {
+        launch(&opts(1, 1)).expect("round").history.rounds.len()
+    });
+    b.run("full round, limited-parallel(4)", || {
+        launch(&opts(1, 4)).expect("round").history.rounds.len()
+    });
+
+    section("amortisation over 5 rounds (compile once, round loop hot)");
+    let mut b5 = Bench::new(40.0).with_max_iters(2);
+    b5.run("5 rounds, sequential", || {
+        launch(&opts(5, 1)).expect("rounds").history.rounds.len()
+    });
+
+    // Steps/second of real training through the whole stack.
+    section("throughput");
+    let t0 = std::time::Instant::now();
+    let outcome = launch(&opts(5, 1)).expect("rounds");
+    let host_s = t0.elapsed().as_secs_f64();
+    let steps = 5.0 * 4.0 * 4.0; // rounds x clients x local steps
+    println!(
+        "real training steps/s through full stack: {:.1}  (host {:.1}s for {} steps)",
+        steps / host_s,
+        host_s,
+        steps
+    );
+    println!(
+        "emulated/host time ratio: {:.1}x (emulated {:.1}s of ResNet-18-class hardware time)",
+        outcome.history.total_emu_seconds() / host_s,
+        outcome.history.total_emu_seconds()
+    );
+}

@@ -1,0 +1,56 @@
+//! Energy extension: per-step power/energy of the emulated devices while
+//! training ResNet-18 — the efficiency dimension of hardware heterogeneity
+//! (slow devices are not only late, they can burn more energy per sample).
+//!
+//!     cargo bench --bench energy
+
+use bouquetfl::emu::{step_energy, GpuTimingModel, Optimizer};
+use bouquetfl::hardware::cpu_by_slug;
+use bouquetfl::hardware::gpu::FIG2_GPUS;
+use bouquetfl::hardware::gpu_by_slug;
+use bouquetfl::modelcost::resnet18_cifar;
+use bouquetfl::util::benchkit::section;
+use bouquetfl::util::table::{fnum, fsecs, Align, Table};
+
+fn main() {
+    section("per-step power/energy, ResNet-18 batch 32 (Fig. 2's 13 GPUs)");
+    let w = resnet18_cifar();
+    let cpu = cpu_by_slug("ryzen-7-1800x").unwrap();
+    let mut t = Table::new(&[
+        "GPU",
+        "step time",
+        "avg GPU power",
+        "energy/step",
+        "J per 1k samples",
+    ])
+    .aligns(&[Align::Left, Align::Right, Align::Right, Align::Right, Align::Right]);
+    let mut rows: Vec<(String, f64)> = Vec::new();
+    for slug in FIG2_GPUS {
+        let g = gpu_by_slug(slug).unwrap();
+        let st = GpuTimingModel::new(g).train_step(&w, 32, Optimizer::Sgd);
+        let wall = st.total_s();
+        let e = step_energy(g, cpu, &st, wall, 0.4);
+        let per_k = e.energy_j / 32.0 * 1000.0;
+        t.row(vec![
+            g.name.to_string(),
+            fsecs(wall),
+            format!("{:.0} W", e.gpu_power_w),
+            format!("{:.2} J", e.energy_j),
+            fnum(per_k, 0),
+        ]);
+        rows.push((g.name.to_string(), per_k));
+    }
+    println!("{}", t.render());
+
+    let best = rows.iter().min_by(|a, b| a.1.total_cmp(&b.1)).unwrap();
+    let worst = rows.iter().max_by(|a, b| a.1.total_cmp(&b.1)).unwrap();
+    println!(
+        "most energy-efficient: {} ({:.0} J/1k samples); least: {} ({:.0}) — {:.1}x spread.\n\
+         Energy heterogeneity is a first-class axis for future FL client selection.",
+        best.0,
+        best.1,
+        worst.0,
+        worst.1,
+        worst.1 / best.1
+    );
+}

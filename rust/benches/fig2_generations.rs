@@ -1,0 +1,34 @@
+//! Regenerates the paper's **Fig. 2 (right)**: normalised performance
+//! trends grouped by GPU generation (Pascal / Turing-16 / Turing-20 /
+//! Ampere for the paper's 13 GPUs; plus Ada over the full database).
+//!
+//!     cargo bench --bench fig2_generations
+
+use bouquetfl::analysis::fig2::{run, Fig2Config};
+use bouquetfl::analysis::report;
+use bouquetfl::hardware::{HardwareProfile, GPU_DB};
+use bouquetfl::util::benchkit::section;
+
+fn main() {
+    section("Fig. 2 (right): per-generation normalised performance");
+    let result = run(&Fig2Config::default()).expect("fig2 sweep");
+    println!("{}", report::fig2_generation_table(&result.generations()).render());
+    println!("{}", report::fig2_summary(&result));
+
+    section("extension: all host-feasible desktop GPUs (adds Ada)");
+    let host = HardwareProfile::paper_host();
+    let slugs: Vec<&str> = GPU_DB
+        .iter()
+        .filter(|g| !g.laptop)
+        .filter(|g| {
+            g.vram_gib <= host.gpu.vram_gib
+                && g.peak_fp32_tflops() <= host.gpu.peak_fp32_tflops()
+        })
+        .map(|g| g.slug)
+        .collect();
+    println!("{} feasible GPUs", slugs.len());
+    let cfg = Fig2Config { slugs, ..Default::default() };
+    let r = run(&cfg).expect("full-db sweep");
+    println!("{}", report::fig2_generation_table(&r.generations()).render());
+    println!("{}", report::fig2_summary(&r));
+}

@@ -1,0 +1,40 @@
+//! Regenerates the paper's **Fig. 2 (left)**: scatter of BouquetFL-emulated
+//! GPU training performance vs normalised gaming benchmarks, with the
+//! Spearman/Kendall headline (paper: ρ = 0.92, τ = 0.80).
+//!
+//!     cargo bench --bench fig2_scatter
+
+use bouquetfl::analysis::fig2::{run, Fig2Config};
+use bouquetfl::analysis::report;
+use bouquetfl::emu::EmulationMode;
+use bouquetfl::util::benchkit::{section, Bench};
+
+fn main() {
+    section("Fig. 2 (left): emulated GPU perf vs gaming benchmarks");
+
+    // The figure itself (both emulation modes).
+    for mode in [EmulationMode::HostRestriction, EmulationMode::DeviceModel] {
+        let cfg = Fig2Config { mode, ..Default::default() };
+        let result = run(&cfg).expect("fig2 sweep");
+        println!("\n{}", report::fig2_scatter_table(&result).render());
+        println!("{}\n", report::fig2_summary(&result));
+    }
+
+    // Batch-size ablation: the ordering claim must be batch-robust.
+    section("ablation: correlation vs batch size");
+    for batch in [8u32, 16, 32, 64, 128] {
+        let cfg = Fig2Config { batch, ..Default::default() };
+        let r = run(&cfg).expect("fig2 sweep");
+        println!(
+            "batch {batch:>4}: rho = {:.3}, tau = {:.3}",
+            r.spearman_rho, r.kendall_tau
+        );
+    }
+
+    // How long does the harness itself take (it is pure model evaluation).
+    section("harness cost");
+    let mut b = Bench::new(0.5);
+    b.run("fig2 full sweep (13 GPUs)", || {
+        run(&Fig2Config::default()).unwrap().spearman_rho
+    });
+}

@@ -1,0 +1,39 @@
+//! Regenerates the paper's **§4.2 OOM claim**: high-batch ResNet-18
+//! training fails on low-VRAM devices and fits on large ones, with the
+//! exact footprint breakdown.
+//!
+//!     cargo bench --bench oom_matrix
+
+use bouquetfl::analysis::claims::{oom_matrix, OOM_BATCHES, OOM_GPUS};
+use bouquetfl::emu::{training_footprint, Optimizer};
+use bouquetfl::hardware::gpu_by_slug;
+use bouquetfl::modelcost::resnet18_cifar;
+use bouquetfl::util::benchkit::{section, Bench};
+use bouquetfl::util::table::fbytes;
+
+fn main() {
+    section("§4.2 OOM matrix: ResNet-18 training footprint vs VRAM");
+    let (table, maxes) = oom_matrix(OOM_GPUS, OOM_BATCHES);
+    println!("{}", table.render());
+    for (gpu, b) in &maxes {
+        println!("  {gpu}: max power-of-two batch = {b}");
+    }
+
+    section("footprint breakdown (GTX 1650, batch 512 — the failing case)");
+    let gpu = gpu_by_slug("gtx-1650").unwrap();
+    let w = resnet18_cifar();
+    let fp = training_footprint(gpu, &w, 512, Optimizer::Sgd);
+    println!("  weights     {:>10}", fbytes(fp.weights));
+    println!("  gradients   {:>10}", fbytes(fp.gradients));
+    println!("  activations {:>10}", fbytes(fp.activations));
+    println!("  workspace   {:>10}", fbytes(fp.workspace));
+    println!("  context     {:>10}", fbytes(fp.context));
+    println!("  TOTAL       {:>10}  vs VRAM {}", fbytes(fp.total()), fbytes(gpu.vram_bytes()));
+
+    section("harness cost");
+    let mut b = Bench::new(0.3);
+    b.run("full oom matrix", || oom_matrix(OOM_GPUS, OOM_BATCHES).1.len());
+    b.run("single footprint estimate", || {
+        training_footprint(gpu, &w, 512, Optimizer::Sgd).total()
+    });
+}

@@ -1,0 +1,19 @@
+//! Regenerates the paper's **§4.2 RAM claim**: "differing performances due
+//! to RAM sizes" — page-cache residency and loading penalty vs RAM size.
+//!
+//!     cargo bench --bench ram_sweep
+
+use bouquetfl::analysis::claims::ram_sweep;
+use bouquetfl::util::benchkit::{section, Bench};
+
+fn main() {
+    for dataset_gib in [2.0, 6.0, 12.0, 24.0] {
+        section(&format!("§4.2 RAM sweep: {dataset_gib} GiB client dataset"));
+        let (table, _) = ram_sweep(dataset_gib);
+        println!("{}", table.render());
+    }
+
+    section("harness cost");
+    let mut b = Bench::new(0.2);
+    b.run("ram sweep", || ram_sweep(12.0).1.len());
+}

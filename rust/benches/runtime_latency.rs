@@ -1,0 +1,71 @@
+//! PJRT runtime latency: per-call cost of every artifact, and the per-step
+//! saving of the fused `lax.scan` variant (the L2 perf optimisation
+//! recorded in EXPERIMENTS.md §Perf).
+//!
+//!     cargo bench --bench runtime_latency
+
+use bouquetfl::data::{generate, SyntheticConfig};
+use bouquetfl::runtime::ModelExecutor;
+use bouquetfl::util::benchkit::{section, Bench};
+
+fn main() {
+    let mut ex = match ModelExecutor::new("artifacts") {
+        Ok(ex) => ex,
+        Err(e) => {
+            println!("skipping runtime benches ({e}) — run `make artifacts`");
+            return;
+        }
+    };
+    ex.warm_up().expect("compile all artifacts");
+    println!("platform: {}", ex.runtime().platform());
+
+    let params = ex.init_params(0).unwrap();
+    let d16 = generate(&SyntheticConfig { seed: 1, ..Default::default() }, 16);
+    let d32 = generate(&SyntheticConfig { seed: 2, ..Default::default() }, 32);
+    let d128 = generate(&SyntheticConfig { seed: 3, ..Default::default() }, 128);
+    let k = 4u32;
+    let dk = generate(&SyntheticConfig { seed: 4, ..Default::default() }, (k * 32) as usize);
+
+    section("single-call latency (compiled once, steady state)");
+    let mut b = Bench::new(5.0).with_max_iters(200);
+    b.run("init_params", || ex.init_params(7).unwrap().len());
+    b.run("train_step b=16", || {
+        ex.train_step(&params, &d16.images, &d16.labels, 0.01, 16).unwrap().1
+    });
+    b.run("train_step b=32", || {
+        ex.train_step(&params, &d32.images, &d32.labels, 0.01, 32).unwrap().1
+    });
+    b.run("train_step_prox b=32", || {
+        ex.train_step_prox(&params, &params, &d32.images, &d32.labels, 0.01, 0.01, 32)
+            .unwrap()
+            .1
+    });
+    let m_fused = b.run(&format!("train_steps fused k={k} b=32"), || {
+        ex.train_steps_fused(&params, &dk.images, &dk.labels, 0.01, k, 32).unwrap().1
+    });
+    let fused_per_step = m_fused.mean_s / k as f64;
+    b.run("eval_batch b=128", || {
+        ex.eval_batch(&params, &d128.images, &d128.labels, 128).unwrap().0
+    });
+
+    // Per-step comparison: fused scan vs single-call.
+    section("L2 fusion saving (scan amortises per-call overhead)");
+    let mut b2 = Bench::new(5.0).with_max_iters(200);
+    let m_single = b2.run("train_step b=32 (baseline)", || {
+        ex.train_step(&params, &d32.images, &d32.labels, 0.01, 32).unwrap().1
+    });
+    println!(
+        "fused per-step {:.2} ms vs single-call {:.2} ms -> {:.1}% saved per step",
+        fused_per_step * 1e3,
+        m_single.mean_s * 1e3,
+        (1.0 - fused_per_step / m_single.mean_s) * 100.0
+    );
+
+    section("steady-state training throughput");
+    let steps_per_s = 1.0 / fused_per_step;
+    println!(
+        "fused path: {:.1} real training steps/s on this host ({} params, batch 32)",
+        steps_per_s,
+        params.len()
+    );
+}

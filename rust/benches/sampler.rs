@@ -1,0 +1,48 @@
+//! Hardware-sampler benchmark (paper §2.2): draw throughput + distribution
+//! fidelity against the embedded survey shares.
+//!
+//!     cargo bench --bench sampler
+
+use std::collections::BTreeMap;
+
+use bouquetfl::hardware::survey::GPU_SHARES;
+use bouquetfl::hardware::{HardwareSampler, SamplerConfig};
+use bouquetfl::util::benchkit::{section, Bench};
+
+fn main() {
+    section("sampler throughput");
+    let mut b = Bench::new(1.0);
+    let mut s = HardwareSampler::with_defaults(0);
+    b.run_throughput("sample one profile", 1.0, || s.sample());
+    let mut s2 = HardwareSampler::with_defaults(1);
+    b.run_throughput("sample a 100-client federation", 100.0, || {
+        s2.sample_federation(100).len()
+    });
+
+    section("distribution fidelity (50k draws vs survey shares)");
+    let n = 50_000;
+    let mut s = HardwareSampler::new(7, SamplerConfig::default()).unwrap();
+    let mut counts: BTreeMap<&str, usize> = BTreeMap::new();
+    for _ in 0..n {
+        *counts.entry(s.sample().gpu.slug).or_default() += 1;
+    }
+    let eligible: f64 = GPU_SHARES
+        .iter()
+        .filter(|(slug, _)| counts.contains_key(slug))
+        .map(|(_, share)| share)
+        .sum();
+    let mut worst = 0.0f64;
+    let mut l1 = 0.0f64;
+    for (slug, share) in GPU_SHARES {
+        if let Some(&c) = counts.get(slug) {
+            let expected = share / eligible;
+            let got = c as f64 / n as f64;
+            worst = worst.max((got - expected).abs());
+            l1 += (got - expected).abs();
+        }
+    }
+    println!("eligible GPUs sampled: {}", counts.len());
+    println!("worst per-GPU deviation: {:.3} pp", worst * 100.0);
+    println!("total variation distance: {:.3}", l1 / 2.0);
+    assert!(worst < 0.01, "sampler must track the survey within 1 pp");
+}

@@ -1,0 +1,102 @@
+//! Scheduler benchmark: sequential vs limited-parallel round makespans on
+//! survey-sampled federations (the paper's §3 limitation and its announced
+//! extension), plus raw scheduling throughput.
+//!
+//!     cargo bench --bench scheduler
+
+use bouquetfl::emu::{emulated_step_seconds, EmulationMode, Optimizer};
+use bouquetfl::fl::launcher::sample_feasible;
+use bouquetfl::hardware::{HardwareProfile, HardwareSampler};
+use bouquetfl::modelcost::resnet18_cifar;
+use bouquetfl::sched::{DeadlineParallel, DeadlineSequential, LimitedParallel, Scheduler, Sequential};
+use bouquetfl::util::benchkit::{section, Bench};
+use bouquetfl::util::table::{Align, Table};
+
+fn main() {
+    // Build a realistic duration set: 32 survey-sampled clients, 10 local
+    // steps of batch-32 ResNet-18 each.
+    let host = HardwareProfile::paper_host();
+    let mut sampler = HardwareSampler::with_defaults(42);
+    let w = resnet18_cifar();
+    let durations: Vec<(u32, f64)> = (0..32u32)
+        .map(|i| {
+            let p = sample_feasible(&mut sampler, &host).unwrap();
+            let (t, _) = emulated_step_seconds(
+                &p,
+                &host,
+                EmulationMode::HostRestriction,
+                &w,
+                32,
+                Optimizer::Sgd,
+            )
+            .unwrap();
+            (i, t * 10.0)
+        })
+        .collect();
+
+    section("round makespan: 32 survey-sampled clients, 10 steps each");
+    let seq = Sequential.schedule(&durations);
+    let mut t = Table::new(&["policy", "round wall-clock", "speedup", "max concurrency"])
+        .aligns(&[Align::Left, Align::Right, Align::Right, Align::Right]);
+    t.row(vec![
+        "sequential (paper §3)".into(),
+        format!("{:.2}s", seq.round_s),
+        "1.00x".into(),
+        "1".into(),
+    ]);
+    for slots in [2usize, 4, 8, 16] {
+        let par = LimitedParallel::new(slots).schedule(&durations);
+        t.row(vec![
+            format!("limited-parallel({slots})"),
+            format!("{:.2}s", par.round_s),
+            format!("{:.2}x", seq.round_s / par.round_s),
+            par.to_trace("x").max_concurrency().to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    let slowest = durations.iter().map(|(_, d)| *d).fold(0.0f64, f64::max);
+    println!("straggler lower bound: {slowest:.2}s");
+
+    section("deadline over-commitment (FedScale-style): completion vs deadline");
+    let mut dt = Table::new(&["deadline", "policy", "completed", "dropped", "round"]).aligns(&[
+        Align::Right,
+        Align::Left,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+    ]);
+    for frac in [0.25f64, 0.5, 1.0] {
+        let deadline = seq.round_s * frac;
+        let s1 = DeadlineSequential::new(deadline).run(&durations);
+        dt.row(vec![
+            format!("{deadline:.1}s"),
+            "sequential".into(),
+            s1.schedule.spans.len().to_string(),
+            s1.dropped.len().to_string(),
+            format!("{:.2}s", s1.schedule.round_s),
+        ]);
+        let s4 = DeadlineParallel::new(deadline, 4).run(&durations);
+        dt.row(vec![
+            format!("{deadline:.1}s"),
+            "parallel(4)".into(),
+            s4.schedule.spans.len().to_string(),
+            s4.dropped.len().to_string(),
+            format!("{:.2}s", s4.schedule.round_s),
+        ]);
+    }
+    println!("{}", dt.render());
+    println!("tight deadlines trade stragglers for round speed; parallelism recovers most drops.");
+
+    section("scheduling throughput (pure L3 overhead)");
+    let mut b = Bench::new(1.0);
+    b.run("sequential.schedule (32 clients)", || {
+        Sequential.schedule(&durations).round_s
+    });
+    b.run("limited_parallel(4).schedule (32 clients)", || {
+        LimitedParallel::new(4).schedule(&durations).round_s
+    });
+    let big: Vec<(u32, f64)> = (0..10_000u32).map(|i| (i, (i % 97) as f64 * 0.01)).collect();
+    b.run("limited_parallel(8).schedule (10k clients)", || {
+        LimitedParallel::new(8).schedule(&big).round_s
+    });
+}

@@ -1,0 +1,180 @@
+//! Harnesses for the paper's §4.2 behavioural claims (beyond Fig. 2):
+//! OOM on low-memory devices, CPU-bound data loading, and RAM-size effects.
+//! Each returns printable tables; the benches and the CLI both call these.
+
+use crate::emu::{
+    max_batch, training_footprint, DataLoaderModel, GpuTimingModel, Optimizer, RamModel,
+};
+use crate::hardware::cpu::{cpu_by_slug, CPU_DB};
+use crate::hardware::gpu::gpu_by_slug;
+use crate::hardware::ram::RAM_PRESETS;
+use crate::modelcost::resnet::resnet18_cifar;
+use crate::util::table::{fbytes, fnum, fsecs, Align, Table};
+
+/// §4.2 OOM claim: which (GPU, batch) pairs fit; where does training fail?
+/// Returns the matrix table plus (gpu, max_batch) pairs.
+pub fn oom_matrix(gpu_slugs: &[&str], batches: &[u32]) -> (Table, Vec<(String, u32)>) {
+    let w = resnet18_cifar();
+    let mut headers = vec!["GPU".to_string(), "VRAM".to_string()];
+    headers.extend(batches.iter().map(|b| format!("b={b}")));
+    headers.push("max batch".into());
+    let header_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(&header_refs);
+    let mut maxes = Vec::new();
+    for slug in gpu_slugs {
+        let gpu = gpu_by_slug(slug).unwrap_or_else(|| panic!("unknown gpu {slug}"));
+        let mut row = vec![gpu.name.to_string(), format!("{} GiB", gpu.vram_gib)];
+        for &b in batches {
+            let fp = training_footprint(gpu, &w, b, Optimizer::Sgd);
+            if fp.total() <= gpu.vram_bytes() {
+                row.push(format!("ok ({})", fbytes(fp.total())));
+            } else {
+                row.push("OOM".to_string());
+            }
+        }
+        let mb = max_batch(gpu, &w, Optimizer::Sgd);
+        row.push(mb.to_string());
+        maxes.push((gpu.name.to_string(), mb));
+        t.row(row);
+    }
+    (t, maxes)
+}
+
+/// §4.2 dataloader claim: step time vs CPU (core count), fixed GPU.
+/// Returns the table plus (cpu, effective step seconds, loader_bound).
+pub fn dataloader_sweep(gpu_slug: &str, batch: u32) -> (Table, Vec<(String, f64, bool)>) {
+    let w = resnet18_cifar();
+    let gpu = gpu_by_slug(gpu_slug).unwrap();
+    let gpu_s = GpuTimingModel::new(gpu).step_seconds(&w, batch, Optimizer::Sgd);
+    let mut t = Table::new(&[
+        "CPU",
+        "cores",
+        "loader samples/s",
+        "batch load",
+        "GPU step",
+        "effective step",
+        "bound",
+    ])
+    .aligns(&[
+        Align::Left,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Left,
+    ]);
+    let mut rows = Vec::new();
+    let mut cpus: Vec<_> = CPU_DB.iter().filter(|c| !c.laptop).collect();
+    cpus.sort_by(|a, b| a.cores.cmp(&b.cores).then(a.slug.cmp(b.slug)));
+    for cpu in cpus {
+        let m = DataLoaderModel::new(cpu);
+        let rate = m.samples_per_sec(w.input_bytes);
+        let load_s = m.batch_seconds(&w, batch);
+        let (eff, bound) = m.pipelined_step(gpu_s, &w, batch);
+        t.row(vec![
+            cpu.name.to_string(),
+            cpu.cores.to_string(),
+            fnum(rate, 0),
+            fsecs(load_s),
+            fsecs(gpu_s),
+            fsecs(eff),
+            if bound { "loader".into() } else { "compute".into() },
+        ]);
+        rows.push((cpu.name.to_string(), eff, bound));
+    }
+    (t, rows)
+}
+
+/// §4.2 RAM claim: loading penalty vs RAM size for a fixed dataset.
+pub fn ram_sweep(dataset_gib: f64) -> (Table, Vec<(u32, f64)>) {
+    let w = resnet18_cifar();
+    let process = 3 * w.weight_bytes() + 1_500 * 1024 * 1024;
+    let dataset = (dataset_gib * 1024.0 * 1024.0 * 1024.0) as u64;
+    let mut t = Table::new(&["RAM", "cache-resident", "load penalty", "outcome"]).aligns(&[
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Left,
+    ]);
+    let mut rows = Vec::new();
+    for spec in RAM_PRESETS {
+        let m = RamModel::new(*spec);
+        match m.assess(process, dataset) {
+            Ok(a) => {
+                t.row(vec![
+                    format!("{} GiB", spec.gib),
+                    format!("{:.0}%", a.cache_resident_fraction * 100.0),
+                    format!("{:.2}x", a.load_penalty),
+                    "ok".into(),
+                ]);
+                rows.push((spec.gib, a.load_penalty));
+            }
+            Err(e) => {
+                t.row(vec![
+                    format!("{} GiB", spec.gib),
+                    "-".into(),
+                    "-".into(),
+                    format!("host OOM: {e}"),
+                ]);
+                rows.push((spec.gib, f64::INFINITY));
+            }
+        }
+    }
+    (t, rows)
+}
+
+/// Default GPU set for the OOM study (ascending VRAM).
+pub static OOM_GPUS: &[&str] = &["gtx-1050", "gtx-1650", "rtx-2060", "rtx-3080", "rtx-4070-super"];
+
+/// Default batch sweep for the OOM study.
+pub static OOM_BATCHES: &[u32] = &[32, 128, 512, 1024, 2048];
+
+/// Default CPU-sweep reference CPU for the dataloader-demo CPU (weak vs
+/// strong loading for the paper-host GPU).
+pub fn cpu_pair_demo() -> (&'static str, &'static str) {
+    let weak = cpu_by_slug("pentium-g4560").unwrap();
+    let strong = cpu_by_slug("ryzen-9-7950x").unwrap();
+    (weak.slug, strong.slug)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn oom_matrix_shows_failures_on_small_cards() {
+        let (t, maxes) = oom_matrix(OOM_GPUS, OOM_BATCHES);
+        assert_eq!(t.num_rows(), OOM_GPUS.len());
+        let rendered = t.render();
+        assert!(rendered.contains("OOM"), "small cards must OOM somewhere:\n{rendered}");
+        // Max batch ordered by VRAM.
+        let m: Vec<u32> = maxes.iter().map(|(_, b)| *b).collect();
+        assert!(m.windows(2).all(|w| w[1] >= w[0]), "{m:?}");
+    }
+
+    #[test]
+    fn dataloader_sweep_has_transition() {
+        let (_, rows) = dataloader_sweep("rtx-4070-super", 32);
+        let bounds: Vec<bool> = rows.iter().map(|(_, _, b)| *b).collect();
+        assert!(bounds.iter().any(|&b| b), "some CPUs must be loader-bound");
+        assert!(bounds.iter().any(|&b| !b), "some CPUs must be compute-bound");
+        // Weak CPUs yield longer effective steps than strong CPUs.
+        let weak = rows.iter().find(|(n, ..)| n == "Pentium G4560").unwrap().1;
+        let strong = rows.iter().find(|(n, ..)| n == "Ryzen 9 7950X").unwrap().1;
+        assert!(weak > 1.2 * strong, "weak {weak} vs strong {strong}");
+    }
+
+    #[test]
+    fn ram_sweep_penalty_decreases() {
+        let (_, rows) = ram_sweep(12.0);
+        // Finite penalties must be non-increasing in RAM size.
+        let finite: Vec<f64> =
+            rows.iter().map(|(_, p)| *p).filter(|p| p.is_finite()).collect();
+        assert!(finite.windows(2).all(|w| w[1] <= w[0] + 1e-9), "{finite:?}");
+        // 4 GiB machines hit a real penalty on a 12 GiB dataset.
+        assert!(rows[0].1 > 1.5 || rows[0].1.is_infinite());
+        // 64 GiB machines are unpenalised.
+        assert_eq!(rows.last().unwrap().1, 1.0);
+    }
+}

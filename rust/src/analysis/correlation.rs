@@ -1,0 +1,123 @@
+//! Rank correlations: Spearman's ρ (with tie-averaged ranks) and Kendall's
+//! τ-b — the two statistics the paper reports for Fig. 2
+//! (ρ = 0.92, τ = 0.80).
+
+use crate::util::stats::average_ranks;
+
+/// Pearson correlation of two equally-long samples.
+pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len() as f64;
+    assert!(n >= 2.0, "need at least 2 points");
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let mut cov = 0.0;
+    let mut vx = 0.0;
+    let mut vy = 0.0;
+    for (x, y) in xs.iter().zip(ys) {
+        cov += (x - mx) * (y - my);
+        vx += (x - mx) * (x - mx);
+        vy += (y - my) * (y - my);
+    }
+    if vx == 0.0 || vy == 0.0 {
+        return 0.0;
+    }
+    cov / (vx.sqrt() * vy.sqrt())
+}
+
+/// Spearman's ρ: Pearson correlation of the (tie-averaged) ranks.
+pub fn spearman(xs: &[f64], ys: &[f64]) -> f64 {
+    pearson(&average_ranks(xs), &average_ranks(ys))
+}
+
+/// Kendall's τ-b (accounts for ties in either variable).
+pub fn kendall_tau_b(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len();
+    assert!(n >= 2);
+    let mut concordant = 0i64;
+    let mut discordant = 0i64;
+    let mut ties_x = 0i64;
+    let mut ties_y = 0i64;
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let dx = xs[i] - xs[j];
+            let dy = ys[i] - ys[j];
+            if dx == 0.0 && dy == 0.0 {
+                // tied in both: counted in neither denominator term
+            } else if dx == 0.0 {
+                ties_x += 1;
+            } else if dy == 0.0 {
+                ties_y += 1;
+            } else if dx * dy > 0.0 {
+                concordant += 1;
+            } else {
+                discordant += 1;
+            }
+        }
+    }
+    let n0 = (n * (n - 1) / 2) as i64;
+    let denom = (((n0 - ties_x) as f64) * ((n0 - ties_y) as f64)).sqrt();
+    if denom == 0.0 {
+        return 0.0;
+    }
+    (concordant - discordant) as f64 / denom
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_monotone_agreement() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let ys = [10.0, 20.0, 40.0, 80.0, 160.0]; // monotone, non-linear
+        assert!((spearman(&xs, &ys) - 1.0).abs() < 1e-12);
+        assert!((kendall_tau_b(&xs, &ys) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn perfect_disagreement() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let ys = [4.0, 3.0, 2.0, 1.0];
+        assert!((spearman(&xs, &ys) + 1.0).abs() < 1e-12);
+        assert!((kendall_tau_b(&xs, &ys) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn known_small_example() {
+        // Classic example: one swap among five.
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let ys = [1.0, 2.0, 3.0, 5.0, 4.0];
+        // 9 concordant, 1 discordant -> tau = 0.8.
+        assert!((kendall_tau_b(&xs, &ys) - 0.8).abs() < 1e-12);
+        // Spearman: 1 - 6*sum(d^2)/(n(n^2-1)) = 1 - 6*2/120 = 0.9.
+        assert!((spearman(&xs, &ys) - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ties_handled() {
+        let xs = [1.0, 1.0, 2.0, 3.0];
+        let ys = [1.0, 2.0, 3.0, 4.0];
+        let tau = kendall_tau_b(&xs, &ys);
+        assert!(tau > 0.7 && tau < 1.0, "{tau}");
+        let rho = spearman(&xs, &ys);
+        assert!(rho > 0.85 && rho < 1.0, "{rho}");
+    }
+
+    #[test]
+    fn constant_input_yields_zero() {
+        let xs = [1.0, 1.0, 1.0];
+        let ys = [1.0, 2.0, 3.0];
+        assert_eq!(pearson(&xs, &ys), 0.0);
+        assert_eq!(kendall_tau_b(&xs, &ys), 0.0);
+    }
+
+    #[test]
+    fn symmetric() {
+        let xs = [3.0, 1.0, 4.0, 1.5, 9.0, 2.6];
+        let ys = [2.0, 7.0, 1.0, 8.0, 2.0, 8.0];
+        assert!((spearman(&xs, &ys) - spearman(&ys, &xs)).abs() < 1e-12);
+        assert!((kendall_tau_b(&xs, &ys) - kendall_tau_b(&ys, &xs)).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,11 @@
+//! Statistics and figure harnesses: rank correlations, the Fig. 2
+//! reproduction, and the table/CSV emitters used by `cargo bench`.
+
+pub mod ablation;
+pub mod claims;
+pub mod correlation;
+pub mod fig2;
+pub mod report;
+
+pub use correlation::{kendall_tau_b, pearson, spearman};
+pub use fig2::{run as run_fig2, Fig2Config, Fig2Result};

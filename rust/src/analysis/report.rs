@@ -1,0 +1,99 @@
+//! Human-readable emitters for the figure harnesses (ASCII tables for the
+//! bench output, CSV for plotting).
+
+use crate::emu::EmulationMode;
+use crate::util::table::{fnum, fsecs, Align, Table};
+
+use super::fig2::{Fig2Result, GenerationRow};
+
+/// Fig. 2 left panel as a table (one row per GPU, sorted by benchmark cost).
+pub fn fig2_scatter_table(result: &Fig2Result) -> Table {
+    let mut rows = result.rows.clone();
+    rows.sort_by(|a, b| a.norm_bench.total_cmp(&b.norm_bench));
+    let mut t = Table::new(&[
+        "GPU",
+        "generation",
+        "emu step",
+        "norm emu (y)",
+        "norm bench (x)",
+        "delta",
+    ])
+    .aligns(&[
+        Align::Left,
+        Align::Left,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+    ]);
+    for r in &rows {
+        t.row(vec![
+            r.name.to_string(),
+            r.arch.label().to_string(),
+            fsecs(r.emu_step_s),
+            fnum(r.norm_emu, 3),
+            fnum(r.norm_bench, 3),
+            fnum(r.norm_emu - r.norm_bench, 3),
+        ]);
+    }
+    t
+}
+
+/// Fig. 2 right panel (per-generation means).
+pub fn fig2_generation_table(gens: &[GenerationRow]) -> Table {
+    let mut t = Table::new(&["generation", "#GPUs", "mean norm emu", "mean norm bench"])
+        .aligns(&[Align::Left, Align::Right, Align::Right, Align::Right]);
+    for g in gens {
+        t.row(vec![
+            g.arch.label().to_string(),
+            g.gpus.to_string(),
+            fnum(g.mean_norm_emu, 3),
+            fnum(g.mean_norm_bench, 3),
+        ]);
+    }
+    t
+}
+
+/// The headline line the paper reports under Fig. 2.
+pub fn fig2_summary(result: &Fig2Result) -> String {
+    let mode = match result.mode {
+        EmulationMode::HostRestriction => "host-restriction (MPS)",
+        EmulationMode::DeviceModel => "device-model",
+    };
+    format!(
+        "Fig2 [{} GPUs, batch {}, {}]: Spearman rho = {:.2} (paper: 0.92), \
+         Kendall tau = {:.2} (paper: 0.80)",
+        result.rows.len(),
+        result.batch,
+        mode,
+        result.spearman_rho,
+        result.kendall_tau
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::fig2::{run, Fig2Config};
+
+    #[test]
+    fn tables_render() {
+        let r = run(&Fig2Config::default()).unwrap();
+        let t = fig2_scatter_table(&r);
+        assert_eq!(t.num_rows(), 13);
+        let rendered = t.render();
+        assert!(rendered.contains("GTX 1060"));
+        assert!(rendered.contains("RTX 3080"));
+        let g = fig2_generation_table(&r.generations());
+        assert_eq!(g.num_rows(), 4);
+        assert!(fig2_summary(&r).contains("Spearman"));
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let r = run(&Fig2Config::default()).unwrap();
+        let csv = fig2_scatter_table(&r).to_csv();
+        assert_eq!(csv.lines().count(), 14);
+        assert!(csv.starts_with("GPU,"));
+    }
+}

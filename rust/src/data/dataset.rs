@@ -1,0 +1,113 @@
+//! In-memory image-classification dataset (NHWC f32 images, i32 labels).
+
+/// A dataset of `n` images of shape `hw x hw x c`.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub hw: usize,
+    pub c: usize,
+    pub num_classes: usize,
+    /// Row-major `[n, hw, hw, c]`.
+    pub images: Vec<f32>,
+    pub labels: Vec<i32>,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    /// Bytes per sample (image + label).
+    pub fn sample_bytes(&self) -> usize {
+        self.hw * self.hw * self.c * 4 + 4
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        (self.len() * self.sample_bytes()) as u64
+    }
+
+    fn image_elems(&self) -> usize {
+        self.hw * self.hw * self.c
+    }
+
+    /// Copy the samples at `indices` into contiguous batch buffers.
+    pub fn gather(&self, indices: &[usize]) -> (Vec<f32>, Vec<i32>) {
+        let elems = self.image_elems();
+        let mut xs = Vec::with_capacity(indices.len() * elems);
+        let mut ys = Vec::with_capacity(indices.len());
+        for &i in indices {
+            assert!(i < self.len(), "index {i} out of range {}", self.len());
+            xs.extend_from_slice(&self.images[i * elems..(i + 1) * elems]);
+            ys.push(self.labels[i]);
+        }
+        (xs, ys)
+    }
+
+    /// Per-class sample counts.
+    pub fn label_histogram(&self) -> Vec<usize> {
+        let mut h = vec![0usize; self.num_classes];
+        for &y in &self.labels {
+            h[y as usize] += 1;
+        }
+        h
+    }
+
+    /// A view of the subset at `indices` as a new owned dataset.
+    pub fn subset(&self, indices: &[usize]) -> Dataset {
+        let (images, labels) = self.gather(indices);
+        Dataset {
+            hw: self.hw,
+            c: self.c,
+            num_classes: self.num_classes,
+            images,
+            labels,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        Dataset {
+            hw: 2,
+            c: 1,
+            num_classes: 2,
+            images: (0..12).map(|i| i as f32).collect(), // 3 images of 4 elems
+            labels: vec![0, 1, 1],
+        }
+    }
+
+    #[test]
+    fn gather_copies_right_rows() {
+        let d = tiny();
+        let (xs, ys) = d.gather(&[2, 0]);
+        assert_eq!(ys, vec![1, 0]);
+        assert_eq!(&xs[..4], &[8.0, 9.0, 10.0, 11.0]);
+        assert_eq!(&xs[4..], &[0.0, 1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn histogram() {
+        assert_eq!(tiny().label_histogram(), vec![1, 2]);
+    }
+
+    #[test]
+    fn subset_roundtrip() {
+        let d = tiny();
+        let s = d.subset(&[1]);
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.labels, vec![1]);
+        assert_eq!(s.total_bytes(), (4 * 4 + 4) as u64);
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_range_panics() {
+        tiny().gather(&[5]);
+    }
+}

@@ -1,0 +1,12 @@
+//! Data substrate: synthetic CIFAR-like generation, FL partitioning
+//! schemes, and the batch loader feeding the PJRT executor.
+
+pub mod dataset;
+pub mod loader;
+pub mod partition;
+pub mod synthetic;
+
+pub use dataset::Dataset;
+pub use loader::BatchLoader;
+pub use partition::{client_label_histograms, partition, skew, PartitionScheme};
+pub use synthetic::{generate, SyntheticConfig};

@@ -1,0 +1,225 @@
+//! Client data partitioning: IID, Dirichlet non-IID (Hsu et al., 2019), and
+//! pathological label shards (McMahan et al., 2017) — the standard schemes
+//! in FL experimentation.
+
+use crate::util::rng::Pcg;
+
+use super::dataset::Dataset;
+
+/// Partitioning scheme.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PartitionScheme {
+    /// Uniform random split.
+    Iid,
+    /// Label distribution per client ~ Dirichlet(alpha); small alpha =
+    /// highly non-IID.
+    Dirichlet { alpha: f64 },
+    /// Each client holds data from exactly `labels_per_client` classes.
+    Shards { labels_per_client: usize },
+}
+
+/// Split `dataset` into `n_clients` index lists.
+/// Every client is guaranteed at least one sample.
+pub fn partition(
+    dataset: &Dataset,
+    n_clients: usize,
+    scheme: PartitionScheme,
+    seed: u64,
+) -> Vec<Vec<usize>> {
+    assert!(n_clients > 0);
+    assert!(
+        dataset.len() >= n_clients,
+        "need >= 1 sample per client ({} samples, {n_clients} clients)",
+        dataset.len()
+    );
+    let mut rng = Pcg::new(seed, 0x9A47);
+    let mut parts: Vec<Vec<usize>> = match scheme {
+        PartitionScheme::Iid => {
+            let mut idx: Vec<usize> = (0..dataset.len()).collect();
+            rng.shuffle(&mut idx);
+            let mut parts = vec![Vec::new(); n_clients];
+            for (i, sample) in idx.into_iter().enumerate() {
+                parts[i % n_clients].push(sample);
+            }
+            parts
+        }
+        PartitionScheme::Dirichlet { alpha } => {
+            assert!(alpha > 0.0, "alpha must be positive");
+            let mut parts = vec![Vec::new(); n_clients];
+            // For each class, split its samples by a Dirichlet draw.
+            for class in 0..dataset.num_classes {
+                let mut class_idx: Vec<usize> = (0..dataset.len())
+                    .filter(|&i| dataset.labels[i] as usize == class)
+                    .collect();
+                if class_idx.is_empty() {
+                    continue;
+                }
+                rng.shuffle(&mut class_idx);
+                let props = rng.dirichlet(alpha, n_clients);
+                // Cumulative allocation preserving total count.
+                let n = class_idx.len();
+                let mut start = 0usize;
+                let mut acc = 0.0;
+                for (client, p) in props.iter().enumerate() {
+                    acc += p;
+                    let end = if client == n_clients - 1 {
+                        n
+                    } else {
+                        (acc * n as f64).round() as usize
+                    }
+                    .clamp(start, n);
+                    parts[client].extend_from_slice(&class_idx[start..end]);
+                    start = end;
+                }
+            }
+            parts
+        }
+        PartitionScheme::Shards { labels_per_client } => {
+            assert!(labels_per_client >= 1);
+            let mut parts = vec![Vec::new(); n_clients];
+            // Sort indices by label, carve into n_clients * labels_per_client
+            // shards, deal shards to clients.
+            let mut idx: Vec<usize> = (0..dataset.len()).collect();
+            idx.sort_by_key(|&i| dataset.labels[i]);
+            let num_shards = n_clients * labels_per_client;
+            let shard_size = dataset.len().div_ceil(num_shards);
+            let mut shard_ids: Vec<usize> = (0..num_shards).collect();
+            rng.shuffle(&mut shard_ids);
+            for (pos, &shard) in shard_ids.iter().enumerate() {
+                let client = pos % n_clients;
+                let lo = shard * shard_size;
+                let hi = ((shard + 1) * shard_size).min(dataset.len());
+                if lo < hi {
+                    parts[client].extend_from_slice(&idx[lo..hi]);
+                }
+            }
+            parts
+        }
+    };
+
+    // Top-up guarantee: donate from the largest part to empty ones.
+    loop {
+        let empty = match parts.iter().position(|p| p.is_empty()) {
+            Some(e) => e,
+            None => break,
+        };
+        let donor = (0..parts.len())
+            .max_by_key(|&i| parts[i].len())
+            .expect("non-empty");
+        assert!(parts[donor].len() > 1, "not enough samples to cover all clients");
+        let moved = parts[donor].pop().unwrap();
+        parts[empty].push(moved);
+    }
+    parts
+}
+
+/// Per-client label histograms (for non-IID-ness reporting).
+pub fn client_label_histograms(dataset: &Dataset, parts: &[Vec<usize>]) -> Vec<Vec<usize>> {
+    parts
+        .iter()
+        .map(|idx| {
+            let mut h = vec![0usize; dataset.num_classes];
+            for &i in idx {
+                h[dataset.labels[i] as usize] += 1;
+            }
+            h
+        })
+        .collect()
+}
+
+/// Mean per-client label-distribution skew: average total-variation distance
+/// between each client's label distribution and the global one (0 = IID).
+pub fn skew(dataset: &Dataset, parts: &[Vec<usize>]) -> f64 {
+    let global = dataset.label_histogram();
+    let gtotal: usize = global.iter().sum();
+    let gdist: Vec<f64> = global.iter().map(|&c| c as f64 / gtotal as f64).collect();
+    let hists = client_label_histograms(dataset, parts);
+    let mut tv_sum = 0.0;
+    for h in &hists {
+        let total: usize = h.iter().sum();
+        if total == 0 {
+            continue;
+        }
+        let tv: f64 = h
+            .iter()
+            .zip(&gdist)
+            .map(|(&c, g)| (c as f64 / total as f64 - g).abs())
+            .sum::<f64>()
+            / 2.0;
+        tv_sum += tv;
+    }
+    tv_sum / hists.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, SyntheticConfig};
+
+    fn data(n: usize) -> Dataset {
+        generate(&SyntheticConfig::default(), n)
+    }
+
+    fn assert_is_partition(parts: &[Vec<usize>], n: usize) {
+        let mut all: Vec<usize> = parts.iter().flatten().copied().collect();
+        all.sort();
+        assert_eq!(all, (0..n).collect::<Vec<_>>(), "must be an exact partition");
+        assert!(parts.iter().all(|p| !p.is_empty()), "no empty clients");
+    }
+
+    #[test]
+    fn iid_is_balanced_partition() {
+        let d = data(1000);
+        let parts = partition(&d, 10, PartitionScheme::Iid, 0);
+        assert_is_partition(&parts, 1000);
+        for p in &parts {
+            assert_eq!(p.len(), 100);
+        }
+        assert!(skew(&d, &parts) < 0.15);
+    }
+
+    #[test]
+    fn dirichlet_low_alpha_is_skewed() {
+        let d = data(2000);
+        let iid = partition(&d, 10, PartitionScheme::Dirichlet { alpha: 100.0 }, 1);
+        let non = partition(&d, 10, PartitionScheme::Dirichlet { alpha: 0.1 }, 1);
+        assert_is_partition(&iid, 2000);
+        assert_is_partition(&non, 2000);
+        assert!(
+            skew(&d, &non) > 2.0 * skew(&d, &iid),
+            "alpha=0.1 skew {} vs alpha=100 skew {}",
+            skew(&d, &non),
+            skew(&d, &iid)
+        );
+    }
+
+    #[test]
+    fn shards_limit_labels_per_client() {
+        let d = data(2000);
+        let parts = partition(&d, 10, PartitionScheme::Shards { labels_per_client: 2 }, 2);
+        assert_is_partition(&parts, 2000);
+        let hists = client_label_histograms(&d, &parts);
+        for h in hists {
+            let present = h.iter().filter(|&&c| c > 0).count();
+            // Shard boundaries can straddle one extra label.
+            assert!(present <= 4, "client sees {present} labels");
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let d = data(500);
+        let a = partition(&d, 7, PartitionScheme::Dirichlet { alpha: 0.5 }, 3);
+        let b = partition(&d, 7, PartitionScheme::Dirichlet { alpha: 0.5 }, 3);
+        assert_eq!(a, b);
+        let c = partition(&d, 7, PartitionScheme::Dirichlet { alpha: 0.5 }, 4);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn every_client_nonempty_even_extreme_alpha() {
+        let d = data(300);
+        let parts = partition(&d, 30, PartitionScheme::Dirichlet { alpha: 0.01 }, 5);
+        assert_is_partition(&parts, 300);
+    }
+}

@@ -1,0 +1,93 @@
+//! Virtual clock for emulated time.
+//!
+//! Emulated durations come from the timing model, not from host wall-clock;
+//! the clock either fast-forwards (default — experiments finish quickly) or
+//! paces in real time scaled by a factor (the paper's demo video shows
+//! runtime differences live; `Realtime` reproduces that behaviour).
+
+use std::time::Duration;
+
+/// Clock mode.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ClockMode {
+    /// Advance instantly (simulation time only).
+    FastForward,
+    /// Sleep `scale * dt` of host time per emulated `dt` (scale <= 1 speeds
+    /// up the demo; 1.0 is true real-time pacing).
+    Realtime { scale: f64 },
+}
+
+/// Monotone virtual clock.
+#[derive(Debug)]
+pub struct VirtualClock {
+    now_s: f64,
+    mode: ClockMode,
+}
+
+impl VirtualClock {
+    pub fn new(mode: ClockMode) -> Self {
+        VirtualClock { now_s: 0.0, mode }
+    }
+
+    pub fn fast_forward() -> Self {
+        Self::new(ClockMode::FastForward)
+    }
+
+    /// Current emulated time in seconds since clock creation.
+    pub fn now_s(&self) -> f64 {
+        self.now_s
+    }
+
+    pub fn mode(&self) -> ClockMode {
+        self.mode
+    }
+
+    /// Advance emulated time by `dt_s` seconds (pacing if configured).
+    pub fn advance(&mut self, dt_s: f64) {
+        assert!(dt_s >= 0.0, "time cannot go backwards (dt={dt_s})");
+        self.now_s += dt_s;
+        if let ClockMode::Realtime { scale } = self.mode {
+            let sleep = dt_s * scale;
+            if sleep > 0.0 {
+                std::thread::sleep(Duration::from_secs_f64(sleep.min(60.0)));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Instant;
+
+    #[test]
+    fn fast_forward_does_not_sleep() {
+        let mut c = VirtualClock::fast_forward();
+        let t = Instant::now();
+        c.advance(1000.0);
+        assert!(t.elapsed().as_millis() < 50);
+        assert_eq!(c.now_s(), 1000.0);
+    }
+
+    #[test]
+    fn accumulates() {
+        let mut c = VirtualClock::fast_forward();
+        c.advance(1.5);
+        c.advance(2.5);
+        assert!((c.now_s() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn realtime_paces() {
+        let mut c = VirtualClock::new(ClockMode::Realtime { scale: 0.01 });
+        let t = Instant::now();
+        c.advance(2.0); // should sleep ~20ms
+        assert!(t.elapsed().as_millis() >= 15);
+    }
+
+    #[test]
+    #[should_panic]
+    fn negative_dt_panics() {
+        VirtualClock::fast_forward().advance(-1.0);
+    }
+}

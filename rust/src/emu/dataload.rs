@@ -1,0 +1,154 @@
+//! CPU data-loading throughput model — the paper's §4.2 "dissimilar
+//! training speeds due to different data loading capacities through CPU
+//! discrepancies".
+//!
+//! A client's input pipeline sustains
+//! `workers x per-core-rate x 1/ram_penalty` samples/s, where the per-core
+//! rate scales with the CPU's single-core score and inversely with the
+//! sample size.  With a pipelined loader (prefetch overlapping compute) the
+//! effective step time is `max(gpu_step, batch / loader_rate)` — the
+//! classic loader-bound vs compute-bound transition the demo video shows.
+
+use crate::hardware::cpu::CpuSpec;
+use crate::modelcost::WorkloadCost;
+
+use super::throttle::CpuThrottle;
+
+/// Preprocessing throughput per unit single-core score, in bytes/s.
+/// Calibrated so a Zen-1 core (score 4.0) sustains ~1000 CIFAR
+/// samples/s/core — typical of python-side decode+augment pipelines.
+/// (Documented calibration constant; see DESIGN.md §6.)
+pub const LOADER_BYTES_PER_SCORE: f64 = 3.0e6;
+
+/// Data-loading model for one (possibly throttled) CPU.
+#[derive(Debug, Clone)]
+pub struct DataLoaderModel {
+    pub cpu: CpuSpec,
+    pub throttle: CpuThrottle,
+    /// Loader worker processes (defaults to the restricted core count).
+    pub workers: u32,
+    /// Multiplier (>= 1) from the RAM model (page-cache misses).
+    pub ram_penalty: f64,
+}
+
+impl DataLoaderModel {
+    pub fn new(cpu: &CpuSpec) -> Self {
+        DataLoaderModel {
+            cpu: cpu.clone(),
+            throttle: CpuThrottle::none(cpu),
+            workers: cpu.cores,
+            ram_penalty: 1.0,
+        }
+    }
+
+    pub fn with_throttle(cpu: &CpuSpec, throttle: CpuThrottle) -> Self {
+        let workers = throttle.cores;
+        DataLoaderModel { cpu: cpu.clone(), throttle, workers, ram_penalty: 1.0 }
+    }
+
+    pub fn with_workers(mut self, workers: u32) -> Self {
+        self.workers = workers.max(1);
+        self
+    }
+
+    pub fn with_ram_penalty(mut self, penalty: f64) -> Self {
+        assert!(penalty >= 1.0);
+        self.ram_penalty = penalty;
+        self
+    }
+
+    /// Sustained samples/s for a given per-sample byte size.
+    pub fn samples_per_sec(&self, sample_bytes: f64) -> f64 {
+        let per_core_score =
+            self.cpu.single_core_score() * self.throttle.per_core_factor(&self.cpu);
+        let per_core = LOADER_BYTES_PER_SCORE * per_core_score / sample_bytes;
+        let workers = self.workers.min(self.throttle.cores).max(1);
+        workers as f64 * per_core / self.ram_penalty
+    }
+
+    /// Seconds to produce one batch.
+    pub fn batch_seconds(&self, workload: &WorkloadCost, batch: u32) -> f64 {
+        batch as f64 / self.samples_per_sec(workload.input_bytes)
+    }
+
+    /// Effective step time with a pipelined (prefetching) loader, plus
+    /// whether the step is loader-bound.
+    pub fn pipelined_step(&self, gpu_step_s: f64, workload: &WorkloadCost, batch: u32) -> (f64, bool) {
+        let load = self.batch_seconds(workload, batch);
+        if load > gpu_step_s {
+            (load, true)
+        } else {
+            (gpu_step_s, false)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::cpu::cpu_by_slug;
+    use crate::modelcost::resnet::resnet18_cifar;
+
+    #[test]
+    fn calibration_anchor() {
+        // Zen-1 (1800X): ~1000 CIFAR samples/s/core => 8 cores ~ 8000/s.
+        let m = DataLoaderModel::new(cpu_by_slug("ryzen-7-1800x").unwrap());
+        let r = m.samples_per_sec(4.0 * 32.0 * 32.0 * 3.0);
+        assert!((6000.0..11000.0).contains(&r), "{r}");
+    }
+
+    #[test]
+    fn more_cores_load_faster() {
+        let w = resnet18_cifar();
+        let slow = DataLoaderModel::new(cpu_by_slug("pentium-g4560").unwrap());
+        let fast = DataLoaderModel::new(cpu_by_slug("ryzen-9-5950x").unwrap());
+        assert!(fast.batch_seconds(&w, 32) < slow.batch_seconds(&w, 32) / 4.0);
+    }
+
+    #[test]
+    fn throttled_cpu_loads_slower() {
+        let cpu = cpu_by_slug("ryzen-7-1800x").unwrap();
+        let full = DataLoaderModel::new(cpu);
+        let throttled = DataLoaderModel::with_throttle(
+            cpu,
+            CpuThrottle::new(cpu, 2, 2000, 1.0).unwrap(),
+        );
+        let w = resnet18_cifar();
+        assert!(throttled.batch_seconds(&w, 32) > 4.0 * full.batch_seconds(&w, 32));
+    }
+
+    #[test]
+    fn pipelined_transition() {
+        // Fast GPU + weak CPU => loader-bound; fast CPU => compute-bound.
+        let w = resnet18_cifar();
+        let weak = DataLoaderModel::new(cpu_by_slug("pentium-g4560").unwrap());
+        let strong = DataLoaderModel::new(cpu_by_slug("ryzen-9-7950x").unwrap());
+        let gpu_step = 0.010;
+        let (t1, bound1) = weak.pipelined_step(gpu_step, &w, 32);
+        let (t2, bound2) = strong.pipelined_step(gpu_step, &w, 32);
+        assert!(bound1 && t1 > gpu_step);
+        assert!(!bound2 && t2 == gpu_step);
+    }
+
+    #[test]
+    fn ram_penalty_slows_loading() {
+        let cpu = cpu_by_slug("ryzen-5-3600").unwrap();
+        let w = resnet18_cifar();
+        let base = DataLoaderModel::new(cpu).batch_seconds(&w, 32);
+        let pen = DataLoaderModel::new(cpu).with_ram_penalty(5.0).batch_seconds(&w, 32);
+        assert!((pen / base - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn workers_capped_by_throttled_cores() {
+        let cpu = cpu_by_slug("ryzen-7-1800x").unwrap();
+        let t = CpuThrottle::new(cpu, 2, 4000, 1.0).unwrap();
+        let m = DataLoaderModel::with_throttle(cpu, t).with_workers(16);
+        let w = resnet18_cifar();
+        let two_core = DataLoaderModel::with_throttle(
+            cpu,
+            CpuThrottle::new(cpu, 2, 4000, 1.0).unwrap(),
+        );
+        assert!((m.batch_seconds(&w, 32) - two_core.batch_seconds(&w, 32)).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,444 @@
+//! The restricted execution environment — the paper's Fig. 1 lifecycle.
+//!
+//! "When the client's fit method is invoked, BouquetFL creates a dedicated
+//! subprocess environment that limits effective GPU compute share via CUDA
+//! MPS and applies clock speed and memory restrictions.  The client performs
+//! data loading and local training under these constraints, then forwards
+//! the resulting update back to the main Flower process, which resets all
+//! hardware limits before the next round."
+//!
+//! `RestrictedEnv::spawn` applies the limits, `run_fit` executes local
+//! training under them (real PJRT execution for learning dynamics, the
+//! emulation substrate for timing/failures), and `teardown` resets them.
+//! A process-wide active-environment counter enforces the paper's §3
+//! isolation invariant: with `Isolation::Strict`, two environments can
+//! never be active at once (hardware limits are global).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::error::EmuError;
+use crate::hardware::profile::HardwareProfile;
+use crate::modelcost::WorkloadCost;
+
+use super::clock::VirtualClock;
+use super::dataload::DataLoaderModel;
+use super::gputime::GpuTimingModel;
+use super::mps::MpsPartition;
+use super::power::step_energy;
+use super::ramcap::RamModel;
+use super::throttle::CpuThrottle;
+use super::vram::{training_footprint, Optimizer, VramAllocator, VramFootprint};
+
+/// How the target device's speed is derived.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum EmulationMode {
+    /// What BouquetFL actually does: restrict the *host* GPU (MPS share,
+    /// SM-quantised) to approximate the target.  Approximation error is
+    /// inherent (bandwidth is only partially isolated).
+    HostRestriction,
+    /// Ground truth: evaluate the timing model directly on the target's
+    /// spec.  Used to quantify HostRestriction's approximation error.
+    DeviceModel,
+}
+
+/// Isolation policy for concurrent environments.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Isolation {
+    /// Paper default: hardware limits are global, clients run sequentially.
+    Strict,
+    /// The paper's announced "limited parallel execution" extension.
+    Concurrent,
+}
+
+/// Host-side framework overhead of one training process (imports, runtime,
+/// buffers) — part of the RAM working set.
+const FRAMEWORK_BYTES: u64 = 1_500 * 1024 * 1024;
+
+static ACTIVE_ENVS: AtomicUsize = AtomicUsize::new(0);
+
+/// Number of currently active restricted environments (for tests/benches).
+pub fn active_env_count() -> usize {
+    ACTIVE_ENVS.load(Ordering::SeqCst)
+}
+
+/// Environment configuration.
+#[derive(Debug, Clone)]
+pub struct EnvConfig {
+    pub mode: EmulationMode,
+    pub optimizer: Optimizer,
+    pub isolation: Isolation,
+}
+
+impl Default for EnvConfig {
+    fn default() -> Self {
+        EnvConfig {
+            mode: EmulationMode::HostRestriction,
+            optimizer: Optimizer::Sgd,
+            isolation: Isolation::Strict,
+        }
+    }
+}
+
+/// Report of one `fit` executed under restriction.
+#[derive(Debug, Clone)]
+pub struct FitReport {
+    pub steps: u32,
+    pub batch: u32,
+    /// Emulated seconds of GPU compute across all steps.
+    pub emu_gpu_s: f64,
+    /// Emulated wall seconds including loader stalls.
+    pub emu_total_s: f64,
+    /// Steps where the data loader (CPU) was the bottleneck.
+    pub loader_bound_steps: u32,
+    /// VRAM footprint of the job.
+    pub footprint: VramFootprint,
+    /// Page-cache residency of the client dataset.
+    pub cache_resident_fraction: f64,
+    /// Estimated energy of the fit (J), from the TDP/utilisation model.
+    pub energy_j: f64,
+    /// Losses reported by the real executor (empty for timing-only fits).
+    pub losses: Vec<f32>,
+}
+
+/// Lifecycle state (Fig. 1).
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum EnvState {
+    Active,
+    TornDown,
+}
+
+/// A hardware-restricted client environment.
+pub struct RestrictedEnv {
+    pub profile: HardwareProfile,
+    cfg: EnvConfig,
+    timing: GpuTimingModel,
+    loader: DataLoaderModel,
+    ram: RamModel,
+    vram: VramAllocator,
+    state: EnvState,
+    /// Effective MPS share applied on the host (1.0 in DeviceModel mode).
+    pub mps_share: f64,
+}
+
+impl RestrictedEnv {
+    /// Apply `target`'s limits on `host` (Fig. 1 "spawn").
+    pub fn spawn(
+        target: &HardwareProfile,
+        host: &HardwareProfile,
+        cfg: EnvConfig,
+    ) -> Result<Self, EmuError> {
+        // Feasibility: a single machine cannot fake *more* resources.
+        if target.gpu.vram_gib > host.gpu.vram_gib {
+            return Err(EmuError::InvalidRestriction(format!(
+                "target VRAM {} GiB exceeds host {} GiB",
+                target.gpu.vram_gib, host.gpu.vram_gib
+            )));
+        }
+        if target.ram.gib > host.ram.gib {
+            return Err(EmuError::InvalidRestriction(format!(
+                "target RAM {} GiB exceeds host {} GiB",
+                target.ram.gib, host.ram.gib
+            )));
+        }
+
+        let throttle = CpuThrottle::for_target(&host.cpu, &target.cpu)?;
+        let (timing, mps_share) = match cfg.mode {
+            EmulationMode::HostRestriction => {
+                let mps = MpsPartition::for_target(&host.gpu, &target.gpu)?;
+                (
+                    GpuTimingModel::with_share(&host.gpu, mps.effective_share()),
+                    mps.effective_share(),
+                )
+            }
+            EmulationMode::DeviceModel => (GpuTimingModel::new(&target.gpu), 1.0),
+        };
+        let loader = DataLoaderModel::with_throttle(&host.cpu, throttle);
+
+        if cfg.isolation == Isolation::Strict && ACTIVE_ENVS.load(Ordering::SeqCst) > 0 {
+            return Err(EmuError::Lifecycle(
+                "strict isolation: another restricted environment is active \
+                 (hardware limits are global; run clients sequentially)"
+                    .into(),
+            ));
+        }
+        ACTIVE_ENVS.fetch_add(1, Ordering::SeqCst);
+
+        Ok(RestrictedEnv {
+            profile: target.clone(),
+            cfg,
+            timing,
+            loader,
+            ram: RamModel::new(target.ram),
+            vram: VramAllocator::new(&target.gpu),
+            state: EnvState::Active,
+            mps_share,
+        })
+    }
+
+    /// Emulated (step_seconds, loader_bound?) for one training step.
+    pub fn step_time(&self, workload: &WorkloadCost, batch: u32) -> (f64, bool) {
+        let gpu_s = self.timing.step_seconds(workload, batch, self.cfg.optimizer);
+        self.loader.pipelined_step(gpu_s, workload, batch)
+    }
+
+    /// Run local training under the restriction.
+    ///
+    /// `exec(step)` performs the *real* training step (PJRT execution) and
+    /// returns its loss; pass a constant closure for timing-only studies.
+    /// Emulated time advances on `clock`.
+    pub fn run_fit<E>(
+        &mut self,
+        clock: &mut VirtualClock,
+        workload: &WorkloadCost,
+        batch: u32,
+        steps: u32,
+        dataset_bytes: u64,
+        mut exec: E,
+    ) -> Result<FitReport, EmuError>
+    where
+        E: FnMut(u32) -> f32,
+    {
+        if self.state != EnvState::Active {
+            return Err(EmuError::Lifecycle("run_fit after teardown".into()));
+        }
+
+        // 1. VRAM feasibility — the OOM the paper validates.
+        let footprint = training_footprint(&self.profile.gpu, workload, batch, self.cfg.optimizer);
+        let ids = self.vram.alloc_training(&footprint)?;
+
+        // 2. Host-RAM feasibility + loading penalty.
+        let process_bytes = 3 * workload.weight_bytes()
+            + (workload.input_bytes * batch as f64) as u64 * self.loader.workers as u64
+            + FRAMEWORK_BYTES;
+        let assess = match self.ram.assess(process_bytes, dataset_bytes) {
+            Ok(a) => a,
+            Err(e) => {
+                for id in ids {
+                    self.vram.free(id);
+                }
+                return Err(e);
+            }
+        };
+        self.loader.ram_penalty = assess.load_penalty;
+
+        // 3. Steps: real execution + emulated timing.
+        let gpu_s = self.timing.step_seconds(workload, batch, self.cfg.optimizer);
+        let (step_s, loader_bound) = self.loader.pipelined_step(gpu_s, workload, batch);
+        // First batch cannot be prefetched behind compute.
+        let warmup_s = self.loader.batch_seconds(workload, batch);
+        clock.advance(warmup_s);
+
+        let mut losses = Vec::with_capacity(steps as usize);
+        for s in 0..steps {
+            losses.push(exec(s));
+            clock.advance(step_s);
+        }
+
+        for id in ids {
+            self.vram.free(id);
+        }
+
+        // Energy estimate (per-step power x emulated time; TDP model).
+        let decomposed = self.timing.train_step(workload, batch, self.cfg.optimizer);
+        let loader_util =
+            (self.loader.workers as f64 / self.profile.cpu.cores as f64).min(1.0);
+        let per_step =
+            step_energy(&self.profile.gpu, &self.profile.cpu, &decomposed, step_s, loader_util);
+
+        Ok(FitReport {
+            steps,
+            batch,
+            emu_gpu_s: gpu_s * steps as f64,
+            emu_total_s: warmup_s + step_s * steps as f64,
+            loader_bound_steps: if loader_bound { steps } else { 0 },
+            footprint,
+            cache_resident_fraction: assess.cache_resident_fraction,
+            energy_j: per_step.energy_j * steps as f64,
+            losses,
+        })
+    }
+
+    /// Reset all hardware limits (Fig. 1 "reset").  Consumes the env.
+    pub fn teardown(mut self) {
+        self.release();
+    }
+
+    fn release(&mut self) {
+        if self.state == EnvState::Active {
+            self.state = EnvState::TornDown;
+            self.vram.reset();
+            ACTIVE_ENVS.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+}
+
+impl Drop for RestrictedEnv {
+    fn drop(&mut self) {
+        // Limits must never leak past the env's lifetime (Fig. 1 contract),
+        // even on unwind.
+        self.release();
+    }
+}
+
+/// Convenience for sweeps: emulated step seconds of `target` on `host`.
+pub fn emulated_step_seconds(
+    target: &HardwareProfile,
+    host: &HardwareProfile,
+    mode: EmulationMode,
+    workload: &WorkloadCost,
+    batch: u32,
+    optimizer: Optimizer,
+) -> Result<(f64, bool), EmuError> {
+    let cfg = EnvConfig { mode, optimizer, isolation: Isolation::Concurrent };
+    let env = RestrictedEnv::spawn(target, host, cfg)?;
+    Ok(env.step_time(workload, batch))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::profile::{preset, HardwareProfile};
+    use crate::modelcost::resnet::resnet18_cifar;
+
+    fn host() -> HardwareProfile {
+        HardwareProfile::paper_host()
+    }
+
+    fn target() -> HardwareProfile {
+        preset("budget-2019").unwrap() // GTX 1650 + i3-10100 + 8 GiB
+    }
+
+    fn concurrent_cfg() -> EnvConfig {
+        EnvConfig { isolation: Isolation::Concurrent, ..Default::default() }
+    }
+
+    /// Tests that assert on the global active-env counter must not overlap
+    /// (cargo runs tests on multiple threads).
+    static COUNTER_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+    fn counter_guard() -> std::sync::MutexGuard<'static, ()> {
+        COUNTER_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn lifecycle_spawn_fit_teardown() {
+        let _g = counter_guard();
+        let mut clock = VirtualClock::fast_forward();
+        let mut env = RestrictedEnv::spawn(&target(), &host(), concurrent_cfg()).unwrap();
+        let before = active_env_count();
+        assert!(before >= 1);
+        let w = resnet18_cifar();
+        let report = env
+            .run_fit(&mut clock, &w, 32, 5, 100 * 1024 * 1024, |_| 1.0)
+            .unwrap();
+        assert_eq!(report.steps, 5);
+        assert_eq!(report.losses.len(), 5);
+        assert!(report.emu_total_s > 0.0);
+        assert!(report.energy_j > 0.0, "energy model must report positive J");
+        assert!(clock.now_s() >= report.emu_total_s - 1e-12);
+        env.teardown();
+        assert_eq!(active_env_count(), before - 1);
+    }
+
+    #[test]
+    fn oom_on_low_memory_device_high_batch() {
+        let _g = counter_guard();
+        // Paper §4.2: high batch on a 4 GiB GTX 1650 must OOM...
+        let mut clock = VirtualClock::fast_forward();
+        let mut env = RestrictedEnv::spawn(&target(), &host(), concurrent_cfg()).unwrap();
+        let w = resnet18_cifar();
+        let err = env
+            .run_fit(&mut clock, &w, 4096, 1, 0, |_| 0.0)
+            .unwrap_err();
+        assert!(matches!(err, EmuError::GpuOom { .. }), "{err:?}");
+        // ...but a small batch trains fine in the same env.
+        let ok = env.run_fit(&mut clock, &w, 16, 1, 0, |_| 0.0);
+        assert!(ok.is_ok(), "{ok:?} — OOM must roll back allocations");
+        env.teardown();
+    }
+
+    #[test]
+    fn slower_target_is_slower() {
+        let _g = counter_guard();
+        let w = resnet18_cifar();
+        let (slow, _) = emulated_step_seconds(
+            &target(),
+            &host(),
+            EmulationMode::HostRestriction,
+            &w,
+            32,
+            Optimizer::Sgd,
+        )
+        .unwrap();
+        let (fast, _) = emulated_step_seconds(
+            &preset("highend-2020").unwrap(),
+            &host(),
+            EmulationMode::HostRestriction,
+            &w,
+            32,
+            Optimizer::Sgd,
+        )
+        .unwrap();
+        assert!(slow > fast, "GTX 1650 ({slow}s) must be slower than RTX 3080 ({fast}s)");
+    }
+
+    #[test]
+    fn cannot_emulate_bigger_vram_or_ram() {
+        let _g = counter_guard();
+        let big = preset("highend-2023").unwrap(); // RTX 4080 16 GiB + 64 GiB RAM
+        match RestrictedEnv::spawn(&big, &host(), concurrent_cfg()) {
+            Err(EmuError::InvalidRestriction(_)) => {}
+            Err(other) => panic!("unexpected error {other:?}"),
+            Ok(_) => panic!("spawn must fail for an over-provisioned target"),
+        }
+    }
+
+    #[test]
+    fn strict_isolation_rejects_concurrent_env() {
+        let _g = counter_guard();
+        let strict = EnvConfig::default();
+        let _e1 = RestrictedEnv::spawn(&target(), &host(), strict.clone()).unwrap();
+        let e2 = RestrictedEnv::spawn(&target(), &host(), strict);
+        assert!(matches!(e2, Err(EmuError::Lifecycle(_))));
+    }
+
+    #[test]
+    fn drop_resets_limits() {
+        let _g = counter_guard();
+        let before = active_env_count();
+        {
+            let _env = RestrictedEnv::spawn(&target(), &host(), concurrent_cfg()).unwrap();
+            assert_eq!(active_env_count(), before + 1);
+        }
+        assert_eq!(active_env_count(), before);
+    }
+
+    #[test]
+    fn fit_after_teardown_is_lifecycle_error() {
+        let _g = counter_guard();
+        let mut env = RestrictedEnv::spawn(&target(), &host(), concurrent_cfg()).unwrap();
+        // Manual release path via teardown consumes; emulate misuse through
+        // a second env we tear down then try to reuse by keeping a clone of
+        // state — instead simply verify double teardown is safe and that a
+        // torn-down env rejects fits by constructing the scenario directly.
+        env.release();
+        let mut clock = VirtualClock::fast_forward();
+        let err = env
+            .run_fit(&mut clock, &resnet18_cifar(), 8, 1, 0, |_| 0.0)
+            .unwrap_err();
+        assert!(matches!(err, EmuError::Lifecycle(_)));
+    }
+
+    #[test]
+    fn weak_cpu_makes_fit_loader_bound() {
+        let _g = counter_guard();
+        let mut clock = VirtualClock::fast_forward();
+        // Pentium-class CPU paired with a fast emulated GPU.
+        let p = HardwareProfile::from_slugs("mismatch", "rtx-4070", "pentium-g4560", 8).unwrap();
+        let mut env = RestrictedEnv::spawn(&p, &host(), concurrent_cfg()).unwrap();
+        let w = resnet18_cifar();
+        let r = env.run_fit(&mut clock, &w, 64, 3, 0, |_| 0.0).unwrap();
+        assert_eq!(r.loader_bound_steps, 3, "{r:?}");
+        env.teardown();
+    }
+}

@@ -1,0 +1,246 @@
+//! Roofline GPU timing model.
+//!
+//! For each layer ℓ of a workload the emulated time is
+//! `max(flops_ℓ / effective_flops, bytes_ℓ / effective_bw) + launch`,
+//! summed over forward + backward + optimiser update + host transfer
+//! (DESIGN.md §6).  Effective rates combine:
+//!   * the device's peak FP32 rate and memory bandwidth,
+//!   * per-architecture, per-layer-kind efficiency factors (the only
+//!     calibrated constants in the model),
+//!   * an occupancy factor for kernels too small to fill the device
+//!     (big GPUs lose efficiency on small layers — the real effect that
+//!     keeps rank correlations below 1.0),
+//!   * the MPS compute share (SM-quantised; bandwidth isolation under MPS
+//!     is partial, modelled as share^0.5 — the paper's §3 "cannot directly
+//!     constrain" caveat made quantitative).
+
+use crate::hardware::gpu::{GpuArch, GpuSpec};
+use crate::modelcost::{LayerKind, WorkloadCost};
+
+use super::vram::Optimizer;
+
+/// Compute-efficiency factor: fraction of peak FP32 a well-tuned kernel of
+/// this kind achieves on this architecture (fp32 training, cuDNN-era
+/// implicit-GEMM convs; newer architectures schedule better).
+fn compute_eff(arch: GpuArch, kind: LayerKind) -> f64 {
+    let conv = match arch {
+        GpuArch::Pascal => 0.42,
+        GpuArch::Turing16 => 0.45,
+        GpuArch::Turing20 => 0.48,
+        GpuArch::Ampere => 0.52,
+        GpuArch::Ada => 0.55,
+    };
+    match kind {
+        LayerKind::Conv => conv,
+        LayerKind::Dense => conv * 1.1, // GEMM slightly beats implicit GEMM
+        // Elementwise kinds never bind on compute; keep a nominal factor.
+        _ => 0.25,
+    }
+}
+
+/// Memory-efficiency factor (achievable fraction of peak DRAM bandwidth).
+fn memory_eff(arch: GpuArch) -> f64 {
+    match arch {
+        GpuArch::Pascal => 0.70,
+        GpuArch::Turing16 | GpuArch::Turing20 => 0.72,
+        GpuArch::Ampere => 0.75,
+        GpuArch::Ada => 0.78,
+    }
+}
+
+/// Kernel launch + scheduling overhead per layer (µs).
+fn launch_overhead_us(arch: GpuArch) -> f64 {
+    match arch {
+        GpuArch::Pascal => 9.0,
+        GpuArch::Turing16 | GpuArch::Turing20 => 8.0,
+        GpuArch::Ampere => 7.0,
+        GpuArch::Ada => 6.0,
+    }
+}
+
+/// Occupancy factor for a layer: kernels whose thread blocks cannot fill
+/// every SM with enough waves run below the efficiency ceiling.
+/// `work_items` ~ output elements x batch; one block ≈ 256 items, full
+/// utilisation needs ≈ 8 resident blocks per SM.
+fn occupancy(work_items: f64, sms: u32) -> f64 {
+    let blocks = work_items / 256.0;
+    let needed = sms as f64 * 8.0;
+    (blocks / needed).min(1.0).max(0.05)
+}
+
+/// Decomposed step time (seconds).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StepTime {
+    pub compute_s: f64,
+    pub memory_s: f64,
+    pub overhead_s: f64,
+    pub transfer_s: f64,
+    pub optimizer_s: f64,
+}
+
+impl StepTime {
+    pub fn total_s(&self) -> f64 {
+        self.compute_s + self.memory_s + self.overhead_s + self.transfer_s + self.optimizer_s
+    }
+}
+
+/// The timing model.  `share` is the MPS-granted compute share in (0, 1].
+#[derive(Debug, Clone)]
+pub struct GpuTimingModel {
+    pub gpu: GpuSpec,
+    pub share: f64,
+}
+
+impl GpuTimingModel {
+    pub fn new(gpu: &GpuSpec) -> Self {
+        GpuTimingModel { gpu: gpu.clone(), share: 1.0 }
+    }
+
+    pub fn with_share(gpu: &GpuSpec, share: f64) -> Self {
+        assert!(share > 0.0 && share <= 1.0, "share {share} out of (0,1]");
+        GpuTimingModel { gpu: gpu.clone(), share }
+    }
+
+    /// Effective FLOP rate for a layer kind (FLOP/s), before occupancy.
+    fn flops_rate(&self, kind: LayerKind) -> f64 {
+        self.gpu.peak_fp32_tflops() * 1e12 * compute_eff(self.gpu.arch, kind) * self.share
+    }
+
+    /// Effective memory bandwidth (B/s).  MPS gives only partial bandwidth
+    /// isolation: share^0.5.
+    fn mem_rate(&self) -> f64 {
+        self.gpu.mem_bw_gbs * 1e9 * memory_eff(self.gpu.arch) * self.share.sqrt()
+    }
+
+    /// One full training step (fwd + bwd + optimiser + H2D transfer) for a
+    /// whole batch.
+    pub fn train_step(&self, workload: &WorkloadCost, batch: u32, opt: Optimizer) -> StepTime {
+        let b = batch as f64;
+        let launch = launch_overhead_us(self.gpu.arch) * 1e-6;
+        let sms = (self.gpu.sm_count() as f64 * self.share).ceil().max(1.0) as u32;
+
+        let mut compute_s = 0.0;
+        let mut memory_s = 0.0;
+        let mut overhead_s = 0.0;
+        for layer in &workload.layers {
+            // Work items ~ traffic in elements; a robust proxy across kinds.
+            let work = layer.bytes_fwd / 4.0 * b;
+            let occ = occupancy(work, sms);
+            // Forward.
+            let tc_f = layer.flops_fwd * b / (self.flops_rate(layer.kind) * occ);
+            let tm_f = layer.bytes_fwd * b / self.mem_rate();
+            // Backward.
+            let tc_b = layer.flops_bwd() * b / (self.flops_rate(layer.kind) * occ);
+            let tm_b = layer.bytes_bwd() * b / self.mem_rate();
+            // Roofline per pass; attribute to the binding resource.
+            let f = tc_f.max(tm_f);
+            let bwd = tc_b.max(tm_b);
+            if tc_f >= tm_f {
+                compute_s += f;
+            } else {
+                memory_s += f;
+            }
+            if tc_b >= tm_b {
+                compute_s += bwd;
+            } else {
+                memory_s += bwd;
+            }
+            overhead_s += 3.0 * launch; // fwd + 2 bwd kernels
+        }
+
+        // Optimiser: read w, read g, write w (+ state passes).
+        let passes = 3.0 + opt.state_floats_per_param() as f64 * 2.0;
+        let optimizer_s = workload.weight_bytes() as f64 * passes / 3.0 / self.mem_rate();
+
+        // Host->device batch transfer over PCIe.
+        let transfer_s = workload.input_bytes * b / (self.gpu.arch.pcie_gbs() * 1e9);
+
+        StepTime { compute_s, memory_s, overhead_s, transfer_s, optimizer_s }
+    }
+
+    /// Convenience: total seconds per training step.
+    pub fn step_seconds(&self, workload: &WorkloadCost, batch: u32, opt: Optimizer) -> f64 {
+        self.train_step(workload, batch, opt).total_s()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::gpu::{gpu_by_slug, FIG2_GPUS};
+    use crate::modelcost::resnet::resnet18_cifar;
+
+    fn secs(slug: &str, batch: u32) -> f64 {
+        let g = gpu_by_slug(slug).unwrap();
+        GpuTimingModel::new(g).step_seconds(&resnet18_cifar(), batch, Optimizer::Sgd)
+    }
+
+    #[test]
+    fn absolute_magnitude_plausible() {
+        // CIFAR ResNet-18, batch 32: real consumer GPUs land in the
+        // ~5-100 ms per step range.
+        for slug in FIG2_GPUS {
+            let t = secs(slug, 32);
+            assert!((0.002..0.2).contains(&t), "{slug}: {t}s");
+        }
+    }
+
+    #[test]
+    fn faster_gpus_are_faster() {
+        assert!(secs("rtx-3080", 32) < secs("gtx-1060", 32));
+        assert!(secs("rtx-2080", 32) < secs("gtx-1650", 32));
+        assert!(secs("rtx-4070-super", 32) < secs("rtx-2060", 32));
+    }
+
+    #[test]
+    fn time_increases_with_batch() {
+        for slug in ["gtx-1060", "rtx-3080"] {
+            assert!(secs(slug, 64) > secs(slug, 32));
+            assert!(secs(slug, 32) > secs(slug, 8));
+        }
+    }
+
+    #[test]
+    fn share_scales_time_superlinearly_down() {
+        let g = gpu_by_slug("rtx-4070-super").unwrap();
+        let w = resnet18_cifar();
+        let full = GpuTimingModel::new(g).step_seconds(&w, 32, Optimizer::Sgd);
+        let half = GpuTimingModel::with_share(g, 0.5).step_seconds(&w, 32, Optimizer::Sgd);
+        let tenth = GpuTimingModel::with_share(g, 0.1).step_seconds(&w, 32, Optimizer::Sgd);
+        assert!(half > full * 1.3, "half-share must be much slower");
+        assert!(tenth > half * 2.0);
+    }
+
+    #[test]
+    fn optimizer_state_adds_time() {
+        let g = gpu_by_slug("gtx-1060").unwrap();
+        let w = resnet18_cifar();
+        let sgd = GpuTimingModel::new(g).step_seconds(&w, 32, Optimizer::Sgd);
+        let adam = GpuTimingModel::new(g).step_seconds(&w, 32, Optimizer::Adam);
+        assert!(adam > sgd);
+    }
+
+    #[test]
+    fn small_batch_hurts_big_gpus_more() {
+        // Occupancy: going 32 -> 1 sample costs the 4090 a larger relative
+        // efficiency drop than the 1050 (it can't fill its SMs).
+        let eff = |slug: &str| {
+            let t1 = secs(slug, 1);
+            let t32 = secs(slug, 32);
+            t32 / (32.0 * t1) // per-sample efficiency retention at batch 1
+        };
+        assert!(eff("rtx-4090") < eff("gtx-1050"));
+    }
+
+    #[test]
+    fn components_all_nonnegative() {
+        let g = gpu_by_slug("rtx-3060").unwrap();
+        let st = GpuTimingModel::new(g).train_step(&resnet18_cifar(), 32, Optimizer::Sgd);
+        assert!(st.compute_s >= 0.0 && st.memory_s >= 0.0);
+        assert!(st.overhead_s > 0.0 && st.transfer_s > 0.0 && st.optimizer_s > 0.0);
+        assert!((st.total_s()
+            - (st.compute_s + st.memory_s + st.overhead_s + st.transfer_s + st.optimizer_s))
+            .abs()
+            < 1e-15);
+    }
+}

@@ -1,0 +1,27 @@
+//! The hardware-emulation substrate (DESIGN.md §Substitutions): everything
+//! the paper does with CUDA MPS / cgroups / cpufreq, rebuilt as byte- and
+//! SM-accurate models whose observables (step times, OOM failures, loader
+//! stalls) match what restricted real hardware produces.
+
+pub mod clock;
+pub mod dataload;
+pub mod env;
+pub mod gputime;
+pub mod mps;
+pub mod power;
+pub mod ramcap;
+pub mod throttle;
+pub mod vram;
+
+pub use clock::{ClockMode, VirtualClock};
+pub use dataload::DataLoaderModel;
+pub use env::{
+    active_env_count, emulated_step_seconds, EmulationMode, EnvConfig, FitReport, Isolation,
+    RestrictedEnv,
+};
+pub use gputime::{GpuTimingModel, StepTime};
+pub use mps::MpsPartition;
+pub use power::{fit_energy_j, step_energy, StepEnergy};
+pub use ramcap::{RamAssessment, RamModel};
+pub use throttle::CpuThrottle;
+pub use vram::{max_batch, training_footprint, Optimizer, VramAllocator, VramFootprint};

@@ -1,0 +1,128 @@
+//! CUDA MPS compute-share emulation.
+//!
+//! The paper (and FedHC before it) limits the "effective GPU compute share
+//! via CUDA MPS" — `CUDA_MPS_ACTIVE_THREAD_PERCENTAGE`.  Real MPS enforces
+//! the limit at SM granularity: a percentage maps to a number of SMs the
+//! client may occupy (rounded up, minimum one SM).  We reproduce exactly
+//! that observable: the effective FLOP/bandwidth share handed to the
+//! roofline model is `ceil(pct/100 * sm_count) / sm_count`.
+
+use crate::error::EmuError;
+use crate::hardware::gpu::GpuSpec;
+
+/// An MPS-style GPU partition.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MpsPartition {
+    /// Requested active-thread percentage (0, 100].
+    pub active_thread_pct: f64,
+    /// SMs granted on the host GPU.
+    pub granted_sms: u32,
+    /// Total SMs on the host GPU.
+    pub total_sms: u32,
+}
+
+impl MpsPartition {
+    /// Create a partition of `host` with the given active-thread percentage.
+    pub fn new(host: &GpuSpec, active_thread_pct: f64) -> Result<Self, EmuError> {
+        if !(0.0..=100.0).contains(&active_thread_pct) || active_thread_pct == 0.0 {
+            return Err(EmuError::InvalidRestriction(format!(
+                "MPS active-thread percentage must be in (0, 100], got {active_thread_pct}"
+            )));
+        }
+        let total = host.sm_count();
+        let granted = ((active_thread_pct / 100.0 * total as f64).ceil() as u32)
+            .clamp(1, total);
+        Ok(MpsPartition {
+            active_thread_pct,
+            granted_sms: granted,
+            total_sms: total,
+        })
+    }
+
+    /// Full device (no restriction).
+    pub fn full(host: &GpuSpec) -> Self {
+        MpsPartition {
+            active_thread_pct: 100.0,
+            granted_sms: host.sm_count(),
+            total_sms: host.sm_count(),
+        }
+    }
+
+    /// The SM-quantised compute share actually enforced.
+    pub fn effective_share(&self) -> f64 {
+        self.granted_sms as f64 / self.total_sms as f64
+    }
+
+    /// The share needed to emulate `target` on `host` by compute ratio
+    /// (how BouquetFL picks the MPS percentage for a device profile).
+    pub fn for_target(host: &GpuSpec, target: &GpuSpec) -> Result<Self, EmuError> {
+        let ratio = target.peak_fp32_tflops() / host.peak_fp32_tflops();
+        if ratio > 1.0 + 1e-9 {
+            return Err(EmuError::InvalidRestriction(format!(
+                "target {} ({:.1} TFLOPs) exceeds host {} ({:.1} TFLOPs); \
+                 cannot emulate a faster device by restriction",
+                target.name,
+                target.peak_fp32_tflops(),
+                host.name,
+                host.peak_fp32_tflops()
+            )));
+        }
+        Self::new(host, (ratio * 100.0).clamp(1e-6, 100.0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::gpu::gpu_by_slug;
+
+    fn host() -> &'static GpuSpec {
+        gpu_by_slug("rtx-4070-super").unwrap() // 56 SMs
+    }
+
+    #[test]
+    fn quantises_to_sm_granularity() {
+        let p = MpsPartition::new(host(), 50.0).unwrap();
+        assert_eq!(p.total_sms, 56);
+        assert_eq!(p.granted_sms, 28);
+        assert!((p.effective_share() - 0.5).abs() < 1e-12);
+        // 1% still grants one SM.
+        let p1 = MpsPartition::new(host(), 1.0).unwrap();
+        assert_eq!(p1.granted_sms, 1);
+    }
+
+    #[test]
+    fn rounding_is_ceil_like_mps() {
+        // 10% of 56 SMs = 5.6 -> 6 SMs.
+        let p = MpsPartition::new(host(), 10.0).unwrap();
+        assert_eq!(p.granted_sms, 6);
+    }
+
+    #[test]
+    fn rejects_out_of_range() {
+        assert!(MpsPartition::new(host(), 0.0).is_err());
+        assert!(MpsPartition::new(host(), -5.0).is_err());
+        assert!(MpsPartition::new(host(), 101.0).is_err());
+    }
+
+    #[test]
+    fn target_share_matches_tflops_ratio() {
+        let target = gpu_by_slug("gtx-1060").unwrap(); // ~4.4 TFLOPs
+        let p = MpsPartition::for_target(host(), target).unwrap();
+        let expected = target.peak_fp32_tflops() / host().peak_fp32_tflops();
+        // Quantisation error is at most one SM.
+        assert!((p.effective_share() - expected).abs() <= 1.0 / 56.0 + 1e-9);
+    }
+
+    #[test]
+    fn cannot_emulate_faster_device() {
+        let target = gpu_by_slug("rtx-4090").unwrap();
+        assert!(MpsPartition::for_target(host(), target).is_err());
+    }
+
+    #[test]
+    fn full_partition_is_identity() {
+        let p = MpsPartition::full(host());
+        assert_eq!(p.effective_share(), 1.0);
+    }
+}

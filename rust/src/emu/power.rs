@@ -1,0 +1,133 @@
+//! Energy/power model — an extension in the spirit of the paper's cited
+//! execution-time-and-power predictor (Ara et al., 2022): estimate each
+//! emulated client's energy per training step from TDP, utilisation and
+//! emulated time.
+//!
+//! Model: `P = P_idle + (P_tdp - P_idle) * utilisation`, where utilisation
+//! is the compute-bound fraction of the step (memory-bound phases run the
+//! device below its power limit), and energy = P x emulated step time.
+
+use crate::hardware::cpu::CpuSpec;
+use crate::hardware::gpu::GpuSpec;
+
+use super::gputime::StepTime;
+
+/// Idle draw as a fraction of TDP (public measurements cluster ~10-15%).
+const GPU_IDLE_FRACTION: f64 = 0.12;
+const CPU_IDLE_FRACTION: f64 = 0.20;
+
+/// Energy estimate for one training step.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StepEnergy {
+    /// Average GPU power over the step (W).
+    pub gpu_power_w: f64,
+    /// Average CPU power (loader workers) over the step (W).
+    pub cpu_power_w: f64,
+    /// Total energy for the step (J).
+    pub energy_j: f64,
+}
+
+/// Estimate step energy from the decomposed step time.
+///
+/// `loader_utilisation` = fraction of CPU capacity the data pipeline uses
+/// (workers / cores, scaled by throttle).
+pub fn step_energy(
+    gpu: &GpuSpec,
+    cpu: &CpuSpec,
+    step: &StepTime,
+    wall_s: f64,
+    loader_utilisation: f64,
+) -> StepEnergy {
+    assert!(wall_s > 0.0);
+    let busy = step.total_s().min(wall_s);
+    // Compute-bound fraction runs at ~TDP; memory/transfer phases lower.
+    let compute_frac = if busy > 0.0 { step.compute_s / busy } else { 0.0 };
+    let active_util = 0.55 + 0.45 * compute_frac.clamp(0.0, 1.0);
+    // Duty = device busy over the wall (loader stalls idle the GPU).
+    let duty = (busy / wall_s).clamp(0.0, 1.0);
+    let tdp = gpu.tdp_w as f64;
+    let gpu_power = tdp * GPU_IDLE_FRACTION
+        + tdp * (1.0 - GPU_IDLE_FRACTION) * active_util * duty;
+
+    let ctdp = cpu.tdp_w as f64;
+    let cpu_power = ctdp * CPU_IDLE_FRACTION
+        + ctdp * (1.0 - CPU_IDLE_FRACTION) * loader_utilisation.clamp(0.0, 1.0);
+
+    StepEnergy {
+        gpu_power_w: gpu_power,
+        cpu_power_w: cpu_power,
+        energy_j: (gpu_power + cpu_power) * wall_s,
+    }
+}
+
+/// Energy for a whole fit (steps x per-step energy).
+pub fn fit_energy_j(per_step: &StepEnergy, steps: u32, step_wall_s: f64) -> f64 {
+    let _ = step_wall_s;
+    per_step.energy_j * steps as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::emu::{GpuTimingModel, Optimizer};
+    use crate::hardware::cpu::cpu_by_slug;
+    use crate::hardware::gpu::gpu_by_slug;
+    use crate::modelcost::resnet18_cifar;
+
+    fn step_for(slug: &str) -> (StepTime, f64) {
+        let g = gpu_by_slug(slug).unwrap();
+        let st = GpuTimingModel::new(g).train_step(&resnet18_cifar(), 32, Optimizer::Sgd);
+        let wall = st.total_s();
+        (st, wall)
+    }
+
+    #[test]
+    fn power_between_idle_and_tdp() {
+        for slug in ["gtx-1050", "gtx-1060", "rtx-3080", "rtx-4090"] {
+            let g = gpu_by_slug(slug).unwrap();
+            let cpu = cpu_by_slug("ryzen-5-3600").unwrap();
+            let (st, wall) = step_for(slug);
+            let e = step_energy(g, cpu, &st, wall, 0.5);
+            let tdp = g.tdp_w as f64;
+            assert!(e.gpu_power_w >= tdp * GPU_IDLE_FRACTION - 1e-9, "{slug}");
+            assert!(e.gpu_power_w <= tdp + 1e-9, "{slug}: {e:?}");
+            assert!(e.energy_j > 0.0);
+        }
+    }
+
+    #[test]
+    fn loader_stall_reduces_gpu_power() {
+        let g = gpu_by_slug("rtx-3080").unwrap();
+        let cpu = cpu_by_slug("ryzen-5-3600").unwrap();
+        let (st, wall) = step_for("rtx-3080");
+        let busy = step_energy(g, cpu, &st, wall, 0.5);
+        // Same compute, but the wall is 3x longer (loader-bound).
+        let stalled = step_energy(g, cpu, &st, wall * 3.0, 1.0);
+        assert!(stalled.gpu_power_w < busy.gpu_power_w);
+    }
+
+    #[test]
+    fn big_gpus_use_more_energy_per_step_but_can_win_per_sample() {
+        let cpu = cpu_by_slug("ryzen-5-3600").unwrap();
+        let (st_small, wall_small) = step_for("gtx-1050");
+        let (st_big, wall_big) = step_for("rtx-3080");
+        let e_small = step_energy(gpu_by_slug("gtx-1050").unwrap(), cpu, &st_small, wall_small, 0.3);
+        let e_big = step_energy(gpu_by_slug("rtx-3080").unwrap(), cpu, &st_big, wall_big, 0.3);
+        // The 3080 draws more power...
+        assert!(e_big.gpu_power_w > e_small.gpu_power_w);
+        // ...but finishes the step so much faster that energy/step is lower.
+        assert!(
+            e_big.energy_j < e_small.energy_j,
+            "big {e_big:?} vs small {e_small:?}"
+        );
+    }
+
+    #[test]
+    fn fit_energy_scales_with_steps() {
+        let g = gpu_by_slug("rtx-2060").unwrap();
+        let cpu = cpu_by_slug("ryzen-5-3600").unwrap();
+        let (st, wall) = step_for("rtx-2060");
+        let e = step_energy(g, cpu, &st, wall, 0.4);
+        assert!((fit_energy_j(&e, 10, wall) - 10.0 * e.energy_j).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,122 @@
+//! Host-RAM capacity model: the paper's §4.2 "differing performances due to
+//! RAM sizes" claim.
+//!
+//! Two observables of a RAM-limited client:
+//!   1. a hard failure when the training process working set cannot fit at
+//!      all (host OOM / OOM-killer), and
+//!   2. a *soft* slowdown when the dataset no longer fits in the page cache
+//!      and batches must be re-read from disk (load factor > 1).
+
+use crate::error::EmuError;
+use crate::hardware::ram::RamSpec;
+
+/// Slowdown of a cache-miss batch (re-read + re-decode from disk) relative
+/// to a page-cache hit, for a consumer SATA/NVMe mix.  A single calibrated
+/// constant keeps the penalty monotone in RAM size (documented in
+/// DESIGN.md §6).
+const DISK_MISS_PENALTY: f64 = 8.0;
+
+/// OS + desktop baseline resident set.
+const OS_RESERVED_GIB: f64 = 2.0;
+
+/// RAM situation of one emulated client.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RamModel {
+    pub spec: RamSpec,
+}
+
+/// Outcome of the RAM feasibility/penalty analysis.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RamAssessment {
+    /// Multiplier (>= 1) on data-loading time caused by cache misses.
+    pub load_penalty: f64,
+    /// Fraction of the dataset resident in the page cache.
+    pub cache_resident_fraction: f64,
+}
+
+impl RamModel {
+    pub fn new(spec: RamSpec) -> Self {
+        RamModel { spec }
+    }
+
+    fn available_bytes(&self) -> f64 {
+        (self.spec.gib as f64 - OS_RESERVED_GIB).max(0.25) * 1024.0 * 1024.0 * 1024.0
+    }
+
+    /// Check feasibility and compute the loading penalty.
+    ///
+    /// `process_bytes`: training process working set (host-side copies of
+    /// params, batches, framework).  `dataset_bytes`: client's local data.
+    pub fn assess(
+        &self,
+        process_bytes: u64,
+        dataset_bytes: u64,
+    ) -> Result<RamAssessment, EmuError> {
+        let avail = self.available_bytes();
+        if process_bytes as f64 > avail {
+            return Err(EmuError::HostOom {
+                working_mb: process_bytes / (1024 * 1024),
+                capacity_mb: (avail / 1024.0 / 1024.0) as u64,
+            });
+        }
+        let for_cache = avail - process_bytes as f64;
+        let resident = if dataset_bytes == 0 {
+            1.0
+        } else {
+            (for_cache / dataset_bytes as f64).clamp(0.0, 1.0)
+        };
+        // Misses are re-read from disk; hits stream from the page cache.
+        let miss = 1.0 - resident;
+        let rel = resident + miss * DISK_MISS_PENALTY;
+        Ok(RamAssessment {
+            load_penalty: rel.max(1.0),
+            cache_resident_fraction: resident,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::ram::ram_with_gib;
+
+    const GIB: u64 = 1024 * 1024 * 1024;
+
+    #[test]
+    fn plenty_of_ram_no_penalty() {
+        let m = RamModel::new(ram_with_gib(32).unwrap());
+        let a = m.assess(2 * GIB, 4 * GIB).unwrap();
+        assert_eq!(a.load_penalty, 1.0);
+        assert_eq!(a.cache_resident_fraction, 1.0);
+    }
+
+    #[test]
+    fn small_ram_pays_disk_penalty() {
+        let m = RamModel::new(ram_with_gib(4).unwrap());
+        // 1.5 GiB process + 8 GiB dataset on a 4 GiB machine.
+        let a = m.assess(3 * GIB / 2, 8 * GIB).unwrap();
+        assert!(a.cache_resident_fraction < 0.2, "{a:?}");
+        assert!(a.load_penalty > 5.0, "{a:?}");
+        assert!(a.load_penalty <= DISK_MISS_PENALTY, "{a:?}");
+    }
+
+    #[test]
+    fn hard_oom_when_process_exceeds_ram() {
+        let m = RamModel::new(ram_with_gib(4).unwrap());
+        let err = m.assess(8 * GIB, 0).unwrap_err();
+        assert!(matches!(err, EmuError::HostOom { .. }));
+    }
+
+    #[test]
+    fn penalty_monotone_in_ram_size() {
+        let process = 2 * GIB;
+        let dataset = 16 * GIB;
+        let mut last = f64::INFINITY;
+        for gib in [8, 16, 32, 64] {
+            let m = RamModel::new(ram_with_gib(gib).unwrap());
+            let a = m.assess(process, dataset).unwrap();
+            assert!(a.load_penalty <= last, "penalty must shrink with more RAM");
+            last = a.load_penalty;
+        }
+    }
+}

@@ -1,0 +1,167 @@
+//! CPU restriction: core masking + frequency capping, emulated with the
+//! duty-cycle semantics of Buchert et al. ("Accurate emulation of CPU
+//! performance", Euro-Par 2010) that the paper's clock-speed restriction
+//! builds on.
+//!
+//! The host cannot actually change its clock here; instead the throttle
+//! produces an *effective CPU spec* whose throughput scores feed the
+//! dataloader model — the observable a restricted client sees is "my data
+//! pipeline sustains fewer samples/s", which is exactly what this yields.
+
+use crate::error::EmuError;
+use crate::hardware::cpu::CpuSpec;
+
+/// A CPU restriction applied to a host CPU.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CpuThrottle {
+    /// Cores visible to the client (<= host cores).
+    pub cores: u32,
+    /// Frequency cap in MHz (<= host boost clock).
+    pub max_freq_mhz: u32,
+    /// Duty cycle in (0, 1]: fraction of time the cores may run
+    /// (cgroup cpu.max-style quota). 1.0 = no duty-cycling.
+    pub duty_cycle: f64,
+}
+
+impl CpuThrottle {
+    /// No restriction relative to `host`.
+    pub fn none(host: &CpuSpec) -> Self {
+        CpuThrottle {
+            cores: host.cores,
+            max_freq_mhz: host.boost_clock_mhz,
+            duty_cycle: 1.0,
+        }
+    }
+
+    /// Validate a restriction against a host CPU.
+    pub fn new(
+        host: &CpuSpec,
+        cores: u32,
+        max_freq_mhz: u32,
+        duty_cycle: f64,
+    ) -> Result<Self, EmuError> {
+        if cores == 0 || cores > host.cores {
+            return Err(EmuError::InvalidRestriction(format!(
+                "cores {cores} not in [1, {}] for {}",
+                host.cores, host.name
+            )));
+        }
+        if max_freq_mhz == 0 || max_freq_mhz > host.boost_clock_mhz {
+            return Err(EmuError::InvalidRestriction(format!(
+                "frequency {max_freq_mhz} MHz not in [1, {}] for {}",
+                host.boost_clock_mhz, host.name
+            )));
+        }
+        if !(0.0..=1.0).contains(&duty_cycle) || duty_cycle == 0.0 {
+            return Err(EmuError::InvalidRestriction(format!(
+                "duty cycle {duty_cycle} not in (0, 1]"
+            )));
+        }
+        Ok(CpuThrottle { cores, max_freq_mhz, duty_cycle })
+    }
+
+    /// The restriction that emulates `target` on `host`.
+    ///
+    /// Core count is masked directly; the target's per-core throughput
+    /// (IPC x clock) is reproduced by a frequency cap when the host's IPC
+    /// is higher, or a duty-cycle when even the host's full clock is too
+    /// slow per-core (host IPC < target IPC) — then we *overshoot* cores
+    /// cannot help and the best approximation is duty = 1.0 capped at host
+    /// speed (documented limitation, matches the paper's "can only
+    /// approximate" caveat).
+    pub fn for_target(host: &CpuSpec, target: &CpuSpec) -> Result<Self, EmuError> {
+        if target.cores > host.cores {
+            return Err(EmuError::InvalidRestriction(format!(
+                "target {} has {} cores, host {} only {}",
+                target.name, target.cores, host.name, host.cores
+            )));
+        }
+        let per_core_ratio = target.single_core_score() / host.single_core_score();
+        if per_core_ratio >= 1.0 {
+            // Host per-core is the ceiling; run uncapped.
+            return Self::new(host, target.cores, host.boost_clock_mhz, 1.0);
+        }
+        // Try a pure frequency cap first: effective per-core throughput
+        // scales ~ linearly with clock at fixed IPC.
+        let freq = (per_core_ratio * host.boost_clock_mhz as f64) as u32;
+        let min_freq = host.base_clock_mhz / 2; // cpufreq floors out around here
+        if freq >= min_freq {
+            Self::new(host, target.cores, freq, 1.0)
+        } else {
+            // Below the floor, make up the rest with duty-cycling.
+            let duty = per_core_ratio * host.boost_clock_mhz as f64 / min_freq as f64;
+            Self::new(host, target.cores, min_freq, duty.clamp(0.01, 1.0))
+        }
+    }
+
+    /// Effective throughput multiplier for one core relative to the host's
+    /// unrestricted boost-clock core.
+    pub fn per_core_factor(&self, host: &CpuSpec) -> f64 {
+        (self.max_freq_mhz as f64 / host.boost_clock_mhz as f64) * self.duty_cycle
+    }
+
+    /// Effective all-core throughput relative to the host's full capacity.
+    pub fn total_factor(&self, host: &CpuSpec) -> f64 {
+        self.per_core_factor(host) * self.cores as f64 / host.cores as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::cpu::cpu_by_slug;
+
+    fn host() -> &'static CpuSpec {
+        cpu_by_slug("ryzen-7-1800x").unwrap()
+    }
+
+    #[test]
+    fn none_is_identity() {
+        let t = CpuThrottle::none(host());
+        assert!((t.per_core_factor(host()) - 1.0).abs() < 1e-12);
+        assert!((t.total_factor(host()) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn validation_rejects_impossible() {
+        assert!(CpuThrottle::new(host(), 0, 4000, 1.0).is_err());
+        assert!(CpuThrottle::new(host(), 16, 4000, 1.0).is_err()); // host has 8
+        assert!(CpuThrottle::new(host(), 4, 9000, 1.0).is_err());
+        assert!(CpuThrottle::new(host(), 4, 4000, 0.0).is_err());
+        assert!(CpuThrottle::new(host(), 4, 4000, 1.5).is_err());
+    }
+
+    #[test]
+    fn target_with_fewer_slower_cores() {
+        // Pentium G4560 (2c, 0.85 IPC @ 3.5 GHz) on the 1800X.
+        let target = cpu_by_slug("pentium-g4560").unwrap();
+        let t = CpuThrottle::for_target(host(), target).unwrap();
+        assert_eq!(t.cores, 2);
+        let got = t.per_core_factor(host());
+        let want = target.single_core_score() / host().single_core_score();
+        assert!((got - want).abs() < 0.02, "got {got}, want {want}");
+    }
+
+    #[test]
+    fn faster_per_core_target_saturates_at_host() {
+        // 5600X has much higher per-core score than the 1800X host.
+        let target = cpu_by_slug("ryzen-5-5600x").unwrap();
+        let t = CpuThrottle::for_target(host(), target).unwrap();
+        assert_eq!(t.max_freq_mhz, host().boost_clock_mhz);
+        assert_eq!(t.duty_cycle, 1.0);
+        assert_eq!(t.cores, 6);
+    }
+
+    #[test]
+    fn more_target_cores_than_host_is_error() {
+        let target = cpu_by_slug("ryzen-9-5950x").unwrap(); // 16 cores
+        assert!(CpuThrottle::for_target(host(), target).is_err());
+    }
+
+    #[test]
+    fn total_factor_scales_with_cores() {
+        let t4 = CpuThrottle::new(host(), 4, 4000, 1.0).unwrap();
+        let t8 = CpuThrottle::new(host(), 8, 4000, 1.0).unwrap();
+        assert!((t8.total_factor(host()) / t4.total_factor(host()) - 2.0).abs() < 1e-12);
+    }
+}

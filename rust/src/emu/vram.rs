@@ -1,0 +1,296 @@
+//! VRAM allocator model — byte-accurate accounting of a training job's GPU
+//! memory footprint, producing the out-of-memory failures the paper's §4.2
+//! validates ("high batch size training on low-memory hardware devices").
+
+use crate::error::EmuError;
+use crate::hardware::gpu::{GpuArch, GpuSpec};
+use crate::modelcost::WorkloadCost;
+
+/// Breakdown of a training job's device-memory footprint.
+#[derive(Debug, Clone, PartialEq)]
+pub struct VramFootprint {
+    pub weights: u64,
+    pub gradients: u64,
+    pub optimizer_state: u64,
+    pub activations: u64,
+    /// CUDA context + framework reserved (per-architecture constant).
+    pub context: u64,
+    /// cuDNN/XLA workspace for conv algorithms (~ largest layer traffic).
+    pub workspace: u64,
+}
+
+impl VramFootprint {
+    pub fn total(&self) -> u64 {
+        self.weights
+            + self.gradients
+            + self.optimizer_state
+            + self.activations
+            + self.context
+            + self.workspace
+    }
+}
+
+/// Optimizer choice (affects the per-parameter state bytes).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Optimizer {
+    /// Plain SGD: no extra state.
+    Sgd,
+    /// SGD + momentum: 1 extra f32 per parameter.
+    SgdMomentum,
+    /// Adam: 2 extra f32 per parameter.
+    Adam,
+}
+
+impl Optimizer {
+    pub fn state_floats_per_param(&self) -> u64 {
+        match self {
+            Optimizer::Sgd => 0,
+            Optimizer::SgdMomentum => 1,
+            Optimizer::Adam => 2,
+        }
+    }
+}
+
+/// CUDA context + framework overhead by architecture (newer drivers and
+/// larger kernels images reserve more).
+fn context_bytes(arch: GpuArch) -> u64 {
+    let mib = match arch {
+        GpuArch::Pascal => 350,
+        GpuArch::Turing16 | GpuArch::Turing20 => 450,
+        GpuArch::Ampere => 550,
+        GpuArch::Ada => 600,
+    };
+    mib * 1024 * 1024
+}
+
+/// Estimate the training footprint of `workload` at `batch` on `gpu`.
+pub fn training_footprint(
+    gpu: &GpuSpec,
+    workload: &WorkloadCost,
+    batch: u32,
+    optimizer: Optimizer,
+) -> VramFootprint {
+    let weights = workload.weight_bytes();
+    let activations = workload.activation_bytes(batch);
+    // Workspace: conv algo scratch ~ the largest single layer's fwd traffic
+    // at this batch (a standard cuDNN-benchmark approximation).
+    let workspace = workload
+        .layers
+        .iter()
+        .map(|l| (l.bytes_fwd * batch as f64) as u64)
+        .max()
+        .unwrap_or(0);
+    VramFootprint {
+        weights,
+        gradients: weights,
+        optimizer_state: workload.params() * 4 * optimizer.state_floats_per_param(),
+        activations,
+        context: context_bytes(gpu.arch),
+        workspace,
+    }
+}
+
+/// A live VRAM allocator for one emulated device.
+#[derive(Debug)]
+pub struct VramAllocator {
+    device: String,
+    capacity: u64,
+    allocated: u64,
+    peak: u64,
+    live: Vec<(u64, String, u64)>, // (id, label, bytes)
+    next_id: u64,
+}
+
+/// Handle to a live allocation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AllocId(u64);
+
+impl VramAllocator {
+    pub fn new(gpu: &GpuSpec) -> Self {
+        VramAllocator {
+            device: gpu.name.to_string(),
+            capacity: gpu.vram_bytes(),
+            allocated: 0,
+            peak: 0,
+            live: Vec::new(),
+            next_id: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    pub fn allocated(&self) -> u64 {
+        self.allocated
+    }
+
+    pub fn peak(&self) -> u64 {
+        self.peak
+    }
+
+    pub fn free_bytes(&self) -> u64 {
+        self.capacity - self.allocated
+    }
+
+    /// Allocate `bytes`, failing with the same observable as the CUDA
+    /// allocator: an OOM error naming requested vs free.
+    pub fn alloc(&mut self, label: &str, bytes: u64) -> Result<AllocId, EmuError> {
+        if bytes > self.free_bytes() {
+            return Err(EmuError::GpuOom {
+                device: self.device.clone(),
+                requested_mb: bytes / (1024 * 1024),
+                available_mb: self.free_bytes() / (1024 * 1024),
+                capacity_mb: self.capacity / (1024 * 1024),
+            });
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.allocated += bytes;
+        self.peak = self.peak.max(self.allocated);
+        self.live.push((id, label.to_string(), bytes));
+        Ok(AllocId(id))
+    }
+
+    pub fn free(&mut self, id: AllocId) {
+        if let Some(pos) = self.live.iter().position(|(i, ..)| *i == id.0) {
+            let (_, _, bytes) = self.live.remove(pos);
+            self.allocated -= bytes;
+        }
+    }
+
+    /// Allocate an entire training footprint (the order mirrors a real
+    /// framework: context, weights, optimiser, then batch-dependent parts).
+    pub fn alloc_training(
+        &mut self,
+        footprint: &VramFootprint,
+    ) -> Result<Vec<AllocId>, EmuError> {
+        let parts = [
+            ("context", footprint.context),
+            ("weights", footprint.weights),
+            ("gradients", footprint.gradients),
+            ("optimizer", footprint.optimizer_state),
+            ("activations", footprint.activations),
+            ("workspace", footprint.workspace),
+        ];
+        let mut ids = Vec::new();
+        for (label, bytes) in parts {
+            if bytes == 0 {
+                continue;
+            }
+            match self.alloc(label, bytes) {
+                Ok(id) => ids.push(id),
+                Err(e) => {
+                    // Roll back partial allocation (as a real allocator
+                    // unwinds when the framework aborts the step).
+                    for id in ids {
+                        self.free(id);
+                    }
+                    return Err(e);
+                }
+            }
+        }
+        Ok(ids)
+    }
+
+    pub fn reset(&mut self) {
+        self.live.clear();
+        self.allocated = 0;
+    }
+}
+
+/// The largest batch size (power-of-two sweep) that fits `workload` on
+/// `gpu` — the quantity the paper's OOM experiment probes.
+pub fn max_batch(gpu: &GpuSpec, workload: &WorkloadCost, optimizer: Optimizer) -> u32 {
+    let mut best = 0;
+    let mut b = 1u32;
+    while b <= 65536 {
+        let fp = training_footprint(gpu, workload, b, optimizer);
+        if fp.total() <= gpu.vram_bytes() {
+            best = b;
+            b *= 2;
+        } else {
+            break;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::gpu::gpu_by_slug;
+    use crate::modelcost::resnet::resnet18_cifar;
+
+    #[test]
+    fn alloc_free_accounting() {
+        let gpu = gpu_by_slug("gtx-1650").unwrap();
+        let mut a = VramAllocator::new(gpu);
+        let id = a.alloc("x", 1024).unwrap();
+        assert_eq!(a.allocated(), 1024);
+        a.free(id);
+        assert_eq!(a.allocated(), 0);
+        assert_eq!(a.peak(), 1024);
+    }
+
+    #[test]
+    fn oom_when_exceeding_capacity() {
+        let gpu = gpu_by_slug("gtx-1050").unwrap(); // 2 GiB
+        let mut a = VramAllocator::new(gpu);
+        let err = a.alloc("big", 3 * 1024 * 1024 * 1024).unwrap_err();
+        match err {
+            EmuError::GpuOom { capacity_mb, .. } => assert_eq!(capacity_mb, 2048),
+            other => panic!("expected OOM, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn failed_training_alloc_rolls_back() {
+        let gpu = gpu_by_slug("gtx-1050").unwrap();
+        let mut a = VramAllocator::new(gpu);
+        let w = resnet18_cifar();
+        // Huge batch cannot fit on 2 GiB.
+        let fp = training_footprint(gpu, &w, 4096, Optimizer::Sgd);
+        assert!(a.alloc_training(&fp).is_err());
+        assert_eq!(a.allocated(), 0, "partial allocations must unwind");
+    }
+
+    #[test]
+    fn footprint_grows_with_batch_and_optimizer() {
+        let gpu = gpu_by_slug("rtx-3060").unwrap();
+        let w = resnet18_cifar();
+        let f32_ = training_footprint(gpu, &w, 32, Optimizer::Sgd);
+        let f64_ = training_footprint(gpu, &w, 64, Optimizer::Sgd);
+        assert!(f64_.total() > f32_.total());
+        let adam = training_footprint(gpu, &w, 32, Optimizer::Adam);
+        assert_eq!(
+            adam.optimizer_state,
+            2 * f32_.weights,
+            "adam keeps 2 extra floats per param"
+        );
+    }
+
+    #[test]
+    fn paper_oom_claim_low_memory_fails_high_batch() {
+        // §4.2: high-batch ResNet-18 training OOMs on a 4 GiB GTX 1650 but
+        // fits on the 12 GiB host GPU.
+        let w = resnet18_cifar();
+        let small = max_batch(gpu_by_slug("gtx-1650").unwrap(), &w, Optimizer::Sgd);
+        let host = max_batch(gpu_by_slug("rtx-4070-super").unwrap(), &w, Optimizer::Sgd);
+        assert!(small < host, "small {small} vs host {host}");
+        assert!(small >= 1, "tiny batches still fit on 4 GiB");
+    }
+
+    #[test]
+    fn max_batch_monotone_in_vram() {
+        let w = resnet18_cifar();
+        let order = ["gtx-1050", "gtx-1650", "rtx-3080", "rtx-3090"];
+        let batches: Vec<u32> = order
+            .iter()
+            .map(|s| max_batch(gpu_by_slug(s).unwrap(), &w, Optimizer::Sgd))
+            .collect();
+        for w2 in batches.windows(2) {
+            assert!(w2[1] >= w2[0], "{batches:?}");
+        }
+    }
+}

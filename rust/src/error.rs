@@ -1,0 +1,101 @@
+//! Crate-wide error types.
+//!
+//! `EmuError` mirrors the failure modes of real restricted hardware (the
+//! paper §4.2 explicitly validates OOM behaviour); `FlError` covers the
+//! federated round loop; `RuntimeError` covers the PJRT runtime.
+
+use thiserror::Error;
+
+/// Failures produced by the emulated hardware substrate.
+#[derive(Debug, Error, Clone, PartialEq)]
+pub enum EmuError {
+    /// GPU out-of-memory: the training footprint exceeds the profile's VRAM.
+    /// Mirrors `cudaErrorMemoryAllocation` / `CUDA out of memory`.
+    #[error(
+        "GPU OOM on {device}: requested {requested_mb} MiB, \
+         {available_mb} MiB free of {capacity_mb} MiB"
+    )]
+    GpuOom {
+        device: String,
+        requested_mb: u64,
+        available_mb: u64,
+        capacity_mb: u64,
+    },
+
+    /// Host RAM exhausted (dataset + working set exceed the profile's RAM).
+    #[error("host OOM: working set {working_mb} MiB exceeds {capacity_mb} MiB RAM")]
+    HostOom { working_mb: u64, capacity_mb: u64 },
+
+    /// A restriction was requested that the profile cannot express
+    /// (e.g. more throttled cores than physical cores).
+    #[error("invalid restriction: {0}")]
+    InvalidRestriction(String),
+
+    /// Lifecycle misuse of a `RestrictedEnv` (Fig. 1 contract violation).
+    #[error("restricted-env lifecycle violation: {0}")]
+    Lifecycle(String),
+}
+
+/// Failures in the federated-learning round loop.
+#[derive(Debug, Error)]
+pub enum FlError {
+    #[error("no clients available for round {round}")]
+    NoClients { round: u32 },
+
+    #[error("all {count} selected clients failed in round {round}")]
+    AllClientsFailed { round: u32, count: usize },
+
+    #[error("client {client} failed: {source}")]
+    ClientFailed {
+        client: u32,
+        #[source]
+        source: EmuError,
+    },
+
+    #[error("strategy error: {0}")]
+    Strategy(String),
+
+    #[error("parameter dimension mismatch: expected {expected}, got {got}")]
+    ParamMismatch { expected: usize, got: usize },
+}
+
+/// Failures in the PJRT runtime / artifact loading.
+#[derive(Debug, Error)]
+pub enum RuntimeError {
+    #[error("artifact not found: {0}")]
+    ArtifactNotFound(String),
+
+    #[error("manifest error: {0}")]
+    Manifest(String),
+
+    #[error("xla error: {0}")]
+    Xla(String),
+
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    #[error("shape mismatch executing {artifact}: {detail}")]
+    Shape { artifact: String, detail: String },
+}
+
+impl From<xla::Error> for RuntimeError {
+    fn from(e: xla::Error) -> Self {
+        RuntimeError::Xla(e.to_string())
+    }
+}
+
+/// Configuration / CLI errors.
+#[derive(Debug, Error)]
+pub enum ConfigError {
+    #[error("parse error at line {line}: {msg}")]
+    Parse { line: usize, msg: String },
+
+    #[error("missing key: {0}")]
+    MissingKey(String),
+
+    #[error("invalid value for {key}: {msg}")]
+    InvalidValue { key: String, msg: String },
+
+    #[error("unknown hardware: {0}")]
+    UnknownHardware(String),
+}

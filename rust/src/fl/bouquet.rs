@@ -1,0 +1,109 @@
+//! The BouquetFL integration layer — the paper's contribution, as glue:
+//! every client `fit` is wrapped in a `RestrictedEnv` following Fig. 1's
+//! lifecycle (spawn restricted environment → local training under limits →
+//! communicate update → reset limits).
+//!
+//! `BouquetContext` is what the server hands each client for the duration
+//! of one fit: the shared PJRT executor, the federation's virtual clock,
+//! the host-machine description, and the environment policy.
+
+use crate::emu::{EnvConfig, FitReport, RestrictedEnv, VirtualClock};
+use crate::error::EmuError;
+use crate::hardware::profile::HardwareProfile;
+use crate::modelcost::WorkloadCost;
+use crate::runtime::ModelExecutor;
+
+/// Shared per-fit context (executor + clock + host + env policy).
+pub struct BouquetContext<'a> {
+    pub executor: &'a mut ModelExecutor,
+    pub clock: &'a mut VirtualClock,
+    pub host: &'a HardwareProfile,
+    pub env_cfg: EnvConfig,
+}
+
+impl<'a> BouquetContext<'a> {
+    /// Fig. 1: spawn a restricted environment for `target`, run `steps`
+    /// training steps of `workload` under it, reset the limits, and return
+    /// the emulated report.
+    ///
+    /// `exec(executor, step)` performs the real training step; an `Err`
+    /// aborts the fit (surfaced as a lifecycle error — runtime failures are
+    /// not hardware failures).
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_restricted<F>(
+        &mut self,
+        target: &HardwareProfile,
+        workload: &WorkloadCost,
+        batch: u32,
+        steps: u32,
+        dataset_bytes: u64,
+        mut exec: F,
+    ) -> Result<FitReport, EmuError>
+    where
+        F: FnMut(&mut ModelExecutor, u32) -> Result<f32, String>,
+    {
+        // Spawn: apply hardware limits.
+        let mut env = RestrictedEnv::spawn(target, self.host, self.env_cfg.clone())?;
+
+        // Fit under the limits.  Runtime errors abort with a description.
+        let mut runtime_failure: Option<String> = None;
+        let executor = &mut *self.executor;
+        let report = env.run_fit(
+            self.clock,
+            workload,
+            batch,
+            steps,
+            dataset_bytes,
+            |step| match exec(executor, step) {
+                Ok(loss) => loss,
+                Err(e) => {
+                    if runtime_failure.is_none() {
+                        runtime_failure = Some(e);
+                    }
+                    f32::NAN
+                }
+            },
+        );
+
+        // Reset: limits are torn down whether the fit succeeded or not.
+        env.teardown();
+
+        if let Some(msg) = runtime_failure {
+            return Err(EmuError::Lifecycle(format!("runtime failure during fit: {msg}")));
+        }
+        report
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::emu::{active_env_count, EmulationMode, Isolation, Optimizer};
+    use crate::hardware::profile::preset;
+    use crate::modelcost::resnet::resnet18_cifar;
+
+    fn env_cfg() -> EnvConfig {
+        EnvConfig {
+            mode: EmulationMode::HostRestriction,
+            optimizer: Optimizer::Sgd,
+            isolation: Isolation::Concurrent,
+        }
+    }
+
+    // A context with a dummy executor is hard to build without artifacts;
+    // these tests exercise the lifecycle through `RestrictedEnv` directly
+    // (the executor-dependent path is covered by rust/tests/runtime_e2e.rs).
+    #[test]
+    fn limits_do_not_leak_on_oom() {
+        let host = HardwareProfile::paper_host();
+        let target = preset("budget-2019").unwrap();
+        let before = active_env_count();
+        let mut clock = VirtualClock::fast_forward();
+        let mut env = RestrictedEnv::spawn(&target, &host, env_cfg()).unwrap();
+        let w = resnet18_cifar();
+        let err = env.run_fit(&mut clock, &w, 8192, 1, 0, |_| 0.0).unwrap_err();
+        assert!(matches!(err, EmuError::GpuOom { .. }));
+        env.teardown();
+        assert_eq!(active_env_count(), before);
+    }
+}

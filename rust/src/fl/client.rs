@@ -1,0 +1,304 @@
+//! Client abstractions: the Flower-shaped `ClientApp` trait plus the two
+//! implementations — `TrainClient` (real PJRT training on a local data
+//! partition) and `SimClient` (timing-only, for large sweeps/benches).
+
+use crate::data::{BatchLoader, Dataset};
+use crate::emu::FitReport;
+use crate::error::EmuError;
+use crate::hardware::profile::HardwareProfile;
+use crate::modelcost::WorkloadCost;
+use crate::net::NetworkProfile;
+use crate::runtime::ModelExecutor;
+
+use super::bouquet::BouquetContext;
+use super::params::ParamVector;
+
+pub type ClientId = u32;
+
+/// Per-round fit instructions from the strategy.
+#[derive(Debug, Clone)]
+pub struct FitConfig {
+    pub round: u32,
+    pub lr: f32,
+    pub local_steps: u32,
+    pub batch: u32,
+    /// FedProx proximal coefficient (None = plain SGD steps).
+    pub prox_mu: Option<f32>,
+    /// Use the fused K-local-steps artifact when steps/batch match one.
+    ///
+    /// Default **false**: on PJRT-CPU the fused executable measured ~3x
+    /// slower per step than repeated single-step calls (all K steps'
+    /// activations stay live in one executable; see EXPERIMENTS.md §Perf).
+    /// On real accelerators, where per-call latency dominates, flip it on.
+    pub use_fused_steps: bool,
+}
+
+impl Default for FitConfig {
+    fn default() -> Self {
+        FitConfig {
+            round: 0,
+            lr: 0.02,
+            local_steps: 4,
+            batch: 32,
+            prox_mu: None,
+            use_fused_steps: false,
+        }
+    }
+}
+
+/// Result of one client fit.
+#[derive(Debug, Clone)]
+pub struct FitResult {
+    pub client: ClientId,
+    pub params: ParamVector,
+    pub num_examples: usize,
+    pub mean_loss: f32,
+    /// Emulated-hardware report (timings, OOM-free footprint, loader info).
+    pub emu: FitReport,
+    /// Network communication seconds for this round (0 without a net model).
+    pub comm_s: f64,
+}
+
+/// The Flower-shaped client interface.
+pub trait ClientApp {
+    fn id(&self) -> ClientId;
+    fn profile(&self) -> &HardwareProfile;
+    fn num_examples(&self) -> usize;
+    fn network(&self) -> Option<&NetworkProfile> {
+        None
+    }
+
+    /// Local training: called by the server each round the client is
+    /// selected.  `ctx` carries the shared executor, virtual clock and the
+    /// host machine description (BouquetFL's Fig. 1 environment wrapper).
+    fn fit(
+        &mut self,
+        global: &ParamVector,
+        cfg: &FitConfig,
+        ctx: &mut BouquetContext<'_>,
+    ) -> Result<FitResult, EmuError>;
+}
+
+/// A client that really trains (PJRT execution) on its local partition.
+pub struct TrainClient {
+    pub id: ClientId,
+    pub profile: HardwareProfile,
+    pub network: Option<NetworkProfile>,
+    data: Dataset,
+    workload: WorkloadCost,
+    seed: u64,
+}
+
+impl TrainClient {
+    pub fn new(
+        id: ClientId,
+        profile: HardwareProfile,
+        data: Dataset,
+        workload: WorkloadCost,
+        seed: u64,
+    ) -> Self {
+        TrainClient { id, profile, network: None, data, workload, seed }
+    }
+
+    pub fn with_network(mut self, net: NetworkProfile) -> Self {
+        self.network = Some(net);
+        self
+    }
+
+    /// Run `cfg.local_steps` real training steps through the executor.
+    fn run_local_training(
+        &mut self,
+        executor: &mut ModelExecutor,
+        global: &ParamVector,
+        cfg: &FitConfig,
+    ) -> Result<(ParamVector, Vec<f32>), crate::error::RuntimeError> {
+        let mut loader = BatchLoader::new(
+            &self.data,
+            (0..self.data.len()).collect(),
+            cfg.batch as usize,
+            self.seed ^ (cfg.round as u64) << 20,
+        );
+        let mut params = global.clone();
+        let mut losses = Vec::with_capacity(cfg.local_steps as usize);
+
+        // FedProx path: per-step prox artifact.
+        if let Some(mu) = cfg.prox_mu {
+            for _ in 0..cfg.local_steps {
+                let (x, y) = loader.next_batch();
+                let (next, loss) = executor
+                    .train_step_prox(&params, global, &x, &y, cfg.lr, mu, cfg.batch)?;
+                params = next;
+                losses.push(loss);
+            }
+            return Ok((params, losses));
+        }
+
+        // Fused path: all K steps in one PJRT call when an artifact matches.
+        if cfg.use_fused_steps
+            && executor
+                .runtime()
+                .manifest
+                .find("train_scan", Some(cfg.batch), Some(cfg.local_steps))
+                .is_some()
+        {
+            let k = cfg.local_steps;
+            let mut xs = Vec::new();
+            let mut ys = Vec::new();
+            for _ in 0..k {
+                let (x, y) = loader.next_batch();
+                xs.extend_from_slice(&x);
+                ys.extend_from_slice(&y);
+            }
+            let (next, mean_loss) =
+                executor.train_steps_fused(&params, &xs, &ys, cfg.lr, k, cfg.batch)?;
+            return Ok((next, vec![mean_loss; k as usize]));
+        }
+
+        for _ in 0..cfg.local_steps {
+            let (x, y) = loader.next_batch();
+            let (next, loss) = executor.train_step(&params, &x, &y, cfg.lr, cfg.batch)?;
+            params = next;
+            losses.push(loss);
+        }
+        Ok((params, losses))
+    }
+}
+
+impl ClientApp for TrainClient {
+    fn id(&self) -> ClientId {
+        self.id
+    }
+
+    fn profile(&self) -> &HardwareProfile {
+        &self.profile
+    }
+
+    fn num_examples(&self) -> usize {
+        self.data.len()
+    }
+
+    fn network(&self) -> Option<&NetworkProfile> {
+        self.network.as_ref()
+    }
+
+    fn fit(
+        &mut self,
+        global: &ParamVector,
+        cfg: &FitConfig,
+        ctx: &mut BouquetContext<'_>,
+    ) -> Result<FitResult, EmuError> {
+        let dataset_bytes = self.data.total_bytes();
+        let workload = self.workload.clone();
+        let profile = self.profile.clone();
+        let id = self.id;
+
+        // Real training runs once up front (its results don't depend on the
+        // emulated speed), then the restricted environment accounts the
+        // emulated time/failures for exactly these steps.  OOM is checked
+        // *before* accepting the result, so an infeasible job still fails
+        // without contributing an update — same observable as the paper.
+        let mut trained: Option<(ParamVector, Vec<f32>)> = None;
+
+        let report = ctx.run_restricted(
+            &profile,
+            &workload,
+            cfg.batch,
+            cfg.local_steps,
+            dataset_bytes,
+            |executor, step| {
+                if trained.is_none() {
+                    trained = Some(
+                        self.run_local_training(executor, global, cfg)
+                            .map_err(|e| e.to_string())?,
+                    );
+                }
+                let losses = &trained.as_ref().unwrap().1;
+                Ok(losses.get(step as usize).copied().unwrap_or(f32::NAN))
+            },
+        )?;
+
+        let (params, losses) = trained.expect("exec ran for at least one step");
+        let mean_loss = losses.iter().sum::<f32>() / losses.len().max(1) as f32;
+        let comm_s = self
+            .network
+            .map(|n| n.round_comm_s((global.len() * 4) as u64))
+            .unwrap_or(0.0);
+
+        Ok(FitResult {
+            client: id,
+            params,
+            num_examples: self.num_examples(),
+            mean_loss,
+            emu: report,
+            comm_s,
+        })
+    }
+}
+
+/// Timing-only client: no PJRT, losses synthesised — for sweeps where only
+/// the emulated timing/failure behaviour matters (e.g. Fig. 2 at scale).
+pub struct SimClient {
+    pub id: ClientId,
+    pub profile: HardwareProfile,
+    pub network: Option<NetworkProfile>,
+    pub num_examples: usize,
+    pub workload: WorkloadCost,
+}
+
+impl SimClient {
+    pub fn new(
+        id: ClientId,
+        profile: HardwareProfile,
+        num_examples: usize,
+        workload: WorkloadCost,
+    ) -> Self {
+        SimClient { id, profile, network: None, num_examples, workload }
+    }
+}
+
+impl ClientApp for SimClient {
+    fn id(&self) -> ClientId {
+        self.id
+    }
+
+    fn profile(&self) -> &HardwareProfile {
+        &self.profile
+    }
+
+    fn num_examples(&self) -> usize {
+        self.num_examples
+    }
+
+    fn network(&self) -> Option<&NetworkProfile> {
+        self.network.as_ref()
+    }
+
+    fn fit(
+        &mut self,
+        global: &ParamVector,
+        cfg: &FitConfig,
+        ctx: &mut BouquetContext<'_>,
+    ) -> Result<FitResult, EmuError> {
+        let report = ctx.run_restricted(
+            &self.profile.clone(),
+            &self.workload.clone(),
+            cfg.batch,
+            cfg.local_steps,
+            (self.num_examples * 3072 * 4) as u64,
+            |_, step| Ok(1.0 / (cfg.round as f32 + step as f32 + 2.0)),
+        )?;
+        let mean_loss =
+            report.losses.iter().sum::<f32>() / report.losses.len().max(1) as f32;
+        Ok(FitResult {
+            client: self.id,
+            params: global.clone(),
+            num_examples: self.num_examples,
+            mean_loss,
+            emu: report,
+            comm_s: self
+                .network
+                .map(|n| n.round_comm_s((global.len() * 4) as u64))
+                .unwrap_or(0.0),
+        })
+    }
+}

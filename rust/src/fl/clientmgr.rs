@@ -1,0 +1,92 @@
+//! Client selection: which clients participate in a round.
+
+use crate::util::rng::Pcg;
+
+/// Selection policy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Selection {
+    /// Every client, every round.
+    All,
+    /// A uniform random fraction (Flower's default behaviour).
+    Fraction(f64),
+    /// A fixed number of uniformly random clients.
+    Count(usize),
+}
+
+/// Deterministic, seeded client selector.
+pub struct ClientManager {
+    rng: Pcg,
+    pub selection: Selection,
+}
+
+impl ClientManager {
+    pub fn new(seed: u64, selection: Selection) -> Self {
+        ClientManager { rng: Pcg::new(seed, 0x5E1E), selection }
+    }
+
+    /// Indices of the clients participating in this round.
+    pub fn select(&mut self, num_clients: usize) -> Vec<usize> {
+        assert!(num_clients > 0);
+        match self.selection {
+            Selection::All => (0..num_clients).collect(),
+            Selection::Fraction(f) => {
+                assert!((0.0..=1.0).contains(&f), "fraction {f}");
+                let k = ((num_clients as f64 * f).round() as usize).clamp(1, num_clients);
+                let mut v = self.rng.sample_indices(num_clients, k);
+                v.sort();
+                v
+            }
+            Selection::Count(k) => {
+                let k = k.clamp(1, num_clients);
+                let mut v = self.rng.sample_indices(num_clients, k);
+                v.sort();
+                v
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_selects_everyone() {
+        let mut m = ClientManager::new(0, Selection::All);
+        assert_eq!(m.select(5), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn fraction_selects_expected_count() {
+        let mut m = ClientManager::new(1, Selection::Fraction(0.4));
+        let s = m.select(10);
+        assert_eq!(s.len(), 4);
+        assert!(s.windows(2).all(|w| w[0] < w[1]), "sorted, distinct");
+    }
+
+    #[test]
+    fn count_clamped() {
+        let mut m = ClientManager::new(2, Selection::Count(100));
+        assert_eq!(m.select(5).len(), 5);
+        let mut m0 = ClientManager::new(2, Selection::Count(0));
+        assert_eq!(m0.select(5).len(), 1, "at least one client");
+    }
+
+    #[test]
+    fn deterministic_sequence_per_seed() {
+        let mut a = ClientManager::new(7, Selection::Count(3));
+        let mut b = ClientManager::new(7, Selection::Count(3));
+        for _ in 0..5 {
+            assert_eq!(a.select(20), b.select(20));
+        }
+    }
+
+    #[test]
+    fn rounds_differ() {
+        let mut m = ClientManager::new(7, Selection::Count(3));
+        let r1 = m.select(20);
+        let r2 = m.select(20);
+        // With overwhelming probability the two rounds differ.
+        assert!(r1 != r2 || m.select(20) != r1);
+    }
+}

@@ -1,0 +1,169 @@
+//! Round-by-round training history + JSON export.
+
+use crate::util::json::Json;
+
+/// Record of one client's failure in a round.
+#[derive(Debug, Clone)]
+pub struct FailureRecord {
+    pub client: u32,
+    pub reason: String,
+}
+
+/// One round's record.
+#[derive(Debug, Clone)]
+pub struct RoundRecord {
+    pub round: u32,
+    pub selected: Vec<u32>,
+    pub failures: Vec<FailureRecord>,
+    /// Example-weighted mean of client training losses.
+    pub train_loss: f32,
+    /// Centralised evaluation (if run this round).
+    pub eval_loss: Option<f32>,
+    pub eval_accuracy: Option<f32>,
+    /// Emulated wall-clock of the round (scheduler-dependent).
+    pub emu_round_s: f64,
+    /// Host wall-clock spent on the real execution.
+    pub host_round_s: f64,
+}
+
+/// Federation history.
+#[derive(Debug, Clone, Default)]
+pub struct History {
+    pub rounds: Vec<RoundRecord>,
+}
+
+impl History {
+    pub fn push(&mut self, r: RoundRecord) {
+        self.rounds.push(r);
+    }
+
+    pub fn final_train_loss(&self) -> Option<f32> {
+        self.rounds.last().map(|r| r.train_loss)
+    }
+
+    pub fn last_eval(&self) -> Option<(f32, f32)> {
+        self.rounds
+            .iter()
+            .rev()
+            .find_map(|r| r.eval_loss.zip(r.eval_accuracy))
+    }
+
+    pub fn total_emu_seconds(&self) -> f64 {
+        self.rounds.iter().map(|r| r.emu_round_s).sum()
+    }
+
+    pub fn total_failures(&self) -> usize {
+        self.rounds.iter().map(|r| r.failures.len()).sum()
+    }
+
+    /// Export as JSON (for plotting / EXPERIMENTS.md evidence).
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.rounds
+                .iter()
+                .map(|r| {
+                    Json::obj(vec![
+                        ("round", Json::num(r.round as f64)),
+                        (
+                            "selected",
+                            Json::Arr(
+                                r.selected.iter().map(|&c| Json::num(c as f64)).collect(),
+                            ),
+                        ),
+                        (
+                            "failures",
+                            Json::Arr(
+                                r.failures
+                                    .iter()
+                                    .map(|f| {
+                                        Json::obj(vec![
+                                            ("client", Json::num(f.client as f64)),
+                                            ("reason", Json::str(f.reason.clone())),
+                                        ])
+                                    })
+                                    .collect(),
+                            ),
+                        ),
+                        ("train_loss", Json::num(r.train_loss as f64)),
+                        (
+                            "eval_loss",
+                            r.eval_loss.map(|x| Json::num(x as f64)).unwrap_or(Json::Null),
+                        ),
+                        (
+                            "eval_accuracy",
+                            r.eval_accuracy
+                                .map(|x| Json::num(x as f64))
+                                .unwrap_or(Json::Null),
+                        ),
+                        ("emu_round_s", Json::num(r.emu_round_s)),
+                        ("host_round_s", Json::num(r.host_round_s)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
+    /// One-line summary for logs.
+    pub fn summary(&self) -> String {
+        let n = self.rounds.len();
+        let first = self.rounds.first().map(|r| r.train_loss).unwrap_or(f32::NAN);
+        let last = self.final_train_loss().unwrap_or(f32::NAN);
+        let eval = self
+            .last_eval()
+            .map(|(l, a)| format!(", eval loss {l:.3} acc {:.1}%", a * 100.0))
+            .unwrap_or_default();
+        format!(
+            "{n} rounds: train loss {first:.3} -> {last:.3}{eval}, \
+             {} failures, {:.1}s emulated",
+            self.total_failures(),
+            self.total_emu_seconds()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record(round: u32, loss: f32) -> RoundRecord {
+        RoundRecord {
+            round,
+            selected: vec![0, 1],
+            failures: vec![],
+            train_loss: loss,
+            eval_loss: None,
+            eval_accuracy: None,
+            emu_round_s: 2.0,
+            host_round_s: 0.1,
+        }
+    }
+
+    #[test]
+    fn accumulates_and_summarises() {
+        let mut h = History::default();
+        h.push(record(0, 2.0));
+        h.push(RoundRecord {
+            eval_loss: Some(1.0),
+            eval_accuracy: Some(0.5),
+            failures: vec![FailureRecord { client: 3, reason: "OOM".into() }],
+            ..record(1, 1.5)
+        });
+        assert_eq!(h.final_train_loss(), Some(1.5));
+        assert_eq!(h.last_eval(), Some((1.0, 0.5)));
+        assert_eq!(h.total_failures(), 1);
+        assert!((h.total_emu_seconds() - 4.0).abs() < 1e-12);
+        assert!(h.summary().contains("2 rounds"));
+    }
+
+    #[test]
+    fn json_roundtrips() {
+        let mut h = History::default();
+        h.push(record(0, 2.0));
+        let j = h.to_json();
+        let parsed = Json::parse(&j.pretty()).unwrap();
+        assert_eq!(
+            parsed.as_arr().unwrap()[0].get("train_loss").unwrap().as_f64().unwrap(),
+            2.0
+        );
+    }
+}

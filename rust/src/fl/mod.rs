@@ -1,0 +1,20 @@
+//! The Flower-shaped federated learning framework with BouquetFL's
+//! hardware-restricted client execution as a first-class feature.
+
+pub mod bouquet;
+pub mod client;
+pub mod clientmgr;
+pub mod history;
+pub mod launcher;
+pub mod params;
+pub mod server;
+pub mod strategy;
+
+pub use bouquet::BouquetContext;
+pub use client::{ClientApp, ClientId, FitConfig, FitResult, SimClient, TrainClient};
+pub use clientmgr::{ClientManager, Selection};
+pub use history::{History, RoundRecord};
+pub use launcher::{launch, HardwareSource, LaunchOptions, LaunchOutcome};
+pub use params::ParamVector;
+pub use server::{ServerApp, ServerConfig};
+pub use strategy::{FedAdam, FedAvg, FedAvgM, FedProx, Krum, Strategy, TrimmedMean};

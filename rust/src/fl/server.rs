@@ -1,0 +1,254 @@
+//! The federated server (Flower's `ServerApp` analogue): round loop,
+//! client selection, BouquetFL-restricted fits, failure handling,
+//! aggregation, centralised evaluation, history.
+
+use std::time::Instant;
+
+use crate::data::Dataset;
+use crate::emu::{EnvConfig, Isolation, VirtualClock};
+use crate::error::{EmuError, FlError};
+use crate::hardware::profile::HardwareProfile;
+use crate::runtime::ModelExecutor;
+use crate::sched::{Durations, Scheduler, Trace};
+
+use super::bouquet::BouquetContext;
+use super::client::{ClientApp, FitConfig, FitResult};
+use super::clientmgr::{ClientManager, Selection};
+use super::history::{FailureRecord, History, RoundRecord};
+use super::params::ParamVector;
+use super::strategy::Strategy;
+
+/// Server configuration.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub rounds: u32,
+    pub selection: Selection,
+    pub fit: FitConfig,
+    /// Run centralised evaluation every N rounds (0 = never).
+    pub eval_every: u32,
+    pub seed: u64,
+    /// Abort if a round ends with zero surviving clients.
+    pub fail_on_empty_round: bool,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            rounds: 10,
+            selection: Selection::All,
+            fit: FitConfig::default(),
+            eval_every: 5,
+            seed: 42,
+            fail_on_empty_round: true,
+        }
+    }
+}
+
+/// The federated server.
+pub struct ServerApp<'a> {
+    pub cfg: ServerConfig,
+    pub host: HardwareProfile,
+    pub env_cfg: EnvConfig,
+    strategy: Box<dyn Strategy>,
+    scheduler: Box<dyn Scheduler>,
+    clients: Vec<Box<dyn ClientApp + 'a>>,
+    /// Held-out evaluation data (centralised, on the server).
+    eval_data: Option<Dataset>,
+    pub trace: Trace,
+}
+
+impl<'a> ServerApp<'a> {
+    pub fn new(
+        cfg: ServerConfig,
+        host: HardwareProfile,
+        strategy: Box<dyn Strategy>,
+        scheduler: Box<dyn Scheduler>,
+        clients: Vec<Box<dyn ClientApp + 'a>>,
+    ) -> Self {
+        // The paper's §3: hardware controls are global; only the
+        // limited-parallel extension may relax isolation.
+        let isolation = if scheduler.max_concurrency() > 1 {
+            Isolation::Concurrent
+        } else {
+            Isolation::Strict
+        };
+        ServerApp {
+            cfg,
+            host,
+            env_cfg: EnvConfig { isolation, ..Default::default() },
+            strategy,
+            scheduler,
+            clients,
+            eval_data: None,
+            trace: Trace::default(),
+        }
+    }
+
+    pub fn with_eval_data(mut self, data: Dataset) -> Self {
+        self.eval_data = Some(data);
+        self
+    }
+
+    pub fn num_clients(&self) -> usize {
+        self.clients.len()
+    }
+
+    /// Run the federation; returns the training history.
+    pub fn run(
+        &mut self,
+        executor: &mut ModelExecutor,
+        clock: &mut VirtualClock,
+    ) -> Result<(ParamVector, History), FlError> {
+        if self.clients.is_empty() {
+            return Err(FlError::NoClients { round: 0 });
+        }
+        let mut global = executor
+            .init_params(self.cfg.seed as i32)
+            .map_err(|e| FlError::Strategy(format!("init failed: {e}")))?;
+        let mut history = History::default();
+        let mut manager = ClientManager::new(self.cfg.seed, self.cfg.selection);
+
+        for round in 0..self.cfg.rounds {
+            let host_t0 = Instant::now();
+            let selected = manager.select(self.clients.len());
+            let fit_cfg = self.strategy.configure(round, &self.cfg.fit);
+
+            // --- fit phase (sequential real execution; see sched/) -------
+            let mut results: Vec<FitResult> = Vec::new();
+            let mut failures: Vec<FailureRecord> = Vec::new();
+            let mut durations: Durations = Vec::new();
+            let round_t0 = clock.now_s();
+            for &ci in &selected {
+                let client = &mut self.clients[ci];
+                let mut ctx = BouquetContext {
+                    executor,
+                    clock,
+                    host: &self.host,
+                    env_cfg: self.env_cfg.clone(),
+                };
+                match client.fit(&global, &fit_cfg, &mut ctx) {
+                    Ok(result) => {
+                        durations.push((
+                            result.client,
+                            result.emu.emu_total_s + result.comm_s,
+                        ));
+                        results.push(result);
+                    }
+                    Err(e @ EmuError::GpuOom { .. })
+                    | Err(e @ EmuError::HostOom { .. }) => {
+                        // The paper's OOM story: the framework survives a
+                        // failing client; it simply contributes no update.
+                        failures.push(FailureRecord {
+                            client: client.id(),
+                            reason: e.to_string(),
+                        });
+                    }
+                    Err(other) => {
+                        return Err(FlError::ClientFailed {
+                            client: client.id(),
+                            source: other,
+                        })
+                    }
+                }
+            }
+
+            if results.is_empty() {
+                if self.cfg.fail_on_empty_round {
+                    return Err(FlError::AllClientsFailed {
+                        round,
+                        count: selected.len(),
+                    });
+                }
+                history.push(RoundRecord {
+                    round,
+                    selected: selected.iter().map(|&i| i as u32).collect(),
+                    failures,
+                    train_loss: f32::NAN,
+                    eval_loss: None,
+                    eval_accuracy: None,
+                    emu_round_s: 0.0,
+                    host_round_s: host_t0.elapsed().as_secs_f64(),
+                });
+                continue;
+            }
+
+            // --- round wall-clock per the scheduling policy --------------
+            let schedule = self.scheduler.schedule(&durations);
+            let base = round_t0;
+            for &(c, s, e) in &schedule.spans {
+                self.trace.add(c, format!("round{round}"), base + s, base + e);
+            }
+
+            // --- aggregate ------------------------------------------------
+            global = self.strategy.aggregate(&global, &results, executor)?;
+
+            // --- evaluate -------------------------------------------------
+            let (eval_loss, eval_accuracy) = if self.cfg.eval_every > 0
+                && (round + 1) % self.cfg.eval_every == 0
+            {
+                match self.evaluate(executor, &global) {
+                    Some((l, a)) => (Some(l), Some(a)),
+                    None => (None, None),
+                }
+            } else {
+                (None, None)
+            };
+
+            let total_examples: usize = results.iter().map(|r| r.num_examples).sum();
+            let train_loss = results
+                .iter()
+                .map(|r| r.mean_loss * r.num_examples as f32)
+                .sum::<f32>()
+                / total_examples as f32;
+
+            history.push(RoundRecord {
+                round,
+                selected: selected.iter().map(|&i| i as u32).collect(),
+                failures,
+                train_loss,
+                eval_loss,
+                eval_accuracy,
+                emu_round_s: schedule.round_s,
+                host_round_s: host_t0.elapsed().as_secs_f64(),
+            });
+        }
+        Ok((global, history))
+    }
+
+    /// Centralised eval over the held-out set (batched by the compiled
+    /// eval artifact's batch size; a trailing partial batch is padded by
+    /// wrapping, standard practice for fixed-shape accelerator eval).
+    fn evaluate(
+        &self,
+        executor: &mut ModelExecutor,
+        global: &ParamVector,
+    ) -> Option<(f32, f32)> {
+        let data = self.eval_data.as_ref()?;
+        let batch = executor.eval_batch_size()?;
+        let n = data.len();
+        if n == 0 {
+            return None;
+        }
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0.0f64;
+        let mut seen = 0usize;
+        let mut start = 0usize;
+        while seen < n {
+            let idx: Vec<usize> = (0..batch as usize).map(|i| (start + i) % n).collect();
+            let (x, y) = data.gather(&idx);
+            let take = (batch as usize).min(n - seen);
+            match executor.eval_batch(global, &x, &y, batch) {
+                Ok((l, c)) => {
+                    // Only count the non-wrapped fraction.
+                    let frac = take as f64 / batch as f64;
+                    loss_sum += l as f64 * take as f64;
+                    correct += c as f64 * frac;
+                }
+                Err(_) => return None,
+            }
+            seen += take;
+            start += take;
+        }
+        Some(((loss_sum / n as f64) as f32, (correct / n as f64) as f32))
+    }
+}

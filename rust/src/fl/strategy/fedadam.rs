@@ -1,0 +1,63 @@
+//! FedAdam (Reddi et al., 2021): Adam applied server-side to the round
+//! pseudo-gradient.
+
+use crate::error::FlError;
+use crate::runtime::ModelExecutor;
+
+use super::super::client::FitResult;
+use super::super::params::ParamVector;
+use super::{weighted_average, Strategy};
+
+/// Server-side Adam over round updates.
+#[derive(Debug)]
+pub struct FedAdam {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    m: Option<Vec<f32>>,
+    v: Option<Vec<f32>>,
+    t: u32,
+}
+
+impl FedAdam {
+    pub fn new(lr: f32) -> Self {
+        FedAdam { lr, beta1: 0.9, beta2: 0.99, eps: 1e-6, m: None, v: None, t: 0 }
+    }
+}
+
+impl Strategy for FedAdam {
+    fn name(&self) -> &'static str {
+        "fedadam"
+    }
+
+    fn aggregate(
+        &mut self,
+        global: &ParamVector,
+        results: &[FitResult],
+        executor: &mut ModelExecutor,
+    ) -> Result<ParamVector, FlError> {
+        let avg = weighted_average(results, executor)?;
+        let delta = avg.sub(global); // pseudo-gradient (ascent direction)
+        let n = delta.len();
+        let m = self.m.get_or_insert_with(|| vec![0.0; n]);
+        let v = self.v.get_or_insert_with(|| vec![0.0; n]);
+        if m.len() != n {
+            return Err(FlError::ParamMismatch { expected: m.len(), got: n });
+        }
+        self.t += 1;
+        let (b1, b2) = (self.beta1, self.beta2);
+        let bc1 = 1.0 - b1.powi(self.t as i32);
+        let bc2 = 1.0 - b2.powi(self.t as i32);
+        let mut out = global.clone();
+        let out_s = out.as_mut_slice();
+        for (i, &d) in delta.as_slice().iter().enumerate() {
+            m[i] = b1 * m[i] + (1.0 - b1) * d;
+            v[i] = b2 * v[i] + (1.0 - b2) * d * d;
+            let mhat = m[i] / bc1;
+            let vhat = v[i] / bc2;
+            out_s[i] += self.lr * mhat / (vhat.sqrt() + self.eps);
+        }
+        Ok(out)
+    }
+}

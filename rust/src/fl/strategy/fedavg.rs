@@ -1,0 +1,27 @@
+//! FedAvg (McMahan et al., 2017): example-weighted average of client models.
+
+use crate::error::FlError;
+use crate::runtime::ModelExecutor;
+
+use super::super::client::FitResult;
+use super::super::params::ParamVector;
+use super::{weighted_average, Strategy};
+
+/// Plain federated averaging.
+#[derive(Debug, Default)]
+pub struct FedAvg;
+
+impl Strategy for FedAvg {
+    fn name(&self) -> &'static str {
+        "fedavg"
+    }
+
+    fn aggregate(
+        &mut self,
+        _global: &ParamVector,
+        results: &[FitResult],
+        executor: &mut ModelExecutor,
+    ) -> Result<ParamVector, FlError> {
+        weighted_average(results, executor)
+    }
+}

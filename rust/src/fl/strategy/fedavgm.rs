@@ -1,0 +1,52 @@
+//! FedAvgM (Hsu et al., 2019): FedAvg with server-side momentum over the
+//! round pseudo-gradient.
+
+use crate::error::FlError;
+use crate::runtime::ModelExecutor;
+
+use super::super::client::FitResult;
+use super::super::params::ParamVector;
+use super::{weighted_average, Strategy};
+
+/// Server momentum over round updates: `m <- beta m + (avg - global)`,
+/// `global <- global + m`.
+#[derive(Debug)]
+pub struct FedAvgM {
+    pub beta: f32,
+    momentum: Option<ParamVector>,
+}
+
+impl FedAvgM {
+    pub fn new(beta: f32) -> Self {
+        assert!((0.0..1.0).contains(&beta));
+        FedAvgM { beta, momentum: None }
+    }
+}
+
+impl Strategy for FedAvgM {
+    fn name(&self) -> &'static str {
+        "fedavgm"
+    }
+
+    fn aggregate(
+        &mut self,
+        global: &ParamVector,
+        results: &[FitResult],
+        executor: &mut ModelExecutor,
+    ) -> Result<ParamVector, FlError> {
+        let avg = weighted_average(results, executor)?;
+        let delta = avg.sub(global);
+        let m = match self.momentum.take() {
+            Some(mut m) => {
+                m.scale(self.beta);
+                m.add_scaled(&delta, 1.0);
+                m
+            }
+            None => delta,
+        };
+        let mut new_global = global.clone();
+        new_global.add_scaled(&m, 1.0);
+        self.momentum = Some(m);
+        Ok(new_global)
+    }
+}

@@ -1,0 +1,43 @@
+//! FedProx (Li et al., 2020): FedAvg aggregation + a proximal term in the
+//! client objective, stabilising training when clients perform unequal
+//! amounts of local work — precisely the regime hardware heterogeneity
+//! (BouquetFL's subject) produces.
+
+use crate::error::FlError;
+use crate::runtime::ModelExecutor;
+
+use super::super::client::{FitConfig, FitResult};
+use super::super::params::ParamVector;
+use super::{weighted_average, Strategy};
+
+/// FedProx with proximal coefficient `mu`.
+#[derive(Debug)]
+pub struct FedProx {
+    pub mu: f32,
+}
+
+impl FedProx {
+    pub fn new(mu: f32) -> Self {
+        assert!(mu >= 0.0);
+        FedProx { mu }
+    }
+}
+
+impl Strategy for FedProx {
+    fn name(&self) -> &'static str {
+        "fedprox"
+    }
+
+    fn configure(&self, round: u32, base: &FitConfig) -> FitConfig {
+        FitConfig { round, prox_mu: Some(self.mu), ..base.clone() }
+    }
+
+    fn aggregate(
+        &mut self,
+        _global: &ParamVector,
+        results: &[FitResult],
+        executor: &mut ModelExecutor,
+    ) -> Result<ParamVector, FlError> {
+        weighted_average(results, executor)
+    }
+}

@@ -1,0 +1,146 @@
+//! Krum (Blanchard et al., 2017): Byzantine-robust selection — pick the
+//! client update closest (in summed squared distance) to its n−f−2 nearest
+//! neighbours.  Multi-Krum averages the `m` best-scoring updates.
+
+use crate::error::FlError;
+use crate::runtime::ModelExecutor;
+
+use super::super::client::FitResult;
+use super::super::params::ParamVector;
+use super::Strategy;
+
+/// Multi-Krum with `f` assumed Byzantine clients and `m` survivors averaged
+/// (m = 1 is classic Krum).
+#[derive(Debug)]
+pub struct Krum {
+    pub f: usize,
+    pub m: usize,
+}
+
+impl Krum {
+    pub fn new(f: usize, m: usize) -> Self {
+        assert!(m >= 1);
+        Krum { f, m }
+    }
+
+    /// Krum scores: for each update, the sum of its n-f-2 smallest squared
+    /// distances to other updates.
+    fn scores(updates: &[ParamVector]) -> Vec<f64> {
+        let n = updates.len();
+        let mut d2 = vec![vec![0.0f64; n]; n];
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let d = updates[i].sub(&updates[j]).l2_norm();
+                d2[i][j] = d * d;
+                d2[j][i] = d * d;
+            }
+        }
+        (0..n)
+            .map(|i| {
+                let mut ds: Vec<f64> =
+                    (0..n).filter(|&j| j != i).map(|j| d2[i][j]).collect();
+                ds.sort_by(|a, b| a.total_cmp(b));
+                let keep = n.saturating_sub(2).max(1).min(ds.len());
+                ds[..keep].iter().sum()
+            })
+            .collect()
+    }
+}
+
+impl Strategy for Krum {
+    fn name(&self) -> &'static str {
+        "krum"
+    }
+
+    fn aggregate(
+        &mut self,
+        _global: &ParamVector,
+        results: &[FitResult],
+        _executor: &mut ModelExecutor,
+    ) -> Result<ParamVector, FlError> {
+        if results.is_empty() {
+            return Err(FlError::Strategy("krum over zero clients".into()));
+        }
+        let updates: Vec<ParamVector> = results.iter().map(|r| r.params.clone()).collect();
+        let n = updates.len();
+        if n <= 2 * self.f + 2 {
+            // Not enough honest majority for Krum's guarantee; fall back to
+            // the single most central update.
+            let scores = Self::scores(&updates);
+            let best = (0..n).min_by(|&a, &b| scores[a].total_cmp(&scores[b])).unwrap();
+            return Ok(updates[best].clone());
+        }
+        let scores = Self::scores(&updates);
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by(|&a, &b| scores[a].total_cmp(&scores[b]));
+        let m = self.m.min(n);
+        let chosen: Vec<ParamVector> =
+            order[..m].iter().map(|&i| updates[i].clone()).collect();
+        let w = vec![1.0 / m as f32; m];
+        Ok(ParamVector::weighted_sum(&chosen, &w))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn result(vals: &[f32]) -> FitResult {
+        FitResult {
+            client: 0,
+            params: ParamVector::from_vec(vals.to_vec()),
+            num_examples: 10,
+            mean_loss: 1.0,
+            emu: crate::emu::FitReport {
+                steps: 1,
+                batch: 1,
+                emu_gpu_s: 0.0,
+                emu_total_s: 0.0,
+                loader_bound_steps: 0,
+                footprint: crate::emu::training_footprint(
+                    crate::hardware::gpu_by_slug("gtx-1060").unwrap(),
+                    &crate::modelcost::mlp(8),
+                    1,
+                    crate::emu::Optimizer::Sgd,
+                ),
+                cache_resident_fraction: 1.0,
+                energy_j: 0.0,
+                losses: vec![1.0],
+            },
+            comm_s: 0.0,
+        }
+    }
+
+    #[test]
+    fn krum_rejects_the_outlier() {
+        // 5 honest updates near 1.0, one attacker at 100.
+        let mut results: Vec<FitResult> = (0..5)
+            .map(|i| result(&[1.0 + 0.01 * i as f32, 1.0]))
+            .collect();
+        results.push(result(&[100.0, -100.0]));
+        let krum = Krum::new(1, 1);
+        // aggregate() ignores the executor for Krum; build one lazily is
+        // impossible here, so call scores/selection through the public API
+        // with a stub: we use unsafe-free trick — Krum::aggregate only uses
+        // `_executor`, so any ModelExecutor reference works; since we cannot
+        // construct one without artifacts, test the scoring logic directly.
+        let updates: Vec<ParamVector> = results.iter().map(|r| r.params.clone()).collect();
+        let scores = Krum::scores(&updates);
+        let worst = scores
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .unwrap()
+            .0;
+        assert_eq!(worst, 5, "attacker must have the worst Krum score: {scores:?}");
+        let _ = krum.name();
+    }
+
+    #[test]
+    fn scores_symmetric_for_identical_updates() {
+        let updates: Vec<ParamVector> =
+            (0..4).map(|_| ParamVector::from_vec(vec![1.0, 2.0])).collect();
+        let scores = Krum::scores(&updates);
+        assert!(scores.iter().all(|&s| s.abs() < 1e-12));
+    }
+}

@@ -1,0 +1,69 @@
+//! Aggregation strategies.  BouquetFL "operates independently of the ...
+//! aggregation strategy" (paper §2); the framework therefore ships the
+//! standard set — FedAvg, FedProx, FedAvgM, FedAdam, coordinate-wise
+//! trimmed mean — all over flat parameter vectors.
+
+mod fedadam;
+mod fedavg;
+mod fedavgm;
+mod fedprox;
+mod krum;
+mod trimmed;
+
+pub use fedadam::FedAdam;
+pub use fedavg::FedAvg;
+pub use fedavgm::FedAvgM;
+pub use fedprox::FedProx;
+pub use krum::Krum;
+pub use trimmed::TrimmedMean;
+
+use crate::error::FlError;
+use crate::runtime::ModelExecutor;
+
+use super::client::{FitConfig, FitResult};
+use super::params::ParamVector;
+
+/// Server-side aggregation strategy.
+pub trait Strategy {
+    fn name(&self) -> &'static str;
+
+    /// Per-round fit configuration (e.g. FedProx sets `prox_mu`).
+    fn configure(&self, round: u32, base: &FitConfig) -> FitConfig {
+        FitConfig { round, ..base.clone() }
+    }
+
+    /// Combine the surviving clients' results into the next global model.
+    fn aggregate(
+        &mut self,
+        global: &ParamVector,
+        results: &[FitResult],
+        executor: &mut ModelExecutor,
+    ) -> Result<ParamVector, FlError>;
+}
+
+/// Example-count-proportional weights, normalised to sum to 1 — the FedAvg
+/// weighting shared by several strategies.
+pub(crate) fn example_weights(results: &[FitResult]) -> Vec<f32> {
+    let total: usize = results.iter().map(|r| r.num_examples).sum();
+    assert!(total > 0, "no examples across clients");
+    results
+        .iter()
+        .map(|r| r.num_examples as f32 / total as f32)
+        .collect()
+}
+
+/// Weighted average of client parameters (HLO kernel when the fan-in
+/// matches a compiled artifact, Rust fallback otherwise).
+pub(crate) fn weighted_average(
+    results: &[FitResult],
+    executor: &mut ModelExecutor,
+) -> Result<ParamVector, FlError> {
+    if results.is_empty() {
+        return Err(FlError::Strategy("aggregate over zero clients".into()));
+    }
+    let weights = example_weights(results);
+    let updates: Vec<ParamVector> = results.iter().map(|r| r.params.clone()).collect();
+    executor
+        .aggregate(&updates, &weights)
+        .map_err(|e| FlError::Strategy(e.to_string()))
+}

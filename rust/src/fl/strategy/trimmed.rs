@@ -1,0 +1,42 @@
+//! Coordinate-wise trimmed mean (Yin et al., 2018): robust aggregation that
+//! tolerates a bounded number of corrupted/failed clients — relevant when
+//! hardware-diverse clients fail in strange ways.
+
+use crate::error::FlError;
+use crate::runtime::ModelExecutor;
+
+use super::super::client::FitResult;
+use super::super::params::ParamVector;
+use super::Strategy;
+
+/// Trim the `trim` smallest and largest values per coordinate.
+#[derive(Debug)]
+pub struct TrimmedMean {
+    pub trim: usize,
+}
+
+impl TrimmedMean {
+    pub fn new(trim: usize) -> Self {
+        TrimmedMean { trim }
+    }
+}
+
+impl Strategy for TrimmedMean {
+    fn name(&self) -> &'static str {
+        "trimmed-mean"
+    }
+
+    fn aggregate(
+        &mut self,
+        _global: &ParamVector,
+        results: &[FitResult],
+        _executor: &mut ModelExecutor,
+    ) -> Result<ParamVector, FlError> {
+        if results.is_empty() {
+            return Err(FlError::Strategy("aggregate over zero clients".into()));
+        }
+        let trim = self.trim.min((results.len().saturating_sub(1)) / 2);
+        let updates: Vec<ParamVector> = results.iter().map(|r| r.params.clone()).collect();
+        Ok(ParamVector::trimmed_mean(&updates, trim))
+    }
+}

@@ -1,0 +1,155 @@
+//! Consumer/small-lab CPU specification database.
+//!
+//! The dataloader model (`emu::dataload`) and the CPU throttle
+//! (`emu::throttle`) consume cores, clocks and a per-generation IPC index
+//! (single-thread throughput relative to Zen 1 = 1.0, from public
+//! single-thread benchmark ratios).
+
+/// CPU vendor (affects nothing functionally; kept for realistic listings).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CpuVendor {
+    Amd,
+    Intel,
+}
+
+/// One CPU SKU.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CpuSpec {
+    pub slug: &'static str,
+    pub name: &'static str,
+    pub vendor: CpuVendor,
+    pub cores: u32,
+    pub threads: u32,
+    pub base_clock_mhz: u32,
+    pub boost_clock_mhz: u32,
+    /// Single-thread IPC index relative to Zen 1 (= 1.0).
+    pub ipc_index: f64,
+    pub launch_year: u16,
+    pub tdp_w: u32,
+    pub laptop: bool,
+}
+
+impl CpuSpec {
+    /// Single-core throughput proxy: IPC x sustained clock (GHz).
+    pub fn single_core_score(&self) -> f64 {
+        self.ipc_index * self.boost_clock_mhz as f64 / 1000.0
+    }
+
+    /// All-core throughput proxy (sustained all-core ~= midpoint of
+    /// base/boost; a standard approximation for spec-sheet-only modelling).
+    pub fn multi_core_score(&self) -> f64 {
+        let sustained = (self.base_clock_mhz + self.boost_clock_mhz) as f64 / 2.0 / 1000.0;
+        self.ipc_index * sustained * self.cores as f64
+    }
+}
+
+macro_rules! cpu {
+    ($slug:literal, $name:literal, $vendor:ident, $cores:literal, $threads:literal,
+     $base:literal, $boost:literal, $ipc:literal, $year:literal, $tdp:literal, $laptop:literal) => {
+        CpuSpec {
+            slug: $slug,
+            name: $name,
+            vendor: CpuVendor::$vendor,
+            cores: $cores,
+            threads: $threads,
+            base_clock_mhz: $base,
+            boost_clock_mhz: $boost,
+            ipc_index: $ipc,
+            launch_year: $year,
+            tdp_w: $tdp,
+            laptop: $laptop,
+        }
+    };
+}
+
+/// The CPU database (23 SKUs).
+pub static CPU_DB: &[CpuSpec] = &[
+    // The paper's host CPU.
+    cpu!("ryzen-7-1800x", "Ryzen 7 1800X", Amd, 8, 16, 3600, 4000, 1.00, 2017, 95, false),
+    cpu!("ryzen-5-2600", "Ryzen 5 2600", Amd, 6, 12, 3400, 3900, 1.03, 2018, 65, false),
+    cpu!("ryzen-5-3600", "Ryzen 5 3600", Amd, 6, 12, 3600, 4200, 1.21, 2019, 65, false),
+    cpu!("ryzen-7-3700x", "Ryzen 7 3700X", Amd, 8, 16, 3600, 4400, 1.21, 2019, 65, false),
+    cpu!("ryzen-5-5600x", "Ryzen 5 5600X", Amd, 6, 12, 3700, 4600, 1.39, 2020, 65, false),
+    cpu!("ryzen-7-5800x", "Ryzen 7 5800X", Amd, 8, 16, 3800, 4700, 1.39, 2020, 105, false),
+    cpu!("ryzen-9-5950x", "Ryzen 9 5950X", Amd, 16, 32, 3400, 4900, 1.39, 2020, 105, false),
+    cpu!("ryzen-5-7600x", "Ryzen 5 7600X", Amd, 6, 12, 4700, 5300, 1.55, 2022, 105, false),
+    cpu!("ryzen-7-7700x", "Ryzen 7 7700X", Amd, 8, 16, 4500, 5400, 1.55, 2022, 105, false),
+    cpu!("ryzen-9-7950x", "Ryzen 9 7950X", Amd, 16, 32, 4500, 5700, 1.55, 2022, 170, false),
+    cpu!("pentium-g4560", "Pentium G4560", Intel, 2, 4, 3500, 3500, 0.85, 2017, 54, false),
+    cpu!("core-i3-10100", "Core i3-10100", Intel, 4, 8, 3600, 4300, 1.05, 2020, 65, false),
+    cpu!("core-i5-9400f", "Core i5-9400F", Intel, 6, 6, 2900, 4100, 1.05, 2019, 65, false),
+    cpu!("core-i5-10400", "Core i5-10400", Intel, 6, 12, 2900, 4300, 1.05, 2020, 65, false),
+    cpu!("core-i7-8700k", "Core i7-8700K", Intel, 6, 12, 3700, 4700, 1.05, 2017, 95, false),
+    cpu!("core-i7-10700k", "Core i7-10700K", Intel, 8, 16, 3800, 5100, 1.05, 2020, 125, false),
+    cpu!("core-i5-12400", "Core i5-12400", Intel, 6, 12, 2500, 4400, 1.45, 2022, 65, false),
+    cpu!("core-i7-12700k", "Core i7-12700K", Intel, 12, 20, 3600, 5000, 1.45, 2021, 125, false),
+    cpu!("core-i5-13600k", "Core i5-13600K", Intel, 14, 20, 3500, 5100, 1.50, 2022, 125, false),
+    cpu!("core-i9-13900k", "Core i9-13900K", Intel, 24, 32, 3000, 5800, 1.50, 2022, 253, false),
+    cpu!("xeon-e5-2680-v4", "Xeon E5-2680 v4", Intel, 14, 28, 2400, 3300, 0.90, 2016, 120, false),
+    cpu!("core-i5-1135g7", "Core i5-1135G7", Intel, 4, 8, 2400, 4200, 1.35, 2020, 28, true),
+    cpu!("ryzen-7-4800h", "Ryzen 7 4800H", Amd, 8, 16, 2900, 4200, 1.21, 2020, 45, true),
+];
+
+pub fn cpu_by_slug(slug: &str) -> Option<&'static CpuSpec> {
+    CPU_DB.iter().find(|c| c.slug == slug)
+}
+
+/// CPUs with exactly `cores` physical cores (used by the survey sampler,
+/// which draws a core count first).
+pub fn cpus_with_cores(cores: u32, include_laptop: bool) -> Vec<&'static CpuSpec> {
+    CPU_DB
+        .iter()
+        .filter(|c| c.cores == cores && (include_laptop || !c.laptop))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slugs_unique() {
+        let mut slugs: Vec<_> = CPU_DB.iter().map(|c| c.slug).collect();
+        slugs.sort();
+        let n = slugs.len();
+        slugs.dedup();
+        assert_eq!(slugs.len(), n);
+    }
+
+    #[test]
+    fn paper_host_present() {
+        let c = cpu_by_slug("ryzen-7-1800x").unwrap();
+        assert_eq!(c.cores, 8);
+        assert_eq!(c.threads, 16);
+        assert_eq!(c.base_clock_mhz, 3600);
+        assert_eq!(c.boost_clock_mhz, 4000);
+    }
+
+    #[test]
+    fn scores_monotone_with_generation_same_vendor_core_count() {
+        // Zen1 1800X < Zen2 3700X < Zen3 5800X < Zen4 7700X (all 8-core).
+        let seq = ["ryzen-7-1800x", "ryzen-7-3700x", "ryzen-7-5800x", "ryzen-7-7700x"];
+        let scores: Vec<f64> = seq
+            .iter()
+            .map(|s| cpu_by_slug(s).unwrap().multi_core_score())
+            .collect();
+        for w in scores.windows(2) {
+            assert!(w[1] > w[0], "{scores:?}");
+        }
+    }
+
+    #[test]
+    fn threads_at_least_cores() {
+        for c in CPU_DB {
+            assert!(c.threads >= c.cores, "{}", c.slug);
+            assert!(c.boost_clock_mhz >= c.base_clock_mhz, "{}", c.slug);
+        }
+    }
+
+    #[test]
+    fn cpus_with_cores_filters() {
+        assert!(!cpus_with_cores(6, false).is_empty());
+        assert!(cpus_with_cores(4, false).iter().all(|c| !c.laptop));
+        assert!(cpus_with_cores(4, true).len() > cpus_with_cores(4, false).len());
+    }
+}

@@ -1,0 +1,262 @@
+//! Consumer GPU specification database.
+//!
+//! An embedded snapshot of public spec-sheet data for the device families
+//! the paper samples (GTX 10xx, GTX 16xx, RTX 20xx, RTX 30xx) plus the RTX
+//! 40xx family of the paper's host GPU and a few laptop variants.  These are
+//! the quantities the roofline timing model (`emu::gputime`) consumes.
+//!
+//! Values: CUDA cores / boost clock (MHz) / VRAM (GiB) / memory bandwidth
+//! (GB/s) / TDP (W) / launch year, all from vendor spec sheets.
+
+/// GPU micro-architecture generation (the grouping of the paper's Fig. 2
+/// right panel).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum GpuArch {
+    /// GTX 10xx (2016–17).
+    Pascal,
+    /// GTX 16xx (Turing without tensor cores, 2019).
+    Turing16,
+    /// RTX 20xx (2018–19).
+    Turing20,
+    /// RTX 30xx (2020–22).
+    Ampere,
+    /// RTX 40xx (2022–24).
+    Ada,
+}
+
+impl GpuArch {
+    pub fn label(&self) -> &'static str {
+        match self {
+            GpuArch::Pascal => "Pascal (GTX 10xx)",
+            GpuArch::Turing16 => "Turing (GTX 16xx)",
+            GpuArch::Turing20 => "Turing (RTX 20xx)",
+            GpuArch::Ampere => "Ampere (RTX 30xx)",
+            GpuArch::Ada => "Ada (RTX 40xx)",
+        }
+    }
+
+    /// FP32 CUDA cores per SM — needed to convert CUDA-MPS active-thread
+    /// percentages into the SM-granular shares MPS actually enforces.
+    pub fn cores_per_sm(&self) -> u32 {
+        match self {
+            GpuArch::Pascal => 128,
+            GpuArch::Turing16 | GpuArch::Turing20 => 64,
+            GpuArch::Ampere | GpuArch::Ada => 128,
+        }
+    }
+
+    /// Effective host-device transfer bandwidth (GB/s): PCIe 3.0 x16 for
+    /// Pascal/Turing, PCIe 4.0 x16 for Ampere/Ada (practical, not peak).
+    pub fn pcie_gbs(&self) -> f64 {
+        match self {
+            GpuArch::Pascal | GpuArch::Turing16 | GpuArch::Turing20 => 12.0,
+            GpuArch::Ampere | GpuArch::Ada => 24.0,
+        }
+    }
+
+    pub fn all() -> &'static [GpuArch] {
+        &[
+            GpuArch::Pascal,
+            GpuArch::Turing16,
+            GpuArch::Turing20,
+            GpuArch::Ampere,
+            GpuArch::Ada,
+        ]
+    }
+}
+
+/// One GPU SKU.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuSpec {
+    /// Stable kebab-case id, e.g. `"rtx-4070-super"`.
+    pub slug: &'static str,
+    /// Marketing name, e.g. `"RTX 4070 Super"`.
+    pub name: &'static str,
+    pub arch: GpuArch,
+    pub cuda_cores: u32,
+    pub boost_clock_mhz: u32,
+    pub vram_gib: f64,
+    pub mem_bw_gbs: f64,
+    pub tdp_w: u32,
+    pub launch_year: u16,
+    pub laptop: bool,
+}
+
+impl GpuSpec {
+    /// Peak FP32 throughput in TFLOP/s (2 FLOPs per core per cycle, FMA).
+    pub fn peak_fp32_tflops(&self) -> f64 {
+        self.cuda_cores as f64 * 2.0 * self.boost_clock_mhz as f64 / 1e6
+    }
+
+    pub fn sm_count(&self) -> u32 {
+        self.cuda_cores / self.arch.cores_per_sm()
+    }
+
+    pub fn vram_bytes(&self) -> u64 {
+        (self.vram_gib * 1024.0 * 1024.0 * 1024.0) as u64
+    }
+}
+
+macro_rules! gpu {
+    ($slug:literal, $name:literal, $arch:ident, $cores:literal, $boost:literal,
+     $vram:literal, $bw:literal, $tdp:literal, $year:literal, $laptop:literal) => {
+        GpuSpec {
+            slug: $slug,
+            name: $name,
+            arch: GpuArch::$arch,
+            cuda_cores: $cores,
+            boost_clock_mhz: $boost,
+            vram_gib: $vram,
+            mem_bw_gbs: $bw,
+            tdp_w: $tdp,
+            launch_year: $year,
+            laptop: $laptop,
+        }
+    };
+}
+
+/// The full database (38 SKUs, Pascal → Ada).
+pub static GPU_DB: &[GpuSpec] = &[
+    // ----------------------------------------------------------- Pascal
+    gpu!("gtx-1050", "GTX 1050", Pascal, 640, 1455, 2.0, 112.0, 75, 2016, false),
+    gpu!("gtx-1050-ti", "GTX 1050 Ti", Pascal, 768, 1392, 4.0, 112.0, 75, 2016, false),
+    gpu!("gtx-1060-3gb", "GTX 1060 3GB", Pascal, 1152, 1708, 3.0, 192.0, 120, 2016, false),
+    gpu!("gtx-1060", "GTX 1060", Pascal, 1280, 1708, 6.0, 192.0, 120, 2016, false),
+    gpu!("gtx-1070", "GTX 1070", Pascal, 1920, 1683, 8.0, 256.0, 150, 2016, false),
+    gpu!("gtx-1070-ti", "GTX 1070 Ti", Pascal, 2432, 1683, 8.0, 256.0, 180, 2017, false),
+    gpu!("gtx-1080", "GTX 1080", Pascal, 2560, 1733, 8.0, 320.0, 180, 2016, false),
+    gpu!("gtx-1080-ti", "GTX 1080 Ti", Pascal, 3584, 1582, 11.0, 484.0, 250, 2017, false),
+    // --------------------------------------------------------- Turing16
+    gpu!("gtx-1650", "GTX 1650", Turing16, 896, 1665, 4.0, 128.0, 75, 2019, false),
+    gpu!("gtx-1650-super", "GTX 1650 Super", Turing16, 1280, 1725, 4.0, 192.0, 100, 2019, false),
+    gpu!("gtx-1660", "GTX 1660", Turing16, 1408, 1785, 6.0, 192.0, 120, 2019, false),
+    gpu!("gtx-1660-super", "GTX 1660 Super", Turing16, 1408, 1785, 6.0, 336.0, 125, 2019, false),
+    gpu!("gtx-1660-ti", "GTX 1660 Ti", Turing16, 1536, 1770, 6.0, 288.0, 120, 2019, false),
+    // --------------------------------------------------------- Turing20
+    gpu!("rtx-2060", "RTX 2060", Turing20, 1920, 1680, 6.0, 336.0, 160, 2019, false),
+    gpu!("rtx-2060-super", "RTX 2060 Super", Turing20, 2176, 1650, 8.0, 448.0, 175, 2019, false),
+    gpu!("rtx-2070", "RTX 2070", Turing20, 2304, 1620, 8.0, 448.0, 175, 2018, false),
+    gpu!("rtx-2070-super", "RTX 2070 Super", Turing20, 2560, 1770, 8.0, 448.0, 215, 2019, false),
+    gpu!("rtx-2080", "RTX 2080", Turing20, 2944, 1710, 8.0, 448.0, 215, 2018, false),
+    gpu!("rtx-2080-super", "RTX 2080 Super", Turing20, 3072, 1815, 8.0, 496.0, 250, 2019, false),
+    gpu!("rtx-2080-ti", "RTX 2080 Ti", Turing20, 4352, 1545, 11.0, 616.0, 250, 2018, false),
+    // ----------------------------------------------------------- Ampere
+    gpu!("rtx-3050", "RTX 3050", Ampere, 2560, 1777, 8.0, 224.0, 130, 2022, false),
+    gpu!("rtx-3060", "RTX 3060", Ampere, 3584, 1777, 12.0, 360.0, 170, 2021, false),
+    gpu!("rtx-3060-ti", "RTX 3060 Ti", Ampere, 4864, 1665, 8.0, 448.0, 200, 2020, false),
+    gpu!("rtx-3070", "RTX 3070", Ampere, 5888, 1725, 8.0, 448.0, 220, 2020, false),
+    gpu!("rtx-3070-ti", "RTX 3070 Ti", Ampere, 6144, 1770, 8.0, 608.0, 290, 2021, false),
+    gpu!("rtx-3080", "RTX 3080", Ampere, 8704, 1710, 10.0, 760.0, 320, 2020, false),
+    gpu!("rtx-3080-ti", "RTX 3080 Ti", Ampere, 10240, 1665, 12.0, 912.0, 350, 2021, false),
+    gpu!("rtx-3090", "RTX 3090", Ampere, 10496, 1695, 24.0, 936.0, 350, 2020, false),
+    // -------------------------------------------------------------- Ada
+    gpu!("rtx-4060", "RTX 4060", Ada, 3072, 2460, 8.0, 272.0, 115, 2023, false),
+    gpu!("rtx-4060-ti", "RTX 4060 Ti", Ada, 4352, 2535, 8.0, 288.0, 160, 2023, false),
+    gpu!("rtx-4070", "RTX 4070", Ada, 5888, 2475, 12.0, 504.0, 200, 2023, false),
+    gpu!("rtx-4070-super", "RTX 4070 Super", Ada, 7168, 2475, 12.0, 504.0, 220, 2024, false),
+    gpu!("rtx-4070-ti", "RTX 4070 Ti", Ada, 7680, 2610, 12.0, 504.0, 285, 2023, false),
+    gpu!("rtx-4080", "RTX 4080", Ada, 9728, 2505, 16.0, 717.0, 320, 2022, false),
+    gpu!("rtx-4090", "RTX 4090", Ada, 16384, 2520, 24.0, 1008.0, 450, 2022, false),
+    // ----------------------------------------------------------- laptop
+    gpu!("gtx-1650-mobile", "GTX 1650 Mobile", Turing16, 1024, 1515, 4.0, 128.0, 50, 2019, true),
+    gpu!("rtx-3060-laptop", "RTX 3060 Laptop", Ampere, 3840, 1425, 6.0, 336.0, 115, 2021, true),
+    gpu!("rtx-4060-laptop", "RTX 4060 Laptop", Ada, 3072, 2370, 8.0, 256.0, 115, 2023, true),
+];
+
+/// Look a GPU up by slug.
+pub fn gpu_by_slug(slug: &str) -> Option<&'static GpuSpec> {
+    GPU_DB.iter().find(|g| g.slug == slug)
+}
+
+/// Look a GPU up by marketing name (case-insensitive).
+pub fn gpu_by_name(name: &str) -> Option<&'static GpuSpec> {
+    GPU_DB
+        .iter()
+        .find(|g| g.name.eq_ignore_ascii_case(name))
+}
+
+/// The 13 GPUs sampled by the paper's Fig. 2 ("GTX 1060 - 1080,
+/// GTX 1650 - 1660 Ti, RTX 2060 - 2080 and RTX 3050 - 3080").
+pub static FIG2_GPUS: &[&str] = &[
+    "gtx-1060",
+    "gtx-1070",
+    "gtx-1080",
+    "gtx-1650",
+    "gtx-1660",
+    "gtx-1660-ti",
+    "rtx-2060",
+    "rtx-2070",
+    "rtx-2080",
+    "rtx-3050",
+    "rtx-3060",
+    "rtx-3070",
+    "rtx-3080",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slugs_unique() {
+        let mut slugs: Vec<_> = GPU_DB.iter().map(|g| g.slug).collect();
+        slugs.sort();
+        let n = slugs.len();
+        slugs.dedup();
+        assert_eq!(slugs.len(), n);
+    }
+
+    #[test]
+    fn fig2_gpus_all_resolve() {
+        for slug in FIG2_GPUS {
+            assert!(gpu_by_slug(slug).is_some(), "{slug} missing from GPU_DB");
+        }
+        assert_eq!(FIG2_GPUS.len(), 13);
+    }
+
+    #[test]
+    fn tflops_sane() {
+        // Paper host: RTX 4070 Super, 7168 cores @ ~2475 MHz ≈ 35.5 TFLOPs.
+        let g = gpu_by_slug("rtx-4070-super").unwrap();
+        let t = g.peak_fp32_tflops();
+        assert!((t - 35.5).abs() < 1.0, "{t}");
+        // Everything between 1 and 100 TFLOPs.
+        for g in GPU_DB {
+            let t = g.peak_fp32_tflops();
+            assert!((1.0..100.0).contains(&t), "{}: {t}", g.slug);
+        }
+    }
+
+    #[test]
+    fn sm_counts_match_known_values() {
+        assert_eq!(gpu_by_slug("gtx-1080").unwrap().sm_count(), 20);
+        assert_eq!(gpu_by_slug("gtx-1650").unwrap().sm_count(), 14);
+        assert_eq!(gpu_by_slug("rtx-3080").unwrap().sm_count(), 68);
+        assert_eq!(gpu_by_slug("rtx-4090").unwrap().sm_count(), 128);
+    }
+
+    #[test]
+    fn newer_generations_are_generally_faster() {
+        // Mean peak TFLOPs strictly increases across the flagship lines
+        // (Turing16 is the budget GTX 16xx line and sits below Pascal by
+        // design, so it is excluded from the monotonicity check).
+        let mut means = Vec::new();
+        for arch in [GpuArch::Pascal, GpuArch::Turing20, GpuArch::Ampere, GpuArch::Ada] {
+            let v: Vec<f64> = GPU_DB
+                .iter()
+                .filter(|g| g.arch == arch && !g.laptop)
+                .map(|g| g.peak_fp32_tflops())
+                .collect();
+            means.push(v.iter().sum::<f64>() / v.len() as f64);
+        }
+        for w in means.windows(2) {
+            assert!(w[1] > w[0], "{means:?}");
+        }
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(gpu_by_name("rtx 3060").unwrap().slug, "rtx-3060");
+        assert!(gpu_by_name("rtx 9090").is_none());
+    }
+}

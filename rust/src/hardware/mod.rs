@@ -1,0 +1,17 @@
+//! Hardware substrate: spec databases (GPU/CPU/RAM), the Steam-survey
+//! popularity snapshot, the representative sampler (paper §2.2), and the
+//! gaming-benchmark reference scores used by Fig. 2.
+
+pub mod cpu;
+pub mod gpu;
+pub mod profile;
+pub mod ram;
+pub mod refbench;
+pub mod sampler;
+pub mod survey;
+
+pub use cpu::{cpu_by_slug, CpuSpec, CPU_DB};
+pub use gpu::{gpu_by_slug, GpuArch, GpuSpec, FIG2_GPUS, GPU_DB};
+pub use profile::{preset, HardwareProfile, PRESET_NAMES};
+pub use ram::{ram_with_gib, RamSpec, RAM_PRESETS};
+pub use sampler::{HardwareSampler, SamplerConfig};

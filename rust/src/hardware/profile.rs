@@ -1,0 +1,139 @@
+//! Hardware profiles: the (CPU, GPU, RAM) bundles that define one emulated
+//! participant class — what the paper's §2.1 calls "participant profile
+//! types".
+
+use crate::error::ConfigError;
+
+use super::cpu::{cpu_by_slug, CpuSpec};
+use super::gpu::{gpu_by_slug, GpuSpec};
+use super::ram::{ram_with_gib, RamSpec};
+
+/// One emulated participant hardware class.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HardwareProfile {
+    /// Human-readable profile name (e.g. "budget-gamer-2019").
+    pub name: String,
+    pub gpu: GpuSpec,
+    pub cpu: CpuSpec,
+    pub ram: RamSpec,
+}
+
+impl HardwareProfile {
+    pub fn new(name: impl Into<String>, gpu: GpuSpec, cpu: CpuSpec, ram: RamSpec) -> Self {
+        HardwareProfile { name: name.into(), gpu, cpu, ram }
+    }
+
+    /// Build a profile from database slugs, e.g.
+    /// `from_slugs("x", "gtx-1060", "ryzen-5-3600", 16)`.
+    pub fn from_slugs(
+        name: &str,
+        gpu_slug: &str,
+        cpu_slug: &str,
+        ram_gib: u32,
+    ) -> Result<Self, ConfigError> {
+        let gpu = gpu_by_slug(gpu_slug)
+            .ok_or_else(|| ConfigError::UnknownHardware(format!("gpu '{gpu_slug}'")))?;
+        let cpu = cpu_by_slug(cpu_slug)
+            .ok_or_else(|| ConfigError::UnknownHardware(format!("cpu '{cpu_slug}'")))?;
+        let ram = ram_with_gib(ram_gib)
+            .ok_or_else(|| ConfigError::UnknownHardware(format!("ram '{ram_gib} GiB'")))?;
+        Ok(HardwareProfile::new(name, gpu.clone(), cpu.clone(), ram))
+    }
+
+    /// Shorthand: profile named after its GPU, with a default mid-range
+    /// host CPU and 16 GiB RAM (for GPU-focused sweeps like Fig. 2).
+    pub fn gpu_only(gpu_slug: &str) -> Result<Self, ConfigError> {
+        Self::from_slugs(gpu_slug, gpu_slug, "ryzen-5-3600", 16)
+    }
+
+    /// The paper's §4.1 host system: Ryzen 7 1800X, 32 GB DDR4,
+    /// RTX 4070 Super.
+    pub fn paper_host() -> Self {
+        Self::from_slugs("paper-host", "rtx-4070-super", "ryzen-7-1800x", 32)
+            .expect("paper host hardware must exist in the DB")
+    }
+
+    pub fn describe(&self) -> String {
+        format!(
+            "{}: {} ({:.1} TFLOPs, {} GiB VRAM) + {} ({}c/{}t) + {} GiB RAM",
+            self.name,
+            self.gpu.name,
+            self.gpu.peak_fp32_tflops(),
+            self.gpu.vram_gib,
+            self.cpu.name,
+            self.cpu.cores,
+            self.cpu.threads,
+            self.ram.gib
+        )
+    }
+}
+
+/// A few named presets for quick experimentation.
+pub fn preset(name: &str) -> Result<HardwareProfile, ConfigError> {
+    match name {
+        "paper-host" => Ok(HardwareProfile::paper_host()),
+        "budget-2016" => HardwareProfile::from_slugs(name, "gtx-1050-ti", "pentium-g4560", 8),
+        "budget-2019" => HardwareProfile::from_slugs(name, "gtx-1650", "core-i3-10100", 8),
+        "midrange-2019" => HardwareProfile::from_slugs(name, "gtx-1660-super", "ryzen-5-3600", 16),
+        "midrange-2021" => HardwareProfile::from_slugs(name, "rtx-3060", "ryzen-5-5600x", 16),
+        "highend-2020" => HardwareProfile::from_slugs(name, "rtx-3080", "ryzen-7-5800x", 32),
+        "highend-2023" => HardwareProfile::from_slugs(name, "rtx-4080", "ryzen-9-7950x", 64),
+        "laptop-2020" => HardwareProfile::from_slugs(name, "gtx-1650-mobile", "core-i5-1135g7", 8),
+        "laptop-2021" => HardwareProfile::from_slugs(name, "rtx-3060-laptop", "ryzen-7-4800h", 16),
+        "small-lab-server" => HardwareProfile::from_slugs(name, "rtx-3090", "xeon-e5-2680-v4", 64),
+        other => Err(ConfigError::UnknownHardware(format!("preset '{other}'"))),
+    }
+}
+
+/// All preset names (for CLI listings).
+pub static PRESET_NAMES: &[&str] = &[
+    "paper-host",
+    "budget-2016",
+    "budget-2019",
+    "midrange-2019",
+    "midrange-2021",
+    "highend-2020",
+    "highend-2023",
+    "laptop-2020",
+    "laptop-2021",
+    "small-lab-server",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_host_matches_section_4_1() {
+        let p = HardwareProfile::paper_host();
+        assert_eq!(p.gpu.slug, "rtx-4070-super");
+        assert_eq!(p.gpu.cuda_cores, 7168);
+        assert_eq!(p.gpu.vram_gib, 12.0);
+        assert_eq!(p.cpu.cores, 8);
+        assert_eq!(p.ram.gib, 32);
+    }
+
+    #[test]
+    fn all_presets_resolve() {
+        for name in PRESET_NAMES {
+            let p = preset(name).unwrap();
+            assert_eq!(&p.name, name);
+        }
+    }
+
+    #[test]
+    fn unknown_slug_is_error() {
+        assert!(HardwareProfile::from_slugs("x", "gtx-9999", "ryzen-5-3600", 16).is_err());
+        assert!(HardwareProfile::from_slugs("x", "gtx-1060", "nope", 16).is_err());
+        assert!(HardwareProfile::from_slugs("x", "gtx-1060", "ryzen-5-3600", 7).is_err());
+        assert!(preset("nope").is_err());
+    }
+
+    #[test]
+    fn describe_mentions_parts() {
+        let d = HardwareProfile::paper_host().describe();
+        assert!(d.contains("RTX 4070 Super"));
+        assert!(d.contains("Ryzen 7 1800X"));
+        assert!(d.contains("32 GiB"));
+    }
+}

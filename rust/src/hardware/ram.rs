@@ -1,0 +1,65 @@
+//! Host RAM configurations.
+
+/// A host memory configuration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RamSpec {
+    pub gib: u32,
+    /// Effective transfer rate (MT/s), e.g. 3200 for DDR4-3200.
+    pub mts: u32,
+    pub channels: u32,
+}
+
+impl RamSpec {
+    pub const fn new(gib: u32, mts: u32, channels: u32) -> Self {
+        RamSpec { gib, mts, channels }
+    }
+
+    /// Theoretical bandwidth in GB/s (8 bytes per transfer per channel).
+    pub fn bandwidth_gbs(&self) -> f64 {
+        self.mts as f64 * 8.0 * self.channels as f64 / 1000.0
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.gib as u64 * 1024 * 1024 * 1024
+    }
+}
+
+/// Common configurations (used by the survey sampler).
+pub static RAM_PRESETS: &[RamSpec] = &[
+    RamSpec::new(4, 2400, 1),
+    RamSpec::new(8, 2666, 2),
+    RamSpec::new(12, 2666, 2),
+    RamSpec::new(16, 3200, 2),
+    RamSpec::new(24, 3200, 2),
+    RamSpec::new(32, 3200, 2),
+    RamSpec::new(64, 3600, 2),
+];
+
+pub fn ram_with_gib(gib: u32) -> Option<RamSpec> {
+    RAM_PRESETS.iter().find(|r| r.gib == gib).copied()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bandwidth() {
+        // DDR4-3200 dual channel = 51.2 GB/s.
+        let r = RamSpec::new(16, 3200, 2);
+        assert!((r.bandwidth_gbs() - 51.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn presets_sorted_by_size() {
+        for w in RAM_PRESETS.windows(2) {
+            assert!(w[1].gib > w[0].gib);
+        }
+    }
+
+    #[test]
+    fn lookup() {
+        assert_eq!(ram_with_gib(32).unwrap().gib, 32);
+        assert!(ram_with_gib(5).is_none());
+    }
+}

@@ -1,0 +1,127 @@
+//! Gaming-benchmark reference scores (the x-axis of the paper's Fig. 2).
+//!
+//! The paper contextualises emulated training times against "PassMark
+//! software single videocard + UserBenchmark effective 3D speed" — public
+//! benchmark databases.  We embed a snapshot of both (approximate public
+//! values, same era as the survey snapshot).  These numbers are *measured
+//! real-world data the timing model never sees*, which is what makes the
+//! Fig. 2 correlation a genuine fidelity test (DESIGN.md §6).
+
+use crate::util::stats;
+
+/// (gpu slug, PassMark G3D mark, UserBenchmark effective-3D %).
+pub static REF_SCORES: &[(&str, f64, f64)] = &[
+    ("gtx-1050", 4600.0, 47.0),
+    ("gtx-1050-ti", 6300.0, 53.0),
+    ("gtx-1060-3gb", 8800.0, 66.0),
+    ("gtx-1060", 10000.0, 70.0),
+    ("gtx-1070", 13400.0, 90.0),
+    ("gtx-1070-ti", 14600.0, 97.0),
+    ("gtx-1080", 15400.0, 104.0),
+    ("gtx-1080-ti", 18500.0, 124.0),
+    ("gtx-1650", 7800.0, 61.0),
+    ("gtx-1650-super", 9900.0, 73.0),
+    ("gtx-1660", 11500.0, 82.0),
+    ("gtx-1660-super", 12700.0, 89.0),
+    ("gtx-1660-ti", 12800.0, 89.0),
+    ("rtx-2060", 14000.0, 100.0),
+    ("rtx-2060-super", 16200.0, 109.0),
+    ("rtx-2070", 16300.0, 110.0),
+    ("rtx-2070-super", 18200.0, 121.0),
+    ("rtx-2080", 18700.0, 126.0),
+    ("rtx-2080-super", 19600.0, 131.0),
+    ("rtx-2080-ti", 21700.0, 148.0),
+    ("rtx-3050", 12800.0, 89.0),
+    ("rtx-3060", 17000.0, 111.0),
+    ("rtx-3060-ti", 20300.0, 134.0),
+    ("rtx-3070", 22400.0, 150.0),
+    ("rtx-3070-ti", 23700.0, 156.0),
+    ("rtx-3080", 25100.0, 171.0),
+    ("rtx-3080-ti", 26700.0, 182.0),
+    ("rtx-3090", 26900.0, 184.0),
+    ("rtx-4060", 19600.0, 120.0),
+    ("rtx-4060-ti", 22600.0, 139.0),
+    ("rtx-4070", 26900.0, 164.0),
+    ("rtx-4070-super", 30100.0, 180.0),
+    ("rtx-4070-ti", 31600.0, 192.0),
+    ("rtx-4080", 34600.0, 212.0),
+    ("rtx-4090", 38900.0, 247.0),
+    ("gtx-1650-mobile", 7000.0, 55.0),
+    ("rtx-3060-laptop", 12700.0, 88.0),
+    ("rtx-4060-laptop", 17000.0, 105.0),
+];
+
+/// PassMark G3D score for a GPU slug.
+pub fn passmark(slug: &str) -> Option<f64> {
+    REF_SCORES.iter().find(|(s, ..)| *s == slug).map(|(_, p, _)| *p)
+}
+
+/// UserBenchmark effective-3D score for a GPU slug.
+pub fn userbench(slug: &str) -> Option<f64> {
+    REF_SCORES.iter().find(|(s, ..)| *s == slug).map(|(.., u)| *u)
+}
+
+/// Composite gaming score over a GPU set, mirroring the paper's
+/// "PassMark single videocard + UserBenchmark effective 3D speed":
+/// each source is normalised to its mean over the set, then averaged.
+/// Returns one score per input slug (higher = faster).
+pub fn composite_scores(slugs: &[&str]) -> Vec<f64> {
+    let pm: Vec<f64> = slugs
+        .iter()
+        .map(|s| passmark(s).unwrap_or_else(|| panic!("no PassMark score for {s}")))
+        .collect();
+    let ub: Vec<f64> = slugs
+        .iter()
+        .map(|s| userbench(s).unwrap_or_else(|| panic!("no UserBenchmark score for {s}")))
+        .collect();
+    let pm_n = stats::mean_normalize(&pm);
+    let ub_n = stats::mean_normalize(&ub);
+    pm_n.iter().zip(&ub_n).map(|(a, b)| (a + b) / 2.0).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::gpu::{GPU_DB, FIG2_GPUS};
+
+    #[test]
+    fn every_db_gpu_has_scores() {
+        for g in GPU_DB {
+            assert!(passmark(g.slug).is_some(), "{} missing PassMark", g.slug);
+            assert!(userbench(g.slug).is_some(), "{} missing UserBenchmark", g.slug);
+        }
+    }
+
+    #[test]
+    fn composite_has_unit_mean() {
+        let scores = composite_scores(FIG2_GPUS);
+        assert_eq!(scores.len(), FIG2_GPUS.len());
+        let m = stats::mean(&scores);
+        assert!((m - 1.0).abs() < 1e-12, "{m}");
+    }
+
+    #[test]
+    fn known_orderings_hold() {
+        // Within generations, bigger SKUs score higher in both sources.
+        for pair in [
+            ("gtx-1060", "gtx-1080"),
+            ("gtx-1650", "gtx-1660-ti"),
+            ("rtx-2060", "rtx-2080"),
+            ("rtx-3050", "rtx-3080"),
+        ] {
+            assert!(passmark(pair.0).unwrap() < passmark(pair.1).unwrap());
+            assert!(userbench(pair.0).unwrap() < userbench(pair.1).unwrap());
+        }
+    }
+
+    #[test]
+    fn the_two_sources_agree_in_rank() {
+        // Spot check: the sources are consistent enough that a composite
+        // makes sense (paper's premise).
+        let slugs: Vec<&str> = REF_SCORES.iter().map(|(s, ..)| *s).collect();
+        let pm: Vec<f64> = slugs.iter().map(|s| passmark(s).unwrap()).collect();
+        let ub: Vec<f64> = slugs.iter().map(|s| userbench(s).unwrap()).collect();
+        let rho = crate::analysis::correlation::spearman(&pm, &ub);
+        assert!(rho > 0.95, "sources disagree: rho={rho}");
+    }
+}

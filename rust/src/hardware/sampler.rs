@@ -1,0 +1,269 @@
+//! Representative hardware sampler (paper §2.2).
+//!
+//! Draws client hardware profiles from the embedded Steam-survey popularity
+//! snapshot, "constrained to currently available consumer hardware,
+//! preventing the selection of unrealistically high-end configurations".
+//! CPU core count and RAM size are sampled from their survey distributions
+//! with a mild tier-affinity to the drawn GPU (real machines pair a 4090
+//! with a 7950X more often than with a Pentium), then a concrete CPU SKU is
+//! drawn among those with the sampled core count, biased toward the GPU's
+//! launch-year era.
+
+use crate::error::ConfigError;
+use crate::util::rng::Pcg;
+
+use super::cpu::{cpus_with_cores, CpuSpec};
+use super::gpu::{gpu_by_slug, GpuSpec};
+use super::profile::HardwareProfile;
+use super::ram::{ram_with_gib, RamSpec};
+use super::survey::{CPU_CORE_SHARES, GPU_SHARES, RAM_SHARES};
+
+/// Sampler constraints/configuration.
+#[derive(Debug, Clone)]
+pub struct SamplerConfig {
+    /// Exclude GPUs with less VRAM than this (GiB).
+    pub min_vram_gib: f64,
+    /// Exclude "unrealistically high-end" SKUs (flagship cards with
+    /// >= 24 GiB VRAM: 3090/4090), mirroring the paper's constraint.
+    pub consumer_only: bool,
+    /// Exclude laptop/mobile SKUs.
+    pub exclude_laptop: bool,
+    /// Strength of the GPU↔CPU/RAM tier correlation in [0, 1];
+    /// 0 = independent draws, 1 = strongly matched tiers.
+    pub tier_affinity: f64,
+}
+
+impl Default for SamplerConfig {
+    fn default() -> Self {
+        SamplerConfig {
+            min_vram_gib: 0.0,
+            consumer_only: true,
+            exclude_laptop: false,
+            tier_affinity: 0.6,
+        }
+    }
+}
+
+/// Weighted sampler over the survey snapshot.
+pub struct HardwareSampler {
+    cfg: SamplerConfig,
+    rng: Pcg,
+    gpus: Vec<&'static GpuSpec>,
+    gpu_weights: Vec<f64>,
+    /// Tier (0 = slowest .. 1 = fastest) per eligible GPU, by peak TFLOPs rank.
+    gpu_tiers: Vec<f64>,
+}
+
+impl HardwareSampler {
+    pub fn new(seed: u64, cfg: SamplerConfig) -> Result<Self, ConfigError> {
+        let mut gpus = Vec::new();
+        let mut gpu_weights = Vec::new();
+        for (slug, share) in GPU_SHARES {
+            let g = gpu_by_slug(slug)
+                .ok_or_else(|| ConfigError::UnknownHardware(format!("gpu '{slug}'")))?;
+            if g.vram_gib < cfg.min_vram_gib {
+                continue;
+            }
+            if cfg.consumer_only && g.vram_gib >= 24.0 {
+                continue;
+            }
+            if cfg.exclude_laptop && g.laptop {
+                continue;
+            }
+            gpus.push(g);
+            gpu_weights.push(*share);
+        }
+        if gpus.is_empty() {
+            return Err(ConfigError::InvalidValue {
+                key: "sampler".into(),
+                msg: "constraints exclude every GPU".into(),
+            });
+        }
+        // Rank by peak TFLOPs -> tier in [0, 1].
+        let mut order: Vec<usize> = (0..gpus.len()).collect();
+        order.sort_by(|&a, &b| {
+            gpus[a]
+                .peak_fp32_tflops()
+                .total_cmp(&gpus[b].peak_fp32_tflops())
+        });
+        let mut gpu_tiers = vec![0.0; gpus.len()];
+        let denom = (gpus.len() - 1).max(1) as f64;
+        for (rank, &idx) in order.iter().enumerate() {
+            gpu_tiers[idx] = rank as f64 / denom;
+        }
+        Ok(HardwareSampler { cfg, rng: Pcg::seeded(seed), gpus, gpu_weights, gpu_tiers })
+    }
+
+    pub fn with_defaults(seed: u64) -> Self {
+        Self::new(seed, SamplerConfig::default()).expect("default sampler config is valid")
+    }
+
+    /// Sample one participant profile.
+    pub fn sample(&mut self) -> HardwareProfile {
+        let gi = self.rng.weighted(&self.gpu_weights);
+        let gpu = self.gpus[gi];
+        let tier = self.gpu_tiers[gi];
+
+        let cores = self.sample_cores(tier, gpu.laptop);
+        let cpu = self.sample_cpu_sku(cores, gpu);
+        let ram = self.sample_ram(tier);
+
+        HardwareProfile::new(
+            format!("{}+{}c+{}g", gpu.slug, cpu.cores, ram.gib),
+            gpu.clone(),
+            cpu.clone(),
+            ram,
+        )
+    }
+
+    /// Sample a whole federation.
+    pub fn sample_federation(&mut self, n: usize) -> Vec<HardwareProfile> {
+        (0..n).map(|_| self.sample()).collect()
+    }
+
+    fn tier_bias(&self, item_tier: f64, gpu_tier: f64) -> f64 {
+        // Gaussian affinity between the GPU tier and the candidate tier;
+        // sigma shrinks as affinity grows. affinity=0 -> flat.
+        let a = self.cfg.tier_affinity.clamp(0.0, 1.0);
+        if a == 0.0 {
+            return 1.0;
+        }
+        let sigma = 1.2 - a; // in [0.2, 1.2]
+        let d = item_tier - gpu_tier;
+        (-d * d / (2.0 * sigma * sigma)).exp()
+    }
+
+    fn sample_cores(&mut self, gpu_tier: f64, laptop: bool) -> u32 {
+        let n = CPU_CORE_SHARES.len();
+        let weights: Vec<f64> = CPU_CORE_SHARES
+            .iter()
+            .enumerate()
+            .map(|(i, (cores, share))| {
+                let core_tier = i as f64 / (n - 1) as f64;
+                let has_sku = !cpus_with_cores(*cores, laptop || !self.cfg.exclude_laptop).is_empty();
+                if has_sku {
+                    share * self.tier_bias(core_tier, gpu_tier)
+                } else {
+                    0.0
+                }
+            })
+            .collect();
+        CPU_CORE_SHARES[self.rng.weighted(&weights)].0
+    }
+
+    fn sample_cpu_sku(&mut self, cores: u32, gpu: &GpuSpec) -> &'static CpuSpec {
+        let candidates = {
+            let c = cpus_with_cores(cores, true);
+            debug_assert!(!c.is_empty(), "survey guarantees a SKU for {cores} cores");
+            c
+        };
+        // Bias toward CPUs from the GPU's era (|Δyear| decay).
+        let weights: Vec<f64> = candidates
+            .iter()
+            .map(|c| {
+                let dy = (c.launch_year as f64 - gpu.launch_year as f64).abs();
+                (-dy / 2.5).exp().max(1e-3)
+            })
+            .collect();
+        candidates[self.rng.weighted(&weights)]
+    }
+
+    fn sample_ram(&mut self, gpu_tier: f64) -> RamSpec {
+        let n = RAM_SHARES.len();
+        let weights: Vec<f64> = RAM_SHARES
+            .iter()
+            .enumerate()
+            .map(|(i, (_, share))| {
+                let ram_tier = i as f64 / (n - 1) as f64;
+                share * self.tier_bias(ram_tier, gpu_tier)
+            })
+            .collect();
+        let gib = RAM_SHARES[self.rng.weighted(&weights)].0;
+        ram_with_gib(gib).expect("survey RAM sizes exist as presets")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = HardwareSampler::with_defaults(42);
+        let mut b = HardwareSampler::with_defaults(42);
+        for _ in 0..20 {
+            assert_eq!(a.sample(), b.sample());
+        }
+    }
+
+    #[test]
+    fn respects_min_vram() {
+        let cfg = SamplerConfig { min_vram_gib: 8.0, ..Default::default() };
+        let mut s = HardwareSampler::new(1, cfg).unwrap();
+        for _ in 0..200 {
+            assert!(s.sample().gpu.vram_gib >= 8.0);
+        }
+    }
+
+    #[test]
+    fn consumer_only_excludes_flagships() {
+        let mut s = HardwareSampler::with_defaults(2);
+        for _ in 0..500 {
+            let p = s.sample();
+            assert!(p.gpu.vram_gib < 24.0, "{}", p.gpu.slug);
+        }
+    }
+
+    #[test]
+    fn exclude_laptop_works() {
+        let cfg = SamplerConfig { exclude_laptop: true, ..Default::default() };
+        let mut s = HardwareSampler::new(3, cfg).unwrap();
+        for _ in 0..300 {
+            assert!(!s.sample().gpu.laptop);
+        }
+    }
+
+    #[test]
+    fn empirical_shares_track_survey() {
+        // 20k draws: popular GPUs appear with roughly their renormalised share.
+        let mut s = HardwareSampler::with_defaults(7);
+        let mut counts: BTreeMap<&str, usize> = BTreeMap::new();
+        let n = 20_000;
+        for _ in 0..n {
+            *counts.entry(s.sample().gpu.slug).or_default() += 1;
+        }
+        // rtx-3060 (4.6 share) must be sampled much more often than gtx-1080 (0.6).
+        let c3060 = counts.get("rtx-3060").copied().unwrap_or(0) as f64;
+        let c1080 = counts.get("gtx-1080").copied().unwrap_or(0) as f64;
+        assert!(c3060 > 3.0 * c1080, "3060={c3060} 1080={c1080}");
+    }
+
+    #[test]
+    fn tier_affinity_pairs_big_gpus_with_big_rigs() {
+        let cfg = SamplerConfig { tier_affinity: 0.9, ..Default::default() };
+        let mut s = HardwareSampler::new(11, cfg).unwrap();
+        let (mut hi_ram, mut lo_ram) = (Vec::new(), Vec::new());
+        for _ in 0..3_000 {
+            let p = s.sample();
+            if p.gpu.peak_fp32_tflops() > 25.0 {
+                hi_ram.push(p.ram.gib as f64);
+            } else if p.gpu.peak_fp32_tflops() < 6.0 {
+                lo_ram.push(p.ram.gib as f64);
+            }
+        }
+        let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len().max(1) as f64;
+        assert!(
+            mean(&hi_ram) > mean(&lo_ram) + 4.0,
+            "hi {} lo {}",
+            mean(&hi_ram),
+            mean(&lo_ram)
+        );
+    }
+
+    #[test]
+    fn impossible_constraints_error() {
+        let cfg = SamplerConfig { min_vram_gib: 100.0, ..Default::default() };
+        assert!(HardwareSampler::new(0, cfg).is_err());
+    }
+}

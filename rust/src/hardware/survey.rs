@@ -1,0 +1,120 @@
+//! Steam Hardware Survey popularity snapshot.
+//!
+//! The paper's hardware sampler (§2.2) "draws from the Steam Hardware
+//! Survey [Valve 2025], which collects CPU, GPU, and RAM information from
+//! millions of users".  The live survey is a web resource; per DESIGN.md
+//! §Substitutions we embed a snapshot of the survey's shares (Jan-2025-era,
+//! restricted to SKUs present in our spec databases, as the paper's own
+//! matching step does: "we matched survey entries against our own database
+//! of hardware specifications").
+//!
+//! Shares are percentages of surveyed machines; they do not sum to 100
+//! because the survey's long tail (SKUs outside our DB) is dropped — the
+//! sampler renormalises.
+
+/// (gpu slug, survey share %).
+pub static GPU_SHARES: &[(&str, f64)] = &[
+    ("gtx-1050", 0.70),
+    ("gtx-1050-ti", 1.30),
+    ("gtx-1060-3gb", 0.30),
+    ("gtx-1060", 2.20),
+    ("gtx-1070", 0.90),
+    ("gtx-1070-ti", 0.30),
+    ("gtx-1080", 0.60),
+    ("gtx-1080-ti", 0.50),
+    ("gtx-1650", 3.40),
+    ("gtx-1650-super", 0.60),
+    ("gtx-1660", 0.90),
+    ("gtx-1660-super", 1.70),
+    ("gtx-1660-ti", 1.00),
+    ("rtx-2060", 2.30),
+    ("rtx-2060-super", 0.80),
+    ("rtx-2070", 0.80),
+    ("rtx-2070-super", 1.00),
+    ("rtx-2080", 0.50),
+    ("rtx-2080-super", 0.60),
+    ("rtx-2080-ti", 0.40),
+    ("rtx-3050", 1.60),
+    ("rtx-3060", 4.60),
+    ("rtx-3060-ti", 2.30),
+    ("rtx-3070", 2.50),
+    ("rtx-3070-ti", 1.00),
+    ("rtx-3080", 1.80),
+    ("rtx-3080-ti", 0.60),
+    ("rtx-3090", 0.50),
+    ("rtx-4060", 2.60),
+    ("rtx-4060-ti", 1.90),
+    ("rtx-4070", 2.30),
+    ("rtx-4070-super", 1.20),
+    ("rtx-4070-ti", 1.00),
+    ("rtx-4080", 0.80),
+    ("rtx-4090", 1.00),
+    ("gtx-1650-mobile", 1.10),
+    ("rtx-3060-laptop", 2.00),
+    ("rtx-4060-laptop", 2.50),
+];
+
+/// (physical core count, survey share %).
+pub static CPU_CORE_SHARES: &[(u32, f64)] = &[
+    (2, 3.0),
+    (4, 18.0),
+    (6, 31.0),
+    (8, 29.0),
+    (12, 8.0),
+    (14, 3.0),
+    (16, 5.0),
+    (24, 2.0),
+];
+
+/// (RAM GiB, survey share %).
+pub static RAM_SHARES: &[(u32, f64)] = &[
+    (4, 1.5),
+    (8, 9.0),
+    (12, 2.0),
+    (16, 43.0),
+    (24, 1.0),
+    (32, 38.0),
+    (64, 5.0),
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::cpu::cpus_with_cores;
+    use crate::hardware::gpu::gpu_by_slug;
+    use crate::hardware::ram::ram_with_gib;
+
+    #[test]
+    fn every_surveyed_gpu_exists_in_db() {
+        for (slug, share) in GPU_SHARES {
+            assert!(gpu_by_slug(slug).is_some(), "{slug} missing");
+            assert!(*share > 0.0);
+        }
+    }
+
+    #[test]
+    fn every_core_count_has_a_cpu() {
+        for (cores, _) in CPU_CORE_SHARES {
+            assert!(
+                !cpus_with_cores(*cores, true).is_empty(),
+                "no CPU with {cores} cores in CPU_DB"
+            );
+        }
+    }
+
+    #[test]
+    fn every_ram_size_has_a_preset() {
+        for (gib, _) in RAM_SHARES {
+            assert!(ram_with_gib(*gib).is_some(), "{gib} GiB missing");
+        }
+    }
+
+    #[test]
+    fn shares_form_a_plausible_distribution() {
+        let total: f64 = GPU_SHARES.iter().map(|(_, s)| s).sum();
+        assert!((30.0..70.0).contains(&total), "GPU share sum {total}");
+        // RTX 3060 is the most popular GPU of the snapshot era.
+        let max = GPU_SHARES.iter().max_by(|a, b| a.1.total_cmp(&b.1)).unwrap();
+        assert_eq!(max.0, "rtx-3060");
+    }
+}

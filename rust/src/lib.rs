@@ -1,0 +1,35 @@
+//! # BouquetFL — emulating diverse participant hardware in Federated Learning
+//!
+//! A reproduction of *"BouquetFL: Emulating diverse participant hardware in
+//! Federated Learning"* (Geimer, 2026) as a three-layer Rust + JAX + Pallas
+//! system:
+//!
+//! * **L3 (this crate)** — the coordination layer: a Flower-shaped federated
+//!   learning framework ([`fl`]), the hardware-emulation substrate ([`emu`]),
+//!   hardware databases + the Steam-survey sampler ([`hardware`]), client
+//!   schedulers ([`sched`]), and the analysis/figure harness ([`analysis`]).
+//! * **L2** — the training computation (a compact CNN) written in JAX
+//!   (`python/compile/model.py`), AOT-lowered once to HLO text.
+//! * **L1** — Pallas kernels for the dense layer (fwd + custom-VJP bwd),
+//!   FedAvg aggregation and the fused SGD update
+//!   (`python/compile/kernels/`).
+//!
+//! Python never runs on the request path: [`runtime`] loads the HLO
+//! artifacts via the PJRT C API (`xla` crate) and executes them natively.
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment index,
+//! and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod analysis;
+pub mod data;
+pub mod emu;
+pub mod error;
+pub mod fl;
+pub mod hardware;
+pub mod modelcost;
+pub mod net;
+pub mod runtime;
+pub mod sched;
+pub mod util;
+
+pub use error::{ConfigError, EmuError, FlError, RuntimeError};

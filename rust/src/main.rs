@@ -1,0 +1,333 @@
+//! BouquetFL CLI launcher.
+//!
+//! Subcommands:
+//!   run              run a federation (config file or flags)
+//!   sample-hardware  draw a federation's hardware from the survey sampler
+//!   fig2             reproduce the paper's Fig. 2 (scatter + generations)
+//!   oom              §4.2 OOM matrix (batch x GPU)
+//!   dataloader       §4.2 CPU data-loading sweep
+//!   ram              §4.2 RAM-size sweep
+//!   list-hw          list GPUs / CPUs / presets in the databases
+//!
+//! `bouquetfl <cmd> --help` shows per-command options.
+
+use anyhow::{bail, Result};
+
+use bouquetfl::analysis::{claims, fig2, report};
+use bouquetfl::data::PartitionScheme;
+use bouquetfl::emu::EmulationMode;
+use bouquetfl::fl::launcher::{launch, HardwareSource, LaunchOptions};
+use bouquetfl::fl::Selection;
+use bouquetfl::hardware::profile::PRESET_NAMES;
+use bouquetfl::hardware::sampler::{HardwareSampler, SamplerConfig};
+use bouquetfl::hardware::{preset, HardwareProfile, CPU_DB, GPU_DB};
+use bouquetfl::util::args::{render_help, Args, OptSpec};
+use bouquetfl::util::cfg::Cfg;
+use bouquetfl::util::table::{fnum, Align, Table};
+
+fn main() -> Result<()> {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = raw.first().cloned().unwrap_or_else(|| "help".to_string());
+    match cmd.as_str() {
+        "run" => cmd_run(&raw),
+        "sample-hardware" => cmd_sample(&raw),
+        "fig2" => cmd_fig2(&raw),
+        "oom" => cmd_oom(),
+        "dataloader" => cmd_dataloader(&raw),
+        "ram" => cmd_ram(&raw),
+        "list-hw" => cmd_list_hw(&raw),
+        "help" | "--help" | "-h" => {
+            print_global_help();
+            Ok(())
+        }
+        other => {
+            print_global_help();
+            bail!("unknown subcommand '{other}'")
+        }
+    }
+}
+
+fn print_global_help() {
+    println!(
+        "bouquetfl — emulating diverse participant hardware in federated learning\n\n\
+         Usage: bouquetfl <command> [options]\n\n\
+         Commands:\n\
+         \x20 run              run a federation (real AOT/PJRT training under emulated hardware)\n\
+         \x20 sample-hardware  draw client hardware from the Steam-survey sampler\n\
+         \x20 fig2             reproduce Fig. 2 (emulated GPU perf vs gaming benchmarks)\n\
+         \x20 oom              OOM matrix: batch size x GPU VRAM (paper §4.2)\n\
+         \x20 dataloader       CPU data-loading sweep (paper §4.2)\n\
+         \x20 ram              RAM-size sweep (paper §4.2)\n\
+         \x20 list-hw          list known GPUs / CPUs / profile presets"
+    );
+}
+
+fn run_specs() -> Vec<OptSpec> {
+    vec![
+        OptSpec { name: "config", help: "config file (TOML subset)", takes_value: true, default: None },
+        OptSpec { name: "clients", help: "number of clients", takes_value: true, default: Some("8") },
+        OptSpec { name: "rounds", help: "federated rounds", takes_value: true, default: Some("10") },
+        OptSpec { name: "samples", help: "samples per client", takes_value: true, default: Some("128") },
+        OptSpec { name: "batch", help: "local batch size", takes_value: true, default: Some("32") },
+        OptSpec { name: "local-steps", help: "local steps per round", takes_value: true, default: Some("4") },
+        OptSpec { name: "lr", help: "learning rate", takes_value: true, default: Some("0.02") },
+        OptSpec { name: "strategy", help: "fedavg|fedprox|fedavgm|fedadam|trimmed-mean|krum", takes_value: true, default: Some("fedavg") },
+        OptSpec { name: "alpha", help: "Dirichlet non-IID alpha", takes_value: true, default: Some("0.5") },
+        OptSpec { name: "fraction", help: "client fraction per round", takes_value: true, default: Some("1.0") },
+        OptSpec { name: "parallel", help: "max concurrent clients (1 = sequential)", takes_value: true, default: Some("1") },
+        OptSpec { name: "seed", help: "experiment seed", takes_value: true, default: Some("42") },
+        OptSpec { name: "network", help: "attach network-latency profiles", takes_value: false, default: None },
+        OptSpec { name: "profiles", help: "comma-separated preset/GPU names (manual hardware)", takes_value: true, default: None },
+        OptSpec { name: "history-out", help: "write round history JSON here", takes_value: true, default: None },
+        OptSpec { name: "trace-out", help: "write Chrome-trace JSON of client fits here", takes_value: true, default: None },
+        OptSpec { name: "pace", help: "real-time pacing scale (e.g. 0.1 sleeps 0.1s per emulated second)", takes_value: true, default: None },
+        OptSpec { name: "help", help: "show help", takes_value: false, default: None },
+    ]
+}
+
+fn cmd_run(raw: &[String]) -> Result<()> {
+    let specs = run_specs();
+    let args = Args::parse(&raw[1..], &specs)?;
+    if args.get_bool("help") {
+        println!("{}", render_help("bouquetfl run", "run a federation", &specs));
+        return Ok(());
+    }
+
+    let mut opts = if let Some(path) = args.get("config") {
+        LaunchOptions::from_cfg(&Cfg::load(path)?)?
+    } else {
+        LaunchOptions::default()
+    };
+    if args.get("config").is_none() {
+        opts.clients = args.get_u64("clients")?.unwrap() as usize;
+        opts.rounds = args.get_u64("rounds")?.unwrap() as u32;
+        opts.samples_per_client = args.get_u64("samples")?.unwrap() as usize;
+        opts.batch = args.get_u64("batch")?.unwrap() as u32;
+        opts.local_steps = args.get_u64("local-steps")?.unwrap() as u32;
+        opts.lr = args.get_f64("lr")?.unwrap() as f32;
+        opts.strategy = args.get("strategy").unwrap().to_string();
+        opts.partition = PartitionScheme::Dirichlet { alpha: args.get_f64("alpha")?.unwrap() };
+        let fraction = args.get_f64("fraction")?.unwrap();
+        opts.selection = if fraction >= 1.0 { Selection::All } else { Selection::Fraction(fraction) };
+        opts.max_parallel = args.get_u64("parallel")?.unwrap() as usize;
+        opts.seed = args.get_u64("seed")?.unwrap();
+        opts.network = args.get_bool("network");
+        if let Some(profiles) = args.get("profiles") {
+            opts.hardware =
+                HardwareSource::Manual(profiles.split(',').map(|s| s.trim().to_string()).collect());
+        }
+    }
+    if let Some(scale) = args.get_f64("pace")? {
+        opts.pacing = Some(scale);
+    }
+
+    println!("host: {}", opts.host.describe());
+    println!(
+        "federation: {} clients, {} rounds, strategy {}, batch {}, {} local steps",
+        opts.clients, opts.rounds, opts.strategy, opts.batch, opts.local_steps
+    );
+    let outcome = launch(&opts)?;
+
+    let mut t = Table::new(&["client", "hardware"]).aligns(&[Align::Right, Align::Left]);
+    for (i, p) in outcome.profiles.iter().enumerate() {
+        t.row(vec![i.to_string(), p.describe()]);
+    }
+    println!("{}", t.render());
+
+    let mut rt = Table::new(&["round", "train loss", "eval loss", "eval acc", "emu round (s)"]);
+    for r in &outcome.history.rounds {
+        rt.row(vec![
+            r.round.to_string(),
+            fnum(r.train_loss as f64, 4),
+            r.eval_loss.map(|x| fnum(x as f64, 4)).unwrap_or_else(|| "-".into()),
+            r.eval_accuracy
+                .map(|x| format!("{:.1}%", x * 100.0))
+                .unwrap_or_else(|| "-".into()),
+            fnum(r.emu_round_s, 2),
+        ]);
+    }
+    println!("{}", rt.render());
+    println!("{}", outcome.history.summary());
+
+    if let Some(path) = args.get("history-out") {
+        std::fs::write(path, outcome.history.to_json().pretty())?;
+        println!("wrote history to {path}");
+    }
+    if let Some(path) = args.get("trace-out") {
+        std::fs::write(path, outcome.trace.to_chrome_json().pretty())?;
+        println!("wrote Chrome trace to {path} (open in chrome://tracing or Perfetto)");
+    }
+    Ok(())
+}
+
+fn cmd_sample(raw: &[String]) -> Result<()> {
+    let specs = vec![
+        OptSpec { name: "n", help: "clients to draw", takes_value: true, default: Some("20") },
+        OptSpec { name: "seed", help: "sampler seed", takes_value: true, default: Some("0") },
+        OptSpec { name: "min-vram", help: "minimum VRAM (GiB)", takes_value: true, default: Some("0") },
+        OptSpec { name: "no-laptop", help: "exclude laptop SKUs", takes_value: false, default: None },
+        OptSpec { name: "help", help: "show help", takes_value: false, default: None },
+    ];
+    let args = Args::parse(&raw[1..], &specs)?;
+    if args.get_bool("help") {
+        println!("{}", render_help("bouquetfl sample-hardware", "draw client hardware", &specs));
+        return Ok(());
+    }
+    let cfg = SamplerConfig {
+        min_vram_gib: args.get_f64("min-vram")?.unwrap(),
+        exclude_laptop: args.get_bool("no-laptop"),
+        ..Default::default()
+    };
+    let mut sampler = HardwareSampler::new(args.get_u64("seed")?.unwrap(), cfg)?;
+    let n = args.get_u64("n")?.unwrap() as usize;
+    let mut t = Table::new(&["#", "GPU", "TFLOPs", "VRAM", "CPU", "cores", "RAM"]).aligns(&[
+        Align::Right,
+        Align::Left,
+        Align::Right,
+        Align::Right,
+        Align::Left,
+        Align::Right,
+        Align::Right,
+    ]);
+    for i in 0..n {
+        let p = sampler.sample();
+        t.row(vec![
+            i.to_string(),
+            p.gpu.name.to_string(),
+            fnum(p.gpu.peak_fp32_tflops(), 1),
+            format!("{} GiB", p.gpu.vram_gib),
+            p.cpu.name.to_string(),
+            p.cpu.cores.to_string(),
+            format!("{} GiB", p.ram.gib),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_fig2(raw: &[String]) -> Result<()> {
+    let specs = vec![
+        OptSpec { name: "batch", help: "training batch size", takes_value: true, default: Some("32") },
+        OptSpec { name: "mode", help: "host (MPS restriction) | device (direct model)", takes_value: true, default: Some("host") },
+        OptSpec { name: "csv", help: "emit CSV instead of tables", takes_value: false, default: None },
+        OptSpec { name: "help", help: "show help", takes_value: false, default: None },
+    ];
+    let args = Args::parse(&raw[1..], &specs)?;
+    if args.get_bool("help") {
+        println!("{}", render_help("bouquetfl fig2", "reproduce Fig. 2", &specs));
+        return Ok(());
+    }
+    let mode = match args.get("mode").unwrap() {
+        "device" => EmulationMode::DeviceModel,
+        _ => EmulationMode::HostRestriction,
+    };
+    let cfg = fig2::Fig2Config {
+        batch: args.get_u64("batch")?.unwrap() as u32,
+        mode,
+        ..Default::default()
+    };
+    let result = fig2::run(&cfg).map_err(|e| anyhow::anyhow!(e.to_string()))?;
+    if args.get_bool("csv") {
+        print!("{}", report::fig2_scatter_table(&result).to_csv());
+    } else {
+        println!("{}", report::fig2_scatter_table(&result).render());
+        println!("{}", report::fig2_generation_table(&result.generations()).render());
+    }
+    println!("{}", report::fig2_summary(&result));
+    Ok(())
+}
+
+fn cmd_oom() -> Result<()> {
+    let (table, _) = claims::oom_matrix(claims::OOM_GPUS, claims::OOM_BATCHES);
+    println!("{}", table.render());
+    println!("(ResNet-18/CIFAR training footprint; 'OOM' = exceeds the card's VRAM)");
+    Ok(())
+}
+
+fn cmd_dataloader(raw: &[String]) -> Result<()> {
+    let specs = vec![
+        OptSpec { name: "gpu", help: "GPU slug the loader feeds", takes_value: true, default: Some("rtx-4070-super") },
+        OptSpec { name: "batch", help: "batch size", takes_value: true, default: Some("32") },
+        OptSpec { name: "help", help: "show help", takes_value: false, default: None },
+    ];
+    let args = Args::parse(&raw[1..], &specs)?;
+    if args.get_bool("help") {
+        println!("{}", render_help("bouquetfl dataloader", "CPU loading sweep", &specs));
+        return Ok(());
+    }
+    let (table, _) =
+        claims::dataloader_sweep(args.get("gpu").unwrap(), args.get_u64("batch")?.unwrap() as u32);
+    println!("{}", table.render());
+    Ok(())
+}
+
+fn cmd_ram(raw: &[String]) -> Result<()> {
+    let specs = vec![
+        OptSpec { name: "dataset-gib", help: "client dataset size (GiB)", takes_value: true, default: Some("12") },
+        OptSpec { name: "help", help: "show help", takes_value: false, default: None },
+    ];
+    let args = Args::parse(&raw[1..], &specs)?;
+    if args.get_bool("help") {
+        println!("{}", render_help("bouquetfl ram", "RAM-size sweep", &specs));
+        return Ok(());
+    }
+    let (table, _) = claims::ram_sweep(args.get_f64("dataset-gib")?.unwrap());
+    println!("{}", table.render());
+    Ok(())
+}
+
+fn cmd_list_hw(raw: &[String]) -> Result<()> {
+    let specs = vec![
+        OptSpec { name: "gpus", help: "list GPUs", takes_value: false, default: None },
+        OptSpec { name: "cpus", help: "list CPUs", takes_value: false, default: None },
+        OptSpec { name: "presets", help: "list profile presets", takes_value: false, default: None },
+        OptSpec { name: "help", help: "show help", takes_value: false, default: None },
+    ];
+    let args = Args::parse(&raw[1..], &specs)?;
+    if args.get_bool("help") {
+        println!("{}", render_help("bouquetfl list-hw", "list hardware databases", &specs));
+        return Ok(());
+    }
+    let all = !(args.get_bool("gpus") || args.get_bool("cpus") || args.get_bool("presets"));
+    if all || args.get_bool("gpus") {
+        let mut t = Table::new(&["slug", "name", "arch", "cores", "boost MHz", "VRAM", "BW GB/s", "TFLOPs"]).aligns(&[
+            Align::Left, Align::Left, Align::Left, Align::Right, Align::Right, Align::Right, Align::Right, Align::Right,
+        ]);
+        for g in GPU_DB {
+            t.row(vec![
+                g.slug.into(),
+                g.name.into(),
+                g.arch.label().into(),
+                g.cuda_cores.to_string(),
+                g.boost_clock_mhz.to_string(),
+                format!("{}", g.vram_gib),
+                fnum(g.mem_bw_gbs, 0),
+                fnum(g.peak_fp32_tflops(), 1),
+            ]);
+        }
+        println!("{}", t.render());
+    }
+    if all || args.get_bool("cpus") {
+        let mut t = Table::new(&["slug", "name", "cores", "threads", "boost MHz", "IPC idx"]).aligns(&[
+            Align::Left, Align::Left, Align::Right, Align::Right, Align::Right, Align::Right,
+        ]);
+        for c in CPU_DB {
+            t.row(vec![
+                c.slug.into(),
+                c.name.into(),
+                c.cores.to_string(),
+                c.threads.to_string(),
+                c.boost_clock_mhz.to_string(),
+                fnum(c.ipc_index, 2),
+            ]);
+        }
+        println!("{}", t.render());
+    }
+    if all || args.get_bool("presets") {
+        for name in PRESET_NAMES {
+            println!("{}", preset(name).unwrap().describe());
+        }
+        let _ = HardwareProfile::paper_host();
+    }
+    Ok(())
+}

@@ -1,0 +1,57 @@
+//! Cost descriptor for the *executed* model (the compact CNN that the
+//! AOT-compiled HLO actually trains — DESIGN.md §7).  Must stay in sync
+//! with `python/compile/model.py` (`PARAM_SPECS`); the runtime cross-checks
+//! the parameter count against `artifacts/manifest.json` at load time.
+
+use super::layer::*;
+
+/// Parameter count of the executed CNN (mirrors model.NUM_PARAMS).
+pub const CNN_NUM_PARAMS: u64 = 549_290;
+
+/// The executed CNN on 32x32x3 inputs:
+/// conv3x3(3→16)/relu/pool → conv3x3(16→32)/relu/pool → conv3x3(32→64)/relu
+/// → dense(4096→128)/relu → dense(128→10).
+pub fn small_cnn() -> WorkloadCost {
+    let mut layers = Vec::new();
+    layers.push(conv("conv1", 32, 32, 3, 16, 3, 32, 32));
+    layers.push(activation("relu1", 32 * 32 * 16));
+    layers.push(pool("pool1", 16, 16, 16, 2));
+    layers.push(conv("conv2", 16, 16, 16, 32, 3, 16, 16));
+    layers.push(activation("relu2", 16 * 16 * 32));
+    layers.push(pool("pool2", 8, 8, 32, 2));
+    layers.push(conv("conv3", 8, 8, 32, 64, 3, 8, 8));
+    layers.push(activation("relu3", 8 * 8 * 64));
+    layers.push(dense("fc1", 8 * 8 * 64, 128));
+    layers.push(activation("relu4", 128));
+    layers.push(dense("fc2", 128, 10));
+    WorkloadCost {
+        name: "small-cnn".into(),
+        layers,
+        input_bytes: 4.0 * 32.0 * 32.0 * 3.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn params_match_python_model() {
+        assert_eq!(small_cnn().params(), CNN_NUM_PARAMS);
+    }
+
+    #[test]
+    fn fc1_dominates_flops() {
+        // The Pallas dense kernel (fc1) is the single largest dense layer...
+        let w = small_cnn();
+        let fc1 = w.layers.iter().find(|l| l.name == "fc1").unwrap();
+        assert!(fc1.params > w.params() / 2, "fc1 holds most parameters");
+    }
+
+    #[test]
+    fn cheaper_than_resnet() {
+        let cnn = small_cnn().flops_step(32);
+        let rn = super::super::resnet::resnet18_cifar().flops_step(32);
+        assert!(cnn < rn / 10.0, "cnn {cnn} vs resnet {rn}");
+    }
+}

@@ -1,0 +1,222 @@
+//! Per-layer cost descriptors: FLOPs, memory traffic, activation footprint.
+//!
+//! All quantities are *per sample*; batch scaling happens in the consumers
+//! (`emu::gputime`, `emu::vram`).  The backward pass is modelled with the
+//! standard factors (≈2x forward FLOPs: one matmul-like pass for dX, one
+//! for dW).
+
+/// The kind of compute a layer performs (drives per-kind efficiency factors
+/// in the roofline model — convs achieve higher MXU/SM utilisation than
+/// elementwise ops).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerKind {
+    Conv,
+    Dense,
+    Pool,
+    Norm,
+    Activation,
+    Elementwise,
+}
+
+/// Cost of one layer, per sample, in fp32.
+#[derive(Debug, Clone)]
+pub struct LayerCost {
+    pub name: String,
+    pub kind: LayerKind,
+    /// Forward FLOPs per sample.
+    pub flops_fwd: f64,
+    /// Forward HBM traffic per sample (read input + weights, write output).
+    pub bytes_fwd: f64,
+    /// Activation bytes stored for the backward pass, per sample.
+    pub act_bytes: f64,
+    /// Parameter count (weights + biases).
+    pub params: u64,
+}
+
+impl LayerCost {
+    /// Backward FLOPs (dX + dW passes ≈ 2x forward for parametric layers,
+    /// ≈ 1x for parameter-free layers which only propagate dX).
+    pub fn flops_bwd(&self) -> f64 {
+        if self.params > 0 {
+            2.0 * self.flops_fwd
+        } else {
+            self.flops_fwd
+        }
+    }
+
+    /// Backward HBM traffic (reads stored activations + incoming grads,
+    /// writes outgoing grads + weight grads).
+    pub fn bytes_bwd(&self) -> f64 {
+        2.0 * self.bytes_fwd
+    }
+}
+
+/// A full workload (model) as a layer list.
+#[derive(Debug, Clone)]
+pub struct WorkloadCost {
+    pub name: String,
+    pub layers: Vec<LayerCost>,
+    /// Per-sample input bytes (for host->device transfer modelling).
+    pub input_bytes: f64,
+}
+
+impl WorkloadCost {
+    pub fn params(&self) -> u64 {
+        self.layers.iter().map(|l| l.params).sum()
+    }
+
+    pub fn weight_bytes(&self) -> u64 {
+        self.params() * 4
+    }
+
+    /// Forward FLOPs for a whole batch.
+    pub fn flops_fwd(&self, batch: u32) -> f64 {
+        batch as f64 * self.layers.iter().map(|l| l.flops_fwd).sum::<f64>()
+    }
+
+    /// FLOPs of one full training step (fwd + bwd) for a batch.
+    pub fn flops_step(&self, batch: u32) -> f64 {
+        batch as f64
+            * self
+                .layers
+                .iter()
+                .map(|l| l.flops_fwd + l.flops_bwd())
+                .sum::<f64>()
+    }
+
+    /// Peak activation bytes that must be resident for backward, per batch.
+    pub fn activation_bytes(&self, batch: u32) -> u64 {
+        (batch as f64 * self.layers.iter().map(|l| l.act_bytes).sum::<f64>()) as u64
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Builders
+// ---------------------------------------------------------------------------
+
+/// A conv layer `k x k`, `cin -> cout`, producing `hout x wout`.
+/// FLOPs = 2 * Hout * Wout * Cout * Cin * k².
+pub fn conv(
+    name: &str,
+    hout: u32,
+    wout: u32,
+    cin: u32,
+    cout: u32,
+    k: u32,
+    hin: u32,
+    win: u32,
+) -> LayerCost {
+    let out_elems = (hout * wout * cout) as f64;
+    let in_elems = (hin * win * cin) as f64;
+    let weights = (cin * cout * k * k + cout) as u64;
+    LayerCost {
+        name: name.to_string(),
+        kind: LayerKind::Conv,
+        flops_fwd: 2.0 * out_elems * (cin * k * k) as f64,
+        bytes_fwd: 4.0 * (in_elems + out_elems + weights as f64),
+        act_bytes: 4.0 * in_elems, // store inputs for dW
+        params: weights,
+    }
+}
+
+/// A dense layer `din -> dout`.
+pub fn dense(name: &str, din: u32, dout: u32) -> LayerCost {
+    let weights = (din * dout + dout) as u64;
+    LayerCost {
+        name: name.to_string(),
+        kind: LayerKind::Dense,
+        flops_fwd: 2.0 * (din * dout) as f64,
+        bytes_fwd: 4.0 * (din as f64 + dout as f64 + weights as f64),
+        act_bytes: 4.0 * din as f64,
+        params: weights,
+    }
+}
+
+/// A pooling layer over `hout x wout x c` output (window `k`).
+pub fn pool(name: &str, hout: u32, wout: u32, c: u32, k: u32) -> LayerCost {
+    let out_elems = (hout * wout * c) as f64;
+    LayerCost {
+        name: name.to_string(),
+        kind: LayerKind::Pool,
+        flops_fwd: out_elems * (k * k) as f64,
+        bytes_fwd: 4.0 * (out_elems * (k * k) as f64 + out_elems),
+        act_bytes: 4.0 * out_elems, // indices/inputs for backward
+        params: 0,
+    }
+}
+
+/// BatchNorm over `elems` elements (~8 FLOPs/elem fwd incl. stats).
+pub fn batchnorm(name: &str, elems: u32, channels: u32) -> LayerCost {
+    LayerCost {
+        name: name.to_string(),
+        kind: LayerKind::Norm,
+        flops_fwd: 8.0 * elems as f64,
+        bytes_fwd: 4.0 * 2.0 * elems as f64,
+        act_bytes: 4.0 * elems as f64,
+        params: 2 * channels as u64,
+    }
+}
+
+/// ReLU (or similar) over `elems` elements.
+pub fn activation(name: &str, elems: u32) -> LayerCost {
+    LayerCost {
+        name: name.to_string(),
+        kind: LayerKind::Activation,
+        flops_fwd: elems as f64,
+        bytes_fwd: 4.0 * 2.0 * elems as f64,
+        act_bytes: 4.0 * elems as f64, // mask
+        params: 0,
+    }
+}
+
+/// Residual add over `elems` elements.
+pub fn residual_add(name: &str, elems: u32) -> LayerCost {
+    LayerCost {
+        name: name.to_string(),
+        kind: LayerKind::Elementwise,
+        flops_fwd: elems as f64,
+        bytes_fwd: 4.0 * 3.0 * elems as f64,
+        act_bytes: 0.0,
+        params: 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_flops_formula() {
+        // 3x3 conv, 16->32, 16x16 out: 2*16*16*32*16*9 = 4.718592e6 * ... compute:
+        let l = conv("c", 16, 16, 16, 32, 3, 16, 16);
+        assert_eq!(l.flops_fwd, 2.0 * (16.0 * 16.0 * 32.0) * (16.0 * 9.0));
+        assert_eq!(l.params, 16 * 32 * 9 + 32);
+        assert_eq!(l.flops_bwd(), 2.0 * l.flops_fwd);
+    }
+
+    #[test]
+    fn dense_flops_formula() {
+        let l = dense("fc", 4096, 128);
+        assert_eq!(l.flops_fwd, 2.0 * 4096.0 * 128.0);
+        assert_eq!(l.params, 4096 * 128 + 128);
+    }
+
+    #[test]
+    fn paramfree_layers_cheaper_backward() {
+        let p = pool("p", 8, 8, 16, 2);
+        assert_eq!(p.flops_bwd(), p.flops_fwd);
+        assert_eq!(p.params, 0);
+    }
+
+    #[test]
+    fn workload_scaling_linear_in_batch() {
+        let w = WorkloadCost {
+            name: "t".into(),
+            layers: vec![dense("a", 100, 100), activation("r", 100)],
+            input_bytes: 400.0,
+        };
+        assert_eq!(w.flops_fwd(2), 2.0 * w.flops_fwd(1));
+        assert_eq!(w.flops_step(4), 2.0 * w.flops_step(2));
+        assert_eq!(w.activation_bytes(8), 8 * w.activation_bytes(1));
+    }
+}

@@ -1,0 +1,38 @@
+//! MLP cost descriptor — a light workload for dataloader-bound studies
+//! (tiny compute makes the CPU loading path the bottleneck by design).
+
+use super::layer::*;
+
+/// 3-layer MLP over flattened 32x32x3 inputs.
+pub fn mlp(hidden: u32) -> WorkloadCost {
+    let din = 32 * 32 * 3;
+    let layers = vec![
+        dense("fc1", din, hidden),
+        activation("relu1", hidden),
+        dense("fc2", hidden, hidden / 2),
+        activation("relu2", hidden / 2),
+        dense("fc3", hidden / 2, 10),
+    ];
+    WorkloadCost {
+        name: format!("mlp-{hidden}"),
+        layers,
+        input_bytes: 4.0 * din as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_count() {
+        let w = mlp(256);
+        let expected = (3072 * 256 + 256) + (256 * 128 + 128) + (128 * 10 + 10);
+        assert_eq!(w.params(), expected as u64);
+    }
+
+    #[test]
+    fn scales_with_hidden() {
+        assert!(mlp(512).flops_fwd(1) > mlp(128).flops_fwd(1));
+    }
+}

@@ -1,0 +1,13 @@
+//! Workload cost descriptors: per-layer FLOP/byte/activation accounting for
+//! the models whose *timing* is emulated (ResNet-18 for Fig. 2, the executed
+//! CNN, an MLP for loader-bound studies).
+
+pub mod cnn;
+pub mod layer;
+pub mod mlp;
+pub mod resnet;
+
+pub use cnn::{small_cnn, CNN_NUM_PARAMS};
+pub use layer::{LayerCost, LayerKind, WorkloadCost};
+pub use mlp::mlp;
+pub use resnet::{resnet18_cifar, resnet18_imagenet};

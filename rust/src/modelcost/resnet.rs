@@ -1,0 +1,147 @@
+//! ResNet-18 cost descriptor — the paper's Fig. 2 workload ("training times
+//! of a ResNet-18 model by heterogeneous clients").
+//!
+//! Two variants: the ImageNet stem (224x224 input, 7x7/s2 stem + maxpool)
+//! and the CIFAR stem commonly used in FL studies (32x32 input, 3x3/s1
+//! stem, no maxpool).  Only relative timing across GPUs matters for Fig. 2;
+//! both variants produce the same ordering, but we default to the CIFAR
+//! variant, matching typical FL experimental setups.
+
+use super::layer::*;
+
+struct Builder {
+    layers: Vec<LayerCost>,
+    h: u32,
+    w: u32,
+    c: u32,
+}
+
+impl Builder {
+    fn conv_bn_relu(&mut self, name: &str, cout: u32, k: u32, stride: u32) {
+        let (hin, win, cin) = (self.h, self.w, self.c);
+        let hout = hin.div_ceil(stride);
+        let wout = win.div_ceil(stride);
+        self.layers.push(conv(name, hout, wout, cin, cout, k, hin, win));
+        let elems = hout * wout * cout;
+        self.layers.push(batchnorm(&format!("{name}/bn"), elems, cout));
+        self.layers.push(activation(&format!("{name}/relu"), elems));
+        self.h = hout;
+        self.w = wout;
+        self.c = cout;
+    }
+
+    /// One BasicBlock: conv3x3(s) + conv3x3(1) + (optional 1x1 downsample)
+    /// + residual add.
+    fn basic_block(&mut self, name: &str, cout: u32, stride: u32) {
+        let (hin, win, cin) = (self.h, self.w, self.c);
+        self.conv_bn_relu(&format!("{name}/conv1"), cout, 3, stride);
+        // Second conv (no trailing relu before the add; modelled after).
+        let (h2, w2) = (self.h, self.w);
+        self.layers.push(conv(&format!("{name}/conv2"), h2, w2, cout, cout, 3, h2, w2));
+        self.layers.push(batchnorm(&format!("{name}/bn2"), h2 * w2 * cout, cout));
+        if stride != 1 || cin != cout {
+            self.layers.push(conv(
+                &format!("{name}/downsample"),
+                h2,
+                w2,
+                cin,
+                cout,
+                1,
+                hin,
+                win,
+            ));
+            self.layers
+                .push(batchnorm(&format!("{name}/downsample-bn"), h2 * w2 * cout, cout));
+        }
+        let elems = h2 * w2 * cout;
+        self.layers.push(residual_add(&format!("{name}/add"), elems));
+        self.layers.push(activation(&format!("{name}/relu2"), elems));
+    }
+}
+
+fn resnet18_body(mut b: Builder, input_bytes: f64, name: &str) -> WorkloadCost {
+    for (stage, (cout, stride)) in [(64u32, 1u32), (128, 2), (256, 2), (512, 2)]
+        .iter()
+        .enumerate()
+    {
+        b.basic_block(&format!("layer{}.0", stage + 1), *cout, *stride);
+        b.basic_block(&format!("layer{}.1", stage + 1), *cout, 1);
+    }
+    // Global average pool + classifier.
+    let elems = b.h * b.w * b.c;
+    b.layers.push(pool("avgpool", 1, 1, b.c, b.h));
+    let _ = elems;
+    b.layers.push(dense("fc", b.c, 1000.min(if name.contains("cifar") { 10 } else { 1000 })));
+    WorkloadCost { name: name.to_string(), layers: b.layers, input_bytes }
+}
+
+/// ResNet-18 with the ImageNet stem (224x224x3 input, 1000 classes).
+pub fn resnet18_imagenet() -> WorkloadCost {
+    let mut b = Builder { layers: Vec::new(), h: 224, w: 224, c: 3 };
+    // 7x7/s2 stem.
+    b.conv_bn_relu("stem", 64, 7, 2);
+    // 3x3/s2 maxpool.
+    let (h, w) = (b.h / 2, b.w / 2);
+    b.layers.push(pool("maxpool", h, w, 64, 3));
+    b.h = h;
+    b.w = w;
+    resnet18_body(b, 4.0 * 224.0 * 224.0 * 3.0, "resnet18-imagenet")
+}
+
+/// ResNet-18 with the CIFAR stem (32x32x3 input, 10 classes) — the default
+/// Fig. 2 workload.
+pub fn resnet18_cifar() -> WorkloadCost {
+    let mut b = Builder { layers: Vec::new(), h: 32, w: 32, c: 3 };
+    b.conv_bn_relu("stem", 64, 3, 1);
+    resnet18_body(b, 4.0 * 32.0 * 32.0 * 3.0, "resnet18-cifar")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn imagenet_params_match_published_value() {
+        // torchvision resnet18: 11,689,512 params. Our descriptor counts
+        // conv+bn+fc; allow 1% slack for bookkeeping differences.
+        let w = resnet18_imagenet();
+        let p = w.params() as f64;
+        assert!((p - 11_689_512.0).abs() / 11_689_512.0 < 0.01, "{p}");
+    }
+
+    #[test]
+    fn imagenet_flops_match_published_value() {
+        // Published cost: ~1.82 GMACs per 224x224 image = ~3.64 GFLOPs
+        // at 2 FLOPs/MAC, plus small BN/pool overhead.
+        let w = resnet18_imagenet();
+        let gf = w.flops_fwd(1) / 1e9;
+        assert!((3.3..4.1).contains(&gf), "{gf} GFLOPs");
+    }
+
+    #[test]
+    fn cifar_variant_much_cheaper() {
+        let c = resnet18_cifar().flops_fwd(1);
+        let i = resnet18_imagenet().flops_fwd(1);
+        assert!(c < i / 2.5);
+        // CIFAR resnet-18 keeps full channel widths on 32x32 inputs:
+        // ~1.1 GFLOPs fwd (2 FLOPs/MAC).
+        let gf = c / 1e9;
+        assert!((0.8..1.5).contains(&gf), "{gf}");
+    }
+
+    #[test]
+    fn step_flops_roughly_3x_forward() {
+        let w = resnet18_cifar();
+        let ratio = w.flops_step(32) / w.flops_fwd(32);
+        assert!((2.5..3.1).contains(&ratio), "{ratio}");
+    }
+
+    #[test]
+    fn activation_memory_grows_with_batch() {
+        let w = resnet18_cifar();
+        assert!(w.activation_bytes(64) == 2 * w.activation_bytes(32));
+        // At batch 32, CIFAR ResNet-18 activations are tens of MB.
+        let mb = w.activation_bytes(32) as f64 / 1024.0 / 1024.0;
+        assert!((10.0..500.0).contains(&mb), "{mb} MB");
+    }
+}

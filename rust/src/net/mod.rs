@@ -1,0 +1,97 @@
+//! Network heterogeneity model — the paper's announced future work
+//! ("Future development includes incorporating network latency simulation"),
+//! implemented as an extension (DESIGN.md §Substitutions).
+//!
+//! Each client gets an uplink/downlink bandwidth + latency profile; a round
+//! adds `download(model) + upload(update)` to the client's emulated time.
+
+use crate::util::rng::Pcg;
+
+/// A client's network link.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NetworkProfile {
+    pub name: &'static str,
+    /// Downlink Mbit/s.
+    pub down_mbps: f64,
+    /// Uplink Mbit/s.
+    pub up_mbps: f64,
+    /// One-way latency, milliseconds.
+    pub latency_ms: f64,
+}
+
+/// Common consumer link classes.
+pub static NET_TIERS: &[(NetworkProfile, f64)] = &[
+    (NetworkProfile { name: "fiber", down_mbps: 500.0, up_mbps: 250.0, latency_ms: 5.0 }, 22.0),
+    (NetworkProfile { name: "cable", down_mbps: 150.0, up_mbps: 20.0, latency_ms: 15.0 }, 38.0),
+    (NetworkProfile { name: "dsl", down_mbps: 40.0, up_mbps: 8.0, latency_ms: 25.0 }, 18.0),
+    (NetworkProfile { name: "lte", down_mbps: 30.0, up_mbps: 10.0, latency_ms: 45.0 }, 17.0),
+    (NetworkProfile { name: "satellite", down_mbps: 80.0, up_mbps: 10.0, latency_ms: 600.0 }, 5.0),
+];
+
+impl NetworkProfile {
+    /// Seconds to download `bytes` from the server.
+    pub fn download_s(&self, bytes: u64) -> f64 {
+        self.latency_ms / 1000.0 + bytes as f64 * 8.0 / (self.down_mbps * 1e6)
+    }
+
+    /// Seconds to upload `bytes` to the server.
+    pub fn upload_s(&self, bytes: u64) -> f64 {
+        self.latency_ms / 1000.0 + bytes as f64 * 8.0 / (self.up_mbps * 1e6)
+    }
+
+    /// Full round-trip communication cost for one FL round (download global
+    /// model, upload update; both are the flat parameter vector).
+    pub fn round_comm_s(&self, model_bytes: u64) -> f64 {
+        self.download_s(model_bytes) + self.upload_s(model_bytes)
+    }
+}
+
+/// Sample a network tier from the popularity-weighted tier list.
+pub fn sample_network(rng: &mut Pcg) -> NetworkProfile {
+    let weights: Vec<f64> = NET_TIERS.iter().map(|(_, w)| *w).collect();
+    NET_TIERS[rng.weighted(&weights)].0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MB: u64 = 1024 * 1024;
+
+    #[test]
+    fn fiber_faster_than_lte() {
+        let fiber = NET_TIERS[0].0;
+        let lte = NET_TIERS[3].0;
+        assert!(fiber.round_comm_s(10 * MB) < lte.round_comm_s(10 * MB));
+    }
+
+    #[test]
+    fn upload_dominates_on_asymmetric_links() {
+        let cable = NET_TIERS[1].0; // 150/20
+        assert!(cable.upload_s(10 * MB) > 3.0 * cable.download_s(10 * MB));
+    }
+
+    #[test]
+    fn latency_floor() {
+        let sat = NET_TIERS[4].0;
+        assert!(sat.download_s(0) >= 0.6);
+    }
+
+    #[test]
+    fn sampler_draws_all_tiers_eventually() {
+        let mut rng = Pcg::seeded(0);
+        let mut seen = std::collections::BTreeSet::new();
+        for _ in 0..2000 {
+            seen.insert(sample_network(&mut rng).name);
+        }
+        assert_eq!(seen.len(), NET_TIERS.len());
+    }
+
+    #[test]
+    fn model_size_scales_cost() {
+        let dsl = NET_TIERS[2].0;
+        let small = dsl.round_comm_s(MB);
+        let big = dsl.round_comm_s(100 * MB);
+        assert!(big > 50.0 * small);
+    }
+}

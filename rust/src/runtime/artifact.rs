@@ -1,0 +1,221 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` (which
+//! writes `artifacts/manifest.json` + `*.hlo.txt`) and the Rust runtime.
+
+use std::path::{Path, PathBuf};
+
+use crate::error::RuntimeError;
+use crate::util::json::Json;
+
+/// One lowered HLO module.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: String,
+    /// "init" | "train" | "train_prox" | "train_scan" | "eval" | "aggregate".
+    pub kind: String,
+    pub batch: Option<u32>,
+    pub k: Option<u32>,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub num_params: usize,
+    pub image_hw: usize,
+    pub image_c: usize,
+    pub num_classes: usize,
+    /// (name, shape) of each parameter tensor, flat-vector order.
+    pub param_specs: Vec<(String, Vec<usize>)>,
+    pub artifacts: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest, RuntimeError> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            RuntimeError::Manifest(format!(
+                "cannot read {} — run `make artifacts` first ({e})",
+                path.display()
+            ))
+        })?;
+        let root = Json::parse(&text).map_err(RuntimeError::Manifest)?;
+
+        let req_usize = |key: &str| {
+            root.get(key)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| RuntimeError::Manifest(format!("missing numeric '{key}'")))
+        };
+        let num_params = req_usize("num_params")?;
+        let image_hw = req_usize("image_hw")?;
+        let image_c = req_usize("image_c")?;
+        let num_classes = req_usize("num_classes")?;
+
+        let mut param_specs = Vec::new();
+        for spec in root
+            .get("param_specs")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| RuntimeError::Manifest("missing param_specs".into()))?
+        {
+            let name = spec
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| RuntimeError::Manifest("param spec missing name".into()))?;
+            let shape: Vec<usize> = spec
+                .get("shape")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| RuntimeError::Manifest("param spec missing shape".into()))?
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect();
+            param_specs.push((name.to_string(), shape));
+        }
+        // Cross-check: shapes must account for exactly num_params.
+        let total: usize = param_specs
+            .iter()
+            .map(|(_, s)| s.iter().product::<usize>())
+            .sum();
+        if total != num_params {
+            return Err(RuntimeError::Manifest(format!(
+                "param_specs total {total} != num_params {num_params}"
+            )));
+        }
+
+        let mut artifacts = Vec::new();
+        for a in root
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| RuntimeError::Manifest("missing artifacts".into()))?
+        {
+            let gets = |k: &str| a.get(k).and_then(Json::as_str).map(String::from);
+            artifacts.push(ArtifactEntry {
+                name: gets("name")
+                    .ok_or_else(|| RuntimeError::Manifest("artifact missing name".into()))?,
+                file: gets("file")
+                    .ok_or_else(|| RuntimeError::Manifest("artifact missing file".into()))?,
+                kind: gets("kind")
+                    .ok_or_else(|| RuntimeError::Manifest("artifact missing kind".into()))?,
+                batch: a.get("batch").and_then(Json::as_u64).map(|x| x as u32),
+                k: a.get("k").and_then(Json::as_u64).map(|x| x as u32),
+            });
+        }
+
+        Ok(Manifest {
+            dir,
+            num_params,
+            image_hw,
+            image_c,
+            num_classes,
+            param_specs,
+            artifacts,
+        })
+    }
+
+    /// Absolute path of an artifact file.
+    pub fn path_of(&self, entry: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+
+    /// Find by kind (+ optional batch / k).
+    pub fn find(&self, kind: &str, batch: Option<u32>, k: Option<u32>) -> Option<&ArtifactEntry> {
+        self.artifacts.iter().find(|a| {
+            a.kind == kind
+                && (batch.is_none() || a.batch == batch)
+                && (k.is_none() || a.k == k)
+        })
+    }
+
+    /// All batch sizes available for a kind.
+    pub fn batches_for(&self, kind: &str) -> Vec<u32> {
+        let mut v: Vec<u32> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == kind)
+            .filter_map(|a| a.batch)
+            .collect();
+        v.sort();
+        v
+    }
+
+    /// All aggregation fan-ins available.
+    pub fn agg_ks(&self) -> Vec<u32> {
+        let mut v: Vec<u32> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == "aggregate")
+            .filter_map(|a| a.k)
+            .collect();
+        v.sort();
+        v
+    }
+}
+
+/// Default artifacts directory: `$BOUQUET_ARTIFACTS` or `./artifacts`.
+pub fn default_dir() -> PathBuf {
+    std::env::var("BOUQUET_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, text: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("bouquet-manifest-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    const GOOD: &str = r#"{
+      "num_params": 6,
+      "image_hw": 2, "image_c": 1, "num_classes": 2,
+      "param_specs": [{"name": "w", "shape": [2, 3]}],
+      "artifacts": [
+        {"name": "train_step_b4", "file": "t.hlo.txt", "kind": "train", "batch": 4},
+        {"name": "aggregate_k8", "file": "a.hlo.txt", "kind": "aggregate", "k": 8}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_and_indexes() {
+        let d = tmpdir("good");
+        write_manifest(&d, GOOD);
+        let m = Manifest::load(&d).unwrap();
+        assert_eq!(m.num_params, 6);
+        assert_eq!(m.find("train", Some(4), None).unwrap().name, "train_step_b4");
+        assert!(m.find("train", Some(8), None).is_none());
+        assert_eq!(m.agg_ks(), vec![8]);
+        assert_eq!(m.batches_for("train"), vec![4]);
+        assert!(m.path_of(&m.artifacts[0]).ends_with("t.hlo.txt"));
+    }
+
+    #[test]
+    fn rejects_inconsistent_param_total() {
+        let d = tmpdir("bad");
+        write_manifest(&d, &GOOD.replace("\"num_params\": 6", "\"num_params\": 7"));
+        assert!(matches!(Manifest::load(&d), Err(RuntimeError::Manifest(_))));
+    }
+
+    #[test]
+    fn missing_file_mentions_make_artifacts() {
+        let err = Manifest::load(tmpdir("missing")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn real_repo_manifest_if_present() {
+        if let Ok(m) = Manifest::load("artifacts") {
+            assert_eq!(m.num_params, crate::modelcost::CNN_NUM_PARAMS as usize);
+            assert!(m.find("init", None, None).is_some());
+            assert!(!m.batches_for("train").is_empty());
+        }
+    }
+}

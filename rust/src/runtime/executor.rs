@@ -1,0 +1,249 @@
+//! Typed model executor: the high-level operations the FL layer calls
+//! (init / train / eval / aggregate), mapped onto the AOT artifacts.
+
+use std::path::Path;
+
+use crate::error::RuntimeError;
+use crate::fl::params::ParamVector;
+
+use super::pjrt::{
+    literal_f32, literal_i32, scalar_f32, scalar_i32, to_scalar_f32, to_vec_f32, PjrtRuntime,
+};
+
+/// High-level executor over the artifact set.
+pub struct ModelExecutor {
+    rt: PjrtRuntime,
+}
+
+impl ModelExecutor {
+    pub fn new(dir: impl AsRef<Path>) -> Result<Self, RuntimeError> {
+        Ok(ModelExecutor { rt: PjrtRuntime::new(dir)? })
+    }
+
+    pub fn runtime(&mut self) -> &mut PjrtRuntime {
+        &mut self.rt
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.rt.manifest.num_params
+    }
+
+    pub fn image_dims(&self) -> (usize, usize) {
+        (self.rt.manifest.image_hw, self.rt.manifest.image_c)
+    }
+
+    /// Pre-compile all artifacts.
+    pub fn warm_up(&mut self) -> Result<(), RuntimeError> {
+        self.rt.warm_up()
+    }
+
+    /// Batch sizes with a compiled single-step training artifact.
+    pub fn train_batches(&self) -> Vec<u32> {
+        self.rt.manifest.batches_for("train")
+    }
+
+    fn image_elems(&self, batch: u32) -> usize {
+        let m = &self.rt.manifest;
+        batch as usize * m.image_hw * m.image_hw * m.image_c
+    }
+
+    fn check_params(&self, params: &ParamVector) -> Result<(), RuntimeError> {
+        if params.len() != self.num_params() {
+            return Err(RuntimeError::Shape {
+                artifact: "<params>".into(),
+                detail: format!("expected {} params, got {}", self.num_params(), params.len()),
+            });
+        }
+        Ok(())
+    }
+
+    fn batch_literals(
+        &self,
+        x: &[f32],
+        y: &[i32],
+        batch: u32,
+    ) -> Result<(xla::Literal, xla::Literal), RuntimeError> {
+        let m = &self.rt.manifest;
+        if x.len() != self.image_elems(batch) || y.len() != batch as usize {
+            return Err(RuntimeError::Shape {
+                artifact: "<batch>".into(),
+                detail: format!(
+                    "batch {batch}: got {} image floats / {} labels",
+                    x.len(),
+                    y.len()
+                ),
+            });
+        }
+        let xd = [batch as i64, m.image_hw as i64, m.image_hw as i64, m.image_c as i64];
+        Ok((literal_f32(x, &xd)?, literal_i32(y, &[batch as i64])?))
+    }
+
+    /// Initialise parameters from a seed (the `init_params` artifact).
+    pub fn init_params(&mut self, seed: i32) -> Result<ParamVector, RuntimeError> {
+        let out = self.rt.exec("init_params", &[scalar_i32(seed)])?;
+        Ok(ParamVector::from_vec(to_vec_f32(&out[0])?))
+    }
+
+    /// One SGD step; returns (new params, loss).
+    pub fn train_step(
+        &mut self,
+        params: &ParamVector,
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+        batch: u32,
+    ) -> Result<(ParamVector, f32), RuntimeError> {
+        self.check_params(params)?;
+        let name = self
+            .rt
+            .manifest
+            .find("train", Some(batch), None)
+            .ok_or_else(|| {
+                RuntimeError::ArtifactNotFound(format!("train artifact for batch {batch}"))
+            })?
+            .name
+            .clone();
+        let p = literal_f32(params.as_slice(), &[params.len() as i64])?;
+        let (xl, yl) = self.batch_literals(x, y, batch)?;
+        let out = self.rt.exec(&name, &[p, xl, yl, scalar_f32(lr)])?;
+        Ok((
+            ParamVector::from_vec(to_vec_f32(&out[0])?),
+            to_scalar_f32(&out[1])?,
+        ))
+    }
+
+    /// One FedProx step (adds the proximal pull toward `global`).
+    #[allow(clippy::too_many_arguments)]
+    pub fn train_step_prox(
+        &mut self,
+        params: &ParamVector,
+        global: &ParamVector,
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+        mu: f32,
+        batch: u32,
+    ) -> Result<(ParamVector, f32), RuntimeError> {
+        self.check_params(params)?;
+        self.check_params(global)?;
+        let name = self
+            .rt
+            .manifest
+            .find("train_prox", Some(batch), None)
+            .ok_or_else(|| {
+                RuntimeError::ArtifactNotFound(format!("train_prox artifact for batch {batch}"))
+            })?
+            .name
+            .clone();
+        let p = literal_f32(params.as_slice(), &[params.len() as i64])?;
+        let g = literal_f32(global.as_slice(), &[global.len() as i64])?;
+        let (xl, yl) = self.batch_literals(x, y, batch)?;
+        let out = self
+            .rt
+            .exec(&name, &[p, g, xl, yl, scalar_f32(lr), scalar_f32(mu)])?;
+        Ok((
+            ParamVector::from_vec(to_vec_f32(&out[0])?),
+            to_scalar_f32(&out[1])?,
+        ))
+    }
+
+    /// K fused local steps in ONE PJRT call (`lax.scan` artifact).
+    /// `xs`/`ys` are K stacked batches. Returns (new params, mean loss).
+    pub fn train_steps_fused(
+        &mut self,
+        params: &ParamVector,
+        xs: &[f32],
+        ys: &[i32],
+        lr: f32,
+        k: u32,
+        batch: u32,
+    ) -> Result<(ParamVector, f32), RuntimeError> {
+        self.check_params(params)?;
+        let m = &self.rt.manifest;
+        let name = m
+            .find("train_scan", Some(batch), Some(k))
+            .ok_or_else(|| {
+                RuntimeError::ArtifactNotFound(format!("train_scan k={k} batch={batch}"))
+            })?
+            .name
+            .clone();
+        if xs.len() != k as usize * self.image_elems(batch) || ys.len() != (k * batch) as usize {
+            return Err(RuntimeError::Shape {
+                artifact: name,
+                detail: format!("stacked shapes wrong: {} / {}", xs.len(), ys.len()),
+            });
+        }
+        let hw = self.rt.manifest.image_hw as i64;
+        let c = self.rt.manifest.image_c as i64;
+        let p = literal_f32(params.as_slice(), &[params.len() as i64])?;
+        let xl = literal_f32(xs, &[k as i64, batch as i64, hw, hw, c])?;
+        let yl = literal_i32(ys, &[k as i64, batch as i64])?;
+        let out = self.rt.exec(&name, &[p, xl, yl, scalar_f32(lr)])?;
+        Ok((
+            ParamVector::from_vec(to_vec_f32(&out[0])?),
+            to_scalar_f32(&out[1])?,
+        ))
+    }
+
+    /// Evaluate on one batch; returns (mean loss, correct count).
+    pub fn eval_batch(
+        &mut self,
+        params: &ParamVector,
+        x: &[f32],
+        y: &[i32],
+        batch: u32,
+    ) -> Result<(f32, f32), RuntimeError> {
+        self.check_params(params)?;
+        let name = self
+            .rt
+            .manifest
+            .find("eval", Some(batch), None)
+            .ok_or_else(|| {
+                RuntimeError::ArtifactNotFound(format!("eval artifact for batch {batch}"))
+            })?
+            .name
+            .clone();
+        let p = literal_f32(params.as_slice(), &[params.len() as i64])?;
+        let (xl, yl) = self.batch_literals(x, y, batch)?;
+        let out = self.rt.exec(&name, &[p, xl, yl])?;
+        Ok((to_scalar_f32(&out[0])?, to_scalar_f32(&out[1])?))
+    }
+
+    /// The eval batch size compiled into the artifacts.
+    pub fn eval_batch_size(&self) -> Option<u32> {
+        self.rt.manifest.batches_for("eval").first().copied()
+    }
+
+    /// FedAvg aggregation.  Uses the Pallas HLO artifact when the fan-in
+    /// matches a compiled variant, otherwise falls back to the native Rust
+    /// weighted sum (bit-compatible semantics; see `ParamVector`).
+    pub fn aggregate(
+        &mut self,
+        updates: &[ParamVector],
+        weights: &[f32],
+    ) -> Result<ParamVector, RuntimeError> {
+        assert_eq!(updates.len(), weights.len());
+        assert!(!updates.is_empty());
+        let k = updates.len() as u32;
+        let p = updates[0].len();
+        if self.rt.manifest.find("aggregate", None, Some(k)).is_some() {
+            let name = format!("aggregate_k{k}");
+            let mut stacked = Vec::with_capacity(k as usize * p);
+            for u in updates {
+                if u.len() != p {
+                    return Err(RuntimeError::Shape {
+                        artifact: name,
+                        detail: "ragged update lengths".into(),
+                    });
+                }
+                stacked.extend_from_slice(u.as_slice());
+            }
+            let sl = literal_f32(&stacked, &[k as i64, p as i64])?;
+            let wl = literal_f32(weights, &[k as i64])?;
+            let out = self.rt.exec(&name, &[sl, wl])?;
+            Ok(ParamVector::from_vec(to_vec_f32(&out[0])?))
+        } else {
+            Ok(ParamVector::weighted_sum(updates, weights))
+        }
+    }
+}

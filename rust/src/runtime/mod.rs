@@ -1,0 +1,11 @@
+//! PJRT runtime: artifact manifest, executable cache, and the typed model
+//! executor.  Rust loads the AOT-lowered HLO and serves every training /
+//! eval / aggregation call natively — Python never runs here.
+
+pub mod artifact;
+pub mod executor;
+pub mod pjrt;
+
+pub use artifact::{default_dir, ArtifactEntry, Manifest};
+pub use executor::ModelExecutor;
+pub use pjrt::PjrtRuntime;

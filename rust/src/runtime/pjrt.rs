@@ -1,0 +1,131 @@
+//! PJRT runtime: load HLO-text artifacts, compile once per module on the
+//! CPU client, execute from the L3 hot path.  Python is never involved.
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`): jax >= 0.5
+//! emits protos with 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::error::RuntimeError;
+
+use super::artifact::Manifest;
+
+/// A compiled-executable cache over the artifact set.
+pub struct PjrtRuntime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl PjrtRuntime {
+    /// Create a CPU PJRT client over the artifacts in `dir`.
+    pub fn new(dir: impl AsRef<Path>) -> Result<Self, RuntimeError> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(PjrtRuntime { manifest, client, cache: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) the artifact named `name`.
+    pub fn load(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable, RuntimeError> {
+        if !self.cache.contains_key(name) {
+            let entry = self
+                .manifest
+                .artifacts
+                .iter()
+                .find(|a| a.name == name)
+                .ok_or_else(|| RuntimeError::ArtifactNotFound(name.to_string()))?;
+            let path = self.manifest.path_of(entry);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| {
+                    RuntimeError::Manifest(format!("non-utf8 path {}", path.display()))
+                })?,
+            )?;
+            let computation = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&computation)?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Pre-compile every artifact (startup warm-up; keeps compile jitter out
+    /// of the measured round loop).
+    pub fn warm_up(&mut self) -> Result<(), RuntimeError> {
+        let names: Vec<String> =
+            self.manifest.artifacts.iter().map(|a| a.name.clone()).collect();
+        for name in names {
+            self.load(&name)?;
+        }
+        Ok(())
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn compiled_count(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// Execute artifact `name` with literal inputs; returns the flattened
+    /// output tuple (aot.py lowers everything with `return_tuple=True`).
+    pub fn exec(
+        &mut self,
+        name: &str,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>, RuntimeError> {
+        let exe = self.load(name)?;
+        let outputs = exe.execute::<xla::Literal>(inputs)?;
+        let buffer = outputs
+            .first()
+            .and_then(|d| d.first())
+            .ok_or_else(|| RuntimeError::Xla(format!("{name}: empty output")))?;
+        let tuple = buffer.to_literal_sync()?;
+        Ok(tuple.to_tuple()?)
+    }
+}
+
+/// Build an f32 literal of the given logical dims from a flat slice.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal, RuntimeError> {
+    let expected: i64 = dims.iter().product();
+    if expected != data.len() as i64 {
+        return Err(RuntimeError::Shape {
+            artifact: "<input>".into(),
+            detail: format!("{} elements vs dims {:?}", data.len(), dims),
+        });
+    }
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// Build an i32 literal of the given logical dims from a flat slice.
+pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal, RuntimeError> {
+    let expected: i64 = dims.iter().product();
+    if expected != data.len() as i64 {
+        return Err(RuntimeError::Shape {
+            artifact: "<input>".into(),
+            detail: format!("{} elements vs dims {:?}", data.len(), dims),
+        });
+    }
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// Scalar literals.
+pub fn scalar_f32(x: f32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+pub fn scalar_i32(x: i32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+/// Extract an f32 vector from a literal.
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>, RuntimeError> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Extract a scalar f32 from a literal.
+pub fn to_scalar_f32(lit: &xla::Literal) -> Result<f32, RuntimeError> {
+    Ok(lit.get_first_element::<f32>()?)
+}

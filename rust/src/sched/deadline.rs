@@ -1,0 +1,174 @@
+//! Deadline-based over-commitment scheduling (FedScale-style): select more
+//! clients than needed, close the round at a deadline, and drop stragglers
+//! that have not finished.  A natural companion study for BouquetFL — the
+//! deadline/straggler trade-off only *exists* under hardware heterogeneity.
+
+use super::{Durations, Schedule, Scheduler};
+
+/// Sequentially executed fits, but the round closes at `deadline_s`
+/// (emulated): clients whose fit has not *completed* by then are dropped.
+#[derive(Debug)]
+pub struct DeadlineSequential {
+    pub deadline_s: f64,
+}
+
+/// Parallel slots + deadline: each slot runs fits back to back; whatever
+/// finishes past the deadline is dropped.
+#[derive(Debug)]
+pub struct DeadlineParallel {
+    pub deadline_s: f64,
+    pub max_concurrent: usize,
+}
+
+/// Outcome of a deadline round: the schedule of *completed* fits plus the
+/// dropped client ids.
+#[derive(Debug, Clone)]
+pub struct DeadlineOutcome {
+    pub schedule: Schedule,
+    pub dropped: Vec<u32>,
+}
+
+impl DeadlineSequential {
+    pub fn new(deadline_s: f64) -> Self {
+        assert!(deadline_s > 0.0);
+        DeadlineSequential { deadline_s }
+    }
+
+    pub fn run(&self, durations: &Durations) -> DeadlineOutcome {
+        let mut spans = Vec::new();
+        let mut dropped = Vec::new();
+        let mut t = 0.0;
+        for &(c, d) in durations {
+            if t + d <= self.deadline_s + 1e-12 {
+                spans.push((c, t, t + d));
+                t += d;
+            } else {
+                dropped.push(c);
+            }
+        }
+        DeadlineOutcome {
+            schedule: Schedule { round_s: t.min(self.deadline_s), spans },
+            dropped,
+        }
+    }
+}
+
+impl DeadlineParallel {
+    pub fn new(deadline_s: f64, max_concurrent: usize) -> Self {
+        assert!(deadline_s > 0.0 && max_concurrent >= 1);
+        DeadlineParallel { deadline_s, max_concurrent }
+    }
+
+    pub fn run(&self, durations: &Durations) -> DeadlineOutcome {
+        // LPT packing, then cut at the deadline.
+        let mut order: Vec<usize> = (0..durations.len()).collect();
+        order.sort_by(|&a, &b| durations[b].1.total_cmp(&durations[a].1));
+        let mut slot_free = vec![0.0f64; self.max_concurrent];
+        let mut spans = Vec::new();
+        let mut dropped = Vec::new();
+        for &i in &order {
+            let (c, d) = durations[i];
+            let (slot, _) = slot_free
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.total_cmp(b.1))
+                .unwrap();
+            let start = slot_free[slot];
+            if start + d <= self.deadline_s + 1e-12 {
+                spans.push((c, start, start + d));
+                slot_free[slot] = start + d;
+            } else {
+                dropped.push(c);
+            }
+        }
+        let round_s = slot_free.iter().cloned().fold(0.0, f64::max);
+        spans.sort_by_key(|&(c, ..)| c);
+        dropped.sort();
+        DeadlineOutcome {
+            schedule: Schedule { round_s: round_s.min(self.deadline_s), spans },
+            dropped,
+        }
+    }
+}
+
+impl Scheduler for DeadlineSequential {
+    fn name(&self) -> &'static str {
+        "deadline-sequential"
+    }
+
+    fn max_concurrency(&self) -> usize {
+        1
+    }
+
+    fn schedule(&self, durations: &Durations) -> Schedule {
+        self.run(durations).schedule
+    }
+}
+
+impl Scheduler for DeadlineParallel {
+    fn name(&self) -> &'static str {
+        "deadline-parallel"
+    }
+
+    fn max_concurrency(&self) -> usize {
+        self.max_concurrent
+    }
+
+    fn schedule(&self, durations: &Durations) -> Schedule {
+        self.run(durations).schedule
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn durs() -> Durations {
+        vec![(0, 4.0), (1, 1.0), (2, 3.0), (3, 2.0)]
+    }
+
+    #[test]
+    fn sequential_drops_past_deadline() {
+        let out = DeadlineSequential::new(6.0).run(&durs());
+        // 4.0 + 1.0 fit; 3.0 would end at 8.0 (> 6) -> dropped; 2.0 would
+        // start at 5.0 and end at 7.0 -> dropped too.
+        assert_eq!(out.schedule.spans.len(), 2);
+        assert_eq!(out.dropped, vec![2, 3]);
+        assert!(out.schedule.round_s <= 6.0);
+    }
+
+    #[test]
+    fn generous_deadline_drops_nobody() {
+        let out = DeadlineSequential::new(100.0).run(&durs());
+        assert!(out.dropped.is_empty());
+        assert!((out.schedule.round_s - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parallel_deadline_keeps_more_clients() {
+        let seq = DeadlineSequential::new(4.5).run(&durs());
+        let par = DeadlineParallel::new(4.5, 2).run(&durs());
+        assert!(par.schedule.spans.len() > seq.schedule.spans.len());
+        // LPT with 2 slots, deadline 4.5: [4] on slot1, [3] on slot2, then
+        // [2] would end at 5.0 -> dropped; [1] ends at 4.0 -> kept.
+        assert_eq!(par.dropped, vec![3]);
+        // And a generous deadline keeps everyone.
+        assert!(DeadlineParallel::new(5.0, 2).run(&durs()).dropped.is_empty());
+    }
+
+    #[test]
+    fn straggler_alone_is_dropped_if_too_slow() {
+        let d: Durations = vec![(0, 10.0), (1, 1.0)];
+        let out = DeadlineSequential::new(2.0).run(&d);
+        assert_eq!(out.dropped, vec![0]);
+        assert_eq!(out.schedule.spans.len(), 1);
+    }
+
+    #[test]
+    fn scheduler_trait_roundtrip() {
+        let s: &dyn Scheduler = &DeadlineParallel::new(5.0, 2);
+        let sched = s.schedule(&durs());
+        assert!(sched.round_s <= 5.0);
+        assert!(sched.to_trace("d").max_concurrency() <= 2);
+    }
+}

@@ -1,0 +1,172 @@
+//! Client-execution scheduling on the emulated timeline.
+//!
+//! The paper's §3: "clients must be executed sequentially to ensure
+//! isolation of hardware configurations" — `Sequential` is the default.
+//! The announced future work ("support for limited parallel client
+//! execution") is implemented as `LimitedParallel`: round wall-clock is the
+//! makespan of an LPT greedy packing onto `max_concurrent` emulated slots.
+//! (Real PJRT execution remains serial on this single-core host either
+//! way; parallelism changes the *emulated* timeline accounting, which is
+//! what round-duration studies measure.)
+
+pub mod deadline;
+pub mod trace;
+
+pub use deadline::{DeadlineOutcome, DeadlineParallel, DeadlineSequential};
+pub use trace::{Trace, TraceEvent};
+
+/// Per-client (client id, emulated fit seconds) durations of one round.
+pub type Durations = Vec<(u32, f64)>;
+
+/// A computed round schedule.
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    /// Emulated wall-clock of the whole round.
+    pub round_s: f64,
+    /// Per-client (id, start, end) spans on the emulated timeline.
+    pub spans: Vec<(u32, f64, f64)>,
+}
+
+impl Schedule {
+    pub fn to_trace(&self, label: &str) -> Trace {
+        let mut t = Trace::default();
+        for &(c, s, e) in &self.spans {
+            t.add(c, format!("{label}/client-{c}"), s, e);
+        }
+        t
+    }
+}
+
+/// Scheduling policy.
+pub trait Scheduler {
+    fn name(&self) -> &'static str;
+    /// Max clients whose restricted envs may be active simultaneously.
+    fn max_concurrency(&self) -> usize;
+    fn schedule(&self, durations: &Durations) -> Schedule;
+}
+
+/// Paper default: strict sequential execution.
+#[derive(Debug, Default)]
+pub struct Sequential;
+
+impl Scheduler for Sequential {
+    fn name(&self) -> &'static str {
+        "sequential"
+    }
+
+    fn max_concurrency(&self) -> usize {
+        1
+    }
+
+    fn schedule(&self, durations: &Durations) -> Schedule {
+        let mut spans = Vec::with_capacity(durations.len());
+        let mut t = 0.0;
+        for &(c, d) in durations {
+            assert!(d >= 0.0);
+            spans.push((c, t, t + d));
+            t += d;
+        }
+        Schedule { round_s: t, spans }
+    }
+}
+
+/// Future-work extension: up to `max_concurrent` clients at once,
+/// longest-processing-time-first greedy packing.
+#[derive(Debug)]
+pub struct LimitedParallel {
+    pub max_concurrent: usize,
+}
+
+impl LimitedParallel {
+    pub fn new(max_concurrent: usize) -> Self {
+        assert!(max_concurrent >= 1);
+        LimitedParallel { max_concurrent }
+    }
+}
+
+impl Scheduler for LimitedParallel {
+    fn name(&self) -> &'static str {
+        "limited-parallel"
+    }
+
+    fn max_concurrency(&self) -> usize {
+        self.max_concurrent
+    }
+
+    fn schedule(&self, durations: &Durations) -> Schedule {
+        let mut order: Vec<usize> = (0..durations.len()).collect();
+        order.sort_by(|&a, &b| durations[b].1.total_cmp(&durations[a].1)); // LPT
+        let mut slot_free = vec![0.0f64; self.max_concurrent];
+        let mut spans = Vec::with_capacity(durations.len());
+        for &i in &order {
+            let (c, d) = durations[i];
+            assert!(d >= 0.0);
+            // Earliest-free slot.
+            let (slot, _) = slot_free
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.total_cmp(b.1))
+                .unwrap();
+            let start = slot_free[slot];
+            spans.push((c, start, start + d));
+            slot_free[slot] = start + d;
+        }
+        let round_s = slot_free.iter().cloned().fold(0.0, f64::max);
+        spans.sort_by_key(|&(c, ..)| c);
+        Schedule { round_s, spans }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn durs() -> Durations {
+        vec![(0, 4.0), (1, 1.0), (2, 3.0), (3, 2.0)]
+    }
+
+    #[test]
+    fn sequential_sums_and_serialises() {
+        let s = Sequential.schedule(&durs());
+        assert!((s.round_s - 10.0).abs() < 1e-12);
+        let t = s.to_trace("round0");
+        assert!(t.is_serial());
+        assert_eq!(t.max_concurrency(), 1);
+    }
+
+    #[test]
+    fn parallel_1_equals_sequential_makespan() {
+        let s = LimitedParallel::new(1).schedule(&durs());
+        assert!((s.round_s - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parallel_2_lpt_makespan() {
+        // LPT on [4,3,2,1] with 2 slots: slot1=4+1=5, slot2=3+2=5.
+        let s = LimitedParallel::new(2).schedule(&durs());
+        assert!((s.round_s - 5.0).abs() < 1e-12);
+        assert!(s.to_trace("r").max_concurrency() <= 2);
+    }
+
+    #[test]
+    fn parallel_many_slots_is_max_duration() {
+        let s = LimitedParallel::new(16).schedule(&durs());
+        assert!((s.round_s - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn straggler_dominates_parallel_round() {
+        // One slow client bounds the round no matter the parallelism —
+        // the straggler effect BouquetFL exists to study.
+        let d: Durations = vec![(0, 30.0), (1, 1.0), (2, 1.0), (3, 1.0)];
+        let s = LimitedParallel::new(4).schedule(&d);
+        assert!((s.round_s - 30.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_round_is_zero() {
+        let s = Sequential.schedule(&vec![]);
+        assert_eq!(s.round_s, 0.0);
+        assert!(s.spans.is_empty());
+    }
+}

@@ -1,0 +1,110 @@
+//! Execution traces: per-client spans on the emulated timeline, exportable
+//! as Chrome-trace JSON (`chrome://tracing` / Perfetto).
+
+use crate::util::json::Json;
+
+/// One traced span.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    pub client: u32,
+    pub label: String,
+    pub t_start_s: f64,
+    pub t_end_s: f64,
+}
+
+/// A whole run's trace.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub events: Vec<TraceEvent>,
+}
+
+impl Trace {
+    pub fn add(&mut self, client: u32, label: impl Into<String>, t_start_s: f64, t_end_s: f64) {
+        assert!(t_end_s >= t_start_s, "span ends before it starts");
+        self.events.push(TraceEvent {
+            client,
+            label: label.into(),
+            t_start_s,
+            t_end_s,
+        });
+    }
+
+    /// Overlap check: true if no two spans of the same resource overlap.
+    /// With sequential scheduling this must hold across ALL clients.
+    pub fn is_serial(&self) -> bool {
+        let mut spans: Vec<(f64, f64)> =
+            self.events.iter().map(|e| (e.t_start_s, e.t_end_s)).collect();
+        spans.sort_by(|a, b| a.0.total_cmp(&b.0));
+        spans.windows(2).all(|w| w[0].1 <= w[1].0 + 1e-9)
+    }
+
+    /// Maximum number of simultaneously active spans.
+    pub fn max_concurrency(&self) -> usize {
+        let mut edges: Vec<(f64, i32)> = Vec::new();
+        for e in &self.events {
+            edges.push((e.t_start_s, 1));
+            edges.push((e.t_end_s, -1));
+        }
+        edges.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        let mut cur = 0i32;
+        let mut best = 0i32;
+        for (_, d) in edges {
+            cur += d;
+            best = best.max(cur);
+        }
+        best.max(0) as usize
+    }
+
+    /// Chrome-trace ("trace event format") JSON.
+    pub fn to_chrome_json(&self) -> Json {
+        Json::Arr(
+            self.events
+                .iter()
+                .map(|e| {
+                    Json::obj(vec![
+                        ("name", Json::str(e.label.clone())),
+                        ("cat", Json::str("fit")),
+                        ("ph", Json::str("X")),
+                        ("ts", Json::num(e.t_start_s * 1e6)),
+                        ("dur", Json::num((e.t_end_s - e.t_start_s) * 1e6)),
+                        ("pid", Json::num(1.0)),
+                        ("tid", Json::num(e.client as f64)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serial_detection() {
+        let mut t = Trace::default();
+        t.add(0, "a", 0.0, 1.0);
+        t.add(1, "b", 1.0, 2.0);
+        assert!(t.is_serial());
+        assert_eq!(t.max_concurrency(), 1);
+        t.add(2, "c", 1.5, 3.0);
+        assert!(!t.is_serial());
+        assert_eq!(t.max_concurrency(), 2);
+    }
+
+    #[test]
+    fn chrome_json_shape() {
+        let mut t = Trace::default();
+        t.add(3, "fit", 0.5, 1.25);
+        let j = t.to_chrome_json();
+        let e = &j.as_arr().unwrap()[0];
+        assert_eq!(e.get("tid").unwrap().as_f64().unwrap(), 3.0);
+        assert_eq!(e.get("dur").unwrap().as_f64().unwrap(), 0.75 * 1e6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn negative_span_panics() {
+        Trace::default().add(0, "x", 2.0, 1.0);
+    }
+}

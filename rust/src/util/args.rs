@@ -1,0 +1,181 @@
+//! Tiny CLI argument parser (`clap` is not available offline).
+//!
+//! Supports: a subcommand word, `--key value`, `--key=value`, boolean
+//! `--flag`, and positional arguments.  Unknown keys are an error so typos
+//! fail loudly.
+
+use std::collections::BTreeMap;
+
+use crate::error::ConfigError;
+
+/// Parsed command line.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub flags: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+/// A declared option (for validation + help text).
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+impl Args {
+    /// Parse raw args (without argv[0]) against the declared option specs.
+    pub fn parse(raw: &[String], specs: &[OptSpec]) -> Result<Args, ConfigError> {
+        let mut out = Args::default();
+        let known: BTreeMap<&str, &OptSpec> = specs.iter().map(|s| (s.name, s)).collect();
+        let mut it = raw.iter().peekable();
+
+        // First non-flag token is the subcommand.
+        if let Some(first) = it.peek() {
+            if !first.starts_with("--") {
+                out.subcommand = Some(it.next().unwrap().clone());
+            }
+        }
+
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = known.get(key.as_str()).ok_or_else(|| ConfigError::InvalidValue {
+                    key: key.clone(),
+                    msg: "unknown option".into(),
+                })?;
+                let value = if spec.takes_value {
+                    match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| ConfigError::InvalidValue {
+                                key: key.clone(),
+                                msg: "missing value".into(),
+                            })?
+                            .clone(),
+                    }
+                } else {
+                    if inline_val.is_some() {
+                        return Err(ConfigError::InvalidValue {
+                            key,
+                            msg: "flag does not take a value".into(),
+                        });
+                    }
+                    "true".to_string()
+                };
+                out.flags.insert(key, value);
+            } else {
+                out.positional.push(tok.clone());
+            }
+        }
+
+        // Apply defaults.
+        for spec in specs {
+            if let Some(dfl) = spec.default {
+                out.flags.entry(spec.name.to_string()).or_insert_with(|| dfl.to_string());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn get_u64(&self, key: &str) -> Result<Option<u64>, ConfigError> {
+        self.get(key)
+            .map(|v| {
+                v.parse::<u64>().map_err(|e| ConfigError::InvalidValue {
+                    key: key.into(),
+                    msg: e.to_string(),
+                })
+            })
+            .transpose()
+    }
+
+    pub fn get_f64(&self, key: &str) -> Result<Option<f64>, ConfigError> {
+        self.get(key)
+            .map(|v| {
+                v.parse::<f64>().map_err(|e| ConfigError::InvalidValue {
+                    key: key.into(),
+                    msg: e.to_string(),
+                })
+            })
+            .transpose()
+    }
+}
+
+/// Render help text for a subcommand.
+pub fn render_help(cmd: &str, about: &str, specs: &[OptSpec]) -> String {
+    let mut out = format!("{cmd} — {about}\n\nOptions:\n");
+    for s in specs {
+        let val = if s.takes_value { " <value>" } else { "" };
+        let dfl = s.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+        out.push_str(&format!("  --{}{}\n      {}{}\n", s.name, val, s.help, dfl));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<OptSpec> {
+        vec![
+            OptSpec { name: "rounds", help: "", takes_value: true, default: Some("10") },
+            OptSpec { name: "verbose", help: "", takes_value: false, default: None },
+            OptSpec { name: "seed", help: "", takes_value: true, default: None },
+        ]
+    }
+
+    fn sv(items: &[&str]) -> Vec<String> {
+        items.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_flags_and_positionals() {
+        let a = Args::parse(
+            &sv(&["run", "--rounds", "30", "--verbose", "extra", "--seed=7"]),
+            &specs(),
+        )
+        .unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.get_u64("rounds").unwrap(), Some(30));
+        assert!(a.get_bool("verbose"));
+        assert_eq!(a.get("seed"), Some("7"));
+        assert_eq!(a.positional, vec!["extra".to_string()]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&sv(&["run"]), &specs()).unwrap();
+        assert_eq!(a.get_u64("rounds").unwrap(), Some(10));
+        assert_eq!(a.get("seed"), None);
+    }
+
+    #[test]
+    fn unknown_flag_errors() {
+        assert!(Args::parse(&sv(&["run", "--nope", "1"]), &specs()).is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(&sv(&["run", "--rounds"]), &specs()).is_err());
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = Args::parse(&sv(&["run", "--rounds", "abc"]), &specs()).unwrap();
+        assert!(a.get_u64("rounds").is_err());
+    }
+}

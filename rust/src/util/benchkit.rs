@@ -1,0 +1,157 @@
+//! Micro-benchmark harness for the `harness = false` bench targets
+//! (`criterion` is not available offline; this provides the subset we need:
+//! warmup, adaptive iteration count, mean/p50/p95, throughput, and pretty
+//! reporting — and, unlike criterion, first-class support for printing the
+//! paper-figure tables the benches regenerate).
+
+use std::time::Instant;
+
+use super::stats;
+use super::table::fsecs;
+
+/// One measured benchmark.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub std_s: f64,
+}
+
+impl Measurement {
+    pub fn report_line(&self) -> String {
+        format!(
+            "{:<44} {:>10}/iter  (p50 {:>10}, p95 {:>10}, ±{:>9}, n={})",
+            self.name,
+            fsecs(self.mean_s),
+            fsecs(self.p50_s),
+            fsecs(self.p95_s),
+            fsecs(self.std_s),
+            self.iters
+        )
+    }
+}
+
+/// Bench runner with a time budget per benchmark.
+pub struct Bench {
+    /// Target total measurement time per benchmark, seconds.
+    pub budget_s: f64,
+    /// Warmup time, seconds.
+    pub warmup_s: f64,
+    /// Hard cap on iterations (useful for expensive end-to-end cases).
+    pub max_iters: usize,
+    results: Vec<Measurement>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { budget_s: 1.0, warmup_s: 0.2, max_iters: 10_000_000, results: Vec::new() }
+    }
+}
+
+impl Bench {
+    pub fn new(budget_s: f64) -> Self {
+        Bench { budget_s, ..Default::default() }
+    }
+
+    pub fn with_max_iters(mut self, max_iters: usize) -> Self {
+        self.max_iters = max_iters;
+        self
+    }
+
+    /// Measure `f`, preventing the result from being optimised away by
+    /// passing it through `std::hint::black_box`.
+    pub fn run<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &Measurement {
+        // Warmup + single-shot estimate.
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        let single = t0.elapsed().as_secs_f64().max(1e-9);
+        let mut warm_elapsed = single;
+        while warm_elapsed < self.warmup_s {
+            std::hint::black_box(f());
+            warm_elapsed += single;
+        }
+
+        // Choose a batch size so one sample is >= ~1µs (timer noise floor).
+        let batch = ((1e-6 / single).ceil() as usize).clamp(1, 1_000_000);
+        let target_samples =
+            (((self.budget_s / single) / batch as f64).ceil() as usize).clamp(3, 2_000);
+        let samples_n = target_samples.min(self.max_iters.max(3));
+
+        let mut samples = Vec::with_capacity(samples_n);
+        let mut iters = 0usize;
+        for _ in 0..samples_n {
+            let t = Instant::now();
+            for _ in 0..batch {
+                std::hint::black_box(f());
+            }
+            samples.push(t.elapsed().as_secs_f64() / batch as f64);
+            iters += batch;
+            if iters >= self.max_iters {
+                break;
+            }
+        }
+
+        let m = Measurement {
+            name: name.to_string(),
+            iters,
+            mean_s: stats::mean(&samples),
+            p50_s: stats::percentile(&samples, 50.0),
+            p95_s: stats::percentile(&samples, 95.0),
+            std_s: stats::std_dev(&samples),
+        };
+        println!("{}", m.report_line());
+        self.results.push(m);
+        self.results.last().unwrap()
+    }
+
+    /// Measure and report items/second throughput.
+    pub fn run_throughput<T>(
+        &mut self,
+        name: &str,
+        items_per_iter: f64,
+        f: impl FnMut() -> T,
+    ) -> f64 {
+        let m = self.run(name, f);
+        let thr = items_per_iter / m.mean_s;
+        println!("{:<44} {:>14.1} items/s", format!("{name} [throughput]"), thr);
+        thr
+    }
+
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+}
+
+/// Print a bench section header (keeps `cargo bench` output scannable).
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_sane() {
+        let mut b = Bench::new(0.05);
+        let m = b.run("noop-ish", || {
+            let mut acc = 0u64;
+            for i in 0..100u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(m.mean_s > 0.0 && m.mean_s < 0.01);
+        assert!(m.iters > 0);
+    }
+
+    #[test]
+    fn respects_max_iters_for_expensive_cases() {
+        let mut b = Bench::new(10.0).with_max_iters(5);
+        let m = b.run("sleepy", || std::thread::sleep(std::time::Duration::from_millis(1)));
+        assert!(m.iters <= 5);
+    }
+}

@@ -1,0 +1,276 @@
+//! Federation config files: a TOML-subset parser (`toml`/`serde` are not
+//! available offline).  Supported syntax:
+//!
+//! ```toml
+//! # comment
+//! [section]
+//! key = "string"
+//! n = 42
+//! x = 0.5
+//! flag = true
+//! list = ["a", "b"]
+//! nums = [1, 2, 3]
+//! ```
+
+use std::collections::BTreeMap;
+
+use crate::error::ConfigError;
+
+/// A config value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    List(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+    pub fn as_u64(&self) -> Option<u64> {
+        self.as_f64().filter(|x| *x >= 0.0 && x.fract() == 0.0).map(|x| x as u64)
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_list(&self) -> Option<&[Value]> {
+        match self {
+            Value::List(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed config: section -> key -> value.  Keys before any `[section]`
+/// land in the "" (root) section.
+#[derive(Debug, Default, Clone)]
+pub struct Cfg {
+    sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl Cfg {
+    pub fn parse(text: &str) -> Result<Cfg, ConfigError> {
+        let mut cfg = Cfg::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') || line.len() < 3 {
+                    return Err(ConfigError::Parse {
+                        line: lineno + 1,
+                        msg: format!("malformed section header '{line}'"),
+                    });
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                cfg.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (key, val) = line.split_once('=').ok_or(ConfigError::Parse {
+                line: lineno + 1,
+                msg: format!("expected 'key = value', got '{line}'"),
+            })?;
+            let value = parse_value(val.trim()).map_err(|msg| ConfigError::Parse {
+                line: lineno + 1,
+                msg,
+            })?;
+            cfg.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(key.trim().to_string(), value);
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &str) -> Result<Cfg, ConfigError> {
+        let text = std::fs::read_to_string(path).map_err(|e| ConfigError::Parse {
+            line: 0,
+            msg: format!("cannot read {path}: {e}"),
+        })?;
+        Cfg::parse(&text)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn sections(&self) -> impl Iterator<Item = &String> {
+        self.sections.keys()
+    }
+
+    pub fn str_or(&self, section: &str, key: &str, default: &str) -> String {
+        self.get(section, key)
+            .and_then(|v| v.as_str().map(String::from))
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn u64_or(&self, section: &str, key: &str, default: u64) -> u64 {
+        self.get(section, key).and_then(|v| v.as_u64()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+
+    pub fn str_list(&self, section: &str, key: &str) -> Vec<String> {
+        self.get(section, key)
+            .and_then(|v| v.as_list())
+            .map(|items| {
+                items
+                    .iter()
+                    .filter_map(|v| v.as_str().map(String::from))
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+
+    /// Required string key.
+    pub fn require_str(&self, section: &str, key: &str) -> Result<String, ConfigError> {
+        self.get(section, key)
+            .and_then(|v| v.as_str().map(String::from))
+            .ok_or_else(|| ConfigError::MissingKey(format!("[{section}] {key}")))
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' outside quotes starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or("unterminated list")?;
+        let mut items = Vec::new();
+        if !inner.trim().is_empty() {
+            for part in split_list(inner)? {
+                items.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(Value::List(items));
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    s.parse::<f64>()
+        .map(Value::Num)
+        .map_err(|_| format!("cannot parse value '{s}'"))
+}
+
+fn split_list(inner: &str) -> Result<Vec<&str>, String> {
+    // Split on commas outside quotes (no nested lists needed).
+    let mut parts = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in inner.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                parts.push(&inner[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    if in_str {
+        return Err("unterminated string in list".into());
+    }
+    parts.push(&inner[start..]);
+    Ok(parts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# federation config
+[federation]
+rounds = 30
+lr = 0.02            # learning rate
+strategy = "fedavg"
+paced = false
+
+[hardware]
+profiles = ["gtx-1060", "rtx-3080"]
+counts = [3, 1]
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Cfg::parse(SAMPLE).unwrap();
+        assert_eq!(c.u64_or("federation", "rounds", 0), 30);
+        assert!((c.f64_or("federation", "lr", 0.0) - 0.02).abs() < 1e-12);
+        assert_eq!(c.str_or("federation", "strategy", ""), "fedavg");
+        assert!(!c.bool_or("federation", "paced", true));
+        assert_eq!(c.str_list("hardware", "profiles"), vec!["gtx-1060", "rtx-3080"]);
+        assert_eq!(
+            c.get("hardware", "counts").unwrap().as_list().unwrap()[1].as_u64(),
+            Some(1)
+        );
+    }
+
+    #[test]
+    fn defaults_for_missing() {
+        let c = Cfg::parse(SAMPLE).unwrap();
+        assert_eq!(c.u64_or("federation", "nope", 7), 7);
+        assert!(c.require_str("federation", "nope").is_err());
+    }
+
+    #[test]
+    fn hash_inside_string_is_kept() {
+        let c = Cfg::parse("[a]\nname = \"foo # bar\"").unwrap();
+        assert_eq!(c.str_or("a", "name", ""), "foo # bar");
+    }
+
+    #[test]
+    fn reports_line_numbers() {
+        let err = Cfg::parse("[a]\nbroken line").unwrap_err();
+        match err {
+            ConfigError::Parse { line, .. } => assert_eq!(line, 2),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn empty_list() {
+        let c = Cfg::parse("[a]\nxs = []").unwrap();
+        assert_eq!(c.get("a", "xs").unwrap().as_list().unwrap().len(), 0);
+    }
+}

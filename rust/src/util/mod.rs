@@ -1,0 +1,12 @@
+//! Hand-rolled utility layer (the offline environment lacks `rand`, `serde`,
+//! `clap`, `criterion`, `proptest`, `toml` — see DESIGN.md §Dependencies).
+
+pub mod args;
+pub mod benchkit;
+pub mod cfg;
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,92 @@
+//! Property-based testing mini-framework (`proptest` is not available
+//! offline).  No shrinking — failures report the seed and case index so a
+//! run is exactly reproducible with `check_seeded`.
+//!
+//! Usage:
+//! ```ignore
+//! prop::check(200, |rng| {
+//!     let n = rng.range_i64(1, 50) as usize;
+//!     let xs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+//!     prop::assert_close(stats::mean(&stats::mean_normalize(&xs)), 1.0, 1e-9)
+//! });
+//! ```
+
+use super::rng::Pcg;
+
+/// Result of one property case: Ok(()) or a failure description.
+pub type CaseResult = Result<(), String>;
+
+/// Run `cases` random cases of `property` with a fixed default seed.
+/// Panics (test failure) on the first failing case, reporting seed + index.
+pub fn check(cases: usize, property: impl FnMut(&mut Pcg) -> CaseResult) {
+    check_seeded(0xB0u64 << 8 | 0x47, cases, property); // default seed "BOUQ"-ish
+}
+
+/// Run with an explicit seed (use to replay a reported failure).
+pub fn check_seeded(seed: u64, cases: usize, mut property: impl FnMut(&mut Pcg) -> CaseResult) {
+    for case in 0..cases {
+        let mut rng = Pcg::new(seed, case as u64);
+        if let Err(msg) = property(&mut rng) {
+            panic!(
+                "property failed at case {case}/{cases} (seed={seed:#x}): {msg}\n\
+                 replay with: prop::check_seeded({seed:#x}, {}, ..)",
+                case + 1
+            );
+        }
+    }
+}
+
+/// Assert two floats are within `tol`.
+pub fn assert_close(a: f64, b: f64, tol: f64) -> CaseResult {
+    if (a - b).abs() <= tol {
+        Ok(())
+    } else {
+        Err(format!("expected {a} ≈ {b} (tol {tol}, diff {})", (a - b).abs()))
+    }
+}
+
+/// Assert a boolean with a lazy message.
+pub fn assert_that(cond: bool, msg: impl Fn() -> String) -> CaseResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(50, |rng| {
+            let x = rng.f64();
+            assert_that((0.0..1.0).contains(&x), || format!("{x} out of range"))
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_reports() {
+        check(50, |rng| {
+            let x = rng.f64();
+            assert_that(x < 0.5, || format!("x={x}"))
+        });
+    }
+
+    #[test]
+    fn seeded_replay_is_deterministic() {
+        let mut seen = Vec::new();
+        check_seeded(42, 5, |rng| {
+            seen.push(rng.next_u32());
+            Ok(())
+        });
+        let mut seen2 = Vec::new();
+        check_seeded(42, 5, |rng| {
+            seen2.push(rng.next_u32());
+            Ok(())
+        });
+        assert_eq!(seen, seen2);
+    }
+}

@@ -1,0 +1,190 @@
+//! ASCII table rendering for benches / CLI output (the paper-figure
+//! harnesses print their rows through this).
+
+/// Column alignment.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// Simple monospace table builder.
+#[derive(Debug, Default)]
+pub struct Table {
+    headers: Vec<String>,
+    aligns: Vec<Align>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            aligns: headers.iter().map(|_| Align::Right).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Override alignments (defaults to all right-aligned).
+    pub fn aligns(mut self, aligns: &[Align]) -> Self {
+        assert_eq!(aligns.len(), self.headers.len());
+        self.aligns = aligns.to_vec();
+        self
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(
+            cells.len(),
+            self.headers.len(),
+            "row width {} != header width {}",
+            cells.len(),
+            self.headers.len()
+        );
+        self.rows.push(cells);
+    }
+
+    pub fn num_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        let sep = |out: &mut String| {
+            for (i, w) in widths.iter().enumerate() {
+                out.push_str(if i == 0 { "+" } else { "+" });
+                out.push_str(&"-".repeat(w + 2));
+            }
+            out.push_str("+\n");
+        };
+        let line = |out: &mut String, cells: &[String], aligns: &[Align]| {
+            for i in 0..ncol {
+                let cell = &cells[i];
+                out.push_str("| ");
+                match aligns[i] {
+                    Align::Left => {
+                        out.push_str(cell);
+                        out.push_str(&" ".repeat(widths[i] - cell.len()));
+                    }
+                    Align::Right => {
+                        out.push_str(&" ".repeat(widths[i] - cell.len()));
+                        out.push_str(cell);
+                    }
+                }
+                out.push(' ');
+            }
+            out.push_str("|\n");
+        };
+        sep(&mut out);
+        line(&mut out, &self.headers, &vec![Align::Left; ncol]);
+        sep(&mut out);
+        for row in &self.rows {
+            line(&mut out, row, &self.aligns);
+        }
+        sep(&mut out);
+        out
+    }
+
+    /// CSV rendering (for piping figure data into plotting tools).
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = String::new();
+        out.push_str(
+            &self
+                .headers
+                .iter()
+                .map(|h| esc(h))
+                .collect::<Vec<_>>()
+                .join(","),
+        );
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format a float with `prec` decimals.
+pub fn fnum(x: f64, prec: usize) -> String {
+    format!("{x:.prec$}")
+}
+
+/// Format seconds human-readably (µs/ms/s).
+pub fn fsecs(secs: f64) -> String {
+    if secs < 1e-3 {
+        format!("{:.1}µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2}ms", secs * 1e3)
+    } else if secs < 120.0 {
+        format!("{secs:.2}s")
+    } else {
+        format!("{:.1}min", secs / 60.0)
+    }
+}
+
+/// Format bytes human-readably.
+pub fn fbytes(bytes: u64) -> String {
+    let b = bytes as f64;
+    if b < 1024.0 {
+        format!("{bytes}B")
+    } else if b < 1024.0 * 1024.0 {
+        format!("{:.1}KiB", b / 1024.0)
+    } else if b < 1024.0 * 1024.0 * 1024.0 {
+        format!("{:.1}MiB", b / 1024.0 / 1024.0)
+    } else {
+        format!("{:.2}GiB", b / 1024.0 / 1024.0 / 1024.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(&["gpu", "time"]).aligns(&[Align::Left, Align::Right]);
+        t.row(vec!["GTX 1060".into(), "1.23".into()]);
+        t.row(vec!["RTX 3080".into(), "0.41".into()]);
+        let s = t.render();
+        assert!(s.contains("| GTX 1060 |"));
+        assert!(s.contains("| gpu"));
+        assert_eq!(s.lines().count(), 6);
+    }
+
+    #[test]
+    fn csv_escapes() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["x,y".into(), "pla\"in".into()]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"x,y\""));
+        assert!(csv.contains("\"pla\"\"in\""));
+    }
+
+    #[test]
+    #[should_panic]
+    fn wrong_row_width_panics() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn humanize() {
+        assert_eq!(fsecs(0.0000005), "0.5µs");
+        assert_eq!(fsecs(0.25), "250.00ms");
+        assert_eq!(fbytes(2048), "2.0KiB");
+    }
+}

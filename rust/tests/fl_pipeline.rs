@@ -1,0 +1,157 @@
+//! Integration tests of the full FL pipeline (ServerApp round loop +
+//! BouquetFL restriction + strategies) with real PJRT execution.
+
+use bouquetfl::data::PartitionScheme;
+use bouquetfl::fl::launcher::{launch, HardwareSource, LaunchOptions};
+use bouquetfl::fl::Selection;
+use bouquetfl::hardware::SamplerConfig;
+
+fn tiny_opts() -> LaunchOptions {
+    LaunchOptions {
+        clients: 3,
+        rounds: 2,
+        samples_per_client: 48,
+        eval_samples: 128,
+        batch: 16,
+        local_steps: 2,
+        lr: 0.02,
+        eval_every: 2,
+        seed: 7,
+        hardware: HardwareSource::Manual(vec![
+            "gtx-1060".into(),
+            "rtx-3060".into(),
+            "gtx-1650".into(),
+        ]),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn federation_trains_and_records_history() {
+    let outcome = launch(&tiny_opts()).expect("federation must run");
+    assert_eq!(outcome.history.rounds.len(), 2);
+    assert_eq!(outcome.profiles.len(), 3);
+    let first = outcome.history.rounds[0].train_loss;
+    let last = outcome.history.final_train_loss().unwrap();
+    assert!(first.is_finite() && last.is_finite());
+    assert!(last < first, "loss should drop: {first} -> {last}");
+    // Eval ran on round 2.
+    assert!(outcome.history.rounds[1].eval_loss.is_some());
+    // Emulated round time reflects heterogeneous hardware (> 0).
+    assert!(outcome.history.rounds[0].emu_round_s > 0.0);
+    assert_eq!(outcome.global.len(), 549_290);
+}
+
+#[test]
+fn all_strategies_run_one_round() {
+    for strategy in ["fedavg", "fedprox", "fedavgm", "fedadam", "trimmed-mean", "krum"] {
+        let opts = LaunchOptions {
+            rounds: 1,
+            strategy: strategy.into(),
+            ..tiny_opts()
+        };
+        let outcome =
+            launch(&opts).unwrap_or_else(|e| panic!("strategy {strategy} failed: {e}"));
+        assert!(
+            outcome.history.rounds[0].train_loss.is_finite(),
+            "{strategy} produced non-finite loss"
+        );
+    }
+}
+
+#[test]
+fn sampler_hardware_source_runs() {
+    let opts = LaunchOptions {
+        clients: 4,
+        rounds: 1,
+        hardware: HardwareSource::Sampler(SamplerConfig::default()),
+        ..tiny_opts()
+    };
+    let outcome = launch(&opts).unwrap();
+    assert_eq!(outcome.profiles.len(), 4);
+    // All sampled profiles must be feasible on the paper host.
+    for p in &outcome.profiles {
+        assert!(p.gpu.vram_gib <= 12.0, "{}", p.gpu.slug);
+        assert!(p.cpu.cores <= 8, "{}", p.cpu.slug);
+        assert!(p.ram.gib <= 32, "{}", p.cpu.slug);
+    }
+}
+
+#[test]
+fn slow_hardware_means_longer_emulated_rounds() {
+    // Same data/seed, two federations: all-slow vs all-fast GPUs.
+    let slow = launch(&LaunchOptions {
+        hardware: HardwareSource::Manual(vec!["gtx-1050-ti".into()]),
+        rounds: 1,
+        ..tiny_opts()
+    })
+    .unwrap();
+    let fast = launch(&LaunchOptions {
+        hardware: HardwareSource::Manual(vec!["rtx-3080".into()]),
+        rounds: 1,
+        ..tiny_opts()
+    })
+    .unwrap();
+    let ts = slow.history.rounds[0].emu_round_s;
+    let tf = fast.history.rounds[0].emu_round_s;
+    assert!(
+        ts > 2.0 * tf,
+        "GTX 1050 Ti federation ({ts:.3}s) must be much slower than RTX 3080 ({tf:.3}s)"
+    );
+}
+
+#[test]
+fn partition_schemes_all_run() {
+    for scheme in [
+        PartitionScheme::Iid,
+        PartitionScheme::Dirichlet { alpha: 0.2 },
+        PartitionScheme::Shards { labels_per_client: 2 },
+    ] {
+        let opts = LaunchOptions { partition: scheme, rounds: 1, ..tiny_opts() };
+        assert!(launch(&opts).is_ok(), "{scheme:?}");
+    }
+}
+
+#[test]
+fn client_fraction_selection_subsets_clients() {
+    let opts = LaunchOptions {
+        clients: 4,
+        selection: Selection::Fraction(0.5),
+        rounds: 2,
+        ..tiny_opts()
+    };
+    let outcome = launch(&opts).unwrap();
+    for r in &outcome.history.rounds {
+        assert_eq!(r.selected.len(), 2);
+    }
+}
+
+#[test]
+fn parallel_scheduler_shrinks_round_wallclock() {
+    let seq = launch(&LaunchOptions { max_parallel: 1, rounds: 1, ..tiny_opts() }).unwrap();
+    let par = launch(&LaunchOptions { max_parallel: 3, rounds: 1, ..tiny_opts() }).unwrap();
+    let ts = seq.history.rounds[0].emu_round_s;
+    let tp = par.history.rounds[0].emu_round_s;
+    assert!(tp < ts, "parallel {tp} must beat sequential {ts}");
+    // ...but not below the slowest client (makespan lower bound).
+    assert!(tp * 3.5 > ts, "parallel speedup bounded by the straggler");
+}
+
+#[test]
+fn network_model_adds_comm_time() {
+    let no_net = launch(&LaunchOptions { network: false, rounds: 1, ..tiny_opts() }).unwrap();
+    let net = launch(&LaunchOptions { network: true, rounds: 1, ..tiny_opts() }).unwrap();
+    assert!(
+        net.history.rounds[0].emu_round_s > no_net.history.rounds[0].emu_round_s,
+        "network transfers must lengthen the round"
+    );
+}
+
+#[test]
+fn infeasible_manual_hardware_is_rejected() {
+    let opts = LaunchOptions {
+        hardware: HardwareSource::Manual(vec!["rtx-4090".into()]),
+        ..tiny_opts()
+    };
+    assert!(launch(&opts).is_err(), "a 4090 cannot be emulated on the 4070S host");
+}

@@ -1,0 +1,162 @@
+//! Cross-module integration tests that do NOT need PJRT/artifacts:
+//! sampler → restricted env → timing → figure harnesses.
+
+use bouquetfl::analysis::claims;
+use bouquetfl::analysis::fig2::{run as run_fig2, Fig2Config};
+use bouquetfl::emu::{
+    emulated_step_seconds, EmulationMode, Optimizer, VirtualClock,
+};
+use bouquetfl::emu::{EnvConfig, Isolation, RestrictedEnv};
+use bouquetfl::fl::launcher::{feasible_on, sample_feasible};
+use bouquetfl::hardware::gpu::FIG2_GPUS;
+use bouquetfl::hardware::{HardwareProfile, HardwareSampler, SamplerConfig};
+use bouquetfl::modelcost::{resnet18_cifar, small_cnn};
+use bouquetfl::sched::{LimitedParallel, Scheduler, Sequential};
+
+fn host() -> HardwareProfile {
+    HardwareProfile::paper_host()
+}
+
+#[test]
+fn sampled_federation_runs_restricted_fits_sequentially() {
+    // Sample 10 feasible clients, run a timing-only fit for each, and
+    // verify the sequential-isolation invariant through the trace.
+    let mut sampler = HardwareSampler::with_defaults(3);
+    let mut clock = VirtualClock::fast_forward();
+    let w = small_cnn();
+    let cfg = EnvConfig { isolation: Isolation::Concurrent, ..Default::default() };
+    let mut durations = Vec::new();
+    for i in 0..10u32 {
+        let profile = sample_feasible(&mut sampler, &host()).unwrap();
+        let mut env = RestrictedEnv::spawn(&profile, &host(), cfg.clone()).unwrap();
+        let report = env
+            .run_fit(&mut clock, &w, 32, 4, 50 * 1024 * 1024, |_| 0.5)
+            .unwrap();
+        env.teardown();
+        durations.push((i, report.emu_total_s));
+    }
+    let schedule = Sequential.schedule(&durations);
+    let trace = schedule.to_trace("integration");
+    assert!(trace.is_serial(), "sequential schedule must never overlap");
+    assert_eq!(trace.max_concurrency(), 1);
+    let parallel = LimitedParallel::new(4).schedule(&durations);
+    assert!(parallel.round_s <= schedule.round_s);
+    assert!(parallel.to_trace("p").max_concurrency() <= 4);
+}
+
+#[test]
+fn fig2_over_full_database_still_correlates() {
+    // Beyond the paper's 13 GPUs: every host-feasible desktop GPU.
+    let host = host();
+    let slugs: Vec<&str> = bouquetfl::hardware::GPU_DB
+        .iter()
+        .filter(|g| !g.laptop)
+        .filter(|g| {
+            g.vram_gib <= host.gpu.vram_gib
+                && g.peak_fp32_tflops() <= host.gpu.peak_fp32_tflops()
+        })
+        .map(|g| g.slug)
+        .collect();
+    assert!(slugs.len() >= 20, "{}", slugs.len());
+    let cfg = Fig2Config { slugs, ..Default::default() };
+    let r = run_fig2(&cfg).unwrap();
+    assert!(r.spearman_rho > 0.8, "rho = {}", r.spearman_rho);
+    assert!(r.kendall_tau > 0.6, "tau = {}", r.kendall_tau);
+}
+
+#[test]
+fn host_restriction_approximates_device_model() {
+    // The MPS-restriction emulation should track the direct device model
+    // within ~35% for most of the paper's GPUs (bandwidth isolation is
+    // partial by design — the paper's §3 approximation caveat).
+    let w = resnet18_cifar();
+    let mut rel_errors = Vec::new();
+    for slug in FIG2_GPUS {
+        let target = HardwareProfile::new(
+            format!("t-{slug}"),
+            bouquetfl::hardware::gpu_by_slug(slug).unwrap().clone(),
+            host().cpu.clone(),
+            host().ram,
+        );
+        let (a, _) = emulated_step_seconds(
+            &target,
+            &host(),
+            EmulationMode::HostRestriction,
+            &w,
+            32,
+            Optimizer::Sgd,
+        )
+        .unwrap();
+        let (b, _) = emulated_step_seconds(
+            &target,
+            &host(),
+            EmulationMode::DeviceModel,
+            &w,
+            32,
+            Optimizer::Sgd,
+        )
+        .unwrap();
+        rel_errors.push(((a - b) / b).abs());
+    }
+    let median = {
+        let mut e = rel_errors.clone();
+        e.sort_by(|a, b| a.total_cmp(b));
+        e[e.len() / 2]
+    };
+    assert!(median < 0.5, "median relative error {median}; errors {rel_errors:?}");
+}
+
+#[test]
+fn feasibility_filter_is_consistent() {
+    let host = host();
+    let mut sampler = HardwareSampler::new(5, SamplerConfig::default()).unwrap();
+    for _ in 0..50 {
+        let p = sample_feasible(&mut sampler, &host).unwrap();
+        assert!(feasible_on(&p, &host));
+    }
+}
+
+#[test]
+fn all_claims_harnesses_produce_output() {
+    let (oom_table, maxes) = claims::oom_matrix(claims::OOM_GPUS, claims::OOM_BATCHES);
+    assert!(oom_table.num_rows() == claims::OOM_GPUS.len());
+    assert!(maxes.iter().all(|(_, b)| *b >= 1));
+
+    let (dl_table, rows) = claims::dataloader_sweep("rtx-4070-super", 32);
+    assert!(dl_table.num_rows() >= 15);
+    assert!(rows.iter().all(|(_, t, _)| *t > 0.0));
+
+    let (ram_table, rows) = claims::ram_sweep(12.0);
+    assert_eq!(ram_table.num_rows(), 7);
+    assert!(rows.iter().any(|(_, p)| *p > 1.0));
+}
+
+#[test]
+fn oom_cascade_from_sampler_federation() {
+    // Draw a big federation and check that exactly the low-VRAM clients
+    // fail at a large batch while the rest proceed — the paper's §4.2
+    // failure-handling story at federation scale (timing-only).
+    let w = resnet18_cifar();
+    let mut sampler = HardwareSampler::with_defaults(11);
+    let mut clock = VirtualClock::fast_forward();
+    let cfg = EnvConfig { isolation: Isolation::Concurrent, ..Default::default() };
+    let mut failed = 0;
+    let mut survived = 0;
+    for _ in 0..30 {
+        let p = sample_feasible(&mut sampler, &host()).unwrap();
+        let mut env = RestrictedEnv::spawn(&p, &host(), cfg.clone()).unwrap();
+        match env.run_fit(&mut clock, &w, 256, 1, 0, |_| 0.0) {
+            Ok(_) => survived += 1,
+            Err(e) => {
+                assert!(
+                    matches!(e, bouquetfl::EmuError::GpuOom { .. }),
+                    "only OOM failures expected: {e:?}"
+                );
+                failed += 1;
+            }
+        }
+        env.teardown();
+    }
+    assert!(failed > 0, "batch 256 must OOM the 2-4 GiB cards");
+    assert!(survived > 0, "batch 256 must fit the 8-12 GiB cards");
+}

@@ -1,0 +1,220 @@
+//! Property-based tests (via `util::prop`, our proptest stand-in) on the
+//! coordinator's invariants: timing monotonicity, MPS quantisation bounds,
+//! VRAM accounting, partitioning, scheduling, aggregation linearity,
+//! correlation bounds.
+
+use bouquetfl::analysis::correlation::{kendall_tau_b, pearson, spearman};
+use bouquetfl::data::{generate, partition, PartitionScheme, SyntheticConfig};
+use bouquetfl::emu::{GpuTimingModel, MpsPartition, Optimizer, VramAllocator};
+use bouquetfl::fl::ParamVector;
+use bouquetfl::hardware::{GPU_DB};
+use bouquetfl::modelcost::resnet18_cifar;
+use bouquetfl::sched::{LimitedParallel, Scheduler, Sequential};
+use bouquetfl::util::prop::{assert_close, assert_that, check};
+
+#[test]
+fn prop_step_time_monotone_in_batch() {
+    let w = resnet18_cifar();
+    check(60, |rng| {
+        let gpu = rng.choice(GPU_DB);
+        let b1 = rng.range_i64(1, 256) as u32;
+        let b2 = b1 + rng.range_i64(1, 256) as u32;
+        let m = GpuTimingModel::new(gpu);
+        let t1 = m.step_seconds(&w, b1, Optimizer::Sgd);
+        let t2 = m.step_seconds(&w, b2, Optimizer::Sgd);
+        assert_that(t2 > t1, || {
+            format!("{}: t({b2})={t2} !> t({b1})={t1}", gpu.slug)
+        })
+    });
+}
+
+#[test]
+fn prop_step_time_monotone_in_share() {
+    let w = resnet18_cifar();
+    check(60, |rng| {
+        let gpu = rng.choice(GPU_DB);
+        let s1 = rng.range_f64(0.05, 0.95);
+        let s2 = (s1 + rng.range_f64(0.01, 1.0)).min(1.0);
+        let t1 = GpuTimingModel::with_share(gpu, s1).step_seconds(&w, 32, Optimizer::Sgd);
+        let t2 = GpuTimingModel::with_share(gpu, s2).step_seconds(&w, 32, Optimizer::Sgd);
+        assert_that(t2 <= t1, || {
+            format!("{}: share {s2} slower than {s1} ({t2} vs {t1})", gpu.slug)
+        })
+    });
+}
+
+#[test]
+fn prop_mps_share_within_one_sm_of_request() {
+    check(100, |rng| {
+        let gpu = rng.choice(GPU_DB);
+        let pct = rng.range_f64(0.5, 100.0);
+        let p = MpsPartition::new(gpu, pct).map_err(|e| e.to_string())?;
+        let requested = pct / 100.0;
+        let granted = p.effective_share();
+        let sm = 1.0 / gpu.sm_count() as f64;
+        assert_that(granted >= requested - 1e-12, || {
+            format!("{}: granted {granted} < requested {requested}", gpu.slug)
+        })?;
+        assert_that(granted <= requested + sm + 1e-12, || {
+            format!("{}: granted {granted} over-provisioned vs {requested}", gpu.slug)
+        })
+    });
+}
+
+#[test]
+fn prop_vram_accounting_balanced() {
+    check(50, |rng| {
+        let gpu = rng.choice(GPU_DB);
+        let mut alloc = VramAllocator::new(gpu);
+        let mut live = Vec::new();
+        let mut expected: u64 = 0;
+        for _ in 0..rng.range_i64(1, 60) {
+            if rng.f64() < 0.6 || live.is_empty() {
+                let bytes = rng.range_i64(1, 64 * 1024 * 1024) as u64;
+                if let Ok(id) = alloc.alloc("x", bytes) {
+                    live.push((id, bytes));
+                    expected += bytes;
+                }
+            } else {
+                let i = rng.below(live.len());
+                let (id, bytes) = live.swap_remove(i);
+                alloc.free(id);
+                expected -= bytes;
+            }
+            assert_that(alloc.allocated() == expected, || {
+                format!("accounting drift: {} vs {}", alloc.allocated(), expected)
+            })?;
+            assert_that(alloc.allocated() <= alloc.capacity(), || {
+                "allocated beyond capacity".to_string()
+            })?;
+            assert_that(alloc.peak() >= alloc.allocated(), || {
+                "peak below current".to_string()
+            })?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_partition_is_exact_for_all_schemes() {
+    check(30, |rng| {
+        let n = rng.range_i64(50, 400) as usize;
+        let clients = rng.range_i64(2, 20) as usize;
+        let data = generate(
+            &SyntheticConfig { seed: rng.next_u64(), ..Default::default() },
+            n,
+        );
+        let scheme = match rng.below(3) {
+            0 => PartitionScheme::Iid,
+            1 => PartitionScheme::Dirichlet { alpha: rng.range_f64(0.05, 10.0) },
+            _ => PartitionScheme::Shards {
+                labels_per_client: rng.range_i64(1, 4) as usize,
+            },
+        };
+        let parts = partition(&data, clients, scheme, rng.next_u64());
+        let mut all: Vec<usize> = parts.iter().flatten().copied().collect();
+        all.sort();
+        assert_that(all == (0..n).collect::<Vec<_>>(), || {
+            format!("{scheme:?}: not an exact partition")
+        })?;
+        assert_that(parts.iter().all(|p| !p.is_empty()), || {
+            format!("{scheme:?}: empty client partition")
+        })
+    });
+}
+
+#[test]
+fn prop_scheduler_invariants() {
+    check(80, |rng| {
+        let n = rng.range_i64(1, 30) as usize;
+        let durations: Vec<(u32, f64)> = (0..n)
+            .map(|i| (i as u32, rng.range_f64(0.01, 10.0)))
+            .collect();
+        let seq = Sequential.schedule(&durations);
+        let total: f64 = durations.iter().map(|(_, d)| d).sum();
+        let longest = durations.iter().map(|(_, d)| *d).fold(0.0, f64::max);
+        assert_close(seq.round_s, total, 1e-9)?;
+
+        let slots = rng.range_i64(1, 8) as usize;
+        let par = LimitedParallel::new(slots).schedule(&durations);
+        assert_that(par.round_s <= seq.round_s + 1e-9, || {
+            "parallel slower than sequential".to_string()
+        })?;
+        assert_that(par.round_s >= longest - 1e-9, || {
+            format!("makespan {} below longest job {longest}", par.round_s)
+        })?;
+        assert_that(par.round_s >= total / slots as f64 - 1e-9, || {
+            "makespan below work/slots bound".to_string()
+        })?;
+        assert_that(
+            par.to_trace("t").max_concurrency() <= slots,
+            || "concurrency cap violated".to_string(),
+        )
+    });
+}
+
+#[test]
+fn prop_weighted_sum_linearity() {
+    check(40, |rng| {
+        let n = rng.range_i64(1, 200) as usize;
+        let k = rng.range_i64(1, 8) as usize;
+        let vs: Vec<ParamVector> = (0..k)
+            .map(|_| {
+                ParamVector::from_vec((0..n).map(|_| rng.normal() as f32).collect())
+            })
+            .collect();
+        let w: Vec<f32> = (0..k).map(|_| rng.f32()).collect();
+        let a = ParamVector::weighted_sum(&vs, &w);
+        // Scaling all weights by c scales the output by c.
+        let w2: Vec<f32> = w.iter().map(|x| 2.0 * x).collect();
+        let b = ParamVector::weighted_sum(&vs, &w2);
+        for i in 0..n {
+            assert_close(
+                b.as_slice()[i] as f64,
+                2.0 * a.as_slice()[i] as f64,
+                1e-4,
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_correlations_bounded_and_consistent() {
+    check(60, |rng| {
+        let n = rng.range_i64(3, 40) as usize;
+        let xs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let ys: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        for r in [pearson(&xs, &ys), spearman(&xs, &ys), kendall_tau_b(&xs, &ys)] {
+            assert_that((-1.0 - 1e-9..=1.0 + 1e-9).contains(&r), || format!("{r} out of [-1,1]"))?;
+        }
+        // Perfect agreement with itself.
+        assert_close(spearman(&xs, &xs), 1.0, 1e-12)?;
+        assert_close(kendall_tau_b(&xs, &xs), 1.0, 1e-12)
+    });
+}
+
+#[test]
+fn prop_trimmed_mean_bounded_by_extremes() {
+    check(40, |rng| {
+        let n = rng.range_i64(1, 50) as usize;
+        let k = rng.range_i64(3, 9) as usize;
+        let vs: Vec<ParamVector> = (0..k)
+            .map(|_| {
+                ParamVector::from_vec((0..n).map(|_| rng.normal() as f32).collect())
+            })
+            .collect();
+        let trim = rng.below((k - 1) / 2 + 1).min((k - 1) / 2);
+        let out = ParamVector::trimmed_mean(&vs, trim);
+        for i in 0..n {
+            let col: Vec<f32> = vs.iter().map(|v| v.as_slice()[i]).collect();
+            let lo = col.iter().cloned().fold(f32::INFINITY, f32::min);
+            let hi = col.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let x = out.as_slice()[i];
+            assert_that(x >= lo - 1e-6 && x <= hi + 1e-6, || {
+                format!("coordinate {i}: {x} outside [{lo}, {hi}]")
+            })?;
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,257 @@
+//! End-to-end runtime tests: the AOT artifacts load, compile and execute
+//! correctly through the PJRT CPU client — real numerics, no Python.
+//!
+//! Requires `make artifacts` to have produced `artifacts/` at the repo root
+//! (the Makefile's `test` target guarantees this).
+
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+use bouquetfl::data::{generate, SyntheticConfig};
+use bouquetfl::fl::ParamVector;
+use bouquetfl::modelcost::CNN_NUM_PARAMS;
+use bouquetfl::runtime::ModelExecutor;
+
+/// `PjRtClient` holds `Rc`s and is not `Send`; sharing one executor across
+/// test threads is still sound because every access goes through a single
+/// `Mutex` and no reference-counted handle ever escapes the guard (the
+/// executor API returns plain `ParamVector`/`f32` data).
+struct SendExec(ModelExecutor);
+// SAFETY: see above — exclusive access is enforced by the Mutex below.
+unsafe impl Send for SendExec {}
+
+/// One shared executor across all tests (one PJRT client, compile once).
+fn executor() -> MutexGuard<'static, SendExec> {
+    static EXEC: OnceLock<Mutex<SendExec>> = OnceLock::new();
+    EXEC.get_or_init(|| {
+        Mutex::new(SendExec(ModelExecutor::new("artifacts").expect(
+            "artifacts/ missing or invalid — run `make artifacts` before `cargo test`",
+        )))
+    })
+    .lock()
+    .unwrap_or_else(|e| e.into_inner())
+}
+
+fn batch(n: usize, seed: u64) -> (Vec<f32>, Vec<i32>) {
+    let d = generate(&SyntheticConfig { seed, ..Default::default() }, n);
+    (d.images, d.labels)
+}
+
+#[test]
+fn init_params_deterministic_and_sized() {
+    let ex = &mut executor().0;
+    let a = ex.init_params(7).unwrap();
+    let b = ex.init_params(7).unwrap();
+    let c = ex.init_params(8).unwrap();
+    assert_eq!(a.len(), CNN_NUM_PARAMS as usize);
+    assert_eq!(a, b, "same seed, same params");
+    assert_ne!(a, c, "different seed, different params");
+    assert!(a.as_slice().iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn train_step_reduces_loss_on_real_data() {
+    let ex = &mut executor().0;
+    let params = ex.init_params(1).unwrap();
+    let (x, y) = batch(32, 11);
+    let mut p = params;
+    let mut first = None;
+    let mut last = 0.0;
+    for _ in 0..20 {
+        let (next, loss) = ex.train_step(&p, &x, &y, 0.02, 32).unwrap();
+        p = next;
+        first.get_or_insert(loss);
+        last = loss;
+    }
+    let first = first.unwrap();
+    assert!(
+        last < 0.5 * first,
+        "loss must halve in 20 steps: {first} -> {last}"
+    );
+}
+
+#[test]
+fn train_batches_b16_and_b32_both_work() {
+    let ex = &mut executor().0;
+    let params = ex.init_params(2).unwrap();
+    for b in ex.train_batches() {
+        let (x, y) = batch(b as usize, 100 + b as u64);
+        let (next, loss) = ex.train_step(&params, &x, &y, 0.01, b).unwrap();
+        assert_eq!(next.len(), params.len());
+        assert!(loss.is_finite() && loss > 0.0, "b={b}: loss {loss}");
+    }
+}
+
+#[test]
+fn fused_scan_matches_sequential_steps() {
+    let ex = &mut executor().0;
+    let params = ex.init_params(3).unwrap();
+    let k = 4u32;
+    let b = 32u32;
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    let mut batches = Vec::new();
+    for i in 0..k {
+        let (x, y) = batch(b as usize, 200 + i as u64);
+        xs.extend_from_slice(&x);
+        ys.extend_from_slice(&y);
+        batches.push((x, y));
+    }
+
+    let (fused, fused_loss) = ex.train_steps_fused(&params, &xs, &ys, 0.02, k, b).unwrap();
+
+    let mut seq = params.clone();
+    let mut losses = Vec::new();
+    for (x, y) in &batches {
+        let (next, loss) = ex.train_step(&seq, x, y, 0.02, b).unwrap();
+        seq = next;
+        losses.push(loss);
+    }
+    let seq_mean = losses.iter().sum::<f32>() / k as f32;
+
+    // Same computation, same artifacts; tolerances cover non-determinism in
+    // XLA reductions.
+    let max_diff = fused
+        .as_slice()
+        .iter()
+        .zip(seq.as_slice())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 5e-4, "fused vs sequential params differ by {max_diff}");
+    assert!((fused_loss - seq_mean).abs() < 1e-3, "{fused_loss} vs {seq_mean}");
+}
+
+#[test]
+fn prox_step_with_zero_mu_equals_plain_step() {
+    let ex = &mut executor().0;
+    let params = ex.init_params(4).unwrap();
+    let (x, y) = batch(32, 300);
+    let (plain, l1) = ex.train_step(&params, &x, &y, 0.05, 32).unwrap();
+    let (prox, l2) = ex
+        .train_step_prox(&params, &params, &x, &y, 0.05, 0.0, 32)
+        .unwrap();
+    let max_diff = plain
+        .as_slice()
+        .iter()
+        .zip(prox.as_slice())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 1e-5, "{max_diff}");
+    assert!((l1 - l2).abs() < 1e-5);
+}
+
+#[test]
+fn prox_step_large_mu_shrinks_distance_to_global() {
+    let ex = &mut executor().0;
+    let global = ex.init_params(5).unwrap();
+    // Perturbed local params.
+    let mut local = global.clone();
+    for (i, v) in local.as_mut_slice().iter_mut().enumerate() {
+        *v += 0.05 * ((i % 17) as f32 - 8.0) / 8.0;
+    }
+    let before = local.sub(&global).l2_norm();
+    let (x, y) = batch(32, 400);
+    let (after_p, _) = ex
+        .train_step_prox(&local, &global, &x, &y, 0.01, 50.0, 32)
+        .unwrap();
+    let after = after_p.sub(&global).l2_norm();
+    assert!(after < before, "{after} !< {before}");
+}
+
+#[test]
+fn eval_counts_correct_predictions() {
+    let ex = &mut executor().0;
+    let params = ex.init_params(6).unwrap();
+    let b = ex.eval_batch_size().expect("eval artifact");
+    let (x, y) = batch(b as usize, 500);
+    let (loss, correct) = ex.eval_batch(&params, &x, &y, b).unwrap();
+    assert!(loss > 0.0 && loss.is_finite());
+    assert!((0.0..=b as f32).contains(&correct));
+}
+
+#[test]
+fn trained_model_beats_chance_on_holdout() {
+    let ex = &mut executor().0;
+    let mut p = ex.init_params(9).unwrap();
+    // Train on 6 different batches, 5 passes.
+    let batches: Vec<_> = (0..6).map(|i| batch(32, 600 + i)).collect();
+    for _ in 0..5 {
+        for (x, y) in &batches {
+            let (next, _) = ex.train_step(&p, x, y, 0.02, 32).unwrap();
+            p = next;
+        }
+    }
+    let b = ex.eval_batch_size().unwrap();
+    let (x, y) = batch(b as usize, 999); // unseen samples, same prototypes
+    let (_, correct) = ex.eval_batch(&p, &x, &y, b).unwrap();
+    let acc = correct / b as f32;
+    assert!(acc > 0.3, "accuracy {acc} is not above 10-class chance");
+}
+
+#[test]
+fn hlo_aggregate_matches_rust_weighted_sum() {
+    let ex = &mut executor().0;
+    let n = ex.num_params();
+    let mk = |seed: u64| {
+        let mut v = vec![0f32; n];
+        let mut state = seed.wrapping_mul(6364136223846793005).wrapping_add(1);
+        for x in v.iter_mut() {
+            state = state
+                .wrapping_mul(6364136223846793005)
+                .wrapping_add(1442695040888963407);
+            *x = ((state >> 40) as f32 / (1u64 << 24) as f32) - 0.5;
+        }
+        ParamVector::from_vec(v)
+    };
+    for k in ex.runtime().manifest.agg_ks() {
+        let updates: Vec<ParamVector> = (0..k as u64).map(mk).collect();
+        let mut weights: Vec<f32> = (1..=k).map(|i| i as f32).collect();
+        let total: f32 = weights.iter().sum();
+        weights.iter_mut().for_each(|w| *w /= total);
+
+        let hlo = ex.aggregate(&updates, &weights).unwrap();
+        let rust = ParamVector::weighted_sum(&updates, &weights);
+        let max_diff = hlo
+            .as_slice()
+            .iter()
+            .zip(rust.as_slice())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_diff < 1e-5, "k={k}: HLO vs Rust differ by {max_diff}");
+    }
+}
+
+#[test]
+fn aggregate_falls_back_for_unmatched_fan_in() {
+    let ex = &mut executor().0;
+    let n = ex.num_params();
+    // k=3 has no compiled artifact (AGG_KS = 4, 8, 16).
+    let updates: Vec<ParamVector> = (0..3)
+        .map(|i| ParamVector::from_vec(vec![i as f32; n]))
+        .collect();
+    let out = ex.aggregate(&updates, &[0.2, 0.3, 0.5]).unwrap();
+    // 0*0.2 + 1*0.3 + 2*0.5 = 1.3
+    assert!((out.as_slice()[0] - 1.3).abs() < 1e-6);
+}
+
+#[test]
+fn shape_validation_errors_are_clean() {
+    let ex = &mut executor().0;
+    let params = ex.init_params(10).unwrap();
+    let (x, y) = batch(16, 700);
+    // Wrong batch artifact: b=33 doesn't exist.
+    assert!(ex.train_step(&params, &x, &y, 0.01, 33).is_err());
+    // Wrong param length.
+    let bad = ParamVector::zeros(10);
+    assert!(ex.train_step(&bad, &x, &y, 0.01, 16).is_err());
+    // Wrong x/y sizes.
+    assert!(ex.train_step(&params, &x[..100], &y, 0.01, 16).is_err());
+}
+
+#[test]
+fn warm_up_compiles_every_artifact() {
+    let ex = &mut executor().0;
+    ex.warm_up().unwrap();
+    let n_artifacts = ex.runtime().manifest.artifacts.len();
+    assert_eq!(ex.runtime().compiled_count(), n_artifacts);
+    assert!(n_artifacts >= 8);
+}
