@@ -40,6 +40,40 @@ fn main() {
         });
     }
 
+    section("streaming aggregation (the round engine's O(P) path)");
+    // The streaming mean folds one update at a time: peak live client
+    // vectors is 1 (vs k for every batch path above).  At P = 549,290 and
+    // k = 64 that is ~2 MiB of aggregate state instead of ~134 MiB of
+    // buffered updates (EXPERIMENTS.md §Round-engine).
+    {
+        use bouquetfl::emu::FitReport;
+        use bouquetfl::fl::{AccOutput, AggAccumulator, FitResult, StreamingMean};
+        let mut b = Bench::new(2.0);
+        for k in [4usize, 16, 64] {
+            let us = updates(k, p, 300 + k as u64);
+            b.run(&format!("streaming mean fold+finish k={k}"), || {
+                let mut acc = StreamingMean::new(p);
+                for (c, u) in us.iter().enumerate() {
+                    // The clone stands in for the one in-flight update the
+                    // round engine holds while folding.
+                    acc.push(FitResult {
+                        client: c as u32,
+                        params: u.clone(),
+                        num_examples: 32 + c,
+                        mean_loss: 0.0,
+                        emu: FitReport::synthetic(1, 1, 0.0),
+                        comm_s: 0.0,
+                    })
+                    .expect("push");
+                }
+                match Box::new(acc).finish().expect("finish") {
+                    AccOutput::Mean(m) => m.params.as_slice()[0],
+                    AccOutput::Buffered(_) => unreachable!(),
+                }
+            });
+        }
+    }
+
     section("Pallas HLO aggregate artifact (includes literal marshalling)");
     match ModelExecutor::new("artifacts") {
         Ok(mut ex) => {

@@ -1,6 +1,7 @@
 //! End-to-end round benchmark: a real federated round through the full
 //! stack (PJRT training + BouquetFL restriction + aggregation), plus the
-//! L3 hot-path components in isolation.
+//! L3 hot-path components in isolation, and the concurrent round engine
+//! (`--workers N`) on the real stack.
 //!
 //!     cargo bench --bench e2e_round
 
@@ -37,6 +38,30 @@ fn main() {
     b.run("full round, limited-parallel(4)", || {
         launch(&opts(1, 4)).expect("round").history.rounds.len()
     });
+
+    section("concurrent round engine on the real stack (per-worker PJRT executors)");
+    // Same federation, fits spread over pool workers.  Emulated history is
+    // identical; only host wall-clock moves (EXPERIMENTS.md §Round-engine).
+    let seq = {
+        let t0 = std::time::Instant::now();
+        let out = launch(&opts(2, 1)).expect("sequential engine");
+        (t0.elapsed().as_secs_f64(), out.history.rounds[0].emu_round_s)
+    };
+    println!("--workers 1: host {:.2}s, emu round {:.2}s", seq.0, seq.1);
+    for workers in [2usize, 4] {
+        let mut o = opts(2, 1);
+        o.workers = workers;
+        let t0 = std::time::Instant::now();
+        let out = launch(&o).expect("pooled engine");
+        let emu = out.history.rounds[0].emu_round_s;
+        println!(
+            "--workers {workers}: host {:.2}s ({:.2}x), emu round {:.2}s ({})",
+            t0.elapsed().as_secs_f64(),
+            seq.0 / t0.elapsed().as_secs_f64(),
+            emu,
+            if emu.to_bits() == seq.1.to_bits() { "bit-identical" } else { "DRIFT!" },
+        );
+    }
 
     section("amortisation over 5 rounds (compile once, round loop hot)");
     let mut b5 = Bench::new(40.0).with_max_iters(2);

@@ -56,6 +56,17 @@ const FRAMEWORK_BYTES: u64 = 1_500 * 1024 * 1024;
 
 static ACTIVE_ENVS: AtomicUsize = AtomicUsize::new(0);
 
+/// Serialises lib tests that spawn environments or observe the
+/// process-global counter above (cargo runs unit tests on many threads;
+/// integration-test binaries each get their own process and counter).
+#[cfg(test)]
+pub(crate) static ENV_COUNTER_TEST_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+#[cfg(test)]
+pub(crate) fn env_counter_test_guard() -> std::sync::MutexGuard<'static, ()> {
+    ENV_COUNTER_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
 /// Number of currently active restricted environments (for tests/benches).
 pub fn active_env_count() -> usize {
     ACTIVE_ENVS.load(Ordering::SeqCst)
@@ -88,6 +99,13 @@ pub struct FitReport {
     pub emu_gpu_s: f64,
     /// Emulated wall seconds including loader stalls.
     pub emu_total_s: f64,
+    /// Emulated seconds of the un-prefetchable first batch load.
+    /// (`emu_total_s = warmup_s + steps * step_s`; the round engine replays
+    /// these increments on the shared clock so a pooled round advances
+    /// emulated time bit-identically to a sequential one.)
+    pub warmup_s: f64,
+    /// Emulated seconds of one pipelined training step.
+    pub step_s: f64,
     /// Steps where the data loader (CPU) was the bottleneck.
     pub loader_bound_steps: u32,
     /// VRAM footprint of the job.
@@ -98,6 +116,34 @@ pub struct FitReport {
     pub energy_j: f64,
     /// Losses reported by the real executor (empty for timing-only fits).
     pub losses: Vec<f32>,
+}
+
+impl FitReport {
+    /// A zero-footprint report for tests/benches that synthesise
+    /// `FitResult`s without running the emulation substrate.
+    pub fn synthetic(steps: u32, batch: u32, emu_total_s: f64) -> Self {
+        let step_s = if steps == 0 { 0.0 } else { emu_total_s / steps as f64 };
+        FitReport {
+            steps,
+            batch,
+            emu_gpu_s: emu_total_s,
+            emu_total_s,
+            warmup_s: 0.0,
+            step_s,
+            loader_bound_steps: 0,
+            footprint: VramFootprint {
+                weights: 0,
+                gradients: 0,
+                optimizer_state: 0,
+                activations: 0,
+                context: 0,
+                workspace: 0,
+            },
+            cache_resident_fraction: 1.0,
+            energy_j: 0.0,
+            losses: vec![1.0; steps as usize],
+        }
+    }
 }
 
 /// Lifecycle state (Fig. 1).
@@ -250,6 +296,8 @@ impl RestrictedEnv {
             batch,
             emu_gpu_s: gpu_s * steps as f64,
             emu_total_s: warmup_s + step_s * steps as f64,
+            warmup_s,
+            step_s,
             loader_bound_steps: if loader_bound { steps } else { 0 },
             footprint,
             cache_resident_fraction: assess.cache_resident_fraction,
@@ -314,10 +362,8 @@ mod tests {
 
     /// Tests that assert on the global active-env counter must not overlap
     /// (cargo runs tests on multiple threads).
-    static COUNTER_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
-
     fn counter_guard() -> std::sync::MutexGuard<'static, ()> {
-        COUNTER_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+        env_counter_test_guard()
     }
 
     #[test]

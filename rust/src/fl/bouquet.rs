@@ -14,8 +14,13 @@ use crate::modelcost::WorkloadCost;
 use crate::runtime::ModelExecutor;
 
 /// Shared per-fit context (executor + clock + host + env policy).
+///
+/// The executor is optional: timing-only federations (`SimClient` fleets,
+/// scheduler benches, pool workers without an artifact directory) run the
+/// whole Fig. 1 lifecycle without PJRT; `TrainClient` fails its fit with a
+/// lifecycle error if no executor is present.
 pub struct BouquetContext<'a> {
-    pub executor: &'a mut ModelExecutor,
+    pub executor: Option<&'a mut ModelExecutor>,
     pub clock: &'a mut VirtualClock,
     pub host: &'a HardwareProfile,
     pub env_cfg: EnvConfig,
@@ -40,21 +45,21 @@ impl<'a> BouquetContext<'a> {
         mut exec: F,
     ) -> Result<FitReport, EmuError>
     where
-        F: FnMut(&mut ModelExecutor, u32) -> Result<f32, String>,
+        F: FnMut(Option<&mut ModelExecutor>, u32) -> Result<f32, String>,
     {
         // Spawn: apply hardware limits.
         let mut env = RestrictedEnv::spawn(target, self.host, self.env_cfg.clone())?;
 
         // Fit under the limits.  Runtime errors abort with a description.
         let mut runtime_failure: Option<String> = None;
-        let executor = &mut *self.executor;
+        let mut executor = self.executor.as_deref_mut();
         let report = env.run_fit(
             self.clock,
             workload,
             batch,
             steps,
             dataset_bytes,
-            |step| match exec(executor, step) {
+            |step| match exec(executor.as_deref_mut(), step) {
                 Ok(loss) => loss,
                 Err(e) => {
                     if runtime_failure.is_none() {
@@ -95,6 +100,7 @@ mod tests {
     // (the executor-dependent path is covered by rust/tests/runtime_e2e.rs).
     #[test]
     fn limits_do_not_leak_on_oom() {
+        let _g = crate::emu::env::env_counter_test_guard();
         let host = HardwareProfile::paper_host();
         let target = preset("budget-2019").unwrap();
         let before = active_env_count();

@@ -60,7 +60,11 @@ pub struct FitResult {
 }
 
 /// The Flower-shaped client interface.
-pub trait ClientApp {
+///
+/// `Send` because the concurrent round engine (`sched::pool`) moves clients
+/// to worker threads for the duration of a fit and back afterwards; client
+/// state is plain data, so this costs implementations nothing.
+pub trait ClientApp: Send {
     fn id(&self) -> ClientId;
     fn profile(&self) -> &HardwareProfile;
     fn num_examples(&self) -> usize;
@@ -207,6 +211,11 @@ impl ClientApp for TrainClient {
             dataset_bytes,
             |executor, step| {
                 if trained.is_none() {
+                    let executor = executor.ok_or_else(|| {
+                        "TrainClient needs a PJRT executor (artifact directory); \
+                         this context/worker has none"
+                            .to_string()
+                    })?;
                     trained = Some(
                         self.run_local_training(executor, global, cfg)
                             .map_err(|e| e.to_string())?,

@@ -1,6 +1,12 @@
-//! Client selection: which clients participate in a round.
+//! Client selection and per-round participation bookkeeping: which clients
+//! participate in a round, and what each contributed once the round's
+//! completion stream has been consumed.
 
+use crate::sched::Durations;
 use crate::util::rng::Pcg;
+
+use super::client::{ClientId, FitResult};
+use super::history::FailureRecord;
 
 /// Selection policy.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -46,9 +52,83 @@ impl ClientManager {
     }
 }
 
+/// Per-round participation ledger: the round loop consumes a completion
+/// stream of fit outcomes (it no longer holds a `Vec<FitResult>`), so the
+/// scalar bookkeeping a `RoundRecord` needs is folded here, O(clients)
+/// scalars instead of O(clients x params) vectors.
+///
+/// `record_success` must be called in selection order (the round engine's
+/// reorder buffer guarantees this) so the f32 loss fold is bit-identical
+/// to the old collect-then-sum path.
+#[derive(Debug, Default)]
+pub struct RoundLedger {
+    pub selected: Vec<u32>,
+    pub failures: Vec<FailureRecord>,
+    /// Per-client (id, emulated fit + comm seconds), successes only, in
+    /// selection order — the scheduler's input.
+    pub durations: Durations,
+    loss_weighted: f32,
+    total_examples: usize,
+}
+
+impl RoundLedger {
+    pub fn new(selected: Vec<u32>) -> Self {
+        RoundLedger { selected, ..Default::default() }
+    }
+
+    /// Fold one finished client's scalars in (the params go to the
+    /// aggregation accumulator, not here).
+    pub fn record_success(&mut self, r: &FitResult) {
+        self.durations.push((r.client, r.emu.emu_total_s + r.comm_s));
+        self.loss_weighted += r.mean_loss * r.num_examples as f32;
+        self.total_examples += r.num_examples;
+    }
+
+    pub fn record_failure(&mut self, client: ClientId, reason: String) {
+        self.failures.push(FailureRecord { client, reason });
+    }
+
+    pub fn successes(&self) -> usize {
+        self.durations.len()
+    }
+
+    pub fn total_examples(&self) -> usize {
+        self.total_examples
+    }
+
+    /// Example-weighted mean training loss (NaN if nothing succeeded).
+    pub fn train_loss(&self) -> f32 {
+        self.loss_weighted / self.total_examples as f32
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::emu::FitReport;
+    use crate::fl::params::ParamVector;
+
+    #[test]
+    fn ledger_folds_scalars_in_selection_order() {
+        let mut ledger = RoundLedger::new(vec![0, 1, 2]);
+        let r = |client: u32, loss: f32, n: usize, emu_s: f64| FitResult {
+            client,
+            params: ParamVector::zeros(1),
+            num_examples: n,
+            mean_loss: loss,
+            emu: FitReport::synthetic(1, 1, emu_s),
+            comm_s: 1.0,
+        };
+        ledger.record_success(&r(0, 2.0, 10, 3.0));
+        ledger.record_success(&r(2, 1.0, 30, 5.0));
+        ledger.record_failure(1, "GPU OOM".into());
+        assert_eq!(ledger.successes(), 2);
+        assert_eq!(ledger.total_examples(), 40);
+        assert_eq!(ledger.durations, vec![(0, 4.0), (2, 6.0)]);
+        // (2*10 + 1*30) / 40
+        assert!((ledger.train_loss() - 1.25).abs() < 1e-6);
+        assert_eq!(ledger.failures.len(), 1);
+    }
 
     #[test]
     fn all_selects_everyone() {

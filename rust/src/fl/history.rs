@@ -56,7 +56,7 @@ impl History {
         self.rounds.iter().map(|r| r.failures.len()).sum()
     }
 
-    /// Export as JSON (for plotting / EXPERIMENTS.md evidence).
+    /// Export as JSON (for plotting — see EXPERIMENTS.md §Evidence).
     pub fn to_json(&self) -> Json {
         Json::Arr(
             self.rounds

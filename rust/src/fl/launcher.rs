@@ -68,7 +68,12 @@ pub struct LaunchOptions {
     /// "fedavg" | "fedprox" | "fedavgm" | "fedadam" | "trimmed-mean" | "krum".
     pub strategy: String,
     /// 1 = sequential (paper default); >1 = limited-parallel extension.
+    /// Shapes the *emulated* timeline only.
     pub max_parallel: usize,
+    /// Real-execution concurrency: pool threads running actual client
+    /// fits (each with its own executor).  1 = in-thread sequential fits.
+    /// Does not change any emulated observable (DESIGN.md §8).
+    pub workers: usize,
     pub partition: PartitionScheme,
     pub selection: Selection,
     pub eval_every: u32,
@@ -97,6 +102,7 @@ impl Default for LaunchOptions {
             lr: 0.02,
             strategy: "fedavg".into(),
             max_parallel: 1,
+            workers: 1,
             partition: PartitionScheme::Dirichlet { alpha: 0.5 },
             selection: Selection::All,
             eval_every: 5,
@@ -126,6 +132,7 @@ impl LaunchOptions {
         o.lr = cfg.f64_or("federation", "lr", o.lr as f64) as f32;
         o.strategy = cfg.str_or("federation", "strategy", &o.strategy);
         o.max_parallel = cfg.u64_or("federation", "max_parallel", 1) as usize;
+        o.workers = (cfg.u64_or("federation", "workers", 1) as usize).max(1);
         o.eval_every = cfg.u64_or("federation", "eval_every", o.eval_every as u64) as u32;
         o.seed = cfg.u64_or("federation", "seed", o.seed);
         o.network = cfg.bool_or("federation", "network", false);
@@ -322,6 +329,15 @@ pub fn launch(opts: &LaunchOptions) -> Result<LaunchOutcome, FlError> {
         clients,
     )
     .with_eval_data(eval);
+    if opts.workers > 1 {
+        // Each pool worker builds (and caches) its own executor over the
+        // same artifact directory; real fits then overlap while the
+        // emulated timeline stays exactly as scheduled.
+        let dir = opts.artifacts_dir.clone();
+        let factory: crate::sched::ExecutorFactory =
+            std::sync::Arc::new(move || ModelExecutor::new(&dir));
+        server = server.with_round_engine(opts.workers, Some(factory));
+    }
 
     let mut executor = ModelExecutor::new(&opts.artifacts_dir)
         .map_err(|e| FlError::Strategy(format!("runtime: {e}")))?;
@@ -350,6 +366,7 @@ lr = 0.05
 strategy = "fedprox"
 fraction = 0.25
 max_parallel = 4
+workers = 3
 seed = 9
 network = true
 
@@ -373,6 +390,7 @@ profiles = ["gtx-1060", "budget-2019"]
         assert!((o.lr - 0.05).abs() < 1e-6);
         assert_eq!(o.strategy, "fedprox");
         assert_eq!(o.max_parallel, 4);
+        assert_eq!(o.workers, 3);
         assert_eq!(o.seed, 9);
         assert!(o.network);
         assert_eq!(o.selection, Selection::Fraction(0.25));

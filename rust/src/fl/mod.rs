@@ -12,9 +12,12 @@ pub mod strategy;
 
 pub use bouquet::BouquetContext;
 pub use client::{ClientApp, ClientId, FitConfig, FitResult, SimClient, TrainClient};
-pub use clientmgr::{ClientManager, Selection};
+pub use clientmgr::{ClientManager, RoundLedger, Selection};
 pub use history::{History, RoundRecord};
 pub use launcher::{launch, HardwareSource, LaunchOptions, LaunchOutcome};
 pub use params::ParamVector;
 pub use server::{ServerApp, ServerConfig};
-pub use strategy::{FedAdam, FedAvg, FedAvgM, FedProx, Krum, Strategy, TrimmedMean};
+pub use strategy::{
+    AccOutput, AggAccumulator, BoundedBuffer, FedAdam, FedAvg, FedAvgM, FedProx, Krum,
+    MeanAggregate, Strategy, StreamingMean, TrimmedMean,
+};

@@ -1,7 +1,18 @@
 //! The federated server (Flower's `ServerApp` analogue): round loop,
 //! client selection, BouquetFL-restricted fits, failure handling,
-//! aggregation, centralised evaluation, history.
+//! streaming aggregation, centralised evaluation, history.
+//!
+//! The round loop consumes a *completion stream* of fit outcomes instead
+//! of collecting a `Vec<FitResult>`: each finished client is folded into
+//! the strategy's [`AggAccumulator`] and dropped, so peak memory for the
+//! mean-family strategies is O(params) regardless of federation size
+//! (DESIGN.md §8).  With `with_round_engine(workers > 1, ..)` the fits
+//! themselves run concurrently on a [`WorkerPool`]; a reorder buffer
+//! restores selection order before folding, so the aggregate, the emulated
+//! `Schedule`, and the shared clock are bit-identical to the sequential
+//! engine.
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::data::Dataset;
@@ -9,14 +20,15 @@ use crate::emu::{EnvConfig, Isolation, VirtualClock};
 use crate::error::{EmuError, FlError};
 use crate::hardware::profile::HardwareProfile;
 use crate::runtime::ModelExecutor;
-use crate::sched::{Durations, Scheduler, Trace};
+use crate::sched::pool::FitOutcomeSlim;
+use crate::sched::{ExecutorFactory, FitTask, ReorderBuffer, Scheduler, Trace, WorkerPool};
 
 use super::bouquet::BouquetContext;
 use super::client::{ClientApp, FitConfig, FitResult};
-use super::clientmgr::{ClientManager, Selection};
-use super::history::{FailureRecord, History, RoundRecord};
+use super::clientmgr::{ClientManager, RoundLedger, Selection};
+use super::history::{History, RoundRecord};
 use super::params::ParamVector;
-use super::strategy::Strategy;
+use super::strategy::{AggAccumulator, Strategy};
 
 /// Server configuration.
 #[derive(Debug, Clone)]
@@ -45,25 +57,30 @@ impl Default for ServerConfig {
 }
 
 /// The federated server.
-pub struct ServerApp<'a> {
+pub struct ServerApp {
     pub cfg: ServerConfig,
     pub host: HardwareProfile,
     pub env_cfg: EnvConfig,
     strategy: Box<dyn Strategy>,
     scheduler: Box<dyn Scheduler>,
-    clients: Vec<Box<dyn ClientApp + 'a>>,
+    /// `None` marks a client currently checked out to a fit worker.
+    clients: Vec<Option<Box<dyn ClientApp>>>,
     /// Held-out evaluation data (centralised, on the server).
     eval_data: Option<Dataset>,
+    /// Real-execution concurrency (1 = in-thread sequential fits).
+    workers: usize,
+    /// Per-worker executor builder for the concurrent engine.
+    executor_factory: Option<ExecutorFactory>,
     pub trace: Trace,
 }
 
-impl<'a> ServerApp<'a> {
+impl ServerApp {
     pub fn new(
         cfg: ServerConfig,
         host: HardwareProfile,
         strategy: Box<dyn Strategy>,
         scheduler: Box<dyn Scheduler>,
-        clients: Vec<Box<dyn ClientApp + 'a>>,
+        clients: Vec<Box<dyn ClientApp>>,
     ) -> Self {
         // The paper's §3: hardware controls are global; only the
         // limited-parallel extension may relax isolation.
@@ -78,8 +95,10 @@ impl<'a> ServerApp<'a> {
             env_cfg: EnvConfig { isolation, ..Default::default() },
             strategy,
             scheduler,
-            clients,
+            clients: clients.into_iter().map(Some).collect(),
             eval_data: None,
+            workers: 1,
+            executor_factory: None,
             trace: Trace::default(),
         }
     }
@@ -89,79 +108,95 @@ impl<'a> ServerApp<'a> {
         self
     }
 
+    /// Run real fits on `workers` pool threads, each building its own
+    /// executor via `factory`.  `workers = 1` keeps the in-thread engine.
+    /// Emulated limits cannot stay globally exclusive once real fits
+    /// overlap, so `workers > 1` forces `Isolation::Concurrent`.
+    pub fn with_round_engine(
+        mut self,
+        workers: usize,
+        factory: Option<ExecutorFactory>,
+    ) -> Self {
+        self.workers = workers.max(1);
+        self.executor_factory = factory;
+        if self.workers > 1 {
+            self.env_cfg.isolation = Isolation::Concurrent;
+        }
+        self
+    }
+
     pub fn num_clients(&self) -> usize {
         self.clients.len()
     }
 
-    /// Run the federation; returns the training history.
+    /// Run the federation with a PJRT executor; returns the training
+    /// history.  The executor initialises the global model and serves
+    /// evaluation (and the sequential engine's fits).
     pub fn run(
         &mut self,
         executor: &mut ModelExecutor,
         clock: &mut VirtualClock,
     ) -> Result<(ParamVector, History), FlError> {
+        let init = executor
+            .init_params(self.cfg.seed as i32)
+            .map_err(|e| FlError::Strategy(format!("init failed: {e}")))?;
+        self.run_from(init, Some(executor), clock)
+    }
+
+    /// Run the federation from explicit initial parameters, with or
+    /// without a PJRT executor.  Executor-less runs cover timing-only
+    /// federations (`SimClient` fleets): fits, scheduling, aggregation and
+    /// history all work; centralised evaluation is skipped.
+    pub fn run_from(
+        &mut self,
+        init: ParamVector,
+        mut executor: Option<&mut ModelExecutor>,
+        clock: &mut VirtualClock,
+    ) -> Result<(ParamVector, History), FlError> {
         if self.clients.is_empty() {
             return Err(FlError::NoClients { round: 0 });
         }
-        let mut global = executor
-            .init_params(self.cfg.seed as i32)
-            .map_err(|e| FlError::Strategy(format!("init failed: {e}")))?;
+        let mut global = init;
         let mut history = History::default();
         let mut manager = ClientManager::new(self.cfg.seed, self.cfg.selection);
+        let pool = if self.workers > 1 {
+            Some(WorkerPool::spawn(self.workers, self.executor_factory.clone()))
+        } else {
+            None
+        };
 
         for round in 0..self.cfg.rounds {
             let host_t0 = Instant::now();
             let selected = manager.select(self.clients.len());
             let fit_cfg = self.strategy.configure(round, &self.cfg.fit);
 
-            // --- fit phase (sequential real execution; see sched/) -------
-            let mut results: Vec<FitResult> = Vec::new();
-            let mut failures: Vec<FailureRecord> = Vec::new();
-            let mut durations: Durations = Vec::new();
+            // --- fit phase: stream completions into the accumulator ------
+            let mut ledger =
+                RoundLedger::new(selected.iter().map(|&i| i as u32).collect());
+            let mut acc = self.strategy.accumulator(global.len(), selected.len());
             let round_t0 = clock.now_s();
-            for &ci in &selected {
-                let client = &mut self.clients[ci];
-                let mut ctx = BouquetContext {
-                    executor,
-                    clock,
-                    host: &self.host,
-                    env_cfg: self.env_cfg.clone(),
-                };
-                match client.fit(&global, &fit_cfg, &mut ctx) {
-                    Ok(result) => {
-                        durations.push((
-                            result.client,
-                            result.emu.emu_total_s + result.comm_s,
-                        ));
-                        results.push(result);
-                    }
-                    Err(e @ EmuError::GpuOom { .. })
-                    | Err(e @ EmuError::HostOom { .. }) => {
-                        // The paper's OOM story: the framework survives a
-                        // failing client; it simply contributes no update.
-                        failures.push(FailureRecord {
-                            client: client.id(),
-                            reason: e.to_string(),
-                        });
-                    }
-                    Err(other) => {
-                        return Err(FlError::ClientFailed {
-                            client: client.id(),
-                            source: other,
-                        })
-                    }
-                }
+            match &pool {
+                Some(pool) => self.round_pooled(
+                    pool, &selected, &global, &fit_cfg, clock, &mut ledger, &mut acc,
+                )?,
+                None => self.round_inline(
+                    &mut executor, &selected, &global, &fit_cfg, clock, &mut ledger,
+                    &mut acc,
+                )?,
             }
 
-            if results.is_empty() {
+            if ledger.successes() == 0 {
                 if self.cfg.fail_on_empty_round {
                     return Err(FlError::AllClientsFailed {
                         round,
                         count: selected.len(),
                     });
                 }
+                let selected = std::mem::take(&mut ledger.selected);
+                let failures = std::mem::take(&mut ledger.failures);
                 history.push(RoundRecord {
                     round,
-                    selected: selected.iter().map(|&i| i as u32).collect(),
+                    selected,
                     failures,
                     train_loss: f32::NAN,
                     eval_loss: None,
@@ -173,20 +208,26 @@ impl<'a> ServerApp<'a> {
             }
 
             // --- round wall-clock per the scheduling policy --------------
-            let schedule = self.scheduler.schedule(&durations);
+            let schedule = self.scheduler.schedule(&ledger.durations);
             let base = round_t0;
             for &(c, s, e) in &schedule.spans {
                 self.trace.add(c, format!("round{round}"), base + s, base + e);
             }
 
             // --- aggregate ------------------------------------------------
-            global = self.strategy.aggregate(&global, &results, executor)?;
+            let output = acc.finish()?;
+            global = self
+                .strategy
+                .reduce(&global, output, executor.as_deref_mut())?;
 
             // --- evaluate -------------------------------------------------
             let (eval_loss, eval_accuracy) = if self.cfg.eval_every > 0
                 && (round + 1) % self.cfg.eval_every == 0
             {
-                match self.evaluate(executor, &global) {
+                match executor
+                    .as_deref_mut()
+                    .and_then(|ex| self.evaluate(ex, &global))
+                {
                     Some((l, a)) => (Some(l), Some(a)),
                     None => (None, None),
                 }
@@ -194,16 +235,12 @@ impl<'a> ServerApp<'a> {
                 (None, None)
             };
 
-            let total_examples: usize = results.iter().map(|r| r.num_examples).sum();
-            let train_loss = results
-                .iter()
-                .map(|r| r.mean_loss * r.num_examples as f32)
-                .sum::<f32>()
-                / total_examples as f32;
-
+            let train_loss = ledger.train_loss();
+            let selected = std::mem::take(&mut ledger.selected);
+            let failures = std::mem::take(&mut ledger.failures);
             history.push(RoundRecord {
                 round,
-                selected: selected.iter().map(|&i| i as u32).collect(),
+                selected,
                 failures,
                 train_loss,
                 eval_loss,
@@ -213,6 +250,124 @@ impl<'a> ServerApp<'a> {
             });
         }
         Ok((global, history))
+    }
+
+    /// The paper-default engine: fits run sequentially in this thread,
+    /// each finished client folded into the accumulator immediately.
+    #[allow(clippy::too_many_arguments)]
+    fn round_inline(
+        &mut self,
+        executor: &mut Option<&mut ModelExecutor>,
+        selected: &[usize],
+        global: &ParamVector,
+        fit_cfg: &FitConfig,
+        clock: &mut VirtualClock,
+        ledger: &mut RoundLedger,
+        acc: &mut Box<dyn AggAccumulator>,
+    ) -> Result<(), FlError> {
+        for &ci in selected {
+            let client = self.clients[ci].as_mut().expect("client checked in");
+            let mut ctx = BouquetContext {
+                executor: executor.as_deref_mut(),
+                clock,
+                host: &self.host,
+                env_cfg: self.env_cfg.clone(),
+            };
+            match client.fit(global, fit_cfg, &mut ctx) {
+                Ok(result) => fold(ledger, acc, result)?,
+                Err(e @ EmuError::GpuOom { .. }) | Err(e @ EmuError::HostOom { .. }) => {
+                    // The paper's OOM story: the framework survives a
+                    // failing client; it simply contributes no update.
+                    ledger.record_failure(client.id(), e.to_string());
+                }
+                Err(other) => {
+                    return Err(FlError::ClientFailed {
+                        client: client.id(),
+                        source: other,
+                    })
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// The concurrent engine: fits run on the pool; outcomes stream back
+    /// in completion order and pass through a reorder buffer so every fold
+    /// (accumulator, ledger, shared clock) happens in selection order —
+    /// bit-identical to the inline engine.
+    #[allow(clippy::too_many_arguments)]
+    fn round_pooled(
+        &mut self,
+        pool: &WorkerPool,
+        selected: &[usize],
+        global: &ParamVector,
+        fit_cfg: &FitConfig,
+        clock: &mut VirtualClock,
+        ledger: &mut RoundLedger,
+        acc: &mut Box<dyn AggAccumulator>,
+    ) -> Result<(), FlError> {
+        let shared = Arc::new(global.clone());
+        for (pos, &ci) in selected.iter().enumerate() {
+            let client = self.clients[ci].take().expect("client checked in");
+            pool.submit(FitTask {
+                index: pos,
+                client,
+                global: Arc::clone(&shared),
+                cfg: fit_cfg.clone(),
+                host: self.host.clone(),
+                env_cfg: self.env_cfg.clone(),
+            })?;
+        }
+
+        let mut reorder = ReorderBuffer::new(selected.len());
+        let mut fatal: Option<FlError> = None;
+        for _ in 0..selected.len() {
+            let outcome = pool.recv()?;
+            self.clients[selected[outcome.index]] = Some(outcome.client);
+            reorder.accept(FitOutcomeSlim {
+                index: outcome.index,
+                client_id: outcome.client_id,
+                result: outcome.result,
+            });
+            while let Some(slim) = reorder.pop_ready() {
+                // Once the round is doomed, keep draining (every client must
+                // come back) but stop folding — the first error is the one
+                // the caller sees.
+                if fatal.is_some() {
+                    continue;
+                }
+                match slim.result {
+                    Ok(result) => {
+                        // Replay the emulated time the inline engine would
+                        // have advanced during this fit, increment for
+                        // increment (bit-identical clock trajectory).
+                        clock.advance(result.emu.warmup_s);
+                        for _ in 0..result.emu.steps {
+                            clock.advance(result.emu.step_s);
+                        }
+                        if let Err(e) = fold(ledger, acc, result) {
+                            fatal = Some(e);
+                        }
+                    }
+                    Err(e @ EmuError::GpuOom { .. })
+                    | Err(e @ EmuError::HostOom { .. }) => {
+                        ledger.record_failure(slim.client_id, e.to_string());
+                    }
+                    Err(other) => {
+                        fatal = Some(FlError::ClientFailed {
+                            client: slim.client_id,
+                            source: other,
+                        });
+                    }
+                }
+            }
+        }
+        // All clients are checked back in; only now surface a fatal error
+        // (same observable as the inline engine's early return).
+        match fatal {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
     }
 
     /// Centralised eval over the held-out set (batched by the compiled
@@ -251,4 +406,15 @@ impl<'a> ServerApp<'a> {
         }
         Some(((loss_sum / n as f64) as f32, (correct / n as f64) as f32))
     }
+}
+
+/// Fold one success into the round's scalar ledger and the streaming
+/// aggregate; the `FitResult` (and its param vector) dies here.
+fn fold(
+    ledger: &mut RoundLedger,
+    acc: &mut Box<dyn AggAccumulator>,
+    result: FitResult,
+) -> Result<(), FlError> {
+    ledger.record_success(&result);
+    acc.push(result)
 }

@@ -1,0 +1,289 @@
+//! Streaming aggregation: fold each finished client into the running
+//! aggregate as it arrives, instead of collecting every update first.
+//!
+//! The batch path materialises all K client `ParamVector`s before calling
+//! `Strategy::aggregate` — O(K x P) peak memory, which is what caps
+//! federation size on a single host.  `AggAccumulator` replaces that with
+//! an in-place fold: the mean family (FedAvg / FedAvgM / FedProx / FedAdam)
+//! keeps one f64 running mean — O(P) regardless of fan-in — while the
+//! robust family (Krum, trimmed mean) inherently needs all updates and
+//! uses a fan-in-bounded buffer (DESIGN.md §8).
+//!
+//! Determinism contract: the round engine feeds accumulators in *selection
+//! order* (a reorder buffer undoes completion-order arrival), so the folded
+//! aggregate is bit-identical whether fits ran sequentially or on N workers
+//! (EXPERIMENTS.md §Round-engine).
+
+use crate::error::FlError;
+
+use super::super::client::FitResult;
+use super::super::params::ParamVector;
+
+/// What a finished accumulator hands back to the strategy.
+pub enum AccOutput {
+    /// Example-weighted mean of the client parameters (mean family).
+    Mean(MeanAggregate),
+    /// All buffered results, for strategies that need every update.
+    Buffered(Vec<FitResult>),
+}
+
+/// The weighted running mean and the totals that came with it.
+pub struct MeanAggregate {
+    /// `sum_k n_k x_k / sum_k n_k`, folded in f64, cast to f32 at the end.
+    pub params: ParamVector,
+    pub total_examples: usize,
+    pub clients: usize,
+}
+
+/// In-place fold of finished clients into a running aggregate.
+///
+/// `push` consumes the `FitResult` — a streaming accumulator drops the
+/// update immediately after folding it, so at most one client vector is
+/// live at a time on top of the accumulator's own state.
+pub trait AggAccumulator: Send {
+    fn name(&self) -> &'static str;
+
+    /// Fold one finished client in.  Called in selection order.
+    fn push(&mut self, result: FitResult) -> Result<(), FlError>;
+
+    /// Clients folded so far.
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Client param vectors currently held live (0 for true streaming
+    /// accumulators; grows with fan-in for buffering ones).  Tests use this
+    /// to assert the O(P) memory claim.
+    fn buffered_updates(&self) -> usize;
+
+    /// Finish the round and hand the aggregate to `Strategy::reduce`.
+    fn finish(self: Box<Self>) -> Result<AccOutput, FlError>;
+}
+
+/// O(P) weighted running mean: `W += n_k; m += (n_k / W) (x_k - m)`.
+///
+/// Folding in f64 keeps the result within 1e-6 of the batch f32
+/// `ParamVector::weighted_sum` (verified by property test) while the state
+/// stays a single length-P buffer regardless of how many clients report.
+pub struct StreamingMean {
+    mean: Vec<f64>,
+    total_weight: f64,
+    total_examples: usize,
+    clients: usize,
+}
+
+impl StreamingMean {
+    pub fn new(num_params: usize) -> Self {
+        StreamingMean {
+            mean: vec![0.0; num_params],
+            total_weight: 0.0,
+            total_examples: 0,
+            clients: 0,
+        }
+    }
+}
+
+impl AggAccumulator for StreamingMean {
+    fn name(&self) -> &'static str {
+        "streaming-mean"
+    }
+
+    fn push(&mut self, result: FitResult) -> Result<(), FlError> {
+        if result.params.len() != self.mean.len() {
+            return Err(FlError::ParamMismatch {
+                expected: self.mean.len(),
+                got: result.params.len(),
+            });
+        }
+        if result.num_examples == 0 {
+            return Err(FlError::Strategy(format!(
+                "client {} reported zero examples",
+                result.client
+            )));
+        }
+        let w = result.num_examples as f64;
+        self.total_weight += w;
+        let alpha = w / self.total_weight;
+        for (m, &x) in self.mean.iter_mut().zip(result.params.as_slice()) {
+            *m += alpha * (x as f64 - *m);
+        }
+        self.total_examples += result.num_examples;
+        self.clients += 1;
+        Ok(())
+        // `result` drops here: nothing of the update outlives the fold.
+    }
+
+    fn len(&self) -> usize {
+        self.clients
+    }
+
+    fn buffered_updates(&self) -> usize {
+        0
+    }
+
+    fn finish(self: Box<Self>) -> Result<AccOutput, FlError> {
+        if self.clients == 0 {
+            return Err(FlError::Strategy("aggregate over zero clients".into()));
+        }
+        let params =
+            ParamVector::from_vec(self.mean.iter().map(|&x| x as f32).collect());
+        Ok(AccOutput::Mean(MeanAggregate {
+            params,
+            total_examples: self.total_examples,
+            clients: self.clients,
+        }))
+    }
+}
+
+/// Fan-in-bounded buffer for strategies that need all K updates at once
+/// (Krum's pairwise distances, trimmed mean's per-coordinate sort).
+/// O(K x P) is inherent to those estimators; the bound makes the cost an
+/// explicit contract instead of an unbounded collect.
+pub struct BoundedBuffer {
+    results: Vec<FitResult>,
+    capacity: usize,
+}
+
+impl BoundedBuffer {
+    pub fn new(capacity: usize) -> Self {
+        BoundedBuffer { results: Vec::new(), capacity: capacity.max(1) }
+    }
+}
+
+impl AggAccumulator for BoundedBuffer {
+    fn name(&self) -> &'static str {
+        "bounded-buffer"
+    }
+
+    fn push(&mut self, result: FitResult) -> Result<(), FlError> {
+        if self.results.len() >= self.capacity {
+            return Err(FlError::Strategy(format!(
+                "accumulator fan-in exceeds the declared bound {}",
+                self.capacity
+            )));
+        }
+        self.results.push(result);
+        Ok(())
+    }
+
+    fn len(&self) -> usize {
+        self.results.len()
+    }
+
+    fn buffered_updates(&self) -> usize {
+        self.results.len()
+    }
+
+    fn finish(self: Box<Self>) -> Result<AccOutput, FlError> {
+        if self.results.is_empty() {
+            return Err(FlError::Strategy("aggregate over zero clients".into()));
+        }
+        Ok(AccOutput::Buffered(self.results))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::example_weights;
+    use super::*;
+    use crate::emu::FitReport;
+    use crate::util::rng::Pcg;
+
+    fn result(client: u32, vals: Vec<f32>, n: usize) -> FitResult {
+        FitResult {
+            client,
+            params: ParamVector::from_vec(vals),
+            num_examples: n,
+            mean_loss: 1.0,
+            emu: FitReport::synthetic(1, 1, 0.1),
+            comm_s: 0.0,
+        }
+    }
+
+    /// Deterministically regenerate client k's update so the test itself
+    /// never holds more than one vector at a time.
+    fn client_vec(k: u32, p: usize) -> Vec<f32> {
+        let mut rng = Pcg::new(0xACC, k as u64);
+        (0..p).map(|_| rng.f32()).collect()
+    }
+
+    #[test]
+    fn streaming_mean_matches_batch_weighted_sum() {
+        let p = 10_000;
+        let k = 64u32;
+        let mut acc = Box::new(StreamingMean::new(p));
+        for c in 0..k {
+            // One client vector live at a time: allocated, folded, dropped.
+            acc.push(result(c, client_vec(c, p), 16 + c as usize)).unwrap();
+            assert_eq!(acc.buffered_updates(), 0, "streaming must not buffer");
+        }
+        assert_eq!(acc.len(), k as usize);
+
+        // Batch oracle (materialises everything — exactly what the
+        // streaming path avoids).
+        let results: Vec<FitResult> =
+            (0..k).map(|c| result(c, client_vec(c, p), 16 + c as usize)).collect();
+        let weights = example_weights(&results);
+        let updates: Vec<ParamVector> =
+            results.iter().map(|r| r.params.clone()).collect();
+        let batch = ParamVector::weighted_sum(&updates, &weights);
+
+        match acc.finish().unwrap() {
+            AccOutput::Mean(m) => {
+                assert_eq!(m.clients, 64);
+                for (a, b) in m.params.as_slice().iter().zip(batch.as_slice()) {
+                    assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+                }
+            }
+            AccOutput::Buffered(_) => panic!("streaming mean must emit Mean"),
+        }
+    }
+
+    #[test]
+    fn streaming_mean_is_fold_order_sensitive_but_engine_feeds_in_selection_order() {
+        // Document why the round engine reorders: folding [a, b] vs [b, a]
+        // may differ in the last bits, so bit-identity across worker counts
+        // requires a fixed fold order.
+        let mut fwd = StreamingMean::new(4);
+        let mut rev = StreamingMean::new(4);
+        let a = || result(0, vec![0.1, 0.7, 0.3, 0.9], 10);
+        let b = || result(1, vec![0.5, 0.2, 0.8, 0.4], 30);
+        fwd.push(a()).unwrap();
+        fwd.push(b()).unwrap();
+        rev.push(b()).unwrap();
+        rev.push(a()).unwrap();
+        let f = match Box::new(fwd).finish().unwrap() {
+            AccOutput::Mean(m) => m.params,
+            _ => unreachable!(),
+        };
+        let r = match Box::new(rev).finish().unwrap() {
+            AccOutput::Mean(m) => m.params,
+            _ => unreachable!(),
+        };
+        for (x, y) in f.as_slice().iter().zip(r.as_slice()) {
+            assert!((x - y).abs() < 1e-6); // close, but only order makes it exact
+        }
+    }
+
+    #[test]
+    fn streaming_mean_rejects_mismatched_lengths_and_empty_finish() {
+        let mut acc = StreamingMean::new(3);
+        assert!(acc.push(result(0, vec![1.0], 5)).is_err());
+        assert!(Box::new(StreamingMean::new(3)).finish().is_err());
+    }
+
+    #[test]
+    fn bounded_buffer_enforces_fan_in() {
+        let mut buf = BoundedBuffer::new(2);
+        buf.push(result(0, vec![1.0], 1)).unwrap();
+        buf.push(result(1, vec![2.0], 1)).unwrap();
+        assert_eq!(buf.buffered_updates(), 2);
+        assert!(buf.push(result(2, vec![3.0], 1)).is_err());
+        match Box::new(buf).finish().unwrap() {
+            AccOutput::Buffered(rs) => assert_eq!(rs.len(), 2),
+            AccOutput::Mean(_) => panic!("buffer must emit Buffered"),
+        }
+    }
+}

@@ -6,7 +6,7 @@ use crate::runtime::ModelExecutor;
 
 use super::super::client::FitResult;
 use super::super::params::ParamVector;
-use super::{weighted_average, Strategy};
+use super::{weighted_average, AccOutput, AggAccumulator, Strategy, StreamingMean};
 
 /// Server-side Adam over round updates.
 #[derive(Debug)]
@@ -24,20 +24,9 @@ impl FedAdam {
     pub fn new(lr: f32) -> Self {
         FedAdam { lr, beta1: 0.9, beta2: 0.99, eps: 1e-6, m: None, v: None, t: 0 }
     }
-}
 
-impl Strategy for FedAdam {
-    fn name(&self) -> &'static str {
-        "fedadam"
-    }
-
-    fn aggregate(
-        &mut self,
-        global: &ParamVector,
-        results: &[FitResult],
-        executor: &mut ModelExecutor,
-    ) -> Result<ParamVector, FlError> {
-        let avg = weighted_average(results, executor)?;
+    /// The Adam step on the round mean, shared by both aggregation paths.
+    fn apply(&mut self, global: &ParamVector, avg: &ParamVector) -> Result<ParamVector, FlError> {
         let delta = avg.sub(global); // pseudo-gradient (ascent direction)
         let n = delta.len();
         let m = self.m.get_or_insert_with(|| vec![0.0; n]);
@@ -59,5 +48,42 @@ impl Strategy for FedAdam {
             out_s[i] += self.lr * mhat / (vhat.sqrt() + self.eps);
         }
         Ok(out)
+    }
+}
+
+impl Strategy for FedAdam {
+    fn name(&self) -> &'static str {
+        "fedadam"
+    }
+
+    /// The mean streams at O(P); Adam state applies to it in `reduce`.
+    fn accumulator(
+        &self,
+        num_params: usize,
+        _expected_clients: usize,
+    ) -> Box<dyn AggAccumulator> {
+        Box::new(StreamingMean::new(num_params))
+    }
+
+    fn reduce(
+        &mut self,
+        global: &ParamVector,
+        output: AccOutput,
+        executor: Option<&mut ModelExecutor>,
+    ) -> Result<ParamVector, FlError> {
+        match output {
+            AccOutput::Mean(mean) => self.apply(global, &mean.params),
+            AccOutput::Buffered(results) => self.aggregate(global, &results, executor),
+        }
+    }
+
+    fn aggregate(
+        &mut self,
+        global: &ParamVector,
+        results: &[FitResult],
+        executor: Option<&mut ModelExecutor>,
+    ) -> Result<ParamVector, FlError> {
+        let avg = weighted_average(results, executor)?;
+        self.apply(global, &avg)
     }
 }

@@ -5,7 +5,7 @@ use crate::runtime::ModelExecutor;
 
 use super::super::client::FitResult;
 use super::super::params::ParamVector;
-use super::{weighted_average, Strategy};
+use super::{weighted_average, AggAccumulator, Strategy, StreamingMean};
 
 /// Plain federated averaging.
 #[derive(Debug, Default)]
@@ -16,11 +16,21 @@ impl Strategy for FedAvg {
         "fedavg"
     }
 
+    /// Streams the weighted mean in place — O(P) peak memory, the default
+    /// `reduce` returns it unchanged.
+    fn accumulator(
+        &self,
+        num_params: usize,
+        _expected_clients: usize,
+    ) -> Box<dyn AggAccumulator> {
+        Box::new(StreamingMean::new(num_params))
+    }
+
     fn aggregate(
         &mut self,
         _global: &ParamVector,
         results: &[FitResult],
-        executor: &mut ModelExecutor,
+        executor: Option<&mut ModelExecutor>,
     ) -> Result<ParamVector, FlError> {
         weighted_average(results, executor)
     }

@@ -6,7 +6,7 @@ use crate::runtime::ModelExecutor;
 
 use super::super::client::FitResult;
 use super::super::params::ParamVector;
-use super::{weighted_average, Strategy};
+use super::{weighted_average, AccOutput, AggAccumulator, Strategy, StreamingMean};
 
 /// Server momentum over round updates: `m <- beta m + (avg - global)`,
 /// `global <- global + m`.
@@ -21,20 +21,9 @@ impl FedAvgM {
         assert!((0.0..1.0).contains(&beta));
         FedAvgM { beta, momentum: None }
     }
-}
 
-impl Strategy for FedAvgM {
-    fn name(&self) -> &'static str {
-        "fedavgm"
-    }
-
-    fn aggregate(
-        &mut self,
-        global: &ParamVector,
-        results: &[FitResult],
-        executor: &mut ModelExecutor,
-    ) -> Result<ParamVector, FlError> {
-        let avg = weighted_average(results, executor)?;
+    /// The momentum step, shared by the streaming and batch paths.
+    fn apply(&mut self, global: &ParamVector, avg: &ParamVector) -> ParamVector {
         let delta = avg.sub(global);
         let m = match self.momentum.take() {
             Some(mut m) => {
@@ -47,6 +36,43 @@ impl Strategy for FedAvgM {
         let mut new_global = global.clone();
         new_global.add_scaled(&m, 1.0);
         self.momentum = Some(m);
-        Ok(new_global)
+        new_global
+    }
+}
+
+impl Strategy for FedAvgM {
+    fn name(&self) -> &'static str {
+        "fedavgm"
+    }
+
+    /// The mean streams at O(P); momentum applies to it in `reduce`.
+    fn accumulator(
+        &self,
+        num_params: usize,
+        _expected_clients: usize,
+    ) -> Box<dyn AggAccumulator> {
+        Box::new(StreamingMean::new(num_params))
+    }
+
+    fn reduce(
+        &mut self,
+        global: &ParamVector,
+        output: AccOutput,
+        executor: Option<&mut ModelExecutor>,
+    ) -> Result<ParamVector, FlError> {
+        match output {
+            AccOutput::Mean(mean) => Ok(self.apply(global, &mean.params)),
+            AccOutput::Buffered(results) => self.aggregate(global, &results, executor),
+        }
+    }
+
+    fn aggregate(
+        &mut self,
+        global: &ParamVector,
+        results: &[FitResult],
+        executor: Option<&mut ModelExecutor>,
+    ) -> Result<ParamVector, FlError> {
+        let avg = weighted_average(results, executor)?;
+        Ok(self.apply(global, &avg))
     }
 }

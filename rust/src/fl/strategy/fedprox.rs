@@ -8,7 +8,7 @@ use crate::runtime::ModelExecutor;
 
 use super::super::client::{FitConfig, FitResult};
 use super::super::params::ParamVector;
-use super::{weighted_average, Strategy};
+use super::{weighted_average, AggAccumulator, Strategy, StreamingMean};
 
 /// FedProx with proximal coefficient `mu`.
 #[derive(Debug)]
@@ -32,11 +32,20 @@ impl Strategy for FedProx {
         FitConfig { round, prox_mu: Some(self.mu), ..base.clone() }
     }
 
+    /// Server side is plain FedAvg — stream the mean at O(P).
+    fn accumulator(
+        &self,
+        num_params: usize,
+        _expected_clients: usize,
+    ) -> Box<dyn AggAccumulator> {
+        Box::new(StreamingMean::new(num_params))
+    }
+
     fn aggregate(
         &mut self,
         _global: &ParamVector,
         results: &[FitResult],
-        executor: &mut ModelExecutor,
+        executor: Option<&mut ModelExecutor>,
     ) -> Result<ParamVector, FlError> {
         weighted_average(results, executor)
     }

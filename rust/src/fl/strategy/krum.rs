@@ -1,6 +1,10 @@
 //! Krum (Blanchard et al., 2017): Byzantine-robust selection — pick the
 //! client update closest (in summed squared distance) to its n−f−2 nearest
 //! neighbours.  Multi-Krum averages the `m` best-scoring updates.
+//!
+//! Krum needs every pairwise distance, so it cannot stream: it keeps the
+//! default fan-in-bounded buffer accumulator (O(K x P) is inherent here;
+//! see DESIGN.md §8).
 
 use crate::error::FlError;
 use crate::runtime::ModelExecutor;
@@ -56,7 +60,7 @@ impl Strategy for Krum {
         &mut self,
         _global: &ParamVector,
         results: &[FitResult],
-        _executor: &mut ModelExecutor,
+        _executor: Option<&mut ModelExecutor>,
     ) -> Result<ParamVector, FlError> {
         if results.is_empty() {
             return Err(FlError::Strategy("krum over zero clients".into()));
@@ -91,22 +95,7 @@ mod tests {
             params: ParamVector::from_vec(vals.to_vec()),
             num_examples: 10,
             mean_loss: 1.0,
-            emu: crate::emu::FitReport {
-                steps: 1,
-                batch: 1,
-                emu_gpu_s: 0.0,
-                emu_total_s: 0.0,
-                loader_bound_steps: 0,
-                footprint: crate::emu::training_footprint(
-                    crate::hardware::gpu_by_slug("gtx-1060").unwrap(),
-                    &crate::modelcost::mlp(8),
-                    1,
-                    crate::emu::Optimizer::Sgd,
-                ),
-                cache_resident_fraction: 1.0,
-                energy_j: 0.0,
-                losses: vec![1.0],
-            },
+            emu: crate::emu::FitReport::synthetic(1, 1, 0.0),
             comm_s: 0.0,
         }
     }

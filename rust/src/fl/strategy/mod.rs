@@ -1,8 +1,19 @@
 //! Aggregation strategies.  BouquetFL "operates independently of the ...
 //! aggregation strategy" (paper §2); the framework therefore ships the
 //! standard set — FedAvg, FedProx, FedAvgM, FedAdam, coordinate-wise
-//! trimmed mean — all over flat parameter vectors.
+//! trimmed mean, Krum — all over flat parameter vectors.
+//!
+//! Two aggregation paths exist (DESIGN.md §8):
+//!
+//! * **Streaming** (the round engine's default): `Strategy::accumulator`
+//!   hands out an [`AggAccumulator`] that folds each finished client in
+//!   place as it arrives; `Strategy::reduce` turns the folded state into
+//!   the next global model.  The mean family streams at O(P) peak memory.
+//! * **Batch** (`Strategy::aggregate`): the original collect-then-combine
+//!   API, kept as the differential-testing oracle and for callers that
+//!   already hold a `Vec<FitResult>`.
 
+mod accumulator;
 mod fedadam;
 mod fedavg;
 mod fedavgm;
@@ -10,6 +21,7 @@ mod fedprox;
 mod krum;
 mod trimmed;
 
+pub use accumulator::{AccOutput, AggAccumulator, BoundedBuffer, MeanAggregate, StreamingMean};
 pub use fedadam::FedAdam;
 pub use fedavg::FedAvg;
 pub use fedavgm::FedAvgM;
@@ -24,6 +36,14 @@ use super::client::{FitConfig, FitResult};
 use super::params::ParamVector;
 
 /// Server-side aggregation strategy.
+///
+/// The executor is optional everywhere, and `None` is the common case:
+/// round paths aggregate natively by design (streaming cannot stack K
+/// updates for an HLO call without giving up its O(P) memory bound).
+/// `Some` matters only on the batch path ([`Strategy::aggregate`]), where
+/// a matching fan-in routes through the compiled Pallas `aggregate`
+/// artifact — exercised by benches/tests as the L1 differential oracle,
+/// not by `launch()` federations.
 pub trait Strategy {
     fn name(&self) -> &'static str;
 
@@ -32,12 +52,43 @@ pub trait Strategy {
         FitConfig { round, ..base.clone() }
     }
 
-    /// Combine the surviving clients' results into the next global model.
+    /// Streaming accumulator for one round.  The round engine feeds it every
+    /// surviving client in selection order, then calls [`Strategy::reduce`].
+    ///
+    /// Default: buffer everything (correct for any strategy).  The mean
+    /// family overrides this with [`StreamingMean`] to reach O(P) memory.
+    fn accumulator(
+        &self,
+        _num_params: usize,
+        expected_clients: usize,
+    ) -> Box<dyn AggAccumulator> {
+        Box::new(BoundedBuffer::new(expected_clients))
+    }
+
+    /// Combine a finished accumulator into the next global model.
+    ///
+    /// Default handles both output shapes: a streamed mean is returned
+    /// as-is (plain FedAvg semantics); buffered results go through the
+    /// batch [`Strategy::aggregate`].
+    fn reduce(
+        &mut self,
+        global: &ParamVector,
+        output: AccOutput,
+        executor: Option<&mut ModelExecutor>,
+    ) -> Result<ParamVector, FlError> {
+        match output {
+            AccOutput::Mean(mean) => Ok(mean.params),
+            AccOutput::Buffered(results) => self.aggregate(global, &results, executor),
+        }
+    }
+
+    /// Batch path: combine the surviving clients' results into the next
+    /// global model.  Kept as the oracle for the streaming path.
     fn aggregate(
         &mut self,
         global: &ParamVector,
         results: &[FitResult],
-        executor: &mut ModelExecutor,
+        executor: Option<&mut ModelExecutor>,
     ) -> Result<ParamVector, FlError>;
 }
 
@@ -52,18 +103,22 @@ pub(crate) fn example_weights(results: &[FitResult]) -> Vec<f32> {
         .collect()
 }
 
-/// Weighted average of client parameters (HLO kernel when the fan-in
-/// matches a compiled artifact, Rust fallback otherwise).
+/// Weighted average of client parameters (HLO kernel when an executor is
+/// available and the fan-in matches a compiled artifact, Rust fallback
+/// otherwise).
 pub(crate) fn weighted_average(
     results: &[FitResult],
-    executor: &mut ModelExecutor,
+    executor: Option<&mut ModelExecutor>,
 ) -> Result<ParamVector, FlError> {
     if results.is_empty() {
         return Err(FlError::Strategy("aggregate over zero clients".into()));
     }
     let weights = example_weights(results);
     let updates: Vec<ParamVector> = results.iter().map(|r| r.params.clone()).collect();
-    executor
-        .aggregate(&updates, &weights)
-        .map_err(|e| FlError::Strategy(e.to_string()))
+    match executor {
+        Some(ex) => ex
+            .aggregate(&updates, &weights)
+            .map_err(|e| FlError::Strategy(e.to_string())),
+        None => Ok(ParamVector::weighted_sum(&updates, &weights)),
+    }
 }

@@ -1,6 +1,10 @@
 //! Coordinate-wise trimmed mean (Yin et al., 2018): robust aggregation that
 //! tolerates a bounded number of corrupted/failed clients — relevant when
 //! hardware-diverse clients fail in strange ways.
+//!
+//! The per-coordinate sort needs all K values of every coordinate, so this
+//! strategy keeps the default fan-in-bounded buffer accumulator rather
+//! than the O(P) streaming mean (DESIGN.md §8).
 
 use crate::error::FlError;
 use crate::runtime::ModelExecutor;
@@ -30,7 +34,7 @@ impl Strategy for TrimmedMean {
         &mut self,
         _global: &ParamVector,
         results: &[FitResult],
-        _executor: &mut ModelExecutor,
+        _executor: Option<&mut ModelExecutor>,
     ) -> Result<ParamVector, FlError> {
         if results.is_empty() {
             return Err(FlError::Strategy("aggregate over zero clients".into()));

@@ -5,9 +5,11 @@
 //! system:
 //!
 //! * **L3 (this crate)** — the coordination layer: a Flower-shaped federated
-//!   learning framework ([`fl`]), the hardware-emulation substrate ([`emu`]),
-//!   hardware databases + the Steam-survey sampler ([`hardware`]), client
-//!   schedulers ([`sched`]), and the analysis/figure harness ([`analysis`]).
+//!   learning framework with streaming aggregation ([`fl`]), the
+//!   hardware-emulation substrate ([`emu`]), hardware databases + the
+//!   Steam-survey sampler ([`hardware`]), client schedulers and the
+//!   concurrent round engine ([`sched`]), and the analysis/figure harness
+//!   ([`analysis`]).
 //! * **L2** — the training computation (a compact CNN) written in JAX
 //!   (`python/compile/model.py`), AOT-lowered once to HLO text.
 //! * **L1** — Pallas kernels for the dense layer (fwd + custom-VJP bwd),
@@ -17,8 +19,9 @@
 //! Python never runs on the request path: [`runtime`] loads the HLO
 //! artifacts via the PJRT C API (`xla` crate) and executes them natively.
 //!
-//! See `DESIGN.md` for the system inventory and the per-experiment index,
-//! and `EXPERIMENTS.md` for paper-vs-measured results.
+//! See `README.md` for the quickstart, `DESIGN.md` for the system
+//! inventory (the round engine is §8), and `EXPERIMENTS.md` for the
+//! paper-claim vs measured-result index.
 
 pub mod analysis;
 pub mod data;

@@ -74,7 +74,8 @@ fn run_specs() -> Vec<OptSpec> {
         OptSpec { name: "strategy", help: "fedavg|fedprox|fedavgm|fedadam|trimmed-mean|krum", takes_value: true, default: Some("fedavg") },
         OptSpec { name: "alpha", help: "Dirichlet non-IID alpha", takes_value: true, default: Some("0.5") },
         OptSpec { name: "fraction", help: "client fraction per round", takes_value: true, default: Some("1.0") },
-        OptSpec { name: "parallel", help: "max concurrent clients (1 = sequential)", takes_value: true, default: Some("1") },
+        OptSpec { name: "parallel", help: "max concurrent clients on the EMULATED timeline (1 = sequential)", takes_value: true, default: Some("1") },
+        OptSpec { name: "workers", help: "REAL fit concurrency: pool threads with their own executors (1 = in-thread)", takes_value: true, default: Some("1") },
         OptSpec { name: "seed", help: "experiment seed", takes_value: true, default: Some("42") },
         OptSpec { name: "network", help: "attach network-latency profiles", takes_value: false, default: None },
         OptSpec { name: "profiles", help: "comma-separated preset/GPU names (manual hardware)", takes_value: true, default: None },
@@ -110,6 +111,7 @@ fn cmd_run(raw: &[String]) -> Result<()> {
         let fraction = args.get_f64("fraction")?.unwrap();
         opts.selection = if fraction >= 1.0 { Selection::All } else { Selection::Fraction(fraction) };
         opts.max_parallel = args.get_u64("parallel")?.unwrap() as usize;
+        opts.workers = (args.get_u64("workers")?.unwrap() as usize).max(1);
         opts.seed = args.get_u64("seed")?.unwrap();
         opts.network = args.get_bool("network");
         if let Some(profiles) = args.get("profiles") {
@@ -123,8 +125,9 @@ fn cmd_run(raw: &[String]) -> Result<()> {
 
     println!("host: {}", opts.host.describe());
     println!(
-        "federation: {} clients, {} rounds, strategy {}, batch {}, {} local steps",
-        opts.clients, opts.rounds, opts.strategy, opts.batch, opts.local_steps
+        "federation: {} clients, {} rounds, strategy {}, batch {}, {} local steps, \
+         {} fit worker(s)",
+        opts.clients, opts.rounds, opts.strategy, opts.batch, opts.local_steps, opts.workers
     );
     let outcome = launch(&opts)?;
 

@@ -1,18 +1,28 @@
-//! Client-execution scheduling on the emulated timeline.
+//! Client-execution scheduling: the emulated timeline, and the real one.
 //!
 //! The paper's §3: "clients must be executed sequentially to ensure
 //! isolation of hardware configurations" — `Sequential` is the default.
 //! The announced future work ("support for limited parallel client
 //! execution") is implemented as `LimitedParallel`: round wall-clock is the
 //! makespan of an LPT greedy packing onto `max_concurrent` emulated slots.
-//! (Real PJRT execution remains serial on this single-core host either
-//! way; parallelism changes the *emulated* timeline accounting, which is
-//! what round-duration studies measure.)
+//!
+//! Two independent timelines live here (DESIGN.md §8):
+//!
+//! * `Scheduler` / [`Schedule`] decide what the *emulated* round
+//!   wall-clock is — this is what the paper's round-duration studies
+//!   measure, and it never depends on how fits actually execute.
+//! * [`pool::WorkerPool`] decides how *real* PJRT fits execute: the
+//!   concurrent round engine runs them on N worker threads and yields
+//!   results in completion order ([`Schedule::completion_order`] gives the
+//!   emulated-timeline analogue).  Host wall-clock drops ~linearly in
+//!   workers while every emulated observable stays bit-identical.
 
 pub mod deadline;
+pub mod pool;
 pub mod trace;
 
 pub use deadline::{DeadlineOutcome, DeadlineParallel, DeadlineSequential};
+pub use pool::{ExecutorFactory, FitOutcome, FitTask, ReorderBuffer, WorkerPool};
 pub use trace::{Trace, TraceEvent};
 
 /// Per-client (client id, emulated fit seconds) durations of one round.
@@ -34,6 +44,16 @@ impl Schedule {
             t.add(c, format!("{label}/client-{c}"), s, e);
         }
         t
+    }
+
+    /// Client ids ordered by emulated completion time (ties broken by id) —
+    /// the order a streaming consumer of this schedule observes results.
+    /// Always a permutation of the scheduled clients.
+    pub fn completion_order(&self) -> Vec<u32> {
+        let mut ends: Vec<(f64, u32)> =
+            self.spans.iter().map(|&(c, _, e)| (e, c)).collect();
+        ends.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        ends.into_iter().map(|(_, c)| c).collect()
     }
 }
 
@@ -161,6 +181,16 @@ mod tests {
         let d: Durations = vec![(0, 30.0), (1, 1.0), (2, 1.0), (3, 1.0)];
         let s = LimitedParallel::new(4).schedule(&d);
         assert!((s.round_s - 30.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn completion_order_streams_shortest_first_under_parallelism() {
+        // Sequential: completion order == selection order.
+        let seq = Sequential.schedule(&durs());
+        assert_eq!(seq.completion_order(), vec![0, 1, 2, 3]);
+        // Fully parallel: shortest job finishes first.
+        let par = LimitedParallel::new(16).schedule(&durs());
+        assert_eq!(par.completion_order(), vec![1, 3, 2, 0]);
     }
 
     #[test]

@@ -1,0 +1,377 @@
+//! The concurrent round engine: a persistent worker pool that runs *real*
+//! client fits in parallel.
+//!
+//! The paper's §3 runs clients strictly sequentially so hardware limits
+//! never overlap; `sched::LimitedParallel` already relaxes the *emulated*
+//! timeline, but until this engine existed every real PJRT fit still ran
+//! one at a time, so host wall-clock grew linearly with federation size.
+//! The pool decouples the two timelines completely (DESIGN.md §8):
+//!
+//! * **Real execution** — `workers` OS threads, each owning its *own*
+//!   `ModelExecutor` (PJRT clients and executable caches are not shared
+//!   across threads; each worker compiles the artifact set once and keeps
+//!   it hot across rounds).  Clients are moved to a worker for the
+//!   duration of one fit and handed back with the outcome, so no client
+//!   state is ever aliased.
+//! * **Emulated timeline** — untouched.  Fit reports carry the emulated
+//!   durations; the server replays them on the shared `VirtualClock` and
+//!   feeds the same `Scheduler` as before, so `Schedule` spans and
+//!   `round_s` are bit-identical to the sequential engine.
+//!
+//! Outcomes arrive in *completion order* (that is the point — the server
+//! folds finished clients into the streaming aggregate while slower fits
+//! are still running); `FitOutcome::index` carries the selection-order
+//! position so the consumer can restore a deterministic fold order with a
+//! reorder buffer.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::emu::{EnvConfig, VirtualClock};
+use crate::error::{EmuError, FlError, RuntimeError};
+use crate::fl::bouquet::BouquetContext;
+use crate::fl::client::{ClientApp, ClientId, FitConfig, FitResult};
+use crate::fl::params::ParamVector;
+use crate::hardware::profile::HardwareProfile;
+use crate::runtime::ModelExecutor;
+
+/// Builds one `ModelExecutor` per worker thread (PJRT state never crosses
+/// threads).  `None` runs the pool executor-less: timing-only clients
+/// (`SimClient`) work as usual, `TrainClient` fits fail their round.
+pub type ExecutorFactory = Arc<dyn Fn() -> Result<ModelExecutor, RuntimeError> + Send + Sync>;
+
+/// One client fit, dispatched to whichever worker frees up first.
+pub struct FitTask {
+    /// Position in this round's selection order (reorder key).
+    pub index: usize,
+    pub client: Box<dyn ClientApp>,
+    /// Round-start global parameters, shared read-only across workers.
+    pub global: Arc<ParamVector>,
+    pub cfg: FitConfig,
+    pub host: HardwareProfile,
+    pub env_cfg: EnvConfig,
+}
+
+/// A finished fit, in completion order.  Returns the client to the server.
+pub struct FitOutcome {
+    pub index: usize,
+    pub client_id: ClientId,
+    pub client: Box<dyn ClientApp>,
+    pub result: Result<FitResult, EmuError>,
+}
+
+/// Persistent thread pool for concurrent client fits.
+///
+/// Spawn once per federation run; workers live across rounds so each
+/// executor's compiled-artifact cache stays warm.  Dropping the pool
+/// closes the task channel and joins every worker.
+pub struct WorkerPool {
+    task_tx: Option<Sender<FitTask>>,
+    outcome_rx: Receiver<FitOutcome>,
+    handles: Vec<JoinHandle<()>>,
+    workers: usize,
+    in_flight: Arc<AtomicUsize>,
+}
+
+impl WorkerPool {
+    /// Spawn `workers` threads (clamped to >= 1).  Each calls `factory`
+    /// once, up front, so artifact problems surface on the first fit
+    /// rather than mid-round.
+    pub fn spawn(workers: usize, factory: Option<ExecutorFactory>) -> Self {
+        let workers = workers.max(1);
+        let (task_tx, task_rx) = channel::<FitTask>();
+        let task_rx = Arc::new(Mutex::new(task_rx));
+        let (outcome_tx, outcome_rx) = channel::<FitOutcome>();
+        let in_flight = Arc::new(AtomicUsize::new(0));
+        let handles = (0..workers)
+            .map(|w| {
+                let rx = Arc::clone(&task_rx);
+                let tx = outcome_tx.clone();
+                let factory = factory.clone();
+                std::thread::Builder::new()
+                    .name(format!("bouquet-fit-{w}"))
+                    .spawn(move || worker_loop(rx, tx, factory))
+                    .expect("spawn fit worker")
+            })
+            .collect();
+        WorkerPool { task_tx: Some(task_tx), outcome_rx, handles, workers, in_flight }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Fits currently queued or running (for tests/diagnostics).
+    pub fn in_flight(&self) -> usize {
+        self.in_flight.load(Ordering::SeqCst)
+    }
+
+    /// Queue one fit.  Returns an error only if every worker has died.
+    pub fn submit(&self, task: FitTask) -> Result<(), FlError> {
+        self.in_flight.fetch_add(1, Ordering::SeqCst);
+        self.task_tx
+            .as_ref()
+            .expect("pool not shut down")
+            .send(task)
+            .map_err(|_| {
+                self.in_flight.fetch_sub(1, Ordering::SeqCst);
+                FlError::Strategy("round engine: all fit workers exited".into())
+            })
+    }
+
+    /// Block until the next fit finishes (completion order).
+    pub fn recv(&self) -> Result<FitOutcome, FlError> {
+        let outcome = self.outcome_rx.recv().map_err(|_| {
+            FlError::Strategy("round engine: fit workers died mid-round".into())
+        })?;
+        self.in_flight.fetch_sub(1, Ordering::SeqCst);
+        Ok(outcome)
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // Closing the task channel ends every worker's recv loop.
+        self.task_tx = None;
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(
+    task_rx: Arc<Mutex<Receiver<FitTask>>>,
+    outcome_tx: Sender<FitOutcome>,
+    factory: Option<ExecutorFactory>,
+) {
+    let (mut executor, factory_err) = match &factory {
+        Some(f) => match f() {
+            Ok(ex) => (Some(ex), None),
+            Err(e) => (None, Some(e.to_string())),
+        },
+        None => (None, None),
+    };
+    loop {
+        // Hold the lock only for the dequeue; a closed channel ends the loop.
+        let task = {
+            let rx = task_rx.lock().unwrap_or_else(|e| e.into_inner());
+            match rx.recv() {
+                Ok(t) => t,
+                Err(_) => break,
+            }
+        };
+        let FitTask { index, mut client, global, cfg, host, env_cfg } = task;
+        let result = if let Some(err) = &factory_err {
+            Err(EmuError::Lifecycle(format!(
+                "fit worker could not build its executor: {err}"
+            )))
+        } else {
+            // A panicking fit must not deadlock the round (the server waits
+            // for exactly one outcome per task); surface it as a lifecycle
+            // error instead.  `RestrictedEnv`'s Drop already resets limits
+            // on unwind, and the client box itself stays intact.
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                // The worker's clock is a scratch fast-forward clock:
+                // emulated time lives in the FitReport; the server replays
+                // it on the shared clock in selection order.
+                let mut clock = VirtualClock::fast_forward();
+                let mut ctx = BouquetContext {
+                    executor: executor.as_mut(),
+                    clock: &mut clock,
+                    host: &host,
+                    env_cfg,
+                };
+                client.fit(&global, &cfg, &mut ctx)
+            }))
+            .unwrap_or_else(|payload| {
+                let msg = payload
+                    .downcast_ref::<&str>()
+                    .map(|s| s.to_string())
+                    .or_else(|| payload.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "non-string panic payload".into());
+                Err(EmuError::Lifecycle(format!("fit panicked: {msg}")))
+            })
+        };
+        let outcome = FitOutcome { index, client_id: client.id(), client, result };
+        if outcome_tx.send(outcome).is_err() {
+            break; // pool dropped while we were fitting
+        }
+    }
+}
+
+/// Drain a pool into selection order: a reorder buffer that releases
+/// outcomes only once every earlier-selected client has been released.
+/// This is what makes the streamed aggregate bit-identical across worker
+/// counts — completion order varies run to run, selection order does not.
+pub struct ReorderBuffer {
+    pending: Vec<Option<FitOutcomeSlim>>,
+    next: usize,
+    ready: VecDeque<FitOutcomeSlim>,
+}
+
+/// The outcome fields the server folds (the client box has already been
+/// returned to the roster by the time reordering happens).
+pub struct FitOutcomeSlim {
+    pub index: usize,
+    pub client_id: ClientId,
+    pub result: Result<FitResult, EmuError>,
+}
+
+impl ReorderBuffer {
+    pub fn new(expected: usize) -> Self {
+        ReorderBuffer {
+            pending: (0..expected).map(|_| None).collect(),
+            next: 0,
+            ready: VecDeque::new(),
+        }
+    }
+
+    /// Insert a completed outcome; any newly-contiguous prefix becomes
+    /// available through `pop_ready`.
+    pub fn accept(&mut self, outcome: FitOutcomeSlim) {
+        let i = outcome.index;
+        assert!(i < self.pending.len(), "outcome index {i} out of range");
+        assert!(self.pending[i].is_none(), "duplicate outcome for index {i}");
+        self.pending[i] = Some(outcome);
+        while self.next < self.pending.len() {
+            match self.pending[self.next].take() {
+                Some(o) => {
+                    self.ready.push_back(o);
+                    self.next += 1;
+                }
+                None => break,
+            }
+        }
+    }
+
+    pub fn pop_ready(&mut self) -> Option<FitOutcomeSlim> {
+        self.ready.pop_front()
+    }
+
+    /// Results held back waiting for an earlier client (the transient
+    /// buffering the determinism contract costs; bounded by completion
+    /// skew, not federation size).
+    pub fn held_back(&self) -> usize {
+        self.pending[self.next..].iter().filter(|o| o.is_some()).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::emu::FitReport;
+    use crate::fl::client::SimClient;
+    use crate::hardware::profile::preset;
+    use crate::modelcost::small_cnn;
+
+    fn sim_client(id: ClientId) -> Box<dyn ClientApp> {
+        Box::new(SimClient::new(
+            id,
+            preset("budget-2019").unwrap(),
+            64,
+            small_cnn(),
+        ))
+    }
+
+    fn env_cfg() -> EnvConfig {
+        EnvConfig { isolation: crate::emu::Isolation::Concurrent, ..Default::default() }
+    }
+
+    #[test]
+    fn pool_runs_sim_fits_without_an_executor_and_returns_clients() {
+        // Sim fits spawn (Concurrent) restricted envs; keep the global env
+        // counter quiet for tests that assert on it.
+        let _g = crate::emu::env::env_counter_test_guard();
+        let pool = WorkerPool::spawn(4, None);
+        let global = Arc::new(ParamVector::zeros(8));
+        let host = HardwareProfile::paper_host();
+        let n = 8;
+        for i in 0..n {
+            pool.submit(FitTask {
+                index: i,
+                client: sim_client(i as ClientId),
+                global: Arc::clone(&global),
+                cfg: FitConfig::default(),
+                host: host.clone(),
+                env_cfg: env_cfg(),
+            })
+            .unwrap();
+        }
+        let mut seen = vec![false; n];
+        for _ in 0..n {
+            let out = pool.recv().unwrap();
+            let r = out.result.expect("sim fit succeeds");
+            assert_eq!(r.client, out.client_id);
+            assert!(r.emu.emu_total_s > 0.0);
+            assert!(!seen[out.index]);
+            seen[out.index] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+        assert_eq!(pool.in_flight(), 0);
+    }
+
+    #[test]
+    fn pool_reports_durations_identical_to_direct_fits() {
+        // The same SimClient fit, run directly and through the pool, must
+        // report the same emulated duration — the emulated timeline does
+        // not depend on which thread computes it.
+        let _g = crate::emu::env::env_counter_test_guard();
+        let host = HardwareProfile::paper_host();
+        let mut direct = sim_client(0);
+        let mut clock = VirtualClock::fast_forward();
+        let mut ctx = BouquetContext {
+            executor: None,
+            clock: &mut clock,
+            host: &host,
+            env_cfg: env_cfg(),
+        };
+        let d = direct.fit(&ParamVector::zeros(8), &FitConfig::default(), &mut ctx).unwrap();
+
+        let pool = WorkerPool::spawn(2, None);
+        pool.submit(FitTask {
+            index: 0,
+            client: sim_client(0),
+            global: Arc::new(ParamVector::zeros(8)),
+            cfg: FitConfig::default(),
+            host: host.clone(),
+            env_cfg: env_cfg(),
+        })
+        .unwrap();
+        let p = pool.recv().unwrap().result.unwrap();
+        assert_eq!(d.emu.emu_total_s.to_bits(), p.emu.emu_total_s.to_bits());
+        assert_eq!(d.emu.warmup_s.to_bits(), p.emu.warmup_s.to_bits());
+        assert_eq!(d.emu.step_s.to_bits(), p.emu.step_s.to_bits());
+    }
+
+    #[test]
+    fn reorder_buffer_restores_selection_order() {
+        let mut buf = ReorderBuffer::new(4);
+        let slim = |i: usize| FitOutcomeSlim {
+            index: i,
+            client_id: i as ClientId,
+            result: Ok(FitResult {
+                client: i as ClientId,
+                params: ParamVector::zeros(1),
+                num_examples: 1,
+                mean_loss: 0.0,
+                emu: FitReport::synthetic(1, 1, 1.0),
+                comm_s: 0.0,
+            }),
+        };
+        buf.accept(slim(2));
+        assert!(buf.pop_ready().is_none());
+        assert_eq!(buf.held_back(), 1);
+        buf.accept(slim(0));
+        assert_eq!(buf.pop_ready().unwrap().index, 0);
+        assert!(buf.pop_ready().is_none());
+        buf.accept(slim(1));
+        assert_eq!(buf.pop_ready().unwrap().index, 1);
+        assert_eq!(buf.pop_ready().unwrap().index, 2);
+        buf.accept(slim(3));
+        assert_eq!(buf.pop_ready().unwrap().index, 3);
+        assert_eq!(buf.held_back(), 0);
+    }
+}

@@ -5,11 +5,12 @@
 
 use bouquetfl::analysis::correlation::{kendall_tau_b, pearson, spearman};
 use bouquetfl::data::{generate, partition, PartitionScheme, SyntheticConfig};
-use bouquetfl::emu::{GpuTimingModel, MpsPartition, Optimizer, VramAllocator};
-use bouquetfl::fl::ParamVector;
-use bouquetfl::hardware::{GPU_DB};
+use bouquetfl::emu::{FitReport, GpuTimingModel, MpsPartition, Optimizer, VramAllocator};
+use bouquetfl::fl::{AccOutput, AggAccumulator, FitResult, ParamVector, StreamingMean};
+use bouquetfl::hardware::GPU_DB;
 use bouquetfl::modelcost::resnet18_cifar;
-use bouquetfl::sched::{LimitedParallel, Scheduler, Sequential};
+use bouquetfl::sched::pool::FitOutcomeSlim;
+use bouquetfl::sched::{LimitedParallel, ReorderBuffer, Scheduler, Sequential};
 use bouquetfl::util::prop::{assert_close, assert_that, check};
 
 #[test]
@@ -149,6 +150,133 @@ fn prop_scheduler_invariants() {
         assert_that(
             par.to_trace("t").max_concurrency() <= slots,
             || "concurrency cap violated".to_string(),
+        )
+    });
+}
+
+#[test]
+fn prop_schedules_agree_across_policies() {
+    // Sequential, LimitedParallel(1) and LimitedParallel(k) must agree on
+    // the invariants the round engine relies on: same client set, same
+    // per-client span lengths, non-overlap per slot (max concurrency), and
+    // completion_order a permutation of the scheduled clients.
+    check(60, |rng| {
+        let n = rng.range_i64(1, 25) as usize;
+        let durations: Vec<(u32, f64)> = (0..n)
+            .map(|i| (i as u32, rng.range_f64(0.01, 5.0)))
+            .collect();
+        let seq = Sequential.schedule(&durations);
+        let par1 = LimitedParallel::new(1).schedule(&durations);
+        assert_close(seq.round_s, par1.round_s, 1e-9)?;
+        assert_that(seq.to_trace("s").is_serial(), || {
+            "sequential spans overlap".to_string()
+        })?;
+        assert_that(par1.to_trace("p1").is_serial(), || {
+            "one-slot parallel spans overlap".to_string()
+        })?;
+
+        let slots = rng.range_i64(1, 6) as usize;
+        let par = LimitedParallel::new(slots).schedule(&durations);
+        for sched in [&seq, &par1, &par] {
+            // Span length == client duration, for every policy.
+            for &(c, s, e) in &sched.spans {
+                let d = durations.iter().find(|&&(id, _)| id == c).unwrap().1;
+                assert_close(e - s, d, 1e-9)?;
+            }
+            // Completion order is a permutation of the scheduled clients.
+            let mut order = sched.completion_order();
+            order.sort();
+            assert_that(
+                order == (0..n as u32).collect::<Vec<_>>(),
+                || "completion_order not a permutation".to_string(),
+            )?;
+        }
+        assert_that(
+            par.to_trace("p").max_concurrency() <= slots,
+            || "per-slot overlap: concurrency above slot count".to_string(),
+        )
+    });
+}
+
+#[test]
+fn prop_streaming_fedavg_matches_batch_fedavg() {
+    // The round engine's streaming mean (O(P) memory) must agree with the
+    // materialise-everything batch path to 1e-6 on random param vectors.
+    check(40, |rng| {
+        let p = rng.range_i64(1, 600) as usize;
+        let k = rng.range_i64(1, 24) as usize;
+        let examples: Vec<usize> =
+            (0..k).map(|_| rng.range_i64(1, 500) as usize).collect();
+        let vectors: Vec<Vec<f32>> = (0..k)
+            .map(|_| (0..p).map(|_| rng.f32() * 2.0 - 1.0).collect())
+            .collect();
+
+        let mut acc = StreamingMean::new(p);
+        for (c, v) in vectors.iter().enumerate() {
+            acc.push(FitResult {
+                client: c as u32,
+                params: ParamVector::from_vec(v.clone()),
+                num_examples: examples[c],
+                mean_loss: 0.0,
+                emu: FitReport::synthetic(1, 1, 0.0),
+                comm_s: 0.0,
+            })
+            .map_err(|e| e.to_string())?;
+            assert_that(acc.buffered_updates() == 0, || {
+                "streaming accumulator buffered an update".to_string()
+            })?;
+        }
+        let streamed = match Box::new(acc).finish().map_err(|e| e.to_string())? {
+            AccOutput::Mean(m) => m.params,
+            AccOutput::Buffered(_) => return Err("expected Mean output".into()),
+        };
+
+        let total: usize = examples.iter().sum();
+        let weights: Vec<f32> =
+            examples.iter().map(|&n| n as f32 / total as f32).collect();
+        let updates: Vec<ParamVector> =
+            vectors.into_iter().map(ParamVector::from_vec).collect();
+        let batch = ParamVector::weighted_sum(&updates, &weights);
+
+        for (a, b) in streamed.as_slice().iter().zip(batch.as_slice()) {
+            assert_close(*a as f64, *b as f64, 1e-6)?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_reorder_buffer_restores_selection_order_from_any_arrival() {
+    // Whatever completion order the pool produces, folds happen in
+    // selection order — the heart of the bit-identity guarantee.
+    check(60, |rng| {
+        let n = rng.range_i64(1, 30) as usize;
+        // Random arrival permutation.
+        let mut arrival: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut arrival);
+        let mut buf = ReorderBuffer::new(n);
+        let mut released = Vec::new();
+        for &i in &arrival {
+            buf.accept(FitOutcomeSlim {
+                index: i,
+                client_id: i as u32,
+                result: Ok(FitResult {
+                    client: i as u32,
+                    params: ParamVector::zeros(1),
+                    num_examples: 1,
+                    mean_loss: 0.0,
+                    emu: FitReport::synthetic(1, 1, 0.0),
+                    comm_s: 0.0,
+                }),
+            });
+            while let Some(out) = buf.pop_ready() {
+                released.push(out.index);
+            }
+        }
+        assert_that(buf.held_back() == 0, || "outcomes left behind".to_string())?;
+        assert_that(
+            released == (0..n).collect::<Vec<_>>(),
+            || format!("arrival {arrival:?} released {released:?}"),
         )
     });
 }

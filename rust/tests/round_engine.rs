@@ -1,0 +1,273 @@
+//! Concurrent round engine vs the sequential engine: same federation, same
+//! seed, `workers = 1` vs `workers = 4` — every emulated observable
+//! (schedule, clock, losses, aggregate bits) must be identical; only host
+//! wall-clock may differ.  No PJRT artifacts needed: clients are stubs and
+//! the server runs executor-less via `run_from`.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use bouquetfl::emu::{FitReport, VirtualClock};
+use bouquetfl::error::EmuError;
+use bouquetfl::fl::{
+    BouquetContext, ClientApp, ClientId, FedAvg, FitConfig, FitResult, ParamVector,
+    Selection, ServerApp, ServerConfig, TrimmedMean,
+};
+use bouquetfl::hardware::HardwareProfile;
+use bouquetfl::sched::{Sequential, WorkerPool};
+
+const P: usize = 64;
+
+/// Deterministic stub client: burns `work_ms` of real time (so pool
+/// speedup is observable), advances the emulated clock exactly like a
+/// restricted fit would, and returns params that depend only on its id.
+struct StubClient {
+    id: ClientId,
+    profile: HardwareProfile,
+    work_ms: u64,
+    /// `Some(e)`: fail every fit with this error instead.
+    fail_with: Option<EmuError>,
+    /// Panic mid-fit instead of returning (worker containment test).
+    panic_in_fit: bool,
+}
+
+impl StubClient {
+    fn new(id: ClientId, work_ms: u64) -> Self {
+        StubClient {
+            id,
+            profile: HardwareProfile::paper_host(),
+            work_ms,
+            fail_with: None,
+            panic_in_fit: false,
+        }
+    }
+
+    fn params(&self) -> ParamVector {
+        ParamVector::from_vec(
+            (0..P)
+                .map(|j| ((self.id as usize * 31 + j) % 17) as f32 * 0.1)
+                .collect(),
+        )
+    }
+}
+
+impl ClientApp for StubClient {
+    fn id(&self) -> ClientId {
+        self.id
+    }
+
+    fn profile(&self) -> &HardwareProfile {
+        &self.profile
+    }
+
+    fn num_examples(&self) -> usize {
+        10 + self.id as usize
+    }
+
+    fn fit(
+        &mut self,
+        _global: &ParamVector,
+        cfg: &FitConfig,
+        ctx: &mut BouquetContext<'_>,
+    ) -> Result<FitResult, EmuError> {
+        if self.panic_in_fit {
+            panic!("stub fit panic (client {})", self.id);
+        }
+        if let Some(e) = &self.fail_with {
+            return Err(e.clone());
+        }
+        std::thread::sleep(Duration::from_millis(self.work_ms));
+        let emu = FitReport::synthetic(cfg.local_steps, cfg.batch, 1.0 + self.id as f64);
+        // Advance emulated time the way a restricted fit does, increment
+        // by increment — the pooled engine replays exactly this.
+        ctx.clock.advance(emu.warmup_s);
+        for _ in 0..emu.steps {
+            ctx.clock.advance(emu.step_s);
+        }
+        Ok(FitResult {
+            client: self.id,
+            params: self.params(),
+            num_examples: self.num_examples(),
+            mean_loss: 1.0 / (1.0 + self.id as f32),
+            emu,
+            comm_s: 0.0,
+        })
+    }
+}
+
+fn server(clients: Vec<Box<dyn ClientApp>>, workers: usize) -> ServerApp {
+    let cfg = ServerConfig {
+        rounds: 3,
+        selection: Selection::All,
+        eval_every: 0,
+        seed: 11,
+        ..Default::default()
+    };
+    let s = ServerApp::new(
+        cfg,
+        HardwareProfile::paper_host(),
+        Box::new(FedAvg),
+        Box::new(Sequential),
+        clients,
+    );
+    if workers > 1 {
+        s.with_round_engine(workers, None)
+    } else {
+        s
+    }
+}
+
+fn stub_fleet(n: u32, work_ms: u64) -> Vec<Box<dyn ClientApp>> {
+    (0..n).map(|i| Box::new(StubClient::new(i, work_ms)) as Box<dyn ClientApp>).collect()
+}
+
+#[test]
+fn pooled_round_is_bit_identical_to_sequential() {
+    let init = ParamVector::zeros(P);
+
+    let mut seq = server(stub_fleet(8, 0), 1);
+    let mut seq_clock = VirtualClock::fast_forward();
+    let (g1, h1) = seq.run_from(init.clone(), None, &mut seq_clock).unwrap();
+
+    let mut par = server(stub_fleet(8, 0), 4);
+    let mut par_clock = VirtualClock::fast_forward();
+    let (g2, h2) = par.run_from(init, None, &mut par_clock).unwrap();
+
+    // Aggregates: bit-identical.
+    assert_eq!(g1.len(), g2.len());
+    for (a, b) in g1.as_slice().iter().zip(g2.as_slice()) {
+        assert_eq!(a.to_bits(), b.to_bits(), "aggregate drifted across engines");
+    }
+    // Emulated history: bit-identical rounds.
+    assert_eq!(h1.rounds.len(), h2.rounds.len());
+    for (r1, r2) in h1.rounds.iter().zip(&h2.rounds) {
+        assert_eq!(r1.selected, r2.selected);
+        assert_eq!(r1.train_loss.to_bits(), r2.train_loss.to_bits());
+        assert_eq!(r1.emu_round_s.to_bits(), r2.emu_round_s.to_bits());
+    }
+    // Shared emulated clock: bit-identical trajectory end point.
+    assert_eq!(seq_clock.now_s().to_bits(), par_clock.now_s().to_bits());
+    // Trace spans: identical.
+    assert_eq!(seq.trace.events, par.trace.events);
+}
+
+#[test]
+fn pool_overlaps_real_work() {
+    // 8 clients x 25ms of real work: sequential >= 200ms, 4 workers should
+    // land well under that even on a loaded CI box.
+    let mut seq = server(stub_fleet(8, 25), 1);
+    let t0 = Instant::now();
+    seq.run_from(ParamVector::zeros(P), None, &mut VirtualClock::fast_forward()).unwrap();
+    let t_seq = t0.elapsed();
+
+    let mut par = server(stub_fleet(8, 25), 4);
+    let t0 = Instant::now();
+    par.run_from(ParamVector::zeros(P), None, &mut VirtualClock::fast_forward()).unwrap();
+    let t_par = t0.elapsed();
+
+    assert!(
+        t_par < t_seq,
+        "pooled engine ({t_par:?}) must beat sequential ({t_seq:?})"
+    );
+}
+
+#[test]
+fn pooled_engine_survives_oom_clients() {
+    let mut clients = stub_fleet(4, 0);
+    let mut bad = StubClient::new(4, 0);
+    bad.fail_with = Some(EmuError::GpuOom {
+        device: "stub".into(),
+        requested_mb: 8192,
+        available_mb: 1024,
+        capacity_mb: 4096,
+    });
+    clients.push(Box::new(bad));
+
+    let mut s = server(clients, 3);
+    let (_, h) = s
+        .run_from(ParamVector::zeros(P), None, &mut VirtualClock::fast_forward())
+        .unwrap();
+    for r in &h.rounds {
+        assert_eq!(r.failures.len(), 1, "OOM client fails every round");
+        assert_eq!(r.failures[0].client, 4);
+        assert!(r.train_loss.is_finite());
+    }
+}
+
+#[test]
+fn pooled_engine_propagates_fatal_errors_and_returns_clients() {
+    let mut clients = stub_fleet(3, 0);
+    let mut bad = StubClient::new(3, 0);
+    bad.fail_with = Some(EmuError::Lifecycle("stub runtime failure".into()));
+    clients.push(Box::new(bad));
+
+    let mut s = server(clients, 2);
+    let err = s
+        .run_from(ParamVector::zeros(P), None, &mut VirtualClock::fast_forward())
+        .unwrap_err();
+    assert!(err.to_string().contains("client 3"), "{err}");
+}
+
+#[test]
+fn pooled_engine_contains_fit_panics_instead_of_hanging() {
+    // A panic inside a worker's fit must come back as a fit error (the
+    // inline engine would propagate the panic; the pool must neither hang
+    // waiting for a never-sent outcome nor kill the process).
+    let mut clients = stub_fleet(3, 0);
+    let mut bad = StubClient::new(3, 0);
+    bad.panic_in_fit = true;
+    clients.push(Box::new(bad));
+
+    let mut s = server(clients, 2);
+    let err = s
+        .run_from(ParamVector::zeros(P), None, &mut VirtualClock::fast_forward())
+        .unwrap_err();
+    assert!(err.to_string().contains("client 3"), "{err}");
+    assert!(err.to_string().contains("panicked"), "{err}");
+}
+
+#[test]
+fn robust_strategies_run_on_the_pooled_engine() {
+    // TrimmedMean uses the bounded-buffer accumulator — the pooled engine
+    // must feed it identically to the sequential one.
+    let build = |workers| {
+        let cfg = ServerConfig { rounds: 2, eval_every: 0, seed: 5, ..Default::default() };
+        let s = ServerApp::new(
+            cfg,
+            HardwareProfile::paper_host(),
+            Box::new(TrimmedMean::new(1)),
+            Box::new(Sequential),
+            stub_fleet(6, 0),
+        );
+        if workers > 1 { s.with_round_engine(workers, None) } else { s }
+    };
+    let (g1, _) = build(1)
+        .run_from(ParamVector::zeros(P), None, &mut VirtualClock::fast_forward())
+        .unwrap();
+    let (g2, _) = build(4)
+        .run_from(ParamVector::zeros(P), None, &mut VirtualClock::fast_forward())
+        .unwrap();
+    for (a, b) in g1.as_slice().iter().zip(g2.as_slice()) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+}
+
+#[test]
+fn worker_pool_drop_joins_cleanly_mid_stream() {
+    // Submit more work than we drain; dropping the pool must not hang.
+    let pool = WorkerPool::spawn(2, None);
+    let global = Arc::new(ParamVector::zeros(4));
+    for i in 0..6 {
+        pool.submit(bouquetfl::sched::FitTask {
+            index: i,
+            client: Box::new(StubClient::new(i as u32, 5)),
+            global: Arc::clone(&global),
+            cfg: FitConfig::default(),
+            host: HardwareProfile::paper_host(),
+            env_cfg: Default::default(),
+        })
+        .unwrap();
+    }
+    let _ = pool.recv().unwrap();
+    drop(pool); // joins workers; outstanding tasks are discarded
+}
