@@ -1,0 +1,67 @@
+//! Federation dynamics end to end, no artifacts needed: a timing-only
+//! SimClient fleet on survey-sampled hardware runs the `high-churn`
+//! scenario preset — availability churn, membership join/leave, mid-round
+//! dropout and deadline rounds — then prints the per-round dynamics table.
+//!
+//!     cargo run --release --example federation_dynamics
+//!
+//! Scenario semantics: SCENARIOS.md.  Engine invariant: the same run with
+//! `with_round_engine(4, None)` is bit-identical (tests/round_engine.rs).
+
+use bouquetfl::analysis::report::dynamics_table;
+use bouquetfl::emu::VirtualClock;
+use bouquetfl::fl::launcher::sample_feasible;
+use bouquetfl::fl::{
+    ClientApp, FedAvg, ParamVector, Scenario, Selection, ServerApp, ServerConfig, SimClient,
+};
+use bouquetfl::hardware::{HardwareProfile, HardwareSampler};
+use bouquetfl::modelcost::resnet18_cifar;
+use bouquetfl::sched::Sequential;
+
+fn main() {
+    let scenario = Scenario::preset("high-churn").expect("preset exists");
+    println!("scenario: {}", scenario.describe());
+
+    let host = HardwareProfile::paper_host();
+    let mut sampler = HardwareSampler::with_defaults(7);
+    let clients: Vec<Box<dyn ClientApp>> = (0..12u32)
+        .map(|i| {
+            let profile = sample_feasible(&mut sampler, &host).expect("feasible profile");
+            println!("client {i:2}: {}", profile.describe());
+            Box::new(SimClient::new(i, profile, 64, resnet18_cifar())) as Box<dyn ClientApp>
+        })
+        .collect();
+
+    let mut cfg = ServerConfig {
+        rounds: 15,
+        selection: Selection::All,
+        eval_every: 0,
+        seed: 7,
+        // A demo should report an all-failed round, not abort on it.
+        fail_on_empty_round: false,
+        ..Default::default()
+    };
+    cfg.fit.batch = 16;
+
+    let mut server = ServerApp::new(
+        cfg,
+        host,
+        Box::new(FedAvg),
+        Box::new(Sequential),
+        clients,
+    )
+    .with_scenario(&scenario);
+
+    let mut clock = VirtualClock::fast_forward();
+    let (_, history) = server
+        .run_from(ParamVector::zeros(256), None, &mut clock)
+        .expect("federation survives churn");
+
+    println!("\nper-round dynamics (kept = folded into the aggregate):");
+    println!("{}", dynamics_table(&history).render());
+    println!("{}", history.summary());
+    println!(
+        "emulated clock at exit: {:.1}s (skipped rounds fast-forward to the next online client)",
+        clock.now_s()
+    );
+}

@@ -1,0 +1,181 @@
+//! Federation-dynamics benchmark (EXPERIMENTS.md rows "dropout rate vs
+//! deadline" and "churn vs convergence"): timing-only SimClient fleets on
+//! survey-sampled hardware, so it runs anywhere — no PJRT artifacts.
+//!
+//!     cargo bench --bench dynamics
+
+use bouquetfl::emu::VirtualClock;
+use bouquetfl::fl::history::{DEADLINE_REASON_PREFIX, DROPOUT_REASON_PREFIX};
+use bouquetfl::fl::launcher::sample_feasible;
+use bouquetfl::fl::{
+    ClientApp, FedAvg, History, ParamVector, Scenario, Selection, ServerApp, ServerConfig,
+    SimClient,
+};
+use bouquetfl::hardware::{HardwareProfile, HardwareSampler};
+use bouquetfl::modelcost::resnet18_cifar;
+use bouquetfl::sched::{AvailabilityModel, Sequential};
+use bouquetfl::util::benchkit::section;
+use bouquetfl::util::table::{fnum, Align, Table};
+
+const CLIENTS: usize = 16;
+const ROUNDS: u32 = 12;
+const P: usize = 256;
+
+fn fleet(seed: u64) -> Vec<Box<dyn ClientApp>> {
+    let host = HardwareProfile::paper_host();
+    let mut sampler = HardwareSampler::with_defaults(seed);
+    (0..CLIENTS as u32)
+        .map(|i| {
+            let profile = sample_feasible(&mut sampler, &host).expect("feasible profile");
+            Box::new(SimClient::new(i, profile, 64, resnet18_cifar())) as Box<dyn ClientApp>
+        })
+        .collect()
+}
+
+fn run(scenario: Option<&Scenario>) -> History {
+    let mut cfg = ServerConfig {
+        rounds: ROUNDS,
+        selection: Selection::All,
+        eval_every: 0,
+        seed: 42,
+        // A sweep should report an all-failed round, not abort on it.
+        fail_on_empty_round: false,
+        ..Default::default()
+    };
+    // Batch 16 keeps the ResNet-18 footprint inside every sampled card's
+    // VRAM, so the sweep measures dynamics drops, not OOM failures.
+    cfg.fit.batch = 16;
+    let mut server = ServerApp::new(
+        cfg,
+        HardwareProfile::paper_host(),
+        Box::new(FedAvg),
+        Box::new(Sequential),
+        fleet(42),
+    );
+    if let Some(sc) = scenario {
+        server = server.with_scenario(sc);
+    }
+    let (_, history) = server
+        .run_from(ParamVector::zeros(P), None, &mut VirtualClock::fast_forward())
+        .expect("dynamics federation");
+    history
+}
+
+fn drop_counts(h: &History) -> (usize, usize, usize, usize) {
+    let mut selected = 0;
+    let mut failed = 0;
+    let mut dropout = 0;
+    let mut late = 0;
+    for r in &h.rounds {
+        selected += r.selected.len();
+        failed += r.failures.len();
+        dropout += r
+            .failures
+            .iter()
+            .filter(|f| f.reason.starts_with(DROPOUT_REASON_PREFIX))
+            .count();
+        late += r
+            .failures
+            .iter()
+            .filter(|f| f.reason.starts_with(DEADLINE_REASON_PREFIX))
+            .count();
+    }
+    (selected, selected - failed, dropout, late)
+}
+
+fn main() {
+    // Baseline: open rounds, everyone always on.
+    let open = run(None);
+    let open_round_s = open.total_emu_seconds() / open.rounds.len() as f64;
+    println!(
+        "baseline: {CLIENTS} clients x {ROUNDS} rounds, open round = {open_round_s:.2}s emulated"
+    );
+
+    section("dropout rate vs round deadline (FedScale-style deadline rounds)");
+    let mut t = Table::new(&["deadline", "selected", "kept", "late", "drop rate", "final loss"])
+        .aligns(&[
+            Align::Right,
+            Align::Right,
+            Align::Right,
+            Align::Right,
+            Align::Right,
+            Align::Right,
+        ]);
+    for frac in [0.25f64, 0.5, 0.75, 1.0] {
+        let deadline = open_round_s * frac;
+        let sc = Scenario {
+            name: format!("deadline-{frac}"),
+            availability: AvailabilityModel::AlwaysOn,
+            join_prob: 0.0,
+            leave_prob: 0.0,
+            round_deadline_s: deadline,
+        };
+        let h = run(Some(&sc));
+        let (selected, kept, _, late) = drop_counts(&h);
+        t.row(vec![
+            format!("{deadline:.1}s"),
+            selected.to_string(),
+            kept.to_string(),
+            late.to_string(),
+            format!("{:.0}%", 100.0 * late as f64 / selected.max(1) as f64),
+            fnum(h.final_train_loss().unwrap_or(f32::NAN) as f64, 4),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("tighter deadlines shed stragglers: round time drops, per-round updates shrink.");
+
+    section("churn vs convergence (exponential on/off availability + membership churn)");
+    let mut t = Table::new(&[
+        "scenario", "mean on/off", "leave/join", "selected", "kept", "dropout", "final loss",
+    ])
+    .aligns(&[
+        Align::Left,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+    ]);
+    for (label, on_mult, off_mult, leave, join) in [
+        ("stable", 0.0, 0.0, 0.0, 0.0),
+        ("mild churn", 8.0, 2.0, 0.05, 0.5),
+        ("moderate churn", 3.0, 1.5, 0.15, 0.5),
+        ("high churn", 1.0, 1.0, 0.3, 0.5),
+    ] {
+        let sc = Scenario {
+            name: label.into(),
+            availability: if on_mult == 0.0 {
+                AvailabilityModel::AlwaysOn
+            } else {
+                AvailabilityModel::ExponentialChurn {
+                    mean_online_s: open_round_s * on_mult,
+                    mean_offline_s: open_round_s * off_mult,
+                }
+            },
+            join_prob: join,
+            leave_prob: leave,
+            round_deadline_s: f64::INFINITY,
+        };
+        let h = if sc.is_static() { run(None) } else { run(Some(&sc)) };
+        let (selected, kept, dropout, _) = drop_counts(&h);
+        t.row(vec![
+            label.into(),
+            if on_mult == 0.0 {
+                "-".into()
+            } else {
+                format!("{:.0}/{:.0}s", open_round_s * on_mult, open_round_s * off_mult)
+            },
+            format!("{leave:.2}/{join:.2}"),
+            selected.to_string(),
+            kept.to_string(),
+            dropout.to_string(),
+            fnum(h.final_train_loss().unwrap_or(f32::NAN) as f64, 4),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "churn starves rounds of participants; convergence tracks kept updates, \
+         not federation size (SCENARIOS.md)."
+    );
+}

@@ -71,10 +71,71 @@ pub fn fig2_summary(result: &Fig2Result) -> String {
     )
 }
 
+/// Per-round federation-dynamics summary: who participated, who dropped
+/// offline mid-round, who missed the deadline (classified from the round's
+/// failure reasons — see `fl::server::fold_gated`).  Rendered by the CLI
+/// after a `--scenario` run; semantics in SCENARIOS.md.
+pub fn dynamics_table(history: &crate::fl::History) -> Table {
+    use crate::fl::history::{DEADLINE_REASON_PREFIX, DROPOUT_REASON_PREFIX};
+    let mut t = Table::new(&[
+        "round", "selected", "kept", "dropout", "late", "other fail", "emu round",
+    ])
+    .aligns(&[
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+    ]);
+    let (mut tot_sel, mut tot_kept, mut tot_drop, mut tot_late, mut tot_other) =
+        (0usize, 0usize, 0usize, 0usize, 0usize);
+    for r in &history.rounds {
+        let dropout = r
+            .failures
+            .iter()
+            .filter(|f| f.reason.starts_with(DROPOUT_REASON_PREFIX))
+            .count();
+        let late = r
+            .failures
+            .iter()
+            .filter(|f| f.reason.starts_with(DEADLINE_REASON_PREFIX))
+            .count();
+        let other = r.failures.len() - dropout - late;
+        let kept = r.selected.len().saturating_sub(r.failures.len());
+        tot_sel += r.selected.len();
+        tot_kept += kept;
+        tot_drop += dropout;
+        tot_late += late;
+        tot_other += other;
+        t.row(vec![
+            r.round.to_string(),
+            r.selected.len().to_string(),
+            kept.to_string(),
+            dropout.to_string(),
+            late.to_string(),
+            other.to_string(),
+            format!("{:.2}s", r.emu_round_s),
+        ]);
+    }
+    t.row(vec![
+        "total".into(),
+        tot_sel.to_string(),
+        tot_kept.to_string(),
+        tot_drop.to_string(),
+        tot_late.to_string(),
+        tot_other.to_string(),
+        format!("{:.2}s", history.total_emu_seconds()),
+    ]);
+    t
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::analysis::fig2::{run, Fig2Config};
+    use crate::fl::history::{FailureRecord, History, RoundRecord};
 
     #[test]
     fn tables_render() {
@@ -87,6 +148,29 @@ mod tests {
         let g = fig2_generation_table(&r.generations());
         assert_eq!(g.num_rows(), 4);
         assert!(fig2_summary(&r).contains("Spearman"));
+    }
+
+    #[test]
+    fn dynamics_table_classifies_failures() {
+        let mut h = History::default();
+        h.push(RoundRecord {
+            round: 0,
+            selected: vec![0, 1, 2, 3],
+            failures: vec![
+                FailureRecord { client: 1, reason: "dropout: client went offline at 3.00s".into() },
+                FailureRecord { client: 2, reason: "deadline: fit+comm would finish at 9s".into() },
+                FailureRecord { client: 3, reason: "GPU OOM on x".into() },
+            ],
+            train_loss: 1.0,
+            eval_loss: None,
+            eval_accuracy: None,
+            emu_round_s: 5.0,
+            host_round_s: 0.01,
+        });
+        let rendered = dynamics_table(&h).render();
+        assert!(rendered.contains("dropout"), "{rendered}");
+        let t = dynamics_table(&h);
+        assert_eq!(t.num_rows(), 2, "one round + totals");
     }
 
     #[test]

@@ -33,22 +33,40 @@ impl ClientManager {
     /// Indices of the clients participating in this round.
     pub fn select(&mut self, num_clients: usize) -> Vec<usize> {
         assert!(num_clients > 0);
+        let everyone: Vec<usize> = (0..num_clients).collect();
+        self.select_from(&everyone)
+    }
+
+    /// Participants drawn from an eligibility pool (the federation-dynamics
+    /// layer filters out non-members and offline clients before each
+    /// round).  With the full pool this draws exactly the same RNG stream
+    /// as [`ClientManager::select`], so static federations are untouched.
+    pub fn select_from(&mut self, eligible: &[usize]) -> Vec<usize> {
+        assert!(!eligible.is_empty(), "select_from on an empty pool");
         match self.selection {
-            Selection::All => (0..num_clients).collect(),
+            Selection::All => eligible.to_vec(),
             Selection::Fraction(f) => {
                 assert!((0.0..=1.0).contains(&f), "fraction {f}");
-                let k = ((num_clients as f64 * f).round() as usize).clamp(1, num_clients);
-                let mut v = self.rng.sample_indices(num_clients, k);
-                v.sort();
-                v
+                let k =
+                    ((eligible.len() as f64 * f).round() as usize).clamp(1, eligible.len());
+                self.pick(eligible, k)
             }
             Selection::Count(k) => {
-                let k = k.clamp(1, num_clients);
-                let mut v = self.rng.sample_indices(num_clients, k);
-                v.sort();
-                v
+                let k = k.clamp(1, eligible.len());
+                self.pick(eligible, k)
             }
         }
+    }
+
+    fn pick(&mut self, eligible: &[usize], k: usize) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .rng
+            .sample_indices(eligible.len(), k)
+            .into_iter()
+            .map(|i| eligible[i])
+            .collect();
+        v.sort();
+        v
     }
 }
 
@@ -159,6 +177,31 @@ mod tests {
         for _ in 0..5 {
             assert_eq!(a.select(20), b.select(20));
         }
+    }
+
+    #[test]
+    fn select_from_full_pool_matches_select() {
+        let mut a = ClientManager::new(3, Selection::Fraction(0.5));
+        let mut b = ClientManager::new(3, Selection::Fraction(0.5));
+        let pool: Vec<usize> = (0..12).collect();
+        for _ in 0..5 {
+            assert_eq!(a.select(12), b.select_from(&pool));
+        }
+    }
+
+    #[test]
+    fn select_from_only_returns_eligible_clients() {
+        let mut m = ClientManager::new(5, Selection::Count(3));
+        let pool = vec![1, 4, 7, 9, 11];
+        for _ in 0..10 {
+            let s = m.select_from(&pool);
+            assert_eq!(s.len(), 3);
+            assert!(s.windows(2).all(|w| w[0] < w[1]), "sorted, distinct");
+            assert!(s.iter().all(|c| pool.contains(c)), "{s:?}");
+        }
+        // All: the pool itself.
+        let mut all = ClientManager::new(5, Selection::All);
+        assert_eq!(all.select_from(&pool), pool);
     }
 
     #[test]

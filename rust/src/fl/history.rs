@@ -2,6 +2,13 @@
 
 use crate::util::json::Json;
 
+/// Reason prefix marking a mid-round availability dropout.  The server's
+/// dynamics gate writes it and `analysis::report::dynamics_table`
+/// classifies by it — shared here so the two cannot drift apart.
+pub const DROPOUT_REASON_PREFIX: &str = "dropout:";
+/// Reason prefix marking a client that missed the round deadline.
+pub const DEADLINE_REASON_PREFIX: &str = "deadline:";
+
 /// Record of one client's failure in a round.
 #[derive(Debug, Clone)]
 pub struct FailureRecord {

@@ -20,6 +20,7 @@ use super::client::{ClientApp, FitConfig, TrainClient};
 use super::clientmgr::Selection;
 use super::history::History;
 use super::params::ParamVector;
+use super::scenario::Scenario;
 use super::server::{ServerApp, ServerConfig};
 use super::strategy::{FedAdam, FedAvg, FedAvgM, FedProx, Krum, Strategy, TrimmedMean};
 
@@ -88,6 +89,9 @@ pub struct LaunchOptions {
     pub fail_on_empty_round: bool,
     /// Workload descriptor for emulated timing/VRAM (see [`TimingWorkload`]).
     pub timing_workload: TimingWorkload,
+    /// Federation dynamics (availability/churn/dropout/deadline); `None`
+    /// runs the static federation (SCENARIOS.md).
+    pub scenario: Option<Scenario>,
 }
 
 impl Default for LaunchOptions {
@@ -114,6 +118,7 @@ impl Default for LaunchOptions {
             pacing: None,
             fail_on_empty_round: true,
             timing_workload: TimingWorkload::Resnet18,
+            scenario: None,
         }
     }
 }
@@ -137,6 +142,10 @@ impl LaunchOptions {
         o.seed = cfg.u64_or("federation", "seed", o.seed);
         o.network = cfg.bool_or("federation", "network", false);
         o.fail_on_empty_round = cfg.bool_or("federation", "fail_on_empty_round", true);
+        if cfg.sections().any(|s| s == "scenario") {
+            let sc = Scenario::from_cfg(cfg)?;
+            o.scenario = (!sc.is_static()).then_some(sc);
+        }
 
         o.partition = match cfg.str_or("data", "partition", "dirichlet").as_str() {
             "iid" => PartitionScheme::Iid,
@@ -329,6 +338,9 @@ pub fn launch(opts: &LaunchOptions) -> Result<LaunchOutcome, FlError> {
         clients,
     )
     .with_eval_data(eval);
+    if let Some(sc) = &opts.scenario {
+        server = server.with_scenario(sc);
+    }
     if opts.workers > 1 {
         // Each pool worker builds (and caches) its own executor over the
         // same artifact directory; real fits then overlap while the
@@ -414,6 +426,22 @@ profiles = ["gtx-1060", "budget-2019"]
         assert!(matches!(o.partition, PartitionScheme::Dirichlet { .. }));
         assert_eq!(o.selection, Selection::All);
         assert_eq!(o.timing_workload, TimingWorkload::Resnet18);
+    }
+
+    #[test]
+    fn from_cfg_parses_scenario_section() {
+        let cfg = Cfg::parse(
+            "[federation]\nrounds = 2\n\n[scenario]\npreset = \"high-churn\"\ndeadline_s = 20",
+        )
+        .unwrap();
+        let o = LaunchOptions::from_cfg(&cfg).unwrap();
+        let sc = o.scenario.expect("scenario parsed");
+        assert_eq!(sc.name, "high-churn");
+        assert_eq!(sc.round_deadline_s, 20.0);
+
+        // A static scenario section compiles to no dynamics at all.
+        let cfg = Cfg::parse("[scenario]\npreset = \"stable\"").unwrap();
+        assert!(LaunchOptions::from_cfg(&cfg).unwrap().scenario.is_none());
     }
 
     #[test]

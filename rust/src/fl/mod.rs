@@ -7,6 +7,7 @@ pub mod clientmgr;
 pub mod history;
 pub mod launcher;
 pub mod params;
+pub mod scenario;
 pub mod server;
 pub mod strategy;
 
@@ -16,6 +17,7 @@ pub use clientmgr::{ClientManager, RoundLedger, Selection};
 pub use history::{History, RoundRecord};
 pub use launcher::{launch, HardwareSource, LaunchOptions, LaunchOutcome};
 pub use params::ParamVector;
+pub use scenario::{Scenario, SCENARIO_PRESETS};
 pub use server::{ServerApp, ServerConfig};
 pub use strategy::{
     AccOutput, AggAccumulator, BoundedBuffer, FedAdam, FedAvg, FedAvgM, FedProx, Krum,

@@ -1,0 +1,541 @@
+//! Scenario configuration: the user-facing description of federation
+//! dynamics (availability model, churn rates, round deadline), resolved
+//! from a preset name or a TOML/JSON file and compiled into a
+//! [`FederationDynamics`] when the server starts.
+//!
+//! The full field/preset reference lives in `SCENARIOS.md`; the CLI
+//! exposes this as `bouquetfl run --scenario <preset|file>`.
+
+use crate::error::ConfigError;
+use crate::sched::dynamics::{AvailabilityModel, FederationDynamics};
+use crate::util::cfg::Cfg;
+use crate::util::json::Json;
+
+/// Names accepted by [`Scenario::preset`] (and `--scenario`).
+pub const SCENARIO_PRESETS: &[&str] = &["stable", "diurnal-mobile", "high-churn"];
+
+/// Numeric scenario keys (model parameters, churn, deadline) — used to
+/// reject scenario files that contribute nothing recognisable.
+const SCENARIO_KEYS: &[&str] = &[
+    "join_prob",
+    "leave_prob",
+    "deadline_s",
+    "period_s",
+    "online_fraction",
+    "drain_s",
+    "recharge_s",
+    "jitter",
+    "mean_online_s",
+    "mean_offline_s",
+];
+
+/// A federation-dynamics scenario.
+///
+/// # Worked example
+///
+/// ```
+/// use bouquetfl::fl::scenario::Scenario;
+///
+/// let sc = Scenario::preset("high-churn").unwrap();
+/// assert!(!sc.is_static());
+///
+/// // Compiled dynamics are deterministic per seed: two instances agree
+/// // on eligibility at every emulated time.
+/// let mut a = sc.build_dynamics(42, 8, 1);
+/// let mut b = sc.build_dynamics(42, 8, 1);
+/// for t in [0.0, 30.0, 120.0, 900.0] {
+///     assert_eq!(a.eligible_at(t), b.eligible_at(t));
+/// }
+/// ```
+///
+/// Scenarios also load from config files (TOML subset or JSON):
+///
+/// ```
+/// use bouquetfl::fl::scenario::Scenario;
+/// use bouquetfl::util::cfg::Cfg;
+///
+/// let cfg = Cfg::parse(r#"
+/// [scenario]
+/// model = "exponential-churn"
+/// mean_online_s = 90
+/// mean_offline_s = 45
+/// leave_prob = 0.1
+/// join_prob = 0.4
+/// deadline_s = 25
+/// "#).unwrap();
+/// let sc = Scenario::from_cfg(&cfg).unwrap();
+/// assert_eq!(sc.round_deadline_s, 25.0);
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scenario {
+    pub name: String,
+    /// How each client's online/offline timeline evolves.
+    pub availability: AvailabilityModel,
+    /// Per-round probability that an absent client rejoins.
+    pub join_prob: f64,
+    /// Per-round probability that a present client leaves.
+    pub leave_prob: f64,
+    /// Emulated round deadline in seconds (`f64::INFINITY` = open rounds).
+    pub round_deadline_s: f64,
+}
+
+impl Default for Scenario {
+    fn default() -> Self {
+        Scenario {
+            name: "stable".into(),
+            availability: AvailabilityModel::AlwaysOn,
+            join_prob: 0.0,
+            leave_prob: 0.0,
+            round_deadline_s: f64::INFINITY,
+        }
+    }
+}
+
+impl Scenario {
+    /// A named preset (see `SCENARIOS.md` for the full table):
+    /// `stable`, `diurnal-mobile`, `high-churn`.
+    pub fn preset(name: &str) -> Option<Scenario> {
+        match name {
+            "stable" => Some(Scenario::default()),
+            "diurnal-mobile" => Some(Scenario {
+                name: name.into(),
+                availability: AvailabilityModel::Diurnal {
+                    period_s: 600.0,
+                    online_fraction: 0.7,
+                },
+                join_prob: 0.3,
+                leave_prob: 0.05,
+                round_deadline_s: 45.0,
+            }),
+            "high-churn" => Some(Scenario {
+                name: name.into(),
+                availability: AvailabilityModel::ExponentialChurn {
+                    mean_online_s: 60.0,
+                    mean_offline_s: 30.0,
+                },
+                join_prob: 0.5,
+                leave_prob: 0.2,
+                round_deadline_s: 30.0,
+            }),
+            _ => None,
+        }
+    }
+
+    /// True when the scenario has no dynamic behaviour at all — the server
+    /// then takes exactly the static (pre-dynamics) code path, so the
+    /// engine output is bit-identical to a run with no scenario.
+    pub fn is_static(&self) -> bool {
+        self.availability == AvailabilityModel::AlwaysOn
+            && self.join_prob == 0.0
+            && self.leave_prob == 0.0
+            && self.round_deadline_s.is_infinite()
+    }
+
+    /// Resolve a CLI spec: a preset name, or a path to a `.toml`/`.json`
+    /// scenario file.
+    pub fn resolve(spec: &str) -> Result<Scenario, ConfigError> {
+        if let Some(p) = Self::preset(spec) {
+            return Ok(p);
+        }
+        if std::path::Path::new(spec).exists() {
+            return Self::load(spec);
+        }
+        Err(ConfigError::InvalidValue {
+            key: "scenario".into(),
+            msg: format!(
+                "'{spec}' is neither a preset ({}) nor an existing file",
+                SCENARIO_PRESETS.join("|")
+            ),
+        })
+    }
+
+    /// Load from a scenario file; `.json` parses as JSON, anything else as
+    /// the TOML subset (a `[scenario]` section).
+    ///
+    /// A file that contributes no scenario keys at all is rejected — a
+    /// misplaced section or top-level keys would otherwise silently run a
+    /// static federation while the user believes dynamics are on.
+    pub fn load(path: &str) -> Result<Scenario, ConfigError> {
+        if path.ends_with(".json") {
+            let text = std::fs::read_to_string(path).map_err(|e| ConfigError::Parse {
+                line: 0,
+                msg: format!("cannot read {path}: {e}"),
+            })?;
+            let json = Json::parse(&text).map_err(|msg| ConfigError::Parse { line: 0, msg })?;
+            // `name` alone does not count — {"name": "high-churn"} is a
+            // plausible typo for {"preset": ...} and carries no dynamics.
+            let recognized = SCENARIO_KEYS.iter().any(|k| json.get(k).is_some())
+                || json.get("preset").is_some()
+                || json.get("model").is_some();
+            if !recognized {
+                return Err(ConfigError::InvalidValue {
+                    key: "scenario".into(),
+                    msg: format!("{path} contains no recognised scenario keys"),
+                });
+            }
+            Self::from_json(&json)
+        } else {
+            let cfg = Cfg::load(path)?;
+            if !cfg.sections().any(|s| s == "scenario") {
+                return Err(ConfigError::InvalidValue {
+                    key: "scenario".into(),
+                    msg: format!("{path} has no [scenario] section"),
+                });
+            }
+            Self::from_cfg(&cfg)
+        }
+    }
+
+    /// Parse the `[scenario]` section of a federation config.  A `preset`
+    /// key picks the base scenario; every other key overrides it — model
+    /// parameters (`period_s`, `mean_online_s`, …) override the base even
+    /// without an explicit `model` key.
+    pub fn from_cfg(cfg: &Cfg) -> Result<Scenario, ConfigError> {
+        Self::parse_keys(
+            cfg.get("scenario", "preset").and_then(|v| v.as_str()),
+            cfg.get("scenario", "model").and_then(|v| v.as_str()),
+            cfg.get("scenario", "name").and_then(|v| v.as_str()),
+            &|key| cfg.get("scenario", key).and_then(|v| v.as_f64()),
+        )
+    }
+
+    /// Parse a JSON scenario object (same keys as the TOML section).
+    pub fn from_json(json: &Json) -> Result<Scenario, ConfigError> {
+        Self::parse_keys(
+            json.get("preset").and_then(|v| v.as_str()),
+            json.get("model").and_then(|v| v.as_str()),
+            json.get("name").and_then(|v| v.as_str()),
+            &|key| json.get(key).and_then(|v| v.as_f64()),
+        )
+    }
+
+    /// Shared key-based builder behind the TOML and JSON fronts.
+    fn parse_keys(
+        preset: Option<&str>,
+        model: Option<&str>,
+        name: Option<&str>,
+        get: &dyn Fn(&str) -> Option<f64>,
+    ) -> Result<Scenario, ConfigError> {
+        let mut sc = match preset {
+            Some(p) => Self::preset(p).ok_or_else(|| ConfigError::InvalidValue {
+                key: "scenario.preset".into(),
+                msg: format!("unknown preset '{p}' ({})", SCENARIO_PRESETS.join("|")),
+            })?,
+            None => Scenario::default(),
+        };
+        // Model parameters override the base (preset or stable) whether or
+        // not the model kind itself is restated.
+        let kind = model.unwrap_or_else(|| sc.availability.kind());
+        sc.availability = build_model(kind, &sc.availability, get)?;
+        if let Some(j) = get("join_prob") {
+            sc.join_prob = j;
+        }
+        if let Some(l) = get("leave_prob") {
+            sc.leave_prob = l;
+        }
+        if let Some(d) = get("deadline_s") {
+            sc.round_deadline_s = d;
+        }
+        if let Some(n) = name {
+            sc.name = n.to_string();
+        } else if model.is_some() && preset.is_none() {
+            sc.name = "custom".into();
+        }
+        validate(&sc)?;
+        Ok(sc)
+    }
+
+    /// Compile into runtime dynamics for a `clients`-strong federation.
+    /// `slots` is the emulated execution concurrency the per-round gate
+    /// packs kept fits onto (the scheduler's `max_concurrency`).
+    pub fn build_dynamics(
+        &self,
+        seed: u64,
+        clients: usize,
+        slots: usize,
+    ) -> FederationDynamics {
+        FederationDynamics::new(
+            seed,
+            clients,
+            &self.availability,
+            self.join_prob,
+            self.leave_prob,
+            self.round_deadline_s,
+            slots,
+        )
+    }
+
+    /// One-line human description for run headers.
+    pub fn describe(&self) -> String {
+        let model = match &self.availability {
+            AvailabilityModel::AlwaysOn => "always-on".to_string(),
+            AvailabilityModel::Diurnal { period_s, online_fraction } => {
+                format!("diurnal(period {period_s:.0}s, online {:.0}%)", online_fraction * 100.0)
+            }
+            AvailabilityModel::Battery { drain_s, recharge_s, jitter } => {
+                format!("battery(drain {drain_s:.0}s, recharge {recharge_s:.0}s, jitter {jitter:.2})")
+            }
+            AvailabilityModel::ExponentialChurn { mean_online_s, mean_offline_s } => {
+                format!("exp-churn(on {mean_online_s:.0}s, off {mean_offline_s:.0}s)")
+            }
+        };
+        let deadline = if self.round_deadline_s.is_finite() {
+            format!("{:.0}s deadline", self.round_deadline_s)
+        } else {
+            "open rounds".to_string()
+        };
+        format!(
+            "{}: {model}, join {:.2}/round, leave {:.2}/round, {deadline}",
+            self.name, self.join_prob, self.leave_prob
+        )
+    }
+}
+
+/// Build an availability model named `kind`; each parameter defaults to
+/// the base model's value when the base is the same kind (so preset
+/// fields survive partial overrides), or to the documented default.
+fn build_model(
+    kind: &str,
+    base: &AvailabilityModel,
+    get: &dyn Fn(&str) -> Option<f64>,
+) -> Result<AvailabilityModel, ConfigError> {
+    let g = |key: &str, fallback: f64| get(key).unwrap_or(fallback);
+    Ok(match kind {
+        "always-on" => AvailabilityModel::AlwaysOn,
+        "diurnal" => {
+            let (p, f) = match base {
+                AvailabilityModel::Diurnal { period_s, online_fraction } => {
+                    (*period_s, *online_fraction)
+                }
+                _ => (600.0, 0.7),
+            };
+            AvailabilityModel::Diurnal {
+                period_s: g("period_s", p),
+                online_fraction: g("online_fraction", f),
+            }
+        }
+        "battery" => {
+            let (d, r, j) = match base {
+                AvailabilityModel::Battery { drain_s, recharge_s, jitter } => {
+                    (*drain_s, *recharge_s, *jitter)
+                }
+                _ => (120.0, 60.0, 0.2),
+            };
+            AvailabilityModel::Battery {
+                drain_s: g("drain_s", d),
+                recharge_s: g("recharge_s", r),
+                jitter: g("jitter", j),
+            }
+        }
+        "exponential-churn" => {
+            let (on, off) = match base {
+                AvailabilityModel::ExponentialChurn { mean_online_s, mean_offline_s } => {
+                    (*mean_online_s, *mean_offline_s)
+                }
+                _ => (60.0, 30.0),
+            };
+            AvailabilityModel::ExponentialChurn {
+                mean_online_s: g("mean_online_s", on),
+                mean_offline_s: g("mean_offline_s", off),
+            }
+        }
+        other => {
+            return Err(ConfigError::InvalidValue {
+                key: "scenario.model".into(),
+                msg: format!(
+                    "unknown model '{other}' (always-on|diurnal|battery|exponential-churn)"
+                ),
+            })
+        }
+    })
+}
+
+fn validate(sc: &Scenario) -> Result<(), ConfigError> {
+    let prob = |key: &str, p: f64| {
+        if (0.0..=1.0).contains(&p) {
+            Ok(())
+        } else {
+            Err(ConfigError::InvalidValue {
+                key: format!("scenario.{key}"),
+                msg: format!("probability {p} outside [0, 1]"),
+            })
+        }
+    };
+    let positive = |key: &str, x: f64| {
+        if x > 0.0 {
+            Ok(())
+        } else {
+            Err(ConfigError::InvalidValue {
+                key: format!("scenario.{key}"),
+                msg: format!("duration {x} must be positive"),
+            })
+        }
+    };
+    prob("join_prob", sc.join_prob)?;
+    prob("leave_prob", sc.leave_prob)?;
+    if sc.round_deadline_s <= 0.0 {
+        return Err(ConfigError::InvalidValue {
+            key: "scenario.deadline_s".into(),
+            msg: format!("deadline {} must be positive", sc.round_deadline_s),
+        });
+    }
+    // Degenerate model durations would make the trace generator emit one
+    // MIN_INTERVAL toggle per microsecond of emulated time — reject them
+    // at the config boundary instead.
+    match &sc.availability {
+        AvailabilityModel::AlwaysOn => {}
+        AvailabilityModel::Diurnal { period_s, online_fraction } => {
+            positive("period_s", *period_s)?;
+            prob("online_fraction", *online_fraction)?;
+        }
+        AvailabilityModel::Battery { drain_s, recharge_s, jitter } => {
+            positive("drain_s", *drain_s)?;
+            positive("recharge_s", *recharge_s)?;
+            prob("jitter", *jitter)?;
+        }
+        AvailabilityModel::ExponentialChurn { mean_online_s, mean_offline_s } => {
+            positive("mean_online_s", *mean_online_s)?;
+            positive("mean_offline_s", *mean_offline_s)?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_resolve_and_only_stable_is_static() {
+        for &name in SCENARIO_PRESETS {
+            let sc = Scenario::preset(name).unwrap();
+            assert_eq!(sc.name, name);
+            assert_eq!(sc.is_static(), name == "stable");
+            assert_eq!(Scenario::resolve(name).unwrap(), sc);
+        }
+        assert!(Scenario::preset("nope").is_none());
+        assert!(Scenario::resolve("nope").is_err());
+    }
+
+    #[test]
+    fn cfg_preset_with_overrides() {
+        let cfg = Cfg::parse(
+            "[scenario]\npreset = \"high-churn\"\ndeadline_s = 99\nleave_prob = 0.01",
+        )
+        .unwrap();
+        let sc = Scenario::from_cfg(&cfg).unwrap();
+        assert_eq!(sc.name, "high-churn");
+        assert_eq!(sc.round_deadline_s, 99.0);
+        assert_eq!(sc.leave_prob, 0.01);
+        assert_eq!(sc.join_prob, 0.5, "non-overridden preset field kept");
+    }
+
+    #[test]
+    fn cfg_model_params_override_a_preset_without_restating_the_model() {
+        let cfg = Cfg::parse(
+            "[scenario]\npreset = \"diurnal-mobile\"\nonline_fraction = 0.4",
+        )
+        .unwrap();
+        let sc = Scenario::from_cfg(&cfg).unwrap();
+        assert_eq!(
+            sc.availability,
+            AvailabilityModel::Diurnal { period_s: 600.0, online_fraction: 0.4 },
+            "param override must apply to the preset's model"
+        );
+        // Restating the model keeps the preset's params for that kind too.
+        let cfg = Cfg::parse(
+            "[scenario]\npreset = \"high-churn\"\nmodel = \"exponential-churn\"\nmean_offline_s = 5",
+        )
+        .unwrap();
+        let sc = Scenario::from_cfg(&cfg).unwrap();
+        assert_eq!(
+            sc.availability,
+            AvailabilityModel::ExponentialChurn { mean_online_s: 60.0, mean_offline_s: 5.0 }
+        );
+    }
+
+    #[test]
+    fn cfg_without_scenario_section_is_stable() {
+        let cfg = Cfg::parse("[federation]\nrounds = 2").unwrap();
+        let sc = Scenario::from_cfg(&cfg).unwrap();
+        assert!(sc.is_static());
+    }
+
+    #[test]
+    fn cfg_rejects_bad_values() {
+        for bad in [
+            "[scenario]\nmodel = \"weird\"",
+            "[scenario]\njoin_prob = 1.5",
+            "[scenario]\ndeadline_s = -3",
+            "[scenario]\npreset = \"nope\"",
+            // Degenerate durations would spin the trace generator at one
+            // MIN_INTERVAL toggle per step — rejected at the boundary.
+            "[scenario]\nmodel = \"battery\"\ndrain_s = 0",
+            "[scenario]\nmodel = \"diurnal\"\nperiod_s = -10",
+            "[scenario]\nmodel = \"exponential-churn\"\nmean_online_s = 0",
+            "[scenario]\nmodel = \"battery\"\njitter = 2.0",
+        ] {
+            let cfg = Cfg::parse(bad).unwrap();
+            assert!(Scenario::from_cfg(&cfg).is_err(), "accepted: {bad}");
+        }
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let json = Json::parse(
+            r#"{"preset": "diurnal-mobile", "deadline_s": 55, "name": "my-exp"}"#,
+        )
+        .unwrap();
+        let sc = Scenario::from_json(&json).unwrap();
+        assert_eq!(sc.name, "my-exp");
+        assert_eq!(sc.round_deadline_s, 55.0);
+        assert!(matches!(sc.availability, AvailabilityModel::Diurnal { .. }));
+
+        let custom = Json::parse(
+            r#"{"model": "battery", "drain_s": 10, "recharge_s": 5, "jitter": 0}"#,
+        )
+        .unwrap();
+        let sc = Scenario::from_json(&custom).unwrap();
+        assert_eq!(
+            sc.availability,
+            AvailabilityModel::Battery { drain_s: 10.0, recharge_s: 5.0, jitter: 0.0 }
+        );
+    }
+
+    #[test]
+    fn files_without_scenario_content_are_rejected() {
+        let dir = std::env::temp_dir();
+        let toml_path = dir.join("bouquet_scenario_empty.toml");
+        let json_path = dir.join("bouquet_scenario_empty.json");
+        // Keys outside a [scenario] section / unrecognised JSON keys would
+        // silently yield a static run — must error instead.
+        std::fs::write(&toml_path, "[federation]\nrounds = 3\ndeadline_s = 20\n").unwrap();
+        std::fs::write(&json_path, r#"{"dead_line_s": 20}"#).unwrap();
+        assert!(Scenario::load(toml_path.to_str().unwrap()).is_err());
+        assert!(Scenario::load(json_path.to_str().unwrap()).is_err());
+        let _ = std::fs::remove_file(&toml_path);
+        let _ = std::fs::remove_file(&json_path);
+    }
+
+    #[test]
+    fn files_load_both_formats() {
+        let dir = std::env::temp_dir();
+        let toml_path = dir.join("bouquet_scenario_test.toml");
+        let json_path = dir.join("bouquet_scenario_test.json");
+        std::fs::write(&toml_path, "[scenario]\npreset = \"high-churn\"\n").unwrap();
+        std::fs::write(&json_path, r#"{"preset": "high-churn"}"#).unwrap();
+        let a = Scenario::resolve(toml_path.to_str().unwrap()).unwrap();
+        let b = Scenario::resolve(json_path.to_str().unwrap()).unwrap();
+        assert_eq!(a, b);
+        let _ = std::fs::remove_file(&toml_path);
+        let _ = std::fs::remove_file(&json_path);
+    }
+
+    #[test]
+    fn describe_mentions_the_model_and_deadline() {
+        let d = Scenario::preset("high-churn").unwrap().describe();
+        assert!(d.contains("exp-churn") && d.contains("30s deadline"), "{d}");
+        let s = Scenario::default().describe();
+        assert!(s.contains("open rounds"), "{s}");
+    }
+}

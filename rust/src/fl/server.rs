@@ -11,6 +11,13 @@
 //! restores selection order before folding, so the aggregate, the emulated
 //! `Schedule`, and the shared clock are bit-identical to the sequential
 //! engine.
+//!
+//! A [`Scenario`] (via [`ServerApp::with_scenario`]) layers federation
+//! dynamics on top: per-round eligibility (membership churn + availability
+//! traces), mid-round dropout, and deadline-closed rounds.  All dynamic
+//! decisions run in selection order on values identical across worker
+//! counts, so the bit-identity invariant extends to dynamic federations
+//! (DESIGN.md §9, SCENARIOS.md).
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -20,6 +27,7 @@ use crate::emu::{EnvConfig, Isolation, VirtualClock};
 use crate::error::{EmuError, FlError};
 use crate::hardware::profile::HardwareProfile;
 use crate::runtime::ModelExecutor;
+use crate::sched::dynamics::{FederationDynamics, GateVerdict, RoundGate};
 use crate::sched::pool::FitOutcomeSlim;
 use crate::sched::{ExecutorFactory, FitTask, ReorderBuffer, Scheduler, Trace, WorkerPool};
 
@@ -28,6 +36,7 @@ use super::client::{ClientApp, FitConfig, FitResult};
 use super::clientmgr::{ClientManager, RoundLedger, Selection};
 use super::history::{History, RoundRecord};
 use super::params::ParamVector;
+use super::scenario::Scenario;
 use super::strategy::{AggAccumulator, Strategy};
 
 /// Server configuration.
@@ -39,7 +48,9 @@ pub struct ServerConfig {
     /// Run centralised evaluation every N rounds (0 = never).
     pub eval_every: u32,
     pub seed: u64,
-    /// Abort if a round ends with zero surviving clients.
+    /// Abort if a round ends with zero surviving clients.  Under a dynamic
+    /// scenario an empty round is an expected outcome (everyone dropped or
+    /// missed the deadline), so this only applies to static federations.
     pub fail_on_empty_round: bool,
 }
 
@@ -71,6 +82,9 @@ pub struct ServerApp {
     workers: usize,
     /// Per-worker executor builder for the concurrent engine.
     executor_factory: Option<ExecutorFactory>,
+    /// Federation dynamics (availability/churn/dropout/deadline); `None`
+    /// runs the static engine exactly as before.
+    dynamics: Option<FederationDynamics>,
     pub trace: Trace,
 }
 
@@ -99,6 +113,7 @@ impl ServerApp {
             eval_data: None,
             workers: 1,
             executor_factory: None,
+            dynamics: None,
             trace: Trace::default(),
         }
     }
@@ -122,6 +137,28 @@ impl ServerApp {
         if self.workers > 1 {
             self.env_cfg.isolation = Isolation::Concurrent;
         }
+        self
+    }
+
+    /// Attach a federation-dynamics scenario (SCENARIOS.md).  A static
+    /// scenario (the `stable` preset) compiles to nothing, so the engine
+    /// output stays bit-identical to a scenario-less run.
+    pub fn with_scenario(mut self, scenario: &Scenario) -> Self {
+        self.dynamics = if scenario.is_static() {
+            None
+        } else {
+            Some(scenario.build_dynamics(
+                self.cfg.seed,
+                self.clients.len(),
+                self.scheduler.max_concurrency(),
+            ))
+        };
+        self
+    }
+
+    /// Attach pre-built dynamics directly (custom/hand-crafted traces).
+    pub fn with_dynamics(mut self, dynamics: FederationDynamics) -> Self {
+        self.dynamics = Some(dynamics);
         self
     }
 
@@ -167,7 +204,50 @@ impl ServerApp {
 
         for round in 0..self.cfg.rounds {
             let host_t0 = Instant::now();
-            let selected = manager.select(self.clients.len());
+
+            // --- dynamics: churn + eligibility ---------------------------
+            if let Some(d) = self.dynamics.as_mut() {
+                d.begin_round();
+            }
+            let selected: Vec<usize> = match self.dynamics.as_mut() {
+                Some(d) => {
+                    // Availability is judged on the scenario timeline (the
+                    // sum of recorded round lengths), which is identical
+                    // across worker counts and consistent with the history.
+                    let now = d.now_s();
+                    let eligible = d.eligible_at(now);
+                    if eligible.is_empty() {
+                        // Nobody is online: fast-forward to the next member
+                        // coming back (otherwise the timeline would never
+                        // move and every later round would see the same
+                        // offline federation), record a skipped round, and
+                        // move on.  The shared clock advances too so
+                        // real-time pacing observes the wait.
+                        let wait = match d.next_wakeup_after(now) {
+                            Some(t) => {
+                                let w = (t - now).max(0.0);
+                                d.advance(w);
+                                clock.advance(w);
+                                w
+                            }
+                            None => 0.0,
+                        };
+                        history.push(RoundRecord {
+                            round,
+                            selected: Vec::new(),
+                            failures: Vec::new(),
+                            train_loss: f32::NAN,
+                            eval_loss: None,
+                            eval_accuracy: None,
+                            emu_round_s: wait,
+                            host_round_s: host_t0.elapsed().as_secs_f64(),
+                        });
+                        continue;
+                    }
+                    manager.select_from(&eligible)
+                }
+                None => manager.select(self.clients.len()),
+            };
             let fit_cfg = self.strategy.configure(round, &self.cfg.fit);
 
             // --- fit phase: stream completions into the accumulator ------
@@ -175,22 +255,66 @@ impl ServerApp {
                 RoundLedger::new(selected.iter().map(|&i| i as u32).collect());
             let mut acc = self.strategy.accumulator(global.len(), selected.len());
             let round_t0 = clock.now_s();
+            let mut gate = self.dynamics.as_ref().map(|d| d.begin_gate(d.now_s()));
+            let mut dyn_gate = self.dynamics.as_mut().zip(gate.as_mut());
             match &pool {
-                Some(pool) => self.round_pooled(
-                    pool, &selected, &global, &fit_cfg, clock, &mut ledger, &mut acc,
-                )?,
-                None => self.round_inline(
-                    &mut executor, &selected, &global, &fit_cfg, clock, &mut ledger,
+                Some(pool) => round_pooled(
+                    &mut self.clients,
+                    &self.host,
+                    &self.env_cfg,
+                    pool,
+                    &selected,
+                    &global,
+                    &fit_cfg,
+                    clock,
+                    &mut ledger,
                     &mut acc,
+                    &mut dyn_gate,
+                )?,
+                None => round_inline(
+                    &mut self.clients,
+                    &self.host,
+                    &self.env_cfg,
+                    &mut executor,
+                    &selected,
+                    &global,
+                    &fit_cfg,
+                    clock,
+                    &mut ledger,
+                    &mut acc,
+                    &mut dyn_gate,
                 )?,
             }
 
             if ledger.successes() == 0 {
-                if self.cfg.fail_on_empty_round {
+                // An empty round the *gate* caused (dropouts/deadline) is
+                // an expected dynamics outcome; an empty round with no
+                // gate drops (e.g. every client OOM'd) is the same failure
+                // it would be on the static engine.
+                let (dynamic_empty, empty_round_s) = match gate.as_ref() {
+                    // An all-dropped round with lates held the round open
+                    // until the deadline; a pure-dropout round lasted until
+                    // the last observed disconnection (strictly positive,
+                    // so the scenario timeline always moves and the round
+                    // cannot replay identically forever).
+                    Some(g) if g.dropped() > 0 => {
+                        let len = if g.late() > 0 {
+                            g.deadline_s()
+                        } else {
+                            g.dropout_horizon_s().min(g.deadline_s())
+                        };
+                        (true, len)
+                    }
+                    _ => (false, 0.0),
+                };
+                if self.cfg.fail_on_empty_round && !dynamic_empty {
                     return Err(FlError::AllClientsFailed {
                         round,
                         count: selected.len(),
                     });
+                }
+                if let Some(d) = self.dynamics.as_mut() {
+                    d.advance(empty_round_s);
                 }
                 let selected = std::mem::take(&mut ledger.selected);
                 let failures = std::mem::take(&mut ledger.failures);
@@ -201,14 +325,25 @@ impl ServerApp {
                     train_loss: f32::NAN,
                     eval_loss: None,
                     eval_accuracy: None,
-                    emu_round_s: 0.0,
+                    emu_round_s: empty_round_s,
                     host_round_s: host_t0.elapsed().as_secs_f64(),
                 });
                 continue;
             }
 
             // --- round wall-clock per the scheduling policy --------------
-            let schedule = self.scheduler.schedule(&ledger.durations);
+            // A round the gate actually touched renders the gate's own
+            // packing (the spans its drop decisions were judged against);
+            // a drop-free round — and every static round — renders the
+            // configured scheduler, so a scenario that drops nobody is
+            // bit-identical to the static engine for any scheduler.
+            let schedule = match gate.as_ref() {
+                Some(g) if g.dropped() > 0 => g.schedule(),
+                _ => self.scheduler.schedule(&ledger.durations),
+            };
+            if let Some(d) = self.dynamics.as_mut() {
+                d.advance(schedule.round_s);
+            }
             let base = round_t0;
             for &(c, s, e) in &schedule.spans {
                 self.trace.add(c, format!("round{round}"), base + s, base + e);
@@ -252,124 +387,6 @@ impl ServerApp {
         Ok((global, history))
     }
 
-    /// The paper-default engine: fits run sequentially in this thread,
-    /// each finished client folded into the accumulator immediately.
-    #[allow(clippy::too_many_arguments)]
-    fn round_inline(
-        &mut self,
-        executor: &mut Option<&mut ModelExecutor>,
-        selected: &[usize],
-        global: &ParamVector,
-        fit_cfg: &FitConfig,
-        clock: &mut VirtualClock,
-        ledger: &mut RoundLedger,
-        acc: &mut Box<dyn AggAccumulator>,
-    ) -> Result<(), FlError> {
-        for &ci in selected {
-            let client = self.clients[ci].as_mut().expect("client checked in");
-            let mut ctx = BouquetContext {
-                executor: executor.as_deref_mut(),
-                clock,
-                host: &self.host,
-                env_cfg: self.env_cfg.clone(),
-            };
-            match client.fit(global, fit_cfg, &mut ctx) {
-                Ok(result) => fold(ledger, acc, result)?,
-                Err(e @ EmuError::GpuOom { .. }) | Err(e @ EmuError::HostOom { .. }) => {
-                    // The paper's OOM story: the framework survives a
-                    // failing client; it simply contributes no update.
-                    ledger.record_failure(client.id(), e.to_string());
-                }
-                Err(other) => {
-                    return Err(FlError::ClientFailed {
-                        client: client.id(),
-                        source: other,
-                    })
-                }
-            }
-        }
-        Ok(())
-    }
-
-    /// The concurrent engine: fits run on the pool; outcomes stream back
-    /// in completion order and pass through a reorder buffer so every fold
-    /// (accumulator, ledger, shared clock) happens in selection order —
-    /// bit-identical to the inline engine.
-    #[allow(clippy::too_many_arguments)]
-    fn round_pooled(
-        &mut self,
-        pool: &WorkerPool,
-        selected: &[usize],
-        global: &ParamVector,
-        fit_cfg: &FitConfig,
-        clock: &mut VirtualClock,
-        ledger: &mut RoundLedger,
-        acc: &mut Box<dyn AggAccumulator>,
-    ) -> Result<(), FlError> {
-        let shared = Arc::new(global.clone());
-        for (pos, &ci) in selected.iter().enumerate() {
-            let client = self.clients[ci].take().expect("client checked in");
-            pool.submit(FitTask {
-                index: pos,
-                client,
-                global: Arc::clone(&shared),
-                cfg: fit_cfg.clone(),
-                host: self.host.clone(),
-                env_cfg: self.env_cfg.clone(),
-            })?;
-        }
-
-        let mut reorder = ReorderBuffer::new(selected.len());
-        let mut fatal: Option<FlError> = None;
-        for _ in 0..selected.len() {
-            let outcome = pool.recv()?;
-            self.clients[selected[outcome.index]] = Some(outcome.client);
-            reorder.accept(FitOutcomeSlim {
-                index: outcome.index,
-                client_id: outcome.client_id,
-                result: outcome.result,
-            });
-            while let Some(slim) = reorder.pop_ready() {
-                // Once the round is doomed, keep draining (every client must
-                // come back) but stop folding — the first error is the one
-                // the caller sees.
-                if fatal.is_some() {
-                    continue;
-                }
-                match slim.result {
-                    Ok(result) => {
-                        // Replay the emulated time the inline engine would
-                        // have advanced during this fit, increment for
-                        // increment (bit-identical clock trajectory).
-                        clock.advance(result.emu.warmup_s);
-                        for _ in 0..result.emu.steps {
-                            clock.advance(result.emu.step_s);
-                        }
-                        if let Err(e) = fold(ledger, acc, result) {
-                            fatal = Some(e);
-                        }
-                    }
-                    Err(e @ EmuError::GpuOom { .. })
-                    | Err(e @ EmuError::HostOom { .. }) => {
-                        ledger.record_failure(slim.client_id, e.to_string());
-                    }
-                    Err(other) => {
-                        fatal = Some(FlError::ClientFailed {
-                            client: slim.client_id,
-                            source: other,
-                        });
-                    }
-                }
-            }
-        }
-        // All clients are checked back in; only now surface a fatal error
-        // (same observable as the inline engine's early return).
-        match fatal {
-            Some(e) => Err(e),
-            None => Ok(()),
-        }
-    }
-
     /// Centralised eval over the held-out set (batched by the compiled
     /// eval artifact's batch size; a trailing partial batch is padded by
     /// wrapping, standard practice for fixed-shape accelerator eval).
@@ -405,6 +422,187 @@ impl ServerApp {
             start += take;
         }
         Some(((loss_sum / n as f64) as f32, (correct / n as f64) as f32))
+    }
+}
+
+/// The dynamics gate and its backing federation state, threaded through a
+/// round as one unit — either both present (scenario active) or neither,
+/// so gating can never be half-wired.
+type DynGate<'a> = Option<(&'a mut FederationDynamics, &'a mut RoundGate)>;
+
+/// The paper-default engine: fits run sequentially in this thread,
+/// each finished client folded into the accumulator immediately.
+#[allow(clippy::too_many_arguments)]
+fn round_inline(
+    clients: &mut [Option<Box<dyn ClientApp>>],
+    host: &HardwareProfile,
+    env_cfg: &EnvConfig,
+    executor: &mut Option<&mut ModelExecutor>,
+    selected: &[usize],
+    global: &ParamVector,
+    fit_cfg: &FitConfig,
+    clock: &mut VirtualClock,
+    ledger: &mut RoundLedger,
+    acc: &mut Box<dyn AggAccumulator>,
+    dyn_gate: &mut DynGate<'_>,
+) -> Result<(), FlError> {
+    for &ci in selected {
+        let client = clients[ci].as_mut().expect("client checked in");
+        let id = client.id();
+        let fit_result = {
+            let mut ctx = BouquetContext {
+                executor: executor.as_deref_mut(),
+                clock: &mut *clock,
+                host,
+                env_cfg: env_cfg.clone(),
+            };
+            client.fit(global, fit_cfg, &mut ctx)
+        };
+        match fit_result {
+            Ok(result) => fold_gated(ledger, acc, dyn_gate, ci, result)?,
+            Err(e @ EmuError::GpuOom { .. }) | Err(e @ EmuError::HostOom { .. }) => {
+                // The paper's OOM story: the framework survives a
+                // failing client; it simply contributes no update.
+                ledger.record_failure(id, e.to_string());
+            }
+            Err(other) => {
+                return Err(FlError::ClientFailed { client: id, source: other });
+            }
+        }
+    }
+    Ok(())
+}
+
+/// The concurrent engine: fits run on the pool; outcomes stream back
+/// in completion order and pass through a reorder buffer so every fold
+/// (accumulator, ledger, dynamics gate, shared clock) happens in selection
+/// order — bit-identical to the inline engine.
+#[allow(clippy::too_many_arguments)]
+fn round_pooled(
+    clients: &mut [Option<Box<dyn ClientApp>>],
+    host: &HardwareProfile,
+    env_cfg: &EnvConfig,
+    pool: &WorkerPool,
+    selected: &[usize],
+    global: &ParamVector,
+    fit_cfg: &FitConfig,
+    clock: &mut VirtualClock,
+    ledger: &mut RoundLedger,
+    acc: &mut Box<dyn AggAccumulator>,
+    dyn_gate: &mut DynGate<'_>,
+) -> Result<(), FlError> {
+    let shared = Arc::new(global.clone());
+    for (pos, &ci) in selected.iter().enumerate() {
+        let client = clients[ci].take().expect("client checked in");
+        pool.submit(FitTask {
+            index: pos,
+            client,
+            global: Arc::clone(&shared),
+            cfg: fit_cfg.clone(),
+            host: host.clone(),
+            env_cfg: env_cfg.clone(),
+        })?;
+    }
+
+    let mut reorder = ReorderBuffer::new(selected.len());
+    let mut fatal: Option<FlError> = None;
+    for _ in 0..selected.len() {
+        let outcome = pool.recv()?;
+        clients[selected[outcome.index]] = Some(outcome.client);
+        reorder.accept(FitOutcomeSlim {
+            index: outcome.index,
+            client_id: outcome.client_id,
+            result: outcome.result,
+        });
+        while let Some(slim) = reorder.pop_ready() {
+            // Once the round is doomed, keep draining (every client must
+            // come back) but stop folding — the first error is the one
+            // the caller sees.
+            if fatal.is_some() {
+                continue;
+            }
+            match slim.result {
+                Ok(result) => {
+                    // Replay the emulated time the inline engine would
+                    // have advanced during this fit, increment for
+                    // increment (bit-identical clock trajectory).
+                    clock.advance(result.emu.warmup_s);
+                    for _ in 0..result.emu.steps {
+                        clock.advance(result.emu.step_s);
+                    }
+                    if let Err(e) =
+                        fold_gated(ledger, acc, dyn_gate, selected[slim.index], result)
+                    {
+                        fatal = Some(e);
+                    }
+                }
+                Err(e @ EmuError::GpuOom { .. })
+                | Err(e @ EmuError::HostOom { .. }) => {
+                    ledger.record_failure(slim.client_id, e.to_string());
+                }
+                Err(other) => {
+                    fatal = Some(FlError::ClientFailed {
+                        client: slim.client_id,
+                        source: other,
+                    });
+                }
+            }
+        }
+    }
+    // All clients are checked back in; only now surface a fatal error
+    // (same observable as the inline engine's early return).
+    match fatal {
+        Some(e) => Err(e),
+        None => Ok(()),
+    }
+}
+
+/// Fold one successful fit through the dynamics gate (if any) into the
+/// round's scalar ledger and the streaming aggregate.
+///
+/// Without dynamics this is exactly the static fold.  With dynamics the
+/// gate decides `Keep` / `Dropout` / `Late` over the client's full
+/// fit+comm window — dropped and late clients are recorded as round
+/// failures and **never reach the accumulator**.  The replay clock is
+/// untouched here (its trajectory stays identical to the static engine);
+/// comm time reaches the scenario timeline through the round length.
+fn fold_gated(
+    ledger: &mut RoundLedger,
+    acc: &mut Box<dyn AggAccumulator>,
+    dyn_gate: &mut DynGate<'_>,
+    roster_idx: usize,
+    result: FitResult,
+) -> Result<(), FlError> {
+    let (dynamics, gate) = match dyn_gate {
+        Some((d, g)) => (d, g),
+        None => return fold(ledger, acc, result),
+    };
+    let dur_s = result.emu.emu_total_s + result.comm_s;
+    match dynamics.admit(gate, roster_idx, result.client, dur_s) {
+        GateVerdict::Keep { .. } => fold(ledger, acc, result),
+        GateVerdict::Dropout { offline_at_s } => {
+            ledger.record_failure(
+                result.client,
+                format!(
+                    "{} client went offline at {offline_at_s:.2}s (emulated) \
+                     before completing its fit+upload window",
+                    super::history::DROPOUT_REASON_PREFIX
+                ),
+            );
+            Ok(())
+        }
+        GateVerdict::Late { would_end_s } => {
+            ledger.record_failure(
+                result.client,
+                format!(
+                    "{} fit+comm would finish at {would_end_s:.2}s, past the \
+                     {:.2}s round deadline",
+                    super::history::DEADLINE_REASON_PREFIX,
+                    gate.deadline_s()
+                ),
+            );
+            Ok(())
+        }
     }
 }
 

@@ -45,6 +45,28 @@ impl Default for SamplerConfig {
 }
 
 /// Weighted sampler over the survey snapshot.
+///
+/// # Worked example
+///
+/// ```
+/// use bouquetfl::hardware::sampler::{HardwareSampler, SamplerConfig};
+///
+/// // Default config: consumer-only (no >= 24 GiB flagships), survey-weighted.
+/// let mut sampler = HardwareSampler::with_defaults(7);
+/// let federation = sampler.sample_federation(20);
+/// assert_eq!(federation.len(), 20);
+/// assert!(federation.iter().all(|p| p.gpu.vram_gib < 24.0));
+///
+/// // Deterministic per seed — the same federation every run:
+/// let mut again = HardwareSampler::with_defaults(7);
+/// assert_eq!(federation, again.sample_federation(20));
+///
+/// // Constraints narrow the pool (e.g. desktop-only, 8 GiB+ cards):
+/// let cfg = SamplerConfig { min_vram_gib: 8.0, exclude_laptop: true, ..Default::default() };
+/// let mut constrained = HardwareSampler::new(7, cfg).unwrap();
+/// let p = constrained.sample();
+/// assert!(p.gpu.vram_gib >= 8.0 && !p.gpu.laptop);
+/// ```
 pub struct HardwareSampler {
     cfg: SamplerConfig,
     rng: Pcg,

@@ -17,7 +17,7 @@ use bouquetfl::analysis::{claims, fig2, report};
 use bouquetfl::data::PartitionScheme;
 use bouquetfl::emu::EmulationMode;
 use bouquetfl::fl::launcher::{launch, HardwareSource, LaunchOptions};
-use bouquetfl::fl::Selection;
+use bouquetfl::fl::{Scenario, Selection};
 use bouquetfl::hardware::profile::PRESET_NAMES;
 use bouquetfl::hardware::sampler::{HardwareSampler, SamplerConfig};
 use bouquetfl::hardware::{preset, HardwareProfile, CPU_DB, GPU_DB};
@@ -77,6 +77,7 @@ fn run_specs() -> Vec<OptSpec> {
         OptSpec { name: "parallel", help: "max concurrent clients on the EMULATED timeline (1 = sequential)", takes_value: true, default: Some("1") },
         OptSpec { name: "workers", help: "REAL fit concurrency: pool threads with their own executors (1 = in-thread)", takes_value: true, default: Some("1") },
         OptSpec { name: "seed", help: "experiment seed", takes_value: true, default: Some("42") },
+        OptSpec { name: "scenario", help: "federation dynamics: stable|diurnal-mobile|high-churn or a .toml/.json scenario file (see SCENARIOS.md)", takes_value: true, default: None },
         OptSpec { name: "network", help: "attach network-latency profiles", takes_value: false, default: None },
         OptSpec { name: "profiles", help: "comma-separated preset/GPU names (manual hardware)", takes_value: true, default: None },
         OptSpec { name: "history-out", help: "write round history JSON here", takes_value: true, default: None },
@@ -122,6 +123,10 @@ fn cmd_run(raw: &[String]) -> Result<()> {
     if let Some(scale) = args.get_f64("pace")? {
         opts.pacing = Some(scale);
     }
+    if let Some(spec) = args.get("scenario") {
+        let sc = Scenario::resolve(spec)?;
+        opts.scenario = (!sc.is_static()).then_some(sc);
+    }
 
     println!("host: {}", opts.host.describe());
     println!(
@@ -129,6 +134,9 @@ fn cmd_run(raw: &[String]) -> Result<()> {
          {} fit worker(s)",
         opts.clients, opts.rounds, opts.strategy, opts.batch, opts.local_steps, opts.workers
     );
+    if let Some(sc) = &opts.scenario {
+        println!("scenario: {}", sc.describe());
+    }
     let outcome = launch(&opts)?;
 
     let mut t = Table::new(&["client", "hardware"]).aligns(&[Align::Right, Align::Left]);
@@ -150,6 +158,9 @@ fn cmd_run(raw: &[String]) -> Result<()> {
         ]);
     }
     println!("{}", rt.render());
+    if opts.scenario.is_some() {
+        println!("{}", report::dynamics_table(&outcome.history).render());
+    }
     println!("{}", outcome.history.summary());
 
     if let Some(path) = args.get("history-out") {

@@ -5,9 +5,30 @@
 //! Each client gets an uplink/downlink bandwidth + latency profile; a round
 //! adds `download(model) + upload(update)` to the client's emulated time.
 
+use std::sync::OnceLock;
+
 use crate::util::rng::Pcg;
 
 /// A client's network link.
+///
+/// # Worked example
+///
+/// ```
+/// use bouquetfl::net::NET_TIERS;
+///
+/// let fiber = NET_TIERS[0].0;    // 500/250 Mbit/s, 5 ms
+/// let lte = NET_TIERS[3].0;      // 30/10 Mbit/s, 45 ms
+/// let model_bytes = 10 * 1024 * 1024;
+///
+/// // One FL round pays download(model) + upload(update):
+/// let fiber_s = fiber.round_comm_s(model_bytes);
+/// let lte_s = lte.round_comm_s(model_bytes);
+/// assert!(fiber_s < 1.0);
+/// assert!(lte_s > 5.0 * fiber_s);
+///
+/// // Uploads dominate on asymmetric consumer links:
+/// assert!(lte.upload_s(model_bytes) > lte.download_s(model_bytes));
+/// ```
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct NetworkProfile {
     pub name: &'static str,
@@ -46,10 +67,43 @@ impl NetworkProfile {
     }
 }
 
-/// Sample a network tier from the popularity-weighted tier list.
+/// Cumulative tier weights, computed once — `sample_network` used to
+/// rebuild the weight `Vec` on every draw, which matters now that every
+/// scenario client samples a link.
+fn tier_cdf() -> &'static [f64] {
+    static CDF: OnceLock<Vec<f64>> = OnceLock::new();
+    CDF.get_or_init(|| {
+        let mut acc = 0.0;
+        NET_TIERS
+            .iter()
+            .map(|(_, w)| {
+                acc += w;
+                acc
+            })
+            .collect()
+    })
+}
+
+/// Sample a network tier from the popularity-weighted tier list
+/// (allocation-free: binary search over a precomputed CDF).
+///
+/// ```
+/// use bouquetfl::net::{sample_network, NET_TIERS};
+/// use bouquetfl::util::rng::Pcg;
+///
+/// let mut rng = Pcg::seeded(0);
+/// let link = sample_network(&mut rng);
+/// assert!(NET_TIERS.iter().any(|(t, _)| t.name == link.name));
+/// // Deterministic per seed:
+/// let mut again = Pcg::seeded(0);
+/// assert_eq!(sample_network(&mut again), link);
+/// ```
 pub fn sample_network(rng: &mut Pcg) -> NetworkProfile {
-    let weights: Vec<f64> = NET_TIERS.iter().map(|(_, w)| *w).collect();
-    NET_TIERS[rng.weighted(&weights)].0
+    let cdf = tier_cdf();
+    let total = *cdf.last().expect("NET_TIERS is non-empty");
+    let x = rng.f64() * total;
+    let i = cdf.partition_point(|&c| c < x).min(NET_TIERS.len() - 1);
+    NET_TIERS[i].0
 }
 
 #[cfg(test)]
@@ -75,6 +129,32 @@ mod tests {
     fn latency_floor() {
         let sat = NET_TIERS[4].0;
         assert!(sat.download_s(0) >= 0.6);
+    }
+
+    #[test]
+    fn cdf_is_monotone_and_totals_the_weights() {
+        let cdf = tier_cdf();
+        assert_eq!(cdf.len(), NET_TIERS.len());
+        assert!(cdf.windows(2).all(|w| w[0] < w[1]));
+        let total: f64 = NET_TIERS.iter().map(|(_, w)| w).sum();
+        assert!((cdf.last().unwrap() - total).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sampler_tracks_tier_popularity() {
+        // cable (38%) must come up far more often than satellite (5%).
+        let mut rng = Pcg::seeded(3);
+        let mut cable = 0;
+        let mut sat = 0;
+        for _ in 0..20_000 {
+            match sample_network(&mut rng).name {
+                "cable" => cable += 1,
+                "satellite" => sat += 1,
+                _ => {}
+            }
+        }
+        assert!((cable as f64 / 20_000.0 - 0.38).abs() < 0.02, "cable {cable}");
+        assert!((sat as f64 / 20_000.0 - 0.05).abs() < 0.01, "satellite {sat}");
     }
 
     #[test]

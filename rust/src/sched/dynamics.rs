@@ -1,0 +1,683 @@
+//! Federation dynamics: time-varying client state on the emulated clock.
+//!
+//! The paper emulates *static* heterogeneity — every sampled client is
+//! always online and never drops out.  Real federations are not like that
+//! (Flower's simulation engine and FLUTE both treat availability and
+//! dropout as first-class scenario knobs), so this module models the three
+//! dynamic effects that change FL outcomes:
+//!
+//! * **Availability traces** ([`AvailabilityTrace`]) — per-client
+//!   online/offline intervals on the emulated timeline, generated
+//!   deterministically per seed from an [`AvailabilityModel`] (diurnal
+//!   square wave, battery drain/recharge cycle, or memoryless exponential
+//!   churn).
+//! * **Membership churn** ([`FederationDynamics::begin_round`]) — clients
+//!   leave the federation and rejoin between rounds (seeded per-round
+//!   Bernoulli draws, one per client in index order, so the stream is
+//!   identical regardless of who is currently a member).
+//! * **Mid-round dropout and deadline rounds** ([`RoundGate`]) — a
+//!   selected client whose emulated fit + upload window crosses its next
+//!   offline boundary returns a `Dropout` verdict instead of an update,
+//!   and a finite round deadline turns stragglers into `Late` verdicts
+//!   (FedScale-style deadline rounds, ported from
+//!   [`DeadlineSequential`](super::DeadlineSequential) /
+//!   [`DeadlineParallel`](super::DeadlineParallel) onto the completion
+//!   stream: the aggregation accumulator simply never sees dropped or late
+//!   updates).
+//!
+//! Everything here runs in *selection order* on values that are identical
+//! across `--workers N` (the round engine's reorder buffer guarantees the
+//! feed order), so PR 1's invariant — same seed + same scenario ⇒
+//! bit-identical schedule/clock/aggregates for any worker count — is
+//! preserved by construction.  See `SCENARIOS.md` for the user-facing
+//! guide.
+
+use crate::util::rng::Pcg;
+
+use super::Schedule;
+
+/// Shortest interval the trace generator will emit, so degenerate model
+/// parameters (zero durations) cannot stall generation.
+const MIN_INTERVAL_S: f64 = 1e-6;
+
+/// Matches the deadline schedulers' boundary tolerance
+/// (`DeadlineSequential` keeps a fit ending exactly at the deadline).
+const DEADLINE_EPS: f64 = 1e-12;
+
+/// How a client's availability evolves on the emulated clock.
+#[derive(Debug, Clone, PartialEq)]
+pub enum AvailabilityModel {
+    /// Always online — the paper's (static) behaviour.
+    AlwaysOn,
+    /// Deterministic square wave: online for `online_fraction * period_s`,
+    /// offline for the rest, with a uniform random initial phase per
+    /// client.  Models plugged-in machines with a usage schedule.
+    Diurnal { period_s: f64, online_fraction: f64 },
+    /// Battery cycle: online for ~`drain_s`, offline (charging) for
+    /// ~`recharge_s`, each interval jittered by a uniform
+    /// `1 ± jitter` factor.  Models mobile/laptop participants.
+    Battery { drain_s: f64, recharge_s: f64, jitter: f64 },
+    /// Memoryless on/off churn: exponentially distributed online and
+    /// offline intervals (the classic availability-trace model).
+    ExponentialChurn { mean_online_s: f64, mean_offline_s: f64 },
+}
+
+impl AvailabilityModel {
+    /// Config-file name of this model kind (see `SCENARIOS.md`).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            AvailabilityModel::AlwaysOn => "always-on",
+            AvailabilityModel::Diurnal { .. } => "diurnal",
+            AvailabilityModel::Battery { .. } => "battery",
+            AvailabilityModel::ExponentialChurn { .. } => "exponential-churn",
+        }
+    }
+}
+
+/// One client's deterministic online/offline timeline.
+///
+/// Intervals are generated lazily, strictly in time order, from a
+/// dedicated per-client PCG stream — so the trace depends only on the
+/// model and the seed, never on the query pattern (property-tested in
+/// `tests/properties.rs`).
+#[derive(Debug, Clone)]
+pub struct AvailabilityTrace {
+    model: AvailabilityModel,
+    rng: Pcg,
+    /// State at t = 0.
+    online0: bool,
+    /// Strictly increasing times at which the state flips.
+    toggles: Vec<f64>,
+    /// Duration of the (phase-shifted) first interval, consumed by the
+    /// first `extend_to`.
+    pending_first: Option<f64>,
+    /// Time covered by generation so far; the state beyond it is unknown.
+    gen_t: f64,
+    /// State after the last generated toggle.
+    gen_state: bool,
+    /// The model emits no further toggles (e.g. `AlwaysOn`).
+    done: bool,
+}
+
+impl AvailabilityTrace {
+    /// Build a trace for `model`, drawing the initial state and phase from
+    /// `rng` (hand each client its own fork/stream for independence).
+    pub fn new(model: AvailabilityModel, mut rng: Pcg) -> Self {
+        let (online0, pending_first, done) = match &model {
+            AvailabilityModel::AlwaysOn => (true, None, true),
+            AvailabilityModel::Diurnal { period_s, online_fraction } => {
+                let period = period_s.max(MIN_INTERVAL_S);
+                let on_s = (online_fraction.clamp(0.0, 1.0)) * period;
+                let off_s = period - on_s;
+                if off_s <= 0.0 {
+                    (true, None, true) // never offline
+                } else if on_s <= 0.0 {
+                    (false, None, true) // never online
+                } else {
+                    // Uniform phase within the cycle [online | offline).
+                    let pos = rng.f64() * period;
+                    if pos < on_s {
+                        (true, Some(on_s - pos), false)
+                    } else {
+                        (false, Some(period - pos), false)
+                    }
+                }
+            }
+            AvailabilityModel::Battery { drain_s, recharge_s, .. } => {
+                let duty = drain_s / (drain_s + recharge_s).max(MIN_INTERVAL_S);
+                (rng.f64() < duty, None, false)
+            }
+            AvailabilityModel::ExponentialChurn { mean_online_s, mean_offline_s } => {
+                let duty = mean_online_s / (mean_online_s + mean_offline_s).max(MIN_INTERVAL_S);
+                (rng.f64() < duty, None, false)
+            }
+        };
+        AvailabilityTrace {
+            model,
+            rng,
+            online0,
+            toggles: Vec::new(),
+            pending_first,
+            gen_t: 0.0,
+            gen_state: online0,
+            done,
+        }
+    }
+
+    /// A fully explicit trace (state at 0 plus flip times) — for tests and
+    /// custom hand-crafted scenarios.
+    pub fn from_toggles(online0: bool, toggles: Vec<f64>) -> Self {
+        assert!(
+            toggles.windows(2).all(|w| w[0] < w[1]),
+            "toggle times must be strictly increasing"
+        );
+        AvailabilityTrace {
+            model: AvailabilityModel::AlwaysOn,
+            rng: Pcg::seeded(0),
+            online0,
+            gen_t: toggles.last().copied().unwrap_or(0.0),
+            gen_state: online0 ^ (toggles.len() % 2 == 1),
+            toggles,
+            pending_first: None,
+            done: true,
+        }
+    }
+
+    /// Duration of the next interval given the current state.
+    fn next_interval(&mut self, online: bool) -> f64 {
+        match &self.model {
+            AvailabilityModel::AlwaysOn => f64::INFINITY,
+            AvailabilityModel::Diurnal { period_s, online_fraction } => {
+                let period = period_s.max(MIN_INTERVAL_S);
+                let on_s = online_fraction.clamp(0.0, 1.0) * period;
+                if online { on_s } else { period - on_s }
+            }
+            AvailabilityModel::Battery { drain_s, recharge_s, jitter } => {
+                let base = if online { *drain_s } else { *recharge_s };
+                let j = jitter.clamp(0.0, 1.0);
+                base * (1.0 + j * (2.0 * self.rng.f64() - 1.0))
+            }
+            AvailabilityModel::ExponentialChurn { mean_online_s, mean_offline_s } => {
+                let mean = if online { *mean_online_s } else { *mean_offline_s };
+                // Inverse-CDF exponential; 1 - u keeps the argument in (0, 1].
+                -mean * (1.0 - self.rng.f64()).ln()
+            }
+        }
+    }
+
+    /// Generate toggles until the trace covers `t`.
+    fn extend_to(&mut self, t: f64) {
+        while !self.done && self.gen_t <= t {
+            let dur = match self.pending_first.take() {
+                Some(d) => d,
+                None => self.next_interval(self.gen_state),
+            };
+            if !dur.is_finite() {
+                self.done = true;
+                return;
+            }
+            self.gen_t += dur.max(MIN_INTERVAL_S);
+            self.toggles.push(self.gen_t);
+            self.gen_state = !self.gen_state;
+        }
+    }
+
+    /// Is the client online at emulated time `t`?
+    pub fn is_online(&mut self, t: f64) -> bool {
+        self.extend_to(t);
+        let flips = self.toggles.partition_point(|&x| x <= t);
+        self.online0 ^ (flips % 2 == 1)
+    }
+
+    /// Earliest time >= `t` at which the client is (or goes) offline;
+    /// `t` itself if already offline, `f64::INFINITY` if never.
+    pub fn next_offline_after(&mut self, t: f64) -> f64 {
+        if !self.is_online(t) {
+            return t;
+        }
+        let i = self.toggles.partition_point(|&x| x <= t);
+        self.toggles.get(i).copied().unwrap_or(f64::INFINITY)
+    }
+
+    /// Earliest time >= `t` at which the client is (or comes) online;
+    /// `t` itself if already online, `f64::INFINITY` if never.
+    pub fn next_online_after(&mut self, t: f64) -> f64 {
+        if self.is_online(t) {
+            return t;
+        }
+        let i = self.toggles.partition_point(|&x| x <= t);
+        self.toggles.get(i).copied().unwrap_or(f64::INFINITY)
+    }
+}
+
+/// Verdict of the round gate on one finished fit (selection order).
+#[derive(Debug, Clone, PartialEq)]
+pub enum GateVerdict {
+    /// Folded into the aggregate; span is round-relative.
+    Keep { start_s: f64, end_s: f64 },
+    /// The client went offline (absolute emulated time) before its fit +
+    /// upload window completed — it contributes no update.
+    Dropout { offline_at_s: f64 },
+    /// The fit finished, but past the round deadline (round-relative end).
+    Late { would_end_s: f64 },
+}
+
+/// Streaming deadline/dropout filter for one round.
+///
+/// Admits finished fits in selection order and packs the kept ones onto
+/// `slots` emulated execution slots (earliest-free-slot, arrival order —
+/// with one slot this is exactly [`Sequential`](super::Sequential)
+/// semantics, the paper default).  Dropped and late clients do not occupy
+/// a slot: their partial work is wasted on the client and never extends
+/// the round, matching FedScale-style over-selection.
+#[derive(Debug)]
+pub struct RoundGate {
+    round_start_s: f64,
+    deadline_s: f64,
+    slot_free: Vec<f64>,
+    spans: Vec<(u32, f64, f64)>,
+    dropped: usize,
+    late: usize,
+    /// Round-relative time of the last observed disconnection (max over
+    /// dropout verdicts) — what an all-dropout round costs.
+    dropout_horizon_s: f64,
+}
+
+impl RoundGate {
+    pub fn new(round_start_s: f64, deadline_s: f64, slots: usize) -> Self {
+        RoundGate {
+            round_start_s,
+            deadline_s,
+            slot_free: vec![0.0; slots.max(1)],
+            spans: Vec::new(),
+            dropped: 0,
+            late: 0,
+            dropout_horizon_s: 0.0,
+        }
+    }
+
+    pub fn deadline_s(&self) -> f64 {
+        self.deadline_s
+    }
+
+    /// Number of fits kept so far.
+    pub fn kept(&self) -> usize {
+        self.spans.len()
+    }
+
+    /// Dropout + late verdicts issued so far.  A round with zero drops was
+    /// untouched by the gate, and the server then renders its schedule
+    /// with the configured scheduler — bit-identical to the static engine
+    /// for *any* scheduler, not just the sequential default.
+    pub fn dropped(&self) -> usize {
+        self.dropped
+    }
+
+    /// Late (deadline-missed) verdicts alone — an all-dropped round with
+    /// lates provably held the round open until the deadline, which is
+    /// what the server records as that round's emulated length.
+    pub fn late(&self) -> usize {
+        self.late
+    }
+
+    /// Round-relative time of the last observed disconnection.  A round
+    /// in which *everyone* dropped offline lasted this long — always
+    /// strictly positive when a dropout occurred (a client admitted to
+    /// the gate was online at its start time), which is what keeps the
+    /// scenario timeline moving through all-dropout rounds.
+    pub fn dropout_horizon_s(&self) -> f64 {
+        self.dropout_horizon_s
+    }
+
+    /// Gate one finished fit: `dur_s` is the client's full emulated window
+    /// (fit + network comm).  Must be called in selection order.
+    ///
+    /// Packing is earliest-free-slot in *selection order* (FIFO) — unlike
+    /// `LimitedParallel`/`DeadlineParallel`, which sort longest-first
+    /// (LPT) over the whole round.  Deliberate: a streaming gate judges
+    /// fits as they fold and cannot sort durations it has not seen, which
+    /// is also what a real over-selecting server experiences.  With one
+    /// slot (the paper default) FIFO and LPT-sequential coincide exactly.
+    pub fn admit(
+        &mut self,
+        trace: &mut AvailabilityTrace,
+        client: u32,
+        dur_s: f64,
+    ) -> GateVerdict {
+        let slot = self
+            .slot_free
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, _)| i)
+            .unwrap();
+        let start = self.slot_free[slot];
+        let end = start + dur_s.max(0.0);
+        let off = trace.next_offline_after(self.round_start_s + start);
+        if off < self.round_start_s + end {
+            self.dropped += 1;
+            self.dropout_horizon_s = self.dropout_horizon_s.max(off - self.round_start_s);
+            return GateVerdict::Dropout { offline_at_s: off };
+        }
+        if end > self.deadline_s + DEADLINE_EPS {
+            self.dropped += 1;
+            self.late += 1;
+            return GateVerdict::Late { would_end_s: end };
+        }
+        self.slot_free[slot] = end;
+        self.spans.push((client, start, end));
+        GateVerdict::Keep { start_s: start, end_s: end }
+    }
+
+    /// The round's emulated schedule: kept spans in selection order.  A
+    /// round with late verdicts was provably held open until the deadline
+    /// (that is how the server learned the stragglers were late), so its
+    /// length is the full deadline; otherwise it closes at the kept
+    /// makespan.  (`DeadlineSequential::run` reports the kept makespan
+    /// even when it cut stragglers — its round_s is the completed work's
+    /// timeline, not the server's wait.)
+    pub fn schedule(&self) -> Schedule {
+        let makespan = self.slot_free.iter().cloned().fold(0.0, f64::max);
+        let round_s = if self.late > 0 {
+            self.deadline_s
+        } else if self.deadline_s.is_finite() {
+            makespan.min(self.deadline_s)
+        } else {
+            makespan
+        };
+        Schedule { round_s, spans: self.spans.clone() }
+    }
+}
+
+/// Stream salt separating the churn RNG from every other federation stream.
+const CHURN_STREAM: u64 = 0xD11A;
+/// Seed salt separating per-client trace RNGs from the data/hardware seeds.
+const TRACE_SEED_SALT: u64 = 0x7ACE;
+
+/// Whole-federation dynamic state: one availability trace per client,
+/// membership churn, and the round-deadline policy.
+pub struct FederationDynamics {
+    traces: Vec<AvailabilityTrace>,
+    member: Vec<bool>,
+    churn_rng: Pcg,
+    join_prob: f64,
+    leave_prob: f64,
+    deadline_s: f64,
+    slots: usize,
+    /// The scenario's own emulated timeline: the sum of recorded round
+    /// lengths (plus all-offline waits).  Availability is judged against
+    /// this, not the server's replay clock — the replay clock accumulates
+    /// *all* fit work including dropped clients' wasted effort, which
+    /// would make traces run ahead of the rounds the history reports.
+    now_s: f64,
+}
+
+impl FederationDynamics {
+    /// Build dynamics for `clients` participants.  `slots` is the emulated
+    /// execution concurrency (the scheduler's `max_concurrency`), which the
+    /// per-round [`RoundGate`] packs onto.
+    pub fn new(
+        seed: u64,
+        clients: usize,
+        model: &AvailabilityModel,
+        join_prob: f64,
+        leave_prob: f64,
+        deadline_s: f64,
+        slots: usize,
+    ) -> Self {
+        let traces = (0..clients)
+            .map(|i| {
+                AvailabilityTrace::new(
+                    model.clone(),
+                    Pcg::new(seed ^ TRACE_SEED_SALT, i as u64),
+                )
+            })
+            .collect();
+        FederationDynamics {
+            traces,
+            member: vec![true; clients],
+            churn_rng: Pcg::new(seed, CHURN_STREAM),
+            join_prob: join_prob.clamp(0.0, 1.0),
+            leave_prob: leave_prob.clamp(0.0, 1.0),
+            deadline_s,
+            slots: slots.max(1),
+            now_s: 0.0,
+        }
+    }
+
+    pub fn deadline_s(&self) -> f64 {
+        self.deadline_s
+    }
+
+    /// Current position on the scenario timeline (seconds of recorded
+    /// round time since the federation started).
+    pub fn now_s(&self) -> f64 {
+        self.now_s
+    }
+
+    /// Advance the scenario timeline — the server calls this once per
+    /// round with the recorded round length (identical across worker
+    /// counts, so the timeline is too).
+    pub fn advance(&mut self, dt_s: f64) {
+        assert!(dt_s >= 0.0, "scenario time cannot go backwards (dt={dt_s})");
+        self.now_s += dt_s;
+    }
+
+    pub fn num_clients(&self) -> usize {
+        self.traces.len()
+    }
+
+    pub fn is_member(&self, client: usize) -> bool {
+        self.member[client]
+    }
+
+    /// Current federation membership count.
+    pub fn members(&self) -> usize {
+        self.member.iter().filter(|&&m| m).count()
+    }
+
+    /// Replace one client's trace (tests / hand-crafted scenarios).
+    pub fn set_trace(&mut self, client: usize, trace: AvailabilityTrace) {
+        self.traces[client] = trace;
+    }
+
+    /// Apply between-round membership churn: one Bernoulli draw per client
+    /// in index order (the stream never depends on current membership, so
+    /// it is identical across worker counts and across runs).
+    pub fn begin_round(&mut self) {
+        for m in self.member.iter_mut() {
+            let u = self.churn_rng.f64();
+            if *m {
+                if u < self.leave_prob {
+                    *m = false;
+                }
+            } else if u < self.join_prob {
+                *m = true;
+            }
+        }
+    }
+
+    /// Clients that can be selected this round: members that are online at
+    /// the round's emulated start time.
+    pub fn eligible_at(&mut self, now_s: f64) -> Vec<usize> {
+        (0..self.traces.len())
+            .filter(|&i| self.member[i] && self.traces[i].is_online(now_s))
+            .collect()
+    }
+
+    /// Earliest emulated time > `now_s` at which some member comes online
+    /// (`None` if there are no members or nobody ever returns).  The
+    /// server fast-forwards an all-offline round to this point — otherwise
+    /// a fast-forward clock would never move and the federation would stay
+    /// offline forever.
+    pub fn next_wakeup_after(&mut self, now_s: f64) -> Option<f64> {
+        let mut best = f64::INFINITY;
+        for i in 0..self.traces.len() {
+            if self.member[i] {
+                best = best.min(self.traces[i].next_online_after(now_s));
+            }
+        }
+        (best.is_finite() && best > now_s).then_some(best)
+    }
+
+    /// Start gating a round that begins at emulated `round_start_s`.
+    pub fn begin_gate(&self, round_start_s: f64) -> RoundGate {
+        RoundGate::new(round_start_s, self.deadline_s, self.slots)
+    }
+
+    /// Gate one finished fit (selection order); `roster_idx` is the
+    /// client's index in the federation roster.
+    pub fn admit(
+        &mut self,
+        gate: &mut RoundGate,
+        roster_idx: usize,
+        client: u32,
+        dur_s: f64,
+    ) -> GateVerdict {
+        gate.admit(&mut self.traces[roster_idx], client, dur_s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn always_on_never_toggles() {
+        let mut t = AvailabilityTrace::new(AvailabilityModel::AlwaysOn, Pcg::seeded(1));
+        for x in [0.0, 1.0, 1e6] {
+            assert!(t.is_online(x));
+            assert_eq!(t.next_offline_after(x), f64::INFINITY);
+            assert_eq!(t.next_online_after(x), x);
+        }
+    }
+
+    #[test]
+    fn diurnal_duty_cycle_matches_fraction() {
+        let model = AvailabilityModel::Diurnal { period_s: 100.0, online_fraction: 0.25 };
+        let mut t = AvailabilityTrace::new(model, Pcg::seeded(3));
+        let samples = 40_000;
+        let online = (0..samples)
+            .filter(|&i| t.is_online(i as f64 * 0.5))
+            .count();
+        let frac = online as f64 / samples as f64;
+        assert!((frac - 0.25).abs() < 0.02, "duty {frac}");
+    }
+
+    #[test]
+    fn diurnal_full_fraction_is_always_on() {
+        let model = AvailabilityModel::Diurnal { period_s: 50.0, online_fraction: 1.0 };
+        let mut t = AvailabilityTrace::new(model, Pcg::seeded(4));
+        assert!(t.is_online(1e9));
+        assert_eq!(t.next_offline_after(123.0), f64::INFINITY);
+    }
+
+    #[test]
+    fn exponential_churn_alternates_and_is_seed_deterministic() {
+        let model =
+            AvailabilityModel::ExponentialChurn { mean_online_s: 30.0, mean_offline_s: 10.0 };
+        let mut a = AvailabilityTrace::new(model.clone(), Pcg::seeded(7));
+        let mut b = AvailabilityTrace::new(model, Pcg::seeded(7));
+        // Query b backwards — the trace must not depend on query order.
+        let ts: Vec<f64> = (0..200).map(|i| i as f64 * 3.7).collect();
+        for &x in ts.iter().rev() {
+            let _ = b.is_online(x);
+        }
+        let mut saw_on = false;
+        let mut saw_off = false;
+        for &x in &ts {
+            assert_eq!(a.is_online(x), b.is_online(x), "t={x}");
+            assert_eq!(
+                a.next_offline_after(x).to_bits(),
+                b.next_offline_after(x).to_bits()
+            );
+            if a.is_online(x) {
+                saw_on = true;
+            } else {
+                saw_off = true;
+            }
+        }
+        assert!(saw_on && saw_off, "churn trace never alternated in 740s");
+    }
+
+    #[test]
+    fn explicit_trace_boundaries() {
+        let mut t = AvailabilityTrace::from_toggles(true, vec![5.0, 8.0]);
+        assert!(t.is_online(0.0));
+        assert!(t.is_online(4.9));
+        assert!(!t.is_online(5.0)); // toggle at exactly t counts
+        assert!(!t.is_online(7.9));
+        assert!(t.is_online(8.0));
+        assert_eq!(t.next_offline_after(2.0), 5.0);
+        assert_eq!(t.next_offline_after(6.0), 6.0); // already offline
+        assert_eq!(t.next_online_after(6.0), 8.0);
+        assert_eq!(t.next_offline_after(9.0), f64::INFINITY);
+    }
+
+    #[test]
+    fn gate_sequential_matches_deadline_sequential_semantics() {
+        // Same durations as sched::deadline's tests: [4, 1, 3, 2], deadline 6.
+        let mut gate = RoundGate::new(0.0, 6.0, 1);
+        let mut on = AvailabilityTrace::from_toggles(true, vec![]);
+        assert!(matches!(gate.admit(&mut on, 0, 4.0), GateVerdict::Keep { .. }));
+        assert!(matches!(gate.admit(&mut on, 1, 1.0), GateVerdict::Keep { .. }));
+        // 3.0 would end at 8.0 > 6 -> late; 2.0 would end at 7.0 -> late.
+        assert!(matches!(gate.admit(&mut on, 2, 3.0), GateVerdict::Late { .. }));
+        assert!(matches!(gate.admit(&mut on, 3, 2.0), GateVerdict::Late { .. }));
+        let s = gate.schedule();
+        assert_eq!(s.spans.len(), 2);
+        assert!(s.round_s <= 6.0);
+    }
+
+    #[test]
+    fn gate_exact_deadline_finish_is_kept() {
+        let mut gate = RoundGate::new(0.0, 10.0, 1);
+        let mut on = AvailabilityTrace::from_toggles(true, vec![]);
+        assert!(matches!(gate.admit(&mut on, 0, 10.0), GateVerdict::Keep { .. }));
+        assert!(matches!(gate.admit(&mut on, 1, 0.5), GateVerdict::Late { .. }));
+    }
+
+    #[test]
+    fn gate_dropout_when_offline_boundary_crosses_fit() {
+        let mut gate = RoundGate::new(100.0, f64::INFINITY, 1);
+        // Online until absolute t = 103, client needs [100, 104) -> drops.
+        let mut t = AvailabilityTrace::from_toggles(true, vec![103.0]);
+        match gate.admit(&mut t, 0, 4.0) {
+            GateVerdict::Dropout { offline_at_s } => assert_eq!(offline_at_s, 103.0),
+            other => panic!("expected dropout, got {other:?}"),
+        }
+        // Dropped client does not occupy the slot: the next fits from t=0.
+        let mut on = AvailabilityTrace::from_toggles(true, vec![]);
+        match gate.admit(&mut on, 1, 2.0) {
+            GateVerdict::Keep { start_s, end_s } => {
+                assert_eq!(start_s, 0.0);
+                assert_eq!(end_s, 2.0);
+            }
+            other => panic!("expected keep, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn gate_upload_crossing_offline_boundary_drops() {
+        // Fit alone fits the online window; fit + comm does not.
+        let mut gate = RoundGate::new(0.0, f64::INFINITY, 1);
+        let mut t = AvailabilityTrace::from_toggles(true, vec![5.0]);
+        assert!(matches!(
+            gate.admit(&mut t, 0, 4.0 + 1.5),
+            GateVerdict::Dropout { .. }
+        ));
+        let mut t2 = AvailabilityTrace::from_toggles(true, vec![5.0]);
+        let mut gate2 = RoundGate::new(0.0, f64::INFINITY, 1);
+        assert!(matches!(gate2.admit(&mut t2, 0, 4.0), GateVerdict::Keep { .. }));
+    }
+
+    #[test]
+    fn membership_churn_is_deterministic_and_toggles() {
+        let model = AvailabilityModel::AlwaysOn;
+        let mk = || FederationDynamics::new(9, 16, &model, 0.5, 0.5, f64::INFINITY, 1);
+        let mut a = mk();
+        let mut b = mk();
+        let mut changed = false;
+        for _ in 0..10 {
+            a.begin_round();
+            b.begin_round();
+            let ea = a.eligible_at(0.0);
+            assert_eq!(ea, b.eligible_at(0.0));
+            if ea.len() != 16 {
+                changed = true;
+            }
+        }
+        assert!(changed, "leave_prob 0.5 never removed a member in 10 rounds");
+    }
+
+    #[test]
+    fn wakeup_skips_to_next_online_member() {
+        let model = AvailabilityModel::AlwaysOn;
+        let mut d = FederationDynamics::new(1, 2, &model, 0.0, 0.0, f64::INFINITY, 1);
+        d.set_trace(0, AvailabilityTrace::from_toggles(false, vec![50.0]));
+        d.set_trace(1, AvailabilityTrace::from_toggles(false, vec![80.0]));
+        assert!(d.eligible_at(10.0).is_empty());
+        assert_eq!(d.next_wakeup_after(10.0), Some(50.0));
+        assert_eq!(d.eligible_at(50.0), vec![0]);
+    }
+}

@@ -16,12 +16,20 @@
 //!   results in completion order ([`Schedule::completion_order`] gives the
 //!   emulated-timeline analogue).  Host wall-clock drops ~linearly in
 //!   workers while every emulated observable stays bit-identical.
+//!
+//! [`dynamics`] layers time-varying client state (availability traces,
+//! membership churn, mid-round dropout, deadline rounds) on top of the
+//! emulated timeline — see `SCENARIOS.md`.
 
 pub mod deadline;
+pub mod dynamics;
 pub mod pool;
 pub mod trace;
 
 pub use deadline::{DeadlineOutcome, DeadlineParallel, DeadlineSequential};
+pub use dynamics::{
+    AvailabilityModel, AvailabilityTrace, FederationDynamics, GateVerdict, RoundGate,
+};
 pub use pool::{ExecutorFactory, FitOutcome, FitTask, ReorderBuffer, WorkerPool};
 pub use trace::{Trace, TraceEvent};
 

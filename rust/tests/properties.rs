@@ -9,9 +9,11 @@ use bouquetfl::emu::{FitReport, GpuTimingModel, MpsPartition, Optimizer, VramAll
 use bouquetfl::fl::{AccOutput, AggAccumulator, FitResult, ParamVector, StreamingMean};
 use bouquetfl::hardware::GPU_DB;
 use bouquetfl::modelcost::resnet18_cifar;
+use bouquetfl::sched::dynamics::{AvailabilityModel, AvailabilityTrace, GateVerdict, RoundGate};
 use bouquetfl::sched::pool::FitOutcomeSlim;
-use bouquetfl::sched::{LimitedParallel, ReorderBuffer, Scheduler, Sequential};
+use bouquetfl::sched::{DeadlineSequential, LimitedParallel, ReorderBuffer, Scheduler, Sequential};
 use bouquetfl::util::prop::{assert_close, assert_that, check};
+use bouquetfl::util::rng::Pcg;
 
 #[test]
 fn prop_step_time_monotone_in_batch() {
@@ -278,6 +280,163 @@ fn prop_reorder_buffer_restores_selection_order_from_any_arrival() {
             released == (0..n).collect::<Vec<_>>(),
             || format!("arrival {arrival:?} released {released:?}"),
         )
+    });
+}
+
+#[test]
+fn prop_availability_traces_deterministic_per_seed_and_query_order() {
+    // Same seed + same model => the same timeline, no matter how (or in
+    // what order) the trace is queried.  This is what makes a scenario
+    // reproducible across runs and across `--workers N`.
+    check(30, |rng| {
+        let seed = rng.next_u64();
+        let model = match rng.below(3) {
+            0 => AvailabilityModel::Diurnal {
+                period_s: rng.range_f64(50.0, 500.0),
+                online_fraction: rng.range_f64(0.05, 0.95),
+            },
+            1 => AvailabilityModel::Battery {
+                drain_s: rng.range_f64(10.0, 100.0),
+                recharge_s: rng.range_f64(5.0, 50.0),
+                jitter: rng.range_f64(0.0, 0.8),
+            },
+            _ => AvailabilityModel::ExponentialChurn {
+                mean_online_s: rng.range_f64(10.0, 100.0),
+                mean_offline_s: rng.range_f64(5.0, 50.0),
+            },
+        };
+        let mut a = AvailabilityTrace::new(model.clone(), Pcg::new(seed, 3));
+        let mut b = AvailabilityTrace::new(model, Pcg::new(seed, 3));
+        let ts: Vec<f64> = (0..50).map(|_| rng.range_f64(0.0, 3000.0)).collect();
+        // Warm b with a completely different (reversed, scaled) query
+        // pattern before comparing.
+        for &t in ts.iter().rev() {
+            let _ = b.is_online(t * 1.7);
+        }
+        for &t in &ts {
+            assert_that(a.is_online(t) == b.is_online(t), || {
+                format!("is_online diverged at t={t}")
+            })?;
+            assert_that(
+                a.next_offline_after(t).to_bits() == b.next_offline_after(t).to_bits(),
+                || format!("next_offline_after diverged at t={t}"),
+            )?;
+            assert_that(
+                a.next_online_after(t).to_bits() == b.next_online_after(t).to_bits(),
+                || format!("next_online_after diverged at t={t}"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_round_gate_matches_deadline_sequential() {
+    // The streaming gate (1 slot, always-online traces) is the ported
+    // DeadlineSequential: identical kept spans and drops.  Round length
+    // matches the oracle for clean rounds; when stragglers were cut the
+    // gate records the full deadline (the server held the round open that
+    // long), which the oracle's completed-work timeline does not.
+    check(60, |rng| {
+        let n = rng.range_i64(1, 25) as usize;
+        let durations: Vec<(u32, f64)> = (0..n)
+            .map(|i| (i as u32, rng.range_f64(0.1, 6.0)))
+            .collect();
+        let deadline = rng.range_f64(0.5, 20.0);
+        let oracle = DeadlineSequential::new(deadline).run(&durations);
+
+        let mut gate = RoundGate::new(0.0, deadline, 1);
+        let mut dropped = Vec::new();
+        for &(c, d) in &durations {
+            let mut on = AvailabilityTrace::from_toggles(true, vec![]);
+            if let GateVerdict::Late { .. } = gate.admit(&mut on, c, d) {
+                dropped.push(c);
+            }
+        }
+        let sched = gate.schedule();
+        assert_that(dropped == oracle.dropped, || {
+            format!("drops diverged: gate {dropped:?} vs oracle {:?}", oracle.dropped)
+        })?;
+        assert_that(sched.spans == oracle.schedule.spans, || {
+            "kept spans diverged from DeadlineSequential".to_string()
+        })?;
+        if dropped.is_empty() {
+            assert_close(sched.round_s, oracle.schedule.round_s, 1e-12)
+        } else {
+            assert_that(sched.round_s.to_bits() == deadline.to_bits(), || {
+                format!(
+                    "late round must last the deadline: {} vs {deadline}",
+                    sched.round_s
+                )
+            })
+        }
+    });
+}
+
+#[test]
+fn prop_dropped_clients_never_reach_the_accumulator() {
+    // Whatever mix of dropouts (offline boundary) and deadline misses a
+    // round produces, the streaming mean must equal the weighted mean of
+    // exactly the kept clients — dropped updates leave no residue.
+    check(40, |rng| {
+        let n = rng.range_i64(2, 20) as usize;
+        let p = rng.range_i64(1, 100) as usize;
+        let deadline = if rng.f64() < 0.5 { rng.range_f64(1.0, 15.0) } else { f64::INFINITY };
+        let mut gate = RoundGate::new(0.0, deadline, 1);
+        let mut acc = StreamingMean::new(p);
+        let mut kept_vecs: Vec<(Vec<f32>, usize)> = Vec::new();
+        let mut kept_count = 0usize;
+        for c in 0..n {
+            let dur = rng.range_f64(0.2, 4.0);
+            // Half the clients get an offline boundary somewhere nearby.
+            let mut trace = if rng.f64() < 0.5 {
+                AvailabilityTrace::from_toggles(true, vec![rng.range_f64(0.1, 12.0)])
+            } else {
+                AvailabilityTrace::from_toggles(true, vec![])
+            };
+            let vals: Vec<f32> = (0..p).map(|_| rng.f32() * 2.0 - 1.0).collect();
+            let examples = rng.range_i64(1, 300) as usize;
+            let result = FitResult {
+                client: c as u32,
+                params: ParamVector::from_vec(vals.clone()),
+                num_examples: examples,
+                mean_loss: 1.0,
+                emu: FitReport::synthetic(1, 1, dur),
+                comm_s: 0.0,
+            };
+            match gate.admit(&mut trace, c as u32, dur) {
+                GateVerdict::Keep { .. } => {
+                    acc.push(result).map_err(|e| e.to_string())?;
+                    kept_vecs.push((vals, examples));
+                    kept_count += 1;
+                }
+                GateVerdict::Dropout { .. } | GateVerdict::Late { .. } => {
+                    // result dropped on the floor, exactly like the server.
+                }
+            }
+            assert_that(acc.len() == kept_count, || {
+                format!("accumulator saw {} clients, kept {kept_count}", acc.len())
+            })?;
+        }
+        if kept_count == 0 {
+            return Ok(()); // empty round: nothing to compare
+        }
+        let streamed = match Box::new(acc).finish().map_err(|e| e.to_string())? {
+            AccOutput::Mean(m) => m.params,
+            AccOutput::Buffered(_) => return Err("expected Mean output".into()),
+        };
+        let total: usize = kept_vecs.iter().map(|(_, e)| e).sum();
+        let weights: Vec<f32> =
+            kept_vecs.iter().map(|(_, e)| *e as f32 / total as f32).collect();
+        let updates: Vec<ParamVector> = kept_vecs
+            .into_iter()
+            .map(|(v, _)| ParamVector::from_vec(v))
+            .collect();
+        let batch = ParamVector::weighted_sum(&updates, &weights);
+        for (a, b) in streamed.as_slice().iter().zip(batch.as_slice()) {
+            assert_close(*a as f64, *b as f64, 1e-6)?;
+        }
+        Ok(())
     });
 }
 

@@ -11,10 +11,11 @@ use bouquetfl::emu::{FitReport, VirtualClock};
 use bouquetfl::error::EmuError;
 use bouquetfl::fl::{
     BouquetContext, ClientApp, ClientId, FedAvg, FitConfig, FitResult, ParamVector,
-    Selection, ServerApp, ServerConfig, TrimmedMean,
+    Scenario, Selection, ServerApp, ServerConfig, TrimmedMean,
 };
 use bouquetfl::hardware::HardwareProfile;
-use bouquetfl::sched::{Sequential, WorkerPool};
+use bouquetfl::sched::dynamics::{AvailabilityModel, AvailabilityTrace, FederationDynamics};
+use bouquetfl::sched::{LimitedParallel, Sequential, WorkerPool};
 
 const P: usize = 64;
 
@@ -25,6 +26,8 @@ struct StubClient {
     id: ClientId,
     profile: HardwareProfile,
     work_ms: u64,
+    /// Emulated network comm seconds reported per fit.
+    comm_s: f64,
     /// `Some(e)`: fail every fit with this error instead.
     fail_with: Option<EmuError>,
     /// Panic mid-fit instead of returning (worker containment test).
@@ -37,6 +40,7 @@ impl StubClient {
             id,
             profile: HardwareProfile::paper_host(),
             work_ms,
+            comm_s: 0.0,
             fail_with: None,
             panic_in_fit: false,
         }
@@ -90,7 +94,7 @@ impl ClientApp for StubClient {
             num_examples: self.num_examples(),
             mean_loss: 1.0 / (1.0 + self.id as f32),
             emu,
-            comm_s: 0.0,
+            comm_s: self.comm_s,
         })
     }
 }
@@ -250,6 +254,363 @@ fn robust_strategies_run_on_the_pooled_engine() {
     for (a, b) in g1.as_slice().iter().zip(g2.as_slice()) {
         assert_eq!(a.to_bits(), b.to_bits());
     }
+}
+
+// ---------------------------------------------------------------------
+// Federation dynamics suite: availability, churn, mid-round dropout and
+// deadline rounds must preserve the engine's core invariant — same seed +
+// same scenario => identical schedule/clock/aggregates for any --workers.
+// ---------------------------------------------------------------------
+
+/// Every emulated observable of two runs, for exact comparison.
+fn run_observables(
+    mut server: ServerApp,
+) -> (ParamVector, bouquetfl::fl::History, f64, Vec<bouquetfl::sched::TraceEvent>) {
+    let mut clock = VirtualClock::fast_forward();
+    let (global, history) = server
+        .run_from(ParamVector::zeros(P), None, &mut clock)
+        .expect("dynamics run");
+    let trace = std::mem::take(&mut server.trace);
+    (global, history, clock.now_s(), trace.events)
+}
+
+fn assert_runs_identical(a: ServerApp, b: ServerApp) {
+    let (g1, h1, clock1, t1) = run_observables(a);
+    let (g2, h2, clock2, t2) = run_observables(b);
+    for (x, y) in g1.as_slice().iter().zip(g2.as_slice()) {
+        assert_eq!(x.to_bits(), y.to_bits(), "aggregate drifted");
+    }
+    assert_eq!(h1.rounds.len(), h2.rounds.len());
+    for (r1, r2) in h1.rounds.iter().zip(&h2.rounds) {
+        assert_eq!(r1.selected, r2.selected, "round {}", r1.round);
+        assert_eq!(
+            r1.train_loss.to_bits(),
+            r2.train_loss.to_bits(),
+            "round {}",
+            r1.round
+        );
+        assert_eq!(
+            r1.emu_round_s.to_bits(),
+            r2.emu_round_s.to_bits(),
+            "round {}",
+            r1.round
+        );
+        assert_eq!(r1.failures.len(), r2.failures.len(), "round {}", r1.round);
+        for (f1, f2) in r1.failures.iter().zip(&r2.failures) {
+            assert_eq!(f1.client, f2.client);
+            assert_eq!(f1.reason, f2.reason);
+        }
+    }
+    assert_eq!(clock1.to_bits(), clock2.to_bits(), "shared clock drifted");
+    assert_eq!(t1, t2, "trace spans drifted");
+}
+
+fn scenario_server(n: u32, workers: usize, scenario: &Scenario) -> ServerApp {
+    server(stub_fleet(n, 0), workers).with_scenario(scenario)
+}
+
+#[test]
+fn dynamics_inactive_scenario_is_bit_identical_to_no_scenario() {
+    // A *non-static* scenario that never actually drops anyone (diurnal
+    // with a 100% online fraction, no churn, open rounds) exercises the
+    // whole dynamics code path — eligibility, gate, gate-built schedule —
+    // and must reproduce today's engine output bit for bit.
+    let sc = Scenario {
+        name: "never-drops".into(),
+        availability: AvailabilityModel::Diurnal { period_s: 600.0, online_fraction: 1.0 },
+        join_prob: 0.0,
+        leave_prob: 0.0,
+        round_deadline_s: f64::INFINITY,
+    };
+    assert!(!sc.is_static(), "test needs the dynamic path");
+    // Clients report nonzero comm so the claim covers network-attached
+    // fleets: the scenario layer must not touch the replay clock.
+    let fleet = || -> Vec<Box<dyn ClientApp>> {
+        (0..8u32)
+            .map(|i| {
+                let mut c = StubClient::new(i, 0);
+                c.comm_s = 0.25 * (i as f64 + 1.0);
+                Box::new(c) as Box<dyn ClientApp>
+            })
+            .collect()
+    };
+    assert_runs_identical(server(fleet(), 1), server(fleet(), 1).with_scenario(&sc));
+    // And the dynamic path itself is worker-count invariant.
+    assert_runs_identical(
+        server(fleet(), 1).with_scenario(&sc),
+        server(fleet(), 4).with_scenario(&sc),
+    );
+}
+
+#[test]
+fn dynamics_drop_free_rounds_render_the_configured_scheduler() {
+    // Under --parallel K the static engine packs LPT; a scenario that
+    // never drops anyone must reproduce that schedule bit for bit — the
+    // gate's FIFO packing is only rendered when a drop actually happened.
+    let sc = Scenario {
+        name: "never-drops".into(),
+        availability: AvailabilityModel::Diurnal { period_s: 600.0, online_fraction: 1.0 },
+        join_prob: 0.0,
+        leave_prob: 0.0,
+        round_deadline_s: f64::INFINITY,
+    };
+    let mk = |scenario: Option<&Scenario>| {
+        let cfg = ServerConfig {
+            rounds: 3,
+            selection: Selection::All,
+            eval_every: 0,
+            seed: 11,
+            ..Default::default()
+        };
+        let mut s = ServerApp::new(
+            cfg,
+            HardwareProfile::paper_host(),
+            Box::new(FedAvg),
+            Box::new(LimitedParallel::new(3)),
+            stub_fleet(8, 0),
+        );
+        if let Some(sc) = scenario {
+            s = s.with_scenario(sc);
+        }
+        s
+    };
+    assert_runs_identical(mk(None), mk(Some(&sc)));
+}
+
+#[test]
+fn dynamics_deadline_drops_stragglers_identically_across_engines() {
+    // Stub durations are 1+id seconds; sequential packing ends at
+    // 1,3,6,10,15,... With a 10s deadline clients 0..3 finish in time and
+    // 4..7 are late, every round — deterministic by construction.
+    let sc = Scenario {
+        name: "deadline-10".into(),
+        availability: AvailabilityModel::AlwaysOn,
+        join_prob: 0.0,
+        leave_prob: 0.0,
+        round_deadline_s: 10.0,
+    };
+    let (g1, h1, _, _) = run_observables(scenario_server(8, 1, &sc));
+    for r in &h1.rounds {
+        assert_eq!(r.selected.len(), 8);
+        let late: Vec<u32> = r.failures.iter().map(|f| f.client).collect();
+        assert_eq!(late, vec![4, 5, 6, 7], "round {}", r.round);
+        assert!(
+            r.failures.iter().all(|f| f.reason.starts_with("deadline:")),
+            "round {}: {:?}",
+            r.round,
+            r.failures
+        );
+        assert_eq!(r.emu_round_s.to_bits(), 10.0f64.to_bits());
+        assert!(r.train_loss.is_finite());
+    }
+    // Dropped clients leave no residue: the aggregate equals a plain
+    // federation of only the four finishers (same ids, same fold order).
+    let (g_ref, _, _, _) = run_observables(server(stub_fleet(4, 0), 1));
+    for (a, b) in g1.as_slice().iter().zip(g_ref.as_slice()) {
+        assert_eq!(a.to_bits(), b.to_bits(), "late clients leaked into the mean");
+    }
+    // Worker-count invariance with drops in every round.
+    assert_runs_identical(scenario_server(8, 1, &sc), scenario_server(8, 4, &sc));
+}
+
+#[test]
+fn dynamics_mid_fit_dropout_with_injected_trace_is_identical_across_engines() {
+    // Client 5 goes offline at emulated t = 3.0 and never returns.  In
+    // round 0 it is online at selection time (t = 0) but its fit window
+    // [15, 21) crosses the boundary -> mid-round dropout; from round 1 on
+    // it is offline at selection time -> never selected again.
+    let build = |workers: usize| {
+        let mut dynamics = FederationDynamics::new(
+            11,
+            8,
+            &AvailabilityModel::AlwaysOn,
+            0.0,
+            0.0,
+            f64::INFINITY,
+            1,
+        );
+        dynamics.set_trace(5, AvailabilityTrace::from_toggles(true, vec![3.0]));
+        server(stub_fleet(8, 0), workers).with_dynamics(dynamics)
+    };
+    let (_, h, _, _) = run_observables(build(1));
+    assert_eq!(h.rounds[0].selected.len(), 8);
+    assert_eq!(h.rounds[0].failures.len(), 1);
+    assert_eq!(h.rounds[0].failures[0].client, 5);
+    assert!(
+        h.rounds[0].failures[0].reason.starts_with("dropout:"),
+        "{}",
+        h.rounds[0].failures[0].reason
+    );
+    for r in &h.rounds[1..] {
+        assert_eq!(r.selected, vec![0, 1, 2, 3, 4, 6, 7], "round {}", r.round);
+        assert!(r.failures.is_empty(), "round {}", r.round);
+    }
+    assert_runs_identical(build(1), build(4));
+}
+
+#[test]
+fn dynamics_churny_federation_is_identical_across_engines() {
+    // The full stack at once: membership churn + battery availability +
+    // a deadline.  Everything stays deterministic per seed and
+    // bit-identical across worker counts.
+    let sc = Scenario {
+        name: "stress".into(),
+        availability: AvailabilityModel::Battery {
+            drain_s: 25.0,
+            recharge_s: 10.0,
+            jitter: 0.3,
+        },
+        join_prob: 0.5,
+        leave_prob: 0.4,
+        round_deadline_s: 14.0,
+    };
+    let mk = |workers| {
+        let cfg = ServerConfig {
+            rounds: 8,
+            selection: Selection::All,
+            eval_every: 0,
+            seed: 11,
+            ..Default::default()
+        };
+        let s = ServerApp::new(
+            cfg,
+            HardwareProfile::paper_host(),
+            Box::new(FedAvg),
+            Box::new(Sequential),
+            stub_fleet(8, 0),
+        )
+        .with_scenario(&sc);
+        if workers > 1 {
+            s.with_round_engine(workers, None)
+        } else {
+            s
+        }
+    };
+    let (_, h, _, _) = run_observables(mk(1));
+    // With leave_prob 0.4 over 8 rounds x 8 clients, some round must have
+    // seen churn or drops (deterministic per seed; sanity, not luck).
+    let dynamic_activity = h.rounds.iter().any(|r| {
+        r.selected.len() < 8 || !r.failures.is_empty()
+    });
+    assert!(dynamic_activity, "scenario produced no dynamics at all");
+    assert_runs_identical(mk(1), mk(4));
+}
+
+#[test]
+fn dynamics_all_late_round_costs_the_deadline_and_is_not_fatal() {
+    // Every fit (1..4s) misses a 0.5s deadline: the round held open until
+    // the deadline is recorded as exactly that long, contributes nothing,
+    // and the federation carries on.
+    let sc = Scenario {
+        name: "impossible-deadline".into(),
+        availability: AvailabilityModel::AlwaysOn,
+        join_prob: 0.0,
+        leave_prob: 0.0,
+        round_deadline_s: 0.5,
+    };
+    let (_, h, _, _) = run_observables(scenario_server(4, 1, &sc));
+    for r in &h.rounds {
+        assert_eq!(r.selected.len(), 4);
+        assert_eq!(r.failures.len(), 4);
+        assert!(r.train_loss.is_nan());
+        assert_eq!(r.emu_round_s.to_bits(), 0.5f64.to_bits());
+    }
+}
+
+#[test]
+fn dynamics_all_dropout_round_advances_to_the_last_disconnection() {
+    // Both clients are online at round start but disconnect at t = 0.5,
+    // mid-fit, and return at t = 100.  The all-dropout round must advance
+    // the scenario timeline (to 0.5 — the last observed disconnection),
+    // the next round fast-forwards past the offline gap, and the
+    // federation then recovers: no frozen identical-round replay.
+    let build = || {
+        let mut dynamics = FederationDynamics::new(
+            11,
+            2,
+            &AvailabilityModel::AlwaysOn,
+            0.0,
+            0.0,
+            f64::INFINITY,
+            1,
+        );
+        for i in 0..2 {
+            dynamics.set_trace(i, AvailabilityTrace::from_toggles(true, vec![0.5, 100.0]));
+        }
+        server(stub_fleet(2, 0), 1).with_dynamics(dynamics)
+    };
+    let (_, h, _, _) = run_observables(build());
+    // Round 0: everyone drops mid-fit.
+    assert_eq!(h.rounds[0].failures.len(), 2);
+    assert!(h.rounds[0]
+        .failures
+        .iter()
+        .all(|f| f.reason.starts_with("dropout:")));
+    assert_eq!(h.rounds[0].emu_round_s.to_bits(), 0.5f64.to_bits());
+    // Round 1: nobody online at t = 0.5 -> skipped, waiting out the gap.
+    assert!(h.rounds[1].selected.is_empty());
+    assert_eq!(h.rounds[1].emu_round_s.to_bits(), 99.5f64.to_bits());
+    // Round 2: back online, training resumes.
+    assert_eq!(h.rounds[2].selected.len(), 2);
+    assert!(h.rounds[2].failures.is_empty());
+    assert!(h.rounds[2].train_loss.is_finite());
+}
+
+#[test]
+fn dynamics_does_not_mask_non_dynamic_empty_rounds() {
+    // A round that ends empty because every client OOM'd (the gate dropped
+    // nobody) must fail exactly as it would on the static engine — the
+    // scenario only excuses emptiness it caused.
+    let sc = Scenario {
+        name: "deadline-only".into(),
+        availability: AvailabilityModel::AlwaysOn,
+        join_prob: 0.0,
+        leave_prob: 0.0,
+        round_deadline_s: 1000.0,
+    };
+    let mut clients: Vec<Box<dyn ClientApp>> = Vec::new();
+    for i in 0..3 {
+        let mut c = StubClient::new(i, 0);
+        c.fail_with = Some(EmuError::GpuOom {
+            device: "stub".into(),
+            requested_mb: 8192,
+            available_mb: 1024,
+            capacity_mb: 4096,
+        });
+        clients.push(Box::new(c));
+    }
+    let mut s = server(clients, 1).with_scenario(&sc);
+    let err = s
+        .run_from(ParamVector::zeros(P), None, &mut VirtualClock::fast_forward())
+        .unwrap_err();
+    assert!(err.to_string().contains("3 selected clients failed"), "{err}");
+}
+
+#[test]
+fn dynamics_all_offline_round_fast_forwards_to_the_next_online_member() {
+    // Everyone is offline until t = 100: round 0 is recorded as a skipped
+    // round whose emulated length is the wait, and round 1 proceeds.
+    let mut dynamics = FederationDynamics::new(
+        11,
+        4,
+        &AvailabilityModel::AlwaysOn,
+        0.0,
+        0.0,
+        f64::INFINITY,
+        1,
+    );
+    for i in 0..4 {
+        dynamics.set_trace(i, AvailabilityTrace::from_toggles(false, vec![100.0]));
+    }
+    let mut s = server(stub_fleet(4, 0), 1).with_dynamics(dynamics);
+    let mut clock = VirtualClock::fast_forward();
+    let (_, h) = s.run_from(ParamVector::zeros(P), None, &mut clock).unwrap();
+    assert!(h.rounds[0].selected.is_empty());
+    assert!(h.rounds[0].train_loss.is_nan());
+    assert_eq!(h.rounds[0].emu_round_s.to_bits(), 100.0f64.to_bits());
+    assert_eq!(h.rounds[1].selected.len(), 4);
+    assert!(h.rounds[1].train_loss.is_finite());
+    assert!(clock.now_s() >= 100.0);
 }
 
 #[test]
