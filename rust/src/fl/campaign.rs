@@ -1,0 +1,367 @@
+//! Declarative multi-run campaigns: sweep seeds × scenarios × strategies
+//! from one API call, with deterministic per-cell seeding and JSONL
+//! result export.
+//!
+//! The paper's users "configure the federation according to their
+//! preference" — a [`Campaign`] makes the resulting sweep a first-class
+//! object instead of a shell loop:
+//!
+//! ```no_run
+//! use bouquetfl::fl::campaign::Campaign;
+//! use bouquetfl::fl::launcher::LaunchOptions;
+//! use bouquetfl::fl::Scenario;
+//!
+//! let report = Campaign::new("robustness", LaunchOptions::default())
+//!     .seeds(&[1, 2, 3])
+//!     .strategies(&["fedavg", "trimmed-mean"])
+//!     .scenarios(&[
+//!         Scenario::preset("stable").unwrap(),
+//!         Scenario::preset("high-churn").unwrap(),
+//!     ])
+//!     .run();
+//! println!("{}", report.to_jsonl());
+//! ```
+//!
+//! Every cell's experiment seed is derived from its **coordinates**
+//! (replicate seed, strategy name, scenario name) — never from its
+//! position in the sweep — so adding a strategy to the list, or permuting
+//! it, changes no other cell's result ([`cell_seed`]).
+#![deny(missing_docs)]
+
+use std::io::Write as _;
+use std::path::Path;
+
+use crate::util::json::Json;
+
+use super::experiment::{finite_num, ExecutionMode, ExperimentBuilder};
+use super::launcher::LaunchOptions;
+use super::scenario::Scenario;
+
+/// SplitMix64 — the standard 64-bit seed mixer (Steele et al., 2014).
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// FNV-1a over a string (for hashing component names into the seed mix).
+fn fnv1a64(s: &str) -> u64 {
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100_0000_01B3);
+    }
+    h
+}
+
+/// The experiment seed of the campaign cell at coordinates
+/// `(seed, strategy, scenario)`.  Deterministic, order-independent, and
+/// axis-separated (swapping the strategy and scenario names yields a
+/// different cell seed).
+pub fn cell_seed(seed: u64, strategy: &str, scenario: &str) -> u64 {
+    splitmix64(seed ^ splitmix64(fnv1a64(strategy)) ^ splitmix64(fnv1a64(scenario)).rotate_left(17))
+}
+
+/// One cell of the sweep grid.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CampaignCell {
+    /// The replicate seed (the `seeds` axis value).
+    pub seed: u64,
+    /// Strategy name (the `strategies` axis value).
+    pub strategy: String,
+    /// Scenario name (the `scenarios` axis value).
+    pub scenario: String,
+    /// The derived experiment seed ([`cell_seed`]).
+    pub cell_seed: u64,
+}
+
+/// A declarative sweep over seeds × scenarios × strategies.
+pub struct Campaign {
+    name: String,
+    base: LaunchOptions,
+    seeds: Vec<u64>,
+    strategies: Vec<String>,
+    scenarios: Vec<Scenario>,
+    mode: ExecutionMode,
+}
+
+impl Campaign {
+    /// A campaign named `name` whose every cell starts from `base`
+    /// (axes default to the base's seed/strategy/scenario).
+    pub fn new(name: &str, base: LaunchOptions) -> Self {
+        let seeds = vec![base.seed];
+        let strategies = vec![base.strategy.clone()];
+        let scenarios = vec![base.scenario.clone().unwrap_or_default()];
+        Campaign {
+            name: name.to_string(),
+            base,
+            seeds,
+            strategies,
+            scenarios,
+            mode: ExecutionMode::Real,
+        }
+    }
+
+    /// Replicate seeds to sweep.
+    pub fn seeds(mut self, seeds: &[u64]) -> Self {
+        self.seeds = seeds.to_vec();
+        self
+    }
+
+    /// Strategy names to sweep (resolved through the `fl::strategy`
+    /// registry per cell).
+    pub fn strategies(mut self, names: &[&str]) -> Self {
+        self.strategies = names.iter().map(|s| s.to_string()).collect();
+        self
+    }
+
+    /// Scenarios to sweep (use `Scenario::preset` / `Scenario::resolve`
+    /// to obtain them by name).
+    pub fn scenarios(mut self, scenarios: &[Scenario]) -> Self {
+        self.scenarios = scenarios.to_vec();
+        self
+    }
+
+    /// Run every cell as a timing-only federation (no artifacts needed;
+    /// see `ExperimentBuilder::simulated`).
+    pub fn simulated(mut self, param_dim: usize) -> Self {
+        self.mode = ExecutionMode::Simulated { param_dim };
+        self
+    }
+
+    /// The sweep grid in run order — the one definition both
+    /// [`Campaign::cells`] and [`Campaign::run`] iterate.
+    fn grid(&self) -> Vec<(CampaignCell, &Scenario)> {
+        let mut out = Vec::with_capacity(
+            self.scenarios.len() * self.strategies.len() * self.seeds.len(),
+        );
+        for scenario in &self.scenarios {
+            for strategy in &self.strategies {
+                for &seed in &self.seeds {
+                    let cell = CampaignCell {
+                        seed,
+                        strategy: strategy.clone(),
+                        scenario: scenario.name.clone(),
+                        cell_seed: cell_seed(seed, strategy, &scenario.name),
+                    };
+                    out.push((cell, scenario));
+                }
+            }
+        }
+        out
+    }
+
+    /// The sweep grid in run order: scenarios (outer) × strategies ×
+    /// seeds (inner).
+    pub fn cells(&self) -> Vec<CampaignCell> {
+        self.grid().into_iter().map(|(cell, _)| cell).collect()
+    }
+
+    /// Run the whole sweep sequentially.  A cell that fails to build or
+    /// run becomes an error row — one bad combination never aborts the
+    /// campaign.
+    pub fn run(&self) -> CampaignReport {
+        let cells = self
+            .grid()
+            .into_iter()
+            .map(|(cell, scenario)| self.run_cell(cell, scenario))
+            .collect();
+        CampaignReport { name: self.name.clone(), cells }
+    }
+
+    fn run_cell(&self, cell: CampaignCell, scenario: &Scenario) -> CellOutcome {
+        let mut opts = self.base.clone();
+        opts.seed = cell.cell_seed;
+        opts.strategy = cell.strategy.clone();
+        opts.scenario = (!scenario.is_static()).then(|| scenario.clone());
+        let mut builder = ExperimentBuilder::from_options(opts).strict();
+        if let ExecutionMode::Simulated { param_dim } = self.mode {
+            builder = builder.simulated(param_dim);
+        }
+        let error_row = |cell: CampaignCell, msg: String| CellOutcome {
+            cell,
+            rounds: 0,
+            final_train_loss: None,
+            eval_loss: None,
+            eval_accuracy: None,
+            total_emu_s: 0.0,
+            failures: 0,
+            error: Some(msg),
+        };
+        let experiment = match builder.build() {
+            Ok(e) => e,
+            Err(e) => return error_row(cell, e.to_string()),
+        };
+        match experiment.run() {
+            Ok(report) => {
+                let (eval_loss, eval_accuracy) = match report.last_eval() {
+                    Some((l, a)) => (Some(l), Some(a)),
+                    None => (None, None),
+                };
+                CellOutcome {
+                    cell,
+                    rounds: report.history.rounds.len(),
+                    final_train_loss: report.final_train_loss(),
+                    eval_loss,
+                    eval_accuracy,
+                    total_emu_s: report.total_emu_s(),
+                    failures: report.failures(),
+                    error: None,
+                }
+            }
+            Err(e) => error_row(cell, e.to_string()),
+        }
+    }
+}
+
+/// Summary metrics of one finished (or failed) campaign cell.
+#[derive(Debug, Clone)]
+pub struct CellOutcome {
+    /// The cell's sweep coordinates and derived seed.
+    pub cell: CampaignCell,
+    /// Rounds recorded (0 when the cell errored before running).
+    pub rounds: usize,
+    /// Final-round example-weighted training loss (None when the cell
+    /// errored, or NaN-valued rounds left nothing finite).
+    pub final_train_loss: Option<f32>,
+    /// Last centralised evaluation loss, if evaluation ran.
+    pub eval_loss: Option<f32>,
+    /// Last centralised evaluation accuracy, if evaluation ran.
+    pub eval_accuracy: Option<f32>,
+    /// Total emulated federation seconds.
+    pub total_emu_s: f64,
+    /// Total client failures across rounds.
+    pub failures: usize,
+    /// Build/run error, if the cell did not finish.
+    pub error: Option<String>,
+}
+
+/// `NaN` exports as JSON `null` (an all-failed final round has NaN loss);
+/// the same rule [`ExperimentReport::to_json`](super::experiment::ExperimentReport::to_json)
+/// applies, via the shared helper.
+fn opt_finite(x: Option<f32>) -> Json {
+    x.map(|v| finite_num(v as f64)).unwrap_or(Json::Null)
+}
+
+impl CellOutcome {
+    /// One flat JSON object — a single JSONL row.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            // u64 seeds don't survive the f64 round-trip JSON numbers
+            // imply; export both exactly, as strings.
+            ("seed", Json::str(self.cell.seed.to_string())),
+            ("strategy", Json::str(self.cell.strategy.clone())),
+            ("scenario", Json::str(self.cell.scenario.clone())),
+            ("cell_seed", Json::str(self.cell.cell_seed.to_string())),
+            ("rounds", Json::num(self.rounds as f64)),
+            ("final_train_loss", opt_finite(self.final_train_loss)),
+            ("eval_loss", opt_finite(self.eval_loss)),
+            ("eval_accuracy", opt_finite(self.eval_accuracy)),
+            ("total_emu_s", Json::num(self.total_emu_s)),
+            ("failures", Json::num(self.failures as f64)),
+            (
+                "error",
+                self.error.clone().map(Json::str).unwrap_or(Json::Null),
+            ),
+        ])
+    }
+}
+
+/// Every cell's outcome, in run order.
+pub struct CampaignReport {
+    /// The campaign's name.
+    pub name: String,
+    /// Per-cell outcomes (scenarios outer × strategies × seeds inner).
+    pub cells: Vec<CellOutcome>,
+}
+
+impl CampaignReport {
+    /// Cells that finished without error.
+    pub fn succeeded(&self) -> usize {
+        self.cells.iter().filter(|c| c.error.is_none()).count()
+    }
+
+    /// One compact JSON object per cell, newline-separated (JSONL).
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for cell in &self.cells {
+            out.push_str(&cell.to_json().dump());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write the JSONL export to `path`.
+    pub fn write_jsonl(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_jsonl().as_bytes())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cell_seed_is_deterministic_and_axis_separated() {
+        assert_eq!(cell_seed(7, "fedavg", "stable"), cell_seed(7, "fedavg", "stable"));
+        assert_ne!(cell_seed(7, "fedavg", "stable"), cell_seed(8, "fedavg", "stable"));
+        assert_ne!(cell_seed(7, "fedavg", "stable"), cell_seed(7, "krum", "stable"));
+        assert_ne!(
+            cell_seed(7, "fedavg", "high-churn"),
+            cell_seed(7, "high-churn", "fedavg"),
+            "strategy and scenario axes must not be interchangeable"
+        );
+    }
+
+    #[test]
+    fn cells_cover_the_grid_with_coordinate_derived_seeds() {
+        let campaign = Campaign::new("t", LaunchOptions::default())
+            .seeds(&[1, 2])
+            .strategies(&["fedavg", "fedprox"])
+            .scenarios(&[
+                Scenario::preset("stable").unwrap(),
+                Scenario::preset("high-churn").unwrap(),
+            ]);
+        let cells = campaign.cells();
+        assert_eq!(cells.len(), 8);
+        // Permuting a sweep axis must not change any cell's derived seed.
+        let permuted = Campaign::new("t", LaunchOptions::default())
+            .seeds(&[2, 1])
+            .strategies(&["fedprox", "fedavg"])
+            .scenarios(&[
+                Scenario::preset("high-churn").unwrap(),
+                Scenario::preset("stable").unwrap(),
+            ]);
+        for cell in &cells {
+            let twin = permuted
+                .cells()
+                .into_iter()
+                .find(|c| {
+                    c.seed == cell.seed
+                        && c.strategy == cell.strategy
+                        && c.scenario == cell.scenario
+                })
+                .expect("same coordinates exist");
+            assert_eq!(twin.cell_seed, cell.cell_seed);
+        }
+        // All distinct coordinates -> all distinct seeds.
+        let mut seeds: Vec<u64> = cells.iter().map(|c| c.cell_seed).collect();
+        seeds.sort_unstable();
+        seeds.dedup();
+        assert_eq!(seeds.len(), 8);
+    }
+
+    #[test]
+    fn error_cells_become_rows_not_aborts() {
+        let report = Campaign::new("t", LaunchOptions::default())
+            .strategies(&["no-such-strategy"])
+            .simulated(16)
+            .run();
+        assert_eq!(report.cells.len(), 1);
+        assert_eq!(report.succeeded(), 0);
+        let row = report.cells[0].to_json();
+        assert!(row.get("error").unwrap().as_str().unwrap().contains("no-such-strategy"));
+    }
+}

@@ -1,0 +1,299 @@
+//! Typed event stream for the federated round loop.
+//!
+//! The server emits an [`FlEvent`] at every observable transition of a run
+//! (round begin/end, client completion, dropout/late verdicts, scheduling,
+//! aggregation, evaluation).  Anything that wants to watch a federation —
+//! history recording, trace export, progress logging, a live dashboard, a
+//! convergence early-stopper — implements [`FlObserver`] and attaches via
+//! `ServerApp::with_observer` or `ExperimentBuilder::observer`.
+//!
+//! The built-in [`History`](super::history::History) and
+//! [`Trace`](crate::sched::Trace) outputs are themselves implemented as
+//! subscribers ([`HistoryObserver`], [`TraceObserver`]): the round loop no
+//! longer writes them directly, it only emits events.
+//!
+//! Events are emitted in **selection order** once a round's completion
+//! stream has drained, so the observed sequence is identical for any
+//! `--workers N` — the same bit-identity invariant the engine itself keeps
+//! (DESIGN.md §8).
+#![deny(missing_docs)]
+
+use crate::sched::{Schedule, Trace};
+
+use super::history::{History, RoundRecord, DEADLINE_REASON_PREFIX, DROPOUT_REASON_PREFIX};
+
+/// Why a selected client contributed no update this round.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FailureKind {
+    /// Went offline mid-round before finishing its fit+upload window.
+    Dropout,
+    /// Finished training, but past the round deadline.
+    Late,
+    /// The fit itself failed (e.g. emulated GPU/host OOM).
+    Fault,
+}
+
+impl FailureKind {
+    /// Classify a recorded failure reason by its shared prefix
+    /// (`fl::history::DROPOUT_REASON_PREFIX` / `DEADLINE_REASON_PREFIX`).
+    pub fn classify(reason: &str) -> FailureKind {
+        if reason.starts_with(DROPOUT_REASON_PREFIX) {
+            FailureKind::Dropout
+        } else if reason.starts_with(DEADLINE_REASON_PREFIX) {
+            FailureKind::Late
+        } else {
+            FailureKind::Fault
+        }
+    }
+}
+
+/// One observable transition of a federated run.
+///
+/// Variants borrow from the round loop's state — observers that need to
+/// keep data past the callback must copy it out.
+#[derive(Debug)]
+pub enum FlEvent<'a> {
+    /// The run is starting.
+    RunBegin {
+        /// Configured number of rounds.
+        rounds: u32,
+        /// Federation size (total clients, not per-round participants).
+        clients: usize,
+    },
+    /// A round selected its participants and is about to fit them.
+    RoundBegin {
+        /// Round index (0-based).
+        round: u32,
+        /// Selected client roster indices, in selection order.
+        selected: &'a [usize],
+    },
+    /// No federation member was online; the round was skipped and the
+    /// timeline fast-forwarded to the next wakeup.
+    RoundSkipped {
+        /// Round index (0-based).
+        round: u32,
+        /// Emulated seconds waited for the next online member.
+        wait_s: f64,
+    },
+    /// A selected client finished its fit and was folded into the
+    /// streaming aggregate.
+    ClientDone {
+        /// Round index (0-based).
+        round: u32,
+        /// Client id.
+        client: u32,
+        /// Emulated fit + communication seconds.
+        fit_s: f64,
+    },
+    /// A selected client contributed no update this round.
+    ClientFailed {
+        /// Round index (0-based).
+        round: u32,
+        /// Client id.
+        client: u32,
+        /// Dropout / late / fault classification.
+        kind: FailureKind,
+        /// The recorded failure reason.
+        reason: &'a str,
+    },
+    /// The round's emulated wall-clock schedule was computed.
+    RoundScheduled {
+        /// Round index (0-based).
+        round: u32,
+        /// Emulated time at which the round started.
+        base_s: f64,
+        /// Per-client spans and the round makespan.
+        schedule: &'a Schedule,
+    },
+    /// Surviving updates were aggregated into the next global model.
+    Aggregated {
+        /// Round index (0-based).
+        round: u32,
+        /// Number of client updates that reached the aggregate.
+        survivors: usize,
+    },
+    /// Centralised evaluation ran this round.
+    Evaluated {
+        /// Round index (0-based).
+        round: u32,
+        /// Held-out loss.
+        loss: f32,
+        /// Held-out accuracy in [0, 1].
+        accuracy: f32,
+    },
+    /// The round's record is final (last event of every round, including
+    /// skipped and empty rounds).
+    RoundEnd {
+        /// The finished round's full record.
+        record: &'a RoundRecord,
+    },
+    /// The run finished (last event of a successful run).
+    RunEnd {
+        /// Configured number of rounds.
+        rounds: u32,
+    },
+}
+
+/// A subscriber to the federated event stream.
+///
+/// Observers run synchronously on the server thread in attach order, after
+/// the two built-in subscribers (history, trace).  They must not panic;
+/// they cannot alter the run.
+pub trait FlObserver: Send {
+    /// Called for every [`FlEvent`] the round loop emits.
+    fn on_event(&mut self, event: &FlEvent<'_>);
+}
+
+/// Built-in subscriber that records the run's [`History`] — one
+/// [`RoundRecord`] per [`FlEvent::RoundEnd`].
+#[derive(Debug, Default)]
+pub struct HistoryObserver {
+    history: History,
+}
+
+impl HistoryObserver {
+    /// The recorded history so far.
+    pub fn history(&self) -> &History {
+        &self.history
+    }
+
+    /// Record an owned round record directly (what the round loop uses
+    /// after broadcasting `RoundEnd` — the borrowing event path would
+    /// force a deep clone per round).
+    pub fn push(&mut self, record: RoundRecord) {
+        self.history.push(record);
+    }
+
+    /// Consume the observer, yielding the recorded history.
+    pub fn into_history(self) -> History {
+        self.history
+    }
+}
+
+impl FlObserver for HistoryObserver {
+    fn on_event(&mut self, event: &FlEvent<'_>) {
+        if let FlEvent::RoundEnd { record } = event {
+            self.history.push((*record).clone());
+        }
+    }
+}
+
+/// Built-in subscriber that collects the emulated-timeline [`Trace`] from
+/// [`FlEvent::RoundScheduled`] events (Chrome-trace ready).
+#[derive(Debug, Default)]
+pub struct TraceObserver {
+    trace: Trace,
+}
+
+impl TraceObserver {
+    /// Consume the observer, yielding the collected trace.
+    pub fn into_trace(self) -> Trace {
+        self.trace
+    }
+}
+
+impl FlObserver for TraceObserver {
+    fn on_event(&mut self, event: &FlEvent<'_>) {
+        if let FlEvent::RoundScheduled { round, base_s, schedule } = event {
+            for &(c, s, e) in &schedule.spans {
+                self.trace.add(c, format!("round{round}"), base_s + s, base_s + e);
+            }
+        }
+    }
+}
+
+/// Built-in subscriber that logs round progress through the crate logger
+/// (`BOUQUET_LOG=info`); attach via `ExperimentBuilder::progress(true)`.
+#[derive(Debug, Default)]
+pub struct ProgressLogger;
+
+impl FlObserver for ProgressLogger {
+    fn on_event(&mut self, event: &FlEvent<'_>) {
+        match event {
+            FlEvent::RunBegin { rounds, clients } => {
+                crate::log_info!("run: {clients} clients, {rounds} rounds");
+            }
+            FlEvent::RoundEnd { record } => {
+                crate::log_info!(
+                    "round {}: {} selected, {} failed, train loss {:.4}, {:.2}s emulated",
+                    record.round,
+                    record.selected.len(),
+                    record.failures.len(),
+                    record.train_loss,
+                    record.emu_round_s
+                );
+            }
+            FlEvent::ClientFailed { round, client, kind, .. } => {
+                crate::log_debug!("round {round}: client {client} failed ({kind:?})");
+            }
+            FlEvent::Evaluated { round, loss, accuracy } => {
+                crate::log_info!(
+                    "round {round}: eval loss {loss:.4}, accuracy {:.1}%",
+                    accuracy * 100.0
+                );
+            }
+            _ => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record(round: u32) -> RoundRecord {
+        RoundRecord {
+            round,
+            selected: vec![0, 1],
+            failures: vec![],
+            train_loss: 1.0,
+            eval_loss: None,
+            eval_accuracy: None,
+            emu_round_s: 2.0,
+            host_round_s: 0.0,
+        }
+    }
+
+    #[test]
+    fn history_observer_records_round_ends_only() {
+        let mut obs = HistoryObserver::default();
+        obs.on_event(&FlEvent::RunBegin { rounds: 2, clients: 2 });
+        obs.on_event(&FlEvent::RoundBegin { round: 0, selected: &[0, 1] });
+        let r0 = record(0);
+        obs.on_event(&FlEvent::RoundEnd { record: &r0 });
+        let r1 = record(1);
+        obs.on_event(&FlEvent::RoundEnd { record: &r1 });
+        obs.on_event(&FlEvent::RunEnd { rounds: 2 });
+        let h = obs.into_history();
+        assert_eq!(h.rounds.len(), 2);
+        assert_eq!(h.rounds[1].round, 1);
+    }
+
+    #[test]
+    fn trace_observer_replays_schedule_spans_at_the_round_base() {
+        let schedule = Schedule {
+            round_s: 3.0,
+            spans: vec![(0, 0.0, 1.0), (1, 1.0, 3.0)],
+        };
+        let mut obs = TraceObserver::default();
+        obs.on_event(&FlEvent::RoundScheduled { round: 2, base_s: 10.0, schedule: &schedule });
+        let t = obs.into_trace();
+        assert_eq!(t.events.len(), 2);
+        assert_eq!(t.events[0].label, "round2");
+        assert_eq!(t.events[1].t_start_s, 11.0);
+        assert_eq!(t.events[1].t_end_s, 13.0);
+    }
+
+    #[test]
+    fn failure_kind_classifies_by_reason_prefix() {
+        assert_eq!(
+            FailureKind::classify("dropout: client went offline at 3.00s"),
+            FailureKind::Dropout
+        );
+        assert_eq!(
+            FailureKind::classify("deadline: fit+comm would finish at 99.00s"),
+            FailureKind::Late
+        );
+        assert_eq!(FailureKind::classify("GPU OOM on gtx-1060"), FailureKind::Fault);
+    }
+}

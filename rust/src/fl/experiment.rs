@@ -1,0 +1,824 @@
+//! The library-first experiment API: a validated-at-build
+//! [`ExperimentBuilder`] façade over the whole engine.
+//!
+//! ```text
+//! Experiment::builder()          — set components in ANY order
+//!     .clients(8).rounds(10)
+//!     .strategy("fedprox")       — resolved through fl::strategy registry
+//!     .scenario_named("high-churn")
+//!     .workers(4)
+//!     .build()?                  — cross-component constraints checked ONCE
+//!     .run()?                    — -> ExperimentReport
+//! ```
+//!
+//! `build()` resolves names through the component registries
+//! (`fl::strategy`, `sched`), validates cross-component constraints
+//! (strategy participant bounds, selection fractions, scenario values,
+//! host-feasible hardware) and resolves the federation's hardware — so a
+//! misconfigured experiment fails before any data is generated or any
+//! artifact is loaded.  `run()` then assembles data, clients, server and
+//! clock exactly as the historical `launch()` path did: for any valid
+//! configuration the two produce **bit-identical** schedules, clocks and
+//! aggregates (asserted in `tests/experiment_api.rs`), and `launch()`
+//! itself is now a thin wrapper over this type.
+//!
+//! See DESIGN.md §10 for the builder lifecycle and the event flow.
+#![deny(missing_docs)]
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use crate::data::{generate, partition, Dataset, PartitionScheme, SyntheticConfig};
+use crate::emu::{ClockMode, VirtualClock};
+use crate::error::{ConfigError, FlError};
+use crate::hardware::profile::HardwareProfile;
+use crate::net::sample_network;
+use crate::runtime::ModelExecutor;
+use crate::sched::{self, Scheduler, Trace};
+use crate::util::cfg::Cfg;
+use crate::util::json::Json;
+use crate::util::rng::Pcg;
+
+use super::client::{ClientApp, FitConfig, SimClient, TrainClient};
+use super::clientmgr::Selection;
+use super::events::{FlObserver, ProgressLogger};
+use super::history::History;
+use super::launcher::{resolve_hardware, HardwareSource, LaunchOptions, TimingWorkload};
+use super::params::ParamVector;
+use super::scenario::Scenario;
+use super::server::{ServerApp, ServerConfig};
+use super::strategy::Strategy;
+
+/// How client fits execute.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ExecutionMode {
+    /// Real AOT/PJRT training (`TrainClient`); needs the artifact
+    /// directory.  The paper's default.
+    Real,
+    /// Timing-only federation (`SimClient`): no artifacts, no executor —
+    /// scheduling, dynamics, aggregation and history all behave as usual
+    /// over `param_dim`-sized synthetic updates.  For sweeps, examples and
+    /// CI.
+    Simulated {
+        /// Length of the synthetic parameter vector.
+        param_dim: usize,
+    },
+}
+
+/// Builds an [`Experiment`].  Every setter may be called in any order;
+/// nothing is resolved until [`ExperimentBuilder::build`].
+pub struct ExperimentBuilder {
+    opts: LaunchOptions,
+    scenario_name: Option<String>,
+    scheduler_name: Option<String>,
+    strategy_override: Option<Box<dyn Strategy>>,
+    observers: Vec<Box<dyn FlObserver>>,
+    mode: ExecutionMode,
+    progress: bool,
+    permissive: bool,
+}
+
+impl Default for ExperimentBuilder {
+    fn default() -> Self {
+        ExperimentBuilder {
+            opts: LaunchOptions::default(),
+            scenario_name: None,
+            scheduler_name: None,
+            strategy_override: None,
+            observers: Vec::new(),
+            mode: ExecutionMode::Real,
+            progress: false,
+            permissive: false,
+        }
+    }
+}
+
+impl ExperimentBuilder {
+    /// Start from existing [`LaunchOptions`] (the legacy shim entrypoint).
+    ///
+    /// Builders created this way are **permissive**: the historical
+    /// `launch()` path enforced no build-time sanity or strategy
+    /// participant bounds, so drop-in callers keep the old behaviour —
+    /// degenerate configurations fail (or run) exactly where they used
+    /// to, at run time.  Call [`ExperimentBuilder::strict`] to opt back
+    /// into full validation.
+    pub fn from_options(opts: LaunchOptions) -> Self {
+        ExperimentBuilder { opts, permissive: true, ..Default::default() }
+    }
+
+    /// Start from a parsed federation config file.
+    pub fn from_cfg(cfg: &Cfg) -> Result<Self, ConfigError> {
+        Ok(Self::from_options(LaunchOptions::from_cfg(cfg)?))
+    }
+
+    /// Federation size (total clients).
+    pub fn clients(mut self, n: usize) -> Self {
+        self.opts.clients = n;
+        self
+    }
+
+    /// Number of federated rounds.
+    pub fn rounds(mut self, n: u32) -> Self {
+        self.opts.rounds = n;
+        self
+    }
+
+    /// Training samples per client partition.
+    pub fn samples_per_client(mut self, n: usize) -> Self {
+        self.opts.samples_per_client = n;
+        self
+    }
+
+    /// Held-out centralised evaluation set size.
+    pub fn eval_samples(mut self, n: usize) -> Self {
+        self.opts.eval_samples = n;
+        self
+    }
+
+    /// Local batch size.
+    pub fn batch(mut self, n: u32) -> Self {
+        self.opts.batch = n;
+        self
+    }
+
+    /// Local SGD steps per round.
+    pub fn local_steps(mut self, n: u32) -> Self {
+        self.opts.local_steps = n;
+        self
+    }
+
+    /// Client learning rate.
+    pub fn lr(mut self, lr: f32) -> Self {
+        self.opts.lr = lr;
+        self
+    }
+
+    /// Aggregation strategy by registered name (`fl::strategy::names()`
+    /// lists them); resolved and validated at build.
+    pub fn strategy(mut self, name: &str) -> Self {
+        self.opts.strategy = name.to_string();
+        self.strategy_override = None;
+        self
+    }
+
+    /// Use this strategy instance directly (bypasses the registry; for
+    /// one-off strategies that aren't worth registering).
+    pub fn with_strategy(mut self, strategy: Box<dyn Strategy>) -> Self {
+        self.opts.strategy = strategy.name().to_string();
+        self.strategy_override = Some(strategy);
+        self
+    }
+
+    /// Emulated-timeline slot count (`1` = the paper's strict sequential
+    /// schedule; `>1` = the limited-parallel extension).
+    pub fn max_parallel(mut self, n: usize) -> Self {
+        self.opts.max_parallel = n;
+        self
+    }
+
+    /// Scheduler by registered name (`sched::names()` lists them); built
+    /// with the `max_parallel` slot count.  Default: name-less resolution
+    /// (`sequential` / `limited-parallel` from `max_parallel`).
+    pub fn scheduler(mut self, name: &str) -> Self {
+        self.scheduler_name = Some(name.to_string());
+        self
+    }
+
+    /// Real fit concurrency: pool threads with their own executors.
+    /// Changes no emulated observable (DESIGN.md §8).
+    pub fn workers(mut self, n: usize) -> Self {
+        self.opts.workers = n;
+        self
+    }
+
+    /// Data partition scheme across clients.
+    pub fn partition(mut self, scheme: PartitionScheme) -> Self {
+        self.opts.partition = scheme;
+        self
+    }
+
+    /// Per-round client selection policy.
+    pub fn selection(mut self, selection: Selection) -> Self {
+        self.opts.selection = selection;
+        self
+    }
+
+    /// Run centralised evaluation every N rounds (0 = never).
+    pub fn eval_every(mut self, n: u32) -> Self {
+        self.opts.eval_every = n;
+        self
+    }
+
+    /// Experiment seed (drives data, sampling, selection, dynamics).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.opts.seed = seed;
+        self
+    }
+
+    /// How client hardware is chosen (survey sampler or explicit names).
+    pub fn hardware(mut self, source: HardwareSource) -> Self {
+        self.opts.hardware = source;
+        self
+    }
+
+    /// Convenience for [`HardwareSource::Manual`]: preset/GPU names cycled
+    /// over the client count.
+    pub fn profiles(mut self, names: &[&str]) -> Self {
+        self.opts.hardware =
+            HardwareSource::Manual(names.iter().map(|s| s.to_string()).collect());
+        self
+    }
+
+    /// Attach per-client network latency profiles.
+    pub fn network(mut self, on: bool) -> Self {
+        self.opts.network = on;
+        self
+    }
+
+    /// The host machine the federation is emulated on.
+    pub fn host(mut self, host: HardwareProfile) -> Self {
+        self.opts.host = host;
+        self
+    }
+
+    /// Directory holding the AOT artifacts (Real mode only).
+    pub fn artifacts_dir(mut self, dir: PathBuf) -> Self {
+        self.opts.artifacts_dir = dir;
+        self
+    }
+
+    /// Real-time pacing scale (`None` = fast-forward).
+    pub fn pacing(mut self, scale: Option<f64>) -> Self {
+        self.opts.pacing = scale;
+        self
+    }
+
+    /// Abort when a round ends with zero surviving clients (static
+    /// federations only; see `ServerConfig`).
+    pub fn fail_on_empty_round(mut self, on: bool) -> Self {
+        self.opts.fail_on_empty_round = on;
+        self
+    }
+
+    /// Workload descriptor for emulated timing/VRAM accounting.
+    pub fn timing_workload(mut self, workload: TimingWorkload) -> Self {
+        self.opts.timing_workload = workload;
+        self
+    }
+
+    /// Federation-dynamics scenario (a static scenario compiles to
+    /// nothing).
+    pub fn scenario(mut self, scenario: Scenario) -> Self {
+        self.scenario_name = None;
+        self.opts.scenario = if scenario.is_static() { None } else { Some(scenario) };
+        self
+    }
+
+    /// Scenario by preset name or file path (`Scenario::resolve` rules);
+    /// resolved and validated at build.
+    pub fn scenario_named(mut self, spec: &str) -> Self {
+        self.scenario_name = Some(spec.to_string());
+        self
+    }
+
+    /// Subscribe an observer to the run's typed event stream
+    /// (`fl::events`).
+    pub fn observer(mut self, observer: Box<dyn FlObserver>) -> Self {
+        self.observers.push(observer);
+        self
+    }
+
+    /// Log round progress through the crate logger while running.
+    pub fn progress(mut self, on: bool) -> Self {
+        self.progress = on;
+        self
+    }
+
+    /// Run a timing-only federation (`SimClient` fleet, `param_dim`-sized
+    /// synthetic updates) — no artifacts or PJRT runtime needed.
+    pub fn simulated(mut self, param_dim: usize) -> Self {
+        self.mode = ExecutionMode::Simulated { param_dim };
+        self
+    }
+
+    /// Re-enable full cross-component validation on a builder created via
+    /// [`ExperimentBuilder::from_options`].
+    pub fn strict(mut self) -> Self {
+        self.permissive = false;
+        self
+    }
+
+    /// Resolve every component and validate cross-component constraints.
+    ///
+    /// Errors cover: unknown strategy/scheduler/scenario names (with the
+    /// registered alternatives listed), zero-sized federations or rounds,
+    /// selection fractions outside `[0, 1]`, strategies whose guarantee
+    /// needs more per-round participants than the configuration can ever
+    /// provide (e.g. Krum's Byzantine bound), and hardware that is not
+    /// emulatable on the host.
+    pub fn build(mut self) -> Result<Experiment, ConfigError> {
+        let invalid = |key: &str, msg: String| ConfigError::InvalidValue {
+            key: key.to_string(),
+            msg,
+        };
+        self.opts.workers = self.opts.workers.max(1);
+        // Sanity and cross-component checks are strict-mode only: the
+        // permissive (legacy `launch()`) path must accept every
+        // configuration the historical launcher accepted, degenerate ones
+        // included, and fail where it would have failed (at run time).
+        if !self.permissive {
+            if self.opts.clients == 0 {
+                return Err(invalid(
+                    "clients",
+                    "a federation needs at least one client".into(),
+                ));
+            }
+            if self.opts.rounds == 0 {
+                return Err(invalid("rounds", "a federation needs at least one round".into()));
+            }
+            if self.opts.batch == 0 || self.opts.local_steps == 0 {
+                return Err(invalid(
+                    "federation",
+                    "batch and local_steps must be positive".into(),
+                ));
+            }
+            if self.opts.samples_per_client == 0 {
+                return Err(invalid(
+                    "samples_per_client",
+                    "clients need at least one training sample".into(),
+                ));
+            }
+            if let Selection::Fraction(f) = self.opts.selection {
+                if !(0.0..=1.0).contains(&f) {
+                    return Err(invalid(
+                        "selection.fraction",
+                        format!("fraction {f} outside [0, 1]"),
+                    ));
+                }
+            }
+        }
+
+        // Scenario: resolve a pending name, then validate staticness once.
+        if let Some(spec) = &self.scenario_name {
+            let sc = Scenario::resolve(spec)?;
+            self.opts.scenario = if sc.is_static() { None } else { Some(sc) };
+        }
+
+        // Strategy: explicit instance, or the one shared registry lookup
+        // every resolution path uses (`LaunchOptions::strategy_box`).
+        let strategy = match self.strategy_override {
+            Some(s) => s,
+            None => self.opts.strategy_box()?,
+        };
+
+        // Scheduler: explicit name through the registry, or the launcher's
+        // historical max_parallel resolution.
+        let scheduler = match &self.scheduler_name {
+            Some(name) => sched::by_name(name, self.opts.max_parallel).ok_or_else(|| {
+                invalid(
+                    "scheduler",
+                    format!(
+                        "unknown scheduler '{name}' (registered: {})",
+                        sched::names().join("|")
+                    ),
+                )
+            })?,
+            None => sched::for_parallelism(self.opts.max_parallel),
+        };
+
+        // Cross-component: can the configuration ever seat enough
+        // participants for the strategy's guarantee?
+        if !self.permissive {
+            let participants = min_round_participants(self.opts.selection, self.opts.clients);
+            let needed = strategy.min_clients();
+            if participants < needed {
+                return Err(invalid(
+                    "strategy",
+                    format!(
+                        "strategy '{}' needs at least {needed} participants per round, \
+                         but the configuration seats at most {participants} \
+                         ({} clients, {:?} selection)",
+                        strategy.name(),
+                        self.opts.clients,
+                        self.opts.selection
+                    ),
+                ));
+            }
+        }
+
+        // Hardware: resolved now so unknown presets / host-infeasible
+        // profiles fail at build, not mid-run.
+        let profiles = resolve_hardware(&self.opts)?;
+
+        Ok(Experiment {
+            opts: self.opts,
+            strategy,
+            scheduler,
+            profiles,
+            observers: self.observers,
+            mode: self.mode,
+            progress: self.progress,
+        })
+    }
+}
+
+/// The smallest participant count a selection policy can seat per round.
+fn min_round_participants(selection: Selection, clients: usize) -> usize {
+    match selection {
+        Selection::All => clients,
+        Selection::Fraction(f) => {
+            ((clients as f64 * f).round() as usize).clamp(1, clients)
+        }
+        Selection::Count(k) => k.clamp(1, clients),
+    }
+}
+
+/// A fully resolved, validated experiment — every component is already
+/// constructed; [`Experiment::run`] cannot fail on configuration.
+pub struct Experiment {
+    opts: LaunchOptions,
+    strategy: Box<dyn Strategy>,
+    scheduler: Box<dyn Scheduler>,
+    profiles: Vec<HardwareProfile>,
+    observers: Vec<Box<dyn FlObserver>>,
+    mode: ExecutionMode,
+    progress: bool,
+}
+
+impl Experiment {
+    /// Start building an experiment (strict validation).
+    pub fn builder() -> ExperimentBuilder {
+        ExperimentBuilder::default()
+    }
+
+    /// Build directly from [`LaunchOptions`] with the legacy `launch()`
+    /// semantics (permissive validation) — the compatibility shim.
+    pub fn from_options(opts: LaunchOptions) -> Result<Experiment, ConfigError> {
+        ExperimentBuilder::from_options(opts).build()
+    }
+
+    /// The resolved launch options.
+    pub fn options(&self) -> &LaunchOptions {
+        &self.opts
+    }
+
+    /// The federation's resolved hardware, one profile per client.
+    pub fn profiles(&self) -> &[HardwareProfile] {
+        &self.profiles
+    }
+
+    /// Assemble data, clients, server and clock, run the federation, and
+    /// return the typed report.
+    ///
+    /// This is byte-for-byte the historical `launch()` assembly: same
+    /// seeds, same RNG stream order, same server wiring — the bit-identity
+    /// contract between the two paths is asserted in
+    /// `tests/experiment_api.rs`.
+    pub fn run(self) -> Result<ExperimentReport, FlError> {
+        let Experiment { opts, strategy, scheduler, profiles, mut observers, mode, progress } =
+            self;
+        if progress {
+            observers.push(Box::new(ProgressLogger));
+        }
+        let strategy_name = strategy.name().to_string();
+        let scenario_name = opts
+            .scenario
+            .as_ref()
+            .map(|sc| sc.name.clone())
+            .unwrap_or_else(|| "stable".to_string());
+
+        let workload = opts.timing_workload.cost();
+        let mut net_rng = Pcg::new(opts.seed, 0x4E7);
+        let (clients, eval): (Vec<Box<dyn ClientApp>>, Option<Dataset>) = match mode {
+            ExecutionMode::Real => {
+                // Data: one synthetic corpus, partitioned across clients +
+                // held-out eval.
+                let total = opts.clients * opts.samples_per_client;
+                let train = generate(
+                    &SyntheticConfig { seed: opts.seed, ..Default::default() },
+                    total,
+                );
+                let eval = generate(
+                    &SyntheticConfig { seed: opts.seed ^ 0xE7A1, ..Default::default() },
+                    opts.eval_samples,
+                );
+                let parts = partition(&train, opts.clients, opts.partition, opts.seed);
+                let clients = profiles
+                    .iter()
+                    .enumerate()
+                    .map(|(i, profile)| {
+                        let subset: Dataset = train.subset(&parts[i]);
+                        let mut c = TrainClient::new(
+                            i as u32,
+                            profile.clone(),
+                            subset,
+                            workload.clone(),
+                            opts.seed ^ (i as u64) << 8,
+                        );
+                        if opts.network {
+                            c = c.with_network(sample_network(&mut net_rng));
+                        }
+                        Box::new(c) as Box<dyn ClientApp>
+                    })
+                    .collect();
+                (clients, Some(eval))
+            }
+            ExecutionMode::Simulated { .. } => {
+                let clients = profiles
+                    .iter()
+                    .enumerate()
+                    .map(|(i, profile)| {
+                        let mut c = SimClient::new(
+                            i as u32,
+                            profile.clone(),
+                            opts.samples_per_client,
+                            workload.clone(),
+                        );
+                        if opts.network {
+                            c.network = Some(sample_network(&mut net_rng));
+                        }
+                        Box::new(c) as Box<dyn ClientApp>
+                    })
+                    .collect();
+                (clients, None)
+            }
+        };
+
+        let server_cfg = ServerConfig {
+            rounds: opts.rounds,
+            selection: opts.selection,
+            fit: FitConfig {
+                lr: opts.lr,
+                local_steps: opts.local_steps,
+                batch: opts.batch,
+                ..Default::default()
+            },
+            eval_every: opts.eval_every,
+            seed: opts.seed,
+            fail_on_empty_round: opts.fail_on_empty_round,
+        };
+
+        let mut server =
+            ServerApp::new(server_cfg, opts.host.clone(), strategy, scheduler, clients);
+        if let Some(eval) = eval {
+            server = server.with_eval_data(eval);
+        }
+        if let Some(sc) = &opts.scenario {
+            server = server.with_scenario(sc);
+        }
+        for observer in observers {
+            server = server.with_observer(observer);
+        }
+        if opts.workers > 1 {
+            // Each pool worker builds (and caches) its own executor over
+            // the same artifact directory; real fits then overlap while
+            // the emulated timeline stays exactly as scheduled.  Simulated
+            // fleets need no executors at all.
+            let factory = match mode {
+                ExecutionMode::Real => {
+                    let dir = opts.artifacts_dir.clone();
+                    Some(Arc::new(move || ModelExecutor::new(&dir))
+                        as crate::sched::ExecutorFactory)
+                }
+                ExecutionMode::Simulated { .. } => None,
+            };
+            server = server.with_round_engine(opts.workers, factory);
+        }
+
+        let mut clock = match opts.pacing {
+            Some(scale) => VirtualClock::new(ClockMode::Realtime { scale }),
+            None => VirtualClock::fast_forward(),
+        };
+        let (global, history) = match mode {
+            ExecutionMode::Real => {
+                let mut executor = ModelExecutor::new(&opts.artifacts_dir)
+                    .map_err(|e| FlError::Strategy(format!("runtime: {e}")))?;
+                server.run(&mut executor, &mut clock)?
+            }
+            ExecutionMode::Simulated { param_dim } => {
+                server.run_from(ParamVector::zeros(param_dim), None, &mut clock)?
+            }
+        };
+        let trace = std::mem::take(&mut server.trace);
+        Ok(ExperimentReport {
+            global,
+            history,
+            profiles,
+            trace,
+            strategy: strategy_name,
+            scenario: scenario_name,
+            seed: opts.seed,
+        })
+    }
+}
+
+/// Everything a finished experiment produced.
+pub struct ExperimentReport {
+    /// The final global model.
+    pub global: ParamVector,
+    /// Round-by-round training history.
+    pub history: History,
+    /// Per-client hardware, index-aligned with client ids.
+    pub profiles: Vec<HardwareProfile>,
+    /// Per-client fit spans on the emulated timeline (Chrome-trace ready).
+    pub trace: Trace,
+    /// Resolved strategy name.
+    pub strategy: String,
+    /// Scenario name (`"stable"` for static federations).
+    pub scenario: String,
+    /// The experiment seed.
+    pub seed: u64,
+}
+
+/// `NaN`/infinite metrics export as JSON `null` (JSON has no non-finite
+/// numbers; an all-failed round's loss is NaN by design).  Shared with
+/// the campaign JSONL rows so the two export paths cannot diverge.
+pub(crate) fn finite_num(x: f64) -> Json {
+    if x.is_finite() {
+        Json::num(x)
+    } else {
+        Json::Null
+    }
+}
+
+impl ExperimentReport {
+    /// Example-weighted training loss of the last round.
+    pub fn final_train_loss(&self) -> Option<f32> {
+        self.history.final_train_loss()
+    }
+
+    /// Most recent centralised (loss, accuracy), if evaluation ever ran.
+    pub fn last_eval(&self) -> Option<(f32, f32)> {
+        self.history.last_eval()
+    }
+
+    /// Total emulated federation seconds.
+    pub fn total_emu_s(&self) -> f64 {
+        self.history.total_emu_seconds()
+    }
+
+    /// Total client failures across all rounds.
+    pub fn failures(&self) -> usize {
+        self.history.total_failures()
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "[{} / {} / seed {}] {}",
+            self.strategy,
+            self.scenario,
+            self.seed,
+            self.history.summary()
+        )
+    }
+
+    /// Flat summary row of this experiment (strategy/scenario/seed plus
+    /// headline metrics) for ad-hoc JSONL logging.  Campaign cells export
+    /// their own richer rows ([`super::campaign::CellOutcome::to_json`])
+    /// that add sweep coordinates and error status.
+    pub fn to_json(&self) -> Json {
+        let (eval_loss, eval_accuracy) = match self.last_eval() {
+            Some((l, a)) => (finite_num(l as f64), finite_num(a as f64)),
+            None => (Json::Null, Json::Null),
+        };
+        Json::obj(vec![
+            ("strategy", Json::str(self.strategy.clone())),
+            ("scenario", Json::str(self.scenario.clone())),
+            // 64-bit seeds don't survive the f64 round-trip JSON numbers
+            // imply; export exactly, as a string.
+            ("seed", Json::str(self.seed.to_string())),
+            ("rounds", Json::num(self.history.rounds.len() as f64)),
+            (
+                "final_train_loss",
+                self.final_train_loss()
+                    .map(|x| finite_num(x as f64))
+                    .unwrap_or(Json::Null),
+            ),
+            ("eval_loss", eval_loss),
+            ("eval_accuracy", eval_accuracy),
+            ("total_emu_s", finite_num(self.total_emu_s())),
+            ("failures", Json::num(self.failures() as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_strategy_is_rejected_with_the_registry_list() {
+        let err = Experiment::builder()
+            .profiles(&["gtx-1060"])
+            .strategy("nope")
+            .build()
+            .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("nope"), "{msg}");
+        assert!(msg.contains("fedavg") && msg.contains("krum"), "{msg}");
+    }
+
+    #[test]
+    fn unknown_scheduler_is_rejected_with_the_registry_list() {
+        let err = Experiment::builder()
+            .profiles(&["gtx-1060"])
+            .scheduler("wat")
+            .build()
+            .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("wat") && msg.contains("sequential"), "{msg}");
+    }
+
+    #[test]
+    fn krum_below_its_byzantine_bound_is_rejected() {
+        // Krum(f=1) needs > 2f+2 = 4 participants; 3 clients cannot seat it.
+        let err = Experiment::builder()
+            .profiles(&["gtx-1060"])
+            .clients(3)
+            .strategy("krum")
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("krum"), "{err}");
+        // ...but 5 clients can.
+        assert!(Experiment::builder()
+            .profiles(&["gtx-1060"])
+            .clients(5)
+            .strategy("krum")
+            .build()
+            .is_ok());
+        // The permissive (legacy launch) path keeps the old leniency.
+        let opts = LaunchOptions {
+            clients: 3,
+            strategy: "krum".into(),
+            hardware: HardwareSource::Manual(vec!["gtx-1060".into()]),
+            ..Default::default()
+        };
+        assert!(Experiment::from_options(opts).is_ok());
+    }
+
+    #[test]
+    fn fraction_selection_cuts_participants_for_the_bound() {
+        // 10 clients at fraction 0.2 -> 2 per round: trimmed-mean(1)
+        // needs 3.
+        let err = Experiment::builder()
+            .profiles(&["gtx-1060"])
+            .clients(10)
+            .selection(Selection::Fraction(0.2))
+            .strategy("trimmed-mean")
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("trimmed-mean"), "{err}");
+    }
+
+    #[test]
+    fn zero_sized_federations_are_rejected() {
+        assert!(Experiment::builder().clients(0).build().is_err());
+        assert!(Experiment::builder().profiles(&["gtx-1060"]).rounds(0).build().is_err());
+        assert!(Experiment::builder()
+            .profiles(&["gtx-1060"])
+            .samples_per_client(0)
+            .build()
+            .is_err());
+        assert!(Experiment::builder()
+            .profiles(&["gtx-1060"])
+            .selection(Selection::Fraction(1.5))
+            .build()
+            .is_err());
+    }
+
+    #[test]
+    fn builder_resolves_scenarios_and_hardware_at_build() {
+        let exp = Experiment::builder()
+            .profiles(&["gtx-1060", "rtx-3060"])
+            .clients(4)
+            .scenario_named("high-churn")
+            .build()
+            .unwrap();
+        assert_eq!(exp.profiles().len(), 4);
+        assert_eq!(exp.options().scenario.as_ref().unwrap().name, "high-churn");
+        // The stable preset compiles to no dynamics at all.
+        let exp = Experiment::builder()
+            .profiles(&["gtx-1060"])
+            .scenario_named("stable")
+            .build()
+            .unwrap();
+        assert!(exp.options().scenario.is_none());
+        // Unknown presets and infeasible hardware fail at build.
+        assert!(Experiment::builder()
+            .profiles(&["gtx-1060"])
+            .scenario_named("nope")
+            .build()
+            .is_err());
+        assert!(Experiment::builder().profiles(&["rtx-4090"]).build().is_err());
+    }
+
+    #[test]
+    fn min_round_participants_matches_selection_semantics() {
+        assert_eq!(min_round_participants(Selection::All, 8), 8);
+        assert_eq!(min_round_participants(Selection::Fraction(0.5), 8), 4);
+        assert_eq!(min_round_participants(Selection::Fraction(0.01), 8), 1);
+        assert_eq!(min_round_participants(Selection::Count(3), 8), 3);
+        assert_eq!(min_round_participants(Selection::Count(99), 8), 8);
+    }
+}

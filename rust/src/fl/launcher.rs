@@ -1,28 +1,27 @@
-//! Federation launcher: build a full BouquetFL experiment (data, clients,
-//! hardware, strategy, scheduler, runtime) from plain options or a config
-//! file, and run it.  Used by the CLI (`bouquetfl run`) and the examples.
+//! Federation launcher: plain-options ([`LaunchOptions`]) and config-file
+//! description of a full BouquetFL experiment, plus the historical
+//! [`launch`] entrypoint.  Since the library-first API redesign
+//! (DESIGN.md §10) this module is a thin compatibility shim: [`launch`]
+//! delegates to [`Experiment`](super::experiment::Experiment), which new
+//! code should use directly via `Experiment::builder()`.
 
 use std::path::PathBuf;
 
-use crate::data::{generate, partition, Dataset, PartitionScheme, SyntheticConfig};
-use crate::emu::{ClockMode, VirtualClock};
+use crate::data::PartitionScheme;
 use crate::error::{ConfigError, FlError};
 use crate::hardware::profile::{preset, HardwareProfile};
 use crate::hardware::sampler::{HardwareSampler, SamplerConfig};
 use crate::modelcost::small_cnn;
-use crate::net::sample_network;
-use crate::runtime::{default_dir, ModelExecutor};
-use crate::sched::{LimitedParallel, Scheduler, Sequential, Trace};
+use crate::runtime::default_dir;
+use crate::sched::Trace;
 use crate::util::cfg::Cfg;
-use crate::util::rng::Pcg;
 
-use super::client::{ClientApp, FitConfig, TrainClient};
 use super::clientmgr::Selection;
+use super::experiment::Experiment;
 use super::history::History;
 use super::params::ParamVector;
 use super::scenario::Scenario;
-use super::server::{ServerApp, ServerConfig};
-use super::strategy::{FedAdam, FedAvg, FedAvgM, FedProx, Krum, Strategy, TrimmedMean};
+use super::strategy::{self, Strategy};
 
 /// Which workload descriptor drives the *emulated* timing/VRAM accounting.
 ///
@@ -123,9 +122,82 @@ impl Default for LaunchOptions {
     }
 }
 
+/// The launcher's config-file vocabulary: every `[section]` and key
+/// `from_cfg` reads.  `Cfg::unknown_entries` checks parsed files against
+/// this so typos warn instead of silently falling back to defaults.
+pub const CONFIG_SCHEMA: &[(&str, &[&str])] = &[
+    (
+        "federation",
+        &[
+            "clients",
+            "rounds",
+            "batch",
+            "local_steps",
+            "lr",
+            "strategy",
+            "fraction",
+            "max_parallel",
+            "workers",
+            "eval_every",
+            "seed",
+            "network",
+            "fail_on_empty_round",
+        ],
+    ),
+    (
+        "data",
+        &["partition", "alpha", "labels_per_client", "samples_per_client", "eval_samples"],
+    ),
+    ("hardware", &["profiles", "min_vram_gib", "exclude_laptop", "tier_affinity"]),
+    (
+        "scenario",
+        &[
+            "preset",
+            "model",
+            "name",
+            "join_prob",
+            "leave_prob",
+            "deadline_s",
+            "period_s",
+            "online_fraction",
+            "drain_s",
+            "recharge_s",
+            "jitter",
+            "mean_online_s",
+            "mean_offline_s",
+        ],
+    ),
+];
+
 impl LaunchOptions {
+    /// Non-fatal problems with a parsed config: unknown sections/keys
+    /// (with did-you-mean suggestions and line numbers) and strategy names
+    /// that no registry entry matches (the registry's `names()` powers the
+    /// suggestion list).
+    pub fn config_warnings(cfg: &Cfg) -> Vec<String> {
+        let mut warnings = cfg.unknown_entries(CONFIG_SCHEMA);
+        if let Some(name) = cfg.get("federation", "strategy").and_then(|v| v.as_str()) {
+            if strategy::by_name(name).is_none() {
+                let line = cfg
+                    .key_line("federation", "strategy")
+                    .map(|l| format!("config line {l}: "))
+                    .unwrap_or_default();
+                warnings.push(format!(
+                    "{line}unknown strategy '{name}' (registered: {})",
+                    strategy::names().join("|")
+                ));
+            }
+        }
+        warnings
+    }
+
     /// Parse from a config file (see `configs/*.toml` for the format).
+    /// Unknown sections/keys are reported through the crate logger
+    /// (`config_warnings` returns them programmatically).
     pub fn from_cfg(cfg: &Cfg) -> Result<Self, ConfigError> {
+        for w in Self::config_warnings(cfg) {
+            crate::log_warn!("{w}");
+        }
         let mut o = LaunchOptions::default();
         o.clients = cfg.u64_or("federation", "clients", o.clients as u64) as usize;
         o.rounds = cfg.u64_or("federation", "rounds", o.rounds as u64) as u32;
@@ -184,29 +256,18 @@ impl LaunchOptions {
         Ok(o)
     }
 
+    /// Resolve the strategy name through the shared `fl::strategy`
+    /// registry (the CLI, config files and `ExperimentBuilder` all take
+    /// this one path).
     pub fn strategy_box(&self) -> Result<Box<dyn Strategy>, ConfigError> {
-        Ok(match self.strategy.as_str() {
-            "fedavg" => Box::new(FedAvg),
-            "fedprox" => Box::new(FedProx::new(0.01)),
-            "fedavgm" => Box::new(FedAvgM::new(0.9)),
-            "fedadam" => Box::new(FedAdam::new(0.02)),
-            "trimmed-mean" => Box::new(TrimmedMean::new(1)),
-            "krum" => Box::new(Krum::new(1, 3)),
-            other => {
-                return Err(ConfigError::InvalidValue {
-                    key: "strategy".into(),
-                    msg: format!("unknown strategy '{other}'"),
-                })
-            }
+        strategy::by_name(&self.strategy).ok_or_else(|| ConfigError::InvalidValue {
+            key: "strategy".into(),
+            msg: format!(
+                "unknown strategy '{}' (registered: {})",
+                self.strategy,
+                strategy::names().join("|")
+            ),
         })
-    }
-
-    fn scheduler_box(&self) -> Box<dyn Scheduler> {
-        if self.max_parallel > 1 {
-            Box::new(LimitedParallel::new(self.max_parallel))
-        } else {
-            Box::new(Sequential)
-        }
     }
 }
 
@@ -249,6 +310,12 @@ pub fn resolve_hardware(
                 .collect()
         }
         HardwareSource::Manual(names) => {
+            if names.is_empty() {
+                return Err(ConfigError::InvalidValue {
+                    key: "hardware.profiles".into(),
+                    msg: "manual hardware needs at least one profile name".into(),
+                });
+            }
             let mut out = Vec::with_capacity(opts.clients);
             for i in 0..opts.clients {
                 let name = &names[i % names.len()];
@@ -279,88 +346,23 @@ pub struct LaunchOutcome {
 }
 
 /// Build and run the federation described by `opts`.
+///
+/// Compatibility shim: this is now a thin wrapper over
+/// [`Experiment`](super::experiment::Experiment) — assembly, execution and
+/// output are bit-identical to the pre-redesign launcher (asserted in
+/// `tests/experiment_api.rs`).  New code should prefer
+/// `Experiment::builder()`, which adds any-order construction, strict
+/// cross-component validation, observers and simulated execution.
 pub fn launch(opts: &LaunchOptions) -> Result<LaunchOutcome, FlError> {
-    let profiles = resolve_hardware(opts).map_err(|e| FlError::Strategy(e.to_string()))?;
-
-    // Data: one synthetic corpus, partitioned across clients + held-out eval.
-    let total = opts.clients * opts.samples_per_client;
-    let train = generate(
-        &SyntheticConfig { seed: opts.seed, ..Default::default() },
-        total,
-    );
-    let eval = generate(
-        &SyntheticConfig { seed: opts.seed ^ 0xE7A1, ..Default::default() },
-        opts.eval_samples,
-    );
-    let parts = partition(&train, opts.clients, opts.partition, opts.seed);
-
-    let workload = opts.timing_workload.cost();
-    let mut net_rng = Pcg::new(opts.seed, 0x4E7);
-    let clients: Vec<Box<dyn ClientApp>> = profiles
-        .iter()
-        .enumerate()
-        .map(|(i, profile)| {
-            let subset: Dataset = train.subset(&parts[i]);
-            let mut c = TrainClient::new(
-                i as u32,
-                profile.clone(),
-                subset,
-                workload.clone(),
-                opts.seed ^ (i as u64) << 8,
-            );
-            if opts.network {
-                c = c.with_network(sample_network(&mut net_rng));
-            }
-            Box::new(c) as Box<dyn ClientApp>
-        })
-        .collect();
-
-    let server_cfg = ServerConfig {
-        rounds: opts.rounds,
-        selection: opts.selection,
-        fit: FitConfig {
-            lr: opts.lr,
-            local_steps: opts.local_steps,
-            batch: opts.batch,
-            ..Default::default()
-        },
-        eval_every: opts.eval_every,
-        seed: opts.seed,
-        fail_on_empty_round: opts.fail_on_empty_round,
-    };
-
-    let strategy = opts.strategy_box().map_err(|e| FlError::Strategy(e.to_string()))?;
-    let mut server = ServerApp::new(
-        server_cfg,
-        opts.host.clone(),
-        strategy,
-        opts.scheduler_box(),
-        clients,
-    )
-    .with_eval_data(eval);
-    if let Some(sc) = &opts.scenario {
-        server = server.with_scenario(sc);
-    }
-    if opts.workers > 1 {
-        // Each pool worker builds (and caches) its own executor over the
-        // same artifact directory; real fits then overlap while the
-        // emulated timeline stays exactly as scheduled.
-        let dir = opts.artifacts_dir.clone();
-        let factory: crate::sched::ExecutorFactory =
-            std::sync::Arc::new(move || ModelExecutor::new(&dir));
-        server = server.with_round_engine(opts.workers, Some(factory));
-    }
-
-    let mut executor = ModelExecutor::new(&opts.artifacts_dir)
-        .map_err(|e| FlError::Strategy(format!("runtime: {e}")))?;
-    let mut clock = match opts.pacing {
-        Some(scale) => VirtualClock::new(ClockMode::Realtime { scale }),
-        None => VirtualClock::fast_forward(),
-    };
-
-    let (global, history) = server.run(&mut executor, &mut clock)?;
-    let trace = std::mem::take(&mut server.trace);
-    Ok(LaunchOutcome { global, history, profiles, trace })
+    let experiment =
+        Experiment::from_options(opts.clone()).map_err(|e| FlError::Strategy(e.to_string()))?;
+    let report = experiment.run()?;
+    Ok(LaunchOutcome {
+        global: report.global,
+        history: report.history,
+        profiles: report.profiles,
+        trace: report.trace,
+    })
 }
 
 #[cfg(test)]
@@ -475,6 +477,28 @@ profiles = ["gtx-1060", "budget-2019"]
         assert_eq!(profiles[0].gpu.slug, "gtx-1060");
         assert_eq!(profiles[1].gpu.slug, "rtx-3060");
         assert_eq!(profiles[2].gpu.slug, "gtx-1060");
+    }
+
+    #[test]
+    fn config_warnings_flag_typos_and_unknown_strategies() {
+        let cfg = Cfg::parse("[federation]\nstrategy = \"fedavgg\"\nworkrs = 2").unwrap();
+        let w = LaunchOptions::config_warnings(&cfg);
+        assert_eq!(w.len(), 2, "{w:?}");
+        assert!(
+            w.iter().any(|m| m.contains("line 3")
+                && m.contains("workrs")
+                && m.contains("did you mean 'workers'")),
+            "{w:?}"
+        );
+        assert!(
+            w.iter().any(|m| m.contains("line 2")
+                && m.contains("fedavgg")
+                && m.contains("fedavg|")),
+            "{w:?}"
+        );
+        // A clean config produces no warnings.
+        let clean = Cfg::parse(SAMPLE).unwrap();
+        assert!(LaunchOptions::config_warnings(&clean).is_empty());
     }
 
     #[test]

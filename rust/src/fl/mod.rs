@@ -1,9 +1,18 @@
 //! The Flower-shaped federated learning framework with BouquetFL's
 //! hardware-restricted client execution as a first-class feature.
+//!
+//! The library-first entrypoint is [`Experiment::builder`] (validated
+//! builder → [`Experiment`] → [`ExperimentReport`]); multi-run sweeps go
+//! through [`Campaign`].  The historical [`launch`] function and raw
+//! `ServerApp` composition keep working as compatibility shims
+//! (DESIGN.md §10).
 
 pub mod bouquet;
+pub mod campaign;
 pub mod client;
 pub mod clientmgr;
+pub mod events;
+pub mod experiment;
 pub mod history;
 pub mod launcher;
 pub mod params;
@@ -12,12 +21,15 @@ pub mod server;
 pub mod strategy;
 
 pub use bouquet::BouquetContext;
+pub use campaign::{Campaign, CampaignCell, CampaignReport, CellOutcome};
 pub use client::{ClientApp, ClientId, FitConfig, FitResult, SimClient, TrainClient};
 pub use clientmgr::{ClientManager, RoundLedger, Selection};
+pub use events::{FailureKind, FlEvent, FlObserver, HistoryObserver, ProgressLogger, TraceObserver};
+pub use experiment::{ExecutionMode, Experiment, ExperimentBuilder, ExperimentReport};
 pub use history::{History, RoundRecord};
 pub use launcher::{launch, HardwareSource, LaunchOptions, LaunchOutcome};
 pub use params::ParamVector;
-pub use scenario::{Scenario, SCENARIO_PRESETS};
+pub use scenario::{Scenario, MODEL_KINDS, SCENARIO_PRESETS};
 pub use server::{ServerApp, ServerConfig};
 pub use strategy::{
     AccOutput, AggAccumulator, BoundedBuffer, FedAdam, FedAvg, FedAvgM, FedProx, Krum,

@@ -14,6 +14,10 @@ use crate::util::json::Json;
 /// Names accepted by [`Scenario::preset`] (and `--scenario`).
 pub const SCENARIO_PRESETS: &[&str] = &["stable", "diurnal-mobile", "high-churn"];
 
+/// Availability model kinds the `model =` scenario key accepts
+/// (`bouquetfl list` prints these).
+pub const MODEL_KINDS: &[&str] = &["always-on", "diurnal", "battery", "exponential-churn"];
+
 /// Numeric scenario keys (model parameters, churn, deadline) — used to
 /// reject scenario files that contribute nothing recognisable.
 const SCENARIO_KEYS: &[&str] = &[
@@ -342,9 +346,7 @@ fn build_model(
         other => {
             return Err(ConfigError::InvalidValue {
                 key: "scenario.model".into(),
-                msg: format!(
-                    "unknown model '{other}' (always-on|diurnal|battery|exponential-churn)"
-                ),
+                msg: format!("unknown model '{other}' ({})", MODEL_KINDS.join("|")),
             })
         }
     })

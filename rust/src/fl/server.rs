@@ -34,6 +34,7 @@ use crate::sched::{ExecutorFactory, FitTask, ReorderBuffer, Scheduler, Trace, Wo
 use super::bouquet::BouquetContext;
 use super::client::{ClientApp, FitConfig, FitResult};
 use super::clientmgr::{ClientManager, RoundLedger, Selection};
+use super::events::{FailureKind, FlEvent, FlObserver, HistoryObserver, TraceObserver};
 use super::history::{History, RoundRecord};
 use super::params::ParamVector;
 use super::scenario::Scenario;
@@ -85,6 +86,13 @@ pub struct ServerApp {
     /// Federation dynamics (availability/churn/dropout/deadline); `None`
     /// runs the static engine exactly as before.
     dynamics: Option<FederationDynamics>,
+    /// A scenario attached via [`ServerApp::with_scenario`], compiled into
+    /// `dynamics` lazily at the first `run_from` — so the slot count always
+    /// reflects the *final* scheduler, whatever order the `with_*` calls
+    /// came in.
+    scenario: Option<Scenario>,
+    /// User subscribers to the typed event stream (`fl::events`).
+    observers: Vec<Box<dyn FlObserver>>,
     pub trace: Trace,
 }
 
@@ -114,6 +122,8 @@ impl ServerApp {
             workers: 1,
             executor_factory: None,
             dynamics: None,
+            scenario: None,
+            observers: Vec::new(),
             trace: Trace::default(),
         }
     }
@@ -143,22 +153,44 @@ impl ServerApp {
     /// Attach a federation-dynamics scenario (SCENARIOS.md).  A static
     /// scenario (the `stable` preset) compiles to nothing, so the engine
     /// output stays bit-identical to a scenario-less run.
+    ///
+    /// The scenario is compiled into runtime dynamics at the first
+    /// `run_from`, **not** here — the dynamics slot count must reflect the
+    /// scheduler the run actually uses, so `with_scenario` /
+    /// `with_scheduler` / `with_round_engine` may be chained in any order.
     pub fn with_scenario(mut self, scenario: &Scenario) -> Self {
-        self.dynamics = if scenario.is_static() {
-            None
-        } else {
-            Some(scenario.build_dynamics(
-                self.cfg.seed,
-                self.clients.len(),
-                self.scheduler.max_concurrency(),
-            ))
-        };
+        self.dynamics = None;
+        self.scenario = if scenario.is_static() { None } else { Some(scenario.clone()) };
         self
     }
 
     /// Attach pre-built dynamics directly (custom/hand-crafted traces).
+    /// Overrides any pending [`ServerApp::with_scenario`].
     pub fn with_dynamics(mut self, dynamics: FederationDynamics) -> Self {
+        self.scenario = None;
         self.dynamics = Some(dynamics);
+        self
+    }
+
+    /// Replace the emulated-timeline scheduler.  Isolation follows the
+    /// paper's rule: anything that lets restricted environments overlap
+    /// (an emulated slot count above 1, or real pool workers) forces
+    /// [`Isolation::Concurrent`].
+    pub fn with_scheduler(mut self, scheduler: Box<dyn Scheduler>) -> Self {
+        self.scheduler = scheduler;
+        self.env_cfg.isolation = if self.scheduler.max_concurrency() > 1 || self.workers > 1 {
+            Isolation::Concurrent
+        } else {
+            Isolation::Strict
+        };
+        self
+    }
+
+    /// Subscribe an observer to the typed event stream (`fl::events`).
+    /// Observers run in attach order after the built-in history/trace
+    /// subscribers.
+    pub fn with_observer(mut self, observer: Box<dyn FlObserver>) -> Self {
+        self.observers.push(observer);
         self
     }
 
@@ -187,20 +219,59 @@ impl ServerApp {
     pub fn run_from(
         &mut self,
         init: ParamVector,
-        mut executor: Option<&mut ModelExecutor>,
+        executor: Option<&mut ModelExecutor>,
         clock: &mut VirtualClock,
     ) -> Result<(ParamVector, History), FlError> {
+        // History and the emulated-timeline trace are event subscribers
+        // like any other — the round loop only emits `FlEvent`s.  The
+        // trace merges back onto the public field on every exit path, so
+        // a failed run keeps the spans of its completed rounds.
+        let mut recorder = HistoryObserver::default();
+        let mut tracer = TraceObserver::default();
+        let result = self.run_rounds(init, executor, clock, &mut recorder, &mut tracer);
+        self.trace.events.extend(tracer.into_trace().events);
+        result.map(|global| (global, recorder.into_history()))
+    }
+
+    /// The round loop behind [`ServerApp::run_from`]: emits the event
+    /// stream to the built-in subscribers and every attached observer.
+    fn run_rounds(
+        &mut self,
+        init: ParamVector,
+        mut executor: Option<&mut ModelExecutor>,
+        clock: &mut VirtualClock,
+        recorder: &mut HistoryObserver,
+        tracer: &mut TraceObserver,
+    ) -> Result<ParamVector, FlError> {
         if self.clients.is_empty() {
             return Err(FlError::NoClients { round: 0 });
         }
+        // Compile a pending scenario now — against the *final* scheduler's
+        // slot count and the final roster size — so the `with_*` chain is
+        // order-insensitive (the `with_scenario`-before-`with_scheduler`
+        // footgun is resolved here, not at call time).
+        if self.dynamics.is_none() {
+            if let Some(sc) = &self.scenario {
+                self.dynamics = Some(sc.build_dynamics(
+                    self.cfg.seed,
+                    self.clients.len(),
+                    self.scheduler.max_concurrency(),
+                ));
+            }
+        }
         let mut global = init;
-        let mut history = History::default();
         let mut manager = ClientManager::new(self.cfg.seed, self.cfg.selection);
         let pool = if self.workers > 1 {
             Some(WorkerPool::spawn(self.workers, self.executor_factory.clone()))
         } else {
             None
         };
+        notify(
+            recorder,
+            tracer,
+            &mut self.observers,
+            FlEvent::RunBegin { rounds: self.cfg.rounds, clients: self.clients.len() },
+        );
 
         for round in 0..self.cfg.rounds {
             let host_t0 = Instant::now();
@@ -232,7 +303,7 @@ impl ServerApp {
                             }
                             None => 0.0,
                         };
-                        history.push(RoundRecord {
+                        let record = RoundRecord {
                             round,
                             selected: Vec::new(),
                             failures: Vec::new(),
@@ -241,7 +312,14 @@ impl ServerApp {
                             eval_accuracy: None,
                             emu_round_s: wait,
                             host_round_s: host_t0.elapsed().as_secs_f64(),
-                        });
+                        };
+                        notify(
+                            recorder,
+                            tracer,
+                            &mut self.observers,
+                            FlEvent::RoundSkipped { round, wait_s: wait },
+                        );
+                        notify_round_end(recorder, tracer, &mut self.observers, record);
                         continue;
                     }
                     manager.select_from(&eligible)
@@ -249,6 +327,12 @@ impl ServerApp {
                 None => manager.select(self.clients.len()),
             };
             let fit_cfg = self.strategy.configure(round, &self.cfg.fit);
+            notify(
+                recorder,
+                tracer,
+                &mut self.observers,
+                FlEvent::RoundBegin { round, selected: &selected },
+            );
 
             // --- fit phase: stream completions into the accumulator ------
             let mut ledger =
@@ -286,6 +370,44 @@ impl ServerApp {
                 )?,
             }
 
+            // Per-client events, interleaved back into true selection
+            // order.  Successes and failures are each recorded in
+            // selection order (the reorder buffer guarantees fold order on
+            // any engine) and partition the selected roster, so a
+            // two-pointer merge over it restores the full sequence.
+            let (mut di, mut fi) = (0usize, 0usize);
+            for &id in &ledger.selected {
+                if di < ledger.durations.len() && ledger.durations[di].0 == id {
+                    let fit_s = ledger.durations[di].1;
+                    di += 1;
+                    notify(
+                        recorder,
+                        tracer,
+                        &mut self.observers,
+                        FlEvent::ClientDone { round, client: id, fit_s },
+                    );
+                } else if fi < ledger.failures.len() && ledger.failures[fi].client == id {
+                    let reason = &ledger.failures[fi].reason;
+                    notify(
+                        recorder,
+                        tracer,
+                        &mut self.observers,
+                        FlEvent::ClientFailed {
+                            round,
+                            client: id,
+                            kind: FailureKind::classify(reason),
+                            reason,
+                        },
+                    );
+                    fi += 1;
+                }
+            }
+            debug_assert!(
+                di == ledger.durations.len() && fi == ledger.failures.len(),
+                "per-client event merge skipped entries: the selection-order \
+                 invariant on ledger.durations/failures was violated"
+            );
+
             if ledger.successes() == 0 {
                 // An empty round the *gate* caused (dropouts/deadline) is
                 // an expected dynamics outcome; an empty round with no
@@ -318,7 +440,7 @@ impl ServerApp {
                 }
                 let selected = std::mem::take(&mut ledger.selected);
                 let failures = std::mem::take(&mut ledger.failures);
-                history.push(RoundRecord {
+                let record = RoundRecord {
                     round,
                     selected,
                     failures,
@@ -327,7 +449,8 @@ impl ServerApp {
                     eval_accuracy: None,
                     emu_round_s: empty_round_s,
                     host_round_s: host_t0.elapsed().as_secs_f64(),
-                });
+                };
+                notify_round_end(recorder, tracer, &mut self.observers, record);
                 continue;
             }
 
@@ -344,16 +467,24 @@ impl ServerApp {
             if let Some(d) = self.dynamics.as_mut() {
                 d.advance(schedule.round_s);
             }
-            let base = round_t0;
-            for &(c, s, e) in &schedule.spans {
-                self.trace.add(c, format!("round{round}"), base + s, base + e);
-            }
+            notify(
+                recorder,
+                tracer,
+                &mut self.observers,
+                FlEvent::RoundScheduled { round, base_s: round_t0, schedule: &schedule },
+            );
 
             // --- aggregate ------------------------------------------------
             let output = acc.finish()?;
             global = self
                 .strategy
                 .reduce(&global, output, executor.as_deref_mut())?;
+            notify(
+                recorder,
+                tracer,
+                &mut self.observers,
+                FlEvent::Aggregated { round, survivors: ledger.successes() },
+            );
 
             // --- evaluate -------------------------------------------------
             let (eval_loss, eval_accuracy) = if self.cfg.eval_every > 0
@@ -363,7 +494,15 @@ impl ServerApp {
                     .as_deref_mut()
                     .and_then(|ex| self.evaluate(ex, &global))
                 {
-                    Some((l, a)) => (Some(l), Some(a)),
+                    Some((l, a)) => {
+                        notify(
+                            recorder,
+                            tracer,
+                            &mut self.observers,
+                            FlEvent::Evaluated { round, loss: l, accuracy: a },
+                        );
+                        (Some(l), Some(a))
+                    }
                     None => (None, None),
                 }
             } else {
@@ -373,7 +512,7 @@ impl ServerApp {
             let train_loss = ledger.train_loss();
             let selected = std::mem::take(&mut ledger.selected);
             let failures = std::mem::take(&mut ledger.failures);
-            history.push(RoundRecord {
+            let record = RoundRecord {
                 round,
                 selected,
                 failures,
@@ -382,9 +521,16 @@ impl ServerApp {
                 eval_accuracy,
                 emu_round_s: schedule.round_s,
                 host_round_s: host_t0.elapsed().as_secs_f64(),
-            });
+            };
+            notify_round_end(recorder, tracer, &mut self.observers, record);
         }
-        Ok((global, history))
+        notify(
+            recorder,
+            tracer,
+            &mut self.observers,
+            FlEvent::RunEnd { rounds: self.cfg.rounds },
+        );
+        Ok(global)
     }
 
     /// Centralised eval over the held-out set (batched by the compiled
@@ -429,6 +575,39 @@ impl ServerApp {
 /// round as one unit — either both present (scenario active) or neither,
 /// so gating can never be half-wired.
 type DynGate<'a> = Option<(&'a mut FederationDynamics, &'a mut RoundGate)>;
+
+/// Deliver one event to the built-in subscribers (history first, then
+/// trace) and then to every user observer in attach order.
+fn notify(
+    recorder: &mut HistoryObserver,
+    tracer: &mut TraceObserver,
+    user: &mut [Box<dyn FlObserver>],
+    event: FlEvent<'_>,
+) {
+    recorder.on_event(&event);
+    tracer.on_event(&event);
+    for observer in user.iter_mut() {
+        observer.on_event(&event);
+    }
+}
+
+/// End a round: broadcast `RoundEnd` to the trace subscriber and user
+/// observers, then hand the *owned* record to the history recorder —
+/// same observable sequence as [`notify`], without the per-round deep
+/// clone the borrowing event path would force on the recorder.
+fn notify_round_end(
+    recorder: &mut HistoryObserver,
+    tracer: &mut TraceObserver,
+    user: &mut [Box<dyn FlObserver>],
+    record: RoundRecord,
+) {
+    let event = FlEvent::RoundEnd { record: &record };
+    tracer.on_event(&event);
+    for observer in user.iter_mut() {
+        observer.on_event(&event);
+    }
+    recorder.push(record);
+}
 
 /// The paper-default engine: fits run sequentially in this thread,
 /// each finished client folded into the accumulator immediately.

@@ -56,6 +56,11 @@ impl Strategy for Krum {
         "krum"
     }
 
+    /// Krum's guarantee needs `n > 2f + 2` honest-majority participants.
+    fn min_clients(&self) -> usize {
+        2 * self.f + 3
+    }
+
     fn aggregate(
         &mut self,
         _global: &ParamVector,

@@ -12,6 +12,12 @@
 //! * **Batch** (`Strategy::aggregate`): the original collect-then-combine
 //!   API, kept as the differential-testing oracle and for callers that
 //!   already hold a `Vec<FitResult>`.
+//!
+//! Strategies are also resolvable **by name** through the crate-wide
+//! registry ([`register`] / [`by_name`] / [`names`]): the CLI `--strategy`
+//! flag, `[federation] strategy` config keys and `ExperimentBuilder`
+//! all share this one resolution path, and downstream crates can plug in
+//! custom strategies without touching core code (DESIGN.md §10).
 
 mod accumulator;
 mod fedadam;
@@ -29,11 +35,68 @@ pub use fedprox::FedProx;
 pub use krum::Krum;
 pub use trimmed::TrimmedMean;
 
+use std::collections::BTreeMap;
+use std::sync::{Arc, OnceLock, RwLock};
+
 use crate::error::FlError;
 use crate::runtime::ModelExecutor;
 
 use super::client::{FitConfig, FitResult};
 use super::params::ParamVector;
+
+/// Builds a fresh boxed strategy instance (registry entry).
+pub type StrategyFactory = Arc<dyn Fn() -> Box<dyn Strategy> + Send + Sync>;
+
+fn registry() -> &'static RwLock<BTreeMap<String, StrategyFactory>> {
+    static REG: OnceLock<RwLock<BTreeMap<String, StrategyFactory>>> = OnceLock::new();
+    REG.get_or_init(|| {
+        let mut m: BTreeMap<String, StrategyFactory> = BTreeMap::new();
+        m.insert(
+            "fedavg".into(),
+            Arc::new(|| Box::new(FedAvg) as Box<dyn Strategy>) as StrategyFactory,
+        );
+        m.insert(
+            "fedprox".into(),
+            Arc::new(|| Box::new(FedProx::new(0.01)) as Box<dyn Strategy>) as StrategyFactory,
+        );
+        m.insert(
+            "fedavgm".into(),
+            Arc::new(|| Box::new(FedAvgM::new(0.9)) as Box<dyn Strategy>) as StrategyFactory,
+        );
+        m.insert(
+            "fedadam".into(),
+            Arc::new(|| Box::new(FedAdam::new(0.02)) as Box<dyn Strategy>) as StrategyFactory,
+        );
+        m.insert(
+            "trimmed-mean".into(),
+            Arc::new(|| Box::new(TrimmedMean::new(1)) as Box<dyn Strategy>) as StrategyFactory,
+        );
+        m.insert(
+            "krum".into(),
+            Arc::new(|| Box::new(Krum::new(1, 3)) as Box<dyn Strategy>) as StrategyFactory,
+        );
+        RwLock::new(m)
+    })
+}
+
+/// Register (or replace) a strategy under `name`.  Registered names are
+/// immediately resolvable by the CLI, config files, `ExperimentBuilder`
+/// and [`by_name`].
+pub fn register(name: &str, factory: StrategyFactory) {
+    registry().write().unwrap().insert(name.to_string(), factory);
+}
+
+/// Build a fresh instance of the strategy registered under `name`.
+pub fn by_name(name: &str) -> Option<Box<dyn Strategy>> {
+    let reg = registry().read().unwrap();
+    reg.get(name).map(|factory| factory())
+}
+
+/// All registered strategy names, sorted (built-ins plus anything added
+/// via [`register`]).
+pub fn names() -> Vec<String> {
+    registry().read().unwrap().keys().cloned().collect()
+}
 
 /// Server-side aggregation strategy.
 ///
@@ -46,6 +109,15 @@ use super::params::ParamVector;
 /// not by `launch()` federations.
 pub trait Strategy {
     fn name(&self) -> &'static str;
+
+    /// Minimum per-round participants for the strategy's guarantee to be
+    /// meaningful (e.g. Krum's Byzantine bound needs `n > 2f + 2`,
+    /// trimmed mean needs `n > 2·trim`).  `ExperimentBuilder::build`
+    /// rejects configurations below this bound; the legacy `launch()` path
+    /// keeps its historical lenient behaviour.
+    fn min_clients(&self) -> usize {
+        1
+    }
 
     /// Per-round fit configuration (e.g. FedProx sets `prox_mu`).
     fn configure(&self, round: u32, base: &FitConfig) -> FitConfig {

@@ -30,6 +30,11 @@ impl Strategy for TrimmedMean {
         "trimmed-mean"
     }
 
+    /// Trimming `trim` from each tail must leave at least one value.
+    fn min_clients(&self) -> usize {
+        2 * self.trim + 1
+    }
+
     fn aggregate(
         &mut self,
         _global: &ParamVector,

@@ -17,8 +17,9 @@ use bouquetfl::analysis::{claims, fig2, report};
 use bouquetfl::data::PartitionScheme;
 use bouquetfl::emu::EmulationMode;
 use bouquetfl::fl::launcher::{launch, HardwareSource, LaunchOptions};
-use bouquetfl::fl::{Scenario, Selection};
+use bouquetfl::fl::{strategy, Scenario, Selection, MODEL_KINDS, SCENARIO_PRESETS};
 use bouquetfl::hardware::profile::PRESET_NAMES;
+use bouquetfl::sched;
 use bouquetfl::hardware::sampler::{HardwareSampler, SamplerConfig};
 use bouquetfl::hardware::{preset, HardwareProfile, CPU_DB, GPU_DB};
 use bouquetfl::util::args::{render_help, Args, OptSpec};
@@ -35,6 +36,7 @@ fn main() -> Result<()> {
         "oom" => cmd_oom(),
         "dataloader" => cmd_dataloader(&raw),
         "ram" => cmd_ram(&raw),
+        "list" => cmd_list(&raw),
         "list-hw" => cmd_list_hw(&raw),
         "help" | "--help" | "-h" => {
             print_global_help();
@@ -58,8 +60,52 @@ fn print_global_help() {
          \x20 oom              OOM matrix: batch size x GPU VRAM (paper §4.2)\n\
          \x20 dataloader       CPU data-loading sweep (paper §4.2)\n\
          \x20 ram              RAM-size sweep (paper §4.2)\n\
+         \x20 list             list registered strategies / schedulers / scenario presets / hardware\n\
          \x20 list-hw          list known GPUs / CPUs / profile presets"
     );
+}
+
+fn cmd_list(raw: &[String]) -> Result<()> {
+    let specs = vec![OptSpec {
+        name: "help",
+        help: "show help",
+        takes_value: false,
+        default: None,
+    }];
+    let args = Args::parse(&raw[1..], &specs)?;
+    if args.get_bool("help") {
+        println!(
+            "{}",
+            render_help(
+                "bouquetfl list",
+                "list every registered component (registries + presets)",
+                &specs
+            )
+        );
+        return Ok(());
+    }
+    println!("strategies (--strategy / [federation] strategy):");
+    for name in strategy::names() {
+        println!("  {name}");
+    }
+    println!("\nschedulers (ExperimentBuilder::scheduler):");
+    for name in sched::names() {
+        println!("  {name}");
+    }
+    println!("\nscenario presets (--scenario, SCENARIOS.md):");
+    for &name in SCENARIO_PRESETS {
+        let sc = Scenario::preset(name).expect("preset exists");
+        println!("  {}", sc.describe());
+    }
+    println!("\navailability models ([scenario] model):");
+    for &kind in MODEL_KINDS {
+        println!("  {kind}");
+    }
+    println!("\nhardware profile presets (--profiles, see also list-hw):");
+    for &name in PRESET_NAMES {
+        println!("  {}", preset(name)?.describe());
+    }
+    Ok(())
 }
 
 fn run_specs() -> Vec<OptSpec> {
@@ -71,7 +117,7 @@ fn run_specs() -> Vec<OptSpec> {
         OptSpec { name: "batch", help: "local batch size", takes_value: true, default: Some("32") },
         OptSpec { name: "local-steps", help: "local steps per round", takes_value: true, default: Some("4") },
         OptSpec { name: "lr", help: "learning rate", takes_value: true, default: Some("0.02") },
-        OptSpec { name: "strategy", help: "fedavg|fedprox|fedavgm|fedadam|trimmed-mean|krum", takes_value: true, default: Some("fedavg") },
+        OptSpec { name: "strategy", help: "aggregation strategy by registered name (`bouquetfl list` prints them)", takes_value: true, default: Some("fedavg") },
         OptSpec { name: "alpha", help: "Dirichlet non-IID alpha", takes_value: true, default: Some("0.5") },
         OptSpec { name: "fraction", help: "client fraction per round", takes_value: true, default: Some("1.0") },
         OptSpec { name: "parallel", help: "max concurrent clients on the EMULATED timeline (1 = sequential)", takes_value: true, default: Some("1") },

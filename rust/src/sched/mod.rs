@@ -33,8 +33,64 @@ pub use dynamics::{
 pub use pool::{ExecutorFactory, FitOutcome, FitTask, ReorderBuffer, WorkerPool};
 pub use trace::{Trace, TraceEvent};
 
+use std::collections::BTreeMap;
+use std::sync::{Arc, OnceLock, RwLock};
+
 /// Per-client (client id, emulated fit seconds) durations of one round.
 pub type Durations = Vec<(u32, f64)>;
+
+/// Builds a boxed scheduler for a given emulated slot count (registry
+/// entry).  The slot argument is the `--parallel` value; schedulers that
+/// ignore it (like [`Sequential`]) simply discard it.
+pub type SchedulerFactory = Arc<dyn Fn(usize) -> Box<dyn Scheduler> + Send + Sync>;
+
+fn registry() -> &'static RwLock<BTreeMap<String, SchedulerFactory>> {
+    static REG: OnceLock<RwLock<BTreeMap<String, SchedulerFactory>>> = OnceLock::new();
+    REG.get_or_init(|| {
+        let mut m: BTreeMap<String, SchedulerFactory> = BTreeMap::new();
+        m.insert(
+            "sequential".into(),
+            Arc::new(|_slots| Box::new(Sequential) as Box<dyn Scheduler>) as SchedulerFactory,
+        );
+        m.insert(
+            "limited-parallel".into(),
+            Arc::new(|slots| {
+                Box::new(LimitedParallel::new(slots.max(1))) as Box<dyn Scheduler>
+            }) as SchedulerFactory,
+        );
+        RwLock::new(m)
+    })
+}
+
+/// Register (or replace) a scheduler under `name`; resolvable from the
+/// CLI, config files and `ExperimentBuilder::scheduler`.
+pub fn register(name: &str, factory: SchedulerFactory) {
+    registry().write().unwrap().insert(name.to_string(), factory);
+}
+
+/// Build the scheduler registered under `name` with `slots` emulated
+/// execution slots.
+pub fn by_name(name: &str, slots: usize) -> Option<Box<dyn Scheduler>> {
+    let reg = registry().read().unwrap();
+    reg.get(name).map(|factory| factory(slots))
+}
+
+/// All registered scheduler names, sorted (built-ins plus anything added
+/// via [`register`]).
+pub fn names() -> Vec<String> {
+    registry().read().unwrap().keys().cloned().collect()
+}
+
+/// The default name-less resolution the launcher has always used:
+/// `max_parallel > 1` packs onto that many emulated slots, otherwise the
+/// paper's strict sequential schedule.
+pub fn for_parallelism(max_parallel: usize) -> Box<dyn Scheduler> {
+    if max_parallel > 1 {
+        Box::new(LimitedParallel::new(max_parallel))
+    } else {
+        Box::new(Sequential)
+    }
+}
 
 /// A computed round schedule.
 #[derive(Debug, Clone)]

@@ -56,10 +56,14 @@ impl Value {
 }
 
 /// Parsed config: section -> key -> value.  Keys before any `[section]`
-/// land in the "" (root) section.
+/// land in the "" (root) section.  Source line numbers are kept per
+/// section and key so downstream validation (unknown-key warnings,
+/// range errors) can point at the offending line.
 #[derive(Debug, Default, Clone)]
 pub struct Cfg {
     sections: BTreeMap<String, BTreeMap<String, Value>>,
+    section_lines: BTreeMap<String, usize>,
+    key_lines: BTreeMap<String, BTreeMap<String, usize>>,
 }
 
 impl Cfg {
@@ -80,6 +84,7 @@ impl Cfg {
                 }
                 section = line[1..line.len() - 1].trim().to_string();
                 cfg.sections.entry(section.clone()).or_default();
+                cfg.section_lines.entry(section.clone()).or_insert(lineno + 1);
                 continue;
             }
             let (key, val) = line.split_once('=').ok_or(ConfigError::Parse {
@@ -94,6 +99,10 @@ impl Cfg {
                 .entry(section.clone())
                 .or_default()
                 .insert(key.trim().to_string(), value);
+            cfg.key_lines
+                .entry(section.clone())
+                .or_default()
+                .insert(key.trim().to_string(), lineno + 1);
         }
         Ok(cfg)
     }
@@ -112,6 +121,73 @@ impl Cfg {
 
     pub fn sections(&self) -> impl Iterator<Item = &String> {
         self.sections.keys()
+    }
+
+    /// Keys present in `section`, in sorted order.
+    pub fn keys(&self, section: &str) -> Vec<&str> {
+        self.sections
+            .get(section)
+            .map(|m| m.keys().map(String::as_str).collect())
+            .unwrap_or_default()
+    }
+
+    /// Source line of `[section]`'s header (1-based), if it appeared.
+    pub fn section_line(&self, section: &str) -> Option<usize> {
+        self.section_lines.get(section).copied()
+    }
+
+    /// Source line of `section.key` (1-based).
+    pub fn key_line(&self, section: &str, key: &str) -> Option<usize> {
+        self.key_lines.get(section)?.get(key).copied()
+    }
+
+    /// Check the parsed config against a vocabulary of
+    /// `(section, known keys)` pairs and describe every unknown section or
+    /// key — with its source line and a did-you-mean suggestion — instead
+    /// of silently ignoring it.  Sections absent from `schema` are
+    /// reported wholesale; keys are checked within known sections.
+    pub fn unknown_entries(&self, schema: &[(&str, &[&str])]) -> Vec<String> {
+        let mut warnings = Vec::new();
+        for (section, keys) in &self.sections {
+            let known = schema.iter().find(|(name, _)| name == section);
+            match known {
+                None => {
+                    let line = self
+                        .section_line(section)
+                        .map(|l| format!("config line {l}: "))
+                        .unwrap_or_default();
+                    let section_names: Vec<&str> =
+                        schema.iter().map(|(name, _)| *name).collect();
+                    let hint = suggest(section, &section_names)
+                        .map(|s| format!("; did you mean [{s}]?"))
+                        .unwrap_or_default();
+                    let shown = if section.is_empty() {
+                        "keys outside any [section]".to_string()
+                    } else {
+                        format!("unknown section [{section}]")
+                    };
+                    warnings.push(format!("{line}{shown}{hint}"));
+                }
+                Some((_, known_keys)) => {
+                    for key in keys.keys() {
+                        if known_keys.contains(&key.as_str()) {
+                            continue;
+                        }
+                        let line = self
+                            .key_line(section, key)
+                            .map(|l| format!("config line {l}: "))
+                            .unwrap_or_default();
+                        let hint = suggest(key, known_keys)
+                            .map(|s| format!("; did you mean '{s}'?"))
+                            .unwrap_or_default();
+                        warnings.push(format!(
+                            "{line}unknown key '{key}' in [{section}]{hint}"
+                        ));
+                    }
+                }
+            }
+        }
+        warnings
     }
 
     pub fn str_or(&self, section: &str, key: &str, default: &str) -> String {
@@ -150,6 +226,35 @@ impl Cfg {
             .and_then(|v| v.as_str().map(String::from))
             .ok_or_else(|| ConfigError::MissingKey(format!("[{section}] {key}")))
     }
+}
+
+/// The closest candidate within an edit distance a plausible typo would
+/// produce (≤ 2, or a third of the word for long names).
+fn suggest<'a>(word: &str, candidates: &[&'a str]) -> Option<&'a str> {
+    let budget = (word.len() / 3).max(2);
+    candidates
+        .iter()
+        .map(|c| (levenshtein(word, c), *c))
+        .min_by_key(|&(d, _)| d)
+        .filter(|&(d, _)| d <= budget)
+        .map(|(_, c)| c)
+}
+
+/// Classic two-row Levenshtein distance.
+fn levenshtein(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, &ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, &cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
 }
 
 fn strip_comment(line: &str) -> &str {
@@ -272,5 +377,48 @@ counts = [3, 1]
     fn empty_list() {
         let c = Cfg::parse("[a]\nxs = []").unwrap();
         assert_eq!(c.get("a", "xs").unwrap().as_list().unwrap().len(), 0);
+    }
+
+    #[test]
+    fn records_key_and_section_lines() {
+        let c = Cfg::parse(SAMPLE).unwrap();
+        assert_eq!(c.section_line("federation"), Some(3));
+        assert_eq!(c.key_line("federation", "lr"), Some(5));
+        assert_eq!(c.key_line("hardware", "counts"), Some(11));
+        assert_eq!(c.key_line("federation", "nope"), None);
+        assert_eq!(c.key_line("nope", "lr"), None);
+    }
+
+    #[test]
+    fn levenshtein_basics() {
+        assert_eq!(levenshtein("", "abc"), 3);
+        assert_eq!(levenshtein("abc", "abc"), 0);
+        assert_eq!(levenshtein("workrs", "workers"), 1);
+        assert_eq!(levenshtein("kitten", "sitting"), 3);
+    }
+
+    #[test]
+    fn unknown_entries_warn_with_lines_and_suggestions() {
+        const SCHEMA: &[(&str, &[&str])] =
+            &[("federation", &["rounds", "workers", "lr"]), ("data", &["alpha"])];
+        let c = Cfg::parse(
+            "[federation]\nrounds = 2\nworkrs = 4\n\n[dat]\nalpha = 0.5",
+        )
+        .unwrap();
+        let w = c.unknown_entries(SCHEMA);
+        assert_eq!(w.len(), 2, "{w:?}");
+        // Sections are visited in sorted order: [dat] before [federation].
+        assert!(w[0].contains("line 5") && w[0].contains("[dat]"), "{}", w[0]);
+        assert!(w[0].contains("did you mean [data]"), "{}", w[0]);
+        assert!(w[1].contains("line 3") && w[1].contains("workrs"), "{}", w[1]);
+        assert!(w[1].contains("did you mean 'workers'"), "{}", w[1]);
+        // A clean config warns about nothing.
+        let clean = Cfg::parse("[federation]\nrounds = 2\nlr = 0.1").unwrap();
+        assert!(clean.unknown_entries(SCHEMA).is_empty());
+        // Root-section keys are reported as outside any section.
+        let root = Cfg::parse("rounds = 2").unwrap();
+        let w = root.unknown_entries(SCHEMA);
+        assert_eq!(w.len(), 1);
+        assert!(w[0].contains("outside any [section]"), "{}", w[0]);
     }
 }

@@ -1,0 +1,506 @@
+//! The library-first experiment API (DESIGN.md §10):
+//!
+//! * `Experiment::builder()` must be **bit-identical** to the historical
+//!   `launch()` path for every scenario preset × `--workers {1,4}`.
+//! * Registries must round-trip every built-in component and accept
+//!   downstream registrations.
+//! * The `with_scenario`-before-`with_scheduler` ordering footgun must be
+//!   gone: dynamics compile against the *final* scheduler at run time.
+//! * A campaign sweep must run end-to-end from one API call and emit one
+//!   JSONL row per cell, with coordinate-derived deterministic seeds.
+//! * The typed event stream must arrive complete and in order.
+
+use std::sync::{Arc, Mutex};
+
+use bouquetfl::emu::VirtualClock;
+use bouquetfl::error::FlError;
+use bouquetfl::fl::launcher::{launch, HardwareSource, LaunchOptions};
+use bouquetfl::fl::strategy::{self, StrategyFactory};
+use bouquetfl::fl::{
+    Campaign, ClientApp, Experiment, FedAvg, FitResult, FlEvent, FlObserver, History,
+    ParamVector, Scenario, ServerApp, ServerConfig, SimClient, Strategy, SCENARIO_PRESETS,
+};
+use bouquetfl::hardware::HardwareProfile;
+use bouquetfl::modelcost::resnet18_cifar;
+use bouquetfl::runtime::ModelExecutor;
+use bouquetfl::sched::dynamics::AvailabilityModel;
+use bouquetfl::sched::{self, LimitedParallel, Scheduler, Sequential, Trace};
+use bouquetfl::util::json::Json;
+
+/// Serialises every test that spawns restricted environments: with
+/// `Isolation::Strict` (workers = 1, sequential scheduler) the env
+/// counter is process-global, and cargo runs test fns on many threads.
+static ENV_LOCK: Mutex<()> = Mutex::new(());
+
+fn env_guard() -> std::sync::MutexGuard<'static, ()> {
+    ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+const PROFILES: [&str; 3] = ["gtx-1060", "rtx-3060", "gtx-1650"];
+
+/// Real-execution tests need the AOT artifact set; mirror the rest of the
+/// suite's environment instead of failing where `fl_pipeline.rs` would
+/// fail too.
+fn runtime_available() -> bool {
+    ModelExecutor::new(&bouquetfl::runtime::default_dir()).is_ok()
+}
+
+fn tiny_opts() -> LaunchOptions {
+    LaunchOptions {
+        clients: 3,
+        rounds: 2,
+        samples_per_client: 48,
+        eval_samples: 128,
+        batch: 16,
+        local_steps: 2,
+        lr: 0.02,
+        eval_every: 2,
+        seed: 7,
+        hardware: HardwareSource::Manual(PROFILES.iter().map(|s| s.to_string()).collect()),
+        ..Default::default()
+    }
+}
+
+fn assert_identical(
+    label: &str,
+    (ga, ha, ta): (&ParamVector, &History, &Trace),
+    (gb, hb, tb): (&ParamVector, &History, &Trace),
+) {
+    assert_eq!(ga.len(), gb.len(), "{label}: param dim");
+    for (a, b) in ga.as_slice().iter().zip(gb.as_slice()) {
+        assert_eq!(a.to_bits(), b.to_bits(), "{label}: aggregate drifted");
+    }
+    assert_eq!(ha.rounds.len(), hb.rounds.len(), "{label}: round count");
+    for (r1, r2) in ha.rounds.iter().zip(&hb.rounds) {
+        assert_eq!(r1.selected, r2.selected, "{label}: round {}", r1.round);
+        assert_eq!(
+            r1.train_loss.to_bits(),
+            r2.train_loss.to_bits(),
+            "{label}: round {}",
+            r1.round
+        );
+        assert_eq!(
+            r1.emu_round_s.to_bits(),
+            r2.emu_round_s.to_bits(),
+            "{label}: round {}",
+            r1.round
+        );
+        assert_eq!(
+            r1.eval_loss.map(f32::to_bits),
+            r2.eval_loss.map(f32::to_bits),
+            "{label}: round {}",
+            r1.round
+        );
+        assert_eq!(
+            r1.eval_accuracy.map(f32::to_bits),
+            r2.eval_accuracy.map(f32::to_bits),
+            "{label}: round {}",
+            r1.round
+        );
+        assert_eq!(r1.failures.len(), r2.failures.len(), "{label}: round {}", r1.round);
+        for (f1, f2) in r1.failures.iter().zip(&r2.failures) {
+            assert_eq!(f1.client, f2.client, "{label}");
+            assert_eq!(f1.reason, f2.reason, "{label}");
+        }
+    }
+    assert_eq!(ta.events, tb.events, "{label}: trace spans drifted");
+}
+
+// ---------------------------------------------------------------------
+// Tentpole acceptance: builder vs launch(), every preset × workers {1,4}.
+// ---------------------------------------------------------------------
+
+#[test]
+fn builder_is_bit_identical_to_launch_for_every_preset_and_worker_count() {
+    let _guard = env_guard();
+    if !runtime_available() {
+        eprintln!("skipping: no AOT artifacts in this environment");
+        return;
+    }
+    for &preset in SCENARIO_PRESETS {
+        for workers in [1usize, 4] {
+            let label = format!("{preset}/workers={workers}");
+            let sc = Scenario::preset(preset).unwrap();
+
+            let mut opts = tiny_opts();
+            opts.workers = workers;
+            opts.scenario = (!sc.is_static()).then(|| sc.clone());
+            let old = launch(&opts).unwrap_or_else(|e| panic!("{label}: launch: {e}"));
+
+            // Builder path, deliberately in a scrambled setter order (the
+            // scenario lands before workers/strategy — the old footgun).
+            let new = Experiment::builder()
+                .scenario(sc)
+                .workers(workers)
+                .samples_per_client(48)
+                .eval_samples(128)
+                .batch(16)
+                .local_steps(2)
+                .lr(0.02)
+                .eval_every(2)
+                .seed(7)
+                .clients(3)
+                .profiles(&PROFILES)
+                .strategy("fedavg")
+                .rounds(2)
+                .build()
+                .unwrap_or_else(|e| panic!("{label}: build: {e}"))
+                .run()
+                .unwrap_or_else(|e| panic!("{label}: run: {e}"));
+
+            assert_identical(
+                &label,
+                (&old.global, &old.history, &old.trace),
+                (&new.global, &new.history, &new.trace),
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Registries.
+// ---------------------------------------------------------------------
+
+struct NullStrategy;
+
+impl Strategy for NullStrategy {
+    fn name(&self) -> &'static str {
+        "null"
+    }
+
+    fn aggregate(
+        &mut self,
+        global: &ParamVector,
+        _results: &[FitResult],
+        _executor: Option<&mut ModelExecutor>,
+    ) -> Result<ParamVector, FlError> {
+        Ok(global.clone())
+    }
+}
+
+#[test]
+fn registries_round_trip_every_builtin_component() {
+    for name in strategy::names() {
+        let s = strategy::by_name(&name)
+            .unwrap_or_else(|| panic!("registered strategy '{name}' must resolve"));
+        assert_eq!(s.name(), name, "strategy registry key must match Strategy::name");
+    }
+    assert!(strategy::names().len() >= 6, "all six built-ins registered");
+    assert!(strategy::by_name("does-not-exist").is_none());
+
+    for name in sched::names() {
+        let s = sched::by_name(&name, 3)
+            .unwrap_or_else(|| panic!("registered scheduler '{name}' must resolve"));
+        assert_eq!(s.name(), name, "scheduler registry key must match Scheduler::name");
+    }
+    assert_eq!(sched::by_name("limited-parallel", 4).unwrap().max_concurrency(), 4);
+    assert_eq!(sched::for_parallelism(1).name(), "sequential");
+    assert_eq!(sched::for_parallelism(4).max_concurrency(), 4);
+}
+
+#[test]
+fn downstream_strategy_registration_reaches_every_resolution_path() {
+    strategy::register(
+        "null",
+        Arc::new(|| Box::new(NullStrategy) as Box<dyn Strategy>) as StrategyFactory,
+    );
+    assert!(strategy::names().contains(&"null".to_string()));
+    assert_eq!(strategy::by_name("null").unwrap().name(), "null");
+    // The builder resolves it like any built-in.
+    let exp = Experiment::builder()
+        .profiles(&["gtx-1060"])
+        .clients(2)
+        .strategy("null")
+        .build()
+        .unwrap();
+    assert_eq!(exp.options().strategy, "null");
+    // And the legacy options path shares the same registry.
+    let opts = LaunchOptions { strategy: "null".into(), ..Default::default() };
+    assert_eq!(opts.strategy_box().unwrap().name(), "null");
+}
+
+// ---------------------------------------------------------------------
+// Ordering footgun: scenario slots must come from the FINAL scheduler.
+// ---------------------------------------------------------------------
+
+fn sim_fleet(n: u32) -> Vec<Box<dyn ClientApp>> {
+    (0..n)
+        .map(|i| {
+            Box::new(SimClient::new(i, HardwareProfile::paper_host(), 64, resnet18_cifar()))
+                as Box<dyn ClientApp>
+        })
+        .collect()
+}
+
+fn sim_server(n: u32, rounds: u32) -> ServerApp {
+    let mut cfg = ServerConfig {
+        rounds,
+        eval_every: 0,
+        seed: 11,
+        ..Default::default()
+    };
+    cfg.fit.batch = 16;
+    ServerApp::new(
+        cfg,
+        HardwareProfile::paper_host(),
+        Box::new(FedAvg),
+        Box::new(Sequential),
+        sim_fleet(n),
+    )
+}
+
+fn run_sim(mut server: ServerApp) -> (ParamVector, History, Trace) {
+    let mut clock = VirtualClock::fast_forward();
+    let (global, history) =
+        server.run_from(ParamVector::zeros(8), None, &mut clock).expect("sim run");
+    let trace = std::mem::take(&mut server.trace);
+    (global, history, trace)
+}
+
+#[test]
+fn with_scenario_before_with_scheduler_uses_the_final_slot_count() {
+    let _guard = env_guard();
+    // Measure one client's emulated fit duration d (identical hardware
+    // across the fleet => identical durations).
+    let (_, probe, _) = run_sim(sim_server(1, 1));
+    let d = probe.rounds[0].emu_round_s;
+    assert!(d > 0.0);
+
+    // Deadline between d and 2d: packed onto 3 slots, clients 0-2 finish
+    // at d (kept) and 3-5 at 2d (late).  Packed onto 1 slot — what the old
+    // eager compile would have used for the scenario-first order — only
+    // client 0 would survive.
+    let sc = Scenario {
+        name: "probe-deadline".into(),
+        availability: AvailabilityModel::AlwaysOn,
+        join_prob: 0.0,
+        leave_prob: 0.0,
+        round_deadline_s: 1.5 * d,
+    };
+
+    // The previously-wrong order: scenario attached while the default
+    // sequential scheduler was still in place.
+    let scenario_first = sim_server(6, 2)
+        .with_scenario(&sc)
+        .with_scheduler(Box::new(LimitedParallel::new(3)));
+    // The canonical order.
+    let scheduler_first = sim_server(6, 2)
+        .with_scheduler(Box::new(LimitedParallel::new(3)))
+        .with_scenario(&sc);
+
+    let a = run_sim(scenario_first);
+    let b = run_sim(scheduler_first);
+    assert_identical("footgun", (&a.0, &a.1, &a.2), (&b.0, &b.1, &b.2));
+
+    // And both reflect 3 emulated slots: exactly clients 3-5 are late.
+    for r in &a.1.rounds {
+        assert_eq!(r.selected.len(), 6, "round {}", r.round);
+        let late: Vec<u32> = r.failures.iter().map(|f| f.client).collect();
+        assert_eq!(late, vec![3, 4, 5], "round {}: slot count was wrong", r.round);
+        assert!(
+            r.failures.iter().all(|f| f.reason.starts_with("deadline:")),
+            "round {}: {:?}",
+            r.round,
+            r.failures
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Simulated experiments: worker invariance through the builder.
+// ---------------------------------------------------------------------
+
+#[test]
+fn simulated_experiments_are_worker_count_invariant() {
+    let _guard = env_guard();
+    let run = |workers: usize| {
+        Experiment::builder()
+            .profiles(&["gtx-1060", "rtx-3060"])
+            .clients(6)
+            .rounds(3)
+            .batch(16)
+            .samples_per_client(32)
+            .eval_every(0)
+            .seed(9)
+            .scenario(Scenario::preset("high-churn").unwrap())
+            .workers(workers)
+            .simulated(48)
+            .build()
+            .unwrap()
+            .run()
+            .unwrap()
+    };
+    let a = run(1);
+    let b = run(4);
+    assert_identical(
+        "sim-workers",
+        (&a.global, &a.history, &a.trace),
+        (&b.global, &b.history, &b.trace),
+    );
+    assert_eq!(a.scenario, "high-churn");
+    assert_eq!(a.strategy, "fedavg");
+}
+
+// ---------------------------------------------------------------------
+// Campaigns: one call, per-cell JSONL, deterministic cell seeds.
+// ---------------------------------------------------------------------
+
+#[test]
+fn campaign_runs_end_to_end_and_emits_one_jsonl_row_per_cell() {
+    let _guard = env_guard();
+    let base = LaunchOptions {
+        clients: 4,
+        rounds: 2,
+        samples_per_client: 32,
+        batch: 16,
+        eval_every: 0,
+        hardware: HardwareSource::Manual(vec!["gtx-1060".into(), "rtx-3060".into()]),
+        ..Default::default()
+    };
+    let campaign = Campaign::new("smoke", base)
+        .seeds(&[1, 2])
+        .strategies(&["fedavg", "fedprox"])
+        .scenarios(&[
+            Scenario::preset("stable").unwrap(),
+            Scenario::preset("high-churn").unwrap(),
+        ])
+        .simulated(64);
+
+    let report = campaign.run();
+    assert_eq!(report.cells.len(), 8);
+    assert_eq!(report.succeeded(), 8, "{}", report.to_jsonl());
+
+    let jsonl = report.to_jsonl();
+    let rows: Vec<Json> = jsonl
+        .lines()
+        .map(|line| Json::parse(line).expect("every row is valid JSON"))
+        .collect();
+    assert_eq!(rows.len(), 8);
+    for row in &rows {
+        assert_eq!(row.get("rounds").unwrap().as_u64(), Some(2));
+        assert!(row.get("strategy").unwrap().as_str().is_some());
+        assert!(row.get("scenario").unwrap().as_str().is_some());
+        assert!(row
+            .get("cell_seed")
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .parse::<u64>()
+            .is_ok());
+        assert!(row.get("total_emu_s").unwrap().as_f64().unwrap() >= 0.0);
+        assert_eq!(row.get("error"), Some(&Json::Null));
+    }
+
+    // Deterministic: the same campaign reruns to the same bytes.
+    assert_eq!(report.to_jsonl(), campaign.run().to_jsonl());
+
+    // File export round-trips.
+    let path = std::env::temp_dir().join("bouquet_campaign_smoke.jsonl");
+    report.write_jsonl(&path).unwrap();
+    assert_eq!(std::fs::read_to_string(&path).unwrap(), jsonl);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn campaign_real_mode_sweeps_strategies_with_real_training() {
+    let _guard = env_guard();
+    if !runtime_available() {
+        eprintln!("skipping: no AOT artifacts in this environment");
+        return;
+    }
+    let base = LaunchOptions {
+        rounds: 1,
+        eval_every: 1,
+        ..tiny_opts()
+    };
+    let report = Campaign::new("real-smoke", base)
+        .strategies(&["fedavg", "fedprox"])
+        .run();
+    assert_eq!(report.cells.len(), 2);
+    assert_eq!(report.succeeded(), 2, "{}", report.to_jsonl());
+    for cell in &report.cells {
+        assert!(cell.final_train_loss.unwrap().is_finite());
+        assert!(cell.eval_loss.is_some(), "eval ran on the real executor");
+        assert_eq!(cell.cell.scenario, "stable");
+    }
+    // Same coordinates, different strategies => different derived seeds.
+    assert_ne!(report.cells[0].cell.cell_seed, report.cells[1].cell.cell_seed);
+}
+
+// ---------------------------------------------------------------------
+// Event stream: complete and ordered.
+// ---------------------------------------------------------------------
+
+#[derive(Default)]
+struct Collector {
+    tags: Arc<Mutex<Vec<String>>>,
+}
+
+impl FlObserver for Collector {
+    fn on_event(&mut self, event: &FlEvent<'_>) {
+        let tag = match event {
+            FlEvent::RunBegin { .. } => "run_begin".to_string(),
+            FlEvent::RoundBegin { round, selected } => {
+                format!("round_begin:{round}:{}", selected.len())
+            }
+            FlEvent::RoundSkipped { round, .. } => format!("round_skipped:{round}"),
+            FlEvent::ClientDone { client, .. } => format!("client_done:{client}"),
+            FlEvent::ClientFailed { client, kind, .. } => {
+                format!("client_failed:{client}:{kind:?}")
+            }
+            FlEvent::RoundScheduled { round, .. } => format!("scheduled:{round}"),
+            FlEvent::Aggregated { round, survivors } => {
+                format!("aggregated:{round}:{survivors}")
+            }
+            FlEvent::Evaluated { round, .. } => format!("evaluated:{round}"),
+            FlEvent::RoundEnd { record } => format!("round_end:{}", record.round),
+            FlEvent::RunEnd { .. } => "run_end".to_string(),
+        };
+        self.tags.lock().unwrap().push(tag);
+    }
+}
+
+#[test]
+fn event_stream_is_complete_and_in_selection_order() {
+    let _guard = env_guard();
+    let tags = Arc::new(Mutex::new(Vec::new()));
+    let report = Experiment::builder()
+        .profiles(&["gtx-1060", "rtx-3060"])
+        .clients(3)
+        .rounds(2)
+        .batch(16)
+        .samples_per_client(32)
+        .eval_every(0)
+        .seed(5)
+        .observer(Box::new(Collector { tags: Arc::clone(&tags) }))
+        .simulated(32)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(report.history.rounds.len(), 2);
+
+    let got = tags.lock().unwrap().clone();
+    let expected: Vec<String> = [
+        "run_begin",
+        "round_begin:0:3",
+        "client_done:0",
+        "client_done:1",
+        "client_done:2",
+        "scheduled:0",
+        "aggregated:0:3",
+        "round_end:0",
+        "round_begin:1:3",
+        "client_done:0",
+        "client_done:1",
+        "client_done:2",
+        "scheduled:1",
+        "aggregated:1:3",
+        "round_end:1",
+        "run_end",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    assert_eq!(got, expected);
+}
