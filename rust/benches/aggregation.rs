@@ -74,6 +74,58 @@ fn main() {
         }
     }
 
+    section("recycled streaming aggregation (ParamScratch — EXPERIMENTS.md §Perf)");
+    // The engine's actual per-round shape: every pushed update is a fresh
+    // copy of a source vector (a fit's output).  Cold path allocates that
+    // copy and the fold buffer every round; the recycled path draws both
+    // from a warm ParamScratch, so steady-state rounds allocate no
+    // parameter-sized vectors at all.  The delta is the satellite claim.
+    {
+        use bouquetfl::emu::FitReport;
+        use bouquetfl::fl::{
+            AccOutput, AggAccumulator, FitResult, ParamScratch, StreamingMean,
+        };
+        let mut b = Bench::new(2.0);
+        for k in [16usize, 64] {
+            let us = updates(k, p, 400 + k as u64);
+            let push = |params, c: usize| FitResult {
+                client: c as u32,
+                params,
+                num_examples: 32 + c,
+                mean_loss: 0.0,
+                emu: FitReport::synthetic(1, 1, 0.0),
+                comm_s: 0.0,
+            };
+            b.run(&format!("cold: clone + fold + finish    k={k}"), || {
+                let mut acc = StreamingMean::new(p);
+                for (c, u) in us.iter().enumerate() {
+                    acc.push(push(u.clone(), c)).expect("push");
+                }
+                match Box::new(acc).finish().expect("finish") {
+                    AccOutput::Mean(m) => m.params.as_slice()[0],
+                    AccOutput::Buffered(_) => unreachable!(),
+                }
+            });
+            let scratch = ParamScratch::default();
+            b.run(&format!("recycled: clone + fold + finish k={k}"), || {
+                let mut acc = StreamingMean::recycled(p, scratch.clone());
+                for (c, u) in us.iter().enumerate() {
+                    acc.push(push(scratch.clone_vector(u), c)).expect("push");
+                }
+                match Box::new(acc).finish().expect("finish") {
+                    AccOutput::Mean(m) => {
+                        let head = m.params.as_slice()[0];
+                        // The aggregate itself goes back too — a round's
+                        // global is consumed and replaced next round.
+                        scratch.recycle(m.params);
+                        head
+                    }
+                    AccOutput::Buffered(_) => unreachable!(),
+                }
+            });
+        }
+    }
+
     section("Pallas HLO aggregate artifact (includes literal marshalling)");
     match ModelExecutor::new("artifacts") {
         Ok(mut ex) => {

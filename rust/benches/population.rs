@@ -1,0 +1,77 @@
+//! Population-engine benchmark (EXPERIMENTS.md row 16): rounds/s and peak
+//! RSS vs population size, 1k → 1M, under the high-churn scenario with
+//! `Selection::Count(64)` — the configuration whose memory must stay
+//! O(cohort + profile table) no matter how large the population grows.
+//! Timing-only SimClient fleets, so it runs anywhere — no PJRT artifacts.
+//!
+//!     cargo bench --bench population
+//!
+//! Peak RSS is a process-wide high-water mark (monotone), so populations
+//! run smallest-first: the figure that matters is how little the 1M row
+//! adds over the 1k row, not the absolute number.
+
+use std::time::Instant;
+
+use bouquetfl::fl::{Experiment, Selection};
+use bouquetfl::util::benchkit::{peak_rss_bytes, section};
+use bouquetfl::util::json::Json;
+use bouquetfl::util::table::{fnum, Align, Table};
+
+const ROUNDS: u32 = 20;
+const COHORT: usize = 64;
+
+fn run(population: usize) -> (f64, u64) {
+    let t0 = Instant::now();
+    let report = Experiment::builder()
+        .population(population)
+        .rounds(ROUNDS)
+        .selection(Selection::Count(COHORT))
+        .scenario_named("high-churn")
+        // Batch 16 keeps the ResNet-18 timing footprint inside every
+        // survey card's VRAM: the bench measures engine scaling, not OOM.
+        .batch(16)
+        .eval_every(0)
+        .fail_on_empty_round(false)
+        .seed(7)
+        .simulated(4096)
+        .build()
+        .expect("population experiment builds")
+        .run()
+        .expect("population federation completes");
+    let host_s = t0.elapsed().as_secs_f64().max(1e-9);
+    assert_eq!(report.history.rounds.len(), ROUNDS as usize);
+    (ROUNDS as f64 / host_s, peak_rss_bytes())
+}
+
+fn main() {
+    section(&format!(
+        "population engine: {ROUNDS} rounds, Count({COHORT}), high-churn — \
+         rounds/s and peak RSS vs population"
+    ));
+    let mut table = Table::new(&["population", "rounds/s", "peak RSS (MiB)"]).aligns(&[
+        Align::Right,
+        Align::Right,
+        Align::Right,
+    ]);
+    let mut rows = Vec::new();
+    for &population in &[1_000usize, 10_000, 100_000, 1_000_000] {
+        let (rounds_per_s, rss) = run(population);
+        let rss_mib = rss as f64 / (1024.0 * 1024.0);
+        table.row(vec![
+            population.to_string(),
+            fnum(rounds_per_s, 1),
+            if rss > 0 { fnum(rss_mib, 1) } else { "n/a".into() },
+        ]);
+        rows.push(Json::obj(vec![
+            ("population", Json::num(population as f64)),
+            ("rounds_per_s", Json::num(rounds_per_s)),
+            ("peak_rss_bytes", Json::num(rss as f64)),
+        ]));
+    }
+    println!("{}", table.render());
+    println!(
+        "note: RSS is the process high-water mark; a flat column across \
+         1k -> 1M is the O(cohort + profile table) claim holding."
+    );
+    println!("{}", Json::Arr(rows).pretty());
+}

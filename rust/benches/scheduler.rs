@@ -180,6 +180,7 @@ fn round_engine_scaling() {
                 clock: &mut VirtualClock::fast_forward(),
                 host: &HardwareProfile::paper_host(),
                 env_cfg: Default::default(),
+                scratch: Default::default(),
             },
         );
         let per_iter = t0.elapsed().as_secs_f64() / 4_000_000.0;

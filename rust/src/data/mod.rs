@@ -8,5 +8,5 @@ pub mod synthetic;
 
 pub use dataset::Dataset;
 pub use loader::BatchLoader;
-pub use partition::{client_label_histograms, partition, skew, PartitionScheme};
+pub use partition::{client_label_histograms, partition, skew, PartitionScheme, PARTITION_SCHEMES};
 pub use synthetic::{generate, SyntheticConfig};

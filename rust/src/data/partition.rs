@@ -6,6 +6,10 @@ use crate::util::rng::Pcg;
 
 use super::dataset::Dataset;
 
+/// Config-file names of the partition schemes (`[data] partition`;
+/// `bouquetfl list` prints these).
+pub const PARTITION_SCHEMES: &[&str] = &["iid", "dirichlet", "shards"];
+
 /// Partitioning scheme.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum PartitionScheme {

@@ -13,6 +13,8 @@ use crate::hardware::profile::HardwareProfile;
 use crate::modelcost::WorkloadCost;
 use crate::runtime::ModelExecutor;
 
+use super::params::ParamScratch;
+
 /// Shared per-fit context (executor + clock + host + env policy).
 ///
 /// The executor is optional: timing-only federations (`SimClient` fleets,
@@ -24,6 +26,12 @@ pub struct BouquetContext<'a> {
     pub clock: &'a mut VirtualClock,
     pub host: &'a HardwareProfile,
     pub env_cfg: EnvConfig,
+    /// Recycled parameter buffers: clients draw their update vectors from
+    /// here instead of allocating fresh ones each fit (the accumulator
+    /// returns folded buffers to the same stash).  A default (cold)
+    /// scratch is always valid — recycling is an optimisation, never a
+    /// semantic.
+    pub scratch: ParamScratch,
 }
 
 impl<'a> BouquetContext<'a> {

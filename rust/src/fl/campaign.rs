@@ -130,6 +130,17 @@ impl Campaign {
         self
     }
 
+    /// Run every cell through the descriptor-backed population engine
+    /// with `n` clients (see `ExperimentBuilder::population`; combine
+    /// with [`Campaign::simulated`] — population cells are timing-only).
+    /// Population-scale sweeps make churn/strategy comparisons at
+    /// realistic federation sizes a one-call affair.
+    pub fn population(mut self, n: usize) -> Self {
+        self.base.population = Some(crate::fl::launcher::PopulationOptions::of_size(n));
+        self.base.clients = n;
+        self
+    }
+
     /// The sweep grid in run order — the one definition both
     /// [`Campaign::cells`] and [`Campaign::run`] iterate.
     fn grid(&self) -> Vec<(CampaignCell, &Scenario)> {
@@ -351,6 +362,27 @@ mod tests {
         seeds.sort_unstable();
         seeds.dedup();
         assert_eq!(seeds.len(), 8);
+    }
+
+    #[test]
+    fn population_cells_run_through_the_descriptor_engine() {
+        // Batch 16 keeps the ResNet-18 timing footprint inside every
+        // survey card's VRAM, so no all-OOM round can abort a cell.
+        let base = LaunchOptions { batch: 16, fail_on_empty_round: false, ..Default::default() };
+        let report = Campaign::new("pop", base)
+            .seeds(&[1])
+            .strategies(&["fedavg"])
+            .scenarios(&[Scenario::preset("high-churn").unwrap()])
+            .population(24)
+            .simulated(16)
+            .run();
+        assert_eq!(report.cells.len(), 1);
+        let cell = &report.cells[0];
+        assert!(cell.error.is_none(), "{:?}", cell.error);
+        assert!(cell.rounds > 0);
+        // Population without simulated mode: an error row, not an abort.
+        let report = Campaign::new("pop", LaunchOptions::default()).population(24).run();
+        assert!(report.cells[0].error.as_deref().unwrap_or("").contains("simulated"));
     }
 
     #[test]

@@ -300,7 +300,10 @@ impl ClientApp for SimClient {
             report.losses.iter().sum::<f32>() / report.losses.len().max(1) as f32;
         Ok(FitResult {
             client: self.id,
-            params: global.clone(),
+            // Recycled copy: at population scale this is the hot path's
+            // only per-fit parameter-sized allocation, and the scratch
+            // stash makes it allocation-free in steady state.
+            params: ctx.scratch.clone_vector(global),
             num_examples: self.num_examples,
             mean_loss,
             emu: report,

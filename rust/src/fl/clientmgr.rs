@@ -2,11 +2,14 @@
 //! participate in a round, and what each contributed once the round's
 //! completion stream has been consumed.
 
+use std::collections::BTreeSet;
+
 use crate::sched::Durations;
 use crate::util::rng::Pcg;
 
 use super::client::{ClientId, FitResult};
 use super::history::FailureRecord;
+use super::population::DENSE_POPULATION_MAX;
 
 /// Selection policy.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -19,22 +22,83 @@ pub enum Selection {
     Count(usize),
 }
 
+/// Consecutive rejected candidates [`ClientManager::select_filtered`]
+/// tolerates (per needed participant) before falling back to one full
+/// eligibility sweep.
+const REJECTION_BUDGET_PER_SLOT: usize = 64;
+
+/// The cohort size a policy seats over a pool of `n` clients (`None` =
+/// everyone) — the single definition behind `select`, `select_from` and
+/// `select_filtered`, whose agreement the stream-identity contracts
+/// depend on.
+fn cohort_k(selection: Selection, n: usize) -> Option<usize> {
+    match selection {
+        Selection::All => None,
+        Selection::Fraction(f) => {
+            assert!((0.0..=1.0).contains(&f), "fraction {f}");
+            Some(((n as f64 * f).round() as usize).clamp(1, n))
+        }
+        Selection::Count(k) => Some(k.clamp(1, n)),
+    }
+}
+
 /// Deterministic, seeded client selector.
 pub struct ClientManager {
     rng: Pcg,
     pub selection: Selection,
+    /// Cached identity pool for the static path ([`ClientManager::select`]):
+    /// built once and reused every round, invalidated only when the
+    /// federation size changes.  (Dynamic federations churn membership
+    /// through [`ClientManager::select_from`] /
+    /// [`ClientManager::select_filtered`] and never touch this.)
+    pool: Vec<usize>,
+    /// Owns the most recent sampled cohort (the storage behind the slice
+    /// [`ClientManager::select`] returns).
+    scratch: Vec<usize>,
 }
 
 impl ClientManager {
     pub fn new(seed: u64, selection: Selection) -> Self {
-        ClientManager { rng: Pcg::new(seed, 0x5E1E), selection }
+        ClientManager {
+            rng: Pcg::new(seed, 0x5E1E),
+            selection,
+            pool: Vec::new(),
+            scratch: Vec::new(),
+        }
     }
 
     /// Indices of the clients participating in this round.
-    pub fn select(&mut self, num_clients: usize) -> Vec<usize> {
+    ///
+    /// The static path: `Selection::All` returns the cached identity pool
+    /// (no per-round allocation at all); sampled selections reuse one
+    /// scratch buffer.  Below [`DENSE_POPULATION_MAX`] the sampled RNG
+    /// stream is bit-identical to the historical
+    /// `select_from(&(0..n).collect())` (property-tested); above it,
+    /// Floyd's algorithm draws the cohort in O(k log k) without ever
+    /// materialising the population.
+    pub fn select(&mut self, num_clients: usize) -> &[usize] {
         assert!(num_clients > 0);
-        let everyone: Vec<usize> = (0..num_clients).collect();
-        self.select_from(&everyone)
+        let k = match cohort_k(self.selection, num_clients) {
+            None => {
+                if self.pool.len() != num_clients {
+                    self.pool.clear();
+                    self.pool.extend(0..num_clients);
+                }
+                return &self.pool;
+            }
+            Some(k) => k,
+        };
+        if num_clients <= DENSE_POPULATION_MAX {
+            // Historical stream: partial Fisher–Yates over the identity
+            // pool, then sort — exactly what the materialised engine drew.
+            let mut v = self.rng.sample_indices(num_clients, k);
+            v.sort_unstable();
+            self.scratch = v;
+        } else {
+            let v = self.rng.sample_distinct_sorted(num_clients, k);
+            self.scratch = v;
+        }
+        &self.scratch
     }
 
     /// Participants drawn from an eligibility pool (the federation-dynamics
@@ -43,18 +107,9 @@ impl ClientManager {
     /// as [`ClientManager::select`], so static federations are untouched.
     pub fn select_from(&mut self, eligible: &[usize]) -> Vec<usize> {
         assert!(!eligible.is_empty(), "select_from on an empty pool");
-        match self.selection {
-            Selection::All => eligible.to_vec(),
-            Selection::Fraction(f) => {
-                assert!((0.0..=1.0).contains(&f), "fraction {f}");
-                let k =
-                    ((eligible.len() as f64 * f).round() as usize).clamp(1, eligible.len());
-                self.pick(eligible, k)
-            }
-            Selection::Count(k) => {
-                let k = k.clamp(1, eligible.len());
-                self.pick(eligible, k)
-            }
+        match cohort_k(self.selection, eligible.len()) {
+            None => eligible.to_vec(),
+            Some(k) => self.pick(eligible, k),
         }
     }
 
@@ -67,6 +122,68 @@ impl ClientManager {
             .collect();
         v.sort();
         v
+    }
+
+    /// Participants drawn under *lazy* eligibility: candidates are
+    /// sampled uniformly from the whole population and tested one at a
+    /// time, so no O(population) eligible pool is ever materialised.
+    /// This is the population engine's path above
+    /// [`DENSE_POPULATION_MAX`] (`sched::dynamics` evaluates membership
+    /// and availability per candidate on demand).
+    ///
+    /// Semantics vs [`ClientManager::select_from`]:
+    /// * Conditioned on the eligible set, rejection sampling is still
+    ///   uniform over it — only the RNG stream differs.
+    /// * `Selection::Fraction` resolves against the *population* size
+    ///   (the eligible count is unknown without a sweep, which is the
+    ///   cost this path exists to avoid).
+    /// * `Selection::All` inherently needs the sweep and performs it.
+    /// * A starved federation (rejections exhaust the miss budget) falls
+    ///   back to one O(population) sweep; if fewer eligible clients exist
+    ///   than requested, all of them are returned — possibly none, which
+    ///   the server records as a skipped round.
+    ///
+    /// Returned cohort is sorted and distinct.  Deterministic per seed:
+    /// every draw comes from this manager's stream, and `eligible` must
+    /// be a pure function of the candidate for a given round (the
+    /// dynamics layer's traces are).
+    pub fn select_filtered(
+        &mut self,
+        population: usize,
+        eligible: &mut dyn FnMut(usize) -> bool,
+    ) -> Vec<usize> {
+        assert!(population > 0);
+        let k = match cohort_k(self.selection, population) {
+            None => return (0..population).filter(|&i| eligible(i)).collect(),
+            Some(k) => k,
+        };
+        let mut chosen: BTreeSet<usize> = BTreeSet::new();
+        let budget = REJECTION_BUDGET_PER_SLOT * k + 64;
+        let mut misses = 0usize;
+        while chosen.len() < k && misses < budget {
+            let i = self.rng.below(population);
+            if chosen.contains(&i) || !eligible(i) {
+                misses += 1;
+            } else {
+                chosen.insert(i);
+            }
+        }
+        if chosen.len() < k {
+            // Sweep fallback: the eligible fraction is (or looks) tiny, so
+            // one full pass settles how many participants actually exist.
+            let rest: Vec<usize> = (0..population)
+                .filter(|&i| !chosen.contains(&i) && eligible(i))
+                .collect();
+            let need = k - chosen.len();
+            if rest.len() <= need {
+                chosen.extend(rest);
+            } else {
+                for j in self.rng.sample_distinct_sorted(rest.len(), need) {
+                    chosen.insert(rest[j]);
+                }
+            }
+        }
+        chosen.into_iter().collect()
     }
 }
 
@@ -151,7 +268,21 @@ mod tests {
     #[test]
     fn all_selects_everyone() {
         let mut m = ClientManager::new(0, Selection::All);
-        assert_eq!(m.select(5), vec![0, 1, 2, 3, 4]);
+        assert_eq!(m.select(5).to_vec(), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn all_path_reuses_the_cached_pool() {
+        let mut m = ClientManager::new(0, Selection::All);
+        let ptr = m.select(6).as_ptr() as usize;
+        for _ in 0..5 {
+            assert_eq!(m.select(6).as_ptr() as usize, ptr, "pool reallocated");
+        }
+        // Size change invalidates the cache...
+        assert_eq!(m.select(4).to_vec(), vec![0, 1, 2, 3]);
+        // ...and the pool settles again at the new size.
+        let ptr = m.select(4).as_ptr() as usize;
+        assert_eq!(m.select(4).as_ptr() as usize, ptr);
     }
 
     #[test]
@@ -175,7 +306,7 @@ mod tests {
         let mut a = ClientManager::new(7, Selection::Count(3));
         let mut b = ClientManager::new(7, Selection::Count(3));
         for _ in 0..5 {
-            assert_eq!(a.select(20), b.select(20));
+            assert_eq!(a.select(20).to_vec(), b.select(20).to_vec());
         }
     }
 
@@ -185,8 +316,58 @@ mod tests {
         let mut b = ClientManager::new(3, Selection::Fraction(0.5));
         let pool: Vec<usize> = (0..12).collect();
         for _ in 0..5 {
-            assert_eq!(a.select(12), b.select_from(&pool));
+            assert_eq!(a.select(12).to_vec(), b.select_from(&pool));
         }
+    }
+
+    #[test]
+    fn population_scale_select_is_o_k_and_valid() {
+        let n = DENSE_POPULATION_MAX * 100;
+        let mut m = ClientManager::new(9, Selection::Count(64));
+        for _ in 0..3 {
+            let s = m.select(n).to_vec();
+            assert_eq!(s.len(), 64);
+            assert!(s.windows(2).all(|w| w[0] < w[1]), "sorted, distinct");
+            assert!(s.iter().all(|&i| i < n));
+        }
+        // Fraction resolves against the population above threshold too.
+        let mut f = ClientManager::new(9, Selection::Fraction(0.0001));
+        assert_eq!(f.select(1_000_000).len(), 100);
+    }
+
+    #[test]
+    fn select_filtered_draws_only_eligible_distinct_sorted() {
+        let mut m = ClientManager::new(5, Selection::Count(8));
+        let mut probes = 0usize;
+        let s = m.select_filtered(10_000, &mut |i| {
+            probes += 1;
+            i % 3 == 0
+        });
+        assert_eq!(s.len(), 8);
+        assert!(s.windows(2).all(|w| w[0] < w[1]));
+        assert!(s.iter().all(|&i| i % 3 == 0));
+        assert!(
+            probes < 10_000,
+            "lazy selection swept the population ({probes} probes)"
+        );
+        // Deterministic per seed.
+        let mut m2 = ClientManager::new(5, Selection::Count(8));
+        assert_eq!(s, m2.select_filtered(10_000, &mut |i| i % 3 == 0));
+    }
+
+    #[test]
+    fn select_filtered_starved_pool_returns_every_eligible_client() {
+        // Only 3 eligible clients for Count(8): the sweep fallback finds
+        // exactly those three.
+        let mut m = ClientManager::new(1, Selection::Count(8));
+        let s = m.select_filtered(50_000, &mut |i| i == 7 || i == 11_000 || i == 42_000);
+        assert_eq!(s, vec![7, 11_000, 42_000]);
+        // Nobody eligible: empty cohort (the server skips the round).
+        let mut m = ClientManager::new(1, Selection::Count(8));
+        assert!(m.select_filtered(50_000, &mut |_| false).is_empty());
+        // All: the full eligible sweep.
+        let mut all = ClientManager::new(1, Selection::All);
+        assert_eq!(all.select_filtered(10, &mut |i| i % 2 == 0), vec![0, 2, 4, 6, 8]);
     }
 
     #[test]

@@ -43,8 +43,14 @@ use super::client::{ClientApp, FitConfig, SimClient, TrainClient};
 use super::clientmgr::Selection;
 use super::events::{FlObserver, ProgressLogger};
 use super::history::History;
-use super::launcher::{resolve_hardware, HardwareSource, LaunchOptions, TimingWorkload};
+use super::launcher::{
+    resolve_hardware, resolve_profile_table, HardwareSource, LaunchOptions, PopulationOptions,
+    TimingWorkload,
+};
 use super::params::ParamVector;
+use super::population::{
+    Population, SimClientFactory, DENSE_POPULATION_MAX, NET_STREAM,
+};
 use super::scenario::Scenario;
 use super::server::{ServerApp, ServerConfig};
 use super::strategy::Strategy;
@@ -111,9 +117,36 @@ impl ExperimentBuilder {
         Ok(Self::from_options(LaunchOptions::from_cfg(cfg)?))
     }
 
-    /// Federation size (total clients).
+    /// Federation size (total clients).  On a builder with a population
+    /// axis set, this also resizes the population — the two are one
+    /// number.
     pub fn clients(mut self, n: usize) -> Self {
         self.opts.clients = n;
+        if let Some(p) = &mut self.opts.population {
+            p.size = n;
+        }
+        self
+    }
+
+    /// Population-scale federation: `n` clients stored as compact
+    /// descriptors and instantiated per round through the client factory
+    /// (DESIGN.md §11).  Requires [`ExperimentBuilder::simulated`] —
+    /// `build()` rejects the combination with real training.  Below
+    /// `fl::population::DENSE_POPULATION_MAX` the run is bit-identical to
+    /// the materialised fleet; above it, selection and dynamics switch to
+    /// the O(cohort) lazy algorithms, so a 1,000,000-client federation
+    /// with `Selection::Count(64)` runs in memory proportional to the
+    /// cohort plus the profile table.
+    pub fn population(mut self, n: usize) -> Self {
+        self.opts.population = Some(PopulationOptions::of_size(n));
+        self.opts.clients = n;
+        self
+    }
+
+    /// Full population options (size + profile-table draws).
+    pub fn population_options(mut self, opts: PopulationOptions) -> Self {
+        self.opts.clients = opts.size;
+        self.opts.population = Some(opts);
         self
     }
 
@@ -322,6 +355,15 @@ impl ExperimentBuilder {
             msg,
         };
         self.opts.workers = self.opts.workers.max(1);
+        // `population.size` supersedes `clients` (documented on
+        // `PopulationOptions`).  The builder setters keep the pair in
+        // sync, but both fields are `pub` on `LaunchOptions` — reconcile
+        // here so a hand-built desync cannot size validation off one
+        // number and the roster off the other (or worse, materialise
+        // `clients` profiles for a `size`-client population).
+        if let Some(p) = &self.opts.population {
+            self.opts.clients = p.size;
+        }
         // Sanity and cross-component checks are strict-mode only: the
         // permissive (legacy `launch()`) path must accept every
         // configuration the historical launcher accepted, degenerate ones
@@ -407,14 +449,80 @@ impl ExperimentBuilder {
         }
 
         // Hardware: resolved now so unknown presets / host-infeasible
-        // profiles fail at build, not mid-run.
-        let profiles = resolve_hardware(&self.opts)?;
+        // profiles fail at build, not mid-run.  A population axis swaps
+        // the per-client profile list for the descriptor layer; these
+        // checks run in permissive mode too — they are assembly
+        // requirements, not validation niceties.
+        let (profiles, population) = match &self.opts.population {
+            None => (resolve_hardware(&self.opts)?, None),
+            Some(p) => {
+                if p.size == 0 {
+                    return Err(invalid(
+                        "population.size",
+                        "a population needs at least one client".into(),
+                    ));
+                }
+                if !matches!(self.mode, ExecutionMode::Simulated { .. }) {
+                    return Err(invalid(
+                        "population",
+                        "the population engine is timing-only: combine \
+                         .population(n) with .simulated(param_dim) (real AOT \
+                         training would need per-client data partitions at \
+                         population scale)"
+                            .into(),
+                    ));
+                }
+                if p.size <= DENSE_POPULATION_MAX {
+                    // Small populations resolve per-client hardware through
+                    // the very same sampler stream as the materialised
+                    // engine — explicit descriptors, bit-identical output
+                    // (tests/properties.rs).
+                    let profiles = resolve_hardware(&self.opts)?;
+                    let pop = Population::from_profiles(
+                        &profiles,
+                        self.opts.samples_per_client,
+                        self.opts.network,
+                        self.opts.seed,
+                    );
+                    (profiles, Some(pop))
+                } else {
+                    if p.profile_draws == 0 {
+                        return Err(invalid(
+                            "population.profile_draws",
+                            "a virtual population needs at least one profile draw".into(),
+                        ));
+                    }
+                    let table = resolve_profile_table(&self.opts, p.profile_draws)?;
+                    let pop = match &self.opts.hardware {
+                        HardwareSource::Sampler(_) => Population::virtual_survey(
+                            self.opts.seed,
+                            p.size,
+                            table,
+                            self.opts.samples_per_client,
+                            self.opts.network,
+                        ),
+                        HardwareSource::Manual(_) => Population::virtual_cycle(
+                            self.opts.seed,
+                            p.size,
+                            table,
+                            self.opts.samples_per_client,
+                            self.opts.network,
+                        ),
+                    };
+                    // The report's profile list is the deduplicated table
+                    // (descriptor indices refer to it), not a per-client
+                    // materialisation.
+                    (pop.profile_table().profiles().to_vec(), Some(pop))
+                }
+            }
+        };
 
         Ok(Experiment {
             opts: self.opts,
             strategy,
             scheduler,
             profiles,
+            population,
             observers: self.observers,
             mode: self.mode,
             progress: self.progress,
@@ -440,6 +548,8 @@ pub struct Experiment {
     strategy: Box<dyn Strategy>,
     scheduler: Box<dyn Scheduler>,
     profiles: Vec<HardwareProfile>,
+    /// Descriptor-backed roster (`Some` when the population axis is set).
+    population: Option<Population>,
     observers: Vec<Box<dyn FlObserver>>,
     mode: ExecutionMode,
     progress: bool,
@@ -462,9 +572,17 @@ impl Experiment {
         &self.opts
     }
 
-    /// The federation's resolved hardware, one profile per client.
+    /// The federation's resolved hardware: one profile per client for
+    /// materialised fleets and below-threshold populations; for *virtual*
+    /// populations, the deduplicated profile table's entries (descriptor
+    /// indices refer to it).
     pub fn profiles(&self) -> &[HardwareProfile] {
         &self.profiles
+    }
+
+    /// The descriptor-backed roster, when the population axis is set.
+    pub fn population(&self) -> Option<&Population> {
+        self.population.as_ref()
     }
 
     /// Assemble data, clients, server and clock, run the federation, and
@@ -475,8 +593,16 @@ impl Experiment {
     /// contract between the two paths is asserted in
     /// `tests/experiment_api.rs`.
     pub fn run(self) -> Result<ExperimentReport, FlError> {
-        let Experiment { opts, strategy, scheduler, profiles, mut observers, mode, progress } =
-            self;
+        let Experiment {
+            opts,
+            strategy,
+            scheduler,
+            profiles,
+            population,
+            mut observers,
+            mode,
+            progress,
+        } = self;
         if progress {
             observers.push(Box::new(ProgressLogger));
         }
@@ -488,62 +614,6 @@ impl Experiment {
             .unwrap_or_else(|| "stable".to_string());
 
         let workload = opts.timing_workload.cost();
-        let mut net_rng = Pcg::new(opts.seed, 0x4E7);
-        let (clients, eval): (Vec<Box<dyn ClientApp>>, Option<Dataset>) = match mode {
-            ExecutionMode::Real => {
-                // Data: one synthetic corpus, partitioned across clients +
-                // held-out eval.
-                let total = opts.clients * opts.samples_per_client;
-                let train = generate(
-                    &SyntheticConfig { seed: opts.seed, ..Default::default() },
-                    total,
-                );
-                let eval = generate(
-                    &SyntheticConfig { seed: opts.seed ^ 0xE7A1, ..Default::default() },
-                    opts.eval_samples,
-                );
-                let parts = partition(&train, opts.clients, opts.partition, opts.seed);
-                let clients = profiles
-                    .iter()
-                    .enumerate()
-                    .map(|(i, profile)| {
-                        let subset: Dataset = train.subset(&parts[i]);
-                        let mut c = TrainClient::new(
-                            i as u32,
-                            profile.clone(),
-                            subset,
-                            workload.clone(),
-                            opts.seed ^ (i as u64) << 8,
-                        );
-                        if opts.network {
-                            c = c.with_network(sample_network(&mut net_rng));
-                        }
-                        Box::new(c) as Box<dyn ClientApp>
-                    })
-                    .collect();
-                (clients, Some(eval))
-            }
-            ExecutionMode::Simulated { .. } => {
-                let clients = profiles
-                    .iter()
-                    .enumerate()
-                    .map(|(i, profile)| {
-                        let mut c = SimClient::new(
-                            i as u32,
-                            profile.clone(),
-                            opts.samples_per_client,
-                            workload.clone(),
-                        );
-                        if opts.network {
-                            c.network = Some(sample_network(&mut net_rng));
-                        }
-                        Box::new(c) as Box<dyn ClientApp>
-                    })
-                    .collect();
-                (clients, None)
-            }
-        };
-
         let server_cfg = ServerConfig {
             rounds: opts.rounds,
             selection: opts.selection,
@@ -558,11 +628,82 @@ impl Experiment {
             fail_on_empty_round: opts.fail_on_empty_round,
         };
 
-        let mut server =
-            ServerApp::new(server_cfg, opts.host.clone(), strategy, scheduler, clients);
-        if let Some(eval) = eval {
-            server = server.with_eval_data(eval);
-        }
+        let mut server = if let Some(pop) = population {
+            // Descriptor-backed roster: clients are instantiated per
+            // round by the factory; nothing O(population) is built here
+            // (build() limited itself to the profile table).  Simulated
+            // mode only — enforced at build.
+            ServerApp::with_population(
+                server_cfg,
+                opts.host.clone(),
+                strategy,
+                scheduler,
+                pop,
+                Box::new(SimClientFactory::new(workload)),
+            )
+        } else {
+            let mut net_rng = Pcg::new(opts.seed, NET_STREAM);
+            let (clients, eval): (Vec<Box<dyn ClientApp>>, Option<Dataset>) = match mode {
+                ExecutionMode::Real => {
+                    // Data: one synthetic corpus, partitioned across
+                    // clients + held-out eval.
+                    let total = opts.clients * opts.samples_per_client;
+                    let train = generate(
+                        &SyntheticConfig { seed: opts.seed, ..Default::default() },
+                        total,
+                    );
+                    let eval = generate(
+                        &SyntheticConfig { seed: opts.seed ^ 0xE7A1, ..Default::default() },
+                        opts.eval_samples,
+                    );
+                    let parts = partition(&train, opts.clients, opts.partition, opts.seed);
+                    let clients = profiles
+                        .iter()
+                        .enumerate()
+                        .map(|(i, profile)| {
+                            let subset: Dataset = train.subset(&parts[i]);
+                            let mut c = TrainClient::new(
+                                i as u32,
+                                profile.clone(),
+                                subset,
+                                workload.clone(),
+                                opts.seed ^ (i as u64) << 8,
+                            );
+                            if opts.network {
+                                c = c.with_network(sample_network(&mut net_rng));
+                            }
+                            Box::new(c) as Box<dyn ClientApp>
+                        })
+                        .collect();
+                    (clients, Some(eval))
+                }
+                ExecutionMode::Simulated { .. } => {
+                    let clients = profiles
+                        .iter()
+                        .enumerate()
+                        .map(|(i, profile)| {
+                            let mut c = SimClient::new(
+                                i as u32,
+                                profile.clone(),
+                                opts.samples_per_client,
+                                workload.clone(),
+                            );
+                            if opts.network {
+                                c.network = Some(sample_network(&mut net_rng));
+                            }
+                            Box::new(c) as Box<dyn ClientApp>
+                        })
+                        .collect();
+                    (clients, None)
+                }
+            };
+            let mut server =
+                ServerApp::new(server_cfg, opts.host.clone(), strategy, scheduler, clients);
+            if let Some(eval) = eval {
+                server = server.with_eval_data(eval);
+            }
+            server
+        };
         if let Some(sc) = &opts.scenario {
             server = server.with_scenario(sc);
         }
@@ -618,7 +759,10 @@ pub struct ExperimentReport {
     pub global: ParamVector,
     /// Round-by-round training history.
     pub history: History,
-    /// Per-client hardware, index-aligned with client ids.
+    /// The federation's hardware: index-aligned with client ids for
+    /// materialised fleets and below-threshold populations; for virtual
+    /// populations, the deduplicated profile table's entries (each
+    /// client's descriptor indexes into it — see DESIGN.md §11).
     pub profiles: Vec<HardwareProfile>,
     /// Per-client fit spans on the emulated timeline (Chrome-trace ready).
     pub trace: Trace,
@@ -811,6 +955,60 @@ mod tests {
             .build()
             .is_err());
         assert!(Experiment::builder().profiles(&["rtx-4090"]).build().is_err());
+    }
+
+    #[test]
+    fn population_axis_requires_simulated_mode() {
+        // Real mode (the default) cannot run a descriptor population.
+        let err = Experiment::builder()
+            .profiles(&["gtx-1060"])
+            .population(100)
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("simulated"), "{err}");
+        // With simulated mode it builds; small sizes keep per-client
+        // profiles, large ones carry only the deduplicated table.
+        let exp = Experiment::builder()
+            .population(100)
+            .simulated(32)
+            .build()
+            .unwrap();
+        assert!(exp.population().is_some());
+        assert_eq!(exp.profiles().len(), 100);
+        let exp = Experiment::builder()
+            .population(DENSE_POPULATION_MAX + 1)
+            .simulated(32)
+            .build()
+            .unwrap();
+        assert_eq!(exp.population().unwrap().len(), DENSE_POPULATION_MAX + 1);
+        assert!(
+            exp.profiles().len() <= 256,
+            "virtual population must not materialise per-client profiles \
+             ({} entries)",
+            exp.profiles().len()
+        );
+        // Degenerate axes fail at build.
+        assert!(Experiment::builder().population(0).simulated(8).build().is_err());
+        assert!(Experiment::builder()
+            .population_options(PopulationOptions {
+                size: DENSE_POPULATION_MAX + 1,
+                profile_draws: 0
+            })
+            .simulated(8)
+            .build()
+            .is_err());
+    }
+
+    #[test]
+    fn clients_and_population_axes_stay_in_sync() {
+        let exp = Experiment::builder()
+            .population(50)
+            .clients(20)
+            .simulated(8)
+            .build()
+            .unwrap();
+        assert_eq!(exp.population().unwrap().len(), 20);
+        assert_eq!(exp.options().clients, 20);
     }
 
     #[test]

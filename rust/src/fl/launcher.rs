@@ -10,7 +10,7 @@ use std::path::PathBuf;
 use crate::data::PartitionScheme;
 use crate::error::{ConfigError, FlError};
 use crate::hardware::profile::{preset, HardwareProfile};
-use crate::hardware::sampler::{HardwareSampler, SamplerConfig};
+use crate::hardware::sampler::{HardwareSampler, ProfileTable, SamplerConfig};
 use crate::modelcost::small_cnn;
 use crate::runtime::default_dir;
 use crate::sched::Trace;
@@ -55,6 +55,28 @@ pub enum HardwareSource {
     Manual(Vec<String>),
 }
 
+/// `[population]` config section / `ExperimentBuilder::population(n)`
+/// builder axis: run the federation through the descriptor-backed
+/// population engine (DESIGN.md §11) instead of materialising one live
+/// client per id.  Timing-only (`Simulated`) federations only — real AOT
+/// training would need per-client data partitions at population scale.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PopulationOptions {
+    /// Total federation size ("as many clients as you can imagine").
+    pub size: usize,
+    /// Survey draws streamed into the deduplicated profile table when the
+    /// population is virtual (above `fl::population::DENSE_POPULATION_MAX`).
+    /// More draws = finer survey marginals, marginally more table memory.
+    pub profile_draws: usize,
+}
+
+impl PopulationOptions {
+    /// Options for an `n`-client population with the default table size.
+    pub fn of_size(n: usize) -> Self {
+        PopulationOptions { size: n, profile_draws: 256 }
+    }
+}
+
 /// Everything needed to launch a federation.
 #[derive(Debug, Clone)]
 pub struct LaunchOptions {
@@ -91,6 +113,10 @@ pub struct LaunchOptions {
     /// Federation dynamics (availability/churn/dropout/deadline); `None`
     /// runs the static federation (SCENARIOS.md).
     pub scenario: Option<Scenario>,
+    /// Descriptor-backed population engine (`None` = materialised fleet).
+    /// When set, `size` supersedes `clients` and the federation must run
+    /// in `Simulated` mode (DESIGN.md §11).
+    pub population: Option<PopulationOptions>,
 }
 
 impl Default for LaunchOptions {
@@ -118,6 +144,7 @@ impl Default for LaunchOptions {
             fail_on_empty_round: true,
             timing_workload: TimingWorkload::Resnet18,
             scenario: None,
+            population: None,
         }
     }
 }
@@ -149,6 +176,7 @@ pub const CONFIG_SCHEMA: &[(&str, &[&str])] = &[
         &["partition", "alpha", "labels_per_client", "samples_per_client", "eval_samples"],
     ),
     ("hardware", &["profiles", "min_vram_gib", "exclude_laptop", "tier_affinity"]),
+    ("population", &["size", "profile_draws"]),
     (
         "scenario",
         &[
@@ -217,6 +245,14 @@ impl LaunchOptions {
         if cfg.sections().any(|s| s == "scenario") {
             let sc = Scenario::from_cfg(cfg)?;
             o.scenario = (!sc.is_static()).then_some(sc);
+        }
+        if cfg.sections().any(|s| s == "population") {
+            let size = cfg.u64_or("population", "size", o.clients as u64) as usize;
+            let profile_draws = cfg.u64_or("population", "profile_draws", 256) as usize;
+            o.population = Some(PopulationOptions { size, profile_draws });
+            // The population supersedes `clients`; keeping the two in sync
+            // lets every count-based validation and sweep see one number.
+            o.clients = size;
         }
 
         o.partition = match cfg.str_or("data", "partition", "dirichlet").as_str() {
@@ -333,6 +369,46 @@ pub fn resolve_hardware(
     }
 }
 
+/// Resolve the federation's hardware as a deduplicated [`ProfileTable`] —
+/// the population layer's O(distinct) representation for federations too
+/// large to hold one profile per client.  Survey sources stream
+/// `draws` host-feasible samples into the table (repeat configurations
+/// accumulate weight, preserving the survey marginals); manual lists
+/// resolve each name once (a virtual population then *cycles the
+/// distinct entries*, so repeats in the list carry no extra weight).
+pub fn resolve_profile_table(
+    opts: &LaunchOptions,
+    draws: usize,
+) -> Result<ProfileTable, ConfigError> {
+    match &opts.hardware {
+        HardwareSource::Sampler(sc) => {
+            let mut sampler = HardwareSampler::new(opts.seed ^ HW_SEED_SALT, sc.clone())?;
+            let host = opts.host.clone();
+            sampler.sample_table(draws, move |p| feasible_on(p, &host))
+        }
+        HardwareSource::Manual(names) => {
+            if names.is_empty() {
+                return Err(ConfigError::InvalidValue {
+                    key: "hardware.profiles".into(),
+                    msg: "manual hardware needs at least one profile name".into(),
+                });
+            }
+            let mut table = ProfileTable::new();
+            for name in names {
+                let p = preset(name).or_else(|_| HardwareProfile::gpu_only(name))?;
+                if !feasible_on(&p, &opts.host) {
+                    return Err(ConfigError::InvalidValue {
+                        key: "hardware.profiles".into(),
+                        msg: format!("'{name}' is not emulatable on host {}", opts.host.name),
+                    });
+                }
+                table.insert(p);
+            }
+            Ok(table)
+        }
+    }
+}
+
 /// Seed salt separating the hardware-sampling stream from the data stream.
 const HW_SEED_SALT: u64 = 0x42F1;
 
@@ -444,6 +520,48 @@ profiles = ["gtx-1060", "budget-2019"]
         // A static scenario section compiles to no dynamics at all.
         let cfg = Cfg::parse("[scenario]\npreset = \"stable\"").unwrap();
         assert!(LaunchOptions::from_cfg(&cfg).unwrap().scenario.is_none());
+    }
+
+    #[test]
+    fn from_cfg_parses_population_section() {
+        let cfg = Cfg::parse(
+            "[federation]\nrounds = 2\nclients = 8\n\n[population]\nsize = 500000\nprofile_draws = 128",
+        )
+        .unwrap();
+        let o = LaunchOptions::from_cfg(&cfg).unwrap();
+        assert_eq!(
+            o.population,
+            Some(PopulationOptions { size: 500_000, profile_draws: 128 })
+        );
+        assert_eq!(o.clients, 500_000, "population size supersedes clients");
+        // A bare [population] section inherits the federation's client count.
+        let cfg = Cfg::parse("[federation]\nclients = 64\n\n[population]\n").unwrap();
+        let o = LaunchOptions::from_cfg(&cfg).unwrap();
+        assert_eq!(o.population, Some(PopulationOptions { size: 64, profile_draws: 256 }));
+        // No section -> materialised fleet, as ever.
+        let cfg = Cfg::parse("[federation]\nrounds = 2").unwrap();
+        assert!(LaunchOptions::from_cfg(&cfg).unwrap().population.is_none());
+    }
+
+    #[test]
+    fn resolve_profile_table_dedupes_and_weighs() {
+        let o = LaunchOptions {
+            hardware: HardwareSource::Manual(vec![
+                "gtx-1060".into(),
+                "rtx-3060".into(),
+                "gtx-1060".into(),
+            ]),
+            ..Default::default()
+        };
+        let t = resolve_profile_table(&o, 64).unwrap();
+        assert_eq!(t.len(), 2, "manual names deduplicated");
+
+        let o = LaunchOptions::default(); // survey sampler
+        let t = resolve_profile_table(&o, 200).unwrap();
+        assert!(!t.is_empty() && t.len() < 200, "{} distinct", t.len());
+        assert!((t.weights().iter().sum::<f64>() - 200.0).abs() < 1e-9);
+        let host = &o.host;
+        assert!(t.profiles().iter().all(|p| feasible_on(p, host)));
     }
 
     #[test]

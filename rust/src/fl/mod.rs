@@ -16,6 +16,7 @@ pub mod experiment;
 pub mod history;
 pub mod launcher;
 pub mod params;
+pub mod population;
 pub mod scenario;
 pub mod server;
 pub mod strategy;
@@ -27,8 +28,12 @@ pub use clientmgr::{ClientManager, RoundLedger, Selection};
 pub use events::{FailureKind, FlEvent, FlObserver, HistoryObserver, ProgressLogger, TraceObserver};
 pub use experiment::{ExecutionMode, Experiment, ExperimentBuilder, ExperimentReport};
 pub use history::{History, RoundRecord};
-pub use launcher::{launch, HardwareSource, LaunchOptions, LaunchOutcome};
-pub use params::ParamVector;
+pub use launcher::{launch, HardwareSource, LaunchOptions, LaunchOutcome, PopulationOptions};
+pub use params::{ParamScratch, ParamVector};
+pub use population::{
+    ClientDescriptor, ClientFactory, Population, SimClientFactory, TrainClientFactory,
+    DENSE_POPULATION_MAX,
+};
 pub use scenario::{Scenario, MODEL_KINDS, SCENARIO_PRESETS};
 pub use server::{ServerApp, ServerConfig};
 pub use strategy::{

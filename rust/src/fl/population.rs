@@ -1,0 +1,463 @@
+//! Population-scale virtual clients: federations as compact descriptors,
+//! instantiated on demand (DESIGN.md §11).
+//!
+//! The engine historically materialised every client as a live
+//! `Box<dyn ClientApp>` held by the server — fine for hundreds of
+//! clients, hopeless for millions.  FLUTE (arXiv:2203.13789) and Flower's
+//! virtual client engine (arXiv:2007.14390) both showed that scalable FL
+//! simulation stores clients as *descriptors* and instantiates them only
+//! for the rounds that select them.  This module is that architecture:
+//!
+//! * [`ClientDescriptor`] — ~24 bytes of per-client state: a hardware
+//!   index into a deduplicated profile table, a network tier, the data
+//!   shard size, a per-client RNG seed, and an availability-model id.
+//! * [`Population`] — the roster.  An **explicit** population stores one
+//!   descriptor per client (used below [`DENSE_POPULATION_MAX`], where it
+//!   is bit-identical to the materialised fleet by construction); a
+//!   **virtual** population stores only the profile table plus generation
+//!   parameters — `descriptor(i)` is a pure function of `(seed, i)`, so a
+//!   million-client federation costs O(profile table) memory, not
+//!   O(population).
+//! * [`ClientFactory`] — instantiates the `ClientApp` behind a descriptor
+//!   for one round; when the round ends the live object is dropped and
+//!   the client exists as its descriptor again.  Clients are stateless
+//!   across rounds by construction (`SimClient` holds no mutable state;
+//!   `TrainClient` derives everything from its seed and the round
+//!   number), which is what makes checkout → fit → drop bit-identical to
+//!   keeping the object alive (property-tested in `tests/properties.rs`).
+//!
+//! `ExperimentBuilder::population(n)` (and the `[population]` config
+//! section) routes `Simulated` federations through this layer; the
+//! server-side integration is `ServerApp::with_population`.
+#![deny(missing_docs)]
+
+use std::sync::Arc;
+
+use crate::data::Dataset;
+use crate::hardware::profile::HardwareProfile;
+use crate::hardware::sampler::ProfileTable;
+use crate::modelcost::WorkloadCost;
+use crate::net::{self, NetworkProfile};
+use crate::util::rng::Pcg;
+
+use super::client::{ClientApp, ClientId, SimClient, TrainClient};
+
+/// Largest population the engine still runs with the materialised-era
+/// algorithms and RNG streams: explicit descriptors, full-pool selection
+/// (`Pcg::sample_indices`), dense federation dynamics (eager traces,
+/// per-round churn sweeps).  Above it, selection switches to Floyd
+/// sampling (`Pcg::sample_distinct_sorted`), dynamics to lazy
+/// per-candidate evaluation, and hardware to the deduplicated profile
+/// table — O(cohort) per round instead of O(population), at the cost of
+/// different (still deterministic) RNG streams.  Bit-identity with the
+/// historical engine below this threshold is property-tested in
+/// `tests/properties.rs`.
+pub const DENSE_POPULATION_MAX: usize = 8192;
+
+/// RNG stream id for per-client network-tier draws — shared with the
+/// materialised assembly in `fl::experiment` so the two paths draw
+/// identical links.
+pub(crate) const NET_STREAM: u64 = 0x4E7;
+
+/// Seed salt separating virtual-descriptor derivation from every other
+/// federation stream.
+const DESCRIPTOR_SEED_SALT: u64 = 0xDE5C;
+
+/// Compact per-client state: everything needed to instantiate the client
+/// for a round.  `Copy` and ~24 bytes, so a million of them would be
+/// cheap — and a *virtual* population does not even store them.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ClientDescriptor {
+    /// Index into the population's deduplicated [`ProfileTable`].
+    pub profile: u32,
+    /// Data-shard size (training examples the client holds).
+    pub num_examples: u32,
+    /// Per-client RNG seed (batch loading, synthetic losses).
+    pub seed: u64,
+    /// Index into [`net::NET_TIERS`]; `None` = no network model.
+    pub network: Option<u8>,
+    /// Availability-model id.  The scenario layer currently compiles a
+    /// single model per federation, so this is always 0; it is part of
+    /// the descriptor so per-client availability classes need no layout
+    /// change.
+    pub availability: u8,
+}
+
+impl ClientDescriptor {
+    /// The network link this descriptor's tier resolves to.
+    pub fn network_profile(&self) -> Option<NetworkProfile> {
+        self.network.map(|t| net::NET_TIERS[t as usize].0)
+    }
+}
+
+/// Instantiates the live client behind a descriptor for the duration of
+/// one round.  The round engine checks clients out through this factory
+/// and back in by dropping them — the descriptor *is* the checked-in
+/// form.
+///
+/// `Send` because the concurrent round engine moves instantiated clients
+/// to worker threads.
+pub trait ClientFactory: Send {
+    /// Build the `ClientApp` for client `id` described by `desc`;
+    /// `profile` is the resolved entry of the population's profile table.
+    fn instantiate(
+        &self,
+        id: ClientId,
+        desc: &ClientDescriptor,
+        profile: &HardwareProfile,
+    ) -> Box<dyn ClientApp>;
+}
+
+/// Factory for timing-only fleets: descriptors become [`SimClient`]s.
+/// The population engine's default — a million-client `Simulated`
+/// federation instantiates only its per-round cohort.
+pub struct SimClientFactory {
+    workload: WorkloadCost,
+}
+
+impl SimClientFactory {
+    /// A factory charging `workload` for every emulated fit.
+    pub fn new(workload: WorkloadCost) -> Self {
+        SimClientFactory { workload }
+    }
+}
+
+impl ClientFactory for SimClientFactory {
+    fn instantiate(
+        &self,
+        id: ClientId,
+        desc: &ClientDescriptor,
+        profile: &HardwareProfile,
+    ) -> Box<dyn ClientApp> {
+        let mut c = SimClient::new(
+            id,
+            profile.clone(),
+            desc.num_examples as usize,
+            self.workload.clone(),
+        );
+        c.network = desc.network_profile();
+        Box::new(c)
+    }
+}
+
+/// Factory for real-training fleets: descriptors become [`TrainClient`]s
+/// over shared data partitions.  The partition index lists are inherently
+/// O(total samples) — population-scale federations use
+/// [`SimClientFactory`]; this factory serves library users who want the
+/// descriptor lifecycle with real PJRT training at moderate sizes.
+pub struct TrainClientFactory {
+    data: Arc<Dataset>,
+    parts: Arc<Vec<Vec<usize>>>,
+    workload: WorkloadCost,
+}
+
+impl TrainClientFactory {
+    /// A factory training on `data`, client `i` holding `parts[i]`.
+    pub fn new(data: Arc<Dataset>, parts: Arc<Vec<Vec<usize>>>, workload: WorkloadCost) -> Self {
+        TrainClientFactory { data, parts, workload }
+    }
+}
+
+impl ClientFactory for TrainClientFactory {
+    fn instantiate(
+        &self,
+        id: ClientId,
+        desc: &ClientDescriptor,
+        profile: &HardwareProfile,
+    ) -> Box<dyn ClientApp> {
+        let subset = self.data.subset(&self.parts[id as usize]);
+        let mut c = TrainClient::new(
+            id,
+            profile.clone(),
+            subset,
+            self.workload.clone(),
+            desc.seed,
+        );
+        if let Some(link) = desc.network_profile() {
+            c = c.with_network(link);
+        }
+        Box::new(c)
+    }
+}
+
+/// How a virtual population assigns profile-table entries to clients.
+#[derive(Debug, Clone)]
+enum ProfileAssignment {
+    /// Weighted draw over the table via a precomputed CDF (survey-sampled
+    /// fleets: each distinct profile's weight is its draw count, so the
+    /// survey marginals carry over).
+    Weighted(Vec<f64>),
+    /// Deterministic round-robin over the table (manual profile lists —
+    /// note the table is deduplicated, so a manual list with repeats
+    /// cycles its *distinct* entries).
+    Cycle,
+}
+
+#[derive(Debug, Clone)]
+enum PopulationKind {
+    /// One stored descriptor per client (below-threshold federations,
+    /// hand-built rosters, tests).
+    Explicit(Vec<ClientDescriptor>),
+    /// Descriptors derived on demand: `descriptor(i)` is a pure function
+    /// of `(seed, i)` — O(1) stored state per client.
+    Virtual {
+        len: usize,
+        seed: u64,
+        samples_per_client: u32,
+        network: bool,
+        assign: ProfileAssignment,
+    },
+}
+
+/// A federation roster in O(cohort + profile table) memory: per-client
+/// state lives as [`ClientDescriptor`]s (stored or derived), hardware as
+/// a deduplicated [`ProfileTable`].
+#[derive(Debug, Clone)]
+pub struct Population {
+    table: ProfileTable,
+    kind: PopulationKind,
+}
+
+impl Population {
+    /// Explicit population mirroring a resolved per-client profile list —
+    /// the bit-identity bridge from the materialised engine: descriptors
+    /// carry the same per-client seeds (`seed ^ (i << 8)`) and the same
+    /// network draws (one shared `NET_STREAM` generator advanced in id
+    /// order) the materialised assembly produces, so a factory-built
+    /// fleet equals a live one client for client.
+    pub fn from_profiles(
+        profiles: &[HardwareProfile],
+        samples_per_client: usize,
+        network: bool,
+        seed: u64,
+    ) -> Population {
+        assert!(!profiles.is_empty(), "a population needs at least one client");
+        let mut table = ProfileTable::new();
+        let mut net_rng = Pcg::new(seed, NET_STREAM);
+        let descriptors = profiles
+            .iter()
+            .enumerate()
+            .map(|(i, p)| ClientDescriptor {
+                profile: table.insert(p.clone()),
+                num_examples: samples_per_client as u32,
+                seed: seed ^ ((i as u64) << 8),
+                network: network.then(|| net::sample_network_index(&mut net_rng) as u8),
+                availability: 0,
+            })
+            .collect();
+        Population { table, kind: PopulationKind::Explicit(descriptors) }
+    }
+
+    /// Explicit population from hand-built descriptors (library users who
+    /// manage their own table/descriptor layout).
+    pub fn from_descriptors(table: ProfileTable, descriptors: Vec<ClientDescriptor>) -> Population {
+        assert!(!descriptors.is_empty(), "a population needs at least one client");
+        assert!(
+            descriptors.iter().all(|d| (d.profile as usize) < table.len()),
+            "descriptor profile index outside the table"
+        );
+        Population { table, kind: PopulationKind::Explicit(descriptors) }
+    }
+
+    /// Virtual population over a survey-sampled profile table: client `i`
+    /// draws its profile from the table's weights, its network tier and
+    /// seed from a dedicated per-client stream — all pure functions of
+    /// `(seed, i)`, nothing stored per client.
+    pub fn virtual_survey(
+        seed: u64,
+        len: usize,
+        table: ProfileTable,
+        samples_per_client: usize,
+        network: bool,
+    ) -> Population {
+        assert!(len > 0, "a population needs at least one client");
+        assert!(!table.is_empty(), "virtual population over an empty profile table");
+        let cdf = table.cdf();
+        Population {
+            table,
+            kind: PopulationKind::Virtual {
+                len,
+                seed,
+                samples_per_client: samples_per_client as u32,
+                network,
+                assign: ProfileAssignment::Weighted(cdf),
+            },
+        }
+    }
+
+    /// Virtual population cycling a (deduplicated) manual profile table:
+    /// client `i` uses table entry `i % table.len()`.
+    pub fn virtual_cycle(
+        seed: u64,
+        len: usize,
+        table: ProfileTable,
+        samples_per_client: usize,
+        network: bool,
+    ) -> Population {
+        assert!(len > 0, "a population needs at least one client");
+        assert!(!table.is_empty(), "virtual population over an empty profile table");
+        Population {
+            table,
+            kind: PopulationKind::Virtual {
+                len,
+                seed,
+                samples_per_client: samples_per_client as u32,
+                network,
+                assign: ProfileAssignment::Cycle,
+            },
+        }
+    }
+
+    /// Federation size.
+    pub fn len(&self) -> usize {
+        match &self.kind {
+            PopulationKind::Explicit(d) => d.len(),
+            PopulationKind::Virtual { len, .. } => *len,
+        }
+    }
+
+    /// True for the (unreachable by construction) zero-client roster.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The deduplicated hardware table descriptors index into.
+    pub fn profile_table(&self) -> &ProfileTable {
+        &self.table
+    }
+
+    /// Resolve a descriptor's profile index.
+    pub fn profile(&self, idx: u32) -> &HardwareProfile {
+        self.table.profile(idx)
+    }
+
+    /// Client `i`'s descriptor — a lookup for explicit populations, a
+    /// pure derivation for virtual ones (query-order independent;
+    /// property-tested).
+    pub fn descriptor(&self, i: usize) -> ClientDescriptor {
+        match &self.kind {
+            PopulationKind::Explicit(d) => d[i],
+            PopulationKind::Virtual { len, seed, samples_per_client, network, assign } => {
+                assert!(i < *len, "client {i} outside population of {len}");
+                let mut rng = Pcg::new(seed ^ DESCRIPTOR_SEED_SALT, i as u64);
+                let profile = match assign {
+                    ProfileAssignment::Weighted(cdf) => {
+                        let total = *cdf.last().expect("non-empty table");
+                        let x = rng.f64() * total;
+                        cdf.partition_point(|&c| c < x).min(cdf.len() - 1) as u32
+                    }
+                    ProfileAssignment::Cycle => (i % self.table.len()) as u32,
+                };
+                ClientDescriptor {
+                    profile,
+                    num_examples: *samples_per_client,
+                    seed: rng.next_u64(),
+                    network: network.then(|| net::sample_network_index(&mut rng) as u8),
+                    availability: 0,
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::profile::preset;
+    use crate::modelcost::small_cnn;
+
+    fn profiles() -> Vec<HardwareProfile> {
+        // Cycled list with a repeat: the table must deduplicate to 2.
+        vec![
+            preset("gtx-1060").unwrap(),
+            preset("budget-2019").unwrap(),
+            preset("gtx-1060").unwrap(),
+        ]
+    }
+
+    #[test]
+    fn descriptor_is_compact() {
+        assert!(
+            std::mem::size_of::<ClientDescriptor>() <= 32,
+            "descriptor grew past its compactness budget: {} bytes",
+            std::mem::size_of::<ClientDescriptor>()
+        );
+    }
+
+    #[test]
+    fn from_profiles_dedupes_and_preserves_assignment() {
+        let pop = Population::from_profiles(&profiles(), 64, false, 7);
+        assert_eq!(pop.len(), 3);
+        assert_eq!(pop.profile_table().len(), 2, "repeat profile deduplicated");
+        let d0 = pop.descriptor(0);
+        let d2 = pop.descriptor(2);
+        assert_eq!(d0.profile, d2.profile, "same preset, same table entry");
+        assert_ne!(d0.seed, d2.seed, "per-client seeds differ");
+        assert_eq!(pop.profile(d0.profile).gpu.slug, "gtx-1060");
+        assert_eq!(pop.profile(pop.descriptor(1).profile).name, profiles()[1].name);
+        assert!(d0.network.is_none());
+    }
+
+    #[test]
+    fn from_profiles_network_matches_the_materialized_stream() {
+        let pop = Population::from_profiles(&profiles(), 64, true, 11);
+        let mut net_rng = Pcg::new(11, NET_STREAM);
+        for i in 0..pop.len() {
+            let expected = net::sample_network(&mut net_rng);
+            assert_eq!(
+                pop.descriptor(i).network_profile(),
+                Some(expected),
+                "client {i} link diverged from the materialized draw order"
+            );
+        }
+    }
+
+    #[test]
+    fn virtual_descriptors_are_query_order_independent() {
+        let mut table = ProfileTable::new();
+        for p in profiles() {
+            table.insert(p);
+        }
+        let pop = Population::virtual_survey(3, 10_000, table.clone(), 32, true);
+        let again = Population::virtual_survey(3, 10_000, table, 32, true);
+        // Forward on one instance, scattered on the other.
+        let forward: Vec<ClientDescriptor> = (0..50).map(|i| pop.descriptor(i)).collect();
+        for i in (0..50usize).rev().step_by(3) {
+            let _ = again.descriptor(i * 100);
+        }
+        for (i, d) in forward.iter().enumerate() {
+            assert_eq!(*d, again.descriptor(i), "client {i}");
+            assert_eq!(*d, pop.descriptor(i), "client {i} re-query");
+        }
+        // In-range profile indices and populated fields.
+        for i in [0usize, 1, 9_999] {
+            let d = pop.descriptor(i);
+            assert!((d.profile as usize) < pop.profile_table().len());
+            assert_eq!(d.num_examples, 32);
+            assert!(d.network.is_some());
+        }
+    }
+
+    #[test]
+    fn virtual_cycle_assigns_round_robin() {
+        let mut table = ProfileTable::new();
+        table.insert(preset("gtx-1060").unwrap());
+        table.insert(preset("budget-2019").unwrap());
+        let pop = Population::virtual_cycle(0, 100, table, 16, false);
+        for i in 0..10 {
+            assert_eq!(pop.descriptor(i).profile as usize, i % 2);
+        }
+    }
+
+    #[test]
+    fn sim_factory_builds_the_described_client() {
+        let pop = Population::from_profiles(&profiles(), 48, true, 5);
+        let factory = SimClientFactory::new(small_cnn());
+        let d = pop.descriptor(1);
+        let client = factory.instantiate(1, &d, pop.profile(d.profile));
+        assert_eq!(client.id(), 1);
+        assert_eq!(client.num_examples(), 48);
+        assert_eq!(client.profile().name, profiles()[1].name);
+        assert_eq!(client.network().copied(), d.network_profile());
+    }
+}

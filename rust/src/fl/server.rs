@@ -19,6 +19,7 @@
 //! counts, so the bit-identity invariant extends to dynamic federations
 //! (DESIGN.md §9, SCENARIOS.md).
 
+use std::borrow::Cow;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -32,11 +33,12 @@ use crate::sched::pool::FitOutcomeSlim;
 use crate::sched::{ExecutorFactory, FitTask, ReorderBuffer, Scheduler, Trace, WorkerPool};
 
 use super::bouquet::BouquetContext;
-use super::client::{ClientApp, FitConfig, FitResult};
+use super::client::{ClientApp, ClientId, FitConfig, FitResult};
 use super::clientmgr::{ClientManager, RoundLedger, Selection};
 use super::events::{FailureKind, FlEvent, FlObserver, HistoryObserver, TraceObserver};
 use super::history::{History, RoundRecord};
-use super::params::ParamVector;
+use super::params::{ParamScratch, ParamVector};
+use super::population::{ClientFactory, Population};
 use super::scenario::Scenario;
 use super::strategy::{AggAccumulator, Strategy};
 
@@ -68,6 +70,54 @@ impl Default for ServerConfig {
     }
 }
 
+/// The federation roster the round loop checks clients out of: either a
+/// materialised fleet of live objects (the historical layout) or a
+/// descriptor-backed [`Population`] that instantiates clients per round
+/// through a [`ClientFactory`] (DESIGN.md §11).  Checkout/checkin is the
+/// one seam the engine needs — everything downstream of it (fits, gating,
+/// folding) is layout-agnostic.
+enum Roster {
+    /// Live clients; `None` marks one currently checked out to a worker.
+    Materialized(Vec<Option<Box<dyn ClientApp>>>),
+    /// Compact descriptors; clients exist only while a round runs them.
+    Population {
+        population: Population,
+        factory: Box<dyn ClientFactory>,
+    },
+}
+
+impl Roster {
+    fn len(&self) -> usize {
+        match self {
+            Roster::Materialized(v) => v.len(),
+            Roster::Population { population, .. } => population.len(),
+        }
+    }
+
+    /// Take client `idx` out for one fit: the live object for a
+    /// materialised fleet, a factory instantiation for a population.
+    fn checkout(&mut self, idx: usize) -> Box<dyn ClientApp> {
+        match self {
+            Roster::Materialized(v) => v[idx].take().expect("client checked in"),
+            Roster::Population { population, factory } => {
+                let desc = population.descriptor(idx);
+                factory.instantiate(idx as ClientId, &desc, population.profile(desc.profile))
+            }
+        }
+    }
+
+    /// Hand client `idx` back after its fit.  For a population the
+    /// descriptor *is* the checked-in form — the live object is dropped
+    /// (clients are stateless across rounds by construction, asserted by
+    /// the materialised-vs-population bit-identity property).
+    fn checkin(&mut self, idx: usize, client: Box<dyn ClientApp>) {
+        match self {
+            Roster::Materialized(v) => v[idx] = Some(client),
+            Roster::Population { .. } => drop(client),
+        }
+    }
+}
+
 /// The federated server.
 pub struct ServerApp {
     pub cfg: ServerConfig,
@@ -75,8 +125,7 @@ pub struct ServerApp {
     pub env_cfg: EnvConfig,
     strategy: Box<dyn Strategy>,
     scheduler: Box<dyn Scheduler>,
-    /// `None` marks a client currently checked out to a fit worker.
-    clients: Vec<Option<Box<dyn ClientApp>>>,
+    roster: Roster,
     /// Held-out evaluation data (centralised, on the server).
     eval_data: Option<Dataset>,
     /// Real-execution concurrency (1 = in-thread sequential fits).
@@ -93,6 +142,9 @@ pub struct ServerApp {
     scenario: Option<Scenario>,
     /// User subscribers to the typed event stream (`fl::events`).
     observers: Vec<Box<dyn FlObserver>>,
+    /// Recycled parameter buffers shared by client fits and the
+    /// aggregation accumulator (EXPERIMENTS.md §Perf).
+    scratch: ParamScratch,
     pub trace: Trace,
 }
 
@@ -103,6 +155,45 @@ impl ServerApp {
         strategy: Box<dyn Strategy>,
         scheduler: Box<dyn Scheduler>,
         clients: Vec<Box<dyn ClientApp>>,
+    ) -> Self {
+        Self::with_roster(
+            cfg,
+            host,
+            strategy,
+            scheduler,
+            Roster::Materialized(clients.into_iter().map(Some).collect()),
+        )
+    }
+
+    /// Build a server over a descriptor-backed [`Population`]: clients
+    /// exist as compact descriptors and are instantiated through
+    /// `factory` only for the rounds that select them, so a
+    /// million-client federation with `Selection::Count(64)` runs in
+    /// memory proportional to the cohort and the profile table, never the
+    /// population (DESIGN.md §11).
+    pub fn with_population(
+        cfg: ServerConfig,
+        host: HardwareProfile,
+        strategy: Box<dyn Strategy>,
+        scheduler: Box<dyn Scheduler>,
+        population: Population,
+        factory: Box<dyn ClientFactory>,
+    ) -> Self {
+        Self::with_roster(
+            cfg,
+            host,
+            strategy,
+            scheduler,
+            Roster::Population { population, factory },
+        )
+    }
+
+    fn with_roster(
+        cfg: ServerConfig,
+        host: HardwareProfile,
+        strategy: Box<dyn Strategy>,
+        scheduler: Box<dyn Scheduler>,
+        roster: Roster,
     ) -> Self {
         // The paper's §3: hardware controls are global; only the
         // limited-parallel extension may relax isolation.
@@ -117,13 +208,14 @@ impl ServerApp {
             env_cfg: EnvConfig { isolation, ..Default::default() },
             strategy,
             scheduler,
-            clients: clients.into_iter().map(Some).collect(),
+            roster,
             eval_data: None,
             workers: 1,
             executor_factory: None,
             dynamics: None,
             scenario: None,
             observers: Vec::new(),
+            scratch: ParamScratch::default(),
             trace: Trace::default(),
         }
     }
@@ -195,7 +287,7 @@ impl ServerApp {
     }
 
     pub fn num_clients(&self) -> usize {
-        self.clients.len()
+        self.roster.len()
     }
 
     /// Run the federation with a PJRT executor; returns the training
@@ -243,7 +335,8 @@ impl ServerApp {
         recorder: &mut HistoryObserver,
         tracer: &mut TraceObserver,
     ) -> Result<ParamVector, FlError> {
-        if self.clients.is_empty() {
+        let roster_len = self.roster.len();
+        if roster_len == 0 {
             return Err(FlError::NoClients { round: 0 });
         }
         // Compile a pending scenario now — against the *final* scheduler's
@@ -254,7 +347,7 @@ impl ServerApp {
             if let Some(sc) = &self.scenario {
                 self.dynamics = Some(sc.build_dynamics(
                     self.cfg.seed,
-                    self.clients.len(),
+                    roster_len,
                     self.scheduler.max_concurrency(),
                 ));
             }
@@ -262,7 +355,11 @@ impl ServerApp {
         let mut global = init;
         let mut manager = ClientManager::new(self.cfg.seed, self.cfg.selection);
         let pool = if self.workers > 1 {
-            Some(WorkerPool::spawn(self.workers, self.executor_factory.clone()))
+            Some(WorkerPool::spawn_scratched(
+                self.workers,
+                self.executor_factory.clone(),
+                self.scratch.clone(),
+            ))
         } else {
             None
         };
@@ -270,7 +367,7 @@ impl ServerApp {
             recorder,
             tracer,
             &mut self.observers,
-            FlEvent::RunBegin { rounds: self.cfg.rounds, clients: self.clients.len() },
+            FlEvent::RunBegin { rounds: self.cfg.rounds, clients: roster_len },
         );
 
         for round in 0..self.cfg.rounds {
@@ -280,14 +377,28 @@ impl ServerApp {
             if let Some(d) = self.dynamics.as_mut() {
                 d.begin_round();
             }
-            let selected: Vec<usize> = match self.dynamics.as_mut() {
+            let cohort: Cow<'_, [usize]> = match self.dynamics.as_mut() {
                 Some(d) => {
                     // Availability is judged on the scenario timeline (the
                     // sum of recorded round lengths), which is identical
                     // across worker counts and consistent with the history.
                     let now = d.now_s();
-                    let eligible = d.eligible_at(now);
-                    if eligible.is_empty() {
+                    // Below the dense threshold the materialised-era pool
+                    // sweep (and its RNG stream) is kept bit-identical;
+                    // above it, eligibility is evaluated lazily for
+                    // sampled candidates only — no O(population) work per
+                    // round (DESIGN.md §11).
+                    let sel = if d.is_lazy() {
+                        manager.select_filtered(roster_len, &mut |i| d.is_eligible(i, now))
+                    } else {
+                        let eligible = d.eligible_at(now);
+                        if eligible.is_empty() {
+                            Vec::new()
+                        } else {
+                            manager.select_from(&eligible)
+                        }
+                    };
+                    if sel.is_empty() {
                         // Nobody is online: fast-forward to the next member
                         // coming back (otherwise the timeline would never
                         // move and every later round would see the same
@@ -322,32 +433,39 @@ impl ServerApp {
                         notify_round_end(recorder, tracer, &mut self.observers, record);
                         continue;
                     }
-                    manager.select_from(&eligible)
+                    Cow::Owned(sel)
                 }
-                None => manager.select(self.clients.len()),
+                // Static federations borrow the manager's cached pool /
+                // scratch cohort — no per-round selection allocation.
+                None => Cow::Borrowed(manager.select(roster_len)),
             };
+            let selected: &[usize] = cohort.as_ref();
             let fit_cfg = self.strategy.configure(round, &self.cfg.fit);
             notify(
                 recorder,
                 tracer,
                 &mut self.observers,
-                FlEvent::RoundBegin { round, selected: &selected },
+                FlEvent::RoundBegin { round, selected },
             );
 
             // --- fit phase: stream completions into the accumulator ------
             let mut ledger =
                 RoundLedger::new(selected.iter().map(|&i| i as u32).collect());
-            let mut acc = self.strategy.accumulator(global.len(), selected.len());
+            let mut acc = self.strategy.accumulator_recycled(
+                global.len(),
+                selected.len(),
+                &self.scratch,
+            );
             let round_t0 = clock.now_s();
             let mut gate = self.dynamics.as_ref().map(|d| d.begin_gate(d.now_s()));
             let mut dyn_gate = self.dynamics.as_mut().zip(gate.as_mut());
             match &pool {
                 Some(pool) => round_pooled(
-                    &mut self.clients,
+                    &mut self.roster,
                     &self.host,
                     &self.env_cfg,
                     pool,
-                    &selected,
+                    selected,
                     &global,
                     &fit_cfg,
                     clock,
@@ -356,17 +474,18 @@ impl ServerApp {
                     &mut dyn_gate,
                 )?,
                 None => round_inline(
-                    &mut self.clients,
+                    &mut self.roster,
                     &self.host,
                     &self.env_cfg,
                     &mut executor,
-                    &selected,
+                    selected,
                     &global,
                     &fit_cfg,
                     clock,
                     &mut ledger,
                     &mut acc,
                     &mut dyn_gate,
+                    &self.scratch,
                 )?,
             }
 
@@ -613,7 +732,7 @@ fn notify_round_end(
 /// each finished client folded into the accumulator immediately.
 #[allow(clippy::too_many_arguments)]
 fn round_inline(
-    clients: &mut [Option<Box<dyn ClientApp>>],
+    roster: &mut Roster,
     host: &HardwareProfile,
     env_cfg: &EnvConfig,
     executor: &mut Option<&mut ModelExecutor>,
@@ -624,9 +743,10 @@ fn round_inline(
     ledger: &mut RoundLedger,
     acc: &mut Box<dyn AggAccumulator>,
     dyn_gate: &mut DynGate<'_>,
+    scratch: &ParamScratch,
 ) -> Result<(), FlError> {
     for &ci in selected {
-        let client = clients[ci].as_mut().expect("client checked in");
+        let mut client = roster.checkout(ci);
         let id = client.id();
         let fit_result = {
             let mut ctx = BouquetContext {
@@ -634,9 +754,11 @@ fn round_inline(
                 clock: &mut *clock,
                 host,
                 env_cfg: env_cfg.clone(),
+                scratch: scratch.clone(),
             };
             client.fit(global, fit_cfg, &mut ctx)
         };
+        roster.checkin(ci, client);
         match fit_result {
             Ok(result) => fold_gated(ledger, acc, dyn_gate, ci, result)?,
             Err(e @ EmuError::GpuOom { .. }) | Err(e @ EmuError::HostOom { .. }) => {
@@ -658,7 +780,7 @@ fn round_inline(
 /// order — bit-identical to the inline engine.
 #[allow(clippy::too_many_arguments)]
 fn round_pooled(
-    clients: &mut [Option<Box<dyn ClientApp>>],
+    roster: &mut Roster,
     host: &HardwareProfile,
     env_cfg: &EnvConfig,
     pool: &WorkerPool,
@@ -672,7 +794,7 @@ fn round_pooled(
 ) -> Result<(), FlError> {
     let shared = Arc::new(global.clone());
     for (pos, &ci) in selected.iter().enumerate() {
-        let client = clients[ci].take().expect("client checked in");
+        let client = roster.checkout(ci);
         pool.submit(FitTask {
             index: pos,
             client,
@@ -687,7 +809,7 @@ fn round_pooled(
     let mut fatal: Option<FlError> = None;
     for _ in 0..selected.len() {
         let outcome = pool.recv()?;
-        clients[selected[outcome.index]] = Some(outcome.client);
+        roster.checkin(selected[outcome.index], outcome.client);
         reorder.accept(FitOutcomeSlim {
             index: outcome.index,
             client_id: outcome.client_id,

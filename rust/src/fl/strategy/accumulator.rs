@@ -17,7 +17,7 @@
 use crate::error::FlError;
 
 use super::super::client::FitResult;
-use super::super::params::ParamVector;
+use super::super::params::{ParamScratch, ParamVector};
 
 /// What a finished accumulator hands back to the strategy.
 pub enum AccOutput {
@@ -72,6 +72,10 @@ pub struct StreamingMean {
     total_weight: f64,
     total_examples: usize,
     clients: usize,
+    /// `Some`: recycle buffers through this stash — folded client update
+    /// vectors go back to it on every `push`, and `finish` both draws the
+    /// output f32 buffer from it and returns the f64 fold buffer.
+    scratch: Option<ParamScratch>,
 }
 
 impl StreamingMean {
@@ -81,6 +85,23 @@ impl StreamingMean {
             total_weight: 0.0,
             total_examples: 0,
             clients: 0,
+            scratch: None,
+        }
+    }
+
+    /// A streaming mean whose buffers cycle through `scratch`
+    /// (EXPERIMENTS.md §Perf): the fold buffer comes from the stash, every
+    /// folded update's vector returns to it, and the finished aggregate is
+    /// built in a stash buffer — steady-state rounds allocate no fresh
+    /// parameter-sized vectors.  Arithmetic (and therefore engine output)
+    /// is bit-identical to [`StreamingMean::new`].
+    pub fn recycled(num_params: usize, scratch: ParamScratch) -> Self {
+        StreamingMean {
+            mean: scratch.take_f64_zeroed(num_params),
+            total_weight: 0.0,
+            total_examples: 0,
+            clients: 0,
+            scratch: Some(scratch),
         }
     }
 }
@@ -111,8 +132,14 @@ impl AggAccumulator for StreamingMean {
         }
         self.total_examples += result.num_examples;
         self.clients += 1;
+        if let Some(scratch) = &self.scratch {
+            // The folded update's buffer goes back to the stash for the
+            // next fit to reuse (instead of dropping here).
+            scratch.recycle(result.params);
+        }
         Ok(())
-        // `result` drops here: nothing of the update outlives the fold.
+        // Whatever remains of `result` drops here: nothing of the update
+        // outlives the fold.
     }
 
     fn len(&self) -> usize {
@@ -127,12 +154,21 @@ impl AggAccumulator for StreamingMean {
         if self.clients == 0 {
             return Err(FlError::Strategy("aggregate over zero clients".into()));
         }
-        let params =
-            ParamVector::from_vec(self.mean.iter().map(|&x| x as f32).collect());
+        let StreamingMean { mean, total_examples, clients, scratch, .. } = *self;
+        let params = match &scratch {
+            Some(s) => {
+                let mut out = s.take_f32();
+                out.extend(mean.iter().map(|&x| x as f32));
+                let pv = ParamVector::from_vec(out);
+                s.recycle_f64(mean);
+                pv
+            }
+            None => ParamVector::from_vec(mean.iter().map(|&x| x as f32).collect()),
+        };
         Ok(AccOutput::Mean(MeanAggregate {
             params,
-            total_examples: self.total_examples,
-            clients: self.clients,
+            total_examples,
+            clients,
         }))
     }
 }
@@ -272,6 +308,38 @@ mod tests {
         let mut acc = StreamingMean::new(3);
         assert!(acc.push(result(0, vec![1.0], 5)).is_err());
         assert!(Box::new(StreamingMean::new(3)).finish().is_err());
+    }
+
+    #[test]
+    fn recycled_streaming_mean_is_bit_identical_and_recycles() {
+        let p = 512;
+        let scratch = ParamScratch::default();
+        // Two rounds through the same scratch: the second round's fold
+        // buffer and output come from recycled memory, and the result must
+        // be bit-identical to a cold accumulator's.
+        for round in 0..2u32 {
+            let mut plain = Box::new(StreamingMean::new(p));
+            let mut rec = Box::new(StreamingMean::recycled(p, scratch.clone()));
+            for c in 0..6u32 {
+                let mk = || result(c, client_vec(c + round * 10, p), 8 + c as usize);
+                plain.push(mk()).unwrap();
+                rec.push(mk()).unwrap();
+                assert_eq!(rec.buffered_updates(), 0);
+            }
+            let a = match plain.finish().unwrap() {
+                AccOutput::Mean(m) => m.params,
+                _ => unreachable!(),
+            };
+            let b = match rec.finish().unwrap() {
+                AccOutput::Mean(m) => m.params,
+                _ => unreachable!(),
+            };
+            for (x, y) in a.as_slice().iter().zip(b.as_slice()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "recycling changed the fold");
+            }
+        }
+        // Update buffers and the fold buffer made it back to the stash.
+        assert!(scratch.stashed() > 0, "nothing was recycled");
     }
 
     #[test]

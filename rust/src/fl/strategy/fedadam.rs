@@ -5,7 +5,7 @@ use crate::error::FlError;
 use crate::runtime::ModelExecutor;
 
 use super::super::client::FitResult;
-use super::super::params::ParamVector;
+use super::super::params::{ParamScratch, ParamVector};
 use super::{weighted_average, AccOutput, AggAccumulator, Strategy, StreamingMean};
 
 /// Server-side Adam over round updates.
@@ -63,6 +63,15 @@ impl Strategy for FedAdam {
         _expected_clients: usize,
     ) -> Box<dyn AggAccumulator> {
         Box::new(StreamingMean::new(num_params))
+    }
+
+    fn accumulator_recycled(
+        &self,
+        num_params: usize,
+        _expected_clients: usize,
+        scratch: &ParamScratch,
+    ) -> Box<dyn AggAccumulator> {
+        Box::new(StreamingMean::recycled(num_params, scratch.clone()))
     }
 
     fn reduce(

@@ -4,7 +4,7 @@ use crate::error::FlError;
 use crate::runtime::ModelExecutor;
 
 use super::super::client::FitResult;
-use super::super::params::ParamVector;
+use super::super::params::{ParamScratch, ParamVector};
 use super::{weighted_average, AggAccumulator, Strategy, StreamingMean};
 
 /// Plain federated averaging.
@@ -24,6 +24,15 @@ impl Strategy for FedAvg {
         _expected_clients: usize,
     ) -> Box<dyn AggAccumulator> {
         Box::new(StreamingMean::new(num_params))
+    }
+
+    fn accumulator_recycled(
+        &self,
+        num_params: usize,
+        _expected_clients: usize,
+        scratch: &ParamScratch,
+    ) -> Box<dyn AggAccumulator> {
+        Box::new(StreamingMean::recycled(num_params, scratch.clone()))
     }
 
     fn aggregate(

@@ -5,7 +5,7 @@ use crate::error::FlError;
 use crate::runtime::ModelExecutor;
 
 use super::super::client::FitResult;
-use super::super::params::ParamVector;
+use super::super::params::{ParamScratch, ParamVector};
 use super::{weighted_average, AccOutput, AggAccumulator, Strategy, StreamingMean};
 
 /// Server momentum over round updates: `m <- beta m + (avg - global)`,
@@ -52,6 +52,15 @@ impl Strategy for FedAvgM {
         _expected_clients: usize,
     ) -> Box<dyn AggAccumulator> {
         Box::new(StreamingMean::new(num_params))
+    }
+
+    fn accumulator_recycled(
+        &self,
+        num_params: usize,
+        _expected_clients: usize,
+        scratch: &ParamScratch,
+    ) -> Box<dyn AggAccumulator> {
+        Box::new(StreamingMean::recycled(num_params, scratch.clone()))
     }
 
     fn reduce(

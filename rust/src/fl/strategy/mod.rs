@@ -42,7 +42,7 @@ use crate::error::FlError;
 use crate::runtime::ModelExecutor;
 
 use super::client::{FitConfig, FitResult};
-use super::params::ParamVector;
+use super::params::{ParamScratch, ParamVector};
 
 /// Builds a fresh boxed strategy instance (registry entry).
 pub type StrategyFactory = Arc<dyn Fn() -> Box<dyn Strategy> + Send + Sync>;
@@ -135,6 +135,22 @@ pub trait Strategy {
         expected_clients: usize,
     ) -> Box<dyn AggAccumulator> {
         Box::new(BoundedBuffer::new(expected_clients))
+    }
+
+    /// Like [`Strategy::accumulator`], with a recycled-buffer stash the
+    /// round engine threads through every round (EXPERIMENTS.md §Perf).
+    /// The default ignores the stash — custom strategies need no changes;
+    /// the mean family overrides this with [`StreamingMean::recycled`] so
+    /// steady-state rounds allocate no fresh parameter-sized vectors.
+    /// Implementations must produce output bit-identical to their
+    /// [`Strategy::accumulator`].
+    fn accumulator_recycled(
+        &self,
+        num_params: usize,
+        expected_clients: usize,
+        _scratch: &ParamScratch,
+    ) -> Box<dyn AggAccumulator> {
+        self.accumulator(num_params, expected_clients)
     }
 
     /// Combine a finished accumulator into the next global model.

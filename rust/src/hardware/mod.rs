@@ -14,4 +14,4 @@ pub use cpu::{cpu_by_slug, CpuSpec, CPU_DB};
 pub use gpu::{gpu_by_slug, GpuArch, GpuSpec, FIG2_GPUS, GPU_DB};
 pub use profile::{preset, HardwareProfile, PRESET_NAMES};
 pub use ram::{ram_with_gib, RamSpec, RAM_PRESETS};
-pub use sampler::{HardwareSampler, SamplerConfig};
+pub use sampler::{HardwareSampler, ProfileTable, SamplerConfig};

@@ -9,6 +9,8 @@
 //! drawn among those with the sampled core count, biased toward the GPU's
 //! launch-year era.
 
+use std::collections::HashMap;
+
 use crate::error::ConfigError;
 use crate::util::rng::Pcg;
 
@@ -143,6 +145,43 @@ impl HardwareSampler {
         (0..n).map(|_| self.sample()).collect()
     }
 
+    /// Stream `draws` accepted samples into a deduplicated
+    /// [`ProfileTable`] — the population layer's O(distinct)
+    /// representation of an arbitrarily large federation.  `accept`
+    /// filters candidates (host feasibility, usually); repeated draws of
+    /// the same configuration accumulate as table weight, so the survey
+    /// marginals carry into the table's CDF instead of being lost to the
+    /// dedup.
+    pub fn sample_table(
+        &mut self,
+        draws: usize,
+        accept: impl Fn(&HardwareProfile) -> bool,
+    ) -> Result<ProfileTable, ConfigError> {
+        assert!(draws > 0, "sample_table needs at least one draw");
+        let mut table = ProfileTable::new();
+        let mut accepted = 0usize;
+        let mut attempts = 0usize;
+        let budget = 10_000 + draws.saturating_mul(100);
+        while accepted < draws {
+            if attempts >= budget {
+                return Err(ConfigError::InvalidValue {
+                    key: "hardware".into(),
+                    msg: format!(
+                        "sampler produced only {accepted}/{draws} acceptable \
+                         profiles in {attempts} attempts"
+                    ),
+                });
+            }
+            attempts += 1;
+            let p = self.sample();
+            if accept(&p) {
+                table.insert(p);
+                accepted += 1;
+            }
+        }
+        Ok(table)
+    }
+
     fn tier_bias(&self, item_tier: f64, gpu_tier: f64) -> f64 {
         // Gaussian affinity between the GPU tier and the candidate tier;
         // sigma shrinks as affinity grows. affinity=0 -> flat.
@@ -202,6 +241,85 @@ impl HardwareSampler {
             .collect();
         let gib = RAM_SHARES[self.rng.weighted(&weights)].0;
         ram_with_gib(gib).expect("survey RAM sizes exist as presets")
+    }
+}
+
+/// Deduplicated hardware-profile table: streaming inserts return stable
+/// indices, repeated inserts accumulate weight.  This is how the
+/// population layer stores the hardware of a million-client federation
+/// in O(distinct configurations) memory — a client descriptor holds a
+/// `u32` index into it (`fl::population::ClientDescriptor`).
+///
+/// Deduplication is by **full profile equality** (the name only buckets
+/// the lookup): two sampled rigs can share a `slug+cores+ram` name while
+/// differing in CPU SKU, and collapsing those would silently change
+/// emulated timings.
+#[derive(Debug, Clone, Default)]
+pub struct ProfileTable {
+    profiles: Vec<HardwareProfile>,
+    weights: Vec<f64>,
+    index: HashMap<String, Vec<u32>>,
+}
+
+impl ProfileTable {
+    /// An empty table.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Insert one profile: a new configuration appends an entry; an
+    /// exact repeat bumps the existing entry's weight.  Returns the
+    /// entry's stable index either way.
+    pub fn insert(&mut self, p: HardwareProfile) -> u32 {
+        let bucket = self.index.entry(p.name.clone()).or_default();
+        for &i in bucket.iter() {
+            if self.profiles[i as usize] == p {
+                self.weights[i as usize] += 1.0;
+                return i;
+            }
+        }
+        let i = self.profiles.len() as u32;
+        bucket.push(i);
+        self.profiles.push(p);
+        self.weights.push(1.0);
+        i
+    }
+
+    /// Distinct configurations in the table.
+    pub fn len(&self) -> usize {
+        self.profiles.len()
+    }
+
+    /// True before the first insert.
+    pub fn is_empty(&self) -> bool {
+        self.profiles.is_empty()
+    }
+
+    /// Resolve an entry index.
+    pub fn profile(&self, i: u32) -> &HardwareProfile {
+        &self.profiles[i as usize]
+    }
+
+    /// All entries, insertion-ordered (index-aligned with [`ProfileTable::weights`]).
+    pub fn profiles(&self) -> &[HardwareProfile] {
+        &self.profiles
+    }
+
+    /// Per-entry draw counts (unnormalised weights).
+    pub fn weights(&self) -> &[f64] {
+        &self.weights
+    }
+
+    /// Cumulative weights, for weighted index draws over the table.
+    pub fn cdf(&self) -> Vec<f64> {
+        let mut acc = 0.0;
+        self.weights
+            .iter()
+            .map(|w| {
+                acc += w;
+                acc
+            })
+            .collect()
     }
 }
 
@@ -287,5 +405,39 @@ mod tests {
     fn impossible_constraints_error() {
         let cfg = SamplerConfig { min_vram_gib: 100.0, ..Default::default() };
         assert!(HardwareSampler::new(0, cfg).is_err());
+    }
+
+    #[test]
+    fn profile_table_dedupes_and_accumulates_weight() {
+        let mut s = HardwareSampler::with_defaults(19);
+        let mut table = ProfileTable::new();
+        let mut indices = Vec::new();
+        let draws = 500;
+        for _ in 0..draws {
+            indices.push(table.insert(s.sample()));
+        }
+        assert!(table.len() < draws, "500 survey draws must collide");
+        assert!((table.weights().iter().sum::<f64>() - draws as f64).abs() < 1e-9);
+        // Stable indices: re-inserting an existing profile returns its slot.
+        let p = table.profile(indices[0]).clone();
+        let w_before = table.weights()[indices[0] as usize];
+        assert_eq!(table.insert(p), indices[0]);
+        assert_eq!(table.weights()[indices[0] as usize], w_before + 1.0);
+        // CDF is monotone and ends at the total weight.
+        let cdf = table.cdf();
+        assert!(cdf.windows(2).all(|w| w[0] <= w[1]));
+        assert!((cdf.last().unwrap() - (draws as f64 + 1.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sample_table_respects_accept_and_streams_draws() {
+        let mut s = HardwareSampler::with_defaults(21);
+        let table = s.sample_table(300, |p| p.gpu.vram_gib >= 6.0).unwrap();
+        assert!(!table.is_empty());
+        assert!((table.weights().iter().sum::<f64>() - 300.0).abs() < 1e-9);
+        assert!(table.profiles().iter().all(|p| p.gpu.vram_gib >= 6.0));
+        // An unsatisfiable filter errors instead of spinning.
+        let mut s = HardwareSampler::with_defaults(22);
+        assert!(s.sample_table(10, |_| false).is_err());
     }
 }

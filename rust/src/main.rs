@@ -101,6 +101,10 @@ fn cmd_list(raw: &[String]) -> Result<()> {
     for &kind in MODEL_KINDS {
         println!("  {kind}");
     }
+    println!("\npartition schemes ([data] partition):");
+    for &name in bouquetfl::data::PARTITION_SCHEMES {
+        println!("  {name}");
+    }
     println!("\nhardware profile presets (--profiles, see also list-hw):");
     for &name in PRESET_NAMES {
         println!("  {}", preset(name)?.describe());

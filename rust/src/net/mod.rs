@@ -99,11 +99,18 @@ fn tier_cdf() -> &'static [f64] {
 /// assert_eq!(sample_network(&mut again), link);
 /// ```
 pub fn sample_network(rng: &mut Pcg) -> NetworkProfile {
+    NET_TIERS[sample_network_index(rng)].0
+}
+
+/// Sample a tier *index* into [`NET_TIERS`] — same draw (and the same RNG
+/// stream) as [`sample_network`], but returning the compact index the
+/// population layer stores in a client descriptor instead of the profile
+/// itself.
+pub fn sample_network_index(rng: &mut Pcg) -> usize {
     let cdf = tier_cdf();
     let total = *cdf.last().expect("NET_TIERS is non-empty");
     let x = rng.f64() * total;
-    let i = cdf.partition_point(|&c| c < x).min(NET_TIERS.len() - 1);
-    NET_TIERS[i].0
+    cdf.partition_point(|&c| c < x).min(NET_TIERS.len() - 1)
 }
 
 #[cfg(test)]

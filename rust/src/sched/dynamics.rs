@@ -32,6 +32,9 @@
 //! preserved by construction.  See `SCENARIOS.md` for the user-facing
 //! guide.
 
+use std::collections::HashMap;
+
+use crate::fl::population::DENSE_POPULATION_MAX;
 use crate::util::rng::Pcg;
 
 use super::Schedule;
@@ -373,13 +376,79 @@ impl RoundGate {
 const CHURN_STREAM: u64 = 0xD11A;
 /// Seed salt separating per-client trace RNGs from the data/hardware seeds.
 const TRACE_SEED_SALT: u64 = 0x7ACE;
+/// Seed salt separating lazy-mode per-client membership chains from the
+/// dense sweep's shared churn stream.
+const LAZY_CHURN_SALT: u64 = 0x10C4;
+/// Seed salt for the bounded wakeup probe set of an all-offline lazy round.
+const WAKEUP_PROBE_SALT: u64 = 0x3A4E;
+/// Fresh candidates a lazy [`FederationDynamics::next_wakeup_after`]
+/// probes on top of the already-touched clients.
+const WAKEUP_PROBES: usize = 64;
 
-/// Whole-federation dynamic state: one availability trace per client,
+/// Per-map entry bound on the lazy caches.  Lazy traces and membership
+/// chains are pure derivations of `(seed, client, round)`, so the maps
+/// are true caches — dropping them never changes an answer, only the
+/// cost of the next touch.  Bounding them keeps a one-off O(population)
+/// probe (the selection sweep fallback for a starved federation) from
+/// pinning O(population) memory for the rest of the run.
+const LAZY_CACHE_MAX: usize = 4 * DENSE_POPULATION_MAX;
+
+/// One Bernoulli step of the membership Markov chain — the single
+/// definition the dense sweep, the lazy chains and the uncached
+/// diagnostic walk all share (they must implement the *same* chain).
+fn churn_step(member: &mut bool, u: f64, join_prob: f64, leave_prob: f64) {
+    if *member {
+        if u < leave_prob {
+            *member = false;
+        }
+    } else if u < join_prob {
+        *member = true;
+    }
+}
+
+/// One lazily-evaluated client's membership chain: a per-client RNG
+/// stream advanced one Bernoulli step per begun round, so the state at
+/// round `r` is a pure function of `(seed, client, r)` no matter when —
+/// or whether — the client is first queried.
+#[derive(Debug, Clone)]
+struct LazyMember {
+    rng: Pcg,
+    rounds: u64,
+    member: bool,
+}
+
+/// Per-client dynamic state, dense or lazy (DESIGN.md §11).
+enum DynState {
+    /// Materialised-era layout: every trace built eagerly, membership
+    /// swept with one shared churn stream per round.  Bit-identical to
+    /// the historical engine — kept for populations up to
+    /// [`DENSE_POPULATION_MAX`].
+    Dense {
+        traces: Vec<AvailabilityTrace>,
+        member: Vec<bool>,
+        churn_rng: Pcg,
+    },
+    /// Population-scale layout: traces and membership chains exist only
+    /// for clients the run has actually touched (selection candidates,
+    /// gate admissions) — O(touched), never O(population).  Both are
+    /// derived from per-client streams, so the state is query-order
+    /// independent; the churn stream necessarily differs from the dense
+    /// sweep's (documented on [`DENSE_POPULATION_MAX`]).
+    Lazy {
+        traces: HashMap<usize, AvailabilityTrace>,
+        member: HashMap<usize, LazyMember>,
+    },
+}
+
+/// Whole-federation dynamic state: per-client availability traces,
 /// membership churn, and the round-deadline policy.
 pub struct FederationDynamics {
-    traces: Vec<AvailabilityTrace>,
-    member: Vec<bool>,
-    churn_rng: Pcg,
+    model: AvailabilityModel,
+    state: DynState,
+    seed: u64,
+    clients: usize,
+    /// Rounds begun so far — the lazy membership chains' position.
+    rounds_begun: u64,
     join_prob: f64,
     leave_prob: f64,
     deadline_s: f64,
@@ -396,6 +465,11 @@ impl FederationDynamics {
     /// Build dynamics for `clients` participants.  `slots` is the emulated
     /// execution concurrency (the scheduler's `max_concurrency`), which the
     /// per-round [`RoundGate`] packs onto.
+    ///
+    /// Populations up to [`DENSE_POPULATION_MAX`] get the dense
+    /// (historical, bit-identical) layout; larger ones get the lazy
+    /// layout automatically.  [`FederationDynamics::new_lazy`] forces
+    /// laziness at any size (tests, memory-pressure setups).
     pub fn new(
         seed: u64,
         clients: usize,
@@ -405,24 +479,78 @@ impl FederationDynamics {
         deadline_s: f64,
         slots: usize,
     ) -> Self {
-        let traces = (0..clients)
-            .map(|i| {
-                AvailabilityTrace::new(
-                    model.clone(),
-                    Pcg::new(seed ^ TRACE_SEED_SALT, i as u64),
-                )
-            })
-            .collect();
+        Self::build(
+            seed,
+            clients,
+            model,
+            join_prob,
+            leave_prob,
+            deadline_s,
+            slots,
+            clients > DENSE_POPULATION_MAX,
+        )
+    }
+
+    /// [`FederationDynamics::new`] with the lazy layout regardless of
+    /// population size.
+    pub fn new_lazy(
+        seed: u64,
+        clients: usize,
+        model: &AvailabilityModel,
+        join_prob: f64,
+        leave_prob: f64,
+        deadline_s: f64,
+        slots: usize,
+    ) -> Self {
+        Self::build(seed, clients, model, join_prob, leave_prob, deadline_s, slots, true)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn build(
+        seed: u64,
+        clients: usize,
+        model: &AvailabilityModel,
+        join_prob: f64,
+        leave_prob: f64,
+        deadline_s: f64,
+        slots: usize,
+        lazy: bool,
+    ) -> Self {
+        let state = if lazy {
+            DynState::Lazy { traces: HashMap::new(), member: HashMap::new() }
+        } else {
+            DynState::Dense {
+                traces: (0..clients)
+                    .map(|i| {
+                        AvailabilityTrace::new(
+                            model.clone(),
+                            Pcg::new(seed ^ TRACE_SEED_SALT, i as u64),
+                        )
+                    })
+                    .collect(),
+                member: vec![true; clients],
+                churn_rng: Pcg::new(seed, CHURN_STREAM),
+            }
+        };
         FederationDynamics {
-            traces,
-            member: vec![true; clients],
-            churn_rng: Pcg::new(seed, CHURN_STREAM),
+            model: model.clone(),
+            state,
+            seed,
+            clients,
+            rounds_begun: 0,
             join_prob: join_prob.clamp(0.0, 1.0),
             leave_prob: leave_prob.clamp(0.0, 1.0),
             deadline_s,
             slots: slots.max(1),
             now_s: 0.0,
         }
+    }
+
+    /// True when per-client state is evaluated lazily — the server then
+    /// selects via `ClientManager::select_filtered` instead of sweeping
+    /// an eligible pool.
+    pub fn is_lazy(&self) -> bool {
+        matches!(self.state, DynState::Lazy { .. })
     }
 
     pub fn deadline_s(&self) -> f64 {
@@ -444,44 +572,122 @@ impl FederationDynamics {
     }
 
     pub fn num_clients(&self) -> usize {
-        self.traces.len()
+        self.clients
     }
 
-    pub fn is_member(&self, client: usize) -> bool {
-        self.member[client]
+    /// The client's availability trace, built on first touch in lazy mode.
+    /// Identical streams in both modes: trace `i` is always generated
+    /// from `Pcg::new(seed ^ TRACE_SEED_SALT, i)`.
+    fn trace_mut(&mut self, i: usize) -> &mut AvailabilityTrace {
+        let (model, seed) = (self.model.clone(), self.seed);
+        match &mut self.state {
+            DynState::Dense { traces, .. } => &mut traces[i],
+            DynState::Lazy { traces, .. } => traces.entry(i).or_insert_with(|| {
+                AvailabilityTrace::new(model, Pcg::new(seed ^ TRACE_SEED_SALT, i as u64))
+            }),
+        }
     }
 
-    /// Current federation membership count.
-    pub fn members(&self) -> usize {
-        self.member.iter().filter(|&&m| m).count()
-    }
-
-    /// Replace one client's trace (tests / hand-crafted scenarios).
-    pub fn set_trace(&mut self, client: usize, trace: AvailabilityTrace) {
-        self.traces[client] = trace;
-    }
-
-    /// Apply between-round membership churn: one Bernoulli draw per client
-    /// in index order (the stream never depends on current membership, so
-    /// it is identical across worker counts and across runs).
-    pub fn begin_round(&mut self) {
-        for m in self.member.iter_mut() {
-            let u = self.churn_rng.f64();
-            if *m {
-                if u < self.leave_prob {
-                    *m = false;
+    /// Is `client` a federation member at the current round?  (`&mut`
+    /// because lazy membership chains advance on demand.)
+    pub fn is_member(&mut self, client: usize) -> bool {
+        let (seed, rounds, join, leave) =
+            (self.seed, self.rounds_begun, self.join_prob, self.leave_prob);
+        match &mut self.state {
+            DynState::Dense { member, .. } => member[client],
+            DynState::Lazy { member, .. } => {
+                let entry = member.entry(client).or_insert_with(|| LazyMember {
+                    rng: Pcg::new(seed ^ LAZY_CHURN_SALT, client as u64),
+                    rounds: 0,
+                    member: true,
+                });
+                while entry.rounds < rounds {
+                    let u = entry.rng.f64();
+                    churn_step(&mut entry.member, u, join, leave);
+                    entry.rounds += 1;
                 }
-            } else if u < self.join_prob {
-                *m = true;
+                entry.member
             }
         }
     }
 
+    /// Current federation membership count.  O(population) in lazy mode
+    /// (walks every chain without caching) — a diagnostic, not an engine
+    /// path.
+    pub fn members(&mut self) -> usize {
+        match &self.state {
+            DynState::Dense { member, .. } => member.iter().filter(|&&m| m).count(),
+            DynState::Lazy { .. } => {
+                (0..self.clients).filter(|&i| self.membership_uncached(i)).count()
+            }
+        }
+    }
+
+    /// Lazy membership without touching the cache (diagnostics).
+    fn membership_uncached(&self, client: usize) -> bool {
+        let mut rng = Pcg::new(self.seed ^ LAZY_CHURN_SALT, client as u64);
+        let mut member = true;
+        for _ in 0..self.rounds_begun {
+            let u = rng.f64();
+            churn_step(&mut member, u, self.join_prob, self.leave_prob);
+        }
+        member
+    }
+
+    /// Replace one client's trace (tests / hand-crafted scenarios).
+    pub fn set_trace(&mut self, client: usize, trace: AvailabilityTrace) {
+        match &mut self.state {
+            DynState::Dense { traces, .. } => traces[client] = trace,
+            DynState::Lazy { traces, .. } => {
+                traces.insert(client, trace);
+            }
+        }
+    }
+
+    /// Apply between-round membership churn.  Dense: one Bernoulli draw
+    /// per client in index order from the shared churn stream (identical
+    /// regardless of current membership, so identical across worker
+    /// counts and runs).  Lazy: the round counter advances and every
+    /// *queried* chain catches up on demand — same per-client Markov
+    /// chain, per-client streams.
+    pub fn begin_round(&mut self) {
+        self.rounds_begun += 1;
+        match &mut self.state {
+            DynState::Dense { member, churn_rng, .. } => {
+                for m in member.iter_mut() {
+                    let u = churn_rng.f64();
+                    churn_step(m, u, self.join_prob, self.leave_prob);
+                }
+            }
+            DynState::Lazy { traces, member } => {
+                // The lazy maps are pure caches (see `LAZY_CACHE_MAX`):
+                // evict wholesale once a population-scale probe has blown
+                // them up, so the O(touched) bound is a steady-state
+                // guarantee, not a no-sweep-ever assumption.
+                if traces.len() > LAZY_CACHE_MAX {
+                    traces.clear();
+                }
+                if member.len() > LAZY_CACHE_MAX {
+                    member.clear();
+                }
+            }
+        }
+    }
+
+    /// Is `client` selectable this round (member + online at `now_s`)?
+    /// The lazy engine's per-candidate eligibility test — O(1) amortised,
+    /// touching only this client's state.
+    pub fn is_eligible(&mut self, client: usize, now_s: f64) -> bool {
+        self.is_member(client) && self.trace_mut(client).is_online(now_s)
+    }
+
     /// Clients that can be selected this round: members that are online at
-    /// the round's emulated start time.
+    /// the round's emulated start time.  O(population) — the dense
+    /// engine's per-round sweep; population-scale runs use
+    /// [`FederationDynamics::is_eligible`] per sampled candidate instead.
     pub fn eligible_at(&mut self, now_s: f64) -> Vec<usize> {
-        (0..self.traces.len())
-            .filter(|&i| self.member[i] && self.traces[i].is_online(now_s))
+        (0..self.clients)
+            .filter(|&i| self.is_eligible(i, now_s))
             .collect()
     }
 
@@ -490,14 +696,54 @@ impl FederationDynamics {
     /// server fast-forwards an all-offline round to this point — otherwise
     /// a fast-forward clock would never move and the federation would stay
     /// offline forever.
+    ///
+    /// Dense: exact minimum over every member.  Lazy: minimum over a
+    /// bounded, deterministic probe set — every already-touched client
+    /// plus `WAKEUP_PROBES` fresh candidates drawn from a stream keyed
+    /// by the round counter.  A probe-set wakeup can only *overestimate*
+    /// the true wakeup (it still moves the timeline strictly forward and
+    /// is identical across worker counts, which is what the engine's
+    /// invariants need); at population scale an all-offline round is
+    /// vanishingly rare anyway.
     pub fn next_wakeup_after(&mut self, now_s: f64) -> Option<f64> {
         let mut best = f64::INFINITY;
-        for i in 0..self.traces.len() {
-            if self.member[i] {
-                best = best.min(self.traces[i].next_online_after(now_s));
+        if let DynState::Dense { traces, member, .. } = &mut self.state {
+            for (i, trace) in traces.iter_mut().enumerate() {
+                if member[i] {
+                    best = best.min(trace.next_online_after(now_s));
+                }
+            }
+            return (best.is_finite() && best > now_s).then_some(best);
+        }
+        // Lazy: bounded deterministic probe set.
+        let mut candidates: Vec<usize> = match &self.state {
+            DynState::Lazy { traces, .. } => traces.keys().copied().collect(),
+            DynState::Dense { .. } => unreachable!("handled above"),
+        };
+        let mut probe_rng = Pcg::new(self.seed ^ WAKEUP_PROBE_SALT, self.rounds_begun);
+        for _ in 0..WAKEUP_PROBES.min(self.clients) {
+            candidates.push(probe_rng.below(self.clients));
+        }
+        candidates.sort_unstable();
+        candidates.dedup();
+        for i in candidates {
+            if self.is_member(i) {
+                let t = self.trace_mut(i).next_online_after(now_s);
+                if t > now_s {
+                    best = best.min(t);
+                }
             }
         }
         (best.is_finite() && best > now_s).then_some(best)
+    }
+
+    /// Clients with instantiated lazy state (tests assert the O(touched)
+    /// memory claim; 0 in dense mode, where everything is materialised).
+    pub fn touched(&self) -> usize {
+        match &self.state {
+            DynState::Dense { .. } => 0,
+            DynState::Lazy { traces, member } => traces.len().max(member.len()),
+        }
     }
 
     /// Start gating a round that begins at emulated `round_start_s`.
@@ -514,7 +760,7 @@ impl FederationDynamics {
         client: u32,
         dur_s: f64,
     ) -> GateVerdict {
-        gate.admit(&mut self.traces[roster_idx], client, dur_s)
+        gate.admit(self.trace_mut(roster_idx), client, dur_s)
     }
 }
 
@@ -668,6 +914,110 @@ mod tests {
             }
         }
         assert!(changed, "leave_prob 0.5 never removed a member in 10 rounds");
+    }
+
+    #[test]
+    fn lazy_traces_match_dense_traces() {
+        // Availability streams are per-client in both layouts, so with
+        // churn off the two modes agree exactly on eligibility.
+        let model =
+            AvailabilityModel::ExponentialChurn { mean_online_s: 40.0, mean_offline_s: 20.0 };
+        let mut dense = FederationDynamics::new(5, 24, &model, 0.0, 0.0, f64::INFINITY, 1);
+        let mut lazy = FederationDynamics::new_lazy(5, 24, &model, 0.0, 0.0, f64::INFINITY, 1);
+        assert!(!dense.is_lazy() && lazy.is_lazy());
+        for t in [0.0, 13.0, 77.0, 500.0] {
+            for i in 0..24 {
+                assert_eq!(
+                    dense.is_eligible(i, t),
+                    lazy.is_eligible(i, t),
+                    "client {i} at t={t}"
+                );
+            }
+            assert_eq!(dense.eligible_at(t), lazy.eligible_at(t));
+        }
+    }
+
+    #[test]
+    fn lazy_membership_is_query_order_independent_and_deterministic() {
+        let model = AvailabilityModel::AlwaysOn;
+        let mk = || FederationDynamics::new_lazy(11, 64, &model, 0.4, 0.3, f64::INFINITY, 1);
+        let mut a = mk();
+        let mut b = mk();
+        // a queries every round; b only at the end — chains must agree.
+        for _ in 0..6 {
+            a.begin_round();
+            b.begin_round();
+            let _ = a.eligible_at(0.0);
+        }
+        let ea = a.eligible_at(0.0);
+        assert_eq!(ea, b.eligible_at(0.0));
+        assert!(ea.len() < 64, "leave_prob 0.3 never removed a member in 6 rounds");
+        assert_eq!(a.members(), ea.len(), "uncached membership walk agrees");
+        // Certain churn: everyone leaves after one round, forever (join 0).
+        let mut gone = FederationDynamics::new_lazy(1, 16, &model, 0.0, 1.0, f64::INFINITY, 1);
+        gone.begin_round();
+        assert!(gone.eligible_at(0.0).is_empty());
+        assert_eq!(gone.members(), 0);
+    }
+
+    #[test]
+    fn lazy_state_is_o_touched_not_o_population() {
+        let model =
+            AvailabilityModel::ExponentialChurn { mean_online_s: 60.0, mean_offline_s: 30.0 };
+        let mut d = FederationDynamics::new(3, 1_000_000, &model, 0.1, 0.05, 30.0, 1);
+        assert!(d.is_lazy(), "a million clients must pick the lazy layout");
+        d.begin_round();
+        for i in 0..50 {
+            let _ = d.is_eligible(i * 1000, 0.0);
+        }
+        assert!(d.touched() <= 50, "touched {} clients", d.touched());
+        // Gating a fit touches only that client.
+        let mut gate = d.begin_gate(0.0);
+        let _ = d.admit(&mut gate, 123_456, 0, 5.0);
+        assert!(d.touched() <= 51);
+    }
+
+    #[test]
+    fn lazy_caches_evict_after_a_population_scale_probe() {
+        // A sweep fallback touching O(population) clients must not pin
+        // O(population) memory: the next begin_round evicts, and because
+        // the caches are pure derivations, every answer survives
+        // eviction unchanged.
+        let model =
+            AvailabilityModel::ExponentialChurn { mean_online_s: 50.0, mean_offline_s: 25.0 };
+        let n = LAZY_CACHE_MAX + 1_000;
+        let mut d = FederationDynamics::new_lazy(9, n, &model, 0.2, 0.1, f64::INFINITY, 1);
+        d.begin_round();
+        for i in 0..n {
+            let _ = d.is_eligible(i, 7.0); // the sweep
+        }
+        assert!(d.touched() > LAZY_CACHE_MAX);
+        d.begin_round();
+        assert_eq!(d.touched(), 0, "oversized lazy caches must evict");
+        // Post-eviction answers must equal a never-swept twin's at the
+        // same round: the rebuild derives exactly the state it dropped.
+        let mut twin = FederationDynamics::new_lazy(9, n, &model, 0.2, 0.1, f64::INFINITY, 1);
+        twin.begin_round();
+        twin.begin_round();
+        let probe: Vec<usize> = (0..40).map(|i| i * 17).collect();
+        let after: Vec<bool> = probe.iter().map(|&i| d.is_eligible(i, 7.0)).collect();
+        let expect: Vec<bool> = probe.iter().map(|&i| twin.is_eligible(i, 7.0)).collect();
+        assert_eq!(after, expect, "eviction/rebuild changed an answer");
+    }
+
+    #[test]
+    fn lazy_wakeup_moves_the_timeline_forward() {
+        let model = AvailabilityModel::AlwaysOn;
+        let mut d = FederationDynamics::new_lazy(2, 100, &model, 0.0, 0.0, f64::INFINITY, 1);
+        // Hand every touched client an offline-until trace; the probe set
+        // includes them, so the wakeup lands on the earliest return.
+        d.set_trace(3, AvailabilityTrace::from_toggles(false, vec![40.0]));
+        d.set_trace(9, AvailabilityTrace::from_toggles(false, vec![25.0]));
+        // The fresh always-on probes are online *at* 10.0 (filtered: a
+        // wakeup must move time forward), so the earliest strictly-later
+        // return is client 9's at t = 25.
+        let w = d.next_wakeup_after(10.0).expect("someone returns");
+        assert_eq!(w, 25.0);
     }
 
     #[test]

@@ -34,7 +34,7 @@ use crate::emu::{EnvConfig, VirtualClock};
 use crate::error::{EmuError, FlError, RuntimeError};
 use crate::fl::bouquet::BouquetContext;
 use crate::fl::client::{ClientApp, ClientId, FitConfig, FitResult};
-use crate::fl::params::ParamVector;
+use crate::fl::params::{ParamScratch, ParamVector};
 use crate::hardware::profile::HardwareProfile;
 use crate::runtime::ModelExecutor;
 
@@ -81,6 +81,19 @@ impl WorkerPool {
     /// once, up front, so artifact problems surface on the first fit
     /// rather than mid-round.
     pub fn spawn(workers: usize, factory: Option<ExecutorFactory>) -> Self {
+        Self::spawn_scratched(workers, factory, ParamScratch::default())
+    }
+
+    /// [`WorkerPool::spawn`] with a shared recycled-buffer stash: every
+    /// worker's fits draw their update vectors from `scratch`, and the
+    /// server-side accumulator (holding the same handle) returns folded
+    /// buffers to it — steady-state SimClient rounds allocate no fresh
+    /// parameter-sized vectors (EXPERIMENTS.md §Perf).
+    pub fn spawn_scratched(
+        workers: usize,
+        factory: Option<ExecutorFactory>,
+        scratch: ParamScratch,
+    ) -> Self {
         let workers = workers.max(1);
         let (task_tx, task_rx) = channel::<FitTask>();
         let task_rx = Arc::new(Mutex::new(task_rx));
@@ -91,9 +104,10 @@ impl WorkerPool {
                 let rx = Arc::clone(&task_rx);
                 let tx = outcome_tx.clone();
                 let factory = factory.clone();
+                let scratch = scratch.clone();
                 std::thread::Builder::new()
                     .name(format!("bouquet-fit-{w}"))
-                    .spawn(move || worker_loop(rx, tx, factory))
+                    .spawn(move || worker_loop(rx, tx, factory, scratch))
                     .expect("spawn fit worker")
             })
             .collect();
@@ -146,6 +160,7 @@ fn worker_loop(
     task_rx: Arc<Mutex<Receiver<FitTask>>>,
     outcome_tx: Sender<FitOutcome>,
     factory: Option<ExecutorFactory>,
+    scratch: ParamScratch,
 ) {
     let (mut executor, factory_err) = match &factory {
         Some(f) => match f() {
@@ -183,6 +198,7 @@ fn worker_loop(
                     clock: &mut clock,
                     host: &host,
                     env_cfg,
+                    scratch: scratch.clone(),
                 };
                 client.fit(&global, &cfg, &mut ctx)
             }))
@@ -327,6 +343,7 @@ mod tests {
             clock: &mut clock,
             host: &host,
             env_cfg: env_cfg(),
+            scratch: ParamScratch::default(),
         };
         let d = direct.fit(&ParamVector::zeros(8), &FitConfig::default(), &mut ctx).unwrap();
 

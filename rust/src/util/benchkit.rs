@@ -6,6 +6,7 @@
 
 use std::time::Instant;
 
+use super::json::Json;
 use super::stats;
 use super::table::fsecs;
 
@@ -21,6 +22,19 @@ pub struct Measurement {
 }
 
 impl Measurement {
+    /// Machine-readable row — benches emit JSON alongside their tables so
+    /// results can be tracked across runs without re-parsing text.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("iters", Json::num(self.iters as f64)),
+            ("mean_s", Json::num(self.mean_s)),
+            ("p50_s", Json::num(self.p50_s)),
+            ("p95_s", Json::num(self.p95_s)),
+            ("std_s", Json::num(self.std_s)),
+        ])
+    }
+
     pub fn report_line(&self) -> String {
         format!(
             "{:<44} {:>10}/iter  (p50 {:>10}, p95 {:>10}, ±{:>9}, n={})",
@@ -123,11 +137,42 @@ impl Bench {
     pub fn results(&self) -> &[Measurement] {
         &self.results
     }
+
+    /// All measurements so far as a JSON array (see
+    /// [`Measurement::to_json`]).
+    pub fn to_json(&self) -> Json {
+        Json::Arr(self.results.iter().map(|m| m.to_json()).collect())
+    }
 }
 
 /// Print a bench section header (keeps `cargo bench` output scannable).
 pub fn section(title: &str) {
     println!("\n=== {title} ===");
+}
+
+/// Peak resident set size of this process in bytes (Linux `VmHWM`; 0
+/// where the probe is unavailable).  Benches use it to report the memory
+/// side of a claim — e.g. the population engine's O(cohort) bound —
+/// alongside throughput.  Note it is a high-water mark: monotone over the
+/// process lifetime, so order measurements smallest-first.
+pub fn peak_rss_bytes() -> u64 {
+    #[cfg(target_os = "linux")]
+    {
+        if let Ok(status) = std::fs::read_to_string("/proc/self/status") {
+            for line in status.lines() {
+                if let Some(rest) = line.strip_prefix("VmHWM:") {
+                    let kb: u64 = rest
+                        .trim()
+                        .trim_end_matches("kB")
+                        .trim()
+                        .parse()
+                        .unwrap_or(0);
+                    return kb * 1024;
+                }
+            }
+        }
+    }
+    0
 }
 
 #[cfg(test)]

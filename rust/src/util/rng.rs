@@ -137,6 +137,27 @@ impl Pcg {
         idx
     }
 
+    /// Sample `k` distinct indices from [0, n) in O(k) memory and
+    /// O(k log k) time (Floyd's algorithm), returned sorted ascending.
+    ///
+    /// [`Pcg::sample_indices`] materialises all `n` candidates, which is
+    /// what caps selection at population scale; this is the
+    /// million-client path.  The two draw *different* RNG streams — the
+    /// population engine keeps `sample_indices` below
+    /// `fl::population::DENSE_POPULATION_MAX` so historical federations
+    /// stay bit-identical.
+    pub fn sample_distinct_sorted(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "sample_distinct_sorted({n}, {k})");
+        let mut set = std::collections::BTreeSet::new();
+        for i in (n - k)..n {
+            let j = self.below(i + 1);
+            if !set.insert(j) {
+                set.insert(i);
+            }
+        }
+        set.into_iter().collect()
+    }
+
     /// Symmetric Dirichlet(alpha) sample of dimension `dim`
     /// (via Gamma(alpha, 1) Marsaglia–Tsang; used by the non-IID partitioner).
     pub fn dirichlet(&mut self, alpha: f64, dim: usize) -> Vec<f64> {
@@ -261,6 +282,39 @@ mod tests {
         let mut sorted = v.clone();
         sorted.sort();
         assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sample_distinct_sorted_is_distinct_sorted_in_range() {
+        let mut r = Pcg::seeded(17);
+        for &(n, k) in &[(10usize, 10usize), (1000, 1), (100_000, 64), (5, 0)] {
+            let s = r.sample_distinct_sorted(n, k);
+            assert_eq!(s.len(), k, "n={n} k={k}");
+            assert!(s.windows(2).all(|w| w[0] < w[1]), "sorted distinct");
+            assert!(s.iter().all(|&i| i < n));
+        }
+        // Deterministic per seed.
+        let a = Pcg::seeded(3).sample_distinct_sorted(1_000_000, 32);
+        let b = Pcg::seeded(3).sample_distinct_sorted(1_000_000, 32);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn sample_distinct_sorted_is_roughly_uniform() {
+        // Floyd's algorithm draws uniformly over k-subsets: each of 10
+        // candidates should appear in a k=3 sample ~30% of the time.
+        let mut r = Pcg::seeded(23);
+        let mut counts = [0usize; 10];
+        let trials = 20_000;
+        for _ in 0..trials {
+            for i in r.sample_distinct_sorted(10, 3) {
+                counts[i] += 1;
+            }
+        }
+        for c in counts {
+            let f = c as f64 / trials as f64;
+            assert!((f - 0.3).abs() < 0.03, "{counts:?}");
+        }
     }
 
     #[test]

@@ -6,7 +6,10 @@
 use bouquetfl::analysis::correlation::{kendall_tau_b, pearson, spearman};
 use bouquetfl::data::{generate, partition, PartitionScheme, SyntheticConfig};
 use bouquetfl::emu::{FitReport, GpuTimingModel, MpsPartition, Optimizer, VramAllocator};
-use bouquetfl::fl::{AccOutput, AggAccumulator, FitResult, ParamVector, StreamingMean};
+use bouquetfl::fl::{
+    AccOutput, AggAccumulator, ClientManager, Experiment, FitResult, ParamVector, Selection,
+    StreamingMean, SCENARIO_PRESETS,
+};
 use bouquetfl::hardware::GPU_DB;
 use bouquetfl::modelcost::resnet18_cifar;
 use bouquetfl::sched::dynamics::{AvailabilityModel, AvailabilityTrace, GateVerdict, RoundGate};
@@ -438,6 +441,132 @@ fn prop_dropped_clients_never_reach_the_accumulator() {
         }
         Ok(())
     });
+}
+
+#[test]
+fn prop_selection_stream_matches_the_materialized_engine_below_threshold() {
+    // The population refactor's RNG-compatibility contract: below the
+    // documented threshold (`fl::population::DENSE_POPULATION_MAX`),
+    // `ClientManager::select` draws exactly the stream the historical
+    // engine drew — `select_from` over a freshly-built identity pool.
+    check(40, |rng| {
+        let n = rng.range_i64(1, 200) as usize;
+        let seed = rng.next_u64();
+        let selection = match rng.below(3) {
+            0 => Selection::All,
+            1 => Selection::Fraction(rng.range_f64(0.05, 1.0)),
+            _ => Selection::Count(rng.range_i64(1, 2 * n as i64) as usize),
+        };
+        let mut mgr = ClientManager::new(seed, selection);
+        let mut oracle = ClientManager::new(seed, selection);
+        for round in 0..4 {
+            let everyone: Vec<usize> = (0..n).collect();
+            let want = oracle.select_from(&everyone);
+            let got = mgr.select(n).to_vec();
+            assert_that(got == want, || {
+                format!("round {round}, n={n}, {selection:?}: {got:?} vs {want:?}")
+            })?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn population_engine_is_bit_identical_to_the_materialized_engine() {
+    // Tentpole acceptance: a small federation materialized as live
+    // clients and the same federation run through the Population/factory
+    // path produce bit-identical History, schedule and aggregates —
+    // across workers {1, 4} and every scenario preset.
+    for &preset in SCENARIO_PRESETS {
+        for workers in [1usize, 4] {
+            let build = |population: bool| {
+                let mut b = Experiment::builder()
+                    .clients(10)
+                    .rounds(6)
+                    .samples_per_client(40)
+                    .batch(16)
+                    .selection(Selection::Fraction(0.6))
+                    .network(true)
+                    .seed(13)
+                    .workers(workers)
+                    .scenario_named(preset)
+                    .eval_every(0)
+                    .fail_on_empty_round(false)
+                    .simulated(96);
+                if population {
+                    b = b.population(10);
+                }
+                b.build().expect("experiment builds")
+            };
+            let label = format!("{preset}/workers={workers}");
+            let a = build(false).run().expect("materialized run");
+            let b = build(true).run().expect("population run");
+            assert_eq!(a.global.len(), b.global.len(), "{label}");
+            for (x, y) in a.global.as_slice().iter().zip(b.global.as_slice()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{label}: aggregate diverged");
+            }
+            assert_eq!(a.history.rounds.len(), b.history.rounds.len(), "{label}");
+            for (r1, r2) in a.history.rounds.iter().zip(&b.history.rounds) {
+                assert_eq!(r1.selected, r2.selected, "{label}: round {}", r1.round);
+                assert_eq!(
+                    r1.train_loss.to_bits(),
+                    r2.train_loss.to_bits(),
+                    "{label}: round {}",
+                    r1.round
+                );
+                assert_eq!(
+                    r1.emu_round_s.to_bits(),
+                    r2.emu_round_s.to_bits(),
+                    "{label}: round {}",
+                    r1.round
+                );
+                assert_eq!(
+                    r1.failures.len(),
+                    r2.failures.len(),
+                    "{label}: round {}",
+                    r1.round
+                );
+                for (f1, f2) in r1.failures.iter().zip(&r2.failures) {
+                    assert_eq!(f1.client, f2.client, "{label}");
+                    assert_eq!(f1.reason, f2.reason, "{label}");
+                }
+            }
+            assert_eq!(a.trace.events, b.trace.events, "{label}: schedule diverged");
+        }
+    }
+}
+
+#[test]
+fn virtual_population_runs_in_cohort_memory() {
+    // Above the dense threshold the run must touch only O(cohort) state:
+    // a 50k-client high-churn federation with Count(16) completes every
+    // round, selects at most the cohort, and reports the deduplicated
+    // profile table instead of 50k per-client profiles.
+    let report = Experiment::builder()
+        .population(50_000)
+        .rounds(5)
+        .selection(Selection::Count(16))
+        .scenario_named("high-churn")
+        .batch(16)
+        .eval_every(0)
+        .fail_on_empty_round(false)
+        .seed(3)
+        .simulated(64)
+        .build()
+        .expect("virtual population builds")
+        .run()
+        .expect("virtual population runs");
+    assert_eq!(report.history.rounds.len(), 5);
+    assert!(report.history.rounds.iter().any(|r| !r.selected.is_empty()));
+    for r in &report.history.rounds {
+        assert!(r.selected.len() <= 16, "cohort overflow: {}", r.selected.len());
+        assert!(r.selected.iter().all(|&c| (c as usize) < 50_000));
+    }
+    assert!(
+        report.profiles.len() <= 256,
+        "virtual population materialized {} profiles",
+        report.profiles.len()
+    );
 }
 
 #[test]
