@@ -47,6 +47,16 @@ impl FailureKind {
     }
 }
 
+/// Direction of a simulated transfer (the netsim communication layer,
+/// DESIGN.md §12).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CommDirection {
+    /// Server → client: the global model broadcast (shared egress).
+    Download,
+    /// Client → server: the codec-compressed update (shared ingress).
+    Upload,
+}
+
 /// One observable transition of a federated run.
 ///
 /// Variants borrow from the round loop's state — observers that need to
@@ -95,6 +105,36 @@ pub enum FlEvent<'a> {
         kind: FailureKind,
         /// The recorded failure reason.
         reason: &'a str,
+    },
+    /// A simulated transfer began (netsim only; emitted once the round's
+    /// communication timeline is known, before the round's
+    /// `ClientDone`/`ClientFailed` events — a download pair for every
+    /// *selected* client (a fit that later failed still fetched the
+    /// model and contended), then an upload pair per successful fit,
+    /// each phase in selection order).
+    CommStarted {
+        /// Round index (0-based).
+        round: u32,
+        /// Client id.
+        client: u32,
+        /// Download (model broadcast) or upload (update).
+        direction: CommDirection,
+        /// Round-relative emulated start time, seconds.
+        at_s: f64,
+        /// Bytes on the wire (post-codec for uploads).
+        wire_bytes: u64,
+    },
+    /// A simulated transfer completed (netsim only; same ordering
+    /// contract as [`FlEvent::CommStarted`]).
+    CommFinished {
+        /// Round index (0-based).
+        round: u32,
+        /// Client id.
+        client: u32,
+        /// Download (model broadcast) or upload (update).
+        direction: CommDirection,
+        /// Round-relative emulated completion time, seconds.
+        at_s: f64,
     },
     /// The round's emulated wall-clock schedule was computed.
     RoundScheduled {

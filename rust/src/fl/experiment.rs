@@ -33,6 +33,7 @@ use crate::emu::{ClockMode, VirtualClock};
 use crate::error::{ConfigError, FlError};
 use crate::hardware::profile::HardwareProfile;
 use crate::net::sample_network;
+use crate::netsim::{NetSim, NetSimConfig, NETSIM_PRESETS};
 use crate::runtime::ModelExecutor;
 use crate::sched::{self, Scheduler, Trace};
 use crate::util::cfg::Cfg;
@@ -77,6 +78,7 @@ pub struct ExperimentBuilder {
     opts: LaunchOptions,
     scenario_name: Option<String>,
     scheduler_name: Option<String>,
+    netsim_name: Option<String>,
     strategy_override: Option<Box<dyn Strategy>>,
     observers: Vec<Box<dyn FlObserver>>,
     mode: ExecutionMode,
@@ -90,6 +92,7 @@ impl Default for ExperimentBuilder {
             opts: LaunchOptions::default(),
             scenario_name: None,
             scheduler_name: None,
+            netsim_name: None,
             strategy_override: None,
             observers: Vec::new(),
             mode: ExecutionMode::Real,
@@ -314,6 +317,25 @@ impl ExperimentBuilder {
         self
     }
 
+    /// Contention-aware communication simulation (DESIGN.md §12):
+    /// per-round transfers share the server's finite ingress/egress
+    /// capacity under max-min fair share, and updates travel through the
+    /// configured compression codec.  Implies [`ExperimentBuilder::network`]
+    /// — every client gets a sampled link.  Validated (capacities, codec
+    /// name, top-k fraction) at build.
+    pub fn netsim(mut self, cfg: NetSimConfig) -> Self {
+        self.netsim_name = None;
+        self.opts.netsim = Some(cfg);
+        self
+    }
+
+    /// Netsim by preset name (`netsim::NETSIM_PRESETS` lists them);
+    /// resolved and validated at build.
+    pub fn netsim_named(mut self, preset: &str) -> Self {
+        self.netsim_name = Some(preset.to_string());
+        self
+    }
+
     /// Subscribe an observer to the run's typed event stream
     /// (`fl::events`).
     pub fn observer(mut self, observer: Box<dyn FlObserver>) -> Self {
@@ -405,6 +427,36 @@ impl ExperimentBuilder {
             let sc = Scenario::resolve(spec)?;
             self.opts.scenario = if sc.is_static() { None } else { Some(sc) };
         }
+
+        // Netsim: resolve a pending preset name, validate, and build the
+        // runtime instance (codec through the registry, payload from the
+        // timing workload's parameter bytes) — misconfigured capacities
+        // or unknown codecs fail here, not mid-run.  The simulated pipe
+        // needs per-client links on the other end, so netsim implies
+        // `network`; this is an assembly requirement and applies on the
+        // permissive path too.
+        if let Some(name) = &self.netsim_name {
+            self.opts.netsim =
+                Some(NetSimConfig::preset(name).ok_or_else(|| {
+                    invalid(
+                        "netsim",
+                        format!(
+                            "unknown netsim preset '{name}' ({})",
+                            NETSIM_PRESETS.join("|")
+                        ),
+                    )
+                })?);
+        }
+        let netsim = match &self.opts.netsim {
+            Some(cfg) => {
+                self.opts.network = true;
+                Some(NetSim::resolve(
+                    cfg,
+                    self.opts.timing_workload.cost().weight_bytes(),
+                )?)
+            }
+            None => None,
+        };
 
         // Strategy: explicit instance, or the one shared registry lookup
         // every resolution path uses (`LaunchOptions::strategy_box`).
@@ -523,6 +575,7 @@ impl ExperimentBuilder {
             scheduler,
             profiles,
             population,
+            netsim,
             observers: self.observers,
             mode: self.mode,
             progress: self.progress,
@@ -550,6 +603,9 @@ pub struct Experiment {
     profiles: Vec<HardwareProfile>,
     /// Descriptor-backed roster (`Some` when the population axis is set).
     population: Option<Population>,
+    /// Resolved communication simulator (`Some` when the netsim axis is
+    /// set; DESIGN.md §12).
+    netsim: Option<NetSim>,
     observers: Vec<Box<dyn FlObserver>>,
     mode: ExecutionMode,
     progress: bool,
@@ -599,6 +655,7 @@ impl Experiment {
             scheduler,
             profiles,
             population,
+            netsim,
             mut observers,
             mode,
             progress,
@@ -706,6 +763,9 @@ impl Experiment {
         };
         if let Some(sc) = &opts.scenario {
             server = server.with_scenario(sc);
+        }
+        if let Some(ns) = netsim {
+            server = server.with_netsim(ns);
         }
         for observer in observers {
             server = server.with_observer(observer);
@@ -955,6 +1015,34 @@ mod tests {
             .build()
             .is_err());
         assert!(Experiment::builder().profiles(&["rtx-4090"]).build().is_err());
+    }
+
+    #[test]
+    fn netsim_axis_resolves_and_validates_at_build() {
+        let exp = Experiment::builder()
+            .profiles(&["gtx-1060"])
+            .netsim_named("congested-cell")
+            .simulated(32)
+            .build()
+            .unwrap();
+        assert!(exp.options().netsim.is_some());
+        assert!(exp.options().network, "netsim implies per-client links");
+        // Unknown presets, codecs and degenerate capacities fail at build.
+        assert!(Experiment::builder()
+            .profiles(&["gtx-1060"])
+            .netsim_named("nope")
+            .build()
+            .is_err());
+        assert!(Experiment::builder()
+            .profiles(&["gtx-1060"])
+            .netsim(NetSimConfig { codec: "zstd".into(), ..Default::default() })
+            .build()
+            .is_err());
+        assert!(Experiment::builder()
+            .profiles(&["gtx-1060"])
+            .netsim(NetSimConfig { ingress_mbps: -1.0, ..Default::default() })
+            .build()
+            .is_err());
     }
 
     #[test]

@@ -12,6 +12,7 @@ use crate::error::{ConfigError, FlError};
 use crate::hardware::profile::{preset, HardwareProfile};
 use crate::hardware::sampler::{HardwareSampler, ProfileTable, SamplerConfig};
 use crate::modelcost::small_cnn;
+use crate::netsim::NetSimConfig;
 use crate::runtime::default_dir;
 use crate::sched::Trace;
 use crate::util::cfg::Cfg;
@@ -117,6 +118,10 @@ pub struct LaunchOptions {
     /// When set, `size` supersedes `clients` and the federation must run
     /// in `Simulated` mode (DESIGN.md §11).
     pub population: Option<PopulationOptions>,
+    /// Contention-aware communication simulation (`None` = the
+    /// closed-form `round_comm_s` fast path; DESIGN.md §12).  Enabling it
+    /// implies `network = true` so every client carries a link.
+    pub netsim: Option<NetSimConfig>,
 }
 
 impl Default for LaunchOptions {
@@ -145,6 +150,7 @@ impl Default for LaunchOptions {
             timing_workload: TimingWorkload::Resnet18,
             scenario: None,
             population: None,
+            netsim: None,
         }
     }
 }
@@ -177,6 +183,18 @@ pub const CONFIG_SCHEMA: &[(&str, &[&str])] = &[
     ),
     ("hardware", &["profiles", "min_vram_gib", "exclude_laptop", "tier_affinity"]),
     ("population", &["size", "profile_draws"]),
+    (
+        "netsim",
+        &[
+            "enabled",
+            "preset",
+            "ingress_mbps",
+            "egress_mbps",
+            "codec",
+            "topk_fraction",
+            "payload_mb",
+        ],
+    ),
     (
         "scenario",
         &[
@@ -253,6 +271,11 @@ impl LaunchOptions {
             // The population supersedes `clients`; keeping the two in sync
             // lets every count-based validation and sweep see one number.
             o.clients = size;
+        }
+        o.netsim = NetSimConfig::from_cfg(cfg)?;
+        if o.netsim.is_some() {
+            // A simulated pipe needs per-client links on the other end.
+            o.network = true;
         }
 
         o.partition = match cfg.str_or("data", "partition", "dirichlet").as_str() {
@@ -541,6 +564,35 @@ profiles = ["gtx-1060", "budget-2019"]
         // No section -> materialised fleet, as ever.
         let cfg = Cfg::parse("[federation]\nrounds = 2").unwrap();
         assert!(LaunchOptions::from_cfg(&cfg).unwrap().population.is_none());
+    }
+
+    #[test]
+    fn from_cfg_parses_netsim_section_and_implies_network() {
+        let cfg = Cfg::parse(
+            "[federation]\nrounds = 2\n\n[netsim]\npreset = \"congested-cell\"\ncodec = \"float16\"",
+        )
+        .unwrap();
+        let o = LaunchOptions::from_cfg(&cfg).unwrap();
+        let ns = o.netsim.expect("netsim parsed");
+        assert_eq!(ns.ingress_mbps, 1200.0);
+        assert_eq!(ns.codec, "float16");
+        assert!(o.network, "netsim implies per-client links");
+        // Disabled or absent sections leave the fast path untouched.
+        let off = Cfg::parse("[netsim]\nenabled = false").unwrap();
+        let o = LaunchOptions::from_cfg(&off).unwrap();
+        assert!(o.netsim.is_none() && !o.network);
+        let none = Cfg::parse("[federation]\nrounds = 2").unwrap();
+        assert!(LaunchOptions::from_cfg(&none).unwrap().netsim.is_none());
+        // Schema knows the section: no unknown-key warnings.
+        let clean = Cfg::parse("[netsim]\ningress_mbps = 500\ncodec = \"int8\"").unwrap();
+        assert!(LaunchOptions::config_warnings(&clean).is_empty());
+        // ...and typos still warn.
+        let typo = Cfg::parse("[netsim]\ningres_mbps = 500").unwrap();
+        let w = LaunchOptions::config_warnings(&typo);
+        assert!(
+            w.iter().any(|m| m.contains("ingres_mbps") && m.contains("ingress_mbps")),
+            "{w:?}"
+        );
     }
 
     #[test]

@@ -25,7 +25,10 @@ pub use bouquet::BouquetContext;
 pub use campaign::{Campaign, CampaignCell, CampaignReport, CellOutcome};
 pub use client::{ClientApp, ClientId, FitConfig, FitResult, SimClient, TrainClient};
 pub use clientmgr::{ClientManager, RoundLedger, Selection};
-pub use events::{FailureKind, FlEvent, FlObserver, HistoryObserver, ProgressLogger, TraceObserver};
+pub use events::{
+    CommDirection, FailureKind, FlEvent, FlObserver, HistoryObserver, ProgressLogger,
+    TraceObserver,
+};
 pub use experiment::{ExecutionMode, Experiment, ExperimentBuilder, ExperimentReport};
 pub use history::{History, RoundRecord};
 pub use launcher::{launch, HardwareSource, LaunchOptions, LaunchOutcome, PopulationOptions};

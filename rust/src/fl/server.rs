@@ -27,15 +27,21 @@ use crate::data::Dataset;
 use crate::emu::{EnvConfig, Isolation, VirtualClock};
 use crate::error::{EmuError, FlError};
 use crate::hardware::profile::HardwareProfile;
+use crate::net::NetworkProfile;
+use crate::netsim::{NetSim, UNMODELED_LINK};
 use crate::runtime::ModelExecutor;
 use crate::sched::dynamics::{FederationDynamics, GateVerdict, RoundGate};
 use crate::sched::pool::FitOutcomeSlim;
-use crate::sched::{ExecutorFactory, FitTask, ReorderBuffer, Scheduler, Trace, WorkerPool};
+use crate::sched::{
+    ExecutorFactory, FitTask, ReorderBuffer, Schedule, Scheduler, Trace, WorkerPool,
+};
 
 use super::bouquet::BouquetContext;
 use super::client::{ClientApp, ClientId, FitConfig, FitResult};
 use super::clientmgr::{ClientManager, RoundLedger, Selection};
-use super::events::{FailureKind, FlEvent, FlObserver, HistoryObserver, TraceObserver};
+use super::events::{
+    CommDirection, FailureKind, FlEvent, FlObserver, HistoryObserver, TraceObserver,
+};
 use super::history::{History, RoundRecord};
 use super::params::{ParamScratch, ParamVector};
 use super::population::{ClientFactory, Population};
@@ -116,6 +122,54 @@ impl Roster {
             Roster::Population { .. } => drop(client),
         }
     }
+
+    /// Client `idx`'s network link, when one is attached — the netsim
+    /// layer's per-client input.  O(1) for both layouts (a population
+    /// derives the descriptor on demand).
+    fn network_of(&self, idx: usize) -> Option<NetworkProfile> {
+        match self {
+            Roster::Materialized(v) => {
+                v[idx].as_ref().and_then(|c| c.network().copied())
+            }
+            Roster::Population { population, .. } => {
+                population.descriptor(idx).network_profile()
+            }
+        }
+    }
+}
+
+/// Per-round state of the communication simulator (DESIGN.md §12), only
+/// materialised when netsim is enabled: the selected cohort's links, the
+/// download timeline (computable at round start — it depends only on who
+/// was selected), and the round's successful fits buffered in selection
+/// order until the upload timeline can be solved.  Everything here is
+/// O(cohort) — at population scale that is the engine's only
+/// netsim-specific state.
+///
+/// Buffering is what contention costs: upload completion times depend on
+/// *every* arrival, so gating/folding must wait for the whole cohort
+/// (Krum and trimmed-mean already buffer the cohort's updates by nature;
+/// netsim extends that bound to every strategy for netsim runs, and the
+/// recycled-scratch path keeps the buffers allocation-free in steady
+/// state).
+struct NetsimRound {
+    /// Selected clients' links, by selection position.
+    links: Vec<NetworkProfile>,
+    /// Download completion per selection position (round-relative).
+    download_s: Vec<f64>,
+    /// Successful fits awaiting the upload timeline, in selection order:
+    /// (selection position, result).
+    buffered: Vec<(usize, FitResult)>,
+}
+
+impl NetsimRound {
+    /// Solve the download phase for the selected cohort: every client
+    /// starts fetching the model at round-relative t = 0, sharing the
+    /// server's egress capacity.
+    fn begin(netsim: &NetSim, links: Vec<NetworkProfile>) -> NetsimRound {
+        let download_s = netsim.download_finish(&links);
+        NetsimRound { links, download_s, buffered: Vec::new() }
+    }
 }
 
 /// The federated server.
@@ -140,6 +194,10 @@ pub struct ServerApp {
     /// reflects the *final* scheduler, whatever order the `with_*` calls
     /// came in.
     scenario: Option<Scenario>,
+    /// Contention-aware communication simulator (DESIGN.md §12); `None`
+    /// keeps the closed-form `round_comm_s` fast path bit-identical to
+    /// the pre-netsim engine.
+    netsim: Option<NetSim>,
     /// User subscribers to the typed event stream (`fl::events`).
     observers: Vec<Box<dyn FlObserver>>,
     /// Recycled parameter buffers shared by client fits and the
@@ -214,6 +272,7 @@ impl ServerApp {
             executor_factory: None,
             dynamics: None,
             scenario: None,
+            netsim: None,
             observers: Vec::new(),
             scratch: ParamScratch::default(),
             trace: Trace::default(),
@@ -275,6 +334,21 @@ impl ServerApp {
         } else {
             Isolation::Strict
         };
+        self
+    }
+
+    /// Attach the contention-aware communication simulator (DESIGN.md
+    /// §12): per-round transfers share the server's finite
+    /// ingress/egress capacity under max-min fair share, and each kept
+    /// update is charged (bytes and accuracy) through the configured
+    /// codec.  The simulated timeline *replaces* both the clients'
+    /// closed-form `round_comm_s` and the configured emulated scheduler's
+    /// round clock — under netsim every client downloads, fits and
+    /// uploads concurrently, contending on the shared pipes rather than
+    /// on emulated compute slots.  Without this call the engine is
+    /// bit-identical to the pre-netsim code path.
+    pub fn with_netsim(mut self, netsim: NetSim) -> Self {
+        self.netsim = Some(netsim);
         self
     }
 
@@ -456,6 +530,16 @@ impl ServerApp {
                 selected.len(),
                 &self.scratch,
             );
+            // Netsim: the download phase is solvable at round start (it
+            // depends only on who was selected); fits are then buffered in
+            // selection order until the upload timeline can be solved.
+            let mut netsim_round = self.netsim.as_ref().map(|ns| {
+                let links: Vec<NetworkProfile> = selected
+                    .iter()
+                    .map(|&i| self.roster.network_of(i).unwrap_or(UNMODELED_LINK))
+                    .collect();
+                NetsimRound::begin(ns, links)
+            });
             let round_t0 = clock.now_s();
             let mut gate = self.dynamics.as_ref().map(|d| d.begin_gate(d.now_s()));
             let mut dyn_gate = self.dynamics.as_mut().zip(gate.as_mut());
@@ -472,6 +556,7 @@ impl ServerApp {
                     &mut ledger,
                     &mut acc,
                     &mut dyn_gate,
+                    &mut netsim_round,
                 )?,
                 None => round_inline(
                     &mut self.roster,
@@ -485,9 +570,31 @@ impl ServerApp {
                     &mut ledger,
                     &mut acc,
                     &mut dyn_gate,
+                    &mut netsim_round,
                     &self.scratch,
                 )?,
             }
+
+            // --- netsim: solve the upload timeline, gate and fold --------
+            // With netsim on, per-client comm windows come from the shared
+            // fair-share timeline instead of the closed form; the round's
+            // schedule is that timeline's kept spans.  Built AFTER every
+            // fit of the round is in (upload completion depends on every
+            // arrival), from selection-order data only — identical across
+            // worker counts.
+            let netsim_schedule = match netsim_round.take() {
+                Some(nr) => Some(self.finish_netsim_round(
+                    nr,
+                    round,
+                    selected,
+                    &mut ledger,
+                    &mut acc,
+                    &mut gate,
+                    recorder,
+                    tracer,
+                )?),
+                None => None,
+            };
 
             // Per-client events, interleaved back into true selection
             // order.  Successes and failures are each recorded in
@@ -574,13 +681,16 @@ impl ServerApp {
             }
 
             // --- round wall-clock per the scheduling policy --------------
-            // A round the gate actually touched renders the gate's own
-            // packing (the spans its drop decisions were judged against);
-            // a drop-free round — and every static round — renders the
-            // configured scheduler, so a scenario that drops nobody is
-            // bit-identical to the static engine for any scheduler.
-            let schedule = match gate.as_ref() {
-                Some(g) if g.dropped() > 0 => g.schedule(),
+            // A netsim round renders the simulated communication timeline
+            // (already gate-aware).  Otherwise: a round the gate actually
+            // touched renders the gate's own packing (the spans its drop
+            // decisions were judged against); a drop-free round — and
+            // every static round — renders the configured scheduler, so a
+            // scenario that drops nobody is bit-identical to the static
+            // engine for any scheduler.
+            let schedule = match (netsim_schedule, gate.as_ref()) {
+                (Some(s), _) => s,
+                (None, Some(g)) if g.dropped() > 0 => g.schedule(),
                 _ => self.scheduler.schedule(&ledger.durations),
             };
             if let Some(d) = self.dynamics.as_mut() {
@@ -650,6 +760,165 @@ impl ServerApp {
             FlEvent::RunEnd { rounds: self.cfg.rounds },
         );
         Ok(global)
+    }
+
+    /// Close a netsim round (DESIGN.md §12): solve the upload timeline
+    /// over every buffered fit, emit the transfer events, gate each
+    /// client on its simulated `[0, upload end)` window, fold the kept
+    /// (codec-compressed) updates, and return the round's schedule —
+    /// the simulated timeline's kept spans.
+    ///
+    /// Runs entirely on selection-order data assembled by the reorder
+    /// buffer, so the timeline — and everything downstream of it — is
+    /// bit-identical across `--workers N`.  Dropped and late clients'
+    /// transfers stay in the timeline (their partial traffic contended
+    /// for the pipe before the server learned they were gone); OOM-failed
+    /// clients never reach the upload phase, but their *download* did
+    /// happen — it contends and its events are emitted, so the event
+    /// stream accounts for every simulated byte.
+    #[allow(clippy::too_many_arguments)]
+    fn finish_netsim_round(
+        &mut self,
+        nr: NetsimRound,
+        round: u32,
+        selected: &[usize],
+        ledger: &mut RoundLedger,
+        acc: &mut Box<dyn AggAccumulator>,
+        gate: &mut Option<RoundGate>,
+        recorder: &mut HistoryObserver,
+        tracer: &mut TraceObserver,
+    ) -> Result<Schedule, FlError> {
+        // Borrowed, not cloned: `netsim`, `observers` and `dynamics` are
+        // disjoint fields, so the long-lived shared borrow here coexists
+        // with the mutable borrows the notify/gate calls below take.
+        let ns = self.netsim.as_ref().expect("netsim round implies netsim");
+        let NetsimRound { links, download_s, buffered } = nr;
+        let uploads: Vec<(f64, NetworkProfile)> = buffered
+            .iter()
+            .map(|(pos, r)| (download_s[*pos] + r.emu.emu_total_s, links[*pos]))
+            .collect();
+        let upload_end = ns.upload_finish(&uploads);
+        let wire_up = ns.wire_upload_bytes();
+        let payload = ns.payload_bytes();
+
+        // Download events for every *selected* client, selection order —
+        // a fit that later OOM'd still fetched the model and contended
+        // for egress (client ids equal roster indices, the same ledger
+        // convention the per-client event merge relies on).
+        for (pos, &roster_idx) in selected.iter().enumerate() {
+            let client = roster_idx as u32;
+            notify(
+                recorder,
+                tracer,
+                &mut self.observers,
+                FlEvent::CommStarted {
+                    round,
+                    client,
+                    direction: CommDirection::Download,
+                    at_s: 0.0,
+                    wire_bytes: payload,
+                },
+            );
+            notify(
+                recorder,
+                tracer,
+                &mut self.observers,
+                FlEvent::CommFinished {
+                    round,
+                    client,
+                    direction: CommDirection::Download,
+                    at_s: download_s[pos],
+                },
+            );
+        }
+
+        // Kept spans for the schedule — only tracked when no dynamics
+        // gate is active (an active gate records the very same windows
+        // via `admit_window` and renders them itself below).
+        let gated = gate.is_some();
+        let mut spans: Vec<(u32, f64, f64)> =
+            if gated { Vec::new() } else { Vec::with_capacity(buffered.len()) };
+        for (k, (pos, mut result)) in buffered.into_iter().enumerate() {
+            let client = result.client;
+            let upload_start = download_s[pos] + result.emu.emu_total_s;
+            let end = upload_end[k];
+            notify(
+                recorder,
+                tracer,
+                &mut self.observers,
+                FlEvent::CommStarted {
+                    round,
+                    client,
+                    direction: CommDirection::Upload,
+                    at_s: upload_start,
+                    wire_bytes: wire_up,
+                },
+            );
+            notify(
+                recorder,
+                tracer,
+                &mut self.observers,
+                FlEvent::CommFinished {
+                    round,
+                    client,
+                    direction: CommDirection::Upload,
+                    at_s: end,
+                },
+            );
+            // The client's full round window is [0, end): simulated comm
+            // replaces the client's closed-form `comm_s`, so the ledger
+            // duration, the gate window and the scenario timeline all see
+            // the contention-aware cost.
+            result.comm_s = end - result.emu.emu_total_s;
+            let verdict = match self.dynamics.as_mut().zip(gate.as_mut()) {
+                Some((d, g)) => d.admit_window(g, selected[pos], client, 0.0, end),
+                None => GateVerdict::Keep { start_s: 0.0, end_s: end },
+            };
+            match verdict {
+                GateVerdict::Keep { .. } => {
+                    ns.codec_apply(result.params.as_mut_slice());
+                    if !gated {
+                        spans.push((client, 0.0, end));
+                    }
+                    fold(ledger, acc, result)?;
+                }
+                GateVerdict::Dropout { offline_at_s } => {
+                    ledger.record_failure(client, dropout_reason(offline_at_s));
+                }
+                GateVerdict::Late { would_end_s } => {
+                    let deadline =
+                        gate.as_ref().map(|g| g.deadline_s()).unwrap_or(f64::INFINITY);
+                    ledger.record_failure(client, late_reason(would_end_s, deadline));
+                }
+            }
+        }
+
+        // Gate failures were appended after the fit phase's OOM failures,
+        // so the failure list may have left selection order — restore it
+        // for the per-client event merge (its two-pointer walk relies on
+        // selection-ordered partitions).
+        if !ledger.failures.is_empty() {
+            let position: std::collections::HashMap<u32, usize> = ledger
+                .selected
+                .iter()
+                .enumerate()
+                .map(|(p, &c)| (c, p))
+                .collect();
+            ledger
+                .failures
+                .sort_by_key(|f| position.get(&f.client).copied().unwrap_or(usize::MAX));
+        }
+
+        // Round clock: the gate's view when dynamics are on (it recorded
+        // the same kept windows and holds a late round open until the
+        // deadline); otherwise the simulated timeline's kept horizon.
+        Ok(match gate.as_ref() {
+            Some(g) => g.schedule(),
+            None => Schedule {
+                round_s: spans.iter().map(|&(_, _, e)| e).fold(0.0, f64::max),
+                spans,
+            },
+        })
     }
 
     /// Centralised eval over the held-out set (batched by the compiled
@@ -729,7 +998,8 @@ fn notify_round_end(
 }
 
 /// The paper-default engine: fits run sequentially in this thread,
-/// each finished client folded into the accumulator immediately.
+/// each finished client folded into the accumulator immediately (or
+/// buffered for the netsim upload timeline).
 #[allow(clippy::too_many_arguments)]
 fn round_inline(
     roster: &mut Roster,
@@ -743,9 +1013,10 @@ fn round_inline(
     ledger: &mut RoundLedger,
     acc: &mut Box<dyn AggAccumulator>,
     dyn_gate: &mut DynGate<'_>,
+    netsim: &mut Option<NetsimRound>,
     scratch: &ParamScratch,
 ) -> Result<(), FlError> {
-    for &ci in selected {
+    for (pos, &ci) in selected.iter().enumerate() {
         let mut client = roster.checkout(ci);
         let id = client.id();
         let fit_result = {
@@ -760,7 +1031,7 @@ fn round_inline(
         };
         roster.checkin(ci, client);
         match fit_result {
-            Ok(result) => fold_gated(ledger, acc, dyn_gate, ci, result)?,
+            Ok(result) => fold_gated(ledger, acc, dyn_gate, netsim, pos, ci, result)?,
             Err(e @ EmuError::GpuOom { .. }) | Err(e @ EmuError::HostOom { .. }) => {
                 // The paper's OOM story: the framework survives a
                 // failing client; it simply contributes no update.
@@ -791,6 +1062,7 @@ fn round_pooled(
     ledger: &mut RoundLedger,
     acc: &mut Box<dyn AggAccumulator>,
     dyn_gate: &mut DynGate<'_>,
+    netsim: &mut Option<NetsimRound>,
 ) -> Result<(), FlError> {
     let shared = Arc::new(global.clone());
     for (pos, &ci) in selected.iter().enumerate() {
@@ -831,9 +1103,15 @@ fn round_pooled(
                     for _ in 0..result.emu.steps {
                         clock.advance(result.emu.step_s);
                     }
-                    if let Err(e) =
-                        fold_gated(ledger, acc, dyn_gate, selected[slim.index], result)
-                    {
+                    if let Err(e) = fold_gated(
+                        ledger,
+                        acc,
+                        dyn_gate,
+                        netsim,
+                        slim.index,
+                        selected[slim.index],
+                        result,
+                    ) {
                         fatal = Some(e);
                     }
                 }
@@ -858,6 +1136,26 @@ fn round_pooled(
     }
 }
 
+/// Failure reason for a mid-window disconnection — one formatter shared
+/// by the packed and netsim gate paths, so `FailureKind::classify` (and
+/// the dynamics report) see one vocabulary.
+fn dropout_reason(offline_at_s: f64) -> String {
+    format!(
+        "{} client went offline at {offline_at_s:.2}s (emulated) \
+         before completing its fit+upload window",
+        super::history::DROPOUT_REASON_PREFIX
+    )
+}
+
+/// Failure reason for a deadline miss (see [`dropout_reason`]).
+fn late_reason(would_end_s: f64, deadline_s: f64) -> String {
+    format!(
+        "{} fit+comm would finish at {would_end_s:.2}s, past the \
+         {deadline_s:.2}s round deadline",
+        super::history::DEADLINE_REASON_PREFIX
+    )
+}
+
 /// Fold one successful fit through the dynamics gate (if any) into the
 /// round's scalar ledger and the streaming aggregate.
 ///
@@ -867,13 +1165,25 @@ fn round_pooled(
 /// failures and **never reach the accumulator**.  The replay clock is
 /// untouched here (its trajectory stays identical to the static engine);
 /// comm time reaches the scenario timeline through the round length.
+///
+/// A netsim round defers all of this: upload completion times depend on
+/// every arrival in the round, so the result is buffered (in selection
+/// order — the reorder buffer guarantees the feed order on any engine)
+/// and `ServerApp::finish_netsim_round` gates and folds once the shared
+/// timeline is solvable.
 fn fold_gated(
     ledger: &mut RoundLedger,
     acc: &mut Box<dyn AggAccumulator>,
     dyn_gate: &mut DynGate<'_>,
+    netsim: &mut Option<NetsimRound>,
+    pos: usize,
     roster_idx: usize,
     result: FitResult,
 ) -> Result<(), FlError> {
+    if let Some(nr) = netsim {
+        nr.buffered.push((pos, result));
+        return Ok(());
+    }
     let (dynamics, gate) = match dyn_gate {
         Some((d, g)) => (d, g),
         None => return fold(ledger, acc, result),
@@ -882,25 +1192,13 @@ fn fold_gated(
     match dynamics.admit(gate, roster_idx, result.client, dur_s) {
         GateVerdict::Keep { .. } => fold(ledger, acc, result),
         GateVerdict::Dropout { offline_at_s } => {
-            ledger.record_failure(
-                result.client,
-                format!(
-                    "{} client went offline at {offline_at_s:.2}s (emulated) \
-                     before completing its fit+upload window",
-                    super::history::DROPOUT_REASON_PREFIX
-                ),
-            );
+            ledger.record_failure(result.client, dropout_reason(offline_at_s));
             Ok(())
         }
         GateVerdict::Late { would_end_s } => {
             ledger.record_failure(
                 result.client,
-                format!(
-                    "{} fit+comm would finish at {would_end_s:.2}s, past the \
-                     {:.2}s round deadline",
-                    super::history::DEADLINE_REASON_PREFIX,
-                    gate.deadline_s()
-                ),
+                late_reason(would_end_s, gate.deadline_s()),
             );
             Ok(())
         }

@@ -8,8 +8,9 @@
 //!   learning framework with streaming aggregation ([`fl`]), the
 //!   hardware-emulation substrate ([`emu`]), hardware databases + the
 //!   Steam-survey sampler ([`hardware`]), client schedulers and the
-//!   concurrent round engine ([`sched`]), and the analysis/figure harness
-//!   ([`analysis`]).
+//!   concurrent round engine ([`sched`]), the contention-aware
+//!   communication simulator with update codecs ([`netsim`]), and the
+//!   analysis/figure harness ([`analysis`]).
 //! * **L2** — the training computation (a compact CNN) written in JAX
 //!   (`python/compile/model.py`), AOT-lowered once to HLO text.
 //! * **L1** — Pallas kernels for the dense layer (fwd + custom-VJP bwd),
@@ -31,6 +32,7 @@ pub mod fl;
 pub mod hardware;
 pub mod modelcost;
 pub mod net;
+pub mod netsim;
 pub mod runtime;
 pub mod sched;
 pub mod util;

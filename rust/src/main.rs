@@ -19,6 +19,8 @@ use bouquetfl::emu::EmulationMode;
 use bouquetfl::fl::launcher::{launch, HardwareSource, LaunchOptions};
 use bouquetfl::fl::{strategy, Scenario, Selection, MODEL_KINDS, SCENARIO_PRESETS};
 use bouquetfl::hardware::profile::PRESET_NAMES;
+use bouquetfl::net::NET_TIERS;
+use bouquetfl::netsim::{self, NetSimConfig, NETSIM_PRESETS};
 use bouquetfl::sched;
 use bouquetfl::hardware::sampler::{HardwareSampler, SamplerConfig};
 use bouquetfl::hardware::{preset, HardwareProfile, CPU_DB, GPU_DB};
@@ -60,7 +62,7 @@ fn print_global_help() {
          \x20 oom              OOM matrix: batch size x GPU VRAM (paper §4.2)\n\
          \x20 dataloader       CPU data-loading sweep (paper §4.2)\n\
          \x20 ram              RAM-size sweep (paper §4.2)\n\
-         \x20 list             list registered strategies / schedulers / scenario presets / hardware\n\
+         \x20 list             list registered strategies / schedulers / scenarios / codecs / hardware\n\
          \x20 list-hw          list known GPUs / CPUs / profile presets"
     );
 }
@@ -105,6 +107,25 @@ fn cmd_list(raw: &[String]) -> Result<()> {
     for &name in bouquetfl::data::PARTITION_SCHEMES {
         println!("  {name}");
     }
+    println!("\nnetwork tiers (--network / netsim client links, net::NET_TIERS):");
+    for (tier, weight) in NET_TIERS {
+        println!(
+            "  {:<10} {:>5.0}/{:<4.0} Mbit/s  {:>4.0} ms  ({weight:.0}% of clients)",
+            tier.name, tier.down_mbps, tier.up_mbps, tier.latency_ms
+        );
+    }
+    println!("\nupdate codecs ([netsim] codec, DESIGN.md §12):");
+    for name in netsim::codec_names() {
+        match netsim::codec_by_name(&name, 0.05) {
+            Some(codec) => println!("  {}", codec.describe()),
+            None => println!("  {name}"),
+        }
+    }
+    println!("\nnetsim presets (--netsim / [netsim] preset):");
+    for &name in NETSIM_PRESETS {
+        let cfg = NetSimConfig::preset(name).expect("preset exists");
+        println!("  {:<16} {}", name, cfg.describe());
+    }
     println!("\nhardware profile presets (--profiles, see also list-hw):");
     for &name in PRESET_NAMES {
         println!("  {}", preset(name)?.describe());
@@ -129,6 +150,7 @@ fn run_specs() -> Vec<OptSpec> {
         OptSpec { name: "seed", help: "experiment seed", takes_value: true, default: Some("42") },
         OptSpec { name: "scenario", help: "federation dynamics: stable|diurnal-mobile|high-churn or a .toml/.json scenario file (see SCENARIOS.md)", takes_value: true, default: None },
         OptSpec { name: "network", help: "attach network-latency profiles", takes_value: false, default: None },
+        OptSpec { name: "netsim", help: "contention-aware comm simulation: uncapped|congested-cell preset (implies --network; DESIGN.md §12)", takes_value: true, default: None },
         OptSpec { name: "profiles", help: "comma-separated preset/GPU names (manual hardware)", takes_value: true, default: None },
         OptSpec { name: "history-out", help: "write round history JSON here", takes_value: true, default: None },
         OptSpec { name: "trace-out", help: "write Chrome-trace JSON of client fits here", takes_value: true, default: None },
@@ -177,6 +199,16 @@ fn cmd_run(raw: &[String]) -> Result<()> {
         let sc = Scenario::resolve(spec)?;
         opts.scenario = (!sc.is_static()).then_some(sc);
     }
+    if let Some(preset) = args.get("netsim") {
+        // netsim implies `network = true`; `ExperimentBuilder::build()`
+        // enforces that on every launch path, so no copy here.
+        opts.netsim = Some(NetSimConfig::preset(preset).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown netsim preset '{preset}' ({})",
+                NETSIM_PRESETS.join("|")
+            )
+        })?);
+    }
 
     println!("host: {}", opts.host.describe());
     println!(
@@ -186,6 +218,9 @@ fn cmd_run(raw: &[String]) -> Result<()> {
     );
     if let Some(sc) = &opts.scenario {
         println!("scenario: {}", sc.describe());
+    }
+    if let Some(ns) = &opts.netsim {
+        println!("netsim: {}", ns.describe());
     }
     let outcome = launch(&opts)?;
 

@@ -4,6 +4,13 @@
 //!
 //! Each client gets an uplink/downlink bandwidth + latency profile; a round
 //! adds `download(model) + upload(update)` to the client's emulated time.
+//!
+//! Everything here is the **contention-free fast path**: each client sees
+//! its full link speed regardless of how many peers transfer at once.
+//! The [`netsim`](crate::netsim) subsystem (DESIGN.md §12) layers a
+//! shared-bottleneck fair-share timeline over these same link profiles —
+//! with unlimited server capacity and the identity codec it reproduces
+//! the closed forms below to 1e-9.
 
 use std::sync::OnceLock;
 
@@ -62,6 +69,34 @@ impl NetworkProfile {
 
     /// Full round-trip communication cost for one FL round (download global
     /// model, upload update; both are the flat parameter vector).
+    ///
+    /// This is the **contention-free fast path** — the client alone on
+    /// its link, the server never a bottleneck — used whenever netsim is
+    /// disabled.  The contention-aware replacement is the fair-share
+    /// timeline in [`netsim`](crate::netsim) (DESIGN.md §12), which
+    /// reduces to exactly this closed form when the server's capacity is
+    /// unlimited and the codec is `identity` — for the *same* payload
+    /// (this path charges `global.len() * 4` bytes; netsim defaults to
+    /// the timing workload's `weight_bytes()` unless pinned):
+    ///
+    /// ```
+    /// use bouquetfl::net::NET_TIERS;
+    /// use bouquetfl::netsim::{simulate, Transfer};
+    ///
+    /// let lte = NET_TIERS[3].0;
+    /// let bytes = 10 * 1024 * 1024;
+    /// let alone = simulate(
+    ///     &[Transfer {
+    ///         id: 0,
+    ///         arrival_s: 0.0,
+    ///         latency_s: lte.latency_ms / 1000.0,
+    ///         bytes,
+    ///         link_mbps: lte.down_mbps,
+    ///     }],
+    ///     f64::INFINITY, // an uncapped server pipe
+    /// );
+    /// assert!((alone[0].finish_s - lte.download_s(bytes)).abs() < 1e-9);
+    /// ```
     pub fn round_comm_s(&self, model_bytes: u64) -> f64 {
         self.download_s(model_bytes) + self.upload_s(model_bytes)
     }

@@ -1,0 +1,336 @@
+//! Update-compression codecs: what a client puts on the wire instead of
+//! raw fp32 parameters, and the modelled accuracy cost of doing so
+//! (DESIGN.md §12).
+//!
+//! A [`Codec`] answers two questions the communication simulator asks:
+//! how many **bytes** does a raw fp32 payload become on the wire
+//! ([`Codec::wire_bytes`] — what the fair-share timeline transfers), and
+//! what **perturbation** does the compression inflict on the update
+//! ([`Codec::apply`] — a deterministic encode→decode round-trip applied
+//! to kept updates before they fold into the aggregation accumulator).
+//! Both are pure functions: no RNG, no state, so the engine's
+//! bit-identity-across-workers invariant extends to compressed runs.
+//!
+//! Codecs are resolvable **by name** through the crate-wide registry
+//! ([`register`] / [`by_name`] / [`names`]), exactly like strategies and
+//! schedulers (DESIGN.md §10): the `[netsim] codec` config key,
+//! `ExperimentBuilder::netsim` and `bouquetfl list` all share one
+//! resolution path, and downstream crates can plug in custom codecs
+//! without touching core code.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, OnceLock, RwLock};
+
+/// A lossy (or lossless) wire format for parameter updates.
+///
+/// `Send + Sync` because the resolved codec is shared by the server round
+/// loop and anything observing it.
+pub trait Codec: Send + Sync {
+    /// Registry name of this codec.
+    fn name(&self) -> &'static str;
+
+    /// Bytes on the wire for a raw fp32 payload of `raw_bytes`.
+    fn wire_bytes(&self, raw_bytes: u64) -> u64;
+
+    /// Apply the modelled encode→decode loss to an update in place.
+    /// Deterministic: same input, same output, on any worker count.
+    fn apply(&self, params: &mut [f32]);
+
+    /// One-line human description for `bouquetfl list` / run headers.
+    fn describe(&self) -> String {
+        format!(
+            "{} ({:.1}x payload)",
+            self.name(),
+            // Compression ratio at a nominal 1 MiB payload.
+            (1u64 << 20) as f64 / self.wire_bytes(1 << 20).max(1) as f64
+        )
+    }
+}
+
+/// Lossless pass-through: raw fp32 on the wire.  The default — with
+/// unlimited capacity this reproduces the closed-form
+/// `NetworkProfile::round_comm_s` costs exactly.
+#[derive(Debug, Default)]
+pub struct Identity;
+
+impl Codec for Identity {
+    fn name(&self) -> &'static str {
+        "identity"
+    }
+
+    fn wire_bytes(&self, raw_bytes: u64) -> u64 {
+        raw_bytes
+    }
+
+    fn apply(&self, _params: &mut [f32]) {}
+}
+
+/// Half-precision floats: 2 bytes per parameter.  The perturbation model
+/// zeroes the 13 low mantissa bits of each fp32 value (fp16 keeps 10;
+/// exponent clamping is ignored — FL updates live well inside fp16
+/// range), a deterministic round-toward-zero.
+#[derive(Debug, Default)]
+pub struct Float16;
+
+impl Codec for Float16 {
+    fn name(&self) -> &'static str {
+        "float16"
+    }
+
+    fn wire_bytes(&self, raw_bytes: u64) -> u64 {
+        raw_bytes.div_ceil(2)
+    }
+
+    fn apply(&self, params: &mut [f32]) {
+        for v in params.iter_mut() {
+            *v = f32::from_bits(v.to_bits() & 0xFFFF_E000);
+        }
+    }
+}
+
+/// Symmetric 8-bit quantisation: 1 byte per parameter plus one fp32
+/// scale.  Values are mapped to `round(v / s * 127)` with
+/// `s = max |v|` and decoded back — the classic QSGD-style uniform grid.
+#[derive(Debug, Default)]
+pub struct Int8Quant;
+
+impl Codec for Int8Quant {
+    fn name(&self) -> &'static str {
+        "int8"
+    }
+
+    fn wire_bytes(&self, raw_bytes: u64) -> u64 {
+        raw_bytes.div_ceil(4) + 4
+    }
+
+    fn apply(&self, params: &mut [f32]) {
+        let scale = params.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        if scale == 0.0 || !scale.is_finite() {
+            return;
+        }
+        for v in params.iter_mut() {
+            let q = (*v / scale * 127.0).round().clamp(-127.0, 127.0);
+            *v = q / 127.0 * scale;
+        }
+    }
+}
+
+/// Top-k magnitude sparsification: only the largest-|v| fraction of
+/// coordinates travels, as (index, value) pairs — 8 bytes per kept
+/// coordinate.  Everything else decodes to zero.  Ties break by index
+/// (lower index wins), so the kept set is deterministic.
+#[derive(Debug)]
+pub struct TopK {
+    /// Fraction of coordinates kept, in `(0, 1]`.
+    pub fraction: f64,
+}
+
+impl TopK {
+    /// A codec keeping the top `fraction` of coordinates by magnitude.
+    pub fn new(fraction: f64) -> Self {
+        assert!(
+            fraction > 0.0 && fraction <= 1.0,
+            "top-k fraction {fraction} outside (0, 1]"
+        );
+        TopK { fraction }
+    }
+
+    fn kept(&self, n: usize) -> usize {
+        ((n as f64 * self.fraction).ceil() as usize).clamp(1, n.max(1))
+    }
+}
+
+impl Codec for TopK {
+    fn name(&self) -> &'static str {
+        "top-k"
+    }
+
+    fn wire_bytes(&self, raw_bytes: u64) -> u64 {
+        // raw_bytes / 4 fp32 coordinates; each survivor ships a u32 index
+        // + an fp32 value.
+        let n = (raw_bytes / 4) as usize;
+        self.kept(n) as u64 * 8
+    }
+
+    fn apply(&self, params: &mut [f32]) {
+        let n = params.len();
+        if n == 0 {
+            return;
+        }
+        let k = self.kept(n);
+        if k >= n {
+            return;
+        }
+        // Deterministic kept set: magnitude descending, index ascending
+        // is a total order, so the k-element prefix of a partition at
+        // k-1 is unique — `select_nth_unstable_by` gives it in O(n)
+        // without the full sort.
+        let mut order: Vec<u32> = (0..n as u32).collect();
+        order.select_nth_unstable_by(k - 1, |&a, &b| {
+            params[b as usize]
+                .abs()
+                .total_cmp(&params[a as usize].abs())
+                .then(a.cmp(&b))
+        });
+        for &i in &order[k..] {
+            params[i as usize] = 0.0;
+        }
+    }
+}
+
+/// Builds a codec instance (registry entry).  The `f64` knob is the
+/// codec's single tunable — the kept fraction for `top-k`; the built-ins
+/// without a knob ignore it (same shape as the scheduler registry's slot
+/// argument).
+pub type CodecFactory = Arc<dyn Fn(f64) -> Arc<dyn Codec> + Send + Sync>;
+
+fn registry() -> &'static RwLock<BTreeMap<String, CodecFactory>> {
+    static REG: OnceLock<RwLock<BTreeMap<String, CodecFactory>>> = OnceLock::new();
+    REG.get_or_init(|| {
+        let mut m: BTreeMap<String, CodecFactory> = BTreeMap::new();
+        m.insert(
+            "identity".into(),
+            Arc::new(|_| Arc::new(Identity) as Arc<dyn Codec>) as CodecFactory,
+        );
+        m.insert(
+            "float16".into(),
+            Arc::new(|_| Arc::new(Float16) as Arc<dyn Codec>) as CodecFactory,
+        );
+        m.insert(
+            "int8".into(),
+            Arc::new(|_| Arc::new(Int8Quant) as Arc<dyn Codec>) as CodecFactory,
+        );
+        m.insert(
+            "top-k".into(),
+            Arc::new(|knob| {
+                // Out-of-range (or NaN) knobs fall back to the documented
+                // default; the config layer rejects them with a message
+                // before a run ever gets here.
+                let fraction = if knob > 0.0 && knob <= 1.0 { knob } else { 0.05 };
+                Arc::new(TopK::new(fraction)) as Arc<dyn Codec>
+            }) as CodecFactory,
+        );
+        RwLock::new(m)
+    })
+}
+
+/// Register (or replace) a codec under `name`; immediately resolvable
+/// from config files, the builder and [`by_name`].
+pub fn register(name: &str, factory: CodecFactory) {
+    registry().write().unwrap().insert(name.to_string(), factory);
+}
+
+/// Build the codec registered under `name` with the given knob (the kept
+/// fraction for `top-k`; ignored by knob-less codecs).
+pub fn by_name(name: &str, knob: f64) -> Option<Arc<dyn Codec>> {
+    let reg = registry().read().unwrap();
+    reg.get(name).map(|factory| factory(knob))
+}
+
+/// All registered codec names, sorted (built-ins plus anything added via
+/// [`register`]).
+pub fn names() -> Vec<String> {
+    registry().read().unwrap().keys().cloned().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_has_the_builtins() {
+        let names = names();
+        for want in ["identity", "float16", "int8", "top-k"] {
+            assert!(names.iter().any(|n| n == want), "missing {want}");
+        }
+        assert!(by_name("identity", 0.0).is_some());
+        assert!(by_name("nope", 0.0).is_none());
+    }
+
+    #[test]
+    fn wire_sizes() {
+        let raw = 1000 * 4; // 1000 fp32 coordinates
+        assert_eq!(Identity.wire_bytes(raw), raw);
+        assert_eq!(Float16.wire_bytes(raw), raw / 2);
+        assert_eq!(Int8Quant.wire_bytes(raw), raw / 4 + 4);
+        assert_eq!(TopK::new(0.1).wire_bytes(raw), 100 * 8);
+        assert_eq!(TopK::new(1.0).wire_bytes(raw), 1000 * 8);
+        // At least one coordinate always survives.
+        assert_eq!(TopK::new(1e-9).wire_bytes(16), 8);
+    }
+
+    #[test]
+    fn identity_is_lossless() {
+        let mut v = vec![1.5f32, -0.25, 1e-20, 1e20];
+        let before = v.clone();
+        Identity.apply(&mut v);
+        assert_eq!(v, before);
+    }
+
+    #[test]
+    fn float16_truncates_but_stays_close() {
+        let mut v = vec![0.1f32, -3.14159, 1024.5, 0.0];
+        let before = v.clone();
+        Float16.apply(&mut v);
+        for (a, b) in v.iter().zip(&before) {
+            // 10 mantissa bits ~ 1e-3 relative error.
+            assert!((a - b).abs() <= b.abs() * 2e-3 + f32::EPSILON, "{a} vs {b}");
+        }
+        assert_eq!(v[3], 0.0);
+        // Idempotent: re-encoding an encoded vector changes nothing.
+        let once = v.clone();
+        Float16.apply(&mut v);
+        assert_eq!(v, once);
+    }
+
+    #[test]
+    fn int8_error_bounded_by_half_a_grid_step() {
+        let mut v: Vec<f32> = (0..256).map(|i| (i as f32 - 128.0) * 0.013).collect();
+        let before = v.clone();
+        Int8Quant.apply(&mut v);
+        let scale = before.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+        let step = scale / 127.0;
+        for (a, b) in v.iter().zip(&before) {
+            assert!((a - b).abs() <= step / 2.0 + 1e-6, "{a} vs {b}");
+        }
+        // All-zero input passes through.
+        let mut z = vec![0.0f32; 8];
+        Int8Quant.apply(&mut z);
+        assert!(z.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn topk_keeps_the_largest_magnitudes() {
+        let mut v = vec![0.1f32, -5.0, 0.01, 3.0, -0.2, 0.0];
+        TopK::new(1.0 / 3.0).apply(&mut v); // keep ceil(6/3) = 2
+        assert_eq!(v, vec![0.0, -5.0, 0.0, 3.0, 0.0, 0.0]);
+        // Ties break by index: with everyone equal, the first k survive.
+        let mut e = vec![1.0f32; 4];
+        TopK::new(0.5).apply(&mut e);
+        assert_eq!(e, vec![1.0, 1.0, 0.0, 0.0]);
+        // fraction 1.0 is lossless.
+        let mut f = vec![3.0f32, -1.0];
+        TopK::new(1.0).apply(&mut f);
+        assert_eq!(f, vec![3.0, -1.0]);
+    }
+
+    #[test]
+    fn custom_codecs_plug_in_by_name() {
+        struct Nothing;
+        impl Codec for Nothing {
+            fn name(&self) -> &'static str {
+                "nothing"
+            }
+            fn wire_bytes(&self, _raw: u64) -> u64 {
+                0
+            }
+            fn apply(&self, params: &mut [f32]) {
+                params.fill(0.0);
+            }
+        }
+        register("nothing", Arc::new(|_| Arc::new(Nothing) as Arc<dyn Codec>));
+        let c = by_name("nothing", 0.0).expect("registered");
+        assert_eq!(c.wire_bytes(100), 0);
+        assert!(names().iter().any(|n| n == "nothing"));
+    }
+}

@@ -1,0 +1,336 @@
+//! Max-min fair-share transfer timeline: the discrete-event core of the
+//! communication simulator (DESIGN.md §12).
+//!
+//! A set of [`Transfer`]s shares one finite pipe (the server's ingress or
+//! egress capacity).  At every instant each *active* transfer receives its
+//! max-min fair share of the capacity — progressive filling: sort the
+//! per-flow rate caps ascending, give each flow
+//! `min(own cap, remaining capacity / remaining flows)` — so slow links
+//! are bounded by themselves and fast links split whatever the slow ones
+//! leave on the table.  The timeline advances event to event (a transfer
+//! arriving or finishing), recomputing rates at each boundary; between
+//! events rates are constant, so completion times are exact in f64 and
+//! the whole simulation is a pure function of its inputs: deterministic,
+//! query-order free, and independent of how many pool workers executed
+//! the fits that produced the arrival times.
+//!
+//! With `capacity = ∞` every transfer runs at its own link rate and the
+//! finish times reduce to the closed-form
+//! [`NetworkProfile::download_s`](crate::net::NetworkProfile::download_s) /
+//! [`upload_s`](crate::net::NetworkProfile::upload_s) costs — the
+//! contention-free fast path the engine uses when netsim is disabled
+//! (property-tested to 1e-9 in `rust/tests/netsim.rs`).
+
+/// Remaining-bits tolerance below which a transfer counts as finished
+/// (guards the event loop against f64 residue after a subtraction chain).
+const DONE_EPS_BITS: f64 = 1e-6;
+
+/// One flow over the shared pipe.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Transfer {
+    /// Caller-side identifier, carried through to the [`Completion`].
+    pub id: u32,
+    /// When the flow is requested (round-relative seconds).
+    pub arrival_s: f64,
+    /// One-way propagation latency before the first bit flows, seconds.
+    pub latency_s: f64,
+    /// Payload on the wire, bytes.
+    pub bytes: u64,
+    /// The flow's own rate cap (the client link), Mbit/s.  May be
+    /// `f64::INFINITY` for an unmodelled link.
+    pub link_mbps: f64,
+}
+
+/// A finished flow.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Completion {
+    /// The [`Transfer::id`] this completion belongs to.
+    pub id: u32,
+    /// When the first bit flowed (`arrival_s + latency_s`), seconds.
+    pub start_s: f64,
+    /// When the last bit arrived, seconds.
+    pub finish_s: f64,
+}
+
+/// Max-min rates (bit/s) for the active flows: progressive filling of
+/// `capacity_bps` over the per-flow caps in `caps_bps`.  `order` and
+/// `out` are caller-owned scratch so the per-event hot path allocates
+/// nothing.
+fn fair_rates(caps_bps: &[f64], capacity_bps: f64, order: &mut Vec<usize>, out: &mut Vec<f64>) {
+    out.clear();
+    out.resize(caps_bps.len(), 0.0);
+    if capacity_bps.is_infinite() {
+        out.copy_from_slice(caps_bps);
+        return;
+    }
+    order.clear();
+    order.extend(0..caps_bps.len());
+    // Ascending by cap, index-stable on ties — determinism does not ride
+    // on the (already deterministic) sort, but stability keeps the
+    // intermediate arithmetic identical across platforms' sort versions.
+    order.sort_by(|&a, &b| caps_bps[a].total_cmp(&caps_bps[b]).then(a.cmp(&b)));
+    let mut remaining = capacity_bps;
+    let mut left = caps_bps.len();
+    for &i in order.iter() {
+        let share = (remaining / left as f64).max(0.0);
+        let r = caps_bps[i].min(share);
+        out[i] = r;
+        remaining -= r;
+        left -= 1;
+    }
+}
+
+/// Simulate the shared pipe: every transfer's completion, **returned in
+/// input order** (`out[i]` belongs to `transfers[i]`).
+///
+/// `capacity_mbps` is the pipe's total rate (Mbit/s); `f64::INFINITY`
+/// removes the shared constraint entirely, reducing each flow to its own
+/// link's closed-form cost.  Capacities and link caps must be positive
+/// (the config layer validates; a zero-rate flow would never finish).
+pub fn simulate(transfers: &[Transfer], capacity_mbps: f64) -> Vec<Completion> {
+    assert!(capacity_mbps > 0.0, "pipe capacity must be positive");
+    let n = transfers.len();
+    let mut out: Vec<Completion> = transfers
+        .iter()
+        .map(|t| Completion {
+            id: t.id,
+            start_s: t.arrival_s + t.latency_s,
+            finish_s: f64::NAN,
+        })
+        .collect();
+    if n == 0 {
+        return out;
+    }
+    for t in transfers {
+        assert!(t.link_mbps > 0.0, "link rate must be positive");
+        assert!(t.arrival_s >= 0.0 && t.latency_s >= 0.0, "negative time");
+    }
+
+    // Pending flows by start time (arrival + latency), index-stable.
+    let mut pending: Vec<usize> = (0..n).collect();
+    pending.sort_by(|&a, &b| {
+        out[a]
+            .start_s
+            .total_cmp(&out[b].start_s)
+            .then(a.cmp(&b))
+    });
+    let mut next_pending = 0usize;
+
+    // Active flows: (input index, remaining bits).  `caps`/`rates`/
+    // `rate_order` are reused across events — the loop allocates nothing.
+    let mut active: Vec<(usize, f64)> = Vec::new();
+    let mut caps: Vec<f64> = Vec::new();
+    let mut rates: Vec<f64> = Vec::new();
+    let mut rate_order: Vec<usize> = Vec::new();
+    let capacity_bps = capacity_mbps * 1e6;
+
+    let mut now = out[pending[0]].start_s;
+    loop {
+        // Admit everything that has started by `now`.
+        while next_pending < n && out[pending[next_pending]].start_s <= now {
+            let i = pending[next_pending];
+            active.push((i, transfers[i].bytes as f64 * 8.0));
+            next_pending += 1;
+        }
+        if active.is_empty() {
+            if next_pending >= n {
+                break; // everything finished
+            }
+            now = out[pending[next_pending]].start_s;
+            continue;
+        }
+
+        caps.clear();
+        caps.extend(active.iter().map(|&(i, _)| transfers[i].link_mbps * 1e6));
+        fair_rates(&caps, capacity_bps, &mut rate_order, &mut rates);
+
+        // An infinite-rate flow (unmodelled link, unlimited pipe) drains
+        // instantly; otherwise the next event is the earliest completion
+        // or the next admission.
+        let mut dt = f64::INFINITY;
+        for (k, &(_, remaining)) in active.iter().enumerate() {
+            let t_fin = if rates[k].is_infinite() {
+                0.0
+            } else {
+                remaining / rates[k]
+            };
+            if t_fin < dt {
+                dt = t_fin;
+            }
+        }
+        if next_pending < n {
+            let t_arr = out[pending[next_pending]].start_s - now;
+            if t_arr < dt {
+                dt = t_arr;
+            }
+        }
+        debug_assert!(dt.is_finite() && dt >= 0.0, "event loop stalled (dt={dt})");
+
+        // Advance every active flow by dt at its current rate.
+        for (k, entry) in active.iter_mut().enumerate() {
+            if rates[k].is_infinite() {
+                entry.1 = 0.0;
+            } else {
+                entry.1 -= rates[k] * dt;
+            }
+        }
+        now += dt;
+
+        // Retire finished flows (retain keeps the index-stable order the
+        // rate vector is rebuilt from next iteration).
+        active.retain(|&(i, remaining)| {
+            if remaining <= DONE_EPS_BITS {
+                out[i].finish_s = now;
+                false
+            } else {
+                true
+            }
+        });
+        if active.is_empty() && next_pending >= n {
+            break;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn xfer(id: u32, arrival_s: f64, latency_s: f64, bytes: u64, link_mbps: f64) -> Transfer {
+        Transfer { id, arrival_s, latency_s, bytes, link_mbps }
+    }
+
+    const MB: u64 = 1024 * 1024;
+
+    #[test]
+    fn infinite_capacity_is_the_closed_form() {
+        // bytes*8 / (mbps*1e6) + latency, per flow, independent of peers.
+        let ts = vec![
+            xfer(0, 0.0, 0.005, 10 * MB, 500.0),
+            xfer(1, 0.0, 0.045, 10 * MB, 10.0),
+            xfer(2, 3.0, 0.6, 2 * MB, 10.0),
+        ];
+        let done = simulate(&ts, f64::INFINITY);
+        for (t, c) in ts.iter().zip(&done) {
+            let expect = t.arrival_s + t.latency_s + t.bytes as f64 * 8.0 / (t.link_mbps * 1e6);
+            assert!(
+                (c.finish_s - expect).abs() < 1e-9,
+                "flow {}: {} vs {}",
+                t.id,
+                c.finish_s,
+                expect
+            );
+        }
+    }
+
+    #[test]
+    fn equal_flows_split_the_pipe_evenly() {
+        // 4 uncapped flows over a 100 Mbit/s pipe: each gets 25 Mbit/s and
+        // all finish together at bytes*8 / 25e6.
+        let ts: Vec<Transfer> =
+            (0..4).map(|i| xfer(i, 0.0, 0.0, 25 * MB, f64::INFINITY)).collect();
+        let done = simulate(&ts, 100.0);
+        let expect = 25.0 * MB as f64 * 8.0 / 25e6;
+        for c in &done {
+            assert!((c.finish_s - expect).abs() < 1e-6, "{} vs {expect}", c.finish_s);
+        }
+    }
+
+    #[test]
+    fn slow_link_bounded_by_itself_fast_link_takes_the_rest() {
+        // 10 Mbit/s link + uncapped link over a 100 Mbit/s pipe: the slow
+        // flow runs at its own 10, the fast one at 90.
+        let slow_bytes = 5 * MB;
+        let fast_bytes = 45 * MB;
+        let done = simulate(
+            &[xfer(0, 0.0, 0.0, slow_bytes, 10.0), xfer(1, 0.0, 0.0, fast_bytes, f64::INFINITY)],
+            100.0,
+        );
+        let slow_expect = slow_bytes as f64 * 8.0 / 10e6;
+        let fast_expect = fast_bytes as f64 * 8.0 / 90e6;
+        // Both finish at the same instant by construction, so no rate
+        // change happens mid-flight and the algebra stays exact.
+        assert!((done[0].finish_s - slow_expect).abs() < 1e-6);
+        assert!((done[1].finish_s - fast_expect).abs() < 1e-6);
+    }
+
+    #[test]
+    fn staggered_arrival_reshapes_rates_at_the_boundary() {
+        // Flow A (uncapped) alone on a 10 Mbit/s pipe; flow B arrives at
+        // t=4 and halves A's rate.  A: 80 Mbit total = 8 s alone, but only
+        // 40 Mbit are done by t=4; the remaining 40 at 5 Mbit/s take 8 s
+        // more -> finishes at 12.  B: 20 Mbit at 5 Mbit/s while A is
+        // around; A leaves at 12 with B having 20 - 8*5 = ... B has
+        // 20 Mbit, transfers 8*5 = 40 -> B is done at 4 + 20/5 = 8 first.
+        let done = simulate(
+            &[
+                xfer(0, 0.0, 0.0, 10 * 1_000_000, f64::INFINITY), // 80 Mbit
+                xfer(1, 4.0, 0.0, 2_500_000, f64::INFINITY),      // 20 Mbit
+            ],
+            10.0,
+        );
+        // B finishes at 8 (20 Mbit at 5 Mbit/s from t=4); A then speeds
+        // back up: by t=8 A moved 40 + 20 = 60 Mbit, the last 20 at
+        // 10 Mbit/s -> t=10.
+        assert!((done[1].finish_s - 8.0).abs() < 1e-6, "B: {}", done[1].finish_s);
+        assert!((done[0].finish_s - 10.0).abs() < 1e-6, "A: {}", done[0].finish_s);
+    }
+
+    #[test]
+    fn latency_delays_the_first_bit() {
+        let done = simulate(&[xfer(0, 1.0, 0.5, 1_250_000, 10.0)], f64::INFINITY);
+        assert!((done[0].start_s - 1.5).abs() < 1e-12);
+        assert!((done[0].finish_s - (1.5 + 1.0)).abs() < 1e-9); // 10 Mbit at 10 Mbit/s
+    }
+
+    #[test]
+    fn deterministic_and_input_order_indexed() {
+        let ts: Vec<Transfer> = (0..12)
+            .map(|i| xfer(i, (i as f64) * 0.3, 0.01 * i as f64, (1 + i as u64) * MB, 20.0))
+            .collect();
+        let a = simulate(&ts, 55.0);
+        let b = simulate(&ts, 55.0);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.finish_s.to_bits(), y.finish_s.to_bits());
+        }
+        for (i, c) in a.iter().enumerate() {
+            assert_eq!(c.id, i as u32, "completions must stay in input order");
+            assert!(c.finish_s >= c.start_s);
+        }
+    }
+
+    #[test]
+    fn contention_never_beats_the_contention_free_bound() {
+        let ts: Vec<Transfer> = (0..8)
+            .map(|i| xfer(i, (i % 3) as f64, 0.02, 4 * MB, 30.0))
+            .collect();
+        let shared = simulate(&ts, 60.0);
+        let alone = simulate(&ts, f64::INFINITY);
+        for (s, a) in shared.iter().zip(&alone) {
+            assert!(s.finish_s >= a.finish_s - 1e-9, "{} < {}", s.finish_s, a.finish_s);
+        }
+    }
+
+    #[test]
+    fn empty_input_is_empty_output() {
+        assert!(simulate(&[], 10.0).is_empty());
+    }
+
+    #[test]
+    fn fair_rates_water_fill() {
+        let mut order = Vec::new();
+        let mut out = Vec::new();
+        // Caps 5/10/100 over capacity 60: 5 + 10 + 45.
+        fair_rates(&[5e6, 10e6, 100e6], 60e6, &mut order, &mut out);
+        assert!((out[0] - 5e6).abs() < 1.0);
+        assert!((out[1] - 10e6).abs() < 1.0);
+        assert!((out[2] - 45e6).abs() < 1.0);
+        // Infinite capacity: everyone at their own cap.
+        fair_rates(&[5e6, 10e6], f64::INFINITY, &mut order, &mut out);
+        assert_eq!(out, vec![5e6, 10e6]);
+        // Sum never exceeds the pipe.
+        fair_rates(&[30e6, 30e6, 30e6], 60e6, &mut order, &mut out);
+        assert!((out.iter().sum::<f64>() - 60e6).abs() < 1.0);
+    }
+}

@@ -1,0 +1,416 @@
+//! `netsim` — contention-aware communication simulation with
+//! update-compression codecs (DESIGN.md §12).
+//!
+//! The base `net/` layer charges every client the **contention-free**
+//! closed-form `download(model) + upload(update)` cost
+//! ([`NetworkProfile::round_comm_s`](crate::net::NetworkProfile::round_comm_s)):
+//! each client sees its full link speed no matter how many peers transfer
+//! at once.  Real federations are dominated by the *server's* shared
+//! ingress/egress bottleneck — this module replaces the closed form with
+//! a deterministic discrete-event timeline ([`fairshare`]) in which
+//! concurrent downloads share the server's egress capacity and concurrent
+//! uploads share its ingress capacity under max-min fair share, so
+//! stragglers emerge from contention rather than only from slow links.
+//! A [`Codec`] ([`codec`]) decides what each update costs on the wire and
+//! what accuracy perturbation the compression inflicts.
+//!
+//! Opt in via the `[netsim]` config section, `ExperimentBuilder::netsim`
+//! / `netsim_named`, `--netsim <preset>` on the CLI, or
+//! `ServerApp::with_netsim`.  **Disabled, the engine's code path is
+//! untouched** — bit-identical to the pre-netsim engine; with unlimited
+//! capacity and the `identity` codec the simulated timeline reproduces
+//! the closed-form costs of **its payload** to 1e-9 (both
+//! property-tested in `rust/tests/netsim.rs`).  Mind the payload when
+//! comparing runs: the disabled fast path charges the executed
+//! parameter vector (`global.len() * 4` bytes), while netsim defaults
+//! to the *timing workload's* `weight_bytes()` (~45 MB for ResNet-18) —
+//! consistent with the emulation charging compute for that model, but
+//! different round lengths unless [`NetSimConfig::payload_bytes`] is
+//! pinned to the executed size.
+#![deny(missing_docs)]
+
+pub mod codec;
+pub mod fairshare;
+
+use std::sync::Arc;
+
+use crate::error::ConfigError;
+use crate::net::NetworkProfile;
+use crate::util::cfg::Cfg;
+
+pub use codec::{by_name as codec_by_name, names as codec_names, Codec, CodecFactory};
+pub use fairshare::{simulate, Completion, Transfer};
+
+/// Names accepted by [`NetSimConfig::preset`] (and `--netsim`).
+pub const NETSIM_PRESETS: &[&str] = &["uncapped", "congested-cell"];
+
+/// The link charged to clients that carry no network profile (netsim on a
+/// fleet built without `--network`): infinitely fast, zero latency — the
+/// client contributes arrivals to the timeline but is never itself a
+/// bottleneck.
+pub const UNMODELED_LINK: NetworkProfile = NetworkProfile {
+    name: "unmodeled",
+    down_mbps: f64::INFINITY,
+    up_mbps: f64::INFINITY,
+    latency_ms: 0.0,
+};
+
+/// User-facing netsim configuration: server-side capacities, the update
+/// codec, and the payload size.  See `SCENARIOS.md` §Network simulation
+/// for the config-file reference.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetSimConfig {
+    /// Server receive capacity shared by concurrent client *uploads*,
+    /// Mbit/s (`f64::INFINITY` = uncapped).
+    pub ingress_mbps: f64,
+    /// Server send capacity shared by concurrent model *downloads*,
+    /// Mbit/s (`f64::INFINITY` = uncapped).
+    pub egress_mbps: f64,
+    /// Registered codec name ([`codec_names`] lists them).
+    pub codec: String,
+    /// The codec's tunable knob — the kept fraction for `top-k`;
+    /// knob-less codecs ignore it.
+    pub codec_knob: f64,
+    /// Wire payload of the raw model/update in bytes; `None` derives it
+    /// from the timing workload's parameter count
+    /// (`modelcost::WorkloadCost::weight_bytes`).
+    pub payload_bytes: Option<u64>,
+}
+
+impl Default for NetSimConfig {
+    fn default() -> Self {
+        NetSimConfig {
+            ingress_mbps: f64::INFINITY,
+            egress_mbps: f64::INFINITY,
+            codec: "identity".into(),
+            codec_knob: 0.05,
+            payload_bytes: None,
+        }
+    }
+}
+
+impl NetSimConfig {
+    /// A named preset: `uncapped` (no shared bottleneck — the simulated
+    /// timeline equals the closed-form costs) or `congested-cell` (a
+    /// shared cell/backhaul gateway: 1200 Mbit/s ingress, 3000 Mbit/s
+    /// egress — wide cohorts contend hard on uploads).
+    pub fn preset(name: &str) -> Option<NetSimConfig> {
+        match name {
+            "uncapped" => Some(NetSimConfig::default()),
+            "congested-cell" => Some(NetSimConfig {
+                ingress_mbps: 1200.0,
+                egress_mbps: 3000.0,
+                ..Default::default()
+            }),
+            _ => None,
+        }
+    }
+
+    /// Parse the `[netsim]` section of a federation config; `Ok(None)`
+    /// when the section is absent or `enabled = false`.  A `preset` key
+    /// picks the base; every other key overrides it.  `ingress_mbps` /
+    /// `egress_mbps` accept `0` as "uncapped" (TOML has no infinity).
+    pub fn from_cfg(cfg: &Cfg) -> Result<Option<NetSimConfig>, ConfigError> {
+        if !cfg.sections().any(|s| s == "netsim") {
+            return Ok(None);
+        }
+        if !cfg.bool_or("netsim", "enabled", true) {
+            return Ok(None);
+        }
+        let mut ns = match cfg.get("netsim", "preset").and_then(|v| v.as_str()) {
+            Some(p) => Self::preset(p).ok_or_else(|| ConfigError::InvalidValue {
+                key: "netsim.preset".into(),
+                msg: format!("unknown preset '{p}' ({})", NETSIM_PRESETS.join("|")),
+            })?,
+            None => NetSimConfig::default(),
+        };
+        let cap = |x: f64| if x == 0.0 { f64::INFINITY } else { x };
+        if let Some(x) = cfg.get("netsim", "ingress_mbps").and_then(|v| v.as_f64()) {
+            ns.ingress_mbps = cap(x);
+        }
+        if let Some(x) = cfg.get("netsim", "egress_mbps").and_then(|v| v.as_f64()) {
+            ns.egress_mbps = cap(x);
+        }
+        if let Some(c) = cfg.get("netsim", "codec").and_then(|v| v.as_str()) {
+            ns.codec = c.to_string();
+        }
+        if let Some(f) = cfg.get("netsim", "topk_fraction").and_then(|v| v.as_f64()) {
+            ns.codec_knob = f;
+        }
+        if let Some(mb) = cfg.get("netsim", "payload_mb").and_then(|v| v.as_f64()) {
+            ns.payload_bytes = Some((mb * 1024.0 * 1024.0) as u64);
+        }
+        ns.validate()?;
+        Ok(Some(ns))
+    }
+
+    /// Reject impossible configurations at the boundary: non-positive
+    /// capacities or payloads, unknown codec names, a top-k fraction
+    /// outside `(0, 1]`.
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        let invalid = |key: &str, msg: String| ConfigError::InvalidValue {
+            key: key.to_string(),
+            msg,
+        };
+        if self.ingress_mbps.is_nan() || self.ingress_mbps <= 0.0 {
+            return Err(invalid(
+                "netsim.ingress_mbps",
+                format!("capacity {} must be positive (0 = uncapped in config files)", self.ingress_mbps),
+            ));
+        }
+        if self.egress_mbps.is_nan() || self.egress_mbps <= 0.0 {
+            return Err(invalid(
+                "netsim.egress_mbps",
+                format!("capacity {} must be positive (0 = uncapped in config files)", self.egress_mbps),
+            ));
+        }
+        if codec::by_name(&self.codec, self.codec_knob).is_none() {
+            return Err(invalid(
+                "netsim.codec",
+                format!(
+                    "unknown codec '{}' (registered: {})",
+                    self.codec,
+                    codec_names().join("|")
+                ),
+            ));
+        }
+        if self.codec_knob.is_nan() || self.codec_knob <= 0.0 || self.codec_knob > 1.0 {
+            return Err(invalid(
+                "netsim.topk_fraction",
+                format!("fraction {} outside (0, 1]", self.codec_knob),
+            ));
+        }
+        if self.payload_bytes == Some(0) {
+            return Err(invalid("netsim.payload_mb", "payload must be positive".into()));
+        }
+        Ok(())
+    }
+
+    /// One-line human description for run headers.
+    pub fn describe(&self) -> String {
+        let cap = |x: f64| {
+            if x.is_infinite() {
+                "uncapped".to_string()
+            } else {
+                format!("{x:.0} Mbit/s")
+            }
+        };
+        format!(
+            "ingress {}, egress {}, codec {}",
+            cap(self.ingress_mbps),
+            cap(self.egress_mbps),
+            self.codec
+        )
+    }
+}
+
+/// A resolved, ready-to-run netsim instance: validated capacities, the
+/// codec built from the registry, and the payload size in bytes.
+/// Attached to the engine via `ServerApp::with_netsim`.
+#[derive(Clone)]
+pub struct NetSim {
+    /// The configuration this instance was resolved from.
+    pub cfg: NetSimConfig,
+    codec: Arc<dyn Codec>,
+    payload_bytes: u64,
+}
+
+impl NetSim {
+    /// Resolve `cfg` against the codec registry.  `default_payload` is
+    /// the raw model size used when the config carries no explicit
+    /// payload — the engine passes the timing workload's
+    /// `WorkloadCost::weight_bytes()` so communication is charged for the
+    /// same model the hardware emulation charges compute for.
+    pub fn resolve(cfg: &NetSimConfig, default_payload: u64) -> Result<NetSim, ConfigError> {
+        cfg.validate()?;
+        let codec = codec::by_name(&cfg.codec, cfg.codec_knob).expect("validated above");
+        let payload_bytes = cfg.payload_bytes.unwrap_or(default_payload).max(1);
+        Ok(NetSim { cfg: cfg.clone(), codec, payload_bytes })
+    }
+
+    /// Raw fp32 payload of one model/update transfer, bytes.
+    pub fn payload_bytes(&self) -> u64 {
+        self.payload_bytes
+    }
+
+    /// Bytes one *upload* puts on the wire after the codec.
+    pub fn wire_upload_bytes(&self) -> u64 {
+        self.codec.wire_bytes(self.payload_bytes)
+    }
+
+    /// Apply the codec's modelled compression loss to a kept update.
+    pub fn codec_apply(&self, params: &mut [f32]) {
+        self.codec.apply(params);
+    }
+
+    /// The resolved codec.
+    pub fn codec(&self) -> &dyn Codec {
+        self.codec.as_ref()
+    }
+
+    /// Download-phase timeline: every selected client starts fetching the
+    /// raw model at round-relative t = 0, sharing the server's egress
+    /// capacity.  Returns each client's download completion time, in
+    /// input order.
+    pub fn download_finish(&self, links: &[NetworkProfile]) -> Vec<f64> {
+        let transfers: Vec<Transfer> = links
+            .iter()
+            .enumerate()
+            .map(|(i, link)| Transfer {
+                id: i as u32,
+                arrival_s: 0.0,
+                latency_s: link.latency_ms / 1000.0,
+                bytes: self.payload_bytes,
+                link_mbps: link.down_mbps,
+            })
+            .collect();
+        simulate(&transfers, self.egress_mbps)
+            .into_iter()
+            .map(|c| c.finish_s)
+            .collect()
+    }
+
+    /// Upload-phase timeline: each `(arrival_s, link)` starts pushing its
+    /// codec-compressed update when its fit ends, sharing the server's
+    /// ingress capacity.  Returns completion times in input order.
+    pub fn upload_finish(&self, uploads: &[(f64, NetworkProfile)]) -> Vec<f64> {
+        let wire = self.wire_upload_bytes();
+        let transfers: Vec<Transfer> = uploads
+            .iter()
+            .enumerate()
+            .map(|(i, (arrival_s, link))| Transfer {
+                id: i as u32,
+                arrival_s: *arrival_s,
+                latency_s: link.latency_ms / 1000.0,
+                bytes: wire,
+                link_mbps: link.up_mbps,
+            })
+            .collect();
+        simulate(&transfers, self.ingress_mbps)
+            .into_iter()
+            .map(|c| c.finish_s)
+            .collect()
+    }
+}
+
+impl std::fmt::Debug for NetSim {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("NetSim")
+            .field("cfg", &self.cfg)
+            .field("codec", &self.codec.name())
+            .field("payload_bytes", &self.payload_bytes)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::NET_TIERS;
+
+    #[test]
+    fn presets_resolve_and_validate() {
+        for &name in NETSIM_PRESETS {
+            let cfg = NetSimConfig::preset(name).expect("preset exists");
+            cfg.validate().expect("preset valid");
+            assert!(NetSim::resolve(&cfg, 1024).is_ok());
+        }
+        assert!(NetSimConfig::preset("nope").is_none());
+        assert!(NetSimConfig::preset("uncapped").unwrap().ingress_mbps.is_infinite());
+    }
+
+    #[test]
+    fn from_cfg_absent_disabled_and_overrides() {
+        let none = Cfg::parse("[federation]\nrounds = 2").unwrap();
+        assert_eq!(NetSimConfig::from_cfg(&none).unwrap(), None);
+
+        let off = Cfg::parse("[netsim]\nenabled = false\ningress_mbps = 100").unwrap();
+        assert_eq!(NetSimConfig::from_cfg(&off).unwrap(), None);
+
+        let on = Cfg::parse(
+            "[netsim]\npreset = \"congested-cell\"\ningress_mbps = 500\ncodec = \"int8\"",
+        )
+        .unwrap();
+        let ns = NetSimConfig::from_cfg(&on).unwrap().expect("enabled");
+        assert_eq!(ns.ingress_mbps, 500.0, "override applies");
+        assert_eq!(ns.egress_mbps, 3000.0, "preset field kept");
+        assert_eq!(ns.codec, "int8");
+
+        // 0 spells "uncapped" in config files.
+        let zero = Cfg::parse("[netsim]\ningress_mbps = 0").unwrap();
+        let ns = NetSimConfig::from_cfg(&zero).unwrap().unwrap();
+        assert!(ns.ingress_mbps.is_infinite());
+    }
+
+    #[test]
+    fn from_cfg_rejects_bad_values() {
+        for bad in [
+            "[netsim]\npreset = \"nope\"",
+            "[netsim]\ncodec = \"zstd\"",
+            "[netsim]\ningress_mbps = -5",
+            "[netsim]\ntopk_fraction = 1.5",
+            "[netsim]\ntopk_fraction = 0",
+        ] {
+            let cfg = Cfg::parse(bad).unwrap();
+            assert!(NetSimConfig::from_cfg(&cfg).is_err(), "accepted: {bad}");
+        }
+    }
+
+    #[test]
+    fn resolve_derives_payload_and_wire_bytes() {
+        let cfg = NetSimConfig { codec: "float16".into(), ..Default::default() };
+        let ns = NetSim::resolve(&cfg, 1000).unwrap();
+        assert_eq!(ns.payload_bytes(), 1000);
+        assert_eq!(ns.wire_upload_bytes(), 500);
+        let explicit = NetSimConfig { payload_bytes: Some(4096), ..Default::default() };
+        let ns = NetSim::resolve(&explicit, 1000).unwrap();
+        assert_eq!(ns.payload_bytes(), 4096);
+    }
+
+    #[test]
+    fn uncapped_download_matches_the_closed_form() {
+        let ns = NetSim::resolve(
+            &NetSimConfig { payload_bytes: Some(10 * 1024 * 1024), ..Default::default() },
+            0,
+        )
+        .unwrap();
+        let links: Vec<_> = NET_TIERS.iter().map(|(t, _)| *t).collect();
+        let finish = ns.download_finish(&links);
+        for (link, f) in links.iter().zip(&finish) {
+            let expect = link.download_s(10 * 1024 * 1024);
+            assert!((f - expect).abs() < 1e-9, "{}: {} vs {}", link.name, f, expect);
+        }
+    }
+
+    #[test]
+    fn shared_egress_slows_concurrent_downloads() {
+        let cfg = NetSimConfig {
+            egress_mbps: 100.0,
+            payload_bytes: Some(10 * 1024 * 1024),
+            ..Default::default()
+        };
+        let ns = NetSim::resolve(&cfg, 0).unwrap();
+        let fiber = NET_TIERS[0].0;
+        let alone = ns.download_finish(&[fiber])[0];
+        let crowd = ns.download_finish(&[fiber; 8]);
+        assert!(
+            crowd[0] > 2.0 * alone,
+            "8-way contention must slow a fiber download: {} vs {alone}",
+            crowd[0]
+        );
+    }
+
+    #[test]
+    fn unmodeled_link_is_never_the_bottleneck() {
+        let cfg = NetSimConfig {
+            ingress_mbps: 80.0,
+            payload_bytes: Some(1024 * 1024),
+            ..Default::default()
+        };
+        let ns = NetSim::resolve(&cfg, 0).unwrap();
+        let finish = ns.upload_finish(&[(0.0, UNMODELED_LINK)]);
+        // 8 Mbit over an 80 Mbit/s pipe: ~0.105 s — pipe-bound only.
+        let expect = 1024.0 * 1024.0 * 8.0 / 80e6;
+        assert!((finish[0] - expect).abs() < 1e-9, "{}", finish[0]);
+    }
+}

@@ -352,6 +352,43 @@ impl RoundGate {
         GateVerdict::Keep { start_s: start, end_s: end }
     }
 
+    /// Gate one finished fit whose round-relative `[start_s, end_s)`
+    /// window was computed by an **external timeline** — the netsim
+    /// communication simulator (DESIGN.md §12) — instead of the gate's
+    /// own slot packing.  Verdicts are identical to [`RoundGate::admit`]:
+    /// an offline boundary inside the window is a dropout, an end past
+    /// the deadline is late, everything else is kept with the given span
+    /// recorded.  No execution slot is consumed — a netsim window already
+    /// embeds its own concurrency (all clients download/fit/upload in
+    /// parallel, contending on the shared pipes, not on emulated compute
+    /// slots).  A round uses either `admit` or `admit_window`, never a
+    /// mix.
+    pub fn admit_window(
+        &mut self,
+        trace: &mut AvailabilityTrace,
+        client: u32,
+        start_s: f64,
+        end_s: f64,
+    ) -> GateVerdict {
+        debug_assert!(end_s >= start_s, "window ends before it starts");
+        let off = trace.next_offline_after(self.round_start_s + start_s);
+        if off < self.round_start_s + end_s {
+            self.dropped += 1;
+            self.dropout_horizon_s = self.dropout_horizon_s.max(off - self.round_start_s);
+            return GateVerdict::Dropout { offline_at_s: off };
+        }
+        if end_s > self.deadline_s + DEADLINE_EPS {
+            self.dropped += 1;
+            self.late += 1;
+            return GateVerdict::Late { would_end_s: end_s };
+        }
+        // Extend the makespan `schedule()` reports without occupying a
+        // slot (slot 0 doubles as the kept-window horizon here).
+        self.slot_free[0] = self.slot_free[0].max(end_s);
+        self.spans.push((client, start_s, end_s));
+        GateVerdict::Keep { start_s, end_s }
+    }
+
     /// The round's emulated schedule: kept spans in selection order.  A
     /// round with late verdicts was provably held open until the deadline
     /// (that is how the server learned the stragglers were late), so its
@@ -762,6 +799,20 @@ impl FederationDynamics {
     ) -> GateVerdict {
         gate.admit(self.trace_mut(roster_idx), client, dur_s)
     }
+
+    /// Gate one finished fit against an externally computed
+    /// round-relative window (the netsim timeline) — see
+    /// [`RoundGate::admit_window`].
+    pub fn admit_window(
+        &mut self,
+        gate: &mut RoundGate,
+        roster_idx: usize,
+        client: u32,
+        start_s: f64,
+        end_s: f64,
+    ) -> GateVerdict {
+        gate.admit_window(self.trace_mut(roster_idx), client, start_s, end_s)
+    }
 }
 
 #[cfg(test)]
@@ -895,6 +946,45 @@ mod tests {
         let mut t2 = AvailabilityTrace::from_toggles(true, vec![5.0]);
         let mut gate2 = RoundGate::new(0.0, f64::INFINITY, 1);
         assert!(matches!(gate2.admit(&mut t2, 0, 4.0), GateVerdict::Keep { .. }));
+    }
+
+    #[test]
+    fn gate_admit_window_judges_the_given_span() {
+        let mut gate = RoundGate::new(100.0, 20.0, 1);
+        let mut on = AvailabilityTrace::from_toggles(true, vec![]);
+        // Windows start at 0 (netsim: everyone downloads at round start).
+        assert!(matches!(
+            gate.admit_window(&mut on, 0, 0.0, 12.0),
+            GateVerdict::Keep { start_s, end_s } if start_s == 0.0 && end_s == 12.0
+        ));
+        // A second concurrent window does not queue behind the first.
+        assert!(matches!(
+            gate.admit_window(&mut on, 1, 0.0, 5.0),
+            GateVerdict::Keep { end_s, .. } if end_s == 5.0
+        ));
+        // Past the deadline -> late; offline inside the window -> dropout.
+        assert!(matches!(
+            gate.admit_window(&mut on, 2, 0.0, 20.5),
+            GateVerdict::Late { .. }
+        ));
+        let mut flaky = AvailabilityTrace::from_toggles(true, vec![104.0]);
+        assert!(matches!(
+            gate.admit_window(&mut flaky, 3, 0.0, 9.0),
+            GateVerdict::Dropout { offline_at_s } if offline_at_s == 104.0
+        ));
+        assert_eq!(gate.kept(), 2);
+        assert_eq!(gate.dropped(), 2);
+        assert_eq!(gate.late(), 1);
+        // Late verdicts hold the round open until the deadline.
+        let s = gate.schedule();
+        assert_eq!(s.round_s, 20.0);
+        assert_eq!(s.spans, vec![(0, 0.0, 12.0), (1, 0.0, 5.0)]);
+        // Without lates the round closes at the kept horizon.
+        let mut clean = RoundGate::new(0.0, f64::INFINITY, 1);
+        let mut on2 = AvailabilityTrace::from_toggles(true, vec![]);
+        let _ = clean.admit_window(&mut on2, 0, 0.0, 7.5);
+        let _ = clean.admit_window(&mut on2, 1, 0.0, 3.0);
+        assert_eq!(clean.schedule().round_s, 7.5);
     }
 
     #[test]

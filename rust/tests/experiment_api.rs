@@ -444,6 +444,12 @@ impl FlObserver for Collector {
                 format!("round_begin:{round}:{}", selected.len())
             }
             FlEvent::RoundSkipped { round, .. } => format!("round_skipped:{round}"),
+            FlEvent::CommStarted { client, direction, .. } => {
+                format!("comm_started:{client}:{direction:?}")
+            }
+            FlEvent::CommFinished { client, direction, .. } => {
+                format!("comm_finished:{client}:{direction:?}")
+            }
             FlEvent::ClientDone { client, .. } => format!("client_done:{client}"),
             FlEvent::ClientFailed { client, kind, .. } => {
                 format!("client_failed:{client}:{kind:?}")

@@ -1,0 +1,542 @@
+//! Acceptance properties of the netsim subsystem (DESIGN.md §12):
+//!
+//! * netsim **disabled** leaves the engine bit-identical — across every
+//!   scenario preset and worker count, and through the config-file path
+//!   (`[netsim] enabled = false`).
+//! * **unlimited capacity + identity codec** reproduces the closed-form
+//!   `round_comm_s` timeline to 1e-9, per client, end to end.
+//! * the fair-share timeline is **deterministic and independent of the
+//!   worker count**, contention included.
+//! * a population-scale (1M-client) federation runs with netsim enabled
+//!   in O(cohort) state.
+//! * the `RoundGate` deadline interaction with comm time: a client whose
+//!   *upload* crosses the deadline is recorded `deadline:` and never
+//!   folds into the accumulator.
+
+use std::sync::{Arc, Mutex};
+
+use bouquetfl::emu::VirtualClock;
+use bouquetfl::fl::history::DEADLINE_REASON_PREFIX;
+use bouquetfl::fl::{
+    ClientApp, Experiment, ExperimentBuilder, ExperimentReport, FedAvg, FlEvent, FlObserver,
+    LaunchOptions, ParamVector, Selection, ServerApp, ServerConfig, SimClient,
+    SCENARIO_PRESETS,
+};
+use bouquetfl::hardware::{preset, HardwareProfile};
+use bouquetfl::modelcost::resnet18_cifar;
+use bouquetfl::net::NET_TIERS;
+use bouquetfl::netsim::{simulate, NetSimConfig, Transfer};
+use bouquetfl::sched::dynamics::{AvailabilityModel, FederationDynamics};
+use bouquetfl::sched::Sequential;
+use bouquetfl::util::cfg::Cfg;
+use bouquetfl::util::prop::{assert_that, check};
+
+const P: usize = 64;
+
+// ---------------------------------------------------------------------
+// Simulator-level properties.
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_uncapped_timeline_matches_the_closed_form() {
+    // With an uncapped pipe every flow runs at its own link rate: the
+    // simulated finish equals arrival + latency + bytes*8/rate — the
+    // closed-form `download_s`/`upload_s` — within 1e-9, regardless of
+    // how many peers share the (infinite) pipe.
+    check(60, |rng| {
+        let n = rng.range_i64(1, 20) as usize;
+        let transfers: Vec<Transfer> = (0..n)
+            .map(|i| {
+                let (tier, _) = *rng.choice(NET_TIERS);
+                Transfer {
+                    id: i as u32,
+                    arrival_s: rng.range_f64(0.0, 50.0),
+                    latency_s: tier.latency_ms / 1000.0,
+                    bytes: rng.range_i64(1, 64 * 1024 * 1024) as u64,
+                    link_mbps: tier.up_mbps,
+                }
+            })
+            .collect();
+        let done = simulate(&transfers, f64::INFINITY);
+        for (t, c) in transfers.iter().zip(&done) {
+            let expect =
+                t.arrival_s + t.latency_s + t.bytes as f64 * 8.0 / (t.link_mbps * 1e6);
+            assert_that((c.finish_s - expect).abs() < 1e-9, || {
+                format!("flow {}: {} vs closed form {}", t.id, c.finish_s, expect)
+            })?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fair_share_conserves_capacity_and_work() {
+    // Finite pipe: no flow beats its contention-free time, and the whole
+    // batch cannot finish faster than total-bits / capacity allows.
+    check(40, |rng| {
+        let n = rng.range_i64(2, 16) as usize;
+        let capacity = rng.range_f64(5.0, 500.0);
+        let transfers: Vec<Transfer> = (0..n)
+            .map(|i| Transfer {
+                id: i as u32,
+                arrival_s: 0.0,
+                latency_s: 0.0,
+                bytes: rng.range_i64(1024, 8 * 1024 * 1024) as u64,
+                link_mbps: rng.range_f64(1.0, 300.0),
+            })
+            .collect();
+        let shared = simulate(&transfers, capacity);
+        let alone = simulate(&transfers, f64::INFINITY);
+        let total_bits: f64 = transfers.iter().map(|t| t.bytes as f64 * 8.0).sum();
+        let makespan = shared.iter().map(|c| c.finish_s).fold(0.0, f64::max);
+        assert_that(makespan >= total_bits / (capacity * 1e6) - 1e-9, || {
+            format!("makespan {makespan} beats the capacity bound")
+        })?;
+        for (s, a) in shared.iter().zip(&alone) {
+            assert_that(s.finish_s >= a.finish_s - 1e-9, || {
+                format!("flow {} finished under contention before it could alone", s.id)
+            })?;
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// Engine-level properties.
+// ---------------------------------------------------------------------
+
+fn assert_reports_identical(a: &ExperimentReport, b: &ExperimentReport, label: &str) {
+    assert_eq!(a.global.len(), b.global.len(), "{label}");
+    for (x, y) in a.global.as_slice().iter().zip(b.global.as_slice()) {
+        assert_eq!(x.to_bits(), y.to_bits(), "{label}: aggregate diverged");
+    }
+    assert_eq!(a.history.rounds.len(), b.history.rounds.len(), "{label}");
+    for (r1, r2) in a.history.rounds.iter().zip(&b.history.rounds) {
+        assert_eq!(r1.selected, r2.selected, "{label}: round {}", r1.round);
+        assert_eq!(
+            r1.train_loss.to_bits(),
+            r2.train_loss.to_bits(),
+            "{label}: round {}",
+            r1.round
+        );
+        assert_eq!(
+            r1.emu_round_s.to_bits(),
+            r2.emu_round_s.to_bits(),
+            "{label}: round {}",
+            r1.round
+        );
+        assert_eq!(r1.failures.len(), r2.failures.len(), "{label}: round {}", r1.round);
+        for (f1, f2) in r1.failures.iter().zip(&r2.failures) {
+            assert_eq!(f1.client, f2.client, "{label}");
+            assert_eq!(f1.reason, f2.reason, "{label}");
+        }
+    }
+    assert_eq!(a.trace.events, b.trace.events, "{label}: schedule diverged");
+}
+
+fn builder(preset_name: &str, workers: usize) -> ExperimentBuilder {
+    Experiment::builder()
+        .profiles(&["gtx-1060", "rtx-3060"])
+        .clients(6)
+        .rounds(5)
+        .samples_per_client(40)
+        .batch(16)
+        .local_steps(2)
+        .selection(Selection::Fraction(0.5))
+        .network(true)
+        .seed(11)
+        .workers(workers)
+        .scenario_named(preset_name)
+        .eval_every(0)
+        .fail_on_empty_round(false)
+        .simulated(P)
+}
+
+#[test]
+fn netsim_disabled_is_bit_identical_across_presets_workers_and_the_config_path() {
+    // The acceptance contract for the *disabled* state: the engine with
+    // the netsim code present (and a parsed-but-disabled `[netsim]`
+    // section) produces exactly the pre-netsim output, for every scenario
+    // preset x workers {1, 4}.
+    for &preset_name in SCENARIO_PRESETS {
+        for workers in [1usize, 4] {
+            let label = format!("{preset_name}/workers={workers}");
+            let via_builder = builder(preset_name, workers)
+                .build()
+                .expect("builds")
+                .run()
+                .expect("runs");
+            let cfg = Cfg::parse(&format!(
+                r#"
+[federation]
+clients = 6
+rounds = 5
+batch = 16
+local_steps = 2
+fraction = 0.5
+network = true
+seed = 11
+workers = {workers}
+eval_every = 0
+fail_on_empty_round = false
+
+[data]
+samples_per_client = 40
+
+[hardware]
+profiles = ["gtx-1060", "rtx-3060"]
+
+[scenario]
+preset = "{preset_name}"
+
+[netsim]
+enabled = false
+ingress_mbps = 50
+"#
+            ))
+            .expect("config parses");
+            let opts = LaunchOptions::from_cfg(&cfg).expect("options parse");
+            assert!(opts.netsim.is_none(), "{label}: disabled netsim must resolve to None");
+            let via_cfg = ExperimentBuilder::from_options(opts)
+                .simulated(P)
+                .build()
+                .expect("builds from config")
+                .run()
+                .expect("runs from config");
+            assert_reports_identical(&via_builder, &via_cfg, &label);
+        }
+    }
+}
+
+#[test]
+fn uncapped_identity_netsim_reproduces_closed_form_windows_end_to_end() {
+    // Same federation with and without netsim (uncapped pipes, identity
+    // codec, payload pinned to the executed parameter vector): every kept
+    // client's emulated window — trace span length — must agree to 1e-9
+    // (fit + closed-form download + upload on both sides), and the
+    // aggregates must be bit-identical (identity codec perturbs nothing,
+    // folds happen in the same selection order).
+    let base = || builder("stable", 1).selection(Selection::All);
+    let off = base().build().expect("builds").run().expect("runs");
+    let on = base()
+        .netsim(NetSimConfig {
+            payload_bytes: Some((P * 4) as u64),
+            ..Default::default()
+        })
+        .build()
+        .expect("builds")
+        .run()
+        .expect("runs");
+
+    for (x, y) in off.global.as_slice().iter().zip(on.global.as_slice()) {
+        assert_eq!(x.to_bits(), y.to_bits(), "identity codec must not perturb the aggregate");
+    }
+    assert_eq!(off.history.rounds.len(), on.history.rounds.len());
+    for (a, b) in off.history.rounds.iter().zip(&on.history.rounds) {
+        assert_eq!(a.selected, b.selected);
+        assert!(a.failures.is_empty() && b.failures.is_empty(), "stable run must not drop");
+        // Netsim models all clients concurrently: the round closes at the
+        // slowest window (max), the sequential engine at the sum.
+        assert!(b.emu_round_s <= a.emu_round_s + 1e-9);
+        assert!(b.emu_round_s > 0.0);
+    }
+
+    // Per-client window equality via the traces: sequential spans have
+    // length fit + round_comm_s; netsim spans run 0 -> upload end.
+    let span_len = |report: &ExperimentReport, label: &str, client: u32| -> f64 {
+        report
+            .trace
+            .events
+            .iter()
+            .find(|e| e.label == label && e.client == client)
+            .map(|e| e.t_end_s - e.t_start_s)
+            .unwrap_or(f64::NAN)
+    };
+    for (round, record) in off.history.rounds.iter().enumerate() {
+        let label = format!("round{round}");
+        for &client in &record.selected {
+            let a = span_len(&off, &label, client);
+            let b = span_len(&on, &label, client);
+            assert!(
+                (a - b).abs() < 1e-9,
+                "round {round} client {client}: closed-form window {a} vs netsim {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn contended_netsim_is_bit_identical_across_worker_counts() {
+    // Determinism + worker independence with real contention and a lossy
+    // codec, under a dynamic scenario: the fair-share timeline is built
+    // from selection-order data, so workers {1, 4} agree bit for bit.
+    let run = |workers: usize| {
+        builder("high-churn", workers)
+            .netsim(NetSimConfig {
+                ingress_mbps: 40.0,
+                egress_mbps: 120.0,
+                codec: "int8".into(),
+                payload_bytes: Some(2 * 1024 * 1024),
+                ..Default::default()
+            })
+            .build()
+            .expect("builds")
+            .run()
+            .expect("runs")
+    };
+    let one = run(1);
+    let four = run(4);
+    assert_reports_identical(&one, &four, "contended netsim workers 1 vs 4");
+    // Repeatability on top: a re-run is bit-identical too.
+    assert_reports_identical(&one, &run(1), "contended netsim re-run");
+}
+
+#[test]
+fn contention_slows_rounds_relative_to_uncapped() {
+    let run = |cfg: NetSimConfig| {
+        builder("stable", 1)
+            .selection(Selection::All)
+            .netsim(cfg)
+            .build()
+            .expect("builds")
+            .run()
+            .expect("runs")
+    };
+    let payload = Some((256 * 1024) as u64);
+    let uncapped = run(NetSimConfig { payload_bytes: payload, ..Default::default() });
+    let congested = run(NetSimConfig {
+        ingress_mbps: 2.0,
+        egress_mbps: 8.0,
+        payload_bytes: payload,
+        ..Default::default()
+    });
+    assert!(
+        congested.total_emu_s() > uncapped.total_emu_s() + 1e-6,
+        "shared-pipe contention must lengthen rounds: {} vs {}",
+        congested.total_emu_s(),
+        uncapped.total_emu_s()
+    );
+}
+
+#[test]
+fn million_client_population_with_netsim_stays_cohort_bounded() {
+    // Acceptance: netsim composes with the population engine in O(cohort)
+    // state — only the selected cohort's links/downloads/buffered fits
+    // are ever materialised.
+    let report = Experiment::builder()
+        .population(1_000_000)
+        .rounds(4)
+        .selection(Selection::Count(32))
+        .scenario_named("high-churn")
+        .netsim(NetSimConfig {
+            ingress_mbps: 300.0,
+            egress_mbps: 1000.0,
+            payload_bytes: Some(1024 * 1024),
+            ..Default::default()
+        })
+        .batch(16)
+        .eval_every(0)
+        .fail_on_empty_round(false)
+        .seed(5)
+        .simulated(32)
+        .build()
+        .expect("million-client netsim experiment builds")
+        .run()
+        .expect("million-client netsim federation runs");
+    assert_eq!(report.history.rounds.len(), 4);
+    assert!(report.history.rounds.iter().any(|r| !r.selected.is_empty()));
+    for r in &report.history.rounds {
+        assert!(r.selected.len() <= 32, "cohort overflow: {}", r.selected.len());
+    }
+    assert!(
+        report.profiles.len() <= 256,
+        "netsim must not materialise per-client state ({} profiles)",
+        report.profiles.len()
+    );
+}
+
+// ---------------------------------------------------------------------
+// Comm events.
+// ---------------------------------------------------------------------
+
+#[derive(Default)]
+struct CommLog {
+    // (round, client, is_download, started, at_s)
+    events: Arc<Mutex<Vec<(u32, u32, bool, bool, f64)>>>,
+    survivors: Arc<Mutex<Vec<usize>>>,
+}
+
+impl FlObserver for CommLog {
+    fn on_event(&mut self, event: &FlEvent<'_>) {
+        use bouquetfl::fl::CommDirection;
+        match event {
+            FlEvent::CommStarted { round, client, direction, at_s, .. } => {
+                self.events.lock().unwrap().push((
+                    *round,
+                    *client,
+                    *direction == CommDirection::Download,
+                    true,
+                    *at_s,
+                ));
+            }
+            FlEvent::CommFinished { round, client, direction, at_s } => {
+                self.events.lock().unwrap().push((
+                    *round,
+                    *client,
+                    *direction == CommDirection::Download,
+                    false,
+                    *at_s,
+                ));
+            }
+            FlEvent::Aggregated { survivors, .. } => {
+                self.survivors.lock().unwrap().push(*survivors);
+            }
+            _ => {}
+        }
+    }
+}
+
+#[test]
+fn comm_events_stream_in_selection_order_with_coherent_windows() {
+    let log = CommLog::default();
+    let events = Arc::clone(&log.events);
+    let report = builder("stable", 1)
+        .selection(Selection::All)
+        .netsim(NetSimConfig {
+            ingress_mbps: 25.0,
+            payload_bytes: Some(512 * 1024),
+            ..Default::default()
+        })
+        .observer(Box::new(log))
+        .build()
+        .expect("builds")
+        .run()
+        .expect("runs");
+
+    let events = events.lock().unwrap();
+    let rounds = report.history.rounds.len() as u32;
+    for round in 0..rounds {
+        let selected = &report.history.rounds[round as usize].selected;
+        let n = selected.len();
+        let per_round: Vec<_> =
+            events.iter().filter(|e| e.0 == round).collect();
+        // Phase-grouped: a download pair per *selected* client, then an
+        // upload pair per successful fit (here: everyone), each phase in
+        // selection order.
+        assert_eq!(
+            per_round.len(),
+            n * 4,
+            "round {round}: download pair per selected + upload pair per success"
+        );
+        for (k, &client) in selected.iter().enumerate() {
+            let (d_start, d_end) = (per_round[2 * k], per_round[2 * k + 1]);
+            let (u_start, u_end) =
+                (per_round[2 * n + 2 * k], per_round[2 * n + 2 * k + 1]);
+            assert!(
+                [d_start, d_end, u_start, u_end].iter().all(|e| e.1 == client),
+                "round {round}: selection order broke at client {client}"
+            );
+            // Download start at 0, download end <= upload start <= end.
+            assert!(d_start.2 && d_start.3 && d_start.4 == 0.0);
+            assert!(d_end.2 && !d_end.3);
+            assert!(!u_start.2 && u_start.3);
+            assert!(!u_end.2 && !u_end.3);
+            assert!(d_end.4 <= u_start.4 && u_start.4 <= u_end.4);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// RoundGate x comm-time satellite: an upload crossing the deadline.
+// ---------------------------------------------------------------------
+
+fn two_client_fleet(slow_tier_idx: usize) -> Vec<Box<dyn ClientApp>> {
+    let profile = preset("gtx-1060").unwrap();
+    let mut fast = SimClient::new(0, profile.clone(), 64, resnet18_cifar());
+    fast.network = Some(NET_TIERS[0].0); // fiber: negligible comm
+    let mut slow = SimClient::new(1, profile, 64, resnet18_cifar());
+    slow.network = Some(NET_TIERS[slow_tier_idx].0);
+    vec![Box::new(fast), Box::new(slow)]
+}
+
+fn run_two_clients(deadline_s: f64) -> (bouquetfl::fl::History, Vec<usize>) {
+    let mut cfg = ServerConfig {
+        rounds: 1,
+        selection: Selection::All,
+        eval_every: 0,
+        seed: 3,
+        fail_on_empty_round: false,
+        ..Default::default()
+    };
+    cfg.fit.batch = 16;
+    let log = CommLog::default();
+    let survivors = Arc::clone(&log.survivors);
+    let mut server = ServerApp::new(
+        cfg,
+        HardwareProfile::paper_host(),
+        Box::new(FedAvg),
+        Box::new(Sequential),
+        two_client_fleet(4), // satellite: ~1.2s of latency-dominated comm
+    )
+    .with_observer(Box::new(log));
+    if deadline_s.is_finite() {
+        server = server.with_dynamics(FederationDynamics::new(
+            3,
+            2,
+            &AvailabilityModel::AlwaysOn,
+            0.0,
+            0.0,
+            deadline_s,
+            1,
+        ));
+    }
+    let (_, history) = server
+        .run_from(ParamVector::zeros(P), None, &mut VirtualClock::fast_forward())
+        .expect("two-client federation");
+    let survivors = survivors.lock().unwrap().clone();
+    (history, survivors)
+}
+
+#[test]
+fn upload_crossing_the_deadline_is_late_and_never_folds() {
+    // Phase 1 — open rounds: measure each client's full fit+comm window
+    // from the sequential schedule, and split out the known closed-form
+    // comm cost of the slow client's satellite link.
+    let (open, survivors) = run_two_clients(f64::INFINITY);
+    assert_eq!(survivors, vec![2], "open round keeps both clients");
+    let round = &open.rounds[0];
+    assert!(round.failures.is_empty());
+    let dur_fast = round.emu_round_s; // sequential: sum of both windows
+    // Recover the two windows from the emulated round: client 0 spans
+    // [0, d0), client 1 [d0, d0+d1).  We need d0 and the slow client's
+    // fit-only time; comm is closed-form (netsim is off here).
+    let comm_slow = NET_TIERS[4].0.round_comm_s((P * 4) as u64);
+    let comm_fast = NET_TIERS[0].0.round_comm_s((P * 4) as u64);
+    // Both clients share hardware + workload, so their fit times are
+    // equal; windows differ only by link. d0 = fit + comm_fast,
+    // d1 = fit + comm_slow, round = d0 + d1.
+    let fit = (dur_fast - comm_slow - comm_fast) / 2.0;
+    assert!(fit > 0.0, "fit time must be positive (round {dur_fast})");
+    let d0 = fit + comm_fast;
+    let d1 = fit + comm_slow;
+
+    // Phase 2 — a deadline the slow client's *fit* meets but its
+    // *upload* misses: d0 + fit < deadline < d0 + d1.
+    let deadline = d0 + fit + 0.5 * comm_slow;
+    assert!(deadline < d0 + d1, "deadline must cut the upload window");
+    let (gated, survivors) = run_two_clients(deadline);
+    let round = &gated.rounds[0];
+    assert_eq!(round.selected, vec![0, 1]);
+    assert_eq!(round.failures.len(), 1, "only the slow upload misses");
+    assert_eq!(round.failures[0].client, 1);
+    assert!(
+        round.failures[0].reason.starts_with(DEADLINE_REASON_PREFIX),
+        "expected a deadline: reason, got '{}'",
+        round.failures[0].reason
+    );
+    // The accumulator saw exactly one update — the late client's params
+    // never folded.
+    assert_eq!(survivors, vec![1], "late client must not reach the accumulator");
+    // The deadline round is held open to the deadline itself.
+    assert!((round.emu_round_s - deadline).abs() < 1e-9);
+}
