@@ -4,9 +4,13 @@
 //!
 //!     cargo bench --bench aggregation
 
-use bouquetfl::fl::ParamVector;
+use bouquetfl::emu::FitReport;
+use bouquetfl::fl::{
+    Attack, AttackConfig, FitResult, Krum, ParamVector, Strategy, TrimmedMean,
+};
 use bouquetfl::runtime::ModelExecutor;
 use bouquetfl::util::benchkit::{section, Bench};
+use bouquetfl::util::json::Json;
 use bouquetfl::util::rng::Pcg;
 
 fn updates(k: usize, p: usize, seed: u64) -> Vec<ParamVector> {
@@ -16,8 +20,43 @@ fn updates(k: usize, p: usize, seed: u64) -> Vec<ParamVector> {
         .collect()
 }
 
+/// A round's worth of fit results with the first `ceil(frac * k)` updates
+/// perturbed by `model` — the robust-aggregation benches measure the
+/// defense over a realistically attacked cohort.
+fn attacked_results(us: &[ParamVector], model: &str, frac: f64, scale: f64) -> Vec<FitResult> {
+    let p = us[0].len();
+    let global = ParamVector::zeros(p);
+    let cfg = AttackConfig { model: model.into(), fraction: 1.0, scale };
+    let mut attack = Attack::resolve(&cfg, 0xBE4C).expect("valid attack config");
+    attack.begin_round(0, global.as_slice());
+    let compromised = (us.len() as f64 * frac).ceil() as usize;
+    us.iter()
+        .enumerate()
+        .map(|(c, u)| {
+            let mut params = u.clone();
+            if c < compromised {
+                attack.apply(c as u32, params.as_mut_slice());
+            }
+            FitResult {
+                client: c as u32,
+                params,
+                num_examples: 32,
+                mean_loss: 0.0,
+                emu: FitReport::synthetic(1, 1, 0.0),
+                comm_s: 0.0,
+            }
+        })
+        .collect()
+}
+
 fn main() {
     let p = 549_290;
+    let mut rows: Vec<Json> = Vec::new();
+    let mut collect = |b: &Bench| {
+        if let Json::Arr(items) = b.to_json() {
+            rows.extend(items);
+        }
+    };
     section(&format!("aggregation over flat f32[{p}] updates"));
 
     let mut b = Bench::new(2.0);
@@ -38,6 +77,39 @@ fn main() {
         b.run(&format!("rust trimmed_mean k={k} trim=1"), || {
             ParamVector::trimmed_mean(&us, 1).as_slice()[0]
         });
+    }
+    collect(&b);
+
+    section("robust aggregation under attack (DESIGN.md §13)");
+    // The defenses' production cost: Krum's O(K²P) pairwise distances and
+    // trimmed-mean's per-coordinate sort over a cohort whose first 20% was
+    // perturbed by the attack subsystem.  The perturbation itself is
+    // amortised outside the timed region — this measures the defense, not
+    // the attacker.
+    {
+        let mut b = Bench::new(2.0);
+        for k in [8usize, 16] {
+            let us = updates(k, p, 500 + k as u64);
+            for model in ["sign-flip", "scaled"] {
+                let results = attacked_results(&us, model, 0.2, 10.0);
+                let global = ParamVector::zeros(p);
+                let f = (k.saturating_sub(3) / 2).max(1);
+                b.run(&format!("krum f={f} vs {model} k={k}"), || {
+                    Krum::new(f, 1)
+                        .aggregate(&global, &results, None)
+                        .expect("krum aggregates")
+                        .as_slice()[0]
+                });
+                let trim = (k.saturating_sub(1) / 4).max(1);
+                b.run(&format!("trimmed-mean trim={trim} vs {model} k={k}"), || {
+                    TrimmedMean::new(trim)
+                        .aggregate(&global, &results, None)
+                        .expect("trimmed-mean aggregates")
+                        .as_slice()[0]
+                });
+            }
+        }
+        collect(&b);
     }
 
     section("streaming aggregation (the round engine's O(P) path)");
@@ -72,6 +144,7 @@ fn main() {
                 }
             });
         }
+        collect(&b);
     }
 
     section("recycled streaming aggregation (ParamScratch — EXPERIMENTS.md §Perf)");
@@ -124,6 +197,7 @@ fn main() {
                 }
             });
         }
+        collect(&b);
     }
 
     section("Pallas HLO aggregate artifact (includes literal marshalling)");
@@ -145,5 +219,16 @@ fn main() {
             );
         }
         Err(e) => println!("skipping HLO aggregation ({e}) — run `make artifacts`"),
+    }
+
+    // Machine-readable baseline (ROADMAP item 4): the committed
+    // BENCH_aggregation.json at the repo root is regenerated by this bench
+    // so future PRs can regress mean/p95 per named row.  The HLO section is
+    // environment-dependent and deliberately excluded.
+    drop(collect);
+    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_aggregation.json");
+    match std::fs::write(out, Json::Arr(rows).pretty() + "\n") {
+        Ok(()) => println!("\nwrote {out}"),
+        Err(e) => println!("\ncould not write {out}: {e}"),
     }
 }

@@ -1,0 +1,785 @@
+//! `attack` — seeded, deterministic adversarial participants (DESIGN.md §13).
+//!
+//! A fraction of the fleet is *compromised*: their updates are perturbed by
+//! a pluggable [`AttackModel`] at the server seam, **after** the netsim
+//! codec decodes the wire payload and **immediately before** the
+//! `AggAccumulator` fold.  Everything is a pure function of the experiment
+//! seed:
+//!
+//! * **membership** — client `i` is an attacker iff
+//!   [`is_attacker`]`(seed, i, fraction)`, a per-client Bernoulli draw from
+//!   its own PCG stream.  No attacker roster is ever materialised, so
+//!   million-client virtual populations stay O(cohort).
+//! * **perturbation** — models draw only from [`AttackCtx`] streams keyed
+//!   by `(seed, round, client)` (private), `(seed, round)` (shared across
+//!   colluders) or `(seed)` (run-scoped targets, e.g. the backdoor
+//!   trigger set).
+//!
+//! Consequently an attacked run is bit-identical across worker counts and
+//! across the materialized/population engines, and `fraction = 0` is
+//! bit-identical to the unattacked engine (property-tested in
+//! `rust/tests/attack.rs`).
+//!
+//! Opt in via the `[attack]` config section, `ExperimentBuilder::attack` /
+//! `attack_named`, `--attack <preset>` on the CLI, or
+//! `ServerApp::with_attack`.  Third-party models plug in through
+//! [`register`] / [`by_name`] / [`names`], mirroring the strategy and
+//! codec registries.
+#![deny(missing_docs)]
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, OnceLock, RwLock};
+
+use crate::error::ConfigError;
+use crate::util::cfg::Cfg;
+use crate::util::rng::Pcg;
+
+use super::events::FlEvent;
+
+/// Names accepted by [`AttackConfig::preset`] (and `--attack`) — one per
+/// built-in model, each with that model's canonical knobs.
+pub const ATTACK_PRESETS: &[&str] = &[
+    "sign-flip",
+    "gauss",
+    "scaled",
+    "label-flip",
+    "backdoor",
+    "colluding",
+    "adaptive",
+];
+
+/// Stream salt for attacker *membership* draws (`seed ^ MEMBER_SALT`,
+/// stream = client index).  Distinct from every other salt in the crate
+/// (descriptors 0xDE5C, networks 0x4E7, hardware 0x42F1, selection
+/// 0x5E1E) so enabling an attack perturbs no existing stream.
+const MEMBER_SALT: u64 = 0xA77C;
+/// Salt for the per-(round, client) private perturbation stream.
+const PERTURB_SALT: u64 = 0xA77D;
+/// Salt for the per-round stream shared by all colluders.
+const SHARED_SALT: u64 = 0xA77E;
+/// Salt for run-scoped targets (replacement model, backdoor trigger).
+const TARGET_SALT: u64 = 0xA77F;
+
+/// Is client `i` compromised?  A pure function of `(seed, i, fraction)` —
+/// the population engine calls this per *selected* client, never per
+/// population member.
+pub fn is_attacker(seed: u64, client: u64, fraction: f64) -> bool {
+    fraction > 0.0 && Pcg::new(seed ^ MEMBER_SALT, client).f64() < fraction
+}
+
+/// What a model corrupts: the submitted update directly (Byzantine model
+/// poisoning) or the client's local data, whose *effect* on the update the
+/// Simulated fleet emulates in parameter space.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AttackKind {
+    /// Perturbs the submitted parameter vector (sign-flip, gauss, scaled,
+    /// colluding, adaptive).
+    Update,
+    /// Poisons training data; the timing-only fleet emulates the resulting
+    /// update bias (label-flip, backdoor).
+    Data,
+}
+
+impl std::fmt::Display for AttackKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AttackKind::Update => write!(f, "update"),
+            AttackKind::Data => write!(f, "data"),
+        }
+    }
+}
+
+/// Everything a model may condition a perturbation on.  Determinism
+/// contract: draw randomness **only** from the three stream constructors
+/// here — they are pure in `(seed, round, client)`, which is what makes
+/// attacked runs bit-identical across engines and worker counts.
+pub struct AttackCtx<'a> {
+    /// The experiment seed all attack streams derive from.
+    pub seed: u64,
+    /// Round index.
+    pub round: u32,
+    /// The compromised client's id.
+    pub client: u32,
+    /// Global parameters this round started from (pre-attack snapshot).
+    pub global: &'a [f32],
+    /// The model's magnitude knob ([`AttackConfig::scale`]).
+    pub scale: f64,
+}
+
+impl AttackCtx<'_> {
+    /// Private per-(round, client) stream — independent across attackers.
+    pub fn rng(&self) -> Pcg {
+        Pcg::new(
+            self.seed ^ PERTURB_SALT ^ ((self.round as u64) << 24),
+            self.client as u64,
+        )
+    }
+
+    /// Per-round stream shared by every attacker this round — colluders
+    /// coordinate through it (same draws regardless of client id).
+    pub fn shared_rng(&self) -> Pcg {
+        Pcg::new(self.seed ^ SHARED_SALT, self.round as u64)
+    }
+
+    /// Run-scoped stream, fixed across rounds and clients — for stable
+    /// adversarial targets.  `stream` separates independent targets.
+    pub fn run_rng(&self, stream: u64) -> Pcg {
+        Pcg::new(self.seed ^ TARGET_SALT, stream)
+    }
+}
+
+/// A pluggable adversarial model.  `perturb` must be deterministic in its
+/// [`AttackCtx`]; `observe` is fed the engine's event stream (which is
+/// itself deterministic and selection-ordered), so adaptive models stay
+/// within the bit-identity contract.
+pub trait AttackModel: Send {
+    /// Registered name (what `--attack`, configs and events report).
+    fn name(&self) -> &'static str;
+    /// What this model corrupts (see [`AttackKind`]).
+    fn kind(&self) -> AttackKind {
+        AttackKind::Update
+    }
+    /// Perturb a compromised client's kept update in place.
+    fn perturb(&self, ctx: &AttackCtx<'_>, params: &mut [f32]);
+    /// Observe the engine's event stream (round boundaries, evaluations).
+    /// Default: ignore — only adaptive models key off it.
+    fn observe(&mut self, _event: &FlEvent<'_>) {}
+}
+
+/// Constructor stored in the registry: builds a model from the resolved
+/// config (so knobs like [`AttackConfig::scale`] reach the model).
+pub type AttackFactory = Arc<dyn Fn(&AttackConfig) -> Box<dyn AttackModel> + Send + Sync>;
+
+static REG: OnceLock<RwLock<BTreeMap<String, AttackFactory>>> = OnceLock::new();
+
+fn registry() -> &'static RwLock<BTreeMap<String, AttackFactory>> {
+    REG.get_or_init(|| {
+        let mut m: BTreeMap<String, AttackFactory> = BTreeMap::new();
+        m.insert(
+            "sign-flip".into(),
+            Arc::new(|c: &AttackConfig| {
+                Box::new(SignFlip { scale: c.scale }) as Box<dyn AttackModel>
+            }) as AttackFactory,
+        );
+        m.insert(
+            "gauss".into(),
+            Arc::new(|c: &AttackConfig| {
+                Box::new(GaussNoise { std: c.scale }) as Box<dyn AttackModel>
+            }) as AttackFactory,
+        );
+        m.insert(
+            "scaled".into(),
+            Arc::new(|c: &AttackConfig| {
+                Box::new(ScaledReplacement { boost: c.scale }) as Box<dyn AttackModel>
+            }) as AttackFactory,
+        );
+        m.insert(
+            "label-flip".into(),
+            Arc::new(|c: &AttackConfig| {
+                Box::new(LabelFlip { scale: c.scale }) as Box<dyn AttackModel>
+            }) as AttackFactory,
+        );
+        m.insert(
+            "backdoor".into(),
+            Arc::new(|c: &AttackConfig| {
+                Box::new(Backdoor { scale: c.scale }) as Box<dyn AttackModel>
+            }) as AttackFactory,
+        );
+        m.insert(
+            "colluding".into(),
+            Arc::new(|c: &AttackConfig| {
+                Box::new(Colluding { scale: c.scale }) as Box<dyn AttackModel>
+            }) as AttackFactory,
+        );
+        m.insert(
+            "adaptive".into(),
+            Arc::new(|c: &AttackConfig| {
+                Box::new(Adaptive { scale: c.scale, boost: 1.0 }) as Box<dyn AttackModel>
+            }) as AttackFactory,
+        );
+        RwLock::new(m)
+    })
+}
+
+/// Register (or replace) a model under `name`.
+pub fn register(name: &str, factory: AttackFactory) {
+    registry().write().unwrap().insert(name.to_string(), factory);
+}
+
+/// Build a registered model from a config; `None` for unknown names.
+pub fn by_name(name: &str, cfg: &AttackConfig) -> Option<Box<dyn AttackModel>> {
+    registry().read().unwrap().get(name).map(|f| f(cfg))
+}
+
+/// All registered model names, sorted.
+pub fn names() -> Vec<String> {
+    registry().read().unwrap().keys().cloned().collect()
+}
+
+/// User-facing attack configuration: which model, how much of the fleet it
+/// owns, and its magnitude knob.  See `SCENARIOS.md` §Adversarial clients
+/// for the config-file reference.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AttackConfig {
+    /// Registered model name ([`names`] lists them).
+    pub model: String,
+    /// Fraction of the fleet that is compromised, in `[0, 1]` (`0` = the
+    /// attack machinery is armed but no client ever matches — the engine
+    /// output is bit-identical to the unattacked one).
+    pub fraction: f64,
+    /// Model-dependent magnitude: flip strength for `sign-flip` /
+    /// `label-flip`, noise std for `gauss` / `adaptive`, replacement boost
+    /// for `scaled`, push length for `colluding`, trigger offset for
+    /// `backdoor`.
+    pub scale: f64,
+}
+
+impl Default for AttackConfig {
+    fn default() -> Self {
+        AttackConfig { model: "sign-flip".into(), fraction: 0.2, scale: 1.0 }
+    }
+}
+
+impl AttackConfig {
+    /// A named preset: each built-in model at its canonical knobs (20%
+    /// attackers except `backdoor` at 10% and `colluding` at 30%).
+    pub fn preset(name: &str) -> Option<AttackConfig> {
+        let cfg = |model: &str, fraction: f64, scale: f64| AttackConfig {
+            model: model.into(),
+            fraction,
+            scale,
+        };
+        match name {
+            "sign-flip" => Some(cfg("sign-flip", 0.2, 1.0)),
+            "gauss" => Some(cfg("gauss", 0.2, 1.0)),
+            "scaled" => Some(cfg("scaled", 0.2, 10.0)),
+            "label-flip" => Some(cfg("label-flip", 0.2, 1.0)),
+            "backdoor" => Some(cfg("backdoor", 0.1, 1.0)),
+            "colluding" => Some(cfg("colluding", 0.3, 5.0)),
+            "adaptive" => Some(cfg("adaptive", 0.2, 1.0)),
+            _ => None,
+        }
+    }
+
+    /// Parse the `[attack]` section of a federation config; `Ok(None)`
+    /// when the section is absent or `enabled = false`.  A `preset` key
+    /// picks the base; `model` / `fraction` / `scale` override it.
+    pub fn from_cfg(cfg: &Cfg) -> Result<Option<AttackConfig>, ConfigError> {
+        if !cfg.sections().any(|s| s == "attack") {
+            return Ok(None);
+        }
+        if !cfg.bool_or("attack", "enabled", true) {
+            return Ok(None);
+        }
+        let mut a = match cfg.get("attack", "preset").and_then(|v| v.as_str()) {
+            Some(p) => Self::preset(p).ok_or_else(|| ConfigError::InvalidValue {
+                key: "attack.preset".into(),
+                msg: format!("unknown preset '{p}' ({})", ATTACK_PRESETS.join("|")),
+            })?,
+            None => AttackConfig::default(),
+        };
+        if let Some(m) = cfg.get("attack", "model").and_then(|v| v.as_str()) {
+            a.model = m.to_string();
+        }
+        if let Some(f) = cfg.get("attack", "fraction").and_then(|v| v.as_f64()) {
+            a.fraction = f;
+        }
+        if let Some(s) = cfg.get("attack", "scale").and_then(|v| v.as_f64()) {
+            a.scale = s;
+        }
+        a.validate()?;
+        Ok(Some(a))
+    }
+
+    /// Reject impossible configurations at the boundary: unknown model
+    /// names, a fraction outside `[0, 1]`, a non-finite or non-positive
+    /// scale.
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        let invalid = |key: &str, msg: String| ConfigError::InvalidValue {
+            key: key.to_string(),
+            msg,
+        };
+        if by_name(&self.model, self).is_none() {
+            return Err(invalid(
+                "attack.model",
+                format!(
+                    "unknown attack model '{}' (registered: {})",
+                    self.model,
+                    names().join("|")
+                ),
+            ));
+        }
+        if self.fraction.is_nan() || !(0.0..=1.0).contains(&self.fraction) {
+            return Err(invalid(
+                "attack.fraction",
+                format!("fraction {} outside [0, 1]", self.fraction),
+            ));
+        }
+        if !self.scale.is_finite() || self.scale <= 0.0 {
+            return Err(invalid(
+                "attack.scale",
+                format!("scale {} must be positive and finite", self.scale),
+            ));
+        }
+        Ok(())
+    }
+
+    /// One-line human description for run headers.
+    pub fn describe(&self) -> String {
+        format!(
+            "{}: {:.0}% attackers, scale {}",
+            self.model,
+            self.fraction * 100.0,
+            self.scale
+        )
+    }
+}
+
+/// A resolved, ready-to-run attack instance: validated config, the model
+/// built from the registry, and the per-round state the engine threads to
+/// the aggregation seam.  Attached via `ServerApp::with_attack`.
+pub struct Attack {
+    /// The configuration this instance was resolved from.
+    pub cfg: AttackConfig,
+    seed: u64,
+    model: Box<dyn AttackModel>,
+    round: u32,
+    snapshot: Vec<f32>,
+    injected: Vec<u32>,
+}
+
+impl Attack {
+    /// Resolve `cfg` against the model registry with the experiment seed
+    /// all attack streams derive from.
+    pub fn resolve(cfg: &AttackConfig, seed: u64) -> Result<Attack, ConfigError> {
+        cfg.validate()?;
+        let model = by_name(&cfg.model, cfg).expect("validated above");
+        Ok(Attack {
+            cfg: cfg.clone(),
+            seed,
+            model,
+            round: 0,
+            snapshot: Vec::new(),
+            injected: Vec::new(),
+        })
+    }
+
+    /// Is client `i` compromised in this run?  Pure in `(seed, i)`.
+    pub fn is_attacker(&self, client: u64) -> bool {
+        is_attacker(self.seed, client, self.cfg.fraction)
+    }
+
+    /// The resolved model's registered name.
+    pub fn model_name(&self) -> &'static str {
+        self.model.name()
+    }
+
+    /// Arm the round: snapshot the pre-round global (models perturb
+    /// relative to it) and clear the injected-client record.
+    pub fn begin_round(&mut self, round: u32, global: &[f32]) {
+        self.round = round;
+        self.snapshot.clear();
+        self.snapshot.extend_from_slice(global);
+        self.injected.clear();
+    }
+
+    /// Perturb `params` in place iff `client` is compromised; returns
+    /// whether an injection happened.  Called at the server seam after
+    /// codec decode, immediately before the accumulator fold — in
+    /// selection order, which keeps adaptive state deterministic.
+    pub fn apply(&mut self, client: u32, params: &mut [f32]) -> bool {
+        if !self.is_attacker(client as u64) {
+            return false;
+        }
+        let ctx = AttackCtx {
+            seed: self.seed,
+            round: self.round,
+            client,
+            global: &self.snapshot,
+            scale: self.cfg.scale,
+        };
+        self.model.perturb(&ctx, params);
+        self.injected.push(client);
+        true
+    }
+
+    /// Clients injected this round, in fold (= selection) order.
+    pub fn injected(&self) -> &[u32] {
+        &self.injected
+    }
+
+    /// Feed the model one engine event (adaptive models key off these).
+    pub fn observe(&mut self, event: &FlEvent<'_>) {
+        self.model.observe(event);
+    }
+
+    /// One-line human description for run headers.
+    pub fn describe(&self) -> String {
+        format!("{} [{}]", self.cfg.describe(), self.model.kind())
+    }
+}
+
+impl std::fmt::Debug for Attack {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Attack")
+            .field("cfg", &self.cfg)
+            .field("seed", &self.seed)
+            .field("model", &self.model.name())
+            .finish()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Built-in models.
+
+/// Byzantine sign flip: submit `global - scale * (update - global)` — the
+/// update's direction reversed and rescaled.
+struct SignFlip {
+    scale: f64,
+}
+
+impl AttackModel for SignFlip {
+    fn name(&self) -> &'static str {
+        "sign-flip"
+    }
+    fn perturb(&self, ctx: &AttackCtx<'_>, params: &mut [f32]) {
+        let s = self.scale as f32;
+        for (p, g) in params.iter_mut().zip(ctx.global) {
+            *p = g - s * (*p - g);
+        }
+    }
+}
+
+/// Additive Gaussian noise, i.i.d. per coordinate from the attacker's
+/// private `(round, client)` stream.
+struct GaussNoise {
+    std: f64,
+}
+
+impl AttackModel for GaussNoise {
+    fn name(&self) -> &'static str {
+        "gauss"
+    }
+    fn perturb(&self, ctx: &AttackCtx<'_>, params: &mut [f32]) {
+        let mut rng = ctx.rng();
+        for p in params.iter_mut() {
+            *p += (self.std * rng.normal()) as f32;
+        }
+    }
+}
+
+/// Model replacement: submit `global + boost * (target - global)` for a
+/// run-scoped adversarial target — the classic scaled attack that lets a
+/// single attacker overwrite a plain average.
+struct ScaledReplacement {
+    boost: f64,
+}
+
+impl AttackModel for ScaledReplacement {
+    fn name(&self) -> &'static str {
+        "scaled"
+    }
+    fn perturb(&self, ctx: &AttackCtx<'_>, params: &mut [f32]) {
+        let mut target = ctx.run_rng(0);
+        let b = self.boost as f32;
+        for (p, g) in params.iter_mut().zip(ctx.global) {
+            *p = g + b * (target.normal() as f32 - g);
+        }
+    }
+}
+
+/// Label-flip data poisoning, emulated for the timing-only fleet: training
+/// on permuted labels inverts the honest update and drifts toward a fixed
+/// label-permutation attractor (run-scoped, shared by all poisoned
+/// clients).
+struct LabelFlip {
+    scale: f64,
+}
+
+impl AttackModel for LabelFlip {
+    fn name(&self) -> &'static str {
+        "label-flip"
+    }
+    fn kind(&self) -> AttackKind {
+        AttackKind::Data
+    }
+    fn perturb(&self, ctx: &AttackCtx<'_>, params: &mut [f32]) {
+        let mut attractor = ctx.run_rng(1);
+        let s = self.scale as f32;
+        for (p, g) in params.iter_mut().zip(ctx.global) {
+            *p = g - s * (*p - g) + s * 0.1 * attractor.normal() as f32;
+        }
+    }
+}
+
+/// Backdoor-trigger data poisoning, emulated: a fixed ~1% coordinate
+/// subset (the "trigger neurons", run-scoped so every poisoned client
+/// plants the same backdoor) is offset by `scale`; all other coordinates
+/// are left honest, giving the low-norm signature backdoors are known for.
+struct Backdoor {
+    scale: f64,
+}
+
+impl AttackModel for Backdoor {
+    fn name(&self) -> &'static str {
+        "backdoor"
+    }
+    fn kind(&self) -> AttackKind {
+        AttackKind::Data
+    }
+    fn perturb(&self, ctx: &AttackCtx<'_>, params: &mut [f32]) {
+        let mut trigger = ctx.run_rng(2);
+        let s = self.scale as f32;
+        let mut hit = false;
+        for p in params.iter_mut() {
+            if trigger.f64() < 0.01 {
+                *p += s;
+                hit = true;
+            }
+        }
+        if !hit {
+            if let Some(p) = params.last_mut() {
+                *p += s;
+            }
+        }
+    }
+}
+
+/// Colluding cohort: every attacker this round submits `global + scale *
+/// d` for the *same* per-round direction `d` — a coordinated push that
+/// concentrates the Byzantine mass instead of washing out in the average.
+struct Colluding {
+    scale: f64,
+}
+
+impl AttackModel for Colluding {
+    fn name(&self) -> &'static str {
+        "colluding"
+    }
+    fn perturb(&self, ctx: &AttackCtx<'_>, params: &mut [f32]) {
+        let mut shared = ctx.shared_rng();
+        let s = self.scale as f32;
+        for (p, g) in params.iter_mut().zip(ctx.global) {
+            *p = g + s * shared.normal() as f32;
+        }
+    }
+}
+
+/// Adaptive attacker: a colluding push whose magnitude tracks the
+/// defender's progress through the event stream — each `Evaluated` event
+/// re-tunes the boost (lower loss ⇒ harder push).  Deterministic because
+/// the event stream itself is deterministic and selection-ordered.
+struct Adaptive {
+    scale: f64,
+    boost: f64,
+}
+
+impl AttackModel for Adaptive {
+    fn name(&self) -> &'static str {
+        "adaptive"
+    }
+    fn perturb(&self, ctx: &AttackCtx<'_>, params: &mut [f32]) {
+        let mut shared = ctx.shared_rng();
+        let s = (self.scale * self.boost) as f32;
+        for (p, g) in params.iter_mut().zip(ctx.global) {
+            *p = g + s * shared.normal() as f32;
+        }
+    }
+    fn observe(&mut self, event: &FlEvent<'_>) {
+        if let FlEvent::Evaluated { loss, .. } = event {
+            self.boost = (1.0 + 1.0 / (*loss as f64).max(1e-3)).min(50.0);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx<'a>(global: &'a [f32], seed: u64, round: u32, client: u32) -> AttackCtx<'a> {
+        AttackCtx { seed, round, client, global, scale: 1.0 }
+    }
+
+    #[test]
+    fn membership_is_pure_and_tracks_the_fraction() {
+        for i in 0..64u64 {
+            assert_eq!(is_attacker(7, i, 0.3), is_attacker(7, i, 0.3));
+            assert!(!is_attacker(7, i, 0.0));
+            assert!(is_attacker(7, i, 1.0));
+        }
+        let n = 20_000u64;
+        let hits = (0..n).filter(|&i| is_attacker(42, i, 0.25)).count();
+        let frac = hits as f64 / n as f64;
+        assert!((frac - 0.25).abs() < 0.02, "observed fraction {frac}");
+        // Different seeds compromise different subsets.
+        assert!((0..64u64).any(|i| is_attacker(1, i, 0.3) != is_attacker(2, i, 0.3)));
+    }
+
+    #[test]
+    fn presets_resolve_and_validate() {
+        for &name in ATTACK_PRESETS {
+            let cfg = AttackConfig::preset(name).expect("preset exists");
+            cfg.validate().expect("preset valid");
+            assert!(Attack::resolve(&cfg, 1).is_ok());
+            assert_eq!(cfg.model, name, "preset name is the model name");
+        }
+        assert!(AttackConfig::preset("nope").is_none());
+    }
+
+    #[test]
+    fn registry_lists_and_builds_all_builtins() {
+        let all = names();
+        for &name in ATTACK_PRESETS {
+            assert!(all.iter().any(|n| n == name), "missing {name}");
+            let cfg = AttackConfig { model: name.into(), ..Default::default() };
+            assert_eq!(by_name(name, &cfg).unwrap().name(), name);
+        }
+        register(
+            "custom-test-model",
+            Arc::new(|c: &AttackConfig| {
+                Box::new(GaussNoise { std: c.scale }) as Box<dyn AttackModel>
+            }),
+        );
+        assert!(names().iter().any(|n| n == "custom-test-model"));
+    }
+
+    #[test]
+    fn from_cfg_absent_disabled_and_overrides() {
+        let none = Cfg::parse("[federation]\nrounds = 2").unwrap();
+        assert_eq!(AttackConfig::from_cfg(&none).unwrap(), None);
+
+        let off = Cfg::parse("[attack]\nenabled = false\nfraction = 0.5").unwrap();
+        assert_eq!(AttackConfig::from_cfg(&off).unwrap(), None);
+
+        let on = Cfg::parse("[attack]\npreset = \"scaled\"\nfraction = 0.4").unwrap();
+        let a = AttackConfig::from_cfg(&on).unwrap().expect("enabled");
+        assert_eq!(a.model, "scaled");
+        assert_eq!(a.fraction, 0.4, "override applies");
+        assert_eq!(a.scale, 10.0, "preset field kept");
+    }
+
+    #[test]
+    fn from_cfg_rejects_bad_values() {
+        for bad in [
+            "[attack]\npreset = \"nope\"",
+            "[attack]\nmodel = \"rootkit\"",
+            "[attack]\nfraction = 1.5",
+            "[attack]\nfraction = -0.1",
+            "[attack]\nscale = 0",
+        ] {
+            let cfg = Cfg::parse(bad).unwrap();
+            assert!(AttackConfig::from_cfg(&cfg).is_err(), "accepted: {bad}");
+        }
+    }
+
+    #[test]
+    fn perturbations_are_deterministic_in_the_ctx() {
+        let global = vec![0.5f32; 64];
+        // An honest update with a nonzero delta — sign-flip-style models
+        // are (by design) identity on an update that equals the global.
+        let honest: Vec<f32> = global.iter().map(|g| g + 0.25).collect();
+        for &name in ATTACK_PRESETS {
+            let cfg = AttackConfig { model: name.into(), ..Default::default() };
+            let model = by_name(name, &cfg).unwrap();
+            let mut a = honest.clone();
+            let mut b = honest.clone();
+            model.perturb(&ctx(&global, 9, 3, 17), &mut a);
+            model.perturb(&ctx(&global, 9, 3, 17), &mut b);
+            assert_eq!(a, b, "{name} not deterministic");
+            assert_ne!(a, honest, "{name} is a no-op on an honest update");
+        }
+    }
+
+    #[test]
+    fn sign_flip_reverses_the_update_direction() {
+        let global = vec![1.0f32; 8];
+        let cfg = AttackConfig::preset("sign-flip").unwrap();
+        let model = by_name("sign-flip", &cfg).unwrap();
+        let mut params = vec![1.5f32; 8]; // honest delta +0.5
+        model.perturb(&ctx(&global, 1, 0, 0), &mut params);
+        assert!(params.iter().all(|&p| (p - 0.5).abs() < 1e-6), "{params:?}");
+    }
+
+    #[test]
+    fn colluders_coordinate_and_private_streams_do_not() {
+        let global = vec![0.0f32; 32];
+        let cfg = AttackConfig::preset("colluding").unwrap();
+        let collude = by_name("colluding", &cfg).unwrap();
+        let (mut a, mut b) = (global.clone(), global.clone());
+        collude.perturb(&ctx(&global, 5, 2, 10), &mut a);
+        collude.perturb(&ctx(&global, 5, 2, 99), &mut b);
+        assert_eq!(a, b, "colluders must push the same direction");
+        let mut c = global.clone();
+        collude.perturb(&ctx(&global, 5, 3, 10), &mut c);
+        assert_ne!(a, c, "direction must change across rounds");
+
+        let gcfg = AttackConfig::preset("gauss").unwrap();
+        let gauss = by_name("gauss", &gcfg).unwrap();
+        let (mut d, mut e) = (global.clone(), global.clone());
+        gauss.perturb(&ctx(&global, 5, 2, 10), &mut d);
+        gauss.perturb(&ctx(&global, 5, 2, 99), &mut e);
+        assert_ne!(d, e, "gauss draws are private per client");
+    }
+
+    #[test]
+    fn backdoor_touches_a_sparse_fixed_trigger_set() {
+        let global = vec![0.0f32; 4096];
+        let cfg = AttackConfig::preset("backdoor").unwrap();
+        let model = by_name("backdoor", &cfg).unwrap();
+        let mut a = global.clone();
+        model.perturb(&ctx(&global, 3, 0, 1), &mut a);
+        let touched: Vec<usize> =
+            (0..a.len()).filter(|&i| a[i] != global[i]).collect();
+        assert!(!touched.is_empty() && touched.len() < a.len() / 20, "{}", touched.len());
+        // Same trigger set in a later round, from a different client.
+        let mut b = global.clone();
+        model.perturb(&ctx(&global, 3, 7, 2), &mut b);
+        let touched_b: Vec<usize> =
+            (0..b.len()).filter(|&i| b[i] != global[i]).collect();
+        assert_eq!(touched, touched_b, "trigger set must be run-scoped");
+    }
+
+    #[test]
+    fn adaptive_boost_tracks_evaluated_events() {
+        let cfg = AttackConfig::preset("adaptive").unwrap();
+        let mut model = by_name("adaptive", &cfg).unwrap();
+        let global = vec![0.0f32; 16];
+        let mut before = global.clone();
+        model.perturb(&ctx(&global, 11, 1, 0), &mut before);
+        model.observe(&FlEvent::Evaluated { round: 0, loss: 0.05, accuracy: 0.9 });
+        let mut after = global.clone();
+        model.perturb(&ctx(&global, 11, 1, 0), &mut after);
+        let norm = |v: &[f32]| v.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt();
+        assert!(
+            norm(&after) > 2.0 * norm(&before),
+            "low observed loss must harden the attack: {} vs {}",
+            norm(&after),
+            norm(&before)
+        );
+    }
+
+    #[test]
+    fn attack_applies_only_to_compromised_clients() {
+        let cfg = AttackConfig { model: "gauss".into(), fraction: 0.5, scale: 1.0 };
+        let mut atk = Attack::resolve(&cfg, 77).unwrap();
+        let global = vec![0.25f32; 32];
+        atk.begin_round(0, &global);
+        let mut seen = (false, false);
+        for client in 0..64u32 {
+            let mut params = global.clone();
+            let hit = atk.apply(client, &mut params);
+            assert_eq!(hit, atk.is_attacker(client as u64));
+            assert_eq!(hit, params != global);
+            if hit {
+                seen.0 = true;
+            } else {
+                seen.1 = true;
+            }
+        }
+        assert!(seen.0 && seen.1, "fraction 0.5 must split the fleet");
+        assert_eq!(
+            atk.injected().len(),
+            (0..64u64).filter(|&i| atk.is_attacker(i)).count()
+        );
+    }
+}

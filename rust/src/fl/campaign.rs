@@ -33,6 +33,7 @@ use std::path::Path;
 
 use crate::util::json::Json;
 
+use super::attack::{AttackConfig, ATTACK_PRESETS};
 use super::experiment::{finite_num, ExecutionMode, ExperimentBuilder};
 use super::launcher::LaunchOptions;
 use super::scenario::Scenario;
@@ -63,6 +64,23 @@ pub fn cell_seed(seed: u64, strategy: &str, scenario: &str) -> u64 {
     splitmix64(seed ^ splitmix64(fnv1a64(strategy)) ^ splitmix64(fnv1a64(scenario)).rotate_left(17))
 }
 
+/// The experiment seed of a cell with an attack coordinate.  Honest cells
+/// (`None`) keep exactly the historical three-coordinate [`cell_seed`], so
+/// adding an attack axis to an existing sweep changes no honest cell's
+/// result; attacked cells mix the preset name in as a fourth axis.
+pub fn attacked_cell_seed(
+    seed: u64,
+    strategy: &str,
+    scenario: &str,
+    attack: Option<&str>,
+) -> u64 {
+    let base = cell_seed(seed, strategy, scenario);
+    match attack {
+        None => base,
+        Some(a) => splitmix64(base ^ splitmix64(fnv1a64(a)).rotate_left(29)),
+    }
+}
+
 /// One cell of the sweep grid.
 #[derive(Debug, Clone, PartialEq)]
 pub struct CampaignCell {
@@ -72,7 +90,10 @@ pub struct CampaignCell {
     pub strategy: String,
     /// Scenario name (the `scenarios` axis value).
     pub scenario: String,
-    /// The derived experiment seed ([`cell_seed`]).
+    /// Attack preset name (the `attacks` axis value; `None` = the honest
+    /// cell, which inherits whatever the base options say).
+    pub attack: Option<String>,
+    /// The derived experiment seed ([`attacked_cell_seed`]).
     pub cell_seed: u64,
 }
 
@@ -83,6 +104,7 @@ pub struct Campaign {
     seeds: Vec<u64>,
     strategies: Vec<String>,
     scenarios: Vec<Scenario>,
+    attacks: Vec<Option<String>>,
     mode: ExecutionMode,
 }
 
@@ -99,6 +121,7 @@ impl Campaign {
             seeds,
             strategies,
             scenarios,
+            attacks: vec![None],
             mode: ExecutionMode::Real,
         }
     }
@@ -120,6 +143,18 @@ impl Campaign {
     /// to obtain them by name).
     pub fn scenarios(mut self, scenarios: &[Scenario]) -> Self {
         self.scenarios = scenarios.to_vec();
+        self
+    }
+
+    /// Attack presets to sweep (`"none"` = the honest baseline cell;
+    /// other names resolve through `fl::attack::ATTACK_PRESETS` per cell).
+    /// This axis is what turns a strategy sweep into an attack-vs-defense
+    /// matrix (EXPERIMENTS.md §Attack-vs-defense).
+    pub fn attacks(mut self, names: &[&str]) -> Self {
+        self.attacks = names
+            .iter()
+            .map(|s| (*s != "none").then(|| s.to_string()))
+            .collect();
         self
     }
 
@@ -145,18 +180,29 @@ impl Campaign {
     /// [`Campaign::cells`] and [`Campaign::run`] iterate.
     fn grid(&self) -> Vec<(CampaignCell, &Scenario)> {
         let mut out = Vec::with_capacity(
-            self.scenarios.len() * self.strategies.len() * self.seeds.len(),
+            self.scenarios.len()
+                * self.strategies.len()
+                * self.attacks.len()
+                * self.seeds.len(),
         );
         for scenario in &self.scenarios {
             for strategy in &self.strategies {
-                for &seed in &self.seeds {
-                    let cell = CampaignCell {
-                        seed,
-                        strategy: strategy.clone(),
-                        scenario: scenario.name.clone(),
-                        cell_seed: cell_seed(seed, strategy, &scenario.name),
-                    };
-                    out.push((cell, scenario));
+                for attack in &self.attacks {
+                    for &seed in &self.seeds {
+                        let cell = CampaignCell {
+                            seed,
+                            strategy: strategy.clone(),
+                            scenario: scenario.name.clone(),
+                            attack: attack.clone(),
+                            cell_seed: attacked_cell_seed(
+                                seed,
+                                strategy,
+                                &scenario.name,
+                                attack.as_deref(),
+                            ),
+                        };
+                        out.push((cell, scenario));
+                    }
                 }
             }
         }
@@ -164,7 +210,7 @@ impl Campaign {
     }
 
     /// The sweep grid in run order: scenarios (outer) × strategies ×
-    /// seeds (inner).
+    /// attacks × seeds (inner).
     pub fn cells(&self) -> Vec<CampaignCell> {
         self.grid().into_iter().map(|(cell, _)| cell).collect()
     }
@@ -186,6 +232,26 @@ impl Campaign {
         opts.seed = cell.cell_seed;
         opts.strategy = cell.strategy.clone();
         opts.scenario = (!scenario.is_static()).then(|| scenario.clone());
+        if let Some(name) = cell.attack.clone() {
+            match AttackConfig::preset(&name) {
+                Some(a) => opts.attack = Some(a),
+                None => {
+                    return CellOutcome {
+                        cell,
+                        rounds: 0,
+                        final_train_loss: None,
+                        eval_loss: None,
+                        eval_accuracy: None,
+                        total_emu_s: 0.0,
+                        failures: 0,
+                        error: Some(format!(
+                            "unknown attack preset '{name}' ({})",
+                            ATTACK_PRESETS.join("|")
+                        )),
+                    }
+                }
+            }
+        }
         let mut builder = ExperimentBuilder::from_options(opts).strict();
         if let ExecutionMode::Simulated { param_dim } = self.mode {
             builder = builder.simulated(param_dim);
@@ -264,6 +330,10 @@ impl CellOutcome {
             ("seed", Json::str(self.cell.seed.to_string())),
             ("strategy", Json::str(self.cell.strategy.clone())),
             ("scenario", Json::str(self.cell.scenario.clone())),
+            (
+                "attack",
+                Json::str(self.cell.attack.clone().unwrap_or_else(|| "none".into())),
+            ),
             ("cell_seed", Json::str(self.cell.cell_seed.to_string())),
             ("rounds", Json::num(self.rounds as f64)),
             ("final_train_loss", opt_finite(self.final_train_loss)),
@@ -383,6 +453,64 @@ mod tests {
         // Population without simulated mode: an error row, not an abort.
         let report = Campaign::new("pop", LaunchOptions::default()).population(24).run();
         assert!(report.cells[0].error.as_deref().unwrap_or("").contains("simulated"));
+    }
+
+    #[test]
+    fn attack_axis_expands_the_grid_and_separates_seeds() {
+        let campaign = Campaign::new("adv", LaunchOptions::default())
+            .seeds(&[1])
+            .strategies(&["fedavg", "krum"])
+            .attacks(&["none", "sign-flip"]);
+        let cells = campaign.cells();
+        assert_eq!(cells.len(), 4);
+        // Honest cells keep the historical three-coordinate seed...
+        let honest = cells
+            .iter()
+            .find(|c| c.attack.is_none() && c.strategy == "fedavg")
+            .unwrap();
+        assert_eq!(honest.cell_seed, cell_seed(1, "fedavg", "stable"));
+        // ...while attacked cells mix in the fourth coordinate.
+        let attacked = cells
+            .iter()
+            .find(|c| c.attack.is_some() && c.strategy == "fedavg")
+            .unwrap();
+        assert_ne!(attacked.cell_seed, honest.cell_seed);
+        let mut seeds: Vec<u64> = cells.iter().map(|c| c.cell_seed).collect();
+        seeds.sort_unstable();
+        seeds.dedup();
+        assert_eq!(seeds.len(), 4, "all four coordinates must separate");
+    }
+
+    #[test]
+    fn attack_cells_run_and_export_the_attack_column() {
+        let base = LaunchOptions {
+            rounds: 3,
+            batch: 16,
+            fail_on_empty_round: false,
+            ..Default::default()
+        };
+        let report = Campaign::new("adv", base)
+            .seeds(&[5])
+            .strategies(&["fedavg"])
+            .attacks(&["none", "gauss"])
+            .simulated(16)
+            .run();
+        assert_eq!(report.cells.len(), 2);
+        assert_eq!(report.succeeded(), 2, "{:?}", report.cells[0].error);
+        let honest = report.cells[0].to_json();
+        assert_eq!(honest.get("attack").unwrap().as_str(), Some("none"));
+        let attacked = report.cells[1].to_json();
+        assert_eq!(attacked.get("attack").unwrap().as_str(), Some("gauss"));
+        // Unknown presets become error rows, not aborts.
+        let bad = Campaign::new("adv", LaunchOptions::default())
+            .attacks(&["rootkit"])
+            .simulated(16)
+            .run();
+        assert!(
+            bad.cells[0].error.as_deref().unwrap_or("").contains("rootkit"),
+            "{:?}",
+            bad.cells[0].error
+        );
     }
 
     #[test]

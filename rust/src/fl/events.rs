@@ -106,6 +106,18 @@ pub enum FlEvent<'a> {
         /// The recorded failure reason.
         reason: &'a str,
     },
+    /// A compromised client's update was perturbed by the configured
+    /// attack model (DESIGN.md §13) — after codec decode, immediately
+    /// before the aggregation fold.  Emitted in fold (= selection) order
+    /// after the round's `ClientDone`/`ClientFailed` events.
+    AttackInjected {
+        /// Round index (0-based).
+        round: u32,
+        /// The compromised client's id.
+        client: u32,
+        /// Registered name of the attack model that perturbed the update.
+        model: &'a str,
+    },
     /// A simulated transfer began (netsim only; emitted once the round's
     /// communication timeline is known, before the round's
     /// `ClientDone`/`ClientFailed` events — a download pair for every
@@ -265,6 +277,9 @@ impl FlObserver for ProgressLogger {
             }
             FlEvent::ClientFailed { round, client, kind, .. } => {
                 crate::log_debug!("round {round}: client {client} failed ({kind:?})");
+            }
+            FlEvent::AttackInjected { round, client, model } => {
+                crate::log_debug!("round {round}: client {client} injected ({model})");
             }
             FlEvent::Evaluated { round, loss, accuracy } => {
                 crate::log_info!(

@@ -40,6 +40,7 @@ use crate::util::cfg::Cfg;
 use crate::util::json::Json;
 use crate::util::rng::Pcg;
 
+use super::attack::{Attack, AttackConfig, ATTACK_PRESETS};
 use super::client::{ClientApp, FitConfig, SimClient, TrainClient};
 use super::clientmgr::Selection;
 use super::events::{FlObserver, ProgressLogger};
@@ -54,7 +55,7 @@ use super::population::{
 };
 use super::scenario::Scenario;
 use super::server::{ServerApp, ServerConfig};
-use super::strategy::Strategy;
+use super::strategy::{Krum, Strategy, TrimmedMean};
 
 /// How client fits execute.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -79,6 +80,7 @@ pub struct ExperimentBuilder {
     scenario_name: Option<String>,
     scheduler_name: Option<String>,
     netsim_name: Option<String>,
+    attack_name: Option<String>,
     strategy_override: Option<Box<dyn Strategy>>,
     observers: Vec<Box<dyn FlObserver>>,
     mode: ExecutionMode,
@@ -93,6 +95,7 @@ impl Default for ExperimentBuilder {
             scenario_name: None,
             scheduler_name: None,
             netsim_name: None,
+            attack_name: None,
             strategy_override: None,
             observers: Vec::new(),
             mode: ExecutionMode::Real,
@@ -336,6 +339,26 @@ impl ExperimentBuilder {
         self
     }
 
+    /// Adversarial participants (DESIGN.md §13): a seeded `fraction` of
+    /// the fleet submits updates perturbed by the configured attack model
+    /// at the server seam — after codec decode, immediately before the
+    /// aggregation fold.  Membership is pure in `(seed, client)`, so the
+    /// axis composes with populations, netsim and dynamics without
+    /// breaking bit-identity.  Validated at build: model name, fraction,
+    /// scale, and (strict mode) the strategy's Byzantine tolerance.
+    pub fn attack(mut self, cfg: AttackConfig) -> Self {
+        self.attack_name = None;
+        self.opts.attack = Some(cfg);
+        self
+    }
+
+    /// Attack by preset name (`fl::attack::ATTACK_PRESETS` lists them);
+    /// resolved and validated at build.
+    pub fn attack_named(mut self, preset: &str) -> Self {
+        self.attack_name = Some(preset.to_string());
+        self
+    }
+
     /// Subscribe an observer to the run's typed event stream
     /// (`fl::events`).
     pub fn observer(mut self, observer: Box<dyn FlObserver>) -> Self {
@@ -458,11 +481,33 @@ impl ExperimentBuilder {
             None => None,
         };
 
-        // Strategy: explicit instance, or the one shared registry lookup
-        // every resolution path uses (`LaunchOptions::strategy_box`).
+        // Attack: resolve a pending preset name, validate the config
+        // (model registry, fraction, scale) and build the runtime
+        // instance.  Like netsim, resolution is an assembly requirement
+        // and applies on the permissive path too; the strategy-tolerance
+        // cross-check below stays strict-mode only.
+        if let Some(name) = &self.attack_name {
+            self.opts.attack =
+                Some(AttackConfig::preset(name).ok_or_else(|| {
+                    invalid(
+                        "attack",
+                        format!(
+                            "unknown attack preset '{name}' ({})",
+                            ATTACK_PRESETS.join("|")
+                        ),
+                    )
+                })?);
+        }
+        let attack = match &self.opts.attack {
+            Some(cfg) => Some(Attack::resolve(cfg, self.opts.seed)?),
+            None => None,
+        };
+
+        // Strategy: explicit instance, or registry resolution with
+        // cohort-derived robustness knobs (`cohort_sized_strategy`).
         let strategy = match self.strategy_override {
             Some(s) => s,
-            None => self.opts.strategy_box()?,
+            None => cohort_sized_strategy(&self.opts)?,
         };
 
         // Scheduler: explicit name through the registry, or the launcher's
@@ -497,6 +542,29 @@ impl ExperimentBuilder {
                         self.opts.selection
                     ),
                 ));
+            }
+            // ...and an attacker fraction the defense provably cannot
+            // absorb is a configuration error, not an experiment.
+            // Strategies with no robustness guarantee (the mean family)
+            // accept any fraction — attacking them is exactly what the
+            // robustness lab measures.
+            if let Some(a) = &self.opts.attack {
+                let attackers = (a.fraction * participants as f64).ceil() as usize;
+                if let Some(tolerated) = strategy.byzantine_tolerance(participants) {
+                    if attackers > tolerated {
+                        return Err(invalid(
+                            "attack.fraction",
+                            format!(
+                                "{:.0}% attackers put {attackers} Byzantine updates in a \
+                                 {participants}-participant round, but strategy '{}' only \
+                                 tolerates {tolerated} there (Krum needs n > 2f + 2, \
+                                 trimmed-mean n > 2·trim)",
+                                a.fraction * 100.0,
+                                strategy.name(),
+                            ),
+                        ));
+                    }
+                }
             }
         }
 
@@ -576,6 +644,7 @@ impl ExperimentBuilder {
             profiles,
             population,
             netsim,
+            attack,
             observers: self.observers,
             mode: self.mode,
             progress: self.progress,
@@ -594,6 +663,32 @@ fn min_round_participants(selection: Selection, clients: usize) -> usize {
     }
 }
 
+/// Registry resolution with cohort-derived robustness knobs.
+///
+/// The registry's factories are cohort-blind, so resolving the robust
+/// strategies *by name* historically froze them at `Krum::new(1, 3)` /
+/// `TrimmedMean::new(1)` — silently under-defending any federation larger
+/// than a handful of clients.  Instead, size them for the per-round
+/// participant count `k` the configuration seats: the largest `f` Krum's
+/// `k > 2f + 2` bound admits (averaging the `k - 2f - 2` guaranteed-honest
+/// top scorers, multi-Krum style) and a quarter-of-the-cohort tail trim
+/// for trimmed-mean.  Both floor at their historical knobs (`f = 1`,
+/// `trim = 1`), so tiny federations behave exactly as before — and
+/// cohorts too small even for those still fail loudly at the strict-mode
+/// `min_clients` cross-check in `build()`.
+fn cohort_sized_strategy(opts: &LaunchOptions) -> Result<Box<dyn Strategy>, ConfigError> {
+    let k = min_round_participants(opts.selection, opts.clients);
+    match opts.strategy.as_str() {
+        "krum" => {
+            let f = (k.saturating_sub(3) / 2).max(1);
+            let m = k.saturating_sub(2 * f + 2).max(1);
+            Ok(Box::new(Krum::new(f, m)))
+        }
+        "trimmed-mean" => Ok(Box::new(TrimmedMean::new((k.saturating_sub(1) / 4).max(1)))),
+        _ => opts.strategy_box(),
+    }
+}
+
 /// A fully resolved, validated experiment — every component is already
 /// constructed; [`Experiment::run`] cannot fail on configuration.
 pub struct Experiment {
@@ -606,6 +701,9 @@ pub struct Experiment {
     /// Resolved communication simulator (`Some` when the netsim axis is
     /// set; DESIGN.md §12).
     netsim: Option<NetSim>,
+    /// Resolved adversarial participants (`Some` when the attack axis is
+    /// set; DESIGN.md §13).
+    attack: Option<Attack>,
     observers: Vec<Box<dyn FlObserver>>,
     mode: ExecutionMode,
     progress: bool,
@@ -656,6 +754,7 @@ impl Experiment {
             profiles,
             population,
             netsim,
+            attack,
             mut observers,
             mode,
             progress,
@@ -766,6 +865,9 @@ impl Experiment {
         }
         if let Some(ns) = netsim {
             server = server.with_netsim(ns);
+        }
+        if let Some(atk) = attack {
+            server = server.with_attack(atk);
         }
         for observer in observers {
             server = server.with_observer(observer);
@@ -973,6 +1075,120 @@ mod tests {
             .build()
             .unwrap_err();
         assert!(err.to_string().contains("trimmed-mean"), "{err}");
+    }
+
+    #[test]
+    fn robust_defaults_derive_from_the_cohort() {
+        // 20 clients, everyone selected: krum must size f for k = 20
+        // (f = 8 -> min_clients = 19), not the historical Krum::new(1, 3).
+        let exp = Experiment::builder()
+            .profiles(&["gtx-1060"])
+            .clients(20)
+            .strategy("krum")
+            .build()
+            .unwrap();
+        assert_eq!(exp.strategy.min_clients(), 19, "krum f derives from the cohort");
+        assert_eq!(exp.strategy.byzantine_tolerance(20), Some(8));
+        // Selection cuts the cohort the derivation sees: 20 clients at
+        // fraction 0.5 seat k = 10 -> f = 3.
+        let exp = Experiment::builder()
+            .profiles(&["gtx-1060"])
+            .clients(20)
+            .selection(Selection::Fraction(0.5))
+            .strategy("krum")
+            .build()
+            .unwrap();
+        assert_eq!(exp.strategy.min_clients(), 9);
+        // trimmed-mean trims a quarter of the cohort per tail: trim = 4.
+        let exp = Experiment::builder()
+            .profiles(&["gtx-1060"])
+            .clients(20)
+            .strategy("trimmed-mean")
+            .build()
+            .unwrap();
+        assert_eq!(exp.strategy.min_clients(), 9);
+        // Small federations keep the historical floor (f = 1, trim = 1).
+        let exp = Experiment::builder()
+            .profiles(&["gtx-1060"])
+            .clients(5)
+            .strategy("krum")
+            .build()
+            .unwrap();
+        assert_eq!(exp.strategy.min_clients(), 5);
+        // An explicit instance is never resized behind the caller's back.
+        let exp = Experiment::builder()
+            .profiles(&["gtx-1060"])
+            .clients(20)
+            .with_strategy(Box::new(Krum::new(1, 3)))
+            .build()
+            .unwrap();
+        assert_eq!(exp.strategy.min_clients(), 5);
+    }
+
+    #[test]
+    fn attack_axis_resolves_and_validates_at_build() {
+        let exp = Experiment::builder()
+            .profiles(&["gtx-1060"])
+            .clients(10)
+            .attack_named("scaled")
+            .simulated(32)
+            .build()
+            .unwrap();
+        let a = exp.options().attack.as_ref().expect("preset resolved");
+        assert_eq!(a.model, "scaled");
+        assert_eq!(a.scale, 10.0);
+        assert!(exp.attack.is_some(), "runtime instance built at build()");
+        // Unknown presets and invalid knobs fail at build.
+        assert!(Experiment::builder()
+            .profiles(&["gtx-1060"])
+            .attack_named("nope")
+            .build()
+            .is_err());
+        assert!(Experiment::builder()
+            .profiles(&["gtx-1060"])
+            .attack(AttackConfig { fraction: 1.5, ..Default::default() })
+            .build()
+            .is_err());
+    }
+
+    #[test]
+    fn attacker_fraction_above_the_strategy_tolerance_is_rejected() {
+        // 10 participants: cohort-derived krum tolerates f = 3, but 40%
+        // attackers put 4 Byzantine updates in the round.
+        let err = Experiment::builder()
+            .profiles(&["gtx-1060"])
+            .clients(10)
+            .strategy("krum")
+            .attack(AttackConfig { fraction: 0.4, ..Default::default() })
+            .build()
+            .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("tolerates"), "{msg}");
+        // 20% (= 2 of 10) sits inside the bound.
+        assert!(Experiment::builder()
+            .profiles(&["gtx-1060"])
+            .clients(10)
+            .strategy("krum")
+            .attack_named("sign-flip")
+            .build()
+            .is_ok());
+        // FedAvg promises nothing, so any fraction builds — that run is
+        // the robustness lab's divergence baseline.
+        assert!(Experiment::builder()
+            .profiles(&["gtx-1060"])
+            .clients(10)
+            .attack(AttackConfig { fraction: 0.9, ..Default::default() })
+            .build()
+            .is_ok());
+        // The permissive (legacy launch) path skips the tolerance check.
+        let opts = LaunchOptions {
+            clients: 10,
+            strategy: "krum".into(),
+            hardware: HardwareSource::Manual(vec!["gtx-1060".into()]),
+            attack: Some(AttackConfig { fraction: 0.4, ..Default::default() }),
+            ..Default::default()
+        };
+        assert!(Experiment::from_options(opts).is_ok());
     }
 
     #[test]

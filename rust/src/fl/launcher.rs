@@ -17,6 +17,7 @@ use crate::runtime::default_dir;
 use crate::sched::Trace;
 use crate::util::cfg::Cfg;
 
+use super::attack::AttackConfig;
 use super::clientmgr::Selection;
 use super::experiment::Experiment;
 use super::history::History;
@@ -122,6 +123,10 @@ pub struct LaunchOptions {
     /// closed-form `round_comm_s` fast path; DESIGN.md §12).  Enabling it
     /// implies `network = true` so every client carries a link.
     pub netsim: Option<NetSimConfig>,
+    /// Adversarial participants (`None` = every client is honest;
+    /// DESIGN.md §13): a seeded fraction of the fleet submits updates
+    /// perturbed by the configured attack model at the aggregation seam.
+    pub attack: Option<AttackConfig>,
 }
 
 impl Default for LaunchOptions {
@@ -151,6 +156,7 @@ impl Default for LaunchOptions {
             scenario: None,
             population: None,
             netsim: None,
+            attack: None,
         }
     }
 }
@@ -195,6 +201,7 @@ pub const CONFIG_SCHEMA: &[(&str, &[&str])] = &[
             "payload_mb",
         ],
     ),
+    ("attack", &["enabled", "preset", "model", "fraction", "scale"]),
     (
         "scenario",
         &[
@@ -277,6 +284,7 @@ impl LaunchOptions {
             // A simulated pipe needs per-client links on the other end.
             o.network = true;
         }
+        o.attack = AttackConfig::from_cfg(cfg)?;
 
         o.partition = match cfg.str_or("data", "partition", "dirichlet").as_str() {
             "iid" => PartitionScheme::Iid,
@@ -591,6 +599,33 @@ profiles = ["gtx-1060", "budget-2019"]
         let w = LaunchOptions::config_warnings(&typo);
         assert!(
             w.iter().any(|m| m.contains("ingres_mbps") && m.contains("ingress_mbps")),
+            "{w:?}"
+        );
+    }
+
+    #[test]
+    fn from_cfg_parses_attack_section() {
+        let cfg = Cfg::parse(
+            "[federation]\nrounds = 2\n\n[attack]\npreset = \"sign-flip\"\nfraction = 0.3",
+        )
+        .unwrap();
+        let o = LaunchOptions::from_cfg(&cfg).unwrap();
+        let a = o.attack.expect("attack parsed");
+        assert_eq!(a.model, "sign-flip");
+        assert_eq!(a.fraction, 0.3);
+        // Disabled or absent sections leave the federation honest.
+        let off = Cfg::parse("[attack]\nenabled = false").unwrap();
+        assert!(LaunchOptions::from_cfg(&off).unwrap().attack.is_none());
+        let none = Cfg::parse("[federation]\nrounds = 2").unwrap();
+        assert!(LaunchOptions::from_cfg(&none).unwrap().attack.is_none());
+        // Schema knows the section: no unknown-key warnings...
+        let clean = Cfg::parse("[attack]\nmodel = \"gauss\"\nscale = 2.0").unwrap();
+        assert!(LaunchOptions::config_warnings(&clean).is_empty());
+        // ...and typos still warn.
+        let typo = Cfg::parse("[attack]\nfractoin = 0.2").unwrap();
+        let w = LaunchOptions::config_warnings(&typo);
+        assert!(
+            w.iter().any(|m| m.contains("fractoin") && m.contains("fraction")),
             "{w:?}"
         );
     }

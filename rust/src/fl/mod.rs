@@ -7,6 +7,7 @@
 //! `ServerApp` composition keep working as compatibility shims
 //! (DESIGN.md §10).
 
+pub mod attack;
 pub mod bouquet;
 pub mod campaign;
 pub mod client;
@@ -21,6 +22,7 @@ pub mod scenario;
 pub mod server;
 pub mod strategy;
 
+pub use attack::{Attack, AttackConfig, AttackCtx, AttackKind, AttackModel, ATTACK_PRESETS};
 pub use bouquet::BouquetContext;
 pub use campaign::{Campaign, CampaignCell, CampaignReport, CellOutcome};
 pub use client::{ClientApp, ClientId, FitConfig, FitResult, SimClient, TrainClient};

@@ -36,6 +36,7 @@ use crate::sched::{
     ExecutorFactory, FitTask, ReorderBuffer, Schedule, Scheduler, Trace, WorkerPool,
 };
 
+use super::attack::Attack;
 use super::bouquet::BouquetContext;
 use super::client::{ClientApp, ClientId, FitConfig, FitResult};
 use super::clientmgr::{ClientManager, RoundLedger, Selection};
@@ -198,6 +199,9 @@ pub struct ServerApp {
     /// keeps the closed-form `round_comm_s` fast path bit-identical to
     /// the pre-netsim engine.
     netsim: Option<NetSim>,
+    /// Seeded adversarial-client model (DESIGN.md §13); `None` keeps the
+    /// engine bit-identical to the unattacked code path.
+    attack: Option<Attack>,
     /// User subscribers to the typed event stream (`fl::events`).
     observers: Vec<Box<dyn FlObserver>>,
     /// Recycled parameter buffers shared by client fits and the
@@ -273,6 +277,7 @@ impl ServerApp {
             dynamics: None,
             scenario: None,
             netsim: None,
+            attack: None,
             observers: Vec::new(),
             scratch: ParamScratch::default(),
             trace: Trace::default(),
@@ -349,6 +354,17 @@ impl ServerApp {
     /// bit-identical to the pre-netsim code path.
     pub fn with_netsim(mut self, netsim: NetSim) -> Self {
         self.netsim = Some(netsim);
+        self
+    }
+
+    /// Attach a seeded adversarial-client model (DESIGN.md §13):
+    /// membership is a pure function of `(seed, client)`, and each
+    /// compromised client's kept update is perturbed at the aggregation
+    /// seam — after the netsim codec decodes it, immediately before the
+    /// accumulator fold.  With `fraction = 0` (or without this call) the
+    /// engine is bit-identical to the unattacked code path.
+    pub fn with_attack(mut self, attack: Attack) -> Self {
+        self.attack = Some(attack);
         self
     }
 
@@ -521,6 +537,11 @@ impl ServerApp {
                 &mut self.observers,
                 FlEvent::RoundBegin { round, selected },
             );
+            // Arm the attack for this round: snapshot the pre-round global
+            // (models perturb relative to it) and clear the injected list.
+            if let Some(atk) = self.attack.as_mut() {
+                atk.begin_round(round, global.as_slice());
+            }
 
             // --- fit phase: stream completions into the accumulator ------
             let mut ledger =
@@ -557,6 +578,7 @@ impl ServerApp {
                     &mut acc,
                     &mut dyn_gate,
                     &mut netsim_round,
+                    &mut self.attack,
                 )?,
                 None => round_inline(
                     &mut self.roster,
@@ -571,6 +593,7 @@ impl ServerApp {
                     &mut acc,
                     &mut dyn_gate,
                     &mut netsim_round,
+                    &mut self.attack,
                     &self.scratch,
                 )?,
             }
@@ -633,6 +656,21 @@ impl ServerApp {
                 "per-client event merge skipped entries: the selection-order \
                  invariant on ledger.durations/failures was violated"
             );
+
+            // Compromised-client classification: one `AttackInjected` per
+            // perturbed update, in fold (= selection) order.
+            if let Some(atk) = self.attack.as_ref() {
+                let model = atk.model_name();
+                let injected: Vec<u32> = atk.injected().to_vec();
+                for client in injected {
+                    notify(
+                        recorder,
+                        tracer,
+                        &mut self.observers,
+                        FlEvent::AttackInjected { round, client, model },
+                    );
+                }
+            }
 
             if ledger.successes() == 0 {
                 // An empty round the *gate* caused (dropouts/deadline) is
@@ -714,6 +752,15 @@ impl ServerApp {
                 &mut self.observers,
                 FlEvent::Aggregated { round, survivors: ledger.successes() },
             );
+            // Adaptive attackers key off the (deterministic) event stream:
+            // the engine feeds the model the aggregation and evaluation
+            // signals it may condition the next round's perturbation on.
+            if let Some(atk) = self.attack.as_mut() {
+                atk.observe(&FlEvent::Aggregated {
+                    round,
+                    survivors: ledger.successes(),
+                });
+            }
 
             // --- evaluate -------------------------------------------------
             let (eval_loss, eval_accuracy) = if self.cfg.eval_every > 0
@@ -730,6 +777,13 @@ impl ServerApp {
                             &mut self.observers,
                             FlEvent::Evaluated { round, loss: l, accuracy: a },
                         );
+                        if let Some(atk) = self.attack.as_mut() {
+                            atk.observe(&FlEvent::Evaluated {
+                                round,
+                                loss: l,
+                                accuracy: a,
+                            });
+                        }
                         (Some(l), Some(a))
                     }
                     None => (None, None),
@@ -877,6 +931,11 @@ impl ServerApp {
             match verdict {
                 GateVerdict::Keep { .. } => {
                     ns.codec_apply(result.params.as_mut_slice());
+                    // The attack seam: after codec decode, immediately
+                    // before the fold (DESIGN.md §13).
+                    if let Some(atk) = self.attack.as_mut() {
+                        atk.apply(client, result.params.as_mut_slice());
+                    }
                     if !gated {
                         spans.push((client, 0.0, end));
                     }
@@ -1014,6 +1073,7 @@ fn round_inline(
     acc: &mut Box<dyn AggAccumulator>,
     dyn_gate: &mut DynGate<'_>,
     netsim: &mut Option<NetsimRound>,
+    attack: &mut Option<Attack>,
     scratch: &ParamScratch,
 ) -> Result<(), FlError> {
     for (pos, &ci) in selected.iter().enumerate() {
@@ -1031,7 +1091,9 @@ fn round_inline(
         };
         roster.checkin(ci, client);
         match fit_result {
-            Ok(result) => fold_gated(ledger, acc, dyn_gate, netsim, pos, ci, result)?,
+            Ok(result) => {
+                fold_gated(ledger, acc, dyn_gate, netsim, attack, pos, ci, result)?
+            }
             Err(e @ EmuError::GpuOom { .. }) | Err(e @ EmuError::HostOom { .. }) => {
                 // The paper's OOM story: the framework survives a
                 // failing client; it simply contributes no update.
@@ -1063,6 +1125,7 @@ fn round_pooled(
     acc: &mut Box<dyn AggAccumulator>,
     dyn_gate: &mut DynGate<'_>,
     netsim: &mut Option<NetsimRound>,
+    attack: &mut Option<Attack>,
 ) -> Result<(), FlError> {
     let shared = Arc::new(global.clone());
     for (pos, &ci) in selected.iter().enumerate() {
@@ -1108,6 +1171,7 @@ fn round_pooled(
                         acc,
                         dyn_gate,
                         netsim,
+                        attack,
                         slim.index,
                         selected[slim.index],
                         result,
@@ -1171,26 +1235,37 @@ fn late_reason(would_end_s: f64, deadline_s: f64) -> String {
 /// order — the reorder buffer guarantees the feed order on any engine)
 /// and `ServerApp::finish_netsim_round` gates and folds once the shared
 /// timeline is solvable.
+#[allow(clippy::too_many_arguments)]
 fn fold_gated(
     ledger: &mut RoundLedger,
     acc: &mut Box<dyn AggAccumulator>,
     dyn_gate: &mut DynGate<'_>,
     netsim: &mut Option<NetsimRound>,
+    attack: &mut Option<Attack>,
     pos: usize,
     roster_idx: usize,
-    result: FitResult,
+    mut result: FitResult,
 ) -> Result<(), FlError> {
     if let Some(nr) = netsim {
+        // Attack injection is deferred with the fold: the codec decodes
+        // the buffered update first, then `finish_netsim_round` perturbs
+        // and folds it.
         nr.buffered.push((pos, result));
         return Ok(());
     }
     let (dynamics, gate) = match dyn_gate {
         Some((d, g)) => (d, g),
-        None => return fold(ledger, acc, result),
+        None => {
+            inject(attack, &mut result);
+            return fold(ledger, acc, result);
+        }
     };
     let dur_s = result.emu.emu_total_s + result.comm_s;
     match dynamics.admit(gate, roster_idx, result.client, dur_s) {
-        GateVerdict::Keep { .. } => fold(ledger, acc, result),
+        GateVerdict::Keep { .. } => {
+            inject(attack, &mut result);
+            fold(ledger, acc, result)
+        }
         GateVerdict::Dropout { offline_at_s } => {
             ledger.record_failure(result.client, dropout_reason(offline_at_s));
             Ok(())
@@ -1202,6 +1277,17 @@ fn fold_gated(
             );
             Ok(())
         }
+    }
+}
+
+/// The attack seam for the non-netsim paths: perturb a *kept* update in
+/// place iff its client is compromised, immediately before the
+/// accumulator fold (DESIGN.md §13).  Gate-rejected updates never get
+/// here — an attacker that drops out or misses the deadline injects
+/// nothing, exactly like an honest client contributes nothing.
+fn inject(attack: &mut Option<Attack>, result: &mut FitResult) {
+    if let Some(atk) = attack {
+        atk.apply(result.client, result.params.as_mut_slice());
     }
 }
 

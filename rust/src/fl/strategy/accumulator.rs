@@ -343,6 +343,78 @@ mod tests {
     }
 
     #[test]
+    fn cohort_shrinking_below_min_clients_degrades_to_the_most_central_update() {
+        use crate::fl::strategy::{Krum, Strategy, TrimmedMean};
+        // 7 selected, but dropouts/deadline cut the round to 3 survivors —
+        // below Krum::new(1, 1)'s min_clients of 5.  The buffer hands over
+        // exactly the survivors and the robust estimators degrade to their
+        // documented fallbacks instead of erroring: Krum picks the single
+        // most central update, trimmed-mean clamps the trim to what the
+        // survivors seat.
+        let mut buf = BoundedBuffer::new(7);
+        buf.push(result(0, vec![1.0, 1.0, 1.0], 10)).unwrap();
+        buf.push(result(2, vec![1.01, 1.0, 0.99], 10)).unwrap();
+        buf.push(result(5, vec![40.0, -40.0, 40.0], 10)).unwrap(); // Byzantine survivor
+        assert_eq!(buf.len(), 3);
+        let survivors = match Box::new(buf).finish().unwrap() {
+            AccOutput::Buffered(rs) => rs,
+            AccOutput::Mean(_) => panic!("bounded buffer must emit Buffered"),
+        };
+        let global = ParamVector::zeros(3);
+
+        let mut krum = Krum::new(1, 1);
+        assert!(krum.min_clients() > survivors.len());
+        let k = krum.aggregate(&global, &survivors, None).unwrap();
+        for x in k.as_slice() {
+            assert!(x.abs() < 2.0, "Krum fallback folded the outlier: {x}");
+        }
+
+        let mut tm = TrimmedMean::new(2); // wants 2·2+1 = 5; clamps to trim 1
+        let t = tm.aggregate(&global, &survivors, None).unwrap();
+        for x in t.as_slice() {
+            assert!(x.abs() < 2.0, "clamped trim folded the outlier: {x}");
+        }
+    }
+
+    #[test]
+    fn gate_filtered_clients_do_not_count_toward_the_byzantine_bound() {
+        use crate::fl::strategy::{Krum, Strategy};
+        // 9 selected with 2 colluding Byzantine clients; the gate filters 4
+        // honest clients mid-round (dropout/deadline), so their results are
+        // never pushed.  The Byzantine bound must be evaluated on the 5
+        // *kept* updates — not the 9 selected — and the filtered clients
+        // must leave no residue in the scores: Krum over the survivors is
+        // identical to Krum over the same 5 results built in isolation.
+        let honest = |c: u32| result(c, vec![1.0, 1.0], 10);
+        let byzantine = |c: u32| result(c, vec![60.0, -60.0], 10);
+        let mut buf = BoundedBuffer::new(9); // capacity sized to the selection
+        for r in [honest(0), byzantine(3), honest(4), honest(6), byzantine(8)] {
+            buf.push(r).unwrap(); // clients 1, 2, 5, 7 were gate-filtered
+        }
+        assert_eq!(buf.len(), 5, "only kept updates may count");
+        assert_eq!(buf.buffered_updates(), 5);
+        let survivors = match Box::new(buf).finish().unwrap() {
+            AccOutput::Buffered(rs) => rs,
+            AccOutput::Mean(_) => panic!("bounded buffer must emit Buffered"),
+        };
+
+        let global = ParamVector::zeros(2);
+        let mut krum = Krum::new(1, 1); // 5 survivors = 2f + 3: bound holds
+        assert_eq!(krum.byzantine_tolerance(survivors.len()), Some(1));
+        let out = krum.aggregate(&global, &survivors, None).unwrap();
+        // The honest cluster (3 coincident updates) outvotes the colluding
+        // pair even though the *selection* lost 4 honest members.
+        assert_eq!(out.as_slice(), [1.0, 1.0]);
+
+        let isolated: Vec<FitResult> =
+            vec![honest(0), byzantine(3), honest(4), honest(6), byzantine(8)];
+        let again = Krum::new(1, 1).aggregate(&global, &isolated, None).unwrap();
+        for (a, b) in out.as_slice().iter().zip(again.as_slice()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "filtered clients left residue");
+        }
+    }
+
+    #[test]
     fn bounded_buffer_enforces_fan_in() {
         let mut buf = BoundedBuffer::new(2);
         buf.push(result(0, vec![1.0], 1)).unwrap();

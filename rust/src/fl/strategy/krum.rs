@@ -61,6 +61,12 @@ impl Strategy for Krum {
         2 * self.f + 3
     }
 
+    /// Tolerates up to `f` Byzantine participants, capped by what `n`
+    /// seats under `n > 2f + 2` — i.e. `(n - 3) / 2`.
+    fn byzantine_tolerance(&self, n: usize) -> Option<usize> {
+        Some(self.f.min(n.saturating_sub(3) / 2))
+    }
+
     fn aggregate(
         &mut self,
         _global: &ParamVector,

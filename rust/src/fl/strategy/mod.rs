@@ -119,6 +119,16 @@ pub trait Strategy {
         1
     }
 
+    /// How many Byzantine participants out of `n` this strategy provably
+    /// tolerates; `None` means it offers no robustness guarantee at all
+    /// (the mean family — any attacker fraction is "allowed" because
+    /// nothing is promised).  `ExperimentBuilder::build` checks the
+    /// configured attacker fraction against this bound in strict mode
+    /// (DESIGN.md §13).
+    fn byzantine_tolerance(&self, _n: usize) -> Option<usize> {
+        None
+    }
+
     /// Per-round fit configuration (e.g. FedProx sets `prox_mu`).
     fn configure(&self, round: u32, base: &FitConfig) -> FitConfig {
         FitConfig { round, ..base.clone() }

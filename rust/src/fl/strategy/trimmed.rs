@@ -35,6 +35,12 @@ impl Strategy for TrimmedMean {
         2 * self.trim + 1
     }
 
+    /// Each tail trim absorbs one outlier: up to `trim` Byzantine values
+    /// per coordinate, capped by what `n` seats under `n > 2·trim`.
+    fn byzantine_tolerance(&self, n: usize) -> Option<usize> {
+        Some(self.trim.min(n.saturating_sub(1) / 2))
+    }
+
     fn aggregate(
         &mut self,
         _global: &ParamVector,

@@ -16,6 +16,7 @@ use anyhow::{bail, Result};
 use bouquetfl::analysis::{claims, fig2, report};
 use bouquetfl::data::PartitionScheme;
 use bouquetfl::emu::EmulationMode;
+use bouquetfl::fl::attack::{self, AttackConfig, ATTACK_PRESETS};
 use bouquetfl::fl::launcher::{launch, HardwareSource, LaunchOptions};
 use bouquetfl::fl::{strategy, Scenario, Selection, MODEL_KINDS, SCENARIO_PRESETS};
 use bouquetfl::hardware::profile::PRESET_NAMES;
@@ -126,6 +127,13 @@ fn cmd_list(raw: &[String]) -> Result<()> {
         let cfg = NetSimConfig::preset(name).expect("preset exists");
         println!("  {:<16} {}", name, cfg.describe());
     }
+    println!("\nattack models (--attack / [attack] model, DESIGN.md §13):");
+    for name in attack::names() {
+        match AttackConfig::preset(&name) {
+            Some(cfg) => println!("  {:<16} preset: {}", name, cfg.describe()),
+            None => println!("  {name}"),
+        }
+    }
     println!("\nhardware profile presets (--profiles, see also list-hw):");
     for &name in PRESET_NAMES {
         println!("  {}", preset(name)?.describe());
@@ -151,6 +159,7 @@ fn run_specs() -> Vec<OptSpec> {
         OptSpec { name: "scenario", help: "federation dynamics: stable|diurnal-mobile|high-churn or a .toml/.json scenario file (see SCENARIOS.md)", takes_value: true, default: None },
         OptSpec { name: "network", help: "attach network-latency profiles", takes_value: false, default: None },
         OptSpec { name: "netsim", help: "contention-aware comm simulation: uncapped|congested-cell preset (implies --network; DESIGN.md §12)", takes_value: true, default: None },
+        OptSpec { name: "attack", help: "adversarial participants: sign-flip|gauss|scaled|label-flip|backdoor|colluding|adaptive preset (`bouquetfl list` prints them; DESIGN.md §13)", takes_value: true, default: None },
         OptSpec { name: "profiles", help: "comma-separated preset/GPU names (manual hardware)", takes_value: true, default: None },
         OptSpec { name: "history-out", help: "write round history JSON here", takes_value: true, default: None },
         OptSpec { name: "trace-out", help: "write Chrome-trace JSON of client fits here", takes_value: true, default: None },
@@ -209,6 +218,14 @@ fn cmd_run(raw: &[String]) -> Result<()> {
             )
         })?);
     }
+    if let Some(preset) = args.get("attack") {
+        opts.attack = Some(AttackConfig::preset(preset).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown attack preset '{preset}' ({})",
+                ATTACK_PRESETS.join("|")
+            )
+        })?);
+    }
 
     println!("host: {}", opts.host.describe());
     println!(
@@ -221,6 +238,9 @@ fn cmd_run(raw: &[String]) -> Result<()> {
     }
     if let Some(ns) = &opts.netsim {
         println!("netsim: {}", ns.describe());
+    }
+    if let Some(a) = &opts.attack {
+        println!("attack: {}", a.describe());
     }
     let outcome = launch(&opts)?;
 

@@ -1,0 +1,371 @@
+//! Attack-vs-defense property suite (DESIGN.md §13) — the adversarial
+//! robustness lab's headline claims:
+//!
+//! (a) Krum and trimmed-mean converge under sign-flip / scaled attacks at
+//!     attacker fractions where plain FedAvg measurably diverges.
+//! (b) An armed attack with `fraction = 0` is bit-identical to the
+//!     unattacked engine, across every scenario preset × workers {1, 4}.
+//! (c) Attacked runs keep the determinism contract: bit-identical across
+//!     worker counts and across the materialized-vs-population engines,
+//!     including composed with netsim.
+//!
+//! The divergence tests drive a hand-assembled `ServerApp` with a custom
+//! client that takes a real optimisation step each round (the builder's
+//! `SimClient` echoes the global back, so a relative perturbation like
+//! sign-flip would be inert there); the bit-identity tests go through the
+//! full `Experiment` builder stack.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use bouquetfl::emu::{FitReport, VirtualClock};
+use bouquetfl::error::EmuError;
+use bouquetfl::fl::{
+    Attack, AttackConfig, BouquetContext, ClientApp, ClientId, Experiment, FedAvg, FitConfig,
+    FitResult, FlEvent, FlObserver, Krum, ParamVector, Selection, ServerApp, ServerConfig,
+    Strategy, TrimmedMean, SCENARIO_PRESETS,
+};
+use bouquetfl::hardware::{preset, HardwareProfile};
+use bouquetfl::sched::Sequential;
+
+const DIM: usize = 32;
+/// The honest fleet's shared optimum: every coordinate of the ideal model.
+const W_STAR: f32 = 1.0;
+
+/// A client that actually learns: each fit moves halfway from the current
+/// global toward `W_STAR` on every coordinate.  Unattacked federations
+/// therefore converge geometrically, which gives the divergence tests a
+/// real signal for relative perturbations to flip.
+struct DriftClient {
+    id: ClientId,
+    profile: HardwareProfile,
+}
+
+impl ClientApp for DriftClient {
+    fn id(&self) -> ClientId {
+        self.id
+    }
+    fn profile(&self) -> &HardwareProfile {
+        &self.profile
+    }
+    fn num_examples(&self) -> usize {
+        32
+    }
+    fn fit(
+        &mut self,
+        global: &ParamVector,
+        _cfg: &FitConfig,
+        _ctx: &mut BouquetContext<'_>,
+    ) -> Result<FitResult, EmuError> {
+        let mut params = global.clone();
+        for x in params.as_mut_slice() {
+            *x += 0.5 * (W_STAR - *x);
+        }
+        Ok(FitResult {
+            client: self.id,
+            params,
+            num_examples: 32,
+            mean_loss: 1.0,
+            emu: FitReport::synthetic(1, 32, 0.25),
+            comm_s: 0.0,
+        })
+    }
+}
+
+/// Count `AttackInjected` events from the engine's typed stream.
+struct InjectionCounter(Arc<AtomicUsize>);
+
+impl FlObserver for InjectionCounter {
+    fn on_event(&mut self, event: &FlEvent<'_>) {
+        if let FlEvent::AttackInjected { .. } = event {
+            self.0.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Attacker membership is pure in `(seed, client)`, so the tests can pick
+/// a seed that compromises exactly `want` of the first `n` clients —
+/// deterministic, and independent of which defense runs on top.
+fn seed_with_attackers(cfg: &AttackConfig, n: u64, want: usize) -> u64 {
+    (0..10_000u64)
+        .find(|&s| {
+            let a = Attack::resolve(cfg, s).expect("valid attack config");
+            (0..n).filter(|&i| a.is_attacker(i)).count() == want
+        })
+        .expect("some seed compromises exactly `want` clients")
+}
+
+/// Run `rounds` of a 10-client static federation from an all-zeros global
+/// under `strategy`, optionally attacked; returns the final global and the
+/// number of `AttackInjected` events observed.
+fn run_defended(
+    strategy: Box<dyn Strategy>,
+    attack: Option<&AttackConfig>,
+    seed: u64,
+    rounds: u32,
+) -> (ParamVector, usize) {
+    let clients: Vec<Box<dyn ClientApp>> = (0..10)
+        .map(|i| {
+            Box::new(DriftClient {
+                id: i as ClientId,
+                profile: preset("budget-2019").expect("preset exists"),
+            }) as Box<dyn ClientApp>
+        })
+        .collect();
+    let cfg = ServerConfig {
+        rounds,
+        selection: Selection::All,
+        fit: FitConfig::default(),
+        eval_every: 0,
+        seed,
+        fail_on_empty_round: true,
+    };
+    let injections = Arc::new(AtomicUsize::new(0));
+    let mut server = ServerApp::new(
+        cfg,
+        HardwareProfile::paper_host(),
+        strategy,
+        Box::new(Sequential),
+        clients,
+    )
+    .with_observer(Box::new(InjectionCounter(Arc::clone(&injections))));
+    if let Some(a) = attack {
+        server = server.with_attack(Attack::resolve(a, seed).expect("valid attack config"));
+    }
+    let mut clock = VirtualClock::fast_forward();
+    let (global, history) = server
+        .run_from(ParamVector::zeros(DIM), None, &mut clock)
+        .expect("federation runs");
+    assert_eq!(history.rounds.len(), rounds as usize);
+    (global, injections.load(Ordering::Relaxed))
+}
+
+/// Euclidean distance of `v` from the constant-`t` vector.
+fn dist_from(v: &ParamVector, t: f32) -> f64 {
+    v.as_slice()
+        .iter()
+        .map(|&x| ((x - t) as f64).powi(2))
+        .sum::<f64>()
+        .sqrt()
+}
+
+#[test]
+fn defenses_converge_under_sign_flip_where_fedavg_diverges() {
+    // (a), sign-flip: 2 of 10 clients flip (and rescale x10) their update
+    // around the round-start global.  The honest fixed point is W_STAR;
+    // FedAvg's mean picks up a net repulsive term and blows up
+    // geometrically, while Krum and trimmed-mean discard the flipped
+    // updates and keep the honest contraction.
+    let cfg = AttackConfig { model: "sign-flip".into(), fraction: 0.2, scale: 10.0 };
+    let seed = seed_with_attackers(&cfg, 10, 2);
+    let rounds = 8;
+
+    let (honest, honest_inj) = run_defended(Box::new(FedAvg), None, seed, rounds);
+    assert_eq!(honest_inj, 0);
+    let baseline = dist_from(&honest, W_STAR);
+    assert!(baseline < 0.1, "unattacked FedAvg must converge: {baseline}");
+
+    let (avg, avg_inj) = run_defended(Box::new(FedAvg), Some(&cfg), seed, rounds);
+    // Every round injects exactly the 2 compromised clients, and the event
+    // stream reports each injection.
+    assert_eq!(avg_inj, 2 * rounds as usize);
+    let diverged = dist_from(&avg, W_STAR);
+    assert!(
+        diverged > (DIM as f64).sqrt(),
+        "attacked FedAvg must end farther from the optimum than it started: {diverged}"
+    );
+
+    let (krum, krum_inj) = run_defended(Box::new(Krum::new(2, 1)), Some(&cfg), seed, rounds);
+    assert_eq!(krum_inj, 2 * rounds as usize);
+    let defended = dist_from(&krum, W_STAR);
+    assert!(defended < 0.1, "Krum must converge under sign-flip: {defended}");
+
+    let (tm, _) = run_defended(Box::new(TrimmedMean::new(2)), Some(&cfg), seed, rounds);
+    let trimmed = dist_from(&tm, W_STAR);
+    assert!(trimmed < 0.1, "trimmed-mean must converge under sign-flip: {trimmed}");
+}
+
+#[test]
+fn defenses_converge_under_model_replacement_where_fedavg_is_hijacked() {
+    // (a), scaled / model replacement: the same 2 compromised clients
+    // submit `global + 10 * (target - global)` for a run-scoped random
+    // target.  The boost overshoots the mean every round (|1 - 10 * 0.2| >
+    // 1 around the induced fixed point), so FedAvg never settles at
+    // W_STAR; the robust strategies never fold the replacement in.
+    let cfg = AttackConfig::preset("scaled").expect("preset exists");
+    assert_eq!(cfg.fraction, 0.2);
+    let seed = seed_with_attackers(&cfg, 10, 2);
+    let rounds = 8;
+
+    let (avg, _) = run_defended(Box::new(FedAvg), Some(&cfg), seed, rounds);
+    let hijacked = dist_from(&avg, W_STAR);
+    assert!(
+        hijacked > 1.0,
+        "scaled attack must pull FedAvg off the optimum: {hijacked}"
+    );
+
+    let (krum, _) = run_defended(Box::new(Krum::new(2, 1)), Some(&cfg), seed, rounds);
+    let defended = dist_from(&krum, W_STAR);
+    assert!(defended < 0.1, "Krum must converge under replacement: {defended}");
+
+    let (tm, _) = run_defended(Box::new(TrimmedMean::new(2)), Some(&cfg), seed, rounds);
+    let trimmed = dist_from(&tm, W_STAR);
+    assert!(trimmed < 0.1, "trimmed-mean must converge under replacement: {trimmed}");
+}
+
+/// Assert two experiment reports are bit-identical in everything the
+/// determinism contract covers: final global, per-round history, and the
+/// emulated schedule trace.
+fn assert_bit_identical(
+    a: &bouquetfl::fl::ExperimentReport,
+    b: &bouquetfl::fl::ExperimentReport,
+    label: &str,
+) {
+    assert_eq!(a.global.len(), b.global.len(), "{label}");
+    for (x, y) in a.global.as_slice().iter().zip(b.global.as_slice()) {
+        assert_eq!(x.to_bits(), y.to_bits(), "{label}: aggregate diverged");
+    }
+    assert_eq!(a.history.rounds.len(), b.history.rounds.len(), "{label}");
+    for (r1, r2) in a.history.rounds.iter().zip(&b.history.rounds) {
+        assert_eq!(r1.selected, r2.selected, "{label}: round {}", r1.round);
+        assert_eq!(
+            r1.train_loss.to_bits(),
+            r2.train_loss.to_bits(),
+            "{label}: round {}",
+            r1.round
+        );
+        assert_eq!(
+            r1.emu_round_s.to_bits(),
+            r2.emu_round_s.to_bits(),
+            "{label}: round {}",
+            r1.round
+        );
+        assert_eq!(r1.failures.len(), r2.failures.len(), "{label}: round {}", r1.round);
+        for (f1, f2) in r1.failures.iter().zip(&r2.failures) {
+            assert_eq!(f1.client, f2.client, "{label}");
+            assert_eq!(f1.reason, f2.reason, "{label}");
+        }
+    }
+    assert_eq!(a.trace.events, b.trace.events, "{label}: schedule diverged");
+}
+
+#[test]
+fn fraction_zero_is_bit_identical_to_the_unattacked_engine() {
+    // (b): arming the attack machinery with fraction 0 must leave every
+    // scenario preset bit-identical to a build without `.attack()`, at
+    // workers 1 and 4.
+    for &preset in SCENARIO_PRESETS {
+        for workers in [1usize, 4] {
+            let build = |armed: bool| {
+                let mut b = Experiment::builder()
+                    .clients(10)
+                    .rounds(6)
+                    .samples_per_client(40)
+                    .batch(16)
+                    .selection(Selection::Fraction(0.6))
+                    .network(true)
+                    .seed(13)
+                    .workers(workers)
+                    .scenario_named(preset)
+                    .eval_every(0)
+                    .fail_on_empty_round(false)
+                    .simulated(96);
+                if armed {
+                    b = b.attack(AttackConfig {
+                        model: "sign-flip".into(),
+                        fraction: 0.0,
+                        scale: 1.0,
+                    });
+                }
+                b.build().expect("experiment builds")
+            };
+            let label = format!("{preset}/workers={workers}");
+            let off = build(false).run().expect("unattacked run");
+            let armed = build(true).run().expect("fraction-zero run");
+            assert_bit_identical(&off, &armed, &label);
+        }
+    }
+}
+
+#[test]
+fn attacked_runs_are_bit_identical_across_workers_and_engines() {
+    // (c): an attacked run is a deterministic function of the experiment
+    // seed — the same bits fall out of the sequential engine, the 4-worker
+    // pool, and the below-threshold population engine, with and without
+    // netsim composed on top.
+    for (model, scale, netsim) in
+        [("gauss", 1.5, false), ("scaled", 10.0, false), ("gauss", 1.5, true)]
+    {
+        let cfg = AttackConfig { model: model.into(), fraction: 0.5, scale };
+        let build = |workers: usize, population: bool| {
+            let mut b = Experiment::builder()
+                .clients(10)
+                .rounds(5)
+                .samples_per_client(40)
+                .batch(16)
+                .selection(Selection::Fraction(0.6))
+                .network(true)
+                .seed(21)
+                .workers(workers)
+                .scenario_named("high-churn")
+                .eval_every(0)
+                .fail_on_empty_round(false)
+                .attack(cfg.clone())
+                .simulated(96);
+            if population {
+                b = b.population(10);
+            }
+            if netsim {
+                b = b.netsim_named("congested-cell");
+            }
+            b.build().expect("experiment builds")
+        };
+        let baseline = build(1, false).run().expect("sequential materialized run");
+        for (workers, population) in [(4, false), (1, true), (4, true)] {
+            let label =
+                format!("{model}/netsim={netsim}/workers={workers}/population={population}");
+            let other = build(workers, population).run().expect("attacked run");
+            assert_bit_identical(&baseline, &other, &label);
+        }
+    }
+}
+
+#[test]
+fn an_armed_attack_changes_the_aggregate_and_reports_injections() {
+    // Sanity for everything above: with a seed that provably compromises
+    // clients, the builder-stack attack actually perturbs the aggregate,
+    // and every fold of a compromised update surfaces as AttackInjected.
+    let cfg = AttackConfig { model: "gauss".into(), fraction: 0.5, scale: 2.0 };
+    let seed = seed_with_attackers(&cfg, 10, 5);
+    let rounds = 4u32;
+    let injections = Arc::new(AtomicUsize::new(0));
+    let build = |armed: bool| {
+        let mut b = Experiment::builder()
+            .clients(10)
+            .rounds(rounds)
+            .samples_per_client(40)
+            .batch(16)
+            .selection(Selection::All)
+            .seed(seed)
+            .eval_every(0)
+            .simulated(64);
+        if armed {
+            b = b
+                .attack(cfg.clone())
+                .observer(Box::new(InjectionCounter(Arc::clone(&injections))));
+        }
+        b.build().expect("experiment builds")
+    };
+    let off = build(false).run().expect("unattacked run");
+    let on = build(true).run().expect("attacked run");
+    assert!(
+        off.global
+            .as_slice()
+            .iter()
+            .zip(on.global.as_slice())
+            .any(|(x, y)| x.to_bits() != y.to_bits()),
+        "an armed gauss attack must change the aggregate"
+    );
+    // Selection::All folds all 5 compromised clients every round.
+    assert_eq!(injections.load(Ordering::Relaxed), 5 * rounds as usize);
+}
