@@ -1,0 +1,72 @@
+//! Crash-recovery driver for the CI smoke job (DESIGN.md §14).
+//!
+//! First invocation records a durable campaign into the given directory;
+//! a later invocation on the same directory (its `cursor` file survives)
+//! resumes it.  The CI job SIGKILLs a paced first run mid-campaign, then
+//! reruns the binary to finish the sweep, runs a never-interrupted
+//! campaign into a second directory, and asserts the two `cells.jsonl`
+//! files are byte-identical.
+//!
+//! Usage: `resume_campaign [dir] [pace]`
+//!
+//! `pace` > 0 slows the emulated clock to `pace` host-seconds per
+//! emulated second (`ClockMode::Realtime`) so an external SIGKILL
+//! reliably lands mid-campaign; 0 (the default) fast-forwards.  Pacing
+//! changes no emulated observable, so paced, resumed, and fast runs all
+//! produce the same rows.
+
+use bouquetfl::fl::launcher::{HardwareSource, LaunchOptions};
+use bouquetfl::fl::{Campaign, Scenario, Selection};
+
+fn crash_recovery_campaign(pace: f64) -> Campaign {
+    let base = LaunchOptions {
+        clients: 24,
+        rounds: 8,
+        seed: 11,
+        eval_every: 0,
+        fail_on_empty_round: false,
+        selection: Selection::Count(12),
+        hardware: HardwareSource::Manual(vec![
+            "gtx-1060".into(),
+            "rtx-3060".into(),
+            "gtx-1650".into(),
+        ]),
+        pacing: (pace > 0.0).then_some(pace),
+        ..Default::default()
+    };
+    Campaign::new("crash-recovery-demo", base)
+        .seeds(&[1, 2, 3])
+        .strategies(&["fedavg", "fedavgm"])
+        .scenarios(&[
+            Scenario::preset("diurnal-mobile").expect("preset"),
+            Scenario::preset("high-churn").expect("preset"),
+        ])
+        .simulated(256)
+}
+
+fn main() {
+    let mut args = std::env::args().skip(1);
+    let dir = args.next().unwrap_or_else(|| "bouquetfl-campaign".to_string());
+    let pace: f64 = args
+        .next()
+        .map(|s| s.parse().expect("pace must be a number"))
+        .unwrap_or(0.0);
+
+    let campaign = crash_recovery_campaign(pace);
+    let resuming = std::path::Path::new(&dir).join("cursor").exists();
+    let report = if resuming {
+        println!("resuming the campaign recorded in {dir}");
+        campaign.resume_from(&dir)
+    } else {
+        println!("recording a fresh campaign into {dir} (pace {pace})");
+        campaign.run_durable(&dir)
+    }
+    .unwrap_or_else(|e| panic!("campaign in {dir}: {e}"));
+
+    println!(
+        "{} {} cell(s), {} succeeded",
+        if resuming { "resumed" } else { "recorded" },
+        report.cells.len(),
+        report.succeeded()
+    );
+}

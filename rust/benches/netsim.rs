@@ -45,6 +45,7 @@ fn run(netsim: Option<NetSimConfig>) -> (ExperimentReport, f64) {
 }
 
 fn main() {
+    let mut rows: Vec<Json> = Vec::new();
     section("engine throughput: contention off vs on (rounds/s, host)");
     let cases: Vec<(&str, Option<NetSimConfig>)> = vec![
         ("netsim off (closed form)", None),
@@ -79,17 +80,15 @@ fn main() {
             fnum(mean_round_s, 2),
             report.failures().to_string(),
         ]);
-        println!(
-            "{}",
-            Json::obj(vec![
-                ("bench", Json::str("netsim_throughput")),
-                ("case", Json::str(name)),
-                ("rounds_per_s", Json::num(rounds_per_s)),
-                ("mean_emu_round_s", Json::num(mean_round_s)),
-                ("failures", Json::num(report.failures() as f64)),
-            ])
-            .dump()
-        );
+        let row = Json::obj(vec![
+            ("bench", Json::str("netsim_throughput")),
+            ("case", Json::str(name)),
+            ("rounds_per_s", Json::num(rounds_per_s)),
+            ("mean_emu_round_s", Json::num(mean_round_s)),
+            ("failures", Json::num(report.failures() as f64)),
+        ]);
+        println!("{}", row.dump());
+        rows.push(row);
     }
     println!("{}", table.render());
     println!(
@@ -130,21 +129,28 @@ fn main() {
             format!("{:.1}x", payload as f64 / wire.max(1) as f64),
             format!("{rel:.2e}"),
         ]);
-        println!(
-            "{}",
-            Json::obj(vec![
-                ("bench", Json::str("netsim_codec")),
-                ("codec", Json::str(name.clone())),
-                ("payload_bytes", Json::num(payload as f64)),
-                ("wire_bytes", Json::num(wire as f64)),
-                ("rel_l2_error", Json::num(rel)),
-            ])
-            .dump()
-        );
+        let row = Json::obj(vec![
+            ("bench", Json::str("netsim_codec")),
+            ("codec", Json::str(name.clone())),
+            ("payload_bytes", Json::num(payload as f64)),
+            ("wire_bytes", Json::num(wire as f64)),
+            ("rel_l2_error", Json::num(rel)),
+        ]);
+        println!("{}", row.dump());
+        rows.push(row);
     }
     println!("{}", table.render());
     println!(
         "codecs trade wire bytes against a deterministic accuracy perturbation \
          applied to kept updates before aggregation (DESIGN.md §12)."
     );
+
+    // BENCH_netsim.json at the repo root is regenerated by this bench and
+    // schema-diffed in CI: a row whose key set drifts from the committed
+    // artifact fails the build.
+    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_netsim.json");
+    match std::fs::write(out, Json::Arr(rows).pretty() + "\n") {
+        Ok(()) => println!("\nwrote {out}"),
+        Err(e) => println!("\ncould not write {out}: {e}"),
+    }
 }

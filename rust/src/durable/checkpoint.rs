@@ -1,0 +1,220 @@
+//! Incremental server-state checkpoints (DESIGN.md §14).
+//!
+//! A [`Checkpoint`] is everything the round loop needs to continue a run
+//! bit-identically from a round boundary: the next round index, the event
+//! log's flushed length at that instant, the scenario clock, the selection
+//! RNG, the global model, and the opaque cross-round state blobs of the
+//! strategy and attack controller.  Between rounds the streaming
+//! aggregation accumulator and the dynamics round gate are provably empty
+//! (they are created and consumed inside one round), so "their contents"
+//! at a boundary are the empty state and need no bytes here.
+//!
+//! Files are written atomically (temp file + fsync + rename) and carry a
+//! whole-payload CRC-32 trailer; [`Checkpoint::decode`] returns `None` on
+//! any corruption (`tests/durable.rs` flips every byte to prove it).
+
+use std::fs::File;
+use std::io::{self, Write};
+use std::path::Path;
+
+use super::eventlog::{crc32, put_f64, put_u32, put_u64, put_u8, Cursor};
+
+/// File name of the checkpoint inside a durable run directory.
+pub const CHECKPOINT_FILE: &str = "checkpoint.bin";
+
+const CKPT_MAGIC: &[u8; 8] = b"BFLCKPT\0";
+const CKPT_VERSION: u16 = 1;
+
+/// A round-boundary snapshot of the server's cross-round state.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    /// First round the resumed loop will run (one past the last finished
+    /// round).
+    pub next_round: u32,
+    /// Flushed event-log length when the snapshot was taken; resume
+    /// truncates the log here so post-checkpoint events are replayed, not
+    /// duplicated.
+    pub log_offset: u64,
+    /// Checkpoint cadence the run was started with (restored on resume).
+    pub every_k: u32,
+    /// Emulated clock at the round boundary.
+    pub clock_s: f64,
+    /// Scenario-dynamics timeline, when a scenario is attached:
+    /// `(rounds_begun, now_s)` — the dynamics engine deterministically
+    /// re-derives its churn state by replaying that many round begins.
+    pub dynamics: Option<(u64, f64)>,
+    /// Client-manager selection RNG `(state, inc)`.
+    pub manager_rng: (u64, u64),
+    /// The global model at the boundary.
+    pub global: Vec<f32>,
+    /// Opaque `Strategy::state_blob` bytes (momentum, Adam moments, ...).
+    pub strategy_blob: Vec<u8>,
+    /// Opaque `Attack::state_blob` bytes (adaptive boost, ...); empty when
+    /// no attack is configured.
+    pub attack_blob: Vec<u8>,
+}
+
+impl Checkpoint {
+    /// Encode as self-validating bytes: magic + version + payload +
+    /// CRC-32 trailer over everything before the trailer.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(
+            64 + 4 * self.global.len() + self.strategy_blob.len() + self.attack_blob.len(),
+        );
+        out.extend_from_slice(CKPT_MAGIC);
+        out.extend_from_slice(&CKPT_VERSION.to_le_bytes());
+        put_u32(&mut out, self.next_round);
+        put_u64(&mut out, self.log_offset);
+        put_u32(&mut out, self.every_k);
+        put_f64(&mut out, self.clock_s);
+        match self.dynamics {
+            None => put_u8(&mut out, 0),
+            Some((rounds_begun, now_s)) => {
+                put_u8(&mut out, 1);
+                put_u64(&mut out, rounds_begun);
+                put_f64(&mut out, now_s);
+            }
+        }
+        put_u64(&mut out, self.manager_rng.0);
+        put_u64(&mut out, self.manager_rng.1);
+        put_u64(&mut out, self.global.len() as u64);
+        for &x in &self.global {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+        put_u64(&mut out, self.strategy_blob.len() as u64);
+        out.extend_from_slice(&self.strategy_blob);
+        put_u64(&mut out, self.attack_blob.len() as u64);
+        out.extend_from_slice(&self.attack_blob);
+        let crc = crc32(&out);
+        out.extend_from_slice(&crc.to_le_bytes());
+        out
+    }
+
+    /// Decode checkpoint bytes; `None` on any corruption (bad magic,
+    /// version, CRC, length, or trailing bytes).  Never panics.
+    pub fn decode(buf: &[u8]) -> Option<Checkpoint> {
+        let min = CKPT_MAGIC.len() + 2 + 4;
+        if buf.len() < min {
+            return None;
+        }
+        let (body, trailer) = buf.split_at(buf.len() - 4);
+        let crc = u32::from_le_bytes(trailer.try_into().unwrap());
+        if crc32(body) != crc {
+            return None;
+        }
+        if &body[..CKPT_MAGIC.len()] != CKPT_MAGIC {
+            return None;
+        }
+        let version = u16::from_le_bytes([body[8], body[9]]);
+        if version != CKPT_VERSION {
+            return None;
+        }
+        let mut c = Cursor::new(&body[10..]);
+        let next_round = c.u32()?;
+        let log_offset = c.u64()?;
+        let every_k = c.u32()?;
+        let clock_s = c.f64()?;
+        let dynamics = match c.u8()? {
+            0 => None,
+            1 => {
+                let rounds_begun = c.u64()?;
+                let now_s = c.f64()?;
+                Some((rounds_begun, now_s))
+            }
+            _ => return None,
+        };
+        let manager_rng = (c.u64()?, c.u64()?);
+        let n = c.u64()? as usize;
+        let mut global = Vec::with_capacity(n.min(buf.len() / 4 + 1));
+        for _ in 0..n {
+            global.push(c.f32()?);
+        }
+        let n_strategy = c.u64()? as usize;
+        let mut strategy_blob = Vec::with_capacity(n_strategy.min(buf.len()));
+        for _ in 0..n_strategy {
+            strategy_blob.push(c.u8()?);
+        }
+        let n_attack = c.u64()? as usize;
+        let mut attack_blob = Vec::with_capacity(n_attack.min(buf.len()));
+        for _ in 0..n_attack {
+            attack_blob.push(c.u8()?);
+        }
+        if !c.finished() {
+            return None;
+        }
+        Some(Checkpoint {
+            next_round,
+            log_offset,
+            every_k,
+            clock_s,
+            dynamics,
+            manager_rng,
+            global,
+            strategy_blob,
+            attack_blob,
+        })
+    }
+
+    /// Atomically write the checkpoint to `path`: temp file in the same
+    /// directory, fsync, rename over the old checkpoint, then fsync the
+    /// directory so the rename itself is durable.
+    pub fn save(&self, path: &Path) -> io::Result<()> {
+        let tmp = path.with_extension("bin.tmp");
+        {
+            let mut file = File::create(&tmp)?;
+            file.write_all(&self.encode())?;
+            file.sync_all()?;
+        }
+        std::fs::rename(&tmp, path)?;
+        if let Some(dir) = path.parent() {
+            if let Ok(d) = File::open(dir) {
+                let _ = d.sync_all();
+            }
+        }
+        Ok(())
+    }
+
+    /// Load and validate a checkpoint file.
+    pub fn load(path: &Path) -> io::Result<Checkpoint> {
+        let buf = std::fs::read(path)?;
+        Checkpoint::decode(&buf).ok_or_else(|| {
+            io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("corrupt checkpoint: {}", path.display()),
+            )
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            next_round: 4,
+            log_offset: 123,
+            every_k: 2,
+            clock_s: 98.5,
+            dynamics: Some((4, 98.5)),
+            manager_rng: (0xDEAD_BEEF, 0x1234_5679),
+            global: vec![1.0, -2.5, 3.25],
+            strategy_blob: vec![1, 2, 3],
+            attack_blob: vec![],
+        }
+    }
+
+    #[test]
+    fn roundtrips() {
+        let c = sample();
+        assert_eq!(Checkpoint::decode(&c.encode()), Some(c));
+    }
+
+    #[test]
+    fn rejects_any_truncation() {
+        let bytes = sample().encode();
+        for cut in 0..bytes.len() {
+            assert_eq!(Checkpoint::decode(&bytes[..cut]), None, "cut at {cut}");
+        }
+    }
+}

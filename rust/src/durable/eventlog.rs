@@ -1,0 +1,903 @@
+//! Append-only CRC-framed binary event log (DESIGN.md §14).
+//!
+//! Layout: an 8-byte header (`b"BFLOG\0"` magic + format version `u16`
+//! LE), then a sequence of frames `[len u32 LE][crc32 u32 LE][payload]`
+//! where the CRC covers the payload only.  Each payload is one encoded
+//! [`OwnedFlEvent`]; the first frame of every log is a [`LogMeta`]
+//! describing the run it belongs to.
+//!
+//! The reader ([`read_log`]) recovers from torn writes by construction: it
+//! walks frames from the start and stops at the first frame that is short,
+//! fails its CRC, or fails to decode, returning the maximal clean prefix
+//! and the byte offset where it ends.  It never panics on arbitrary input
+//! (`tests/durable.rs` truncates a real log at every byte offset and flips
+//! every CRC byte to prove it).
+
+use std::fs::{File, OpenOptions};
+use std::io::{self, Seek, SeekFrom, Write};
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use crate::fl::events::{CommDirection, FailureKind, FlEvent, FlObserver};
+use crate::fl::history::{FailureRecord, RoundRecord};
+use crate::sched::Schedule;
+
+/// Magic bytes opening every event log.
+pub const LOG_MAGIC: &[u8; 6] = b"BFLOG\0";
+/// On-disk format version (bumped on any frame/payload layout change).
+pub const LOG_VERSION: u16 = 1;
+/// Header length in bytes: magic + version.
+pub const LOG_HEADER_LEN: u64 = 8;
+
+const fn build_crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC32_TABLE: [u32; 256] = build_crc32_table();
+
+/// CRC-32 (IEEE 802.3, the zlib/PNG polynomial) of `bytes`.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        crc = (crc >> 8) ^ CRC32_TABLE[((crc ^ b as u32) & 0xFF) as usize];
+    }
+    !crc
+}
+
+// ---- little-endian payload codec helpers (shared with `checkpoint`) ----
+
+pub(crate) fn put_u8(out: &mut Vec<u8>, x: u8) {
+    out.push(x);
+}
+
+pub(crate) fn put_u32(out: &mut Vec<u8>, x: u32) {
+    out.extend_from_slice(&x.to_le_bytes());
+}
+
+pub(crate) fn put_u64(out: &mut Vec<u8>, x: u64) {
+    out.extend_from_slice(&x.to_le_bytes());
+}
+
+pub(crate) fn put_f32(out: &mut Vec<u8>, x: f32) {
+    out.extend_from_slice(&x.to_le_bytes());
+}
+
+pub(crate) fn put_f64(out: &mut Vec<u8>, x: f64) {
+    out.extend_from_slice(&x.to_le_bytes());
+}
+
+pub(crate) fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+/// Strict little-endian reader over a payload slice.  Every accessor
+/// returns `None` past the end, so decoders written against it cannot
+/// panic on truncated or corrupted input.
+pub(crate) struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    pub(crate) fn new(buf: &'a [u8]) -> Self {
+        Cursor { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Option<&'a [u8]> {
+        let end = self.pos.checked_add(n)?;
+        if end > self.buf.len() {
+            return None;
+        }
+        let out = &self.buf[self.pos..end];
+        self.pos = end;
+        Some(out)
+    }
+
+    pub(crate) fn u8(&mut self) -> Option<u8> {
+        self.take(1).map(|b| b[0])
+    }
+
+    pub(crate) fn u32(&mut self) -> Option<u32> {
+        self.take(4).map(|b| u32::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    pub(crate) fn u64(&mut self) -> Option<u64> {
+        self.take(8).map(|b| u64::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    pub(crate) fn f32(&mut self) -> Option<f32> {
+        self.take(4).map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    pub(crate) fn f64(&mut self) -> Option<f64> {
+        self.take(8).map(|b| f64::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    pub(crate) fn str_(&mut self) -> Option<String> {
+        let len = self.u32()? as usize;
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec()).ok()
+    }
+
+    /// True when the whole payload was consumed — decoders require this so
+    /// trailing garbage counts as corruption, not as a valid frame.
+    pub(crate) fn finished(&self) -> bool {
+        self.pos == self.buf.len()
+    }
+}
+
+fn put_opt_f32(out: &mut Vec<u8>, x: Option<f32>) {
+    match x {
+        None => put_u8(out, 0),
+        Some(v) => {
+            put_u8(out, 1);
+            put_f32(out, v);
+        }
+    }
+}
+
+fn get_opt_f32(c: &mut Cursor<'_>) -> Option<Option<f32>> {
+    match c.u8()? {
+        0 => Some(None),
+        1 => Some(Some(c.f32()?)),
+        _ => None,
+    }
+}
+
+/// Identity of the run a log belongs to — written as the first frame of
+/// every log so `bouquetfl replay` can label its report without the
+/// original config.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LogMeta {
+    /// Aggregation strategy name.
+    pub strategy: String,
+    /// Scenario name (`"stable"` when no scenario was configured).
+    pub scenario: String,
+    /// Run seed.
+    pub seed: u64,
+    /// Configured number of rounds.
+    pub rounds: u32,
+    /// Federation size.
+    pub clients: usize,
+}
+
+/// Frame payload tags (first payload byte).
+mod tag {
+    pub const META: u8 = 0;
+    pub const RUN_BEGIN: u8 = 1;
+    pub const ROUND_BEGIN: u8 = 2;
+    pub const ROUND_SKIPPED: u8 = 3;
+    pub const CLIENT_DONE: u8 = 4;
+    pub const CLIENT_FAILED: u8 = 5;
+    pub const ATTACK_INJECTED: u8 = 6;
+    pub const COMM_STARTED: u8 = 7;
+    pub const COMM_FINISHED: u8 = 8;
+    pub const ROUND_SCHEDULED: u8 = 9;
+    pub const AGGREGATED: u8 = 10;
+    pub const EVALUATED: u8 = 11;
+    pub const ROUND_END: u8 = 12;
+    pub const RUN_END: u8 = 13;
+}
+
+/// An owned, serializable mirror of [`FlEvent`] (plus the [`LogMeta`]
+/// header frame).  [`OwnedFlEvent::as_event`] borrows it back as an
+/// `FlEvent` so a log can be replayed through any [`FlObserver`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum OwnedFlEvent {
+    /// The log's run-identity header frame (not an `FlEvent`).
+    Meta(LogMeta),
+    /// Mirror of [`FlEvent::RunBegin`].
+    RunBegin {
+        /// Configured number of rounds.
+        rounds: u32,
+        /// Federation size.
+        clients: usize,
+    },
+    /// Mirror of [`FlEvent::RoundBegin`].
+    RoundBegin {
+        /// Round index (0-based).
+        round: u32,
+        /// Selected client roster indices, in selection order.
+        selected: Vec<usize>,
+    },
+    /// Mirror of [`FlEvent::RoundSkipped`].
+    RoundSkipped {
+        /// Round index (0-based).
+        round: u32,
+        /// Emulated seconds waited for the next online member.
+        wait_s: f64,
+    },
+    /// Mirror of [`FlEvent::ClientDone`].
+    ClientDone {
+        /// Round index (0-based).
+        round: u32,
+        /// Client id.
+        client: u32,
+        /// Emulated fit + communication seconds.
+        fit_s: f64,
+    },
+    /// Mirror of [`FlEvent::ClientFailed`].  Only the reason string is
+    /// stored; the [`FailureKind`] is recomputed from its prefix on
+    /// replay (`FailureKind::classify` is the single source of truth).
+    ClientFailed {
+        /// Round index (0-based).
+        round: u32,
+        /// Client id.
+        client: u32,
+        /// The recorded failure reason.
+        reason: String,
+    },
+    /// Mirror of [`FlEvent::AttackInjected`].
+    AttackInjected {
+        /// Round index (0-based).
+        round: u32,
+        /// The compromised client's id.
+        client: u32,
+        /// Registered name of the attack model.
+        model: String,
+    },
+    /// Mirror of [`FlEvent::CommStarted`].
+    CommStarted {
+        /// Round index (0-based).
+        round: u32,
+        /// Client id.
+        client: u32,
+        /// Download or upload.
+        direction: CommDirection,
+        /// Round-relative emulated start time, seconds.
+        at_s: f64,
+        /// Bytes on the wire.
+        wire_bytes: u64,
+    },
+    /// Mirror of [`FlEvent::CommFinished`].
+    CommFinished {
+        /// Round index (0-based).
+        round: u32,
+        /// Client id.
+        client: u32,
+        /// Download or upload.
+        direction: CommDirection,
+        /// Round-relative emulated completion time, seconds.
+        at_s: f64,
+    },
+    /// Mirror of [`FlEvent::RoundScheduled`].
+    RoundScheduled {
+        /// Round index (0-based).
+        round: u32,
+        /// Emulated time at which the round started.
+        base_s: f64,
+        /// Per-client spans and the round makespan.
+        schedule: Schedule,
+    },
+    /// Mirror of [`FlEvent::Aggregated`].
+    Aggregated {
+        /// Round index (0-based).
+        round: u32,
+        /// Number of client updates that reached the aggregate.
+        survivors: usize,
+    },
+    /// Mirror of [`FlEvent::Evaluated`].
+    Evaluated {
+        /// Round index (0-based).
+        round: u32,
+        /// Held-out loss.
+        loss: f32,
+        /// Held-out accuracy in [0, 1].
+        accuracy: f32,
+    },
+    /// Mirror of [`FlEvent::RoundEnd`].
+    RoundEnd {
+        /// The finished round's full record.
+        record: RoundRecord,
+    },
+    /// Mirror of [`FlEvent::RunEnd`].
+    RunEnd {
+        /// Configured number of rounds.
+        rounds: u32,
+    },
+}
+
+fn direction_tag(d: CommDirection) -> u8 {
+    match d {
+        CommDirection::Download => 0,
+        CommDirection::Upload => 1,
+    }
+}
+
+fn direction_from_tag(t: u8) -> Option<CommDirection> {
+    match t {
+        0 => Some(CommDirection::Download),
+        1 => Some(CommDirection::Upload),
+        _ => None,
+    }
+}
+
+impl OwnedFlEvent {
+    /// Copy a borrowed round-loop event into its owned mirror.
+    pub fn from_event(event: &FlEvent<'_>) -> OwnedFlEvent {
+        match event {
+            FlEvent::RunBegin { rounds, clients } => {
+                OwnedFlEvent::RunBegin { rounds: *rounds, clients: *clients }
+            }
+            FlEvent::RoundBegin { round, selected } => {
+                OwnedFlEvent::RoundBegin { round: *round, selected: selected.to_vec() }
+            }
+            FlEvent::RoundSkipped { round, wait_s } => {
+                OwnedFlEvent::RoundSkipped { round: *round, wait_s: *wait_s }
+            }
+            FlEvent::ClientDone { round, client, fit_s } => {
+                OwnedFlEvent::ClientDone { round: *round, client: *client, fit_s: *fit_s }
+            }
+            FlEvent::ClientFailed { round, client, kind: _, reason } => OwnedFlEvent::ClientFailed {
+                round: *round,
+                client: *client,
+                reason: reason.to_string(),
+            },
+            FlEvent::AttackInjected { round, client, model } => OwnedFlEvent::AttackInjected {
+                round: *round,
+                client: *client,
+                model: model.to_string(),
+            },
+            FlEvent::CommStarted { round, client, direction, at_s, wire_bytes } => {
+                OwnedFlEvent::CommStarted {
+                    round: *round,
+                    client: *client,
+                    direction: *direction,
+                    at_s: *at_s,
+                    wire_bytes: *wire_bytes,
+                }
+            }
+            FlEvent::CommFinished { round, client, direction, at_s } => {
+                OwnedFlEvent::CommFinished {
+                    round: *round,
+                    client: *client,
+                    direction: *direction,
+                    at_s: *at_s,
+                }
+            }
+            FlEvent::RoundScheduled { round, base_s, schedule } => OwnedFlEvent::RoundScheduled {
+                round: *round,
+                base_s: *base_s,
+                schedule: (*schedule).clone(),
+            },
+            FlEvent::Aggregated { round, survivors } => {
+                OwnedFlEvent::Aggregated { round: *round, survivors: *survivors }
+            }
+            FlEvent::Evaluated { round, loss, accuracy } => {
+                OwnedFlEvent::Evaluated { round: *round, loss: *loss, accuracy: *accuracy }
+            }
+            FlEvent::RoundEnd { record } => OwnedFlEvent::RoundEnd { record: (*record).clone() },
+            FlEvent::RunEnd { rounds } => OwnedFlEvent::RunEnd { rounds: *rounds },
+        }
+    }
+
+    /// Borrow the owned mirror back as the round-loop event it came from,
+    /// so a log replays through any [`FlObserver`] exactly like a live
+    /// run.  `None` for the [`OwnedFlEvent::Meta`] header frame, which has
+    /// no `FlEvent` counterpart.
+    pub fn as_event(&self) -> Option<FlEvent<'_>> {
+        Some(match self {
+            OwnedFlEvent::Meta(_) => return None,
+            OwnedFlEvent::RunBegin { rounds, clients } => {
+                FlEvent::RunBegin { rounds: *rounds, clients: *clients }
+            }
+            OwnedFlEvent::RoundBegin { round, selected } => {
+                FlEvent::RoundBegin { round: *round, selected }
+            }
+            OwnedFlEvent::RoundSkipped { round, wait_s } => {
+                FlEvent::RoundSkipped { round: *round, wait_s: *wait_s }
+            }
+            OwnedFlEvent::ClientDone { round, client, fit_s } => {
+                FlEvent::ClientDone { round: *round, client: *client, fit_s: *fit_s }
+            }
+            OwnedFlEvent::ClientFailed { round, client, reason } => FlEvent::ClientFailed {
+                round: *round,
+                client: *client,
+                kind: FailureKind::classify(reason),
+                reason,
+            },
+            OwnedFlEvent::AttackInjected { round, client, model } => {
+                FlEvent::AttackInjected { round: *round, client: *client, model }
+            }
+            OwnedFlEvent::CommStarted { round, client, direction, at_s, wire_bytes } => {
+                FlEvent::CommStarted {
+                    round: *round,
+                    client: *client,
+                    direction: *direction,
+                    at_s: *at_s,
+                    wire_bytes: *wire_bytes,
+                }
+            }
+            OwnedFlEvent::CommFinished { round, client, direction, at_s } => {
+                FlEvent::CommFinished {
+                    round: *round,
+                    client: *client,
+                    direction: *direction,
+                    at_s: *at_s,
+                }
+            }
+            OwnedFlEvent::RoundScheduled { round, base_s, schedule } => {
+                FlEvent::RoundScheduled { round: *round, base_s: *base_s, schedule }
+            }
+            OwnedFlEvent::Aggregated { round, survivors } => {
+                FlEvent::Aggregated { round: *round, survivors: *survivors }
+            }
+            OwnedFlEvent::Evaluated { round, loss, accuracy } => {
+                FlEvent::Evaluated { round: *round, loss: *loss, accuracy: *accuracy }
+            }
+            OwnedFlEvent::RoundEnd { record } => FlEvent::RoundEnd { record },
+            OwnedFlEvent::RunEnd { rounds } => FlEvent::RunEnd { rounds: *rounds },
+        })
+    }
+
+    /// Encode as a frame payload (little-endian, tag byte first).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(32);
+        match self {
+            OwnedFlEvent::Meta(m) => {
+                put_u8(&mut out, tag::META);
+                put_str(&mut out, &m.strategy);
+                put_str(&mut out, &m.scenario);
+                put_u64(&mut out, m.seed);
+                put_u32(&mut out, m.rounds);
+                put_u64(&mut out, m.clients as u64);
+            }
+            OwnedFlEvent::RunBegin { rounds, clients } => {
+                put_u8(&mut out, tag::RUN_BEGIN);
+                put_u32(&mut out, *rounds);
+                put_u64(&mut out, *clients as u64);
+            }
+            OwnedFlEvent::RoundBegin { round, selected } => {
+                put_u8(&mut out, tag::ROUND_BEGIN);
+                put_u32(&mut out, *round);
+                put_u64(&mut out, selected.len() as u64);
+                for &s in selected {
+                    put_u64(&mut out, s as u64);
+                }
+            }
+            OwnedFlEvent::RoundSkipped { round, wait_s } => {
+                put_u8(&mut out, tag::ROUND_SKIPPED);
+                put_u32(&mut out, *round);
+                put_f64(&mut out, *wait_s);
+            }
+            OwnedFlEvent::ClientDone { round, client, fit_s } => {
+                put_u8(&mut out, tag::CLIENT_DONE);
+                put_u32(&mut out, *round);
+                put_u32(&mut out, *client);
+                put_f64(&mut out, *fit_s);
+            }
+            OwnedFlEvent::ClientFailed { round, client, reason } => {
+                put_u8(&mut out, tag::CLIENT_FAILED);
+                put_u32(&mut out, *round);
+                put_u32(&mut out, *client);
+                put_str(&mut out, reason);
+            }
+            OwnedFlEvent::AttackInjected { round, client, model } => {
+                put_u8(&mut out, tag::ATTACK_INJECTED);
+                put_u32(&mut out, *round);
+                put_u32(&mut out, *client);
+                put_str(&mut out, model);
+            }
+            OwnedFlEvent::CommStarted { round, client, direction, at_s, wire_bytes } => {
+                put_u8(&mut out, tag::COMM_STARTED);
+                put_u32(&mut out, *round);
+                put_u32(&mut out, *client);
+                put_u8(&mut out, direction_tag(*direction));
+                put_f64(&mut out, *at_s);
+                put_u64(&mut out, *wire_bytes);
+            }
+            OwnedFlEvent::CommFinished { round, client, direction, at_s } => {
+                put_u8(&mut out, tag::COMM_FINISHED);
+                put_u32(&mut out, *round);
+                put_u32(&mut out, *client);
+                put_u8(&mut out, direction_tag(*direction));
+                put_f64(&mut out, *at_s);
+            }
+            OwnedFlEvent::RoundScheduled { round, base_s, schedule } => {
+                put_u8(&mut out, tag::ROUND_SCHEDULED);
+                put_u32(&mut out, *round);
+                put_f64(&mut out, *base_s);
+                put_f64(&mut out, schedule.round_s);
+                put_u64(&mut out, schedule.spans.len() as u64);
+                for &(c, s, e) in &schedule.spans {
+                    put_u32(&mut out, c);
+                    put_f64(&mut out, s);
+                    put_f64(&mut out, e);
+                }
+            }
+            OwnedFlEvent::Aggregated { round, survivors } => {
+                put_u8(&mut out, tag::AGGREGATED);
+                put_u32(&mut out, *round);
+                put_u64(&mut out, *survivors as u64);
+            }
+            OwnedFlEvent::Evaluated { round, loss, accuracy } => {
+                put_u8(&mut out, tag::EVALUATED);
+                put_u32(&mut out, *round);
+                put_f32(&mut out, *loss);
+                put_f32(&mut out, *accuracy);
+            }
+            OwnedFlEvent::RoundEnd { record } => {
+                put_u8(&mut out, tag::ROUND_END);
+                put_u32(&mut out, record.round);
+                put_u64(&mut out, record.selected.len() as u64);
+                for &c in &record.selected {
+                    put_u32(&mut out, c);
+                }
+                put_u64(&mut out, record.failures.len() as u64);
+                for f in &record.failures {
+                    put_u32(&mut out, f.client);
+                    put_str(&mut out, &f.reason);
+                }
+                put_f32(&mut out, record.train_loss);
+                put_opt_f32(&mut out, record.eval_loss);
+                put_opt_f32(&mut out, record.eval_accuracy);
+                put_f64(&mut out, record.emu_round_s);
+                put_f64(&mut out, record.host_round_s);
+            }
+            OwnedFlEvent::RunEnd { rounds } => {
+                put_u8(&mut out, tag::RUN_END);
+                put_u32(&mut out, *rounds);
+            }
+        }
+        out
+    }
+
+    /// Decode a frame payload.  Strict: `None` on a short payload, an
+    /// unknown tag, trailing bytes, or a malformed string — the reader
+    /// treats any of these as the start of a torn tail.
+    pub fn decode(payload: &[u8]) -> Option<OwnedFlEvent> {
+        let mut c = Cursor::new(payload);
+        let event = match c.u8()? {
+            tag::META => {
+                let strategy = c.str_()?;
+                let scenario = c.str_()?;
+                let seed = c.u64()?;
+                let rounds = c.u32()?;
+                let clients = c.u64()? as usize;
+                OwnedFlEvent::Meta(LogMeta { strategy, scenario, seed, rounds, clients })
+            }
+            tag::RUN_BEGIN => {
+                let rounds = c.u32()?;
+                let clients = c.u64()? as usize;
+                OwnedFlEvent::RunBegin { rounds, clients }
+            }
+            tag::ROUND_BEGIN => {
+                let round = c.u32()?;
+                let n = c.u64()? as usize;
+                let mut selected = Vec::with_capacity(n.min(payload.len() / 8 + 1));
+                for _ in 0..n {
+                    selected.push(c.u64()? as usize);
+                }
+                OwnedFlEvent::RoundBegin { round, selected }
+            }
+            tag::ROUND_SKIPPED => {
+                let round = c.u32()?;
+                let wait_s = c.f64()?;
+                OwnedFlEvent::RoundSkipped { round, wait_s }
+            }
+            tag::CLIENT_DONE => {
+                let round = c.u32()?;
+                let client = c.u32()?;
+                let fit_s = c.f64()?;
+                OwnedFlEvent::ClientDone { round, client, fit_s }
+            }
+            tag::CLIENT_FAILED => {
+                let round = c.u32()?;
+                let client = c.u32()?;
+                let reason = c.str_()?;
+                OwnedFlEvent::ClientFailed { round, client, reason }
+            }
+            tag::ATTACK_INJECTED => {
+                let round = c.u32()?;
+                let client = c.u32()?;
+                let model = c.str_()?;
+                OwnedFlEvent::AttackInjected { round, client, model }
+            }
+            tag::COMM_STARTED => {
+                let round = c.u32()?;
+                let client = c.u32()?;
+                let direction = direction_from_tag(c.u8()?)?;
+                let at_s = c.f64()?;
+                let wire_bytes = c.u64()?;
+                OwnedFlEvent::CommStarted { round, client, direction, at_s, wire_bytes }
+            }
+            tag::COMM_FINISHED => {
+                let round = c.u32()?;
+                let client = c.u32()?;
+                let direction = direction_from_tag(c.u8()?)?;
+                let at_s = c.f64()?;
+                OwnedFlEvent::CommFinished { round, client, direction, at_s }
+            }
+            tag::ROUND_SCHEDULED => {
+                let round = c.u32()?;
+                let base_s = c.f64()?;
+                let round_s = c.f64()?;
+                let n = c.u64()? as usize;
+                let mut spans = Vec::with_capacity(n.min(payload.len() / 20 + 1));
+                for _ in 0..n {
+                    let client = c.u32()?;
+                    let s = c.f64()?;
+                    let e = c.f64()?;
+                    spans.push((client, s, e));
+                }
+                OwnedFlEvent::RoundScheduled {
+                    round,
+                    base_s,
+                    schedule: Schedule { round_s, spans },
+                }
+            }
+            tag::AGGREGATED => {
+                let round = c.u32()?;
+                let survivors = c.u64()? as usize;
+                OwnedFlEvent::Aggregated { round, survivors }
+            }
+            tag::EVALUATED => {
+                let round = c.u32()?;
+                let loss = c.f32()?;
+                let accuracy = c.f32()?;
+                OwnedFlEvent::Evaluated { round, loss, accuracy }
+            }
+            tag::ROUND_END => {
+                let round = c.u32()?;
+                let n_sel = c.u64()? as usize;
+                let mut selected = Vec::with_capacity(n_sel.min(payload.len() / 4 + 1));
+                for _ in 0..n_sel {
+                    selected.push(c.u32()?);
+                }
+                let n_fail = c.u64()? as usize;
+                let mut failures = Vec::with_capacity(n_fail.min(payload.len() / 8 + 1));
+                for _ in 0..n_fail {
+                    let client = c.u32()?;
+                    let reason = c.str_()?;
+                    failures.push(FailureRecord { client, reason });
+                }
+                let train_loss = c.f32()?;
+                let eval_loss = get_opt_f32(&mut c)?;
+                let eval_accuracy = get_opt_f32(&mut c)?;
+                let emu_round_s = c.f64()?;
+                let host_round_s = c.f64()?;
+                OwnedFlEvent::RoundEnd {
+                    record: RoundRecord {
+                        round,
+                        selected,
+                        failures,
+                        train_loss,
+                        eval_loss,
+                        eval_accuracy,
+                        emu_round_s,
+                        host_round_s,
+                    },
+                }
+            }
+            tag::RUN_END => {
+                let rounds = c.u32()?;
+                OwnedFlEvent::RunEnd { rounds }
+            }
+            _ => return None,
+        };
+        if !c.finished() {
+            return None;
+        }
+        Some(event)
+    }
+}
+
+/// Append-side handle on an event log.
+#[derive(Debug)]
+pub struct EventLogWriter {
+    file: File,
+    offset: u64,
+}
+
+impl EventLogWriter {
+    /// Create (truncating) a fresh log at `path`: header plus the
+    /// [`LogMeta`] frame, flushed to disk before returning.
+    pub fn create(path: &Path, meta: &LogMeta) -> io::Result<EventLogWriter> {
+        let mut file =
+            OpenOptions::new().write(true).create(true).truncate(true).open(path)?;
+        file.write_all(LOG_MAGIC)?;
+        file.write_all(&LOG_VERSION.to_le_bytes())?;
+        let mut writer = EventLogWriter { file, offset: LOG_HEADER_LEN };
+        writer.append(&OwnedFlEvent::Meta(meta.clone()))?;
+        writer.sync()?;
+        Ok(writer)
+    }
+
+    /// Open an existing log for appending at `offset`, discarding any
+    /// bytes past it (this is how resume drops the events a crash left
+    /// after the last checkpoint).
+    pub fn open_at(path: &Path, offset: u64) -> io::Result<EventLogWriter> {
+        if offset < LOG_HEADER_LEN {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidInput,
+                format!("append offset {offset} is inside the log header"),
+            ));
+        }
+        let mut file = OpenOptions::new().read(true).write(true).open(path)?;
+        file.set_len(offset)?;
+        file.seek(SeekFrom::End(0))?;
+        Ok(EventLogWriter { file, offset })
+    }
+
+    /// Append one event as a CRC frame.
+    pub fn append(&mut self, event: &OwnedFlEvent) -> io::Result<()> {
+        let payload = event.encode();
+        let mut frame = Vec::with_capacity(8 + payload.len());
+        frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        frame.extend_from_slice(&crc32(&payload).to_le_bytes());
+        frame.extend_from_slice(&payload);
+        self.file.write_all(&frame)?;
+        self.offset += frame.len() as u64;
+        Ok(())
+    }
+
+    /// Flush appended frames to stable storage.
+    pub fn sync(&mut self) -> io::Result<()> {
+        self.file.sync_data()
+    }
+
+    /// Byte offset one past the last appended frame.
+    pub fn offset(&self) -> u64 {
+        self.offset
+    }
+}
+
+/// Result of reading a log: the maximal clean prefix.
+#[derive(Debug)]
+pub struct LogRead {
+    /// The run-identity header frame, if the log has one.
+    pub meta: Option<LogMeta>,
+    /// Every cleanly decoded event, in append order (the meta frame is
+    /// surfaced through `meta`, not here).
+    pub events: Vec<OwnedFlEvent>,
+    /// For each entry of `events`: the byte offset one past its frame.
+    pub offsets: Vec<u64>,
+    /// Byte offset where the clean prefix ends (0 for a missing/bad
+    /// header, the header length for an empty-but-valid log).
+    pub clean_offset: u64,
+    /// True when bytes past `clean_offset` were discarded (torn frame,
+    /// bad CRC, short header, trailing garbage).
+    pub truncated: bool,
+}
+
+/// Parse in-memory log bytes into the maximal clean prefix.  Total: never
+/// panics, whatever the input.
+pub fn parse_log(buf: &[u8]) -> LogRead {
+    let mut out = LogRead {
+        meta: None,
+        events: Vec::new(),
+        offsets: Vec::new(),
+        clean_offset: 0,
+        truncated: false,
+    };
+    if buf.len() < LOG_HEADER_LEN as usize
+        || &buf[..LOG_MAGIC.len()] != LOG_MAGIC
+        || u16::from_le_bytes([buf[6], buf[7]]) != LOG_VERSION
+    {
+        out.truncated = !buf.is_empty();
+        return out;
+    }
+    let mut pos = LOG_HEADER_LEN as usize;
+    out.clean_offset = pos as u64;
+    loop {
+        if pos == buf.len() {
+            break; // clean EOF
+        }
+        if buf.len() - pos < 8 {
+            out.truncated = true;
+            break;
+        }
+        let len = u32::from_le_bytes(buf[pos..pos + 4].try_into().unwrap()) as usize;
+        let crc = u32::from_le_bytes(buf[pos + 4..pos + 8].try_into().unwrap());
+        let Some(end) = pos.checked_add(8).and_then(|p| p.checked_add(len)) else {
+            out.truncated = true;
+            break;
+        };
+        if end > buf.len() {
+            out.truncated = true;
+            break;
+        }
+        let payload = &buf[pos + 8..end];
+        if crc32(payload) != crc {
+            out.truncated = true;
+            break;
+        }
+        let Some(event) = OwnedFlEvent::decode(payload) else {
+            out.truncated = true;
+            break;
+        };
+        pos = end;
+        out.clean_offset = pos as u64;
+        match event {
+            OwnedFlEvent::Meta(m) => out.meta = Some(m),
+            other => {
+                out.events.push(other);
+                out.offsets.push(pos as u64);
+            }
+        }
+    }
+    out
+}
+
+/// Read a log file and recover its maximal clean prefix (see
+/// [`parse_log`]).
+pub fn read_log(path: &Path) -> io::Result<LogRead> {
+    Ok(parse_log(&std::fs::read(path)?))
+}
+
+/// Observer sink appending every round-loop event to a shared
+/// [`EventLogWriter`].  Observers must not panic, so the sink goes
+/// permanently quiet (with one logged warning) on the first write error.
+#[derive(Debug)]
+pub struct EventLogObserver {
+    writer: Arc<Mutex<EventLogWriter>>,
+    failed: bool,
+}
+
+impl EventLogObserver {
+    /// Wrap a shared writer (the same handle checkpointing flushes).
+    pub fn new(writer: Arc<Mutex<EventLogWriter>>) -> EventLogObserver {
+        EventLogObserver { writer, failed: false }
+    }
+}
+
+impl FlObserver for EventLogObserver {
+    fn on_event(&mut self, event: &FlEvent<'_>) {
+        if self.failed {
+            return;
+        }
+        let owned = OwnedFlEvent::from_event(event);
+        let mut writer = match self.writer.lock() {
+            Ok(w) => w,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        if let Err(e) = writer.append(&owned) {
+            crate::log_warn!("event log append failed, disabling the sink: {e}");
+            self.failed = true;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_matches_known_vectors() {
+        // The canonical IEEE check value.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn payload_decode_rejects_trailing_bytes() {
+        let ev = OwnedFlEvent::RunEnd { rounds: 3 };
+        let mut payload = ev.encode();
+        assert_eq!(OwnedFlEvent::decode(&payload), Some(ev));
+        payload.push(0);
+        assert_eq!(OwnedFlEvent::decode(&payload), None);
+    }
+
+    #[test]
+    fn parse_log_handles_garbage_headers() {
+        assert!(!parse_log(b"").truncated);
+        assert_eq!(parse_log(b"").clean_offset, 0);
+        let junk = parse_log(b"not a log at all");
+        assert!(junk.truncated);
+        assert_eq!(junk.clean_offset, 0);
+        assert!(junk.events.is_empty());
+    }
+}

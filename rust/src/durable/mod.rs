@@ -1,0 +1,633 @@
+//! Durable run infrastructure: CRC-framed event logging,
+//! checkpoint/resume, and offline replay (DESIGN.md §14).
+//!
+//! A durable run directory holds three artifacts:
+//!
+//! * `events.log` — every [`FlEvent`](crate::fl::FlEvent) the round loop
+//!   emitted, appended through the [`EventLogObserver`] sink as CRC-32
+//!   framed binary records ([`eventlog`]).
+//! * `checkpoint.bin` — the latest round-boundary snapshot of the
+//!   server's cross-round state, written atomically every `every_k`
+//!   rounds ([`checkpoint`]).
+//! * `manifest.json` — the launch options that started the run, written
+//!   by the CLI so `bouquetfl resume <dir>` can rebuild the experiment.
+//!
+//! Resuming truncates the log to the checkpoint's offset, replays the
+//! clean prefix into the run's observers, restores the server state, and
+//! continues the round loop; because the engine is deterministic
+//! (DESIGN.md §8) the completed run is **bit-identical** to one that was
+//! never interrupted — histories, traces, reports and the log itself
+//! (asserted in `tests/durable.rs`).  [`replay`](replay()) rebuilds the
+//! History/Trace/report outputs from a log alone, without re-running
+//! anything.
+
+#![deny(missing_docs)]
+
+pub mod checkpoint;
+pub mod eventlog;
+pub mod replay;
+
+use std::io;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use crate::data::PartitionScheme;
+use crate::error::ConfigError;
+use crate::fl::attack::AttackConfig;
+use crate::fl::clientmgr::Selection;
+use crate::fl::launcher::{
+    HardwareSource, LaunchOptions, PopulationOptions, TimingWorkload,
+};
+use crate::fl::scenario::Scenario;
+use crate::hardware::sampler::SamplerConfig;
+use crate::netsim::NetSimConfig;
+use crate::util::json::Json;
+
+pub use checkpoint::{Checkpoint, CHECKPOINT_FILE};
+pub use eventlog::{
+    crc32, parse_log, read_log, EventLogObserver, EventLogWriter, LogMeta, LogRead,
+    OwnedFlEvent,
+};
+pub use replay::{replay, replay_events, Replay};
+
+/// File name of the event log inside a durable run directory.
+pub const EVENT_LOG_FILE: &str = "events.log";
+/// File name of the launch-options manifest inside a durable run
+/// directory.
+pub const MANIFEST_FILE: &str = "manifest.json";
+
+/// Test-only fault injection: make the round loop return an
+/// `FlError::Durable` immediately after finishing round `after_round`
+/// (events flushed, checkpoint written if due) — the on-disk state is
+/// exactly what a SIGKILL between two rounds would leave, so crash
+/// recovery is exercisable deterministically in-process.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CrashPoint {
+    /// 0-based round index after whose boundary processing the loop dies.
+    pub after_round: u32,
+}
+
+/// How a run is made durable — carried on
+/// [`LaunchOptions`](crate::fl::LaunchOptions) and set through
+/// `ExperimentBuilder::durable` / `.resume`, the `[durable]` config
+/// section, or the CLI `--durable` flag.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DurableOptions {
+    /// Run directory (created if missing).
+    pub dir: PathBuf,
+    /// Checkpoint cadence in rounds (`1` = every round boundary; `0` =
+    /// log only, never checkpoint — such a run cannot be resumed).
+    pub every_k: u32,
+    /// Resume the run already in `dir` instead of starting fresh.
+    pub resume: bool,
+    /// Optional injected crash (tests/CI only).
+    pub crash: Option<CrashPoint>,
+}
+
+impl DurableOptions {
+    /// Fresh durable run in `dir`, checkpointing every round boundary.
+    pub fn new(dir: impl Into<PathBuf>) -> DurableOptions {
+        DurableOptions { dir: dir.into(), every_k: 1, resume: false, crash: None }
+    }
+
+    /// Resume the durable run already in `dir`.
+    pub fn resume_dir(dir: impl Into<PathBuf>) -> DurableOptions {
+        DurableOptions { resume: true, ..DurableOptions::new(dir) }
+    }
+
+    /// Set the checkpoint cadence.
+    pub fn every(mut self, k: u32) -> DurableOptions {
+        self.every_k = k;
+        self
+    }
+
+    /// Inject a crash after round `after_round` (tests/CI only).
+    pub fn crash_after(mut self, after_round: u32) -> DurableOptions {
+        self.crash = Some(CrashPoint { after_round });
+        self
+    }
+}
+
+/// The server-side durable-run engine: the shared log writer plus, on
+/// resume, the restored checkpoint and the log's replayable clean prefix.
+/// Built by [`RunDurability::fresh`] / [`RunDurability::resume`] and
+/// consumed by `ServerApp`'s round loop.
+#[derive(Debug)]
+pub struct RunDurability {
+    dir: PathBuf,
+    every_k: u32,
+    writer: Arc<Mutex<EventLogWriter>>,
+    start_round: u32,
+    resume: Option<Checkpoint>,
+    prefix: Vec<OwnedFlEvent>,
+    crash: Option<CrashPoint>,
+}
+
+impl RunDurability {
+    /// Start a fresh durable run: create `dir`, write the log header and
+    /// the [`LogMeta`] identity frame.
+    pub fn fresh(dir: &Path, every_k: u32, meta: &LogMeta) -> io::Result<RunDurability> {
+        std::fs::create_dir_all(dir)?;
+        let writer = EventLogWriter::create(&dir.join(EVENT_LOG_FILE), meta)?;
+        Ok(RunDurability {
+            dir: dir.to_path_buf(),
+            every_k,
+            writer: Arc::new(Mutex::new(writer)),
+            start_round: 0,
+            resume: None,
+            prefix: Vec::new(),
+            crash: None,
+        })
+    }
+
+    /// Resume the durable run in `dir`: load + validate the checkpoint,
+    /// read the log's maximal clean prefix, truncate the log to the
+    /// checkpoint's offset (events a crash left after the snapshot are
+    /// re-run, not trusted), and keep the covered prefix for observer
+    /// replay.
+    pub fn resume(dir: &Path) -> io::Result<RunDurability> {
+        let ckpt = Checkpoint::load(&dir.join(CHECKPOINT_FILE))?;
+        let log_path = dir.join(EVENT_LOG_FILE);
+        let log = eventlog::read_log(&log_path)?;
+        if log.clean_offset < ckpt.log_offset {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!(
+                    "event log's clean prefix ends at byte {} but the checkpoint \
+                     covers {} bytes — the log is damaged before the snapshot",
+                    log.clean_offset, ckpt.log_offset
+                ),
+            ));
+        }
+        let keep = log.offsets.iter().take_while(|&&end| end <= ckpt.log_offset).count();
+        let mut prefix = log.events;
+        prefix.truncate(keep);
+        let writer = EventLogWriter::open_at(&log_path, ckpt.log_offset)?;
+        Ok(RunDurability {
+            dir: dir.to_path_buf(),
+            every_k: ckpt.every_k,
+            writer: Arc::new(Mutex::new(writer)),
+            start_round: ckpt.next_round,
+            prefix,
+            resume: Some(ckpt),
+            crash: None,
+        })
+    }
+
+    /// Attach (or clear) an injected crash point.
+    pub fn with_crash(mut self, crash: Option<CrashPoint>) -> RunDurability {
+        self.crash = crash;
+        self
+    }
+
+    /// The run directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Checkpoint cadence in rounds.
+    pub fn every_k(&self) -> u32 {
+        self.every_k
+    }
+
+    /// First round the (possibly resumed) loop will run.
+    pub fn start_round(&self) -> u32 {
+        self.start_round
+    }
+
+    /// Shared handle on the log writer (for the observer sink).
+    pub(crate) fn writer(&self) -> Arc<Mutex<EventLogWriter>> {
+        Arc::clone(&self.writer)
+    }
+
+    /// Lock the log writer, recovering from a poisoned lock (observers
+    /// never panic while holding it, but be total anyway).
+    pub(crate) fn lock_writer(&self) -> MutexGuard<'_, EventLogWriter> {
+        match self.writer.lock() {
+            Ok(guard) => guard,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+
+    /// Take the restored checkpoint (resume runs only; `None` thereafter).
+    pub(crate) fn take_resume(&mut self) -> Option<Checkpoint> {
+        self.resume.take()
+    }
+
+    /// Take the log prefix to replay into observers (resume runs only).
+    pub(crate) fn take_prefix(&mut self) -> Vec<OwnedFlEvent> {
+        std::mem::take(&mut self.prefix)
+    }
+
+    /// Should a checkpoint be written at the boundary entering
+    /// `next_round`?  Boundaries after the final round are skipped — the
+    /// run is complete, there is nothing left to resume into.
+    pub(crate) fn checkpoint_due(&self, next_round: u32, total_rounds: u32) -> bool {
+        self.every_k > 0 && next_round < total_rounds && next_round % self.every_k == 0
+    }
+
+    /// Does the injected crash point fire after `round`?
+    pub(crate) fn should_crash(&self, round: u32) -> bool {
+        matches!(self.crash, Some(c) if c.after_round == round)
+    }
+}
+
+// ---- manifest: LaunchOptions <-> JSON for `bouquetfl resume` ----------
+
+/// Manifest format version.
+const MANIFEST_VERSION: f64 = 1.0;
+
+fn opt_num(x: Option<f64>) -> Json {
+    x.map(Json::num).unwrap_or(Json::Null)
+}
+
+/// Serialize the launch options (plus the simulated parameter dimension,
+/// if the run is a `Simulated` one) as the run-directory manifest.
+///
+/// Scenarios are recorded **by name**: resume re-resolves presets through
+/// [`Scenario::preset`], so a file-defined custom scenario cannot be
+/// rebuilt from a manifest (the library `ExperimentBuilder::resume` path
+/// has no such limit — it never round-trips through the manifest).  The
+/// host profile is likewise not serialized; resume uses the paper host,
+/// which is the only host the CLI can launch with anyway.
+pub fn manifest_from_options(opts: &LaunchOptions, param_dim: Option<usize>) -> Json {
+    let partition = match &opts.partition {
+        PartitionScheme::Iid => Json::obj(vec![("scheme", Json::str("iid"))]),
+        PartitionScheme::Dirichlet { alpha } => Json::obj(vec![
+            ("scheme", Json::str("dirichlet")),
+            ("alpha", Json::num(*alpha)),
+        ]),
+        PartitionScheme::Shards { labels_per_client } => Json::obj(vec![
+            ("scheme", Json::str("shards")),
+            ("labels_per_client", Json::num(*labels_per_client as f64)),
+        ]),
+    };
+    let selection = match opts.selection {
+        Selection::All => Json::obj(vec![("kind", Json::str("all"))]),
+        Selection::Fraction(f) => Json::obj(vec![
+            ("kind", Json::str("fraction")),
+            ("value", Json::num(f)),
+        ]),
+        Selection::Count(n) => Json::obj(vec![
+            ("kind", Json::str("count")),
+            ("value", Json::num(n as f64)),
+        ]),
+    };
+    let hardware = match &opts.hardware {
+        HardwareSource::Sampler(sc) => Json::obj(vec![
+            ("kind", Json::str("sampler")),
+            ("min_vram_gib", Json::num(sc.min_vram_gib)),
+            ("consumer_only", Json::Bool(sc.consumer_only)),
+            ("exclude_laptop", Json::Bool(sc.exclude_laptop)),
+            ("tier_affinity", Json::num(sc.tier_affinity)),
+        ]),
+        HardwareSource::Manual(names) => Json::obj(vec![
+            ("kind", Json::str("manual")),
+            (
+                "profiles",
+                Json::Arr(names.iter().map(|n| Json::str(n.clone())).collect()),
+            ),
+        ]),
+    };
+    let population = opts
+        .population
+        .map(|p| {
+            Json::obj(vec![
+                ("size", Json::num(p.size as f64)),
+                ("profile_draws", Json::num(p.profile_draws as f64)),
+            ])
+        })
+        .unwrap_or(Json::Null);
+    let netsim = opts
+        .netsim
+        .as_ref()
+        .map(|ns| {
+            Json::obj(vec![
+                (
+                    "ingress_mbps",
+                    if ns.ingress_mbps.is_finite() {
+                        Json::num(ns.ingress_mbps)
+                    } else {
+                        Json::Null
+                    },
+                ),
+                (
+                    "egress_mbps",
+                    if ns.egress_mbps.is_finite() {
+                        Json::num(ns.egress_mbps)
+                    } else {
+                        Json::Null
+                    },
+                ),
+                ("codec", Json::str(ns.codec.clone())),
+                ("codec_knob", Json::num(ns.codec_knob)),
+                ("payload_bytes", opt_num(ns.payload_bytes.map(|b| b as f64))),
+            ])
+        })
+        .unwrap_or(Json::Null);
+    let attack = opts
+        .attack
+        .as_ref()
+        .map(|a| {
+            Json::obj(vec![
+                ("model", Json::str(a.model.clone())),
+                ("fraction", Json::num(a.fraction)),
+                ("scale", Json::num(a.scale)),
+            ])
+        })
+        .unwrap_or(Json::Null);
+    let timing = match opts.timing_workload {
+        TimingWorkload::Resnet18 => "resnet18",
+        TimingWorkload::SmallCnn => "small-cnn",
+    };
+    Json::obj(vec![
+        ("version", Json::num(MANIFEST_VERSION)),
+        ("clients", Json::num(opts.clients as f64)),
+        ("rounds", Json::num(opts.rounds as f64)),
+        ("samples_per_client", Json::num(opts.samples_per_client as f64)),
+        ("eval_samples", Json::num(opts.eval_samples as f64)),
+        ("batch", Json::num(opts.batch as f64)),
+        ("local_steps", Json::num(opts.local_steps as f64)),
+        ("lr", Json::num(opts.lr as f64)),
+        ("strategy", Json::str(opts.strategy.clone())),
+        ("max_parallel", Json::num(opts.max_parallel as f64)),
+        ("workers", Json::num(opts.workers as f64)),
+        ("partition", partition),
+        ("selection", selection),
+        ("eval_every", Json::num(opts.eval_every as f64)),
+        // 64-bit seeds don't survive the f64 round-trip JSON numbers
+        // imply; stored exactly, as a string (same rule as the reports).
+        ("seed", Json::str(opts.seed.to_string())),
+        ("hardware", hardware),
+        ("network", Json::Bool(opts.network)),
+        ("artifacts_dir", Json::str(opts.artifacts_dir.to_string_lossy().into_owned())),
+        ("pacing", opt_num(opts.pacing)),
+        ("fail_on_empty_round", Json::Bool(opts.fail_on_empty_round)),
+        ("timing_workload", Json::str(timing)),
+        (
+            "scenario",
+            opts.scenario
+                .as_ref()
+                .map(|s| Json::str(s.name.clone()))
+                .unwrap_or(Json::Null),
+        ),
+        ("population", population),
+        ("netsim", netsim),
+        ("attack", attack),
+        (
+            "durable_every_k",
+            Json::num(opts.durable.as_ref().map(|d| d.every_k).unwrap_or(1) as f64),
+        ),
+        ("param_dim", opt_num(param_dim.map(|d| d as f64))),
+    ])
+}
+
+fn bad(key: &str, msg: impl Into<String>) -> ConfigError {
+    ConfigError::InvalidValue { key: key.into(), msg: msg.into() }
+}
+
+fn req<'a>(json: &'a Json, key: &'static str) -> Result<&'a Json, ConfigError> {
+    json.get(key).ok_or_else(|| bad(key, "missing manifest key"))
+}
+
+fn req_f64(json: &Json, key: &'static str) -> Result<f64, ConfigError> {
+    req(json, key)?.as_f64().ok_or_else(|| bad(key, "expected a number"))
+}
+
+fn req_str<'a>(json: &'a Json, key: &'static str) -> Result<&'a str, ConfigError> {
+    req(json, key)?.as_str().ok_or_else(|| bad(key, "expected a string"))
+}
+
+fn req_bool(json: &Json, key: &'static str) -> Result<bool, ConfigError> {
+    req(json, key)?.as_bool().ok_or_else(|| bad(key, "expected a bool"))
+}
+
+/// Rebuild launch options (and the simulated parameter dimension, if
+/// recorded) from a run-directory manifest written by
+/// [`manifest_from_options`].
+pub fn options_from_manifest(
+    json: &Json,
+) -> Result<(LaunchOptions, Option<usize>), ConfigError> {
+    let version = req_f64(json, "version")?;
+    if version != MANIFEST_VERSION {
+        return Err(bad("version", format!("unsupported manifest version {version}")));
+    }
+    let mut o = LaunchOptions::default();
+    let partition = req(json, "partition")?;
+    let selection = req(json, "selection")?;
+    let hardware = req(json, "hardware")?;
+    o.clients = req_f64(json, "clients")? as usize;
+    o.rounds = req_f64(json, "rounds")? as u32;
+    o.samples_per_client = req_f64(json, "samples_per_client")? as usize;
+    o.eval_samples = req_f64(json, "eval_samples")? as usize;
+    o.batch = req_f64(json, "batch")? as u32;
+    o.local_steps = req_f64(json, "local_steps")? as u32;
+    o.lr = req_f64(json, "lr")? as f32;
+    o.strategy = req_str(json, "strategy")?.to_string();
+    o.max_parallel = req_f64(json, "max_parallel")? as usize;
+    o.workers = req_f64(json, "workers")? as usize;
+    o.eval_every = req_f64(json, "eval_every")? as u32;
+    o.seed = req_str(json, "seed")?
+        .parse::<u64>()
+        .map_err(|e| bad("seed", e.to_string()))?;
+    o.network = req_bool(json, "network")?;
+    o.artifacts_dir = PathBuf::from(req_str(json, "artifacts_dir")?);
+    o.pacing = req(json, "pacing")?.as_f64();
+    o.fail_on_empty_round = req_bool(json, "fail_on_empty_round")?;
+    o.timing_workload = match req_str(json, "timing_workload")? {
+        "resnet18" => TimingWorkload::Resnet18,
+        "small-cnn" => TimingWorkload::SmallCnn,
+        other => return Err(bad("timing_workload", format!("unknown workload '{other}'"))),
+    };
+
+    o.partition = match req_str(partition, "scheme")? {
+        "iid" => PartitionScheme::Iid,
+        "dirichlet" => PartitionScheme::Dirichlet { alpha: req_f64(partition, "alpha")? },
+        "shards" => PartitionScheme::Shards {
+            labels_per_client: req_f64(partition, "labels_per_client")? as usize,
+        },
+        other => return Err(bad("partition.scheme", format!("unknown scheme '{other}'"))),
+    };
+
+    o.selection = match req_str(selection, "kind")? {
+        "all" => Selection::All,
+        "fraction" => Selection::Fraction(req_f64(selection, "value")?),
+        "count" => Selection::Count(req_f64(selection, "value")? as usize),
+        other => return Err(bad("selection.kind", format!("unknown kind '{other}'"))),
+    };
+
+    o.hardware = match req_str(hardware, "kind")? {
+        "sampler" => HardwareSource::Sampler(SamplerConfig {
+            min_vram_gib: req_f64(hardware, "min_vram_gib")?,
+            consumer_only: req_bool(hardware, "consumer_only")?,
+            exclude_laptop: req_bool(hardware, "exclude_laptop")?,
+            tier_affinity: req_f64(hardware, "tier_affinity")?,
+        }),
+        "manual" => {
+            let names = req(hardware, "profiles")?
+                .as_arr()
+                .ok_or_else(|| bad("hardware.profiles", "expected an array"))?
+                .iter()
+                .map(|n| {
+                    n.as_str()
+                        .map(str::to_string)
+                        .ok_or_else(|| bad("hardware.profiles", "expected strings"))
+                })
+                .collect::<Result<Vec<String>, ConfigError>>()?;
+            HardwareSource::Manual(names)
+        }
+        other => return Err(bad("hardware.kind", format!("unknown kind '{other}'"))),
+    };
+
+    match req(json, "scenario")? {
+        Json::Null => o.scenario = None,
+        s => {
+            let name = s.as_str().ok_or_else(|| bad("scenario", "expected a name"))?;
+            let sc = Scenario::preset(name).ok_or_else(|| {
+                bad(
+                    "scenario",
+                    format!(
+                        "'{name}' is not a preset — file-defined scenarios cannot be \
+                         resumed through a manifest"
+                    ),
+                )
+            })?;
+            o.scenario = (!sc.is_static()).then_some(sc);
+        }
+    }
+
+    match req(json, "population")? {
+        Json::Null => o.population = None,
+        p => {
+            o.population = Some(PopulationOptions {
+                size: req_f64(p, "size")? as usize,
+                profile_draws: req_f64(p, "profile_draws")? as usize,
+            });
+        }
+    }
+
+    match req(json, "netsim")? {
+        Json::Null => o.netsim = None,
+        ns => {
+            o.netsim = Some(NetSimConfig {
+                ingress_mbps: req(ns, "ingress_mbps")?.as_f64().unwrap_or(f64::INFINITY),
+                egress_mbps: req(ns, "egress_mbps")?.as_f64().unwrap_or(f64::INFINITY),
+                codec: req_str(ns, "codec")?.to_string(),
+                codec_knob: req_f64(ns, "codec_knob")?,
+                payload_bytes: req(ns, "payload_bytes")?.as_f64().map(|b| b as u64),
+            });
+        }
+    }
+
+    match req(json, "attack")? {
+        Json::Null => o.attack = None,
+        a => {
+            o.attack = Some(AttackConfig {
+                model: req_str(a, "model")?.to_string(),
+                fraction: req_f64(a, "fraction")?,
+                scale: req_f64(a, "scale")?,
+            });
+        }
+    }
+
+    let mut durable = DurableOptions::new("");
+    durable.every_k = req_f64(json, "durable_every_k")? as u32;
+    o.durable = Some(durable);
+
+    let param_dim = req(json, "param_dim")?.as_f64().map(|d| d as usize);
+    Ok((o, param_dim))
+}
+
+/// Write a manifest into a run directory (creating it if needed).
+pub fn write_manifest(dir: &Path, manifest: &Json) -> io::Result<()> {
+    std::fs::create_dir_all(dir)?;
+    std::fs::write(dir.join(MANIFEST_FILE), manifest.pretty() + "\n")
+}
+
+/// Read a run directory's manifest.
+pub fn read_manifest(dir: &Path) -> io::Result<Json> {
+    let text = std::fs::read_to_string(dir.join(MANIFEST_FILE))?;
+    Json::parse(&text).map_err(|e| {
+        io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("bad manifest in {}: {e}", dir.display()),
+        )
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_roundtrips_launch_options() {
+        let opts = LaunchOptions {
+            clients: 6,
+            rounds: 7,
+            network: true,
+            strategy: "fedadam".into(),
+            selection: Selection::Count(4),
+            hardware: HardwareSource::Manual(vec!["gtx-1060".into(), "rtx-3060".into()]),
+            seed: u64::MAX - 7, // exercises the string round-trip
+            population: Some(PopulationOptions { size: 50_000, profile_draws: 128 }),
+            netsim: Some(NetSimConfig { ingress_mbps: 1200.0, ..Default::default() }),
+            attack: Some(AttackConfig::default()),
+            scenario: Scenario::preset("high-churn"),
+            durable: Some(DurableOptions::new("x").every(3)),
+            ..Default::default()
+        };
+        let manifest = manifest_from_options(&opts, Some(24));
+        let (back, param_dim) = options_from_manifest(&manifest).unwrap();
+        assert_eq!(param_dim, Some(24));
+        assert_eq!(back.clients, 6);
+        assert_eq!(back.rounds, 7);
+        assert_eq!(back.strategy, "fedadam");
+        assert_eq!(back.selection, Selection::Count(4));
+        assert_eq!(back.seed, u64::MAX - 7);
+        assert_eq!(back.population, opts.population);
+        assert_eq!(back.netsim, opts.netsim);
+        assert_eq!(back.attack, opts.attack);
+        assert_eq!(back.scenario.as_ref().map(|s| s.name.as_str()), Some("high-churn"));
+        assert_eq!(back.durable.as_ref().map(|d| d.every_k), Some(3));
+        match back.hardware {
+            HardwareSource::Manual(ref names) => assert_eq!(names.len(), 2),
+            ref other => panic!("expected manual hardware, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn checkpoint_cadence_skips_the_final_boundary() {
+        let d = RunDurability {
+            dir: PathBuf::new(),
+            every_k: 2,
+            writer: Arc::new(Mutex::new(
+                // A writer is required structurally; point it at a scratch
+                // log that is dropped with the test.
+                EventLogWriter::create(
+                    &std::env::temp_dir().join(format!(
+                        "bouquetfl-cadence-{}.log",
+                        std::process::id()
+                    )),
+                    &LogMeta {
+                        strategy: "fedavg".into(),
+                        scenario: "stable".into(),
+                        seed: 0,
+                        rounds: 6,
+                        clients: 2,
+                    },
+                )
+                .unwrap(),
+            )),
+            start_round: 0,
+            resume: None,
+            prefix: Vec::new(),
+            crash: None,
+        };
+        assert!(!d.checkpoint_due(1, 6));
+        assert!(d.checkpoint_due(2, 6));
+        assert!(d.checkpoint_due(4, 6));
+        assert!(!d.checkpoint_due(6, 6), "final boundary writes nothing");
+        let never = RunDurability { every_k: 0, ..d };
+        assert!(!never.checkpoint_due(2, 6));
+    }
+}

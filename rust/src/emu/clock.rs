@@ -33,6 +33,14 @@ impl VirtualClock {
         Self::new(ClockMode::FastForward)
     }
 
+    /// A clock resumed at a checkpointed instant: identical to a clock that
+    /// advanced to `now_s` and never slept (`durable::checkpoint` restores
+    /// the scenario timeline through this).
+    pub fn resume_at(now_s: f64, mode: ClockMode) -> Self {
+        assert!(now_s >= 0.0, "resume_at({now_s})");
+        VirtualClock { now_s, mode }
+    }
+
     /// Current emulated time in seconds since clock creation.
     pub fn now_s(&self) -> f64 {
         self.now_s

@@ -57,6 +57,9 @@ pub enum FlError {
 
     #[error("parameter dimension mismatch: expected {expected}, got {got}")]
     ParamMismatch { expected: usize, got: usize },
+
+    #[error("durable run: {0}")]
+    Durable(String),
 }
 
 /// Failures in the PJRT runtime / artifact loading.

@@ -144,6 +144,17 @@ pub trait AttackModel: Send {
     /// Observe the engine's event stream (round boundaries, evaluations).
     /// Default: ignore — only adaptive models key off it.
     fn observe(&mut self, _event: &FlEvent<'_>) {}
+
+    /// Serialize cross-round adaptive state for a checkpoint
+    /// (`durable::checkpoint`).  Default: empty — stateless models (every
+    /// built-in except `adaptive`) need no changes.
+    fn state_blob(&self) -> Vec<u8> {
+        Vec::new()
+    }
+
+    /// Restore state captured by [`AttackModel::state_blob`] on a freshly
+    /// built model; an empty blob must reset to the fresh state.
+    fn restore_state(&mut self, _blob: &[u8]) {}
 }
 
 /// Constructor stored in the registry: builds a model from the resolved
@@ -413,6 +424,19 @@ impl Attack {
         self.model.observe(event);
     }
 
+    /// The model's cross-round state for a checkpoint (empty for every
+    /// stateless built-in; the adaptive model serializes its boost).
+    pub fn state_blob(&self) -> Vec<u8> {
+        self.model.state_blob()
+    }
+
+    /// Restore the model's cross-round state from
+    /// [`Attack::state_blob`] — part of `resume_from`'s bit-identity
+    /// contract (`durable::checkpoint`).
+    pub fn restore_state(&mut self, blob: &[u8]) {
+        self.model.restore_state(blob);
+    }
+
     /// One-line human description for run headers.
     pub fn describe(&self) -> String {
         format!("{} [{}]", self.cfg.describe(), self.model.kind())
@@ -589,6 +613,15 @@ impl AttackModel for Adaptive {
         if let FlEvent::Evaluated { loss, .. } = event {
             self.boost = (1.0 + 1.0 / (*loss as f64).max(1e-3)).min(50.0);
         }
+    }
+    fn state_blob(&self) -> Vec<u8> {
+        self.boost.to_le_bytes().to_vec()
+    }
+    fn restore_state(&mut self, blob: &[u8]) {
+        self.boost = match blob.try_into() {
+            Ok(bytes) => f64::from_le_bytes(bytes),
+            Err(_) => 1.0,
+        };
     }
 }
 

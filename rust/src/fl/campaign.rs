@@ -28,7 +28,8 @@
 //! it, changes no other cell's result ([`cell_seed`]).
 #![deny(missing_docs)]
 
-use std::io::Write as _;
+use std::fs::File;
+use std::io::{Seek as _, SeekFrom, Write as _};
 use std::path::Path;
 
 use crate::util::json::Json;
@@ -80,6 +81,16 @@ pub fn attacked_cell_seed(
         Some(a) => splitmix64(base ^ splitmix64(fnv1a64(a)).rotate_left(29)),
     }
 }
+
+/// File holding one JSONL row per finished cell inside a durable
+/// campaign directory ([`Campaign::run_durable`]).
+pub const CELLS_FILE: &str = "cells.jsonl";
+
+/// Cursor file recording the grid fingerprint and the finished-cell
+/// count inside a durable campaign directory.
+pub const CURSOR_FILE: &str = "cursor";
+
+const CURSOR_HEADER: &str = "bouquetfl-campaign v1";
 
 /// One cell of the sweep grid.
 #[derive(Debug, Clone, PartialEq)]
@@ -227,6 +238,159 @@ impl Campaign {
         CampaignReport { name: self.name.clone(), cells }
     }
 
+    /// An order-sensitive fingerprint of the sweep grid (name, base
+    /// shape, and every cell's coordinates + derived seed).  A resumed
+    /// campaign must present the *same* grid the cursor was written
+    /// against — resuming a different sweep into the directory is an
+    /// error, not a silent partial merge.
+    fn grid_hash(&self) -> u64 {
+        let mut h = splitmix64(
+            fnv1a64(&self.name)
+                ^ splitmix64((self.base.rounds as u64) ^ ((self.base.clients as u64) << 32)),
+        );
+        for (cell, _) in self.grid() {
+            h = splitmix64(
+                h ^ cell.cell_seed
+                    ^ fnv1a64(&cell.strategy).rotate_left(11)
+                    ^ fnv1a64(&cell.scenario).rotate_left(23)
+                    ^ fnv1a64(cell.attack.as_deref().unwrap_or("none")).rotate_left(37),
+            );
+        }
+        h
+    }
+
+    fn cursor_error(dir: &Path, msg: &str) -> std::io::Error {
+        std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("{}: {msg}", dir.join(CURSOR_FILE).display()),
+        )
+    }
+
+    /// Atomically record `done` finished cells (temp file + fsync +
+    /// rename, like `durable::Checkpoint::save`).
+    fn write_cursor(&self, dir: &Path, done: usize) -> std::io::Result<()> {
+        let tmp = dir.join("cursor.tmp");
+        {
+            let mut f = File::create(&tmp)?;
+            f.write_all(
+                format!("{CURSOR_HEADER}\n{:016x}\n{done}\n", self.grid_hash()).as_bytes(),
+            )?;
+            f.sync_all()?;
+        }
+        std::fs::rename(&tmp, dir.join(CURSOR_FILE))?;
+        if let Ok(d) = File::open(dir) {
+            let _ = d.sync_all();
+        }
+        Ok(())
+    }
+
+    fn read_cursor(&self, dir: &Path) -> std::io::Result<usize> {
+        let text = std::fs::read_to_string(dir.join(CURSOR_FILE))?;
+        let mut lines = text.lines();
+        if lines.next() != Some(CURSOR_HEADER) {
+            return Err(Self::cursor_error(dir, "not a campaign cursor"));
+        }
+        match lines.next() {
+            Some(h) if h == format!("{:016x}", self.grid_hash()) => {}
+            Some(_) => {
+                return Err(Self::cursor_error(
+                    dir,
+                    "grid mismatch: this campaign's axes differ from the recorded run",
+                ))
+            }
+            None => return Err(Self::cursor_error(dir, "missing grid hash")),
+        }
+        let done: usize = lines
+            .next()
+            .and_then(|n| n.trim().parse().ok())
+            .ok_or_else(|| Self::cursor_error(dir, "missing or bad cell count"))?;
+        if done > self.grid().len() {
+            return Err(Self::cursor_error(dir, "cursor is past the end of the grid"));
+        }
+        Ok(done)
+    }
+
+    /// Run the sweep durably into `dir` (DESIGN.md §14): each finished
+    /// cell's JSONL row is appended to `cells.jsonl` and fsynced, then an
+    /// atomically-replaced cursor file records the finished-cell count,
+    /// so a killed campaign loses at most the cell it was running.  Any
+    /// previous recording in `dir` is restarted from scratch; use
+    /// [`Campaign::resume_from`] to continue one.  The returned report
+    /// covers the cells this call ran (here: all of them).
+    pub fn run_durable(&self, dir: impl AsRef<Path>) -> std::io::Result<CampaignReport> {
+        let dir = dir.as_ref();
+        std::fs::create_dir_all(dir)?;
+        let file = File::create(dir.join(CELLS_FILE))?;
+        self.write_cursor(dir, 0)?;
+        self.run_cells_from(dir, file, 0)
+    }
+
+    /// Continue a durable campaign recorded in `dir`: validates that this
+    /// campaign's grid matches the cursor's fingerprint, truncates
+    /// `cells.jsonl` to the recorded number of complete rows (a torn row
+    /// from a mid-append crash is discarded and its cell re-runs), and
+    /// runs the remaining cells.  Per-cell seeds are coordinate-derived,
+    /// so the merged `cells.jsonl` is byte-identical to an uninterrupted
+    /// [`Campaign::run_durable`] — `tests/durable.rs` and the CI
+    /// crash-recovery job both assert it.  The returned report covers
+    /// only the cells this call ran.
+    pub fn resume_from(&self, dir: impl AsRef<Path>) -> std::io::Result<CampaignReport> {
+        let dir = dir.as_ref();
+        let done = self.read_cursor(dir)?;
+        let cells_path = dir.join(CELLS_FILE);
+        let existing = std::fs::read_to_string(&cells_path).unwrap_or_default();
+        let mut keep = 0usize;
+        let mut complete = 0usize;
+        for (i, b) in existing.bytes().enumerate() {
+            if b == b'\n' {
+                complete += 1;
+                keep = i + 1;
+                if complete == done {
+                    break;
+                }
+            }
+        }
+        if complete < done {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!(
+                    "{}: holds {complete} complete rows but the cursor records {done}",
+                    cells_path.display()
+                ),
+            ));
+        }
+        let mut file = std::fs::OpenOptions::new()
+            .create(true)
+            .truncate(false)
+            .read(true)
+            .write(true)
+            .open(&cells_path)?;
+        file.set_len(keep as u64)?;
+        file.seek(SeekFrom::End(0))?;
+        self.run_cells_from(dir, file, done)
+    }
+
+    /// The durable inner loop shared by fresh and resumed recordings.
+    fn run_cells_from(
+        &self,
+        dir: &Path,
+        mut file: File,
+        done: usize,
+    ) -> std::io::Result<CampaignReport> {
+        let mut cells = Vec::new();
+        for (i, (cell, scenario)) in self.grid().into_iter().enumerate() {
+            if i < done {
+                continue;
+            }
+            let outcome = self.run_cell(cell, scenario);
+            file.write_all((outcome.to_json().dump() + "\n").as_bytes())?;
+            file.sync_data()?;
+            self.write_cursor(dir, i + 1)?;
+            cells.push(outcome);
+        }
+        Ok(CampaignReport { name: self.name.clone(), cells })
+    }
+
     fn run_cell(&self, cell: CampaignCell, scenario: &Scenario) -> CellOutcome {
         let mut opts = self.base.clone();
         opts.seed = cell.cell_seed;
@@ -350,6 +514,7 @@ impl CellOutcome {
 }
 
 /// Every cell's outcome, in run order.
+#[derive(Debug, Clone)]
 pub struct CampaignReport {
     /// The campaign's name.
     pub name: String,

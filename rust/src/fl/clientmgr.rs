@@ -67,6 +67,19 @@ impl ClientManager {
         }
     }
 
+    /// Snapshot the selection RNG's raw state for a checkpoint
+    /// (`durable::checkpoint`).  The stream cannot be replayed the way
+    /// dynamics churn can — its draw count depends on per-round cohort
+    /// sizes — so resume restores it verbatim.
+    pub fn rng_state(&self) -> (u64, u64) {
+        self.rng.state_parts()
+    }
+
+    /// Restore the selection RNG from [`ClientManager::rng_state`].
+    pub fn restore_rng(&mut self, state: u64, inc: u64) {
+        self.rng = Pcg::from_state_parts(state, inc);
+    }
+
     /// Indices of the clients participating in this round.
     ///
     /// The static path: `Selection::All` returns the cached identity pool

@@ -29,6 +29,7 @@ use std::path::PathBuf;
 use std::sync::Arc;
 
 use crate::data::{generate, partition, Dataset, PartitionScheme, SyntheticConfig};
+use crate::durable::{LogMeta, RunDurability};
 use crate::emu::{ClockMode, VirtualClock};
 use crate::error::{ConfigError, FlError};
 use crate::hardware::profile::HardwareProfile;
@@ -376,6 +377,31 @@ impl ExperimentBuilder {
     /// synthetic updates) — no artifacts or PJRT runtime needed.
     pub fn simulated(mut self, param_dim: usize) -> Self {
         self.mode = ExecutionMode::Simulated { param_dim };
+        self
+    }
+
+    /// Record the run durably into `dir` (DESIGN.md §14): every event the
+    /// round loop emits is appended to a CRC-framed log and the server's
+    /// cross-round state is checkpointed each round, so a killed run can
+    /// be resumed bit-identically and its outputs replayed offline.
+    pub fn durable(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.opts.durable = Some(crate::durable::DurableOptions::new(dir));
+        self
+    }
+
+    /// Durable recording with explicit options (checkpoint cadence,
+    /// fault-injection crash point).
+    pub fn durable_options(mut self, opts: crate::durable::DurableOptions) -> Self {
+        self.opts.durable = Some(opts);
+        self
+    }
+
+    /// Resume a previously recorded durable run from its directory
+    /// instead of starting at round 0.  The builder's other axes must
+    /// match the original run's (use `durable::read_manifest` /
+    /// `options_from_manifest` to reconstruct them).
+    pub fn resume(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.opts.durable = Some(crate::durable::DurableOptions::resume_dir(dir));
         self
     }
 
@@ -886,6 +912,27 @@ impl Experiment {
                 ExecutionMode::Simulated { .. } => None,
             };
             server = server.with_round_engine(opts.workers, factory);
+        }
+        if let Some(dopt) = &opts.durable {
+            let derr =
+                |e: std::io::Error| FlError::Durable(format!("{}: {e}", dopt.dir.display()));
+            let durability = if dopt.resume {
+                RunDurability::resume(&dopt.dir).map_err(derr)?
+            } else {
+                let meta = LogMeta {
+                    strategy: strategy_name.clone(),
+                    scenario: scenario_name.clone(),
+                    seed: opts.seed,
+                    rounds: opts.rounds,
+                    clients: opts
+                        .population
+                        .as_ref()
+                        .map(|p| p.size)
+                        .unwrap_or(opts.clients),
+                };
+                RunDurability::fresh(&dopt.dir, dopt.every_k, &meta).map_err(derr)?
+            };
+            server = server.with_durable(durability.with_crash(dopt.crash));
         }
 
         let mut clock = match opts.pacing {

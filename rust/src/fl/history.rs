@@ -10,14 +10,14 @@ pub const DROPOUT_REASON_PREFIX: &str = "dropout:";
 pub const DEADLINE_REASON_PREFIX: &str = "deadline:";
 
 /// Record of one client's failure in a round.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct FailureRecord {
     pub client: u32,
     pub reason: String,
 }
 
 /// One round's record.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct RoundRecord {
     pub round: u32,
     pub selected: Vec<u32>,
@@ -34,7 +34,7 @@ pub struct RoundRecord {
 }
 
 /// Federation history.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct History {
     pub rounds: Vec<RoundRecord>,
 }

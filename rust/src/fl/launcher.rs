@@ -127,6 +127,11 @@ pub struct LaunchOptions {
     /// DESIGN.md §13): a seeded fraction of the fleet submits updates
     /// perturbed by the configured attack model at the aggregation seam.
     pub attack: Option<AttackConfig>,
+    /// Durable-run infrastructure (`None` = in-memory only; DESIGN.md
+    /// §14): append every event to a CRC-framed log in the given
+    /// directory and checkpoint the server state at round boundaries so
+    /// the run can crash and resume bit-identically.
+    pub durable: Option<crate::durable::DurableOptions>,
 }
 
 impl Default for LaunchOptions {
@@ -157,6 +162,7 @@ impl Default for LaunchOptions {
             population: None,
             netsim: None,
             attack: None,
+            durable: None,
         }
     }
 }
@@ -202,6 +208,7 @@ pub const CONFIG_SCHEMA: &[(&str, &[&str])] = &[
         ],
     ),
     ("attack", &["enabled", "preset", "model", "fraction", "scale"]),
+    ("durable", &["dir", "every_k"]),
     (
         "scenario",
         &[
@@ -285,6 +292,11 @@ impl LaunchOptions {
             o.network = true;
         }
         o.attack = AttackConfig::from_cfg(cfg)?;
+        if cfg.sections().any(|s| s == "durable") {
+            let dir = cfg.str_or("durable", "dir", "runs/durable");
+            let every_k = cfg.u64_or("durable", "every_k", 1) as u32;
+            o.durable = Some(crate::durable::DurableOptions::new(dir).every(every_k));
+        }
 
         o.partition = match cfg.str_or("data", "partition", "dirichlet").as_str() {
             "iid" => PartitionScheme::Iid,

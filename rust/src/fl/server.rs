@@ -36,6 +36,8 @@ use crate::sched::{
     ExecutorFactory, FitTask, ReorderBuffer, Schedule, Scheduler, Trace, WorkerPool,
 };
 
+use crate::durable::{Checkpoint, EventLogObserver, RunDurability, CHECKPOINT_FILE};
+
 use super::attack::Attack;
 use super::bouquet::BouquetContext;
 use super::client::{ClientApp, ClientId, FitConfig, FitResult};
@@ -207,6 +209,10 @@ pub struct ServerApp {
     /// Recycled parameter buffers shared by client fits and the
     /// aggregation accumulator (EXPERIMENTS.md §Perf).
     scratch: ParamScratch,
+    /// Durable-run harness (DESIGN.md §14): event-log writer, checkpoint
+    /// cadence, and — on resume — the restored state to continue from.
+    /// Consumed by the next run (one run per attachment).
+    durable: Option<RunDurability>,
     pub trace: Trace,
 }
 
@@ -280,6 +286,7 @@ impl ServerApp {
             attack: None,
             observers: Vec::new(),
             scratch: ParamScratch::default(),
+            durable: None,
             trace: Trace::default(),
         }
     }
@@ -376,6 +383,26 @@ impl ServerApp {
         self
     }
 
+    /// Attach durable-run infrastructure (DESIGN.md §14): every event the
+    /// round loop emits is appended to a CRC-framed log, and the server's
+    /// cross-round state is checkpointed at the harness's cadence.  The
+    /// attachment is consumed by the next run — one run per attachment.
+    pub fn with_durable(mut self, durability: RunDurability) -> Self {
+        self.durable = Some(durability);
+        self
+    }
+
+    /// Resume a durable run from its directory: loads the checkpoint,
+    /// truncates the event log to the checkpointed offset, and arranges
+    /// for the next run to continue — bit-identically — from the first
+    /// unfinished round.
+    pub fn resume_from(self, dir: impl AsRef<std::path::Path>) -> Result<Self, FlError> {
+        let dir = dir.as_ref();
+        let durability = RunDurability::resume(dir)
+            .map_err(|e| FlError::Durable(format!("{}: {e}", dir.display())))?;
+        Ok(self.with_durable(durability))
+    }
+
     pub fn num_clients(&self) -> usize {
         self.roster.len()
     }
@@ -444,6 +471,61 @@ impl ServerApp {
         }
         let mut global = init;
         let mut manager = ClientManager::new(self.cfg.seed, self.cfg.selection);
+
+        // --- durable runs (DESIGN.md §14) --------------------------------
+        // Take the harness out of `self` so checkpointing can borrow the
+        // server's disjoint pieces (strategy, attack, dynamics) freely.
+        // On resume: restore every piece of cross-round state from the
+        // checkpoint, replay the log's clean prefix through the observers
+        // (so history/trace/user subscribers see the completed rounds),
+        // and only then subscribe the log writer — replayed events must
+        // not be re-appended.
+        let mut durable = self.durable.take();
+        let start_round = match durable.as_mut().and_then(|d| d.take_resume()) {
+            Some(ckpt) => {
+                if ckpt.global.len() != global.len() {
+                    return Err(FlError::Durable(format!(
+                        "checkpoint holds {} params but the model has {}",
+                        ckpt.global.len(),
+                        global.len()
+                    )));
+                }
+                global = ParamVector::from_vec(ckpt.global);
+                *clock = VirtualClock::resume_at(ckpt.clock_s, clock.mode());
+                manager.restore_rng(ckpt.manager_rng.0, ckpt.manager_rng.1);
+                self.strategy.restore_state(&ckpt.strategy_blob);
+                if let Some(atk) = self.attack.as_mut() {
+                    atk.restore_state(&ckpt.attack_blob);
+                }
+                if let Some((rounds_begun, now_s)) = ckpt.dynamics {
+                    match self.dynamics.as_mut() {
+                        Some(d) => d.restore_timeline(rounds_begun, now_s),
+                        None => {
+                            return Err(FlError::Durable(
+                                "checkpoint carries dynamics state but the server \
+                                 has no scenario"
+                                    .into(),
+                            ))
+                        }
+                    }
+                }
+                ckpt.next_round
+            }
+            None => 0,
+        };
+        if let Some(d) = durable.as_mut() {
+            for owned in d.take_prefix() {
+                if let Some(event) = owned.as_event() {
+                    recorder.on_event(&event);
+                    tracer.on_event(&event);
+                    for observer in self.observers.iter_mut() {
+                        observer.on_event(&event);
+                    }
+                }
+            }
+            self.observers.push(Box::new(EventLogObserver::new(d.writer())));
+        }
+
         let pool = if self.workers > 1 {
             Some(WorkerPool::spawn_scratched(
                 self.workers,
@@ -453,14 +535,16 @@ impl ServerApp {
         } else {
             None
         };
-        notify(
-            recorder,
-            tracer,
-            &mut self.observers,
-            FlEvent::RunBegin { rounds: self.cfg.rounds, clients: roster_len },
-        );
+        if start_round == 0 {
+            notify(
+                recorder,
+                tracer,
+                &mut self.observers,
+                FlEvent::RunBegin { rounds: self.cfg.rounds, clients: roster_len },
+            );
+        }
 
-        for round in 0..self.cfg.rounds {
+        for round in start_round..self.cfg.rounds {
             let host_t0 = Instant::now();
 
             // --- dynamics: churn + eligibility ---------------------------
@@ -521,6 +605,17 @@ impl ServerApp {
                             FlEvent::RoundSkipped { round, wait_s: wait },
                         );
                         notify_round_end(recorder, tracer, &mut self.observers, record);
+                        durable_round_boundary(
+                            durable.as_ref(),
+                            Some(&*d),
+                            &*self.strategy,
+                            self.attack.as_ref(),
+                            self.cfg.rounds,
+                            round,
+                            &global,
+                            &manager,
+                            clock,
+                        )?;
                         continue;
                     }
                     Cow::Owned(sel)
@@ -715,6 +810,17 @@ impl ServerApp {
                     host_round_s: host_t0.elapsed().as_secs_f64(),
                 };
                 notify_round_end(recorder, tracer, &mut self.observers, record);
+                durable_round_boundary(
+                    durable.as_ref(),
+                    self.dynamics.as_ref(),
+                    &*self.strategy,
+                    self.attack.as_ref(),
+                    self.cfg.rounds,
+                    round,
+                    &global,
+                    &manager,
+                    clock,
+                )?;
                 continue;
             }
 
@@ -806,6 +912,17 @@ impl ServerApp {
                 host_round_s: host_t0.elapsed().as_secs_f64(),
             };
             notify_round_end(recorder, tracer, &mut self.observers, record);
+            durable_round_boundary(
+                durable.as_ref(),
+                self.dynamics.as_ref(),
+                &*self.strategy,
+                self.attack.as_ref(),
+                self.cfg.rounds,
+                round,
+                &global,
+                &manager,
+                clock,
+            )?;
         }
         notify(
             recorder,
@@ -813,6 +930,9 @@ impl ServerApp {
             &mut self.observers,
             FlEvent::RunEnd { rounds: self.cfg.rounds },
         );
+        if let Some(d) = durable.as_ref() {
+            let _ = d.lock_writer().sync();
+        }
         Ok(global)
     }
 
@@ -1054,6 +1174,56 @@ fn notify_round_end(
         observer.on_event(&event);
     }
     recorder.push(record);
+}
+
+/// Durable-run round boundary (DESIGN.md §14), called after every
+/// `RoundEnd`: flush the event log and snapshot the server's cross-round
+/// state when the cadence says so, then fire the fault-injection hook.
+/// The checkpoint is taken *after* the flush so its `log_offset` covers
+/// every event of the finished round; between rounds the aggregation
+/// accumulator and the dynamics gate are provably empty, so the snapshot
+/// here is the complete server state.
+#[allow(clippy::too_many_arguments)]
+fn durable_round_boundary(
+    durable: Option<&RunDurability>,
+    dynamics: Option<&FederationDynamics>,
+    strategy: &dyn Strategy,
+    attack: Option<&Attack>,
+    total_rounds: u32,
+    round: u32,
+    global: &ParamVector,
+    manager: &ClientManager,
+    clock: &VirtualClock,
+) -> Result<(), FlError> {
+    let Some(d) = durable else { return Ok(()) };
+    let durable_err = |e: std::io::Error| FlError::Durable(format!("{}: {e}", d.dir().display()));
+    let next_round = round + 1;
+    if d.checkpoint_due(next_round, total_rounds) {
+        let log_offset = {
+            let mut w = d.lock_writer();
+            w.sync().map_err(durable_err)?;
+            w.offset()
+        };
+        let ckpt = Checkpoint {
+            next_round,
+            log_offset,
+            every_k: d.every_k(),
+            clock_s: clock.now_s(),
+            dynamics: dynamics.map(|dy| (dy.rounds_begun(), dy.now_s())),
+            manager_rng: manager.rng_state(),
+            global: global.as_slice().to_vec(),
+            strategy_blob: strategy.state_blob(),
+            attack_blob: attack.map(|a| a.state_blob()).unwrap_or_default(),
+        };
+        ckpt.save(&d.dir().join(CHECKPOINT_FILE)).map_err(durable_err)?;
+    }
+    if d.should_crash(round) {
+        d.lock_writer().sync().map_err(durable_err)?;
+        return Err(FlError::Durable(format!(
+            "crash point: injected fault after round {round}"
+        )));
+    }
+    Ok(())
 }
 
 /// The paper-default engine: fits run sequentially in this thread,

@@ -95,4 +95,45 @@ impl Strategy for FedAdam {
         let avg = weighted_average(results, executor)?;
         self.apply(global, &avg)
     }
+
+    /// Adam state as `[t u32 LE][n u64 LE][n x m f32][n x v f32]`; empty
+    /// before the first step.
+    fn state_blob(&self) -> Vec<u8> {
+        let (m, v) = match (&self.m, &self.v) {
+            (Some(m), Some(v)) => (m, v),
+            _ => return Vec::new(),
+        };
+        let mut out = Vec::with_capacity(12 + 8 * m.len());
+        out.extend_from_slice(&self.t.to_le_bytes());
+        out.extend_from_slice(&(m.len() as u64).to_le_bytes());
+        for x in m {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+        for x in v {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+        out
+    }
+
+    fn restore_state(&mut self, blob: &[u8]) {
+        if blob.len() < 12 {
+            (self.m, self.v, self.t) = (None, None, 0);
+            return;
+        }
+        let t = u32::from_le_bytes(blob[..4].try_into().unwrap());
+        let n = u64::from_le_bytes(blob[4..12].try_into().unwrap()) as usize;
+        let body = &blob[12..];
+        if body.len() != 8 * n {
+            (self.m, self.v, self.t) = (None, None, 0);
+            return;
+        }
+        let f32s = |b: &[u8]| -> Vec<f32> {
+            b.chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect()
+        };
+        self.m = Some(f32s(&body[..4 * n]));
+        self.v = Some(f32s(&body[4 * n..]));
+        self.t = t;
+    }
 }

@@ -8,6 +8,24 @@ use super::super::client::FitResult;
 use super::super::params::{ParamScratch, ParamVector};
 use super::{weighted_average, AccOutput, AggAccumulator, Strategy, StreamingMean};
 
+/// Decode a `[n u64 LE][n x f32 LE]` blob; `None` on empty or malformed
+/// input (treated as "no state yet").
+pub(super) fn decode_f32_vec(blob: &[u8]) -> Option<Vec<f32>> {
+    if blob.len() < 8 {
+        return None;
+    }
+    let n = u64::from_le_bytes(blob[..8].try_into().unwrap()) as usize;
+    let body = &blob[8..];
+    if body.len() != 4 * n {
+        return None;
+    }
+    Some(
+        body.chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect(),
+    )
+}
+
 /// Server momentum over round updates: `m <- beta m + (avg - global)`,
 /// `global <- global + m`.
 #[derive(Debug)]
@@ -73,6 +91,26 @@ impl Strategy for FedAvgM {
             AccOutput::Mean(mean) => Ok(self.apply(global, &mean.params)),
             AccOutput::Buffered(results) => self.aggregate(global, &results, executor),
         }
+    }
+
+    /// Momentum vector as `[n u64 LE][n x f32 LE]`; empty before round 1.
+    fn state_blob(&self) -> Vec<u8> {
+        match &self.momentum {
+            None => Vec::new(),
+            Some(m) => {
+                let s = m.as_slice();
+                let mut out = Vec::with_capacity(8 + 4 * s.len());
+                out.extend_from_slice(&(s.len() as u64).to_le_bytes());
+                for x in s {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+                out
+            }
+        }
+    }
+
+    fn restore_state(&mut self, blob: &[u8]) {
+        self.momentum = decode_f32_vec(blob).map(ParamVector::from_vec);
     }
 
     fn aggregate(

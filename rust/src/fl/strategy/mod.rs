@@ -134,6 +134,21 @@ pub trait Strategy {
         FitConfig { round, ..base.clone() }
     }
 
+    /// Serialize the strategy's cross-round server state for a checkpoint
+    /// (`durable::checkpoint`): an opaque blob [`Strategy::restore_state`]
+    /// rebuilds bit-identically.  Stateless strategies — the default, and
+    /// every built-in except FedAvgM (momentum) and FedAdam (Adam
+    /// moments) — return an empty blob, so custom strategies need no
+    /// changes unless they carry state between rounds.
+    fn state_blob(&self) -> Vec<u8> {
+        Vec::new()
+    }
+
+    /// Restore cross-round state captured by [`Strategy::state_blob`] on a
+    /// freshly built instance.  Must accept its own blobs from the same
+    /// strategy version; an empty blob means "fresh" and must reset.
+    fn restore_state(&mut self, _blob: &[u8]) {}
+
     /// Streaming accumulator for one round.  The round engine feeds it every
     /// surviving client in selection order, then calls [`Strategy::reduce`].
     ///

@@ -9,7 +9,9 @@
 //!   hardware-emulation substrate ([`emu`]), hardware databases + the
 //!   Steam-survey sampler ([`hardware`]), client schedulers and the
 //!   concurrent round engine ([`sched`]), the contention-aware
-//!   communication simulator with update codecs ([`netsim`]), and the
+//!   communication simulator with update codecs ([`netsim`]), the
+//!   durable-run infrastructure — CRC-framed event logs,
+//!   checkpoint/resume, offline replay ([`durable`]) — and the
 //!   analysis/figure harness ([`analysis`]).
 //! * **L2** — the training computation (a compact CNN) written in JAX
 //!   (`python/compile/model.py`), AOT-lowered once to HLO text.
@@ -26,6 +28,7 @@
 
 pub mod analysis;
 pub mod data;
+pub mod durable;
 pub mod emu;
 pub mod error;
 pub mod fl;

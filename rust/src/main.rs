@@ -8,15 +8,21 @@
 //!   dataloader       §4.2 CPU data-loading sweep
 //!   ram              §4.2 RAM-size sweep
 //!   list-hw          list GPUs / CPUs / presets in the databases
+//!   replay           rebuild history/trace/report from a durable run's event log
+//!   resume           continue a killed durable run from its directory
 //!
 //! `bouquetfl <cmd> --help` shows per-command options.
+
+use std::path::Path;
 
 use anyhow::{bail, Result};
 
 use bouquetfl::analysis::{claims, fig2, report};
 use bouquetfl::data::PartitionScheme;
+use bouquetfl::durable::{self, DurableOptions};
 use bouquetfl::emu::EmulationMode;
 use bouquetfl::fl::attack::{self, AttackConfig, ATTACK_PRESETS};
+use bouquetfl::fl::experiment::ExperimentBuilder;
 use bouquetfl::fl::launcher::{launch, HardwareSource, LaunchOptions};
 use bouquetfl::fl::{strategy, Scenario, Selection, MODEL_KINDS, SCENARIO_PRESETS};
 use bouquetfl::hardware::profile::PRESET_NAMES;
@@ -41,6 +47,8 @@ fn main() -> Result<()> {
         "ram" => cmd_ram(&raw),
         "list" => cmd_list(&raw),
         "list-hw" => cmd_list_hw(&raw),
+        "replay" => cmd_replay(&raw),
+        "resume" => cmd_resume(&raw),
         "help" | "--help" | "-h" => {
             print_global_help();
             Ok(())
@@ -64,7 +72,9 @@ fn print_global_help() {
          \x20 dataloader       CPU data-loading sweep (paper §4.2)\n\
          \x20 ram              RAM-size sweep (paper §4.2)\n\
          \x20 list             list registered strategies / schedulers / scenarios / codecs / hardware\n\
-         \x20 list-hw          list known GPUs / CPUs / profile presets"
+         \x20 list-hw          list known GPUs / CPUs / profile presets\n\
+         \x20 replay           rebuild history/trace/report from a durable run's event log (DESIGN.md §14)\n\
+         \x20 resume           continue a killed durable run from its directory"
     );
 }
 
@@ -164,6 +174,8 @@ fn run_specs() -> Vec<OptSpec> {
         OptSpec { name: "history-out", help: "write round history JSON here", takes_value: true, default: None },
         OptSpec { name: "trace-out", help: "write Chrome-trace JSON of client fits here", takes_value: true, default: None },
         OptSpec { name: "pace", help: "real-time pacing scale (e.g. 0.1 sleeps 0.1s per emulated second)", takes_value: true, default: None },
+        OptSpec { name: "durable", help: "record the run durably into this directory (event log + checkpoints + manifest; resumable via `bouquetfl resume`)", takes_value: true, default: None },
+        OptSpec { name: "durable-every", help: "checkpoint every K rounds (0 = log only, unresumable)", takes_value: true, default: Some("1") },
         OptSpec { name: "help", help: "show help", takes_value: false, default: None },
     ]
 }
@@ -225,6 +237,16 @@ fn cmd_run(raw: &[String]) -> Result<()> {
                 ATTACK_PRESETS.join("|")
             )
         })?);
+    }
+
+    if let Some(dir) = args.get("durable") {
+        let every_k = args.get_u64("durable-every")?.unwrap() as u32;
+        opts.durable = Some(DurableOptions::new(dir).every(every_k));
+        // The manifest is what `bouquetfl resume` rebuilds the launch
+        // options from — written before the run so even a round-0 crash
+        // leaves a resumable directory.
+        durable::write_manifest(Path::new(dir), &durable::manifest_from_options(&opts, None))?;
+        println!("durable: recording into {dir} (checkpoint every {every_k} round(s))");
     }
 
     println!("host: {}", opts.host.describe());
@@ -448,5 +470,91 @@ fn cmd_list_hw(raw: &[String]) -> Result<()> {
         }
         let _ = HardwareProfile::paper_host();
     }
+    Ok(())
+}
+
+fn cmd_replay(raw: &[String]) -> Result<()> {
+    let specs = vec![
+        OptSpec { name: "history-out", help: "write the reconstructed history JSON here", takes_value: true, default: None },
+        OptSpec { name: "trace-out", help: "write the reconstructed Chrome trace here", takes_value: true, default: None },
+        OptSpec { name: "help", help: "show help", takes_value: false, default: None },
+    ];
+    let args = Args::parse(&raw[1..], &specs)?;
+    if args.get_bool("help") || args.positional.is_empty() {
+        println!(
+            "{}",
+            render_help(
+                "bouquetfl replay <run-dir-or-log>",
+                "rebuild history/trace/report from a durable run's event log \
+                 (no re-execution; DESIGN.md §14)",
+                &specs
+            )
+        );
+        if args.get_bool("help") {
+            return Ok(());
+        }
+        bail!("expected a durable run directory or an event-log path");
+    }
+    let arg = Path::new(&args.positional[0]);
+    let path =
+        if arg.is_dir() { arg.join(durable::EVENT_LOG_FILE) } else { arg.to_path_buf() };
+    let replayed = durable::replay(&path)?;
+    if let Some(meta) = &replayed.meta {
+        println!(
+            "log: strategy {}, scenario {}, seed {}, {} round(s) planned, {} client(s)",
+            meta.strategy, meta.scenario, meta.seed, meta.rounds, meta.clients
+        );
+    }
+    if replayed.truncated {
+        println!("torn tail discarded — clean prefix ends at byte {}", replayed.clean_offset);
+    }
+    if !replayed.complete {
+        println!("run did not finish (no RunEnd in the log) — resume it with `bouquetfl resume`");
+    }
+    println!("{}", replayed.history.summary());
+    println!("{}", replayed.report_json().pretty());
+    if let Some(out) = args.get("history-out") {
+        std::fs::write(out, replayed.history.to_json().pretty())?;
+        println!("wrote history to {out}");
+    }
+    if let Some(out) = args.get("trace-out") {
+        std::fs::write(out, replayed.trace.to_chrome_json().pretty())?;
+        println!("wrote Chrome trace to {out} (open in chrome://tracing or Perfetto)");
+    }
+    Ok(())
+}
+
+fn cmd_resume(raw: &[String]) -> Result<()> {
+    let specs = vec![
+        OptSpec { name: "help", help: "show help", takes_value: false, default: None },
+    ];
+    let args = Args::parse(&raw[1..], &specs)?;
+    if args.get_bool("help") || args.positional.is_empty() {
+        println!(
+            "{}",
+            render_help(
+                "bouquetfl resume <run-dir>",
+                "continue a killed durable run bit-identically from its last \
+                 checkpoint (the directory `bouquetfl run --durable` wrote)",
+                &specs
+            )
+        );
+        if args.get_bool("help") {
+            return Ok(());
+        }
+        bail!("expected a durable run directory");
+    }
+    let dir = Path::new(&args.positional[0]);
+    let manifest = durable::read_manifest(dir)?;
+    let (mut opts, param_dim) = durable::options_from_manifest(&manifest)?;
+    opts.durable = Some(DurableOptions::resume_dir(dir));
+    println!("resuming from {}", dir.display());
+    let mut builder = ExperimentBuilder::from_options(opts);
+    if let Some(dim) = param_dim {
+        builder = builder.simulated(dim);
+    }
+    let outcome = builder.build()?.run()?;
+    println!("{}", outcome.history.summary());
+    println!("{}", outcome.to_json().pretty());
     Ok(())
 }

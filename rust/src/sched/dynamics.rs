@@ -608,6 +608,34 @@ impl FederationDynamics {
         self.now_s += dt_s;
     }
 
+    /// Rounds begun so far — with [`FederationDynamics::now_s`], the whole
+    /// restore surface a checkpoint needs (`durable::checkpoint`).
+    pub fn rounds_begun(&self) -> u64 {
+        self.rounds_begun
+    }
+
+    /// Fast-forward a *fresh* dynamics instance to a checkpointed position:
+    /// replay `rounds_begun` churn rounds and set the scenario clock.
+    ///
+    /// This is a pure replay, not a deserialization — it works because
+    /// every stream here is a deterministic function of the construction
+    /// seed: the dense churn sweep draws one `f64` per client in index
+    /// order regardless of membership, lazy chains are pure in
+    /// `(seed, client, round)`, and availability traces are query-order
+    /// independent.  The resulting state is bit-identical to an instance
+    /// that lived through those rounds.
+    pub fn restore_timeline(&mut self, rounds_begun: u64, now_s: f64) {
+        assert_eq!(
+            self.rounds_begun, 0,
+            "restore_timeline on a dynamics instance that already ran"
+        );
+        assert!(now_s >= 0.0, "restore_timeline({rounds_begun}, {now_s})");
+        for _ in 0..rounds_begun {
+            self.begin_round();
+        }
+        self.now_s = now_s;
+    }
+
     pub fn num_clients(&self) -> usize {
         self.clients
     }
@@ -1108,6 +1136,26 @@ mod tests {
         // return is client 9's at t = 25.
         let w = d.next_wakeup_after(10.0).expect("someone returns");
         assert_eq!(w, 25.0);
+    }
+
+    #[test]
+    fn restore_timeline_replays_the_churn_exactly() {
+        let model = AvailabilityModel::AlwaysOn;
+        let mk = || FederationDynamics::new(13, 20, &model, 0.3, 0.4, f64::INFINITY, 1);
+        let mut lived = mk();
+        for _ in 0..7 {
+            lived.begin_round();
+            lived.advance(12.5);
+        }
+        let mut restored = mk();
+        restored.restore_timeline(lived.rounds_begun(), lived.now_s());
+        assert_eq!(restored.rounds_begun(), 7);
+        assert_eq!(restored.now_s().to_bits(), lived.now_s().to_bits());
+        assert_eq!(restored.eligible_at(0.0), lived.eligible_at(0.0));
+        // The *next* round draws the same stream too.
+        lived.begin_round();
+        restored.begin_round();
+        assert_eq!(restored.eligible_at(0.0), lived.eligible_at(0.0));
     }
 
     #[test]

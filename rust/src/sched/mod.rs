@@ -93,7 +93,7 @@ pub fn for_parallelism(max_parallel: usize) -> Box<dyn Scheduler> {
 }
 
 /// A computed round schedule.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Schedule {
     /// Emulated wall-clock of the whole round.
     pub round_s: f64,

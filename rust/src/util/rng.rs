@@ -29,6 +29,18 @@ impl Pcg {
         Self::new(seed, 0)
     }
 
+    /// The generator's raw `(state, inc)` pair — everything a checkpoint
+    /// needs to resume the stream bit-identically (`durable::checkpoint`).
+    pub fn state_parts(&self) -> (u64, u64) {
+        (self.state, self.inc)
+    }
+
+    /// Rebuild a generator from [`Pcg::state_parts`]; the next draw equals
+    /// what the snapshotted generator would have produced.
+    pub fn from_state_parts(state: u64, inc: u64) -> Self {
+        Pcg { state, inc }
+    }
+
     /// Derive an independent child generator (for per-client RNGs).
     pub fn fork(&mut self, stream: u64) -> Pcg {
         Pcg::new(self.next_u64(), stream.wrapping_mul(2).wrapping_add(1))

@@ -1,0 +1,694 @@
+//! Crash-recovery proof harness for the durable run infrastructure
+//! (DESIGN.md §14).
+//!
+//! What is exercised here, deterministically and in-process:
+//!
+//! - **Torn-write sweeps** — the event log is cut at *every* byte offset
+//!   and every byte is flipped in place; the reader must always recover
+//!   exactly the maximal clean prefix and never panic.
+//! - **Bit-identical resume** — runs are crashed at a round boundary via
+//!   the injected [`CrashPoint`](bouquetfl::durable::CrashPoint) fault
+//!   (the on-disk state of a SIGKILL between rounds) and resumed; the
+//!   merged outputs must match an uninterrupted run bit for bit across
+//!   scenarios × worker counts × {netsim, attack, plain} axes.
+//! - **Replay-vs-live equivalence** — a log alone must reconstruct the
+//!   live run's history/trace/report byte-identically, for materialized
+//!   and population-scale federations.
+//! - **Campaign recovery** — a doctored half-finished sweep directory
+//!   (torn trailing row + rewound cursor) resumes to the exact bytes of
+//!   a never-interrupted campaign, and a mismatched grid is rejected.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use bouquetfl::durable::eventlog::LOG_HEADER_LEN;
+use bouquetfl::durable::{
+    parse_log, replay, Checkpoint, DurableOptions, LogMeta, OwnedFlEvent, CHECKPOINT_FILE,
+    EVENT_LOG_FILE,
+};
+use bouquetfl::fl::history::FailureRecord;
+use bouquetfl::fl::launcher::{HardwareSource, LaunchOptions};
+use bouquetfl::fl::{
+    Campaign, CommDirection, Experiment, ExperimentBuilder, ExperimentReport, History,
+    ParamVector, RoundRecord, Scenario, Selection,
+};
+use bouquetfl::sched::Schedule;
+
+const PROFILES: [&str; 2] = ["gtx-1060", "rtx-3060"];
+
+// ---------------------------------------------------------------------------
+// Scratch directories (no tempfile dependency).
+
+static DIR_SEQ: AtomicUsize = AtomicUsize::new(0);
+
+struct TempDir(PathBuf);
+
+impl TempDir {
+    fn new(tag: &str) -> TempDir {
+        let path = std::env::temp_dir().join(format!(
+            "bouquetfl-durable-{tag}-{}-{}",
+            std::process::id(),
+            DIR_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        let _ = std::fs::remove_dir_all(&path);
+        TempDir(path)
+    }
+
+    fn path(&self) -> &Path {
+        &self.0
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared experiment shapes and bit-exact comparison helpers.
+
+/// The orthogonal feature axis a matrix cell runs under.
+#[derive(Clone, Copy, Debug)]
+enum Axis {
+    /// No netsim, no attack (fedavgm keeps cross-round strategy state).
+    Plain,
+    /// Contention-aware communication timeline (fedadam: two moments).
+    Netsim,
+    /// Sign-flip poisoning on a random participant subset.
+    Attack,
+}
+
+fn sim_experiment(scenario: &str, workers: usize, axis: Axis, seed: u64) -> ExperimentBuilder {
+    let b = Experiment::builder()
+        .clients(6)
+        .rounds(7)
+        .profiles(&PROFILES)
+        .workers(workers)
+        .seed(seed)
+        .eval_every(0)
+        .fail_on_empty_round(false)
+        .scenario_named(scenario)
+        .simulated(24);
+    match axis {
+        Axis::Plain => b.strategy("fedavgm").selection(Selection::All),
+        Axis::Netsim => b
+            .strategy("fedadam")
+            .selection(Selection::Count(4))
+            .netsim_named("congested-cell"),
+        Axis::Attack => b
+            .strategy("fedavg")
+            .selection(Selection::Fraction(0.5))
+            .attack_named("sign-flip"),
+    }
+}
+
+fn run_ok(builder: ExperimentBuilder, label: &str) -> ExperimentReport {
+    builder
+        .build()
+        .unwrap_or_else(|e| panic!("{label}: build failed: {e}"))
+        .run()
+        .unwrap_or_else(|e| panic!("{label}: run failed: {e}"))
+}
+
+/// Run with an injected crash point and assert the run died at it.
+fn run_crash(builder: ExperimentBuilder, opts: DurableOptions, label: &str) {
+    let outcome = builder
+        .durable_options(opts)
+        .build()
+        .unwrap_or_else(|e| panic!("{label}: build failed: {e}"))
+        .run();
+    match outcome {
+        Ok(_) => panic!("{label}: crash-point run unexpectedly succeeded"),
+        Err(e) => {
+            let msg = format!("{e}");
+            assert!(msg.contains("crash point"), "{label}: unexpected error: {msg}");
+        }
+    }
+}
+
+/// History canonicalized for resume comparisons: `host_round_s` measures
+/// *this process's* wall clock, so a resumed run legitimately differs
+/// there (its early rounds carry the crashed process's timings).  Every
+/// other field must survive bit-exactly, which the JSON encoding (exact
+/// shortest-roundtrip floats) preserves.
+fn canon_history(h: &History) -> String {
+    let mut h = h.clone();
+    for r in &mut h.rounds {
+        r.host_round_s = 0.0;
+    }
+    h.to_json().pretty()
+}
+
+fn global_bits(p: &ParamVector) -> Vec<u32> {
+    p.as_slice().iter().map(|x| x.to_bits()).collect()
+}
+
+fn assert_same_run(label: &str, a: &ExperimentReport, b: &ExperimentReport) {
+    assert_eq!(canon_history(&a.history), canon_history(&b.history), "{label}: history");
+    assert_eq!(global_bits(&a.global), global_bits(&b.global), "{label}: global model");
+    assert_eq!(
+        a.trace.to_chrome_json().dump(),
+        b.trace.to_chrome_json().dump(),
+        "{label}: trace"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Frame-level encoding.
+
+/// One of every [`OwnedFlEvent`] variant, with edge shapes (empty vecs,
+/// `None` evals, empty strings) mixed in.
+fn sample_events() -> Vec<OwnedFlEvent> {
+    vec![
+        OwnedFlEvent::Meta(LogMeta {
+            strategy: "fedadam".into(),
+            scenario: "high-churn".into(),
+            seed: u64::MAX - 1,
+            rounds: 12,
+            clients: 50_000,
+        }),
+        OwnedFlEvent::RunBegin { rounds: 12, clients: 50_000 },
+        OwnedFlEvent::RoundBegin { round: 3, selected: vec![0, 5, 2] },
+        OwnedFlEvent::RoundBegin { round: 4, selected: vec![] },
+        OwnedFlEvent::RoundSkipped { round: 5, wait_s: 12.25 },
+        OwnedFlEvent::ClientDone { round: 3, client: 5, fit_s: 8.5 },
+        OwnedFlEvent::ClientFailed {
+            round: 3,
+            client: 2,
+            reason: "dropout: went offline at 4.5s".into(),
+        },
+        OwnedFlEvent::ClientFailed { round: 3, client: 0, reason: String::new() },
+        OwnedFlEvent::AttackInjected { round: 3, client: 5, model: "sign-flip".into() },
+        OwnedFlEvent::CommStarted {
+            round: 3,
+            client: 5,
+            direction: CommDirection::Download,
+            at_s: 0.5,
+            wire_bytes: 1 << 20,
+        },
+        OwnedFlEvent::CommFinished {
+            round: 3,
+            client: 5,
+            direction: CommDirection::Upload,
+            at_s: 9.75,
+        },
+        OwnedFlEvent::RoundScheduled {
+            round: 3,
+            base_s: 100.0,
+            schedule: Schedule {
+                round_s: 9.75,
+                spans: vec![(5, 0.5, 9.75), (0, 0.0, 0.0)],
+            },
+        },
+        OwnedFlEvent::Aggregated { round: 3, survivors: 1 },
+        OwnedFlEvent::Evaluated { round: 3, loss: 0.625, accuracy: 0.5 },
+        OwnedFlEvent::RoundEnd {
+            record: RoundRecord {
+                round: 3,
+                selected: vec![5, 2, 0],
+                failures: vec![FailureRecord { client: 2, reason: "late".into() }],
+                train_loss: 0.75,
+                eval_loss: Some(0.5),
+                eval_accuracy: Some(0.25),
+                emu_round_s: 9.75,
+                host_round_s: 0.001953125,
+            },
+        },
+        OwnedFlEvent::RoundEnd {
+            record: RoundRecord {
+                round: 4,
+                selected: vec![],
+                failures: vec![],
+                train_loss: 1.5,
+                eval_loss: None,
+                eval_accuracy: None,
+                emu_round_s: 0.0,
+                host_round_s: 0.0,
+            },
+        },
+        OwnedFlEvent::RunEnd { rounds: 12 },
+    ]
+}
+
+#[test]
+fn every_event_variant_roundtrips_and_rejects_torn_payloads() {
+    for ev in sample_events() {
+        let payload = ev.encode();
+        assert_eq!(OwnedFlEvent::decode(&payload).as_ref(), Some(&ev), "roundtrip {ev:?}");
+        // Every strict prefix leaves some declared field short; the
+        // decoder must refuse rather than fabricate a partial event.
+        for cut in 0..payload.len() {
+            assert!(
+                OwnedFlEvent::decode(&payload[..cut]).is_none(),
+                "{ev:?}: cut at {cut} decoded"
+            );
+        }
+        // Trailing garbage is equally rejected (exact-length contract).
+        let mut padded = payload.clone();
+        padded.push(0);
+        assert!(OwnedFlEvent::decode(&padded).is_none(), "{ev:?}: trailing byte accepted");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Torn-write and bit-flip sweeps over a real log.
+
+/// A feature-dense durable run (churn + netsim + attack) whose log holds
+/// most event kinds; returns the raw log bytes.
+fn rich_log_bytes(dir: &Path) -> Vec<u8> {
+    run_ok(
+        Experiment::builder()
+            .clients(4)
+            .rounds(3)
+            .profiles(&PROFILES)
+            .seed(91)
+            .eval_every(0)
+            .fail_on_empty_round(false)
+            .scenario_named("high-churn")
+            .strategy("fedadam")
+            .selection(Selection::Count(3))
+            .netsim_named("congested-cell")
+            .attack_named("sign-flip")
+            .simulated(24)
+            .durable(dir),
+        "torn-write source run",
+    );
+    std::fs::read(dir.join(EVENT_LOG_FILE)).unwrap()
+}
+
+/// All valid clean-prefix ends of a log: the bare header, the end of the
+/// meta frame, and the end of every event frame.
+fn frame_boundaries(bytes: &[u8], offsets: &[u64]) -> Vec<u64> {
+    let hdr = LOG_HEADER_LEN as usize;
+    let meta_len =
+        u32::from_le_bytes(bytes[hdr..hdr + 4].try_into().unwrap()) as u64;
+    let mut boundaries = vec![LOG_HEADER_LEN, LOG_HEADER_LEN + 8 + meta_len];
+    boundaries.extend_from_slice(offsets);
+    boundaries
+}
+
+#[test]
+fn torn_write_sweep_recovers_the_maximal_clean_prefix_at_every_offset() {
+    let dir = TempDir::new("torn");
+    let bytes = rich_log_bytes(dir.path());
+    let full = parse_log(&bytes);
+    assert!(!full.truncated, "pristine log reported a torn tail");
+    assert_eq!(full.clean_offset, bytes.len() as u64, "pristine log not fully clean");
+    assert!(full.meta.is_some(), "log lost its meta frame");
+    assert!(full.events.len() > 30, "log too sparse to be a meaningful sweep");
+    assert!(
+        matches!(full.events.last(), Some(OwnedFlEvent::RunEnd { .. })),
+        "completed run must end with RunEnd"
+    );
+
+    let boundaries = frame_boundaries(&bytes, &full.offsets);
+    let meta_end = boundaries[1];
+    for cut in 0..=bytes.len() {
+        let r = parse_log(&bytes[..cut]);
+        let expect = boundaries.iter().copied().filter(|&b| b <= cut as u64).max().unwrap_or(0);
+        assert_eq!(r.clean_offset, expect, "cut at {cut}: clean offset");
+        assert_eq!(r.truncated, expect != cut as u64, "cut at {cut}: truncated flag");
+        assert_eq!(r.meta.is_some(), expect >= meta_end, "cut at {cut}: meta");
+        let keep = full.offsets.iter().filter(|&&end| end <= expect).count();
+        assert_eq!(r.events.len(), keep, "cut at {cut}: event count");
+        assert_eq!(r.events[..], full.events[..keep], "cut at {cut}: event prefix");
+        assert_eq!(r.offsets[..], full.offsets[..keep], "cut at {cut}: offsets");
+    }
+}
+
+#[test]
+fn bit_flip_sweep_stops_at_the_corrupted_frame_and_never_panics() {
+    let dir = TempDir::new("flip");
+    let mut bytes = rich_log_bytes(dir.path());
+    let full = parse_log(&bytes);
+    let boundaries = frame_boundaries(&bytes, &full.offsets);
+    let meta_end = boundaries[1];
+    for i in 0..bytes.len() {
+        bytes[i] ^= 0xA5;
+        let r = parse_log(&bytes);
+        // The flipped byte lives in the frame that starts at the last
+        // boundary at or before it; CRC-32 (or the header check, or the
+        // strict decoder) must reject exactly that frame.
+        let expect = boundaries.iter().copied().filter(|&b| b <= i as u64).max().unwrap_or(0);
+        assert_eq!(r.clean_offset, expect, "flip at {i}: clean offset");
+        assert!(r.truncated, "flip at {i}: corruption went unnoticed");
+        assert_eq!(r.meta.is_some(), expect >= meta_end, "flip at {i}: meta");
+        let keep = full.offsets.iter().filter(|&&end| end <= expect).count();
+        assert_eq!(r.events.len(), keep, "flip at {i}: event count");
+        assert_eq!(r.events[..], full.events[..keep], "flip at {i}: event prefix");
+        bytes[i] ^= 0xA5;
+    }
+}
+
+#[test]
+fn checkpoint_rejects_every_single_byte_corruption_and_truncation() {
+    let dir = TempDir::new("ckpt");
+    std::fs::create_dir_all(dir.path()).unwrap();
+    let path = dir.path().join(CHECKPOINT_FILE);
+    let ckpt = Checkpoint {
+        next_round: 5,
+        log_offset: 4096,
+        every_k: 2,
+        clock_s: 123.5,
+        dynamics: Some((40, 123.5)),
+        manager_rng: (0x0123_4567_89ab_cdef, 0x1111_2222_3333_4444),
+        global: vec![0.5, -1.25, 3.0, 0.0],
+        strategy_blob: vec![1, 2, 3, 4, 5],
+        attack_blob: vec![9],
+    };
+    ckpt.save(&path).unwrap();
+    assert_eq!(Checkpoint::load(&path).unwrap(), ckpt);
+
+    let bytes = std::fs::read(&path).unwrap();
+    for i in 0..bytes.len() {
+        let mut bad = bytes.clone();
+        bad[i] ^= 0x01;
+        std::fs::write(&path, &bad).unwrap();
+        assert!(Checkpoint::load(&path).is_err(), "flip at {i} accepted");
+    }
+    for cut in 0..bytes.len() {
+        std::fs::write(&path, &bytes[..cut]).unwrap();
+        assert!(Checkpoint::load(&path).is_err(), "truncation to {cut} accepted");
+    }
+    std::fs::write(&path, &bytes).unwrap();
+    assert_eq!(Checkpoint::load(&path).unwrap(), ckpt, "pristine bytes stopped loading");
+}
+
+// ---------------------------------------------------------------------------
+// Crash + resume bit-identity.
+
+#[test]
+fn resume_is_bit_identical_across_scenarios_workers_and_axes() {
+    let axes = [Axis::Plain, Axis::Netsim, Axis::Attack];
+    // Crash early, mid-run, and at the last resumable boundary of the
+    // 7-round runs (rounds are 0-based; every_k = 1 checkpoints every
+    // boundary except the final one).
+    let crash_rounds = [1u32, 3, 5];
+    for (si, scenario) in ["stable", "diurnal-mobile", "high-churn"].iter().enumerate() {
+        for &workers in &[1usize, 4] {
+            for (ai, &axis) in axes.iter().enumerate() {
+                let crash_at = crash_rounds[ai];
+                let seed = 1000 + (si * 100 + ai * 10 + workers) as u64;
+                let label = format!("{scenario}/workers={workers}/{axis:?}/crash@{crash_at}");
+
+                let crash_dir = TempDir::new("resume-crash");
+                let clean_dir = TempDir::new("resume-clean");
+
+                run_crash(
+                    sim_experiment(scenario, workers, axis, seed),
+                    DurableOptions::new(crash_dir.path()).crash_after(crash_at),
+                    &label,
+                );
+                assert!(
+                    crash_dir.path().join(CHECKPOINT_FILE).exists(),
+                    "{label}: crashed run left no checkpoint"
+                );
+                let resumed = run_ok(
+                    sim_experiment(scenario, workers, axis, seed).resume(crash_dir.path()),
+                    &format!("{label} (resume)"),
+                );
+
+                let unbroken = run_ok(
+                    sim_experiment(scenario, workers, axis, seed).durable(clean_dir.path()),
+                    &format!("{label} (uninterrupted durable)"),
+                );
+                let plain = run_ok(
+                    sim_experiment(scenario, workers, axis, seed),
+                    &format!("{label} (no durability)"),
+                );
+
+                assert_eq!(
+                    resumed.history.rounds.len(),
+                    7,
+                    "{label}: resumed run lost rounds"
+                );
+                assert_same_run(&format!("{label}: resumed vs uninterrupted"), &resumed, &unbroken);
+                // Durability must be observationally free: attaching the
+                // log/checkpoint machinery cannot perturb the run.
+                assert_same_run(&format!("{label}: durable vs plain"), &unbroken, &plain);
+            }
+        }
+    }
+}
+
+#[test]
+fn resume_truncates_post_checkpoint_events_with_sparse_cadence() {
+    // every_k = 2, crash after round 2: the last checkpoint covers rounds
+    // 0-1 only, so round 2's events sit past the snapshot in the log and
+    // must be truncated + re-run on resume, not double-counted.
+    let crash_dir = TempDir::new("sparse-crash");
+    let clean_dir = TempDir::new("sparse-clean");
+    let mk = |seed| {
+        sim_experiment("diurnal-mobile", 1, Axis::Plain, seed)
+            .rounds(6)
+    };
+
+    run_crash(
+        mk(77),
+        DurableOptions::new(crash_dir.path()).every(2).crash_after(2),
+        "sparse cadence",
+    );
+    let ckpt = Checkpoint::load(&crash_dir.path().join(CHECKPOINT_FILE)).unwrap();
+    assert_eq!(ckpt.next_round, 2, "checkpoint should cover exactly rounds 0-1");
+    assert_eq!(ckpt.every_k, 2, "cadence must persist in the snapshot");
+    let log = parse_log(&std::fs::read(crash_dir.path().join(EVENT_LOG_FILE)).unwrap());
+    let last_logged = log
+        .events
+        .iter()
+        .rev()
+        .find_map(|e| match e {
+            OwnedFlEvent::RoundEnd { record } => Some(record.round),
+            _ => None,
+        })
+        .expect("crashed log has no finished round");
+    assert_eq!(last_logged, 2, "round 2 should be logged beyond the checkpoint");
+
+    let resumed = run_ok(mk(77).resume(crash_dir.path()), "sparse cadence (resume)");
+    let unbroken = run_ok(mk(77).durable(clean_dir.path()), "sparse cadence (clean)");
+    assert_same_run("sparse cadence", &resumed, &unbroken);
+
+    // The merged log must hold each round exactly once, then RunEnd.
+    let merged = parse_log(&std::fs::read(crash_dir.path().join(EVENT_LOG_FILE)).unwrap());
+    assert!(!merged.truncated, "merged log has a torn tail");
+    let rounds: Vec<u32> = merged
+        .events
+        .iter()
+        .filter_map(|e| match e {
+            OwnedFlEvent::RoundEnd { record } => Some(record.round),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(rounds, (0..6).collect::<Vec<u32>>(), "duplicated or missing rounds");
+    assert!(
+        matches!(merged.events.last(), Some(OwnedFlEvent::RunEnd { .. })),
+        "merged log must end with RunEnd"
+    );
+}
+
+#[test]
+fn adaptive_attack_state_survives_resume() {
+    // The adaptive attacker carries cross-round state (its boost ramps on
+    // aggregate feedback); a resume that dropped it would diverge.
+    let crash_dir = TempDir::new("adaptive-crash");
+    let clean_dir = TempDir::new("adaptive-clean");
+    let mk = |seed| {
+        Experiment::builder()
+            .clients(6)
+            .rounds(8)
+            .profiles(&PROFILES)
+            .seed(seed)
+            .eval_every(0)
+            .fail_on_empty_round(false)
+            .strategy("fedavgm")
+            .selection(Selection::All)
+            .attack_named("adaptive")
+            .simulated(24)
+    };
+
+    run_crash(
+        mk(31),
+        DurableOptions::new(crash_dir.path()).crash_after(4),
+        "adaptive attack",
+    );
+    let resumed = run_ok(mk(31).resume(crash_dir.path()), "adaptive attack (resume)");
+    let unbroken = run_ok(mk(31).durable(clean_dir.path()), "adaptive attack (clean)");
+    assert_same_run("adaptive attack", &resumed, &unbroken);
+}
+
+#[test]
+fn log_only_runs_cannot_resume() {
+    // every_k = 0 records the log but never snapshots: after a crash
+    // there is nothing to restart from, and resume must say so rather
+    // than silently re-run from scratch.
+    let dir = TempDir::new("log-only");
+    run_crash(
+        sim_experiment("stable", 1, Axis::Plain, 5),
+        DurableOptions::new(dir.path()).every(0).crash_after(2),
+        "log-only",
+    );
+    assert!(dir.path().join(EVENT_LOG_FILE).exists(), "log-only run wrote no log");
+    assert!(
+        !dir.path().join(CHECKPOINT_FILE).exists(),
+        "every_k = 0 must never write a checkpoint"
+    );
+    let outcome = sim_experiment("stable", 1, Axis::Plain, 5)
+        .resume(dir.path())
+        .build()
+        .expect("resume builds fine; the failure is at run time")
+        .run();
+    match outcome {
+        Ok(_) => panic!("resuming an unresumable run succeeded"),
+        Err(e) => {
+            let msg = format!("{e}");
+            assert!(msg.contains("durable run"), "unexpected error class: {msg}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Replay-vs-live equivalence.
+
+fn assert_replay_matches(label: &str, dir: &Path, report: &ExperimentReport) {
+    let rp = replay(&dir.join(EVENT_LOG_FILE)).unwrap();
+    assert!(rp.complete, "{label}: completed run replays as unfinished");
+    assert!(!rp.truncated, "{label}: clean log replays as torn");
+    // No canonicalization here: the log embeds the live host timings, so
+    // the reconstruction is *byte*-identical, not merely equivalent.
+    assert_eq!(
+        rp.history.to_json().pretty(),
+        report.history.to_json().pretty(),
+        "{label}: replayed history"
+    );
+    assert_eq!(
+        rp.trace.to_chrome_json().dump(),
+        report.trace.to_chrome_json().dump(),
+        "{label}: replayed trace"
+    );
+    assert_eq!(
+        rp.report_json().pretty(),
+        report.to_json().pretty(),
+        "{label}: replayed report row"
+    );
+}
+
+#[test]
+fn replay_reconstructs_a_materialized_run_byte_identically() {
+    let dir = TempDir::new("replay-mat");
+    let report = run_ok(
+        Experiment::builder()
+            .clients(6)
+            .rounds(5)
+            .profiles(&PROFILES)
+            .seed(19)
+            .eval_every(0)
+            .fail_on_empty_round(false)
+            .scenario_named("high-churn")
+            .strategy("fedadam")
+            .selection(Selection::Count(4))
+            .netsim_named("congested-cell")
+            .attack_named("sign-flip")
+            .simulated(24)
+            .durable(dir.path()),
+        "replay (materialized)",
+    );
+    assert_replay_matches("materialized", dir.path(), &report);
+}
+
+#[test]
+fn replay_reconstructs_a_population_run_byte_identically() {
+    let dir = TempDir::new("replay-pop");
+    let report = run_ok(
+        Experiment::builder()
+            .population(50_000)
+            .rounds(3)
+            .seed(23)
+            .eval_every(0)
+            .fail_on_empty_round(false)
+            .scenario_named("high-churn")
+            .selection(Selection::Count(32))
+            .simulated(24)
+            .durable(dir.path()),
+        "replay (population)",
+    );
+    let rp = replay(&dir.path().join(EVENT_LOG_FILE)).unwrap();
+    let meta = rp.meta.as_ref().expect("population log lost its meta frame");
+    assert_eq!(meta.clients, 50_000, "meta must record the population size");
+    assert_replay_matches("population", dir.path(), &report);
+}
+
+// ---------------------------------------------------------------------------
+// Campaign-level recovery.
+
+fn small_campaign(seeds: &[u64]) -> Campaign {
+    let base = LaunchOptions {
+        clients: 4,
+        rounds: 2,
+        seed: 11,
+        eval_every: 0,
+        hardware: HardwareSource::Manual(PROFILES.iter().map(|s| s.to_string()).collect()),
+        fail_on_empty_round: false,
+        ..Default::default()
+    };
+    Campaign::new("crash-recovery", base)
+        .seeds(seeds)
+        .strategies(&["fedavg", "fedavgm"])
+        .scenarios(&[Scenario::default()])
+        .simulated(16)
+}
+
+#[test]
+fn campaign_resume_completes_a_doctored_run_to_the_clean_bytes() {
+    let clean_dir = TempDir::new("campaign-clean");
+    let crash_dir = TempDir::new("campaign-crash");
+    let campaign = small_campaign(&[1, 2]);
+
+    let clean = campaign.run_durable(clean_dir.path()).unwrap();
+    assert_eq!(clean.cells.len(), 4);
+    assert_eq!(clean.succeeded(), 4, "clean campaign had error cells");
+
+    // Forge a mid-sweep SIGKILL: run fully, then rewind the directory to
+    // "one cell finished, a second row torn mid-write".
+    campaign.run_durable(crash_dir.path()).unwrap();
+    let cells_path = crash_dir.path().join("cells.jsonl");
+    let rows = std::fs::read_to_string(&cells_path).unwrap();
+    let first_row_end = rows.find('\n').expect("no complete row") + 1;
+    let mut doctored = rows[..first_row_end].to_string();
+    doctored.push_str("{\"seed\": 2, \"strat"); // torn tail, no newline
+    std::fs::write(&cells_path, doctored).unwrap();
+    let cursor_path = crash_dir.path().join("cursor");
+    let cursor = std::fs::read_to_string(&cursor_path).unwrap();
+    let lines: Vec<&str> = cursor.lines().collect();
+    assert_eq!(lines.len(), 3, "unexpected cursor shape: {cursor:?}");
+    assert_eq!(lines[2], "4", "full campaign cursor should record 4 cells");
+    std::fs::write(&cursor_path, format!("{}\n{}\n1\n", lines[0], lines[1])).unwrap();
+
+    // A different grid must be refused outright.
+    let err = small_campaign(&[1, 2, 3]).resume_from(crash_dir.path()).unwrap_err();
+    assert!(format!("{err}").contains("grid mismatch"), "wrong rejection: {err}");
+
+    // The matching grid finishes the remaining three cells, dropping the
+    // torn row, and lands on the uninterrupted run's exact bytes.
+    let resumed = campaign.resume_from(crash_dir.path()).unwrap();
+    assert_eq!(resumed.cells.len(), 3, "resume should run only the unfinished cells");
+    assert_eq!(resumed.succeeded(), 3);
+    assert_eq!(
+        std::fs::read_to_string(&cells_path).unwrap(),
+        std::fs::read_to_string(clean_dir.path().join("cells.jsonl")).unwrap(),
+        "resumed campaign rows differ from the uninterrupted run"
+    );
+}
+
+#[test]
+fn campaign_resume_rejects_a_cursor_past_the_recorded_rows() {
+    let dir = TempDir::new("campaign-ahead");
+    let campaign = small_campaign(&[1, 2]);
+    campaign.run_durable(dir.path()).unwrap();
+    // Claim 4 finished cells but leave only one row behind: the cursor
+    // lies, and resume must refuse instead of fabricating results.
+    let cells_path = dir.path().join("cells.jsonl");
+    let rows = std::fs::read_to_string(&cells_path).unwrap();
+    let first_row_end = rows.find('\n').unwrap() + 1;
+    std::fs::write(&cells_path, &rows[..first_row_end]).unwrap();
+    assert!(campaign.resume_from(dir.path()).is_err());
+}
