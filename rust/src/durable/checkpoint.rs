@@ -98,18 +98,18 @@ impl Checkpoint {
             return None;
         }
         let (body, trailer) = buf.split_at(buf.len() - 4);
-        let crc = u32::from_le_bytes(trailer.try_into().unwrap());
+        let crc = u32::from_le_bytes(trailer.try_into().ok()?);
         if crc32(body) != crc {
             return None;
         }
-        if &body[..CKPT_MAGIC.len()] != CKPT_MAGIC {
+        if body.get(..CKPT_MAGIC.len())? != CKPT_MAGIC.as_slice() {
             return None;
         }
-        let version = u16::from_le_bytes([body[8], body[9]]);
+        let version = u16::from_le_bytes(body.get(8..10)?.try_into().ok()?);
         if version != CKPT_VERSION {
             return None;
         }
-        let mut c = Cursor::new(&body[10..]);
+        let mut c = Cursor::new(body.get(10..)?);
         let next_round = c.u32()?;
         let log_offset = c.u64()?;
         let every_k = c.u32()?;

@@ -98,32 +98,29 @@ impl<'a> Cursor<'a> {
 
     fn take(&mut self, n: usize) -> Option<&'a [u8]> {
         let end = self.pos.checked_add(n)?;
-        if end > self.buf.len() {
-            return None;
-        }
-        let out = &self.buf[self.pos..end];
+        let out = self.buf.get(self.pos..end)?;
         self.pos = end;
         Some(out)
     }
 
     pub(crate) fn u8(&mut self) -> Option<u8> {
-        self.take(1).map(|b| b[0])
+        self.take(1).and_then(|b| b.first().copied())
     }
 
     pub(crate) fn u32(&mut self) -> Option<u32> {
-        self.take(4).map(|b| u32::from_le_bytes(b.try_into().unwrap()))
+        self.take(4).and_then(|b| b.try_into().ok()).map(u32::from_le_bytes)
     }
 
     pub(crate) fn u64(&mut self) -> Option<u64> {
-        self.take(8).map(|b| u64::from_le_bytes(b.try_into().unwrap()))
+        self.take(8).and_then(|b| b.try_into().ok()).map(u64::from_le_bytes)
     }
 
     pub(crate) fn f32(&mut self) -> Option<f32> {
-        self.take(4).map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+        self.take(4).and_then(|b| b.try_into().ok()).map(f32::from_le_bytes)
     }
 
     pub(crate) fn f64(&mut self) -> Option<f64> {
-        self.take(8).map(|b| f64::from_le_bytes(b.try_into().unwrap()))
+        self.take(8).and_then(|b| b.try_into().ok()).map(f64::from_le_bytes)
     }
 
     pub(crate) fn str_(&mut self) -> Option<String> {
@@ -773,6 +770,13 @@ pub struct LogRead {
     pub truncated: bool,
 }
 
+/// Read a little-endian `u32` at byte offset `pos`; `None` when the
+/// buffer is too short (or `pos` overflows).
+fn u32_at(buf: &[u8], pos: usize) -> Option<u32> {
+    let end = pos.checked_add(4)?;
+    buf.get(pos..end).and_then(|b| b.try_into().ok()).map(u32::from_le_bytes)
+}
+
 /// Parse in-memory log bytes into the maximal clean prefix.  Total: never
 /// panics, whatever the input.
 pub fn parse_log(buf: &[u8]) -> LogRead {
@@ -783,10 +787,9 @@ pub fn parse_log(buf: &[u8]) -> LogRead {
         clean_offset: 0,
         truncated: false,
     };
-    if buf.len() < LOG_HEADER_LEN as usize
-        || &buf[..LOG_MAGIC.len()] != LOG_MAGIC
-        || u16::from_le_bytes([buf[6], buf[7]]) != LOG_VERSION
-    {
+    let magic_ok = buf.get(..LOG_MAGIC.len()) == Some(LOG_MAGIC.as_slice());
+    let version = buf.get(6..8).and_then(|b| b.try_into().ok()).map(u16::from_le_bytes);
+    if buf.len() < LOG_HEADER_LEN as usize || !magic_ok || version != Some(LOG_VERSION) {
         out.truncated = !buf.is_empty();
         return out;
     }
@@ -796,21 +799,19 @@ pub fn parse_log(buf: &[u8]) -> LogRead {
         if pos == buf.len() {
             break; // clean EOF
         }
-        if buf.len() - pos < 8 {
-            out.truncated = true;
+        let (Some(len), Some(crc)) = (u32_at(buf, pos), u32_at(buf, pos + 4)) else {
+            out.truncated = true; // torn frame header
             break;
-        }
-        let len = u32::from_le_bytes(buf[pos..pos + 4].try_into().unwrap()) as usize;
-        let crc = u32::from_le_bytes(buf[pos + 4..pos + 8].try_into().unwrap());
+        };
+        let len = len as usize;
         let Some(end) = pos.checked_add(8).and_then(|p| p.checked_add(len)) else {
             out.truncated = true;
             break;
         };
-        if end > buf.len() {
+        let Some(payload) = buf.get(pos + 8..end) else {
             out.truncated = true;
             break;
-        }
-        let payload = &buf[pos + 8..end];
+        };
         if crc32(payload) != crc {
             out.truncated = true;
             break;

@@ -545,6 +545,7 @@ impl ServerApp {
         }
 
         for round in start_round..self.cfg.rounds {
+            // detlint: allow(R2) — host-side round duration is diagnostic telemetry (host_round_s); it never feeds the simulated clock or aggregates
             let host_t0 = Instant::now();
 
             // --- dynamics: churn + eligibility ---------------------------
@@ -1077,7 +1078,7 @@ impl ServerApp {
         // for the per-client event merge (its two-pointer walk relies on
         // selection-ordered partitions).
         if !ledger.failures.is_empty() {
-            let position: std::collections::HashMap<u32, usize> = ledger
+            let position: std::collections::BTreeMap<u32, usize> = ledger
                 .selected
                 .iter()
                 .enumerate()

@@ -9,7 +9,7 @@
 //! drawn among those with the sampled core count, biased toward the GPU's
 //! launch-year era.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::error::ConfigError;
 use crate::util::rng::Pcg;
@@ -258,7 +258,7 @@ impl HardwareSampler {
 pub struct ProfileTable {
     profiles: Vec<HardwareProfile>,
     weights: Vec<f64>,
-    index: HashMap<String, Vec<u32>>,
+    index: BTreeMap<String, Vec<u32>>,
 }
 
 impl ProfileTable {

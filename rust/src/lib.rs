@@ -11,8 +11,10 @@
 //!   concurrent round engine ([`sched`]), the contention-aware
 //!   communication simulator with update codecs ([`netsim`]), the
 //!   durable-run infrastructure — CRC-framed event logs,
-//!   checkpoint/resume, offline replay ([`durable`]) — and the
-//!   analysis/figure harness ([`analysis`]).
+//!   checkpoint/resume, offline replay ([`durable`]) — the
+//!   analysis/figure harness ([`analysis`]), and detlint, the
+//!   determinism static-analysis pass that lints this very source
+//!   tree for bit-identity hazards ([`lint`]).
 //! * **L2** — the training computation (a compact CNN) written in JAX
 //!   (`python/compile/model.py`), AOT-lowered once to HLO text.
 //! * **L1** — Pallas kernels for the dense layer (fwd + custom-VJP bwd),
@@ -33,6 +35,7 @@ pub mod emu;
 pub mod error;
 pub mod fl;
 pub mod hardware;
+pub mod lint;
 pub mod modelcost;
 pub mod net;
 pub mod netsim;

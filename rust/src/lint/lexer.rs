@@ -1,0 +1,330 @@
+//! A lightweight Rust lexer for detlint (DESIGN.md §15).
+//!
+//! Token-level, not syntax-level: the rules in [`super::rules`] match
+//! short token sequences (`Instant :: now`, `for … in &map`), so all the
+//! lexer has to get right is the *classification* boundary — comments,
+//! string/char literals and lifetimes must never leak identifier tokens,
+//! or a rule would fire on prose.  It handles line and (nested) block
+//! comments, plain/raw/byte strings, char-vs-lifetime disambiguation,
+//! numeric literals (hex, underscores, floats, exponents) and tracks the
+//! 1-based line of every token.  `rustc`'s lexer accepts a superset; on
+//! anything this one misreads the failure mode is a false positive, and
+//! the per-site suppression grammar (§15) is the escape hatch.
+
+/// Classification of one lexed token.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`HashMap`, `for`, `use`, ...).
+    Ident,
+    /// Numeric literal (`42`, `0xFF`, `1_000`, `2.5e-3`).
+    Num,
+    /// String literal of any flavour (`"..."`, `r#"..."#`, `b"..."`).
+    Str,
+    /// Char or byte-char literal (`'x'`, `b'\n'`).
+    Char,
+    /// Lifetime or loop label (`'a`, `'static`, `'outer`).
+    Lifetime,
+    /// Any single punctuation character (`::` is two `Punct(':')`).
+    Punct,
+}
+
+/// One lexed token with its source line.
+#[derive(Debug, Clone)]
+pub struct Token {
+    /// What the token is.
+    pub kind: TokKind,
+    /// The token's text.  Identifiers and numbers carry their spelling
+    /// (rules match on it); string/char literals carry an empty string —
+    /// their *content* must never be visible to rules.
+    pub text: String,
+    /// 1-based line the token starts on.
+    pub line: u32,
+}
+
+/// One `//` line comment (doc comments included), with its full text
+/// starting at the `//`.
+#[derive(Debug, Clone)]
+pub struct Comment {
+    /// 1-based line the comment sits on.
+    pub line: u32,
+    /// Comment text including the leading `//` (and any `///`/`//!`).
+    pub text: String,
+}
+
+/// Lex `text` into code tokens and line comments.
+///
+/// Total: any input produces *some* tokenisation — unterminated literals
+/// run to end of input rather than erroring, because a linter must keep
+/// walking the rest of the tree.
+pub fn tokenize(text: &str) -> (Vec<Token>, Vec<Comment>) {
+    let chars: Vec<char> = text.chars().collect();
+    let mut toks: Vec<Token> = Vec::new();
+    let mut comments: Vec<Comment> = Vec::new();
+    let mut line: u32 = 1;
+    let mut i = 0usize;
+    let n = chars.len();
+
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // Comments.
+        if c == '/' && i + 1 < n && chars[i + 1] == '/' {
+            let start = i;
+            while i < n && chars[i] != '\n' {
+                i += 1;
+            }
+            comments.push(Comment { line, text: chars[start..i].iter().collect() });
+            continue;
+        }
+        if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+            let mut depth = 1;
+            i += 2;
+            while i < n && depth > 0 {
+                if chars[i] == '\n' {
+                    line += 1;
+                    i += 1;
+                } else if chars[i] == '/' && i + 1 < n && chars[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if chars[i] == '*' && i + 1 < n && chars[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // Identifiers — including the r"", b"", br#""# string prefixes and
+        // b'' byte chars, which start identifier-like.
+        if c.is_alphabetic() || c == '_' {
+            let start = i;
+            while i < n && (chars[i].is_alphanumeric() || chars[i] == '_') {
+                i += 1;
+            }
+            let word: String = chars[start..i].iter().collect();
+            let raw_prefix = matches!(word.as_str(), "r" | "br");
+            let byte_prefix = matches!(word.as_str(), "b" | "br" | "rb");
+            if i < n && (chars[i] == '"' || (raw_prefix && chars[i] == '#')) {
+                let start_line = line;
+                skip_string(&chars, &mut i, &mut line, raw_prefix);
+                toks.push(Token { kind: TokKind::Str, text: String::new(), line: start_line });
+                continue;
+            }
+            if byte_prefix && word == "b" && i < n && chars[i] == '\'' {
+                skip_char_literal(&chars, &mut i, &mut line);
+                toks.push(Token { kind: TokKind::Char, text: String::new(), line });
+                continue;
+            }
+            toks.push(Token { kind: TokKind::Ident, text: word, line });
+            continue;
+        }
+        // Plain strings.
+        if c == '"' {
+            let start_line = line;
+            skip_string(&chars, &mut i, &mut line, false);
+            toks.push(Token { kind: TokKind::Str, text: String::new(), line: start_line });
+            continue;
+        }
+        // Lifetime vs char literal.
+        if c == '\'' {
+            let is_lifetime = i + 1 < n
+                && (chars[i + 1].is_alphabetic() || chars[i + 1] == '_')
+                && !(i + 2 < n && chars[i + 2] == '\'');
+            if is_lifetime {
+                i += 1;
+                let start = i;
+                while i < n && (chars[i].is_alphanumeric() || chars[i] == '_') {
+                    i += 1;
+                }
+                let name: String = chars[start..i].iter().collect();
+                toks.push(Token { kind: TokKind::Lifetime, text: name, line });
+            } else {
+                skip_char_literal(&chars, &mut i, &mut line);
+                toks.push(Token { kind: TokKind::Char, text: String::new(), line });
+            }
+            continue;
+        }
+        // Numbers.
+        if c.is_ascii_digit() {
+            let start = i;
+            let mut seen_dot = false;
+            let hex = i + 1 < n && c == '0' && (chars[i + 1] == 'x' || chars[i + 1] == 'X');
+            while i < n {
+                let d = chars[i];
+                if d.is_ascii_alphanumeric() || d == '_' {
+                    i += 1;
+                    continue;
+                }
+                // `1.5` continues the number; `1..n` does not.
+                if d == '.'
+                    && !seen_dot
+                    && !hex
+                    && i + 1 < n
+                    && chars[i + 1].is_ascii_digit()
+                {
+                    seen_dot = true;
+                    i += 1;
+                    continue;
+                }
+                // Exponent sign in `2.5e-3`.
+                if (d == '+' || d == '-')
+                    && !hex
+                    && i > start
+                    && (chars[i - 1] == 'e' || chars[i - 1] == 'E')
+                {
+                    i += 1;
+                    continue;
+                }
+                break;
+            }
+            toks.push(Token {
+                kind: TokKind::Num,
+                text: chars[start..i].iter().collect(),
+                line,
+            });
+            continue;
+        }
+        // Everything else: single punctuation char.
+        toks.push(Token { kind: TokKind::Punct, text: c.to_string(), line });
+        i += 1;
+    }
+    (toks, comments)
+}
+
+/// Skip a string literal starting at `chars[*i]` (a `"` or, for raw
+/// strings, the first `#`).  Advances past the closing delimiter.
+fn skip_string(chars: &[char], i: &mut usize, line: &mut u32, raw: bool) {
+    let n = chars.len();
+    let mut hashes = 0usize;
+    if raw {
+        while *i < n && chars[*i] == '#' {
+            hashes += 1;
+            *i += 1;
+        }
+    }
+    if *i < n && chars[*i] == '"' {
+        *i += 1;
+    }
+    while *i < n {
+        let c = chars[*i];
+        if c == '\n' {
+            *line += 1;
+            *i += 1;
+            continue;
+        }
+        if !raw && c == '\\' {
+            *i += 2; // escape: skip the escaped char too
+            continue;
+        }
+        if c == '"' {
+            *i += 1;
+            if !raw || hashes == 0 {
+                return;
+            }
+            // Raw string: the quote only closes if followed by `hashes` #s.
+            let mut k = 0usize;
+            while k < hashes && *i + k < n && chars[*i + k] == '#' {
+                k += 1;
+            }
+            if k == hashes {
+                *i += hashes;
+                return;
+            }
+            continue;
+        }
+        *i += 1;
+    }
+}
+
+/// Skip a char/byte-char literal starting at the opening `'`.
+fn skip_char_literal(chars: &[char], i: &mut usize, line: &mut u32) {
+    let n = chars.len();
+    *i += 1; // opening '
+    while *i < n {
+        let c = chars[*i];
+        if c == '\\' {
+            *i += 2;
+            continue;
+        }
+        if c == '\'' {
+            *i += 1;
+            return;
+        }
+        if c == '\n' {
+            // Not a valid char literal; bail so we do not eat the file.
+            *line += 1;
+            *i += 1;
+            return;
+        }
+        *i += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(text: &str) -> Vec<String> {
+        tokenize(text)
+            .0
+            .into_iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text)
+            .collect()
+    }
+
+    #[test]
+    fn strings_and_comments_never_leak_idents() {
+        let src = r##"
+            // HashMap in a comment
+            /* HashMap in /* a nested */ block */
+            let a = "HashMap in a string";
+            let b = r#"HashMap raw "quoted" string"#;
+            let c = b"HashMap bytes";
+            let d = 'H';
+        "##;
+        let names = idents(src);
+        assert!(!names.contains(&"HashMap".to_string()), "{names:?}");
+        assert!(names.contains(&"let".to_string()));
+    }
+
+    #[test]
+    fn lifetimes_are_not_chars() {
+        let (toks, _) = tokenize("fn f<'a>(x: &'a str) -> &'a str { x }");
+        assert!(toks.iter().any(|t| t.kind == TokKind::Lifetime && t.text == "a"));
+        assert!(!toks.iter().any(|t| t.kind == TokKind::Char));
+    }
+
+    #[test]
+    fn ranges_do_not_merge_into_floats() {
+        let (toks, _) = tokenize("for i in 0..256 { x[i] = 2.5e-3; }");
+        let nums: Vec<&str> =
+            toks.iter().filter(|t| t.kind == TokKind::Num).map(|t| t.text.as_str()).collect();
+        assert_eq!(nums, vec!["0", "256", "2.5e-3"]);
+    }
+
+    #[test]
+    fn lines_are_tracked_through_literals() {
+        let (toks, comments) = tokenize("let a = \"two\nlines\";\n// note\nlet b = 1;");
+        let b = toks.iter().find(|t| t.text == "b").expect("b lexed");
+        assert_eq!(b.line, 4);
+        assert_eq!(comments.len(), 1);
+        assert_eq!(comments[0].line, 3);
+        assert!(comments[0].text.starts_with("//"));
+    }
+
+    #[test]
+    fn hex_literals_keep_their_spelling() {
+        let (toks, _) = tokenize("const X: u64 = 0xD11A;");
+        assert!(toks.iter().any(|t| t.kind == TokKind::Num && t.text == "0xD11A"));
+    }
+}

@@ -1,0 +1,158 @@
+#![deny(missing_docs)]
+//! detlint — a determinism static-analysis pass over the crate's own
+//! source (DESIGN.md §15).
+//!
+//! Every correctness claim in this repo reduces to bit-identity:
+//! results are a pure function of (config, seed), identical across
+//! worker counts, materialized-vs-population engines, netsim on/off,
+//! attack armed/unarmed, and crash/resume.  The property tests enforce
+//! that contract *dynamically*; detlint enforces it at the source
+//! level, flagging the constructs through which host state can leak
+//! into results before any seed or scheduler change exposes them:
+//!
+//! * **R1** `unordered-iteration` — `HashMap`/`HashSet` in engine paths
+//! * **R2** `wall-clock` — `Instant::now`/`SystemTime` outside seams
+//! * **R3** `rng-hygiene` — RNGs not derived from the experiment seed
+//! * **R4** `thread-env` — thread/env probes outside the launcher
+//! * **R5** `durable-totality` — panics in `durable/` parse paths
+//!
+//! Suppression is per-site: a `// detlint: allow(R2) — reason` comment
+//! on the line above the finding, with a mandatory written reason.
+//! Unused allows (`A0`) and malformed allows (`A1`) are themselves
+//! findings, so suppressions cannot rot.  The pass is hand-rolled on a
+//! small Rust lexer (no external deps, the repo idiom) and wired
+//! through `bouquetfl lint [--deny] [--json]`, `bouquetfl list`, a CI
+//! job, and an in-process tier-1 test that lints the tree on every run.
+
+pub mod lexer;
+pub mod report;
+pub mod rules;
+pub mod source;
+pub mod walk;
+
+use std::fs;
+use std::io;
+use std::path::Path;
+
+use report::{Finding, Report, Severity};
+use source::SourceFile;
+
+/// Lint one source text under display path `path` with every
+/// registered rule, resolving suppressions.
+///
+/// This is the in-process entry the fixture tests drive directly; the
+/// tree walker below is a loop over it.
+pub fn lint_source(path: &str, text: &str) -> Report {
+    let src = SourceFile::parse(path, text);
+    let mut findings: Vec<Finding> = Vec::new();
+    let mut used = vec![false; src.suppressions.len()];
+
+    for rule in rules::all() {
+        for raw in rule.check(&src) {
+            let hit = src
+                .suppressions
+                .iter()
+                .position(|s| s.rule == rule.id() && s.target_line == raw.line);
+            let (suppressed, reason) = match hit {
+                Some(k) => {
+                    used[k] = true;
+                    (true, src.suppressions[k].reason.clone())
+                }
+                None => (false, String::new()),
+            };
+            findings.push(Finding {
+                rule: rule.id().to_string(),
+                name: rule.name().to_string(),
+                path: src.path.clone(),
+                line: raw.line,
+                severity: Severity::Deny,
+                message: raw.message,
+                suppressed,
+                reason,
+            });
+        }
+    }
+
+    // Suppression hygiene: an allow that matched nothing is dead weight
+    // (the hazard was fixed, or the rule id is wrong) and must go.
+    for (k, s) in src.suppressions.iter().enumerate() {
+        if !used[k] {
+            findings.push(Finding {
+                rule: "A0".to_string(),
+                name: "unused-allow".to_string(),
+                path: src.path.clone(),
+                line: s.comment_line,
+                severity: Severity::Deny,
+                message: format!(
+                    "allow({}) suppresses nothing on line {}; remove it",
+                    s.rule, s.target_line
+                ),
+                suppressed: false,
+                reason: String::new(),
+            });
+        }
+    }
+    for c in &src.malformed {
+        findings.push(Finding {
+            rule: "A1".to_string(),
+            name: "malformed-allow".to_string(),
+            path: src.path.clone(),
+            line: c.line,
+            severity: Severity::Deny,
+            message: "malformed detlint comment; expected \
+                      `// detlint: allow(<rule>) — <non-empty reason>`"
+                .to_string(),
+            suppressed: false,
+            reason: String::new(),
+        });
+    }
+
+    let mut rep = Report { findings, files_scanned: 1 };
+    rep.finish();
+    rep
+}
+
+/// Lint every `.rs` file under `root` and return the merged report.
+///
+/// Paths in findings are root-relative and `/`-separated; the walk and
+/// the final ordering are deterministic (DESIGN.md §15).
+pub fn lint_tree(root: &Path) -> io::Result<Report> {
+    let mut rep = Report::default();
+    for file in walk::rust_files(root)? {
+        let text = fs::read_to_string(&file)?;
+        rep.absorb(lint_source(&walk::display_path(root, &file), &text));
+    }
+    rep.finish();
+    Ok(rep)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suppression_silences_and_records_reason() {
+        let src = "fn f() {\n    // detlint: allow(R2) — host diagnostic only\n    let t = Instant::now();\n}\n";
+        let rep = lint_source("fl/x.rs", src);
+        assert!(rep.is_clean(), "{}", rep.render_text());
+        assert_eq!(rep.suppressed_count(), 1);
+        assert_eq!(rep.findings[0].reason, "host diagnostic only");
+    }
+
+    #[test]
+    fn unused_allow_is_a_finding() {
+        let rep = lint_source("fl/x.rs", "// detlint: allow(R1) — nothing here\nfn f() {}\n");
+        assert_eq!(rep.active_count(), 1);
+        assert_eq!(rep.findings[0].rule, "A0");
+        assert_eq!(rep.findings[0].line, 1);
+    }
+
+    #[test]
+    fn wrong_rule_id_leaves_finding_active_and_allow_unused() {
+        let src = "fn f() {\n    // detlint: allow(R1) — wrong id\n    let t = Instant::now();\n}\n";
+        let rep = lint_source("fl/x.rs", src);
+        assert_eq!(rep.active_count(), 2); // the R2 finding and the A0
+        let rules: Vec<&str> = rep.active().map(|f| f.rule.as_str()).collect();
+        assert_eq!(rules, vec!["A0", "R2"]);
+    }
+}

@@ -1,0 +1,196 @@
+//! Findings, suppression accounting, and report rendering for detlint
+//! (DESIGN.md §15).
+//!
+//! A [`Report`] is the unit the CLI, CI job and tier-1 self-lint test
+//! all consume.  Suppressed findings stay *in* the report (marked, with
+//! their reason) so the JSON artifact records exactly which invariants
+//! are waived where and why; only active findings and suppression-
+//! hygiene findings (A0/A1) make a tree dirty.
+
+use crate::util::json::Json;
+
+/// How a finding counts toward `--deny`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Severity {
+    /// Fails `bouquetfl lint --deny`.  All built-in rules are `Deny`:
+    /// the bit-identity contract has no advisory tier.
+    Deny,
+}
+
+impl Severity {
+    /// Lowercase name for reports.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Severity::Deny => "deny",
+        }
+    }
+}
+
+/// One lint finding, after suppression matching.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Rule id (`R1`..`R5`, or `A0`/`A1` for suppression hygiene).
+    pub rule: String,
+    /// Rule's kebab-case name (`unordered-iteration`, ...).
+    pub name: String,
+    /// Root-relative, `/`-separated file path.
+    pub path: String,
+    /// 1-based line of the hazard.
+    pub line: u32,
+    /// Severity (currently always `Deny`).
+    pub severity: Severity,
+    /// What the hazard is, at this site.
+    pub message: String,
+    /// True if a `// detlint: allow(..)` covers this finding.
+    pub suppressed: bool,
+    /// The suppression's written reason (empty when not suppressed).
+    pub reason: String,
+}
+
+/// All findings from one lint run, plus counts.
+#[derive(Debug, Default)]
+pub struct Report {
+    /// Findings in (path, line, rule) order.
+    pub findings: Vec<Finding>,
+    /// Number of files scanned.
+    pub files_scanned: usize,
+}
+
+impl Report {
+    /// Merge `other`'s findings into `self`.
+    pub fn absorb(&mut self, mut other: Report) {
+        self.findings.append(&mut other.findings);
+        self.files_scanned += other.files_scanned;
+    }
+
+    /// Sort findings into the canonical (path, line, rule) order so the
+    /// report itself is deterministic.
+    pub fn finish(&mut self) {
+        self.findings.sort_by(|a, b| {
+            (a.path.as_str(), a.line, a.rule.as_str())
+                .cmp(&(b.path.as_str(), b.line, b.rule.as_str()))
+        });
+    }
+
+    /// Findings that count against `--deny` (not suppressed).
+    pub fn active(&self) -> impl Iterator<Item = &Finding> {
+        self.findings.iter().filter(|f| !f.suppressed)
+    }
+
+    /// Number of active (deny-counting) findings.
+    pub fn active_count(&self) -> usize {
+        self.active().count()
+    }
+
+    /// Number of suppressed findings.
+    pub fn suppressed_count(&self) -> usize {
+        self.findings.iter().filter(|f| f.suppressed).count()
+    }
+
+    /// True when nothing counts against `--deny`.
+    pub fn is_clean(&self) -> bool {
+        self.active_count() == 0
+    }
+
+    /// Machine-readable report (the `detlint.json` CI artifact).
+    pub fn to_json(&self) -> Json {
+        let findings: Vec<Json> = self
+            .findings
+            .iter()
+            .map(|f| {
+                Json::obj(vec![
+                    ("rule", Json::str(&f.rule)),
+                    ("name", Json::str(&f.name)),
+                    ("path", Json::str(&f.path)),
+                    ("line", Json::num(f.line as f64)),
+                    ("severity", Json::str(f.severity.as_str())),
+                    ("message", Json::str(&f.message)),
+                    ("suppressed", Json::Bool(f.suppressed)),
+                    ("reason", Json::str(&f.reason)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("tool", Json::str("detlint")),
+            ("files_scanned", Json::num(self.files_scanned as f64)),
+            ("active", Json::num(self.active_count() as f64)),
+            ("suppressed", Json::num(self.suppressed_count() as f64)),
+            ("clean", Json::Bool(self.is_clean())),
+            ("findings", Json::Arr(findings)),
+        ])
+    }
+
+    /// Human-readable report for the terminal.
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            if f.suppressed {
+                out.push_str(&format!(
+                    "{}:{}: [{} {}] suppressed — {}\n",
+                    f.path, f.line, f.rule, f.name, f.reason
+                ));
+            } else {
+                out.push_str(&format!(
+                    "{}:{}: [{} {}] {}\n",
+                    f.path, f.line, f.rule, f.name, f.message
+                ));
+            }
+        }
+        out.push_str(&format!(
+            "detlint: {} files, {} active finding(s), {} suppressed\n",
+            self.files_scanned,
+            self.active_count(),
+            self.suppressed_count()
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn finding(rule: &str, line: u32, suppressed: bool) -> Finding {
+        Finding {
+            rule: rule.to_string(),
+            name: "x".to_string(),
+            path: "a.rs".to_string(),
+            line,
+            severity: Severity::Deny,
+            message: "m".to_string(),
+            suppressed,
+            reason: if suppressed { "why".to_string() } else { String::new() },
+        }
+    }
+
+    #[test]
+    fn clean_means_no_active() {
+        let mut r = Report { findings: vec![finding("R1", 3, true)], files_scanned: 1 };
+        assert!(r.is_clean());
+        r.findings.push(finding("R2", 9, false));
+        assert!(!r.is_clean());
+        assert_eq!(r.active_count(), 1);
+        assert_eq!(r.suppressed_count(), 1);
+    }
+
+    #[test]
+    fn json_roundtrips_through_parser() {
+        let r = Report { findings: vec![finding("R1", 3, false)], files_scanned: 2 };
+        let text = r.to_json().dump();
+        let back = Json::parse(&text).expect("valid json");
+        assert_eq!(back.get("clean").and_then(|j| j.as_bool()), Some(false));
+        assert_eq!(back.get("files_scanned").and_then(|j| j.as_u64()), Some(2));
+        let arr = back.get("findings").and_then(|j| j.as_arr()).expect("findings");
+        assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].get("rule").and_then(|j| j.as_str()), Some("R1"));
+    }
+
+    #[test]
+    fn finish_orders_by_path_line_rule() {
+        let mut r = Report::default();
+        r.findings.push(finding("R2", 9, false));
+        r.findings.push(finding("R1", 3, false));
+        r.finish();
+        assert_eq!(r.findings[0].line, 3);
+    }
+}

@@ -1,0 +1,507 @@
+//! The determinism rules (R1–R5) and their registry (DESIGN.md §15).
+//!
+//! Each rule encodes one invariant of the bit-identity contract the
+//! engine has promised since PR 1: results are a pure function of
+//! (config, seed) — identical across worker counts, engines, netsim
+//! on/off, attack armed/unarmed, and crash/resume.  A finding is a
+//! token site where that purity can leak.  Rules are registered in the
+//! same `register`/`by_name`/`names` style as strategies, codecs and
+//! attack models, so external binaries can add project-specific rules.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, OnceLock, RwLock};
+
+use super::source::SourceFile;
+use crate::lint::lexer::{TokKind, Token};
+
+/// One raw hazard reported by a rule, before suppression matching.
+#[derive(Debug, Clone)]
+pub struct RawFinding {
+    /// 1-based line of the hazard.
+    pub line: u32,
+    /// Human-readable description of the hazard at this site.
+    pub message: String,
+}
+
+/// A determinism rule: matches hazard sites in one [`SourceFile`].
+pub trait Rule: Send + Sync {
+    /// Stable rule id (`R1`..`R5`), used in reports and `allow(..)`.
+    fn id(&self) -> &'static str;
+    /// Short kebab-case name, e.g. `unordered-iteration`.
+    fn name(&self) -> &'static str;
+    /// One-line description for `bouquetfl list`.
+    fn describe(&self) -> &'static str;
+    /// Scan `src` and return every hazard site.
+    fn check(&self, src: &SourceFile) -> Vec<RawFinding>;
+}
+
+/// Constructor stored in the rule registry.
+pub type RuleFactory = Arc<dyn Fn() -> Box<dyn Rule> + Send + Sync>;
+
+fn registry() -> &'static RwLock<BTreeMap<String, RuleFactory>> {
+    static REG: OnceLock<RwLock<BTreeMap<String, RuleFactory>>> = OnceLock::new();
+    REG.get_or_init(|| RwLock::new(BTreeMap::new()))
+}
+
+/// Register a rule under `id`.  Later registrations replace earlier
+/// ones, so a binary can override a built-in.
+pub fn register(id: &str, factory: RuleFactory) {
+    registry().write().expect("lint rule registry poisoned").insert(id.to_string(), factory);
+}
+
+/// Instantiate the rule registered under `id`.
+pub fn by_name(id: &str) -> Option<Box<dyn Rule>> {
+    ensure_builtin();
+    registry().read().expect("lint rule registry poisoned").get(id).map(|f| f())
+}
+
+/// Sorted ids of all registered rules.
+pub fn names() -> Vec<String> {
+    ensure_builtin();
+    registry().read().expect("lint rule registry poisoned").keys().cloned().collect()
+}
+
+/// Instantiate every registered rule, in id order.
+pub fn all() -> Vec<Box<dyn Rule>> {
+    ensure_builtin();
+    registry().read().expect("lint rule registry poisoned").values().map(|f| f()).collect()
+}
+
+/// Register the built-in R1–R5 exactly once.
+pub fn ensure_builtin() {
+    static ONCE: OnceLock<()> = OnceLock::new();
+    ONCE.get_or_init(|| {
+        register("R1", Arc::new(|| Box::new(UnorderedIteration)));
+        register("R2", Arc::new(|| Box::new(WallClock)));
+        register("R3", Arc::new(|| Box::new(RngHygiene)));
+        register("R4", Arc::new(|| Box::new(ThreadEnv)));
+        register("R5", Arc::new(|| Box::new(DurablePanics)));
+    });
+}
+
+/// True if `path` (slash-separated, root-relative) ends with any of the
+/// allowlisted suffixes.
+fn allowlisted(path: &str, allow: &[&str]) -> bool {
+    allow.iter().any(|s| path.ends_with(s))
+}
+
+/// True if the token at `i` is an ident with text `name`.
+fn ident_at(toks: &[Token], i: usize, name: &str) -> bool {
+    toks.get(i).map_or(false, |t| t.kind == TokKind::Ident && t.text == name)
+}
+
+/// True if the token at `i` is the punctuation `p`.
+fn punct_at(toks: &[Token], i: usize, p: char) -> bool {
+    toks.get(i).map_or(false, |t| t.kind == TokKind::Punct && t.text.len() == 1
+        && t.text.chars().next() == Some(p))
+}
+
+/// True if tokens at `i..i+4` spell `recv :: name` (a path segment).
+fn path_seg(toks: &[Token], i: usize, recv: &str, name: &str) -> bool {
+    ident_at(toks, i, recv) && punct_at(toks, i + 1, ':') && punct_at(toks, i + 2, ':')
+        && ident_at(toks, i + 3, name)
+}
+
+/// Skip findings inside test code or `use` statements — the contract
+/// binds engine code; imports and tests are out of scope.
+fn engine_line(src: &SourceFile, line: u32) -> bool {
+    !src.in_test(line) && !src.in_use(line)
+}
+
+// ---------------------------------------------------------------- R1
+
+/// R1 — unordered-collection state in engine paths.
+///
+/// `HashMap`/`HashSet` iteration order depends on `RandomState` and on
+/// insertion history, so any fold/emit over one is a bit-identity
+/// hazard (exactly the class of bug fixed in `sched/dynamics.rs` and
+/// `hardware/sampler.rs` when this rule landed).  Rather than chase
+/// iteration sites through aliases, the rule flags every *use* of the
+/// types outside imports: engine state must be `BTreeMap`/`BTreeSet`,
+/// or the site must prove order-independence in a suppression reason.
+struct UnorderedIteration;
+
+impl Rule for UnorderedIteration {
+    fn id(&self) -> &'static str {
+        "R1"
+    }
+    fn name(&self) -> &'static str {
+        "unordered-iteration"
+    }
+    fn describe(&self) -> &'static str {
+        "HashMap/HashSet in engine paths: iteration order is nondeterministic; use BTreeMap/BTreeSet or sort before fold/emit"
+    }
+    fn check(&self, src: &SourceFile) -> Vec<RawFinding> {
+        let mut out = Vec::new();
+        for t in &src.tokens {
+            if t.kind != TokKind::Ident {
+                continue;
+            }
+            if t.text != "HashMap" && t.text != "HashSet" {
+                continue;
+            }
+            if !engine_line(src, t.line) {
+                continue;
+            }
+            out.push(RawFinding {
+                line: t.line,
+                message: format!(
+                    "{} in an engine path: iteration order is nondeterministic; \
+                     use BTreeMap/BTreeSet or sort keys before any fold/emit",
+                    t.text
+                ),
+            });
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------- R2
+
+/// R2 — wall-clock reads outside the host-timing seams.
+///
+/// Simulated time comes from `emu/clock.rs`; host time is measured only
+/// in `util/benchkit.rs` and at the single `host_t0` diagnostic site in
+/// `fl/server.rs` (suppressed there with its justification).  Any other
+/// `Instant::now`/`SystemTime` read lets the host's clock shape results.
+struct WallClock;
+
+const R2_ALLOW: &[&str] = &["util/benchkit.rs", "emu/clock.rs"];
+
+impl Rule for WallClock {
+    fn id(&self) -> &'static str {
+        "R2"
+    }
+    fn name(&self) -> &'static str {
+        "wall-clock"
+    }
+    fn describe(&self) -> &'static str {
+        "Instant::now/SystemTime outside util/benchkit.rs and emu/clock.rs: host time must not reach engine results"
+    }
+    fn check(&self, src: &SourceFile) -> Vec<RawFinding> {
+        if allowlisted(&src.path, R2_ALLOW) {
+            return Vec::new();
+        }
+        let toks = &src.tokens;
+        let mut out = Vec::new();
+        for i in 0..toks.len() {
+            let line = toks[i].line;
+            if !engine_line(src, line) {
+                continue;
+            }
+            if path_seg(toks, i, "Instant", "now") {
+                out.push(RawFinding {
+                    line,
+                    message: "Instant::now() reads the host clock; simulated time must come \
+                              from emu/clock.rs (host timing belongs in util/benchkit.rs)"
+                        .to_string(),
+                });
+            } else if ident_at(toks, i, "SystemTime") {
+                out.push(RawFinding {
+                    line,
+                    message: "SystemTime reads the host clock; engine results must be a pure \
+                              function of (config, seed)"
+                        .to_string(),
+                });
+            }
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------- R3
+
+/// R3 — RNG hygiene.
+///
+/// Every stream in the engine is drawn from a `Pcg` whose seed is
+/// derived from the experiment seed (usually via `fork`), so runs are
+/// reproducible and sub-streams are decorrelated.  Flags: entropy-based
+/// construction (`thread_rng`/`from_entropy`/`OsRng`/`RandomState`) and
+/// `Pcg` built from a *literal* seed, which silently correlates streams
+/// and ignores the experiment seed.
+struct RngHygiene;
+
+const R3_ENTROPY: &[&str] = &["RandomState", "thread_rng", "from_entropy", "OsRng"];
+
+impl Rule for RngHygiene {
+    fn id(&self) -> &'static str {
+        "R3"
+    }
+    fn name(&self) -> &'static str {
+        "rng-hygiene"
+    }
+    fn describe(&self) -> &'static str {
+        "RNG not derived from the experiment seed (entropy sources, RandomState, literal-seed Pcg)"
+    }
+    fn check(&self, src: &SourceFile) -> Vec<RawFinding> {
+        let toks = &src.tokens;
+        let mut out = Vec::new();
+        for i in 0..toks.len() {
+            let line = toks[i].line;
+            if !engine_line(src, line) {
+                continue;
+            }
+            if toks[i].kind == TokKind::Ident && R3_ENTROPY.contains(&toks[i].text.as_str()) {
+                out.push(RawFinding {
+                    line,
+                    message: format!(
+                        "{} draws from process entropy; every engine RNG must be seeded \
+                         from the experiment seed",
+                        toks[i].text
+                    ),
+                });
+                continue;
+            }
+            // `Pcg::seeded(<literal>)` / `Pcg::new(<literal>, ...)`.
+            let ctor = path_seg(toks, i, "Pcg", "seeded") || path_seg(toks, i, "Pcg", "new");
+            if ctor
+                && punct_at(toks, i + 4, '(')
+                && toks.get(i + 5).map_or(false, |t| t.kind == TokKind::Num)
+            {
+                out.push(RawFinding {
+                    line,
+                    message: "Pcg constructed from a literal seed ignores the experiment seed \
+                              and correlates streams; derive it from a seed parameter (fork)"
+                        .to_string(),
+                });
+            }
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------- R4
+
+/// R4 — thread/environment nondeterminism.
+///
+/// Thread identity, host core counts and environment variables vary
+/// across machines and runs; only the launcher (`fl/launcher.rs`,
+/// `main.rs`) may consult the environment, and what it reads must be
+/// folded into explicit config before it reaches the engine.
+struct ThreadEnv;
+
+const R4_ALLOW: &[&str] = &["fl/launcher.rs", "main.rs"];
+
+impl Rule for ThreadEnv {
+    fn id(&self) -> &'static str {
+        "R4"
+    }
+    fn name(&self) -> &'static str {
+        "thread-env"
+    }
+    fn describe(&self) -> &'static str {
+        "thread ids / available_parallelism / env::var outside the launcher: host shape must not reach engine results"
+    }
+    fn check(&self, src: &SourceFile) -> Vec<RawFinding> {
+        if allowlisted(&src.path, R4_ALLOW) {
+            return Vec::new();
+        }
+        let toks = &src.tokens;
+        let mut out = Vec::new();
+        for i in 0..toks.len() {
+            let line = toks[i].line;
+            if !engine_line(src, line) {
+                continue;
+            }
+            if path_seg(toks, i, "env", "var") {
+                out.push(RawFinding {
+                    line,
+                    message: "env::var outside the launcher: environment must be folded into \
+                              explicit config before it reaches the engine"
+                        .to_string(),
+                });
+            } else if ident_at(toks, i, "available_parallelism") {
+                out.push(RawFinding {
+                    line,
+                    message: "available_parallelism varies by host; worker counts must be \
+                              explicit config (bit-identity across worker counts is the contract)"
+                        .to_string(),
+                });
+            } else if path_seg(toks, i, "thread", "current") {
+                out.push(RawFinding {
+                    line,
+                    message: "thread::current() identity is nondeterministic; tag work with \
+                              explicit worker indices instead"
+                        .to_string(),
+                });
+            }
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------- R5
+
+/// R5 — panics in the durable parse paths.
+///
+/// PR 7 promised totality: `parse_log`/`Checkpoint::decode` accept
+/// arbitrary torn/corrupt bytes and return errors, never panic — a
+/// crash *during recovery* would turn one fault into an unrecoverable
+/// run.  Inside `durable/`, flags `.unwrap()`, `.expect(`, `panic!`,
+/// and slice indexing of the forms `x[a..b]` / `x[<literal>]` whose
+/// bounds the type system has not checked.
+struct DurablePanics;
+
+impl Rule for DurablePanics {
+    fn id(&self) -> &'static str {
+        "R5"
+    }
+    fn name(&self) -> &'static str {
+        "durable-totality"
+    }
+    fn describe(&self) -> &'static str {
+        "unwrap/expect/panic!/unchecked slicing in durable/ parse paths: recovery must be total on corrupt bytes"
+    }
+    fn check(&self, src: &SourceFile) -> Vec<RawFinding> {
+        if !src.path.contains("durable/") {
+            return Vec::new();
+        }
+        let toks = &src.tokens;
+        let mut out = Vec::new();
+        for i in 0..toks.len() {
+            let line = toks[i].line;
+            if !engine_line(src, line) {
+                continue;
+            }
+            if punct_at(toks, i, '.')
+                && (ident_at(toks, i + 1, "unwrap") || ident_at(toks, i + 1, "expect"))
+                && punct_at(toks, i + 2, '(')
+            {
+                let what = &toks[i + 1].text;
+                out.push(RawFinding {
+                    line,
+                    message: format!(
+                        ".{what}() can panic on corrupt input; durable parse paths must \
+                         return errors (use get/ok_or/try_into().ok())"
+                    ),
+                });
+            } else if ident_at(toks, i, "panic") && punct_at(toks, i + 1, '!') {
+                out.push(RawFinding {
+                    line,
+                    message: "panic! in durable/: recovery must be total on corrupt bytes"
+                        .to_string(),
+                });
+            } else if let Some(f) = check_indexing(toks, i) {
+                out.push(RawFinding { line, message: f });
+            }
+        }
+        out
+    }
+}
+
+/// Detect `expr[a..b]` and `expr[<numeric literal>]` at token `i` (the
+/// opening `[`).
+///
+/// Only fires when the `[` follows an ident, `]` or `)` — i.e. is an
+/// index expression, not `vec![`, an attribute, a slice pattern or an
+/// array literal — and the bracket content is a range (`..` present at
+/// bracket depth 1) or starts with a numeric literal.  `table[i]` with
+/// a loop-bounded `i` is left alone: the CRC tables iterate `0..256`
+/// over arrays of length 256 and the heuristic would otherwise drown
+/// the real findings in noise.
+fn check_indexing(toks: &[Token], i: usize) -> Option<String> {
+    if !punct_at(toks, i, '[') {
+        return None;
+    }
+    let prev = if i == 0 { return None } else { &toks[i - 1] };
+    let is_index = match prev.kind {
+        // Keywords before `[` mean a slice pattern or array type, not
+        // an index expression.
+        TokKind::Ident => !matches!(
+            prev.text.as_str(),
+            "vec" | "let" | "mut" | "ref" | "in" | "return" | "if" | "else" | "match" | "box"
+        ),
+        TokKind::Punct => prev.text == "]" || prev.text == ")",
+        _ => false,
+    };
+    if !is_index {
+        return None;
+    }
+    // Scan bracket content at depth 1.
+    let mut depth = 1i32;
+    let mut j = i + 1;
+    let mut has_range = false;
+    while j < toks.len() && depth > 0 {
+        let t = &toks[j];
+        if t.kind == TokKind::Punct {
+            match t.text.as_str() {
+                "[" | "(" | "{" => depth += 1,
+                "]" | ")" | "}" => depth -= 1,
+                "." if depth == 1 && punct_at(toks, j + 1, '.') => has_range = true,
+                _ => {}
+            }
+        }
+        j += 1;
+    }
+    let first_is_num = toks.get(i + 1).map_or(false, |t| t.kind == TokKind::Num);
+    if has_range {
+        Some(
+            "range slicing can panic on short input; use .get(a..b) and handle None"
+                .to_string(),
+        )
+    } else if first_is_num {
+        Some(
+            "literal indexing can panic on short input; use .get(n) and handle None"
+                .to_string(),
+        )
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(rule: &str, path: &str, src: &str) -> Vec<RawFinding> {
+        let sf = SourceFile::parse(path, src);
+        by_name(rule).expect("rule registered").check(&sf)
+    }
+
+    #[test]
+    fn registry_has_all_five() {
+        assert_eq!(names(), vec!["R1", "R2", "R3", "R4", "R5"]);
+        for id in names() {
+            assert!(by_name(&id).is_some());
+        }
+    }
+
+    #[test]
+    fn r1_skips_imports_but_flags_types() {
+        let src = "use std::collections::HashMap;\nstruct S { m: HashMap<u32, u32> }\n";
+        let f = run("R1", "sched/dynamics.rs", src);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].line, 2);
+    }
+
+    #[test]
+    fn r2_allowlists_benchkit() {
+        let src = "fn f() { let t = Instant::now(); }\n";
+        assert_eq!(run("R2", "util/benchkit.rs", src).len(), 0);
+        assert_eq!(run("R2", "fl/server.rs", src).len(), 1);
+    }
+
+    #[test]
+    fn r3_flags_literal_seed_but_not_derived() {
+        let src = "fn f(seed: u64) {\n    let a = Pcg::seeded(seed);\n    let b = Pcg::seeded(42);\n}\n";
+        let f = run("R3", "x.rs", src);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].line, 3);
+    }
+
+    #[test]
+    fn r4_allowlists_launcher() {
+        let src = "fn f() { let v = env::var(\"X\"); }\n";
+        assert_eq!(run("R4", "fl/launcher.rs", src).len(), 0);
+        assert_eq!(run("R4", "util/logging.rs", src).len(), 1);
+    }
+
+    #[test]
+    fn r5_only_fires_in_durable_and_skips_loop_indexing() {
+        let src = "fn f(buf: &[u8]) -> u8 {\n    let x = buf[0];\n    let y = &buf[1..3];\n    let z = table[i];\n    opt.unwrap()\n}\n";
+        assert_eq!(run("R5", "fl/server.rs", src).len(), 0);
+        let f = run("R5", "durable/eventlog.rs", src);
+        let lines: Vec<u32> = f.iter().map(|x| x.line).collect();
+        assert_eq!(lines, vec![2, 3, 5]);
+    }
+}

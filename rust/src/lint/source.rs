@@ -1,0 +1,313 @@
+//! Per-file source model for detlint: tokens + comments + suppressions
+//! + skip regions (DESIGN.md §15).
+//!
+//! A [`SourceFile`] is what rules see.  Besides the raw token stream it
+//! precomputes the three pieces of context every rule needs:
+//!
+//! * **Suppressions** — `// detlint: allow(rule) — reason` comments,
+//!   bound to the next *code* line so the allow sits above the flagged
+//!   statement the way `#[allow]` attributes do.
+//! * **Test regions** — line ranges of `#[cfg(test)]` / `#[test]` items,
+//!   found by brace matching.  Test code may use wall clocks, unwraps
+//!   and ad-hoc RNG freely; the determinism contract binds engine code.
+//! * **Use spans** — lines occupied by `use …;` statements, so importing
+//!   `HashMap` is not itself a finding (constructing/iterating one is).
+
+use super::lexer::{self, Comment, TokKind, Token};
+
+/// A parsed `// detlint: allow(rule) — reason` suppression.
+#[derive(Debug, Clone)]
+pub struct Suppression {
+    /// Rule id being allowed, e.g. `R1`.
+    pub rule: String,
+    /// Justification text after the dash.  Empty means malformed.
+    pub reason: String,
+    /// Line the comment itself is on.
+    pub comment_line: u32,
+    /// The next code line after the comment — findings on this line
+    /// with a matching rule id are suppressed.
+    pub target_line: u32,
+}
+
+/// A lexed source file plus the precomputed context rules match against.
+#[derive(Debug)]
+pub struct SourceFile {
+    /// Display path, `/`-separated and relative to the lint root
+    /// (e.g. `sched/dynamics.rs`).  Allowlists match on suffixes of it.
+    pub path: String,
+    /// Code tokens in source order.
+    pub tokens: Vec<Token>,
+    /// Well-formed suppressions, in source order.
+    pub suppressions: Vec<Suppression>,
+    /// `detlint:` comments that failed to parse (missing rule or
+    /// reason); reported as A1 so typos do not silently un-suppress.
+    pub malformed: Vec<Comment>,
+    /// Inclusive line ranges of `#[cfg(test)]` / `#[test]` items.
+    pub test_ranges: Vec<(u32, u32)>,
+    /// Inclusive line ranges of `use …;` statements.
+    pub use_ranges: Vec<(u32, u32)>,
+}
+
+impl SourceFile {
+    /// Lex and analyse `text`.  `path` is the display path (see field).
+    pub fn parse(path: &str, text: &str) -> SourceFile {
+        let (tokens, comments) = lexer::tokenize(text);
+        let (suppressions, malformed) = parse_suppressions(&comments, &tokens);
+        let test_ranges = find_test_ranges(&tokens);
+        let use_ranges = find_use_ranges(&tokens);
+        SourceFile { path: path.to_string(), tokens, suppressions, malformed, test_ranges, use_ranges }
+    }
+
+    /// True if `line` falls inside a `#[cfg(test)]` / `#[test]` item.
+    pub fn in_test(&self, line: u32) -> bool {
+        self.test_ranges.iter().any(|&(a, b)| a <= line && line <= b)
+    }
+
+    /// True if `line` is part of a `use` statement.
+    pub fn in_use(&self, line: u32) -> bool {
+        self.use_ranges.iter().any(|&(a, b)| a <= line && line <= b)
+    }
+}
+
+/// Split comments into well-formed suppressions and malformed attempts.
+///
+/// Grammar (DESIGN.md §15): the comment must start with exactly `//`
+/// (not `///` or `//!`, so *documentation about* the grammar never acts
+/// as a suppression), then `detlint: allow(<rule>)`, then an em- or
+/// ASCII dash and a non-empty reason.
+fn parse_suppressions(comments: &[Comment], tokens: &[Token]) -> (Vec<Suppression>, Vec<Comment>) {
+    let mut good = Vec::new();
+    let mut bad = Vec::new();
+    for c in comments {
+        let body = c.text.trim_start_matches('/');
+        // Count leading slashes on the original: doc comments have 3+ or //!.
+        let slashes = c.text.len() - body.len();
+        let is_doc = slashes != 2 || body.starts_with('!');
+        if !body.trim_start().starts_with("detlint:") {
+            continue;
+        }
+        if is_doc {
+            // Doc comments never act as suppressions, but also should not
+            // be reported as malformed — they are documentation.
+            continue;
+        }
+        match parse_allow(body) {
+            Some((rule, reason)) if !reason.is_empty() => {
+                let target_line = tokens
+                    .iter()
+                    .find(|t| t.line > c.line)
+                    .map(|t| t.line)
+                    .unwrap_or(c.line + 1);
+                good.push(Suppression { rule, reason, comment_line: c.line, target_line });
+            }
+            _ => bad.push(c.clone()),
+        }
+    }
+    (good, bad)
+}
+
+/// Parse `detlint: allow(<rule>) <dash> <reason>` from a comment body
+/// (leading slashes stripped).  Returns `(rule, reason)`.
+fn parse_allow(body: &str) -> Option<(String, String)> {
+    let rest = body.trim_start().strip_prefix("detlint:")?.trim_start();
+    let rest = rest.strip_prefix("allow")?.trim_start();
+    let rest = rest.strip_prefix('(')?;
+    let close = rest.find(')')?;
+    let rule = rest[..close].trim().to_string();
+    if rule.is_empty() {
+        return None;
+    }
+    let mut tail = rest[close + 1..].trim_start();
+    // Accept an em dash, en dash, or one-or-more ASCII dashes.
+    let dashed = if let Some(t) = tail.strip_prefix('—') {
+        tail = t;
+        true
+    } else if let Some(t) = tail.strip_prefix('–') {
+        tail = t;
+        true
+    } else if tail.starts_with('-') {
+        tail = tail.trim_start_matches('-');
+        true
+    } else {
+        false
+    };
+    if !dashed {
+        return None;
+    }
+    Some((rule, tail.trim().to_string()))
+}
+
+/// Find line ranges of items annotated `#[cfg(test)]` or `#[test]`.
+///
+/// Scans for the attribute tokens, then brace-matches from the first
+/// `{` after the attribute to its close; if a `;` appears before any
+/// `{` the item is brace-less and the range ends there.  `#[cfg(not
+/// (test))]` is *not* a test region.
+fn find_test_ranges(tokens: &[Token]) -> Vec<(u32, u32)> {
+    let mut ranges = Vec::new();
+    let n = tokens.len();
+    let mut i = 0usize;
+    while i < n {
+        if !(tokens[i].kind == TokKind::Punct && tokens[i].text == "#") {
+            i += 1;
+            continue;
+        }
+        // Expect `[ ... ]` — collect the attribute's tokens.
+        if !(i + 1 < n && tokens[i + 1].kind == TokKind::Punct && tokens[i + 1].text == "[") {
+            i += 1;
+            continue;
+        }
+        let attr_start = i;
+        let mut j = i + 2;
+        let mut depth = 1i32;
+        let mut attr: Vec<&str> = Vec::new();
+        while j < n && depth > 0 {
+            let t = &tokens[j];
+            if t.kind == TokKind::Punct {
+                match t.text.as_str() {
+                    "[" => depth += 1,
+                    "]" => depth -= 1,
+                    _ => {}
+                }
+            }
+            if depth > 0 {
+                attr.push(t.text.as_str());
+            }
+            j += 1;
+        }
+        let is_test_attr = match attr.first().copied() {
+            Some("test") => attr.len() == 1,
+            Some("cfg") => attr.contains(&"test") && !attr.contains(&"not"),
+            _ => false,
+        };
+        if !is_test_attr {
+            i = j;
+            continue;
+        }
+        // Brace-match the item that follows (skipping further attributes).
+        let start_line = tokens[attr_start].line;
+        let mut k = j;
+        let mut brace = 0i32;
+        let mut opened = false;
+        let mut end_line = start_line;
+        while k < n {
+            let t = &tokens[k];
+            if t.kind == TokKind::Punct {
+                match t.text.as_str() {
+                    "{" => {
+                        brace += 1;
+                        opened = true;
+                    }
+                    "}" => {
+                        brace -= 1;
+                        if opened && brace == 0 {
+                            end_line = t.line;
+                            k += 1;
+                            break;
+                        }
+                    }
+                    ";" if !opened => {
+                        end_line = t.line;
+                        k += 1;
+                        break;
+                    }
+                    _ => {}
+                }
+            }
+            end_line = t.line;
+            k += 1;
+        }
+        ranges.push((start_line, end_line));
+        i = k;
+    }
+    ranges
+}
+
+/// Find line ranges of `use …;` statements (only where `use` starts a
+/// statement — i.e. the previous token is not part of a path).
+fn find_use_ranges(tokens: &[Token]) -> Vec<(u32, u32)> {
+    let mut ranges = Vec::new();
+    let n = tokens.len();
+    let mut i = 0usize;
+    while i < n {
+        let t = &tokens[i];
+        if t.kind == TokKind::Ident && t.text == "use" {
+            let start = t.line;
+            let mut j = i + 1;
+            let mut end = start;
+            while j < n {
+                end = tokens[j].line;
+                if tokens[j].kind == TokKind::Punct && tokens[j].text == ";" {
+                    break;
+                }
+                j += 1;
+            }
+            ranges.push((start, end));
+            i = j + 1;
+        } else {
+            i += 1;
+        }
+    }
+    ranges
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suppression_binds_to_next_code_line() {
+        let src = "fn f() {\n    // detlint: allow(R2) — host timing only\n\n    now();\n}\n";
+        let sf = SourceFile::parse("x.rs", src);
+        assert_eq!(sf.suppressions.len(), 1);
+        let s = &sf.suppressions[0];
+        assert_eq!(s.rule, "R2");
+        assert_eq!(s.comment_line, 2);
+        assert_eq!(s.target_line, 4);
+        assert_eq!(s.reason, "host timing only");
+    }
+
+    #[test]
+    fn doc_comments_about_the_grammar_are_not_suppressions() {
+        let src = "/// detlint: allow(R1) — example in docs\nfn f() {}\n//! detlint: allow(R2) — also docs\n";
+        let sf = SourceFile::parse("x.rs", src);
+        assert!(sf.suppressions.is_empty());
+        assert!(sf.malformed.is_empty());
+    }
+
+    #[test]
+    fn missing_reason_is_malformed() {
+        let src = "// detlint: allow(R1)\nlet x = 1;\n// detlint: allow(R1) —\nlet y = 2;\n";
+        let sf = SourceFile::parse("x.rs", src);
+        assert!(sf.suppressions.is_empty());
+        assert_eq!(sf.malformed.len(), 2);
+    }
+
+    #[test]
+    fn ascii_dash_is_accepted() {
+        let sf = SourceFile::parse("x.rs", "// detlint: allow(R5) - checked above\nlet z = 0;\n");
+        assert_eq!(sf.suppressions.len(), 1);
+        assert_eq!(sf.suppressions[0].reason, "checked above");
+    }
+
+    #[test]
+    fn cfg_test_region_is_found_and_not_test_is_ignored() {
+        let src = "fn live() {}\n#[cfg(not(test))]\nfn also_live() {}\n#[cfg(test)]\nmod tests {\n    fn t() {}\n}\nfn after() {}\n";
+        let sf = SourceFile::parse("x.rs", src);
+        assert!(!sf.in_test(1));
+        assert!(!sf.in_test(3));
+        assert!(sf.in_test(5));
+        assert!(sf.in_test(6));
+        assert!(!sf.in_test(8));
+    }
+
+    #[test]
+    fn use_spans_cover_multiline_imports() {
+        let src = "use std::collections::{\n    HashMap,\n    BTreeMap,\n};\nfn f() {}\n";
+        let sf = SourceFile::parse("x.rs", src);
+        assert!(sf.in_use(1));
+        assert!(sf.in_use(2));
+        assert!(sf.in_use(4));
+        assert!(!sf.in_use(5));
+    }
+}

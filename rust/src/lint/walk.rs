@@ -1,0 +1,73 @@
+//! Deterministic source-tree walker for detlint (DESIGN.md §15).
+//!
+//! `read_dir` order is filesystem-dependent, so the walker sorts every
+//! directory level before descending — the report (and therefore the
+//! CI artifact) is byte-identical across hosts, which is exactly the
+//! property the linter exists to defend.
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// Collect every `.rs` file under `root`, sorted by path.
+///
+/// Skips `target/` build output and dot-directories (`.git`, ...).
+pub fn rust_files(root: &Path) -> io::Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    collect(root, &mut out)?;
+    out.sort();
+    Ok(out)
+}
+
+fn collect(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    let mut entries: Vec<PathBuf> = fs::read_dir(dir)?
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .collect();
+    entries.sort();
+    for path in entries {
+        let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("");
+        if path.is_dir() {
+            if name == "target" || name.starts_with('.') {
+                continue;
+            }
+            collect(&path, out)?;
+        } else if name.ends_with(".rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Display path for `file` relative to `root`, `/`-separated.
+///
+/// Rule allowlists match on suffixes of this (e.g. `emu/clock.rs`), so
+/// the separator must not vary by platform.
+pub fn display_path(root: &Path, file: &Path) -> String {
+    let rel = file.strip_prefix(root).unwrap_or(file);
+    rel.components()
+        .map(|c| c.as_os_str().to_string_lossy().into_owned())
+        .collect::<Vec<_>>()
+        .join("/")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn walk_is_sorted_and_skips_target() {
+        let dir = std::env::temp_dir().join(format!("detlint_walk_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(dir.join("b")).expect("mkdir");
+        fs::create_dir_all(dir.join("target")).expect("mkdir");
+        fs::write(dir.join("b/z.rs"), "fn z() {}").expect("write");
+        fs::write(dir.join("a.rs"), "fn a() {}").expect("write");
+        fs::write(dir.join("target/junk.rs"), "fn j() {}").expect("write");
+        fs::write(dir.join("notes.txt"), "no").expect("write");
+        let files = rust_files(&dir).expect("walk");
+        let rels: Vec<String> = files.iter().map(|f| display_path(&dir, f)).collect();
+        assert_eq!(rels, vec!["a.rs", "b/z.rs"]);
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -10,6 +10,7 @@
 //!   list-hw          list GPUs / CPUs / presets in the databases
 //!   replay           rebuild history/trace/report from a durable run's event log
 //!   resume           continue a killed durable run from its directory
+//!   lint             run detlint, the determinism static-analysis pass, over a source tree
 //!
 //! `bouquetfl <cmd> --help` shows per-command options.
 
@@ -26,6 +27,7 @@ use bouquetfl::fl::experiment::ExperimentBuilder;
 use bouquetfl::fl::launcher::{launch, HardwareSource, LaunchOptions};
 use bouquetfl::fl::{strategy, Scenario, Selection, MODEL_KINDS, SCENARIO_PRESETS};
 use bouquetfl::hardware::profile::PRESET_NAMES;
+use bouquetfl::lint;
 use bouquetfl::net::NET_TIERS;
 use bouquetfl::netsim::{self, NetSimConfig, NETSIM_PRESETS};
 use bouquetfl::sched;
@@ -49,6 +51,7 @@ fn main() -> Result<()> {
         "list-hw" => cmd_list_hw(&raw),
         "replay" => cmd_replay(&raw),
         "resume" => cmd_resume(&raw),
+        "lint" => cmd_lint(&raw),
         "help" | "--help" | "-h" => {
             print_global_help();
             Ok(())
@@ -74,7 +77,8 @@ fn print_global_help() {
          \x20 list             list registered strategies / schedulers / scenarios / codecs / hardware\n\
          \x20 list-hw          list known GPUs / CPUs / profile presets\n\
          \x20 replay           rebuild history/trace/report from a durable run's event log (DESIGN.md §14)\n\
-         \x20 resume           continue a killed durable run from its directory"
+         \x20 resume           continue a killed durable run from its directory\n\
+         \x20 lint             detlint: flag determinism hazards in a Rust source tree (DESIGN.md §15)"
     );
 }
 
@@ -147,6 +151,60 @@ fn cmd_list(raw: &[String]) -> Result<()> {
     println!("\nhardware profile presets (--profiles, see also list-hw):");
     for &name in PRESET_NAMES {
         println!("  {}", preset(name)?.describe());
+    }
+    println!("\nlint rules (bouquetfl lint, DESIGN.md §15):");
+    for id in lint::rules::names() {
+        if let Some(rule) = lint::rules::by_name(&id) {
+            println!("  {:<4} {:<20} {}", id, rule.name(), rule.describe());
+        }
+    }
+    Ok(())
+}
+
+fn cmd_lint(raw: &[String]) -> Result<()> {
+    let specs = vec![
+        OptSpec { name: "deny", help: "exit non-zero on any active finding (CI mode)", takes_value: false, default: None },
+        OptSpec { name: "json", help: "emit the machine-readable report on stdout (detlint.json schema)", takes_value: false, default: None },
+        OptSpec { name: "help", help: "show help", takes_value: false, default: None },
+    ];
+    let args = Args::parse(&raw[1..], &specs)?;
+    if args.get_bool("help") {
+        println!(
+            "{}",
+            render_help(
+                "bouquetfl lint [root]",
+                "detlint: statically flag determinism hazards (unordered iteration, \
+                 wall clocks, RNG hygiene, thread/env probes, durable panics) in a \
+                 Rust source tree; defaults to this crate's own src/ (DESIGN.md §15)",
+                &specs
+            )
+        );
+        return Ok(());
+    }
+    let root = match args.positional.first() {
+        Some(p) => std::path::PathBuf::from(p),
+        // Work from a checkout root (`rust/src`) or from `rust/` (`src`).
+        None => ["rust/src", "src"]
+            .iter()
+            .map(std::path::PathBuf::from)
+            .find(|p| p.is_dir())
+            .ok_or_else(|| {
+                anyhow::anyhow!("no rust/src or src directory here; pass a root explicitly")
+            })?,
+    };
+    let report = lint::lint_tree(&root)?;
+    if args.get_bool("json") {
+        println!("{}", report.to_json().pretty());
+    } else {
+        print!("{}", report.render_text());
+    }
+    if args.get_bool("deny") && !report.is_clean() {
+        bail!(
+            "detlint: {} active finding(s) in {} (fix them or add `// detlint: \
+             allow(<rule>) — <reason>` on the line above each site)",
+            report.active_count(),
+            root.display()
+        );
     }
     Ok(())
 }
@@ -247,6 +305,23 @@ fn cmd_run(raw: &[String]) -> Result<()> {
         // leaves a resumable directory.
         durable::write_manifest(Path::new(dir), &durable::manifest_from_options(&opts, None))?;
         println!("durable: recording into {dir} (checkpoint every {every_k} round(s))");
+        // A durable run is a reproducibility artifact, so stamp the header
+        // with the tree's determinism state when a lint report is at hand
+        // (CI writes detlint.json next to where it launches runs).
+        if let Ok(text) = std::fs::read_to_string("detlint.json") {
+            match bouquetfl::util::json::Json::parse(&text) {
+                Ok(j) => {
+                    let clean = j.get("clean").and_then(|c| c.as_bool()).unwrap_or(false);
+                    let active = j.get("active").and_then(|a| a.as_u64()).unwrap_or(0);
+                    let suppressed = j.get("suppressed").and_then(|s| s.as_u64()).unwrap_or(0);
+                    println!(
+                        "lint: {} ({active} active, {suppressed} suppressed — detlint.json)",
+                        if clean { "clean" } else { "DIRTY" }
+                    );
+                }
+                Err(_) => println!("lint: detlint.json present but unparseable"),
+            }
+        }
     }
 
     println!("host: {}", opts.host.describe());

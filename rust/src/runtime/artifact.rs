@@ -154,6 +154,7 @@ impl Manifest {
 
 /// Default artifacts directory: `$BOUQUET_ARTIFACTS` or `./artifacts`.
 pub fn default_dir() -> PathBuf {
+    // detlint: allow(R4) — artifact *location* is launcher-style config; the artifacts themselves are hash-pinned by the manifest
     std::env::var("BOUQUET_ARTIFACTS")
         .map(PathBuf::from)
         .unwrap_or_else(|_| PathBuf::from("artifacts"))

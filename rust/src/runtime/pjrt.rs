@@ -5,7 +5,7 @@
 //! emits protos with 64-bit instruction ids that xla_extension 0.5.1
 //! rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::Path;
 
 use crate::error::RuntimeError;
@@ -16,7 +16,7 @@ use super::artifact::Manifest;
 pub struct PjrtRuntime {
     pub manifest: Manifest,
     client: xla::PjRtClient,
-    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    cache: BTreeMap<String, xla::PjRtLoadedExecutable>,
 }
 
 impl PjrtRuntime {
@@ -24,7 +24,7 @@ impl PjrtRuntime {
     pub fn new(dir: impl AsRef<Path>) -> Result<Self, RuntimeError> {
         let manifest = Manifest::load(dir)?;
         let client = xla::PjRtClient::cpu()?;
-        Ok(PjrtRuntime { manifest, client, cache: HashMap::new() })
+        Ok(PjrtRuntime { manifest, client, cache: BTreeMap::new() })
     }
 
     pub fn platform(&self) -> String {

@@ -32,7 +32,7 @@
 //! preserved by construction.  See `SCENARIOS.md` for the user-facing
 //! guide.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::fl::population::DENSE_POPULATION_MAX;
 use crate::util::rng::Pcg;
@@ -156,6 +156,7 @@ impl AvailabilityTrace {
         );
         AvailabilityTrace {
             model: AvailabilityModel::AlwaysOn,
+            // detlint: allow(R3) — inert placeholder: `done: true` and the AlwaysOn model mean this stream is never drawn from
             rng: Pcg::seeded(0),
             online0,
             gen_t: toggles.last().copied().unwrap_or(0.0),
@@ -472,8 +473,8 @@ enum DynState {
     /// independent; the churn stream necessarily differs from the dense
     /// sweep's (documented on [`DENSE_POPULATION_MAX`]).
     Lazy {
-        traces: HashMap<usize, AvailabilityTrace>,
-        member: HashMap<usize, LazyMember>,
+        traces: BTreeMap<usize, AvailabilityTrace>,
+        member: BTreeMap<usize, LazyMember>,
     },
 }
 
@@ -554,7 +555,7 @@ impl FederationDynamics {
         lazy: bool,
     ) -> Self {
         let state = if lazy {
-            DynState::Lazy { traces: HashMap::new(), member: HashMap::new() }
+            DynState::Lazy { traces: BTreeMap::new(), member: BTreeMap::new() }
         } else {
             DynState::Dense {
                 traces: (0..clients)

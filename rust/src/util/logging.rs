@@ -20,6 +20,7 @@ static INIT: Once = Once::new();
 
 fn init_from_env() {
     INIT.call_once(|| {
+        // detlint: allow(R4) — log verbosity only gates stderr diagnostics; no engine result depends on the chosen level
         if let Ok(val) = std::env::var("BOUQUET_LOG") {
             let lvl = match val.to_ascii_lowercase().as_str() {
                 "error" => Level::Error,

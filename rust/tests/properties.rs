@@ -12,7 +12,10 @@ use bouquetfl::fl::{
 };
 use bouquetfl::hardware::GPU_DB;
 use bouquetfl::modelcost::resnet18_cifar;
-use bouquetfl::sched::dynamics::{AvailabilityModel, AvailabilityTrace, GateVerdict, RoundGate};
+use bouquetfl::hardware::sampler::HardwareSampler;
+use bouquetfl::sched::dynamics::{
+    AvailabilityModel, AvailabilityTrace, FederationDynamics, GateVerdict, RoundGate,
+};
 use bouquetfl::sched::pool::FitOutcomeSlim;
 use bouquetfl::sched::{DeadlineSequential, LimitedParallel, ReorderBuffer, Scheduler, Sequential};
 use bouquetfl::util::prop::{assert_close, assert_that, check};
@@ -632,5 +635,85 @@ fn prop_trimmed_mean_bounded_by_extremes() {
             })?;
         }
         Ok(())
+    });
+}
+
+// --- detlint satellite: bit-identity of the streams whose state moved
+// --- from HashMap to BTreeMap (DESIGN.md §15, R1) -------------------
+
+/// Lazy dynamics must answer identically whatever order clients were
+/// first touched in: the eligibility stream and the wakeup scan are
+/// functions of (seed, client, round), not of the cache's insertion
+/// history.  This is the property the `DynState::Lazy` BTreeMaps make
+/// structural — an unordered map would satisfy it only as long as no
+/// code path ever iterated the cache.
+#[test]
+fn prop_lazy_dynamics_query_order_independent() {
+    check(20, |rng| {
+        let seed = rng.next_u64();
+        let clients = rng.range_i64(20, 120) as usize;
+        let model = AvailabilityModel::ExponentialChurn {
+            mean_online_s: rng.range_f64(5.0, 60.0),
+            mean_offline_s: rng.range_f64(5.0, 60.0),
+        };
+        let join = rng.range_f64(0.0, 0.2);
+        let leave = rng.range_f64(0.0, 0.2);
+        let mk = || FederationDynamics::new_lazy(seed, clients, &model, join, leave, 30.0, 4);
+        let (mut fwd, mut rev) = (mk(), mk());
+        for round in 0..4 {
+            fwd.begin_round();
+            rev.begin_round();
+            let now = fwd.now_s();
+            // Touch `fwd` ascending and `rev` descending, so the two
+            // caches are populated in opposite orders.
+            let ef: Vec<bool> = (0..clients).map(|c| fwd.is_eligible(c, now)).collect();
+            let mut er = vec![false; clients];
+            for c in (0..clients).rev() {
+                er[c] = rev.is_eligible(c, now);
+            }
+            assert_that(ef == er, || {
+                format!("round {round}: eligibility depends on query order (seed {seed})")
+            })?;
+            // The full sweep and the wakeup scan see the same caches.
+            assert_that(fwd.eligible_at(now) == rev.eligible_at(now), || {
+                format!("round {round}: eligible_at depends on query order")
+            })?;
+            let (wf, wr) = (fwd.next_wakeup_after(now), rev.next_wakeup_after(now));
+            assert_that(wf == wr, || {
+                format!("round {round}: wakeup {wf:?} vs {wr:?} (seed {seed})")
+            })?;
+            let dt = rng.range_f64(1.0, 30.0);
+            fwd.advance(dt);
+            rev.advance(dt);
+        }
+        Ok(())
+    });
+}
+
+/// Identically-seeded samplers must stream the identical deduplicated
+/// profile table: same entries in the same order, bitwise-equal weights
+/// and CDF.  The table's name index is a BTreeMap so this holds by
+/// construction; selection at population scale draws against this CDF,
+/// so any wobble here would fan out into every selection stream.
+#[test]
+fn prop_profile_table_streams_bit_identical() {
+    check(10, |rng| {
+        let seed = rng.next_u64();
+        let draws = rng.range_i64(50, 400) as usize;
+        let table = |s| {
+            HardwareSampler::with_defaults(s)
+                .sample_table(draws, |_| true)
+                .expect("unfiltered sampling cannot exhaust the budget")
+        };
+        let (a, b) = (table(seed), table(seed));
+        assert_that(a.len() == b.len(), || {
+            format!("table sizes differ: {} vs {}", a.len(), b.len())
+        })?;
+        assert_that(a.profiles() == b.profiles(), || {
+            "profile streams diverged between identically-seeded samplers".to_string()
+        })?;
+        // Bitwise, not approximate: weights and CDF feed selection.
+        assert_that(a.weights() == b.weights(), || "weights diverged".to_string())?;
+        assert_that(a.cdf() == b.cdf(), || "cdf diverged".to_string())
     });
 }
