@@ -144,6 +144,32 @@ fn main() {
                 }
             });
         }
+        // The tree fold's server-side shape (`--fold-plan tree`,
+        // DESIGN.md §16): same folds, plus the log-depth pairwise merge.
+        {
+            use bouquetfl::fl::TreeMean;
+            for k in [16usize, 64] {
+                let us = updates(k, p, 300 + k as u64);
+                b.run(&format!("tree fold+finish k={k}"), || {
+                    let mut acc = TreeMean::new(p, k);
+                    for (c, u) in us.iter().enumerate() {
+                        acc.push(FitResult {
+                            client: c as u32,
+                            params: u.clone(),
+                            num_examples: 32 + c,
+                            mean_loss: 0.0,
+                            emu: FitReport::synthetic(1, 1, 0.0),
+                            comm_s: 0.0,
+                        })
+                        .expect("push");
+                    }
+                    match Box::new(acc).finish().expect("finish") {
+                        AccOutput::Mean(m) => m.params.as_slice()[0],
+                        AccOutput::Buffered(_) => unreachable!(),
+                    }
+                });
+            }
+        }
         collect(&b);
     }
 

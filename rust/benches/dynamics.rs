@@ -14,7 +14,7 @@ use bouquetfl::fl::{
 use bouquetfl::hardware::{HardwareProfile, HardwareSampler};
 use bouquetfl::modelcost::resnet18_cifar;
 use bouquetfl::sched::{AvailabilityModel, Sequential};
-use bouquetfl::util::benchkit::section;
+use bouquetfl::util::benchkit::{section, Bench};
 use bouquetfl::util::table::{fnum, Align, Table};
 
 const CLIENTS: usize = 16;
@@ -178,4 +178,20 @@ fn main() {
         "churn starves rounds of participants; convergence tracks kept updates, \
          not federation size (SCENARIOS.md)."
     );
+
+    section("host throughput (timing-only engine, no artifacts)");
+    let mut b = Bench::new(1.0).with_max_iters(64);
+    b.run("open rounds (16 clients x 12 rounds)", || run(None).rounds.len());
+    let churn = Scenario::preset("high-churn").expect("preset exists");
+    b.run("high-churn rounds (16 clients x 12 rounds)", || {
+        run(Some(&churn)).rounds.len()
+    });
+
+    // BENCH_dynamics.json at the repo root is regenerated by this bench
+    // and throughput-diffed in CI (`benchdiff`).
+    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_dynamics.json");
+    match std::fs::write(out, b.to_json().pretty() + "\n") {
+        Ok(()) => println!("\nwrote {out}"),
+        Err(e) => println!("\ncould not write {out}: {e}"),
+    }
 }

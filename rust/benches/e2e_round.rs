@@ -69,6 +69,21 @@ fn main() {
         launch(&opts(5, 1)).expect("rounds").history.rounds.len()
     });
 
+    // BENCH_e2e_round.json at the repo root records both sections' rows.
+    // This bench needs PJRT artifacts, so CI does not regenerate it — the
+    // committed artifact tracks a reference machine, not the gate.
+    let rows: Vec<_> = b
+        .results()
+        .iter()
+        .chain(b5.results())
+        .map(|m| m.to_json())
+        .collect();
+    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_e2e_round.json");
+    match std::fs::write(out, bouquetfl::util::json::Json::Arr(rows).pretty() + "\n") {
+        Ok(()) => println!("\nwrote {out}"),
+        Err(e) => println!("\ncould not write {out}: {e}"),
+    }
+
     // Steps/second of real training through the whole stack.
     section("throughput");
     let t0 = std::time::Instant::now();

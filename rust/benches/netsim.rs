@@ -145,9 +145,40 @@ fn main() {
          applied to kept updates before aggregation (DESIGN.md §12)."
     );
 
+    section("fair-share event loop at population scale (grouped heap, DESIGN.md §16)");
+    // 10k congested flows through `fairshare::simulate` directly — the
+    // committed row pins the O(events x log F) loop: the historical
+    // per-event rescan was quadratic in the active set and blows the 25%
+    // benchdiff tolerance by an order of magnitude at this flow count.
+    {
+        use bouquetfl::netsim::{simulate, Transfer};
+        use bouquetfl::util::benchkit::Bench;
+        let caps = [5.0, 20.0, 50.0, f64::INFINITY];
+        let mut rng = Pcg::new(0x5CA1E, 0xFA15);
+        let transfers: Vec<Transfer> = (0..10_000u32)
+            .map(|i| Transfer {
+                id: i,
+                // Overlapping waves: ~64 flows share each arrival
+                // neighbourhood, hundreds are concurrently active.
+                arrival_s: (i / 64) as f64 * 0.5 + rng.range_f64(0.0, 0.4),
+                latency_s: rng.range_f64(0.0, 0.08),
+                bytes: 64 * 1024 + rng.below(4 * 1024 * 1024) as u64,
+                link_mbps: *rng.choice(&caps),
+            })
+            .collect();
+        let mut b = Bench::new(1.0).with_max_iters(32);
+        b.run("fairshare 10k flows, congested 800 Mb/s", || {
+            simulate(&transfers, 800.0).len()
+        });
+        if let Json::Arr(items) = b.to_json() {
+            rows.extend(items);
+        }
+    }
+
     // BENCH_netsim.json at the repo root is regenerated by this bench and
-    // schema-diffed in CI: a row whose key set drifts from the committed
-    // artifact fails the build.
+    // throughput-diffed in CI (`benchdiff`): a row whose key set drifts —
+    // or whose rounds_per_s / mean_s regresses past the tolerance —
+    // fails the build.
     let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_netsim.json");
     match std::fs::write(out, Json::Arr(rows).pretty() + "\n") {
         Ok(()) => println!("\nwrote {out}"),

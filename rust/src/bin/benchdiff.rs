@@ -1,0 +1,239 @@
+//! `benchdiff` — the CI throughput gate over committed `BENCH_*.json`
+//! artifacts (EXPERIMENTS.md §Perf).
+//!
+//! Compares a freshly regenerated bench artifact against the committed
+//! one, per row (matched by position, cross-checked by `name`/`case`):
+//!
+//! * **schema**: the sequence of per-row key sets must match exactly —
+//!   a renamed row, a dropped column, or a reordered emission fails;
+//! * **throughput**: `mean_s` / `mean_emu_round_s` may not grow, and
+//!   `rounds_per_s` may not shrink, by more than the tolerance
+//!   (default 25% — wide enough to absorb shared-runner noise, tight
+//!   enough to catch an accidental O(F²) reintroduction; see ci.yml).
+//!
+//! Usage:
+//!
+//! ```text
+//! benchdiff [--tolerance 0.25] <committed.json> <fresh.json> [<committed> <fresh> ...]
+//! ```
+//!
+//! Exits non-zero on the first artifact pair with findings, after
+//! printing every finding in that pair.
+
+use std::process::ExitCode;
+
+use bouquetfl::util::json::Json;
+
+/// Keys where larger is slower (regression when fresh exceeds committed).
+const SLOWER_WHEN_LARGER: &[&str] = &["mean_s", "mean_emu_round_s"];
+/// Keys where smaller is slower (regression when fresh undershoots).
+const SLOWER_WHEN_SMALLER: &[&str] = &["rounds_per_s"];
+
+fn load_rows(path: &str) -> Result<Vec<Json>, String> {
+    let text =
+        std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+    match Json::parse(&text).map_err(|e| format!("{path}: {e}"))? {
+        Json::Arr(rows) if !rows.is_empty() => Ok(rows),
+        Json::Arr(_) => Err(format!("{path}: empty bench artifact")),
+        _ => Err(format!("{path}: expected a JSON array of bench rows")),
+    }
+}
+
+fn keys(row: &Json) -> Vec<String> {
+    match row {
+        Json::Obj(m) => {
+            let mut ks: Vec<String> = m.keys().cloned().collect();
+            ks.sort();
+            ks
+        }
+        _ => Vec::new(),
+    }
+}
+
+fn label(row: &Json) -> String {
+    for key in ["name", "case", "bench"] {
+        if let Some(s) = row.get(key).and_then(|v| v.as_str()) {
+            return s.to_string();
+        }
+    }
+    "<unnamed row>".to_string()
+}
+
+/// All findings (schema and throughput) for one committed/fresh pair.
+fn diff(committed: &[Json], fresh: &[Json], tolerance: f64) -> Vec<String> {
+    let mut findings = Vec::new();
+    if committed.len() != fresh.len() {
+        findings.push(format!(
+            "row count drifted: committed {} vs fresh {}",
+            committed.len(),
+            fresh.len()
+        ));
+        return findings;
+    }
+    for (i, (c, f)) in committed.iter().zip(fresh).enumerate() {
+        let (ck, fk) = (keys(c), keys(f));
+        if ck != fk {
+            findings.push(format!(
+                "row {i} ({}): key set drifted\n  committed: {ck:?}\n  fresh:     {fk:?}",
+                label(c)
+            ));
+            continue;
+        }
+        if label(c) != label(f) {
+            findings.push(format!(
+                "row {i}: renamed '{}' -> '{}' (row order is part of the schema)",
+                label(c),
+                label(f)
+            ));
+            continue;
+        }
+        let num = |row: &Json, key: &str| row.get(key).and_then(|v| v.as_f64());
+        for &key in SLOWER_WHEN_LARGER {
+            if let (Some(base), Some(now)) = (num(c, key), num(f, key)) {
+                if base > 0.0 && now > base * (1.0 + tolerance) {
+                    findings.push(format!(
+                        "row {i} ({}): {key} regressed {:.1}% ({base:.5} -> {now:.5}, tolerance {:.0}%)",
+                        label(c),
+                        100.0 * (now / base - 1.0),
+                        100.0 * tolerance
+                    ));
+                }
+            }
+        }
+        for &key in SLOWER_WHEN_SMALLER {
+            if let (Some(base), Some(now)) = (num(c, key), num(f, key)) {
+                if base > 0.0 && now < base * (1.0 - tolerance) {
+                    findings.push(format!(
+                        "row {i} ({}): {key} regressed {:.1}% ({base:.1} -> {now:.1}, tolerance {:.0}%)",
+                        label(c),
+                        100.0 * (1.0 - now / base),
+                        100.0 * tolerance
+                    ));
+                }
+            }
+        }
+    }
+    findings
+}
+
+fn run() -> Result<bool, String> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut tolerance = 0.25f64;
+    let mut paths: Vec<String> = Vec::new();
+    let mut it = args.into_iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--tolerance" => {
+                let v = it
+                    .next()
+                    .ok_or_else(|| "--tolerance needs a value".to_string())?;
+                tolerance = v
+                    .parse::<f64>()
+                    .map_err(|e| format!("--tolerance {v}: {e}"))?;
+                if !(0.0..10.0).contains(&tolerance) {
+                    return Err(format!("--tolerance {tolerance} outside [0, 10)"));
+                }
+            }
+            "--help" | "-h" => {
+                println!(
+                    "benchdiff [--tolerance 0.25] <committed.json> <fresh.json> [...pairs]"
+                );
+                return Ok(true);
+            }
+            _ => paths.push(a),
+        }
+    }
+    if paths.is_empty() || paths.len() % 2 != 0 {
+        return Err("expected <committed.json> <fresh.json> pairs".to_string());
+    }
+    let mut clean = true;
+    for pair in paths.chunks(2) {
+        let committed = load_rows(&pair[0])?;
+        let fresh = load_rows(&pair[1])?;
+        let findings = diff(&committed, &fresh, tolerance);
+        if findings.is_empty() {
+            println!(
+                "{}: OK ({} rows within {:.0}% of {})",
+                pair[1],
+                fresh.len(),
+                100.0 * tolerance,
+                pair[0]
+            );
+        } else {
+            clean = false;
+            for finding in &findings {
+                println!("{}: {finding}", pair[1]);
+            }
+        }
+    }
+    Ok(clean)
+}
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(true) => ExitCode::SUCCESS,
+        Ok(false) => ExitCode::FAILURE,
+        Err(e) => {
+            eprintln!("benchdiff: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(name: &str, mean_s: f64) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(name)),
+            ("mean_s", Json::num(mean_s)),
+        ])
+    }
+
+    #[test]
+    fn within_tolerance_is_clean() {
+        let committed = vec![row("a", 0.010)];
+        let fresh = vec![row("a", 0.012)];
+        assert!(diff(&committed, &fresh, 0.25).is_empty());
+    }
+
+    #[test]
+    fn slowdown_past_tolerance_is_a_finding() {
+        let committed = vec![row("a", 0.010)];
+        let fresh = vec![row("a", 0.014)];
+        let findings = diff(&committed, &fresh, 0.25);
+        assert_eq!(findings.len(), 1);
+        assert!(findings[0].contains("mean_s regressed"), "{}", findings[0]);
+        // Speedups never fail the gate.
+        assert!(diff(&fresh, &committed, 0.25).is_empty());
+    }
+
+    #[test]
+    fn throughput_keys_gate_in_the_other_direction() {
+        let mk = |rps: f64| {
+            vec![Json::obj(vec![
+                ("case", Json::str("congested")),
+                ("rounds_per_s", Json::num(rps)),
+            ])]
+        };
+        assert!(diff(&mk(100.0), &mk(80.0), 0.25).is_empty());
+        assert_eq!(diff(&mk(100.0), &mk(70.0), 0.25).len(), 1);
+    }
+
+    #[test]
+    fn schema_drift_is_a_finding() {
+        let committed = vec![row("a", 0.01), row("b", 0.01)];
+        // Dropped row.
+        assert!(!diff(&committed, &committed[..1].to_vec(), 0.25).is_empty());
+        // Renamed row.
+        let renamed = vec![row("a", 0.01), row("c", 0.01)];
+        assert!(!diff(&committed, &renamed, 0.25).is_empty());
+        // Dropped key.
+        let thin = vec![
+            row("a", 0.01),
+            Json::obj(vec![("name", Json::str("b"))]),
+        ];
+        assert!(!diff(&committed, &thin, 0.25).is_empty());
+    }
+}

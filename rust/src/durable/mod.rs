@@ -352,6 +352,7 @@ pub fn manifest_from_options(opts: &LaunchOptions, param_dim: Option<usize>) -> 
         ("strategy", Json::str(opts.strategy.clone())),
         ("max_parallel", Json::num(opts.max_parallel as f64)),
         ("workers", Json::num(opts.workers as f64)),
+        ("fold_plan", Json::str(opts.fold_plan.clone())),
         ("partition", partition),
         ("selection", selection),
         ("eval_every", Json::num(opts.eval_every as f64)),
@@ -426,6 +427,11 @@ pub fn options_from_manifest(
     o.strategy = req_str(json, "strategy")?.to_string();
     o.max_parallel = req_f64(json, "max_parallel")? as usize;
     o.workers = req_f64(json, "workers")? as usize;
+    // Optional: manifests written before the fold-plan seam existed have
+    // no such key; they were all serial folds, which is also the default.
+    if let Some(plan) = json.get("fold_plan").and_then(|v| v.as_str()) {
+        o.fold_plan = plan.to_string();
+    }
     o.eval_every = req_f64(json, "eval_every")? as u32;
     o.seed = req_str(json, "seed")?
         .parse::<u64>()
@@ -566,6 +572,7 @@ mod tests {
             rounds: 7,
             network: true,
             strategy: "fedadam".into(),
+            fold_plan: "tree".into(),
             selection: Selection::Count(4),
             hardware: HardwareSource::Manual(vec!["gtx-1060".into(), "rtx-3060".into()]),
             seed: u64::MAX - 7, // exercises the string round-trip
@@ -582,6 +589,7 @@ mod tests {
         assert_eq!(back.clients, 6);
         assert_eq!(back.rounds, 7);
         assert_eq!(back.strategy, "fedadam");
+        assert_eq!(back.fold_plan, "tree");
         assert_eq!(back.selection, Selection::Count(4));
         assert_eq!(back.seed, u64::MAX - 7);
         assert_eq!(back.population, opts.population);

@@ -56,7 +56,7 @@ use super::population::{
 };
 use super::scenario::Scenario;
 use super::server::{ServerApp, ServerConfig};
-use super::strategy::{Krum, Strategy, TrimmedMean};
+use super::strategy::{FoldPlan, Krum, Strategy, TrimmedMean};
 
 /// How client fits execute.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -228,6 +228,15 @@ impl ExperimentBuilder {
     /// Changes no emulated observable (DESIGN.md §8).
     pub fn workers(mut self, n: usize) -> Self {
         self.opts.workers = n;
+        self
+    }
+
+    /// Mean-family reduction topology by name (`"serial"` or `"tree"`).
+    /// Validated at build through [`FoldPlan::parse`]; the robust family
+    /// (Krum, trimmed-mean) needs the full cohort and ignores the plan.
+    /// See DESIGN.md §16.
+    pub fn fold_plan(mut self, name: &str) -> Self {
+        self.opts.fold_plan = name.to_string();
         self
     }
 
@@ -536,6 +545,21 @@ impl ExperimentBuilder {
             None => cohort_sized_strategy(&self.opts)?,
         };
 
+        // Fold plan: the aggregation reduction topology is part of the
+        // determinism contract, so an unknown name is a build error in
+        // both modes (the permissive launcher never accepted one — the
+        // field did not exist).
+        let fold_plan = FoldPlan::parse(&self.opts.fold_plan).ok_or_else(|| {
+            invalid(
+                "fold_plan",
+                format!(
+                    "unknown fold plan '{}' (registered: {})",
+                    self.opts.fold_plan,
+                    FoldPlan::names().join("|")
+                ),
+            )
+        })?;
+
         // Scheduler: explicit name through the registry, or the launcher's
         // historical max_parallel resolution.
         let scheduler = match &self.scheduler_name {
@@ -666,6 +690,7 @@ impl ExperimentBuilder {
         Ok(Experiment {
             opts: self.opts,
             strategy,
+            fold_plan,
             scheduler,
             profiles,
             population,
@@ -720,6 +745,8 @@ fn cohort_sized_strategy(opts: &LaunchOptions) -> Result<Box<dyn Strategy>, Conf
 pub struct Experiment {
     opts: LaunchOptions,
     strategy: Box<dyn Strategy>,
+    /// Resolved aggregation reduction topology (DESIGN.md §16).
+    fold_plan: FoldPlan,
     scheduler: Box<dyn Scheduler>,
     profiles: Vec<HardwareProfile>,
     /// Descriptor-backed roster (`Some` when the population axis is set).
@@ -776,6 +803,7 @@ impl Experiment {
         let Experiment {
             opts,
             strategy,
+            fold_plan,
             scheduler,
             profiles,
             population,
@@ -895,6 +923,7 @@ impl Experiment {
         if let Some(atk) = attack {
             server = server.with_attack(atk);
         }
+        server = server.with_fold_plan(fold_plan);
         for observer in observers {
             server = server.with_observer(observer);
         }

@@ -98,6 +98,11 @@ pub struct LaunchOptions {
     /// fits (each with its own executor).  1 = in-thread sequential fits.
     /// Does not change any emulated observable (DESIGN.md §8).
     pub workers: usize,
+    /// Mean-family reduction topology: "serial" (the historical
+    /// selection-order left fold, byte-stable) or "tree" (fixed
+    /// binary-tree merge over selection-index leaves, worker-side partial
+    /// folds; DESIGN.md §16).  Validated at build.
+    pub fold_plan: String,
     pub partition: PartitionScheme,
     pub selection: Selection,
     pub eval_every: u32,
@@ -147,6 +152,7 @@ impl Default for LaunchOptions {
             strategy: "fedavg".into(),
             max_parallel: 1,
             workers: 1,
+            fold_plan: "serial".into(),
             partition: PartitionScheme::Dirichlet { alpha: 0.5 },
             selection: Selection::All,
             eval_every: 5,
@@ -183,6 +189,7 @@ pub const CONFIG_SCHEMA: &[(&str, &[&str])] = &[
             "fraction",
             "max_parallel",
             "workers",
+            "fold_plan",
             "eval_every",
             "seed",
             "network",
@@ -270,6 +277,7 @@ impl LaunchOptions {
         o.strategy = cfg.str_or("federation", "strategy", &o.strategy);
         o.max_parallel = cfg.u64_or("federation", "max_parallel", 1) as usize;
         o.workers = (cfg.u64_or("federation", "workers", 1) as usize).max(1);
+        o.fold_plan = cfg.str_or("federation", "fold_plan", &o.fold_plan);
         o.eval_every = cfg.u64_or("federation", "eval_every", o.eval_every as u64) as u32;
         o.seed = cfg.u64_or("federation", "seed", o.seed);
         o.network = cfg.bool_or("federation", "network", false);

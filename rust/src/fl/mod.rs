@@ -42,6 +42,6 @@ pub use population::{
 pub use scenario::{Scenario, MODEL_KINDS, SCENARIO_PRESETS};
 pub use server::{ServerApp, ServerConfig};
 pub use strategy::{
-    AccOutput, AggAccumulator, BoundedBuffer, FedAdam, FedAvg, FedAvgM, FedProx, Krum,
-    MeanAggregate, Strategy, StreamingMean, TrimmedMean,
+    AccOutput, AggAccumulator, BoundedBuffer, FedAdam, FedAvg, FedAvgM, FedProx, FoldPlan,
+    Krum, MeanAggregate, Strategy, StreamingMean, TreeMean, TrimmedMean,
 };

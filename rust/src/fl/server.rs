@@ -49,7 +49,7 @@ use super::history::{History, RoundRecord};
 use super::params::{ParamScratch, ParamVector};
 use super::population::{ClientFactory, Population};
 use super::scenario::Scenario;
-use super::strategy::{AggAccumulator, Strategy};
+use super::strategy::{AggAccumulator, FoldPlan, Strategy};
 
 /// Server configuration.
 #[derive(Debug, Clone)]
@@ -209,6 +209,11 @@ pub struct ServerApp {
     /// Recycled parameter buffers shared by client fits and the
     /// aggregation accumulator (EXPERIMENTS.md §Perf).
     scratch: ParamScratch,
+    /// Reduction topology for the mean family (DESIGN.md §16).  `Serial`
+    /// (the default) is the historical left fold, byte-for-byte; `Tree`
+    /// shards the fold across fixed selection-index leaves so pool
+    /// workers can fold their own completions.
+    fold_plan: FoldPlan,
     /// Durable-run harness (DESIGN.md §14): event-log writer, checkpoint
     /// cadence, and — on resume — the restored state to continue from.
     /// Consumed by the next run (one run per attachment).
@@ -286,6 +291,7 @@ impl ServerApp {
             attack: None,
             observers: Vec::new(),
             scratch: ParamScratch::default(),
+            fold_plan: FoldPlan::default(),
             durable: None,
             trace: Trace::default(),
         }
@@ -372,6 +378,19 @@ impl ServerApp {
     /// engine is bit-identical to the unattacked code path.
     pub fn with_attack(mut self, attack: Attack) -> Self {
         self.attack = Some(attack);
+        self
+    }
+
+    /// Select the mean-family reduction topology (DESIGN.md §16).
+    /// [`FoldPlan::Serial`] (the default) keeps the historical
+    /// selection-order left fold bit-for-bit.  [`FoldPlan::Tree`] merges
+    /// fixed selection-index leaves in binary-tree order — bit-identical
+    /// across `--workers {1,2,4,8}` and across durable resume, within
+    /// 1e-6 of the serial fold (property-tested), and lets pool workers
+    /// fold their own completions on gate/netsim/attack-free rounds.
+    /// Robust (buffering) strategies ignore the plan.
+    pub fn with_fold_plan(mut self, plan: FoldPlan) -> Self {
+        self.fold_plan = plan;
         self
     }
 
@@ -642,10 +661,11 @@ impl ServerApp {
             // --- fit phase: stream completions into the accumulator ------
             let mut ledger =
                 RoundLedger::new(selected.iter().map(|&i| i as u32).collect());
-            let mut acc = self.strategy.accumulator_recycled(
+            let mut acc = self.strategy.accumulator_planned(
                 global.len(),
                 selected.len(),
                 &self.scratch,
+                self.fold_plan,
             );
             // Netsim: the download phase is solvable at round start (it
             // depends only on who was selected); fits are then buffered in
@@ -1060,15 +1080,17 @@ impl ServerApp {
                     if !gated {
                         spans.push((client, 0.0, end));
                     }
-                    fold(ledger, acc, result)?;
+                    fold(ledger, acc, pos, result)?;
                 }
                 GateVerdict::Dropout { offline_at_s } => {
                     ledger.record_failure(client, dropout_reason(offline_at_s));
+                    acc.skip_indexed(pos);
                 }
                 GateVerdict::Late { would_end_s } => {
                     let deadline =
                         gate.as_ref().map(|g| g.deadline_s()).unwrap_or(f64::INFINITY);
                     ledger.record_failure(client, late_reason(would_end_s, deadline));
+                    acc.skip_indexed(pos);
                 }
             }
         }
@@ -1269,6 +1291,7 @@ fn round_inline(
                 // The paper's OOM story: the framework survives a
                 // failing client; it simply contributes no update.
                 ledger.record_failure(id, e.to_string());
+                acc.skip_indexed(pos);
             }
             Err(other) => {
                 return Err(FlError::ClientFailed { client: id, source: other });
@@ -1299,6 +1322,18 @@ fn round_pooled(
     attack: &mut Option<Attack>,
 ) -> Result<(), FlError> {
     let shared = Arc::new(global.clone());
+    // Worker-side folding: only when nothing stands between a successful
+    // fit and its fold — a gate can drop/filter the update, netsim buffers
+    // it for the upload timeline, and an attack perturbs it at the
+    // aggregation seam, so on those rounds every update must travel to the
+    // server thread.  Eligibility is a pure function of the round's
+    // configuration (never of timing), so the fold location — and with the
+    // tree plan's fixed topology, the aggregate — is deterministic.
+    let worker_fold = if dyn_gate.is_none() && netsim.is_none() && attack.is_none() {
+        acc.worker_fold_handle()
+    } else {
+        None
+    };
     for (pos, &ci) in selected.iter().enumerate() {
         let client = roster.checkout(ci);
         pool.submit(FitTask {
@@ -1308,6 +1343,7 @@ fn round_pooled(
             cfg: fit_cfg.clone(),
             host: host.clone(),
             env_cfg: env_cfg.clone(),
+            fold: worker_fold.clone(),
         })?;
     }
 
@@ -1353,6 +1389,9 @@ fn round_pooled(
                 Err(e @ EmuError::GpuOom { .. })
                 | Err(e @ EmuError::HostOom { .. }) => {
                     ledger.record_failure(slim.client_id, e.to_string());
+                    // Safe double-skip when a worker held the fold handle:
+                    // TreeFoldState::skip is idempotent.
+                    acc.skip_indexed(slim.index);
                 }
                 Err(other) => {
                     fatal = Some(FlError::ClientFailed {
@@ -1428,17 +1467,18 @@ fn fold_gated(
         Some((d, g)) => (d, g),
         None => {
             inject(attack, &mut result);
-            return fold(ledger, acc, result);
+            return fold(ledger, acc, pos, result);
         }
     };
     let dur_s = result.emu.emu_total_s + result.comm_s;
     match dynamics.admit(gate, roster_idx, result.client, dur_s) {
         GateVerdict::Keep { .. } => {
             inject(attack, &mut result);
-            fold(ledger, acc, result)
+            fold(ledger, acc, pos, result)
         }
         GateVerdict::Dropout { offline_at_s } => {
             ledger.record_failure(result.client, dropout_reason(offline_at_s));
+            acc.skip_indexed(pos);
             Ok(())
         }
         GateVerdict::Late { would_end_s } => {
@@ -1446,6 +1486,7 @@ fn fold_gated(
                 result.client,
                 late_reason(would_end_s, gate.deadline_s()),
             );
+            acc.skip_indexed(pos);
             Ok(())
         }
     }
@@ -1463,12 +1504,15 @@ fn inject(attack: &mut Option<Attack>, result: &mut FitResult) {
 }
 
 /// Fold one success into the round's scalar ledger and the streaming
-/// aggregate; the `FitResult` (and its param vector) dies here.
+/// aggregate; the `FitResult` (and its param vector) dies here.  `pos` is
+/// the client's selection index — the reduction key a position-aware
+/// accumulator (the tree fold) routes on.
 fn fold(
     ledger: &mut RoundLedger,
     acc: &mut Box<dyn AggAccumulator>,
+    pos: usize,
     result: FitResult,
 ) -> Result<(), FlError> {
     ledger.record_success(&result);
-    acc.push(result)
+    acc.push_indexed(pos, result)
 }

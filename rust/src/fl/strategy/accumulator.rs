@@ -14,10 +14,47 @@
 //! aggregate is bit-identical whether fits ran sequentially or on N workers
 //! (EXPERIMENTS.md §Round-engine).
 
+use std::sync::Arc;
+
 use crate::error::FlError;
 
 use super::super::client::FitResult;
 use super::super::params::{ParamScratch, ParamVector};
+use super::fold::TreeFoldState;
+
+/// One running-mean fold step: `mean[i] += alpha * (xs[i] - mean[i])`.
+///
+/// This is *the* inner loop of every mean-family accumulator (serial
+/// [`StreamingMean`] and the tree-fold leaves alike), factored out so both
+/// paths share one arithmetic sequence — which is what makes a leaf fold
+/// bit-identical whether it ran inline on the server thread or inside a
+/// pool worker.
+///
+/// 8-wide unrolled with a scalar tail: each element's update is
+/// independent, so the unrolled body performs exactly the same operation
+/// per element as the scalar loop (bit-identical; differential-tested
+/// below) — it just hands the compiler straight-line code it can keep in
+/// registers and turn into vector lanes.
+#[inline]
+pub(crate) fn fold_step(mean: &mut [f64], xs: &[f32], alpha: f64) {
+    debug_assert_eq!(mean.len(), xs.len());
+    let split = mean.len() - mean.len() % 8;
+    let (mh, mt) = mean.split_at_mut(split);
+    let (xh, xt) = xs.split_at(split);
+    for (mc, xc) in mh.chunks_exact_mut(8).zip(xh.chunks_exact(8)) {
+        mc[0] += alpha * (xc[0] as f64 - mc[0]);
+        mc[1] += alpha * (xc[1] as f64 - mc[1]);
+        mc[2] += alpha * (xc[2] as f64 - mc[2]);
+        mc[3] += alpha * (xc[3] as f64 - mc[3]);
+        mc[4] += alpha * (xc[4] as f64 - mc[4]);
+        mc[5] += alpha * (xc[5] as f64 - mc[5]);
+        mc[6] += alpha * (xc[6] as f64 - mc[6]);
+        mc[7] += alpha * (xc[7] as f64 - mc[7]);
+    }
+    for (m, &x) in mt.iter_mut().zip(xt) {
+        *m += alpha * (x as f64 - *m);
+    }
+}
 
 /// What a finished accumulator hands back to the strategy.
 pub enum AccOutput {
@@ -45,6 +82,32 @@ pub trait AggAccumulator: Send {
 
     /// Fold one finished client in.  Called in selection order.
     fn push(&mut self, result: FitResult) -> Result<(), FlError>;
+
+    /// Fold one finished client in, carrying its selection index.
+    ///
+    /// The round engine always calls this variant; the default forwards to
+    /// [`AggAccumulator::push`] and ignores the position.  Position-aware
+    /// accumulators (the tree fold) use `pos` to route the update to its
+    /// leaf so the fold topology is a pure function of the selection —
+    /// never of completion order.
+    fn push_indexed(&mut self, _pos: usize, result: FitResult) -> Result<(), FlError> {
+        self.push(result)
+    }
+
+    /// Tell the accumulator that selection index `pos` will never arrive
+    /// (client failure, dropout, deadline miss, gate filter).  No-op by
+    /// default; the tree fold advances the owning leaf's cursor past the
+    /// gap so later same-leaf updates are not parked forever.
+    fn skip_indexed(&mut self, _pos: usize) {}
+
+    /// Shared fold state that pool workers may fold into directly, or
+    /// `None` (the default) if every update must travel to the server
+    /// thread.  Only the tree fold exposes one; the engine passes it to
+    /// workers exclusively on rounds with no gate/netsim/attack stage, so
+    /// a worker-side fold sees exactly the updates the server would have.
+    fn worker_fold_handle(&self) -> Option<Arc<TreeFoldState>> {
+        None
+    }
 
     /// Clients folded so far.
     fn len(&self) -> usize;
@@ -127,9 +190,7 @@ impl AggAccumulator for StreamingMean {
         let w = result.num_examples as f64;
         self.total_weight += w;
         let alpha = w / self.total_weight;
-        for (m, &x) in self.mean.iter_mut().zip(result.params.as_slice()) {
-            *m += alpha * (x as f64 - *m);
-        }
+        fold_step(&mut self.mean, result.params.as_slice(), alpha);
         self.total_examples += result.num_examples;
         self.clients += 1;
         if let Some(scratch) = &self.scratch {
@@ -300,6 +361,29 @@ mod tests {
         };
         for (x, y) in f.as_slice().iter().zip(r.as_slice()) {
             assert!((x - y).abs() < 1e-6); // close, but only order makes it exact
+        }
+    }
+
+    #[test]
+    fn fold_step_unroll_is_bit_identical_to_the_scalar_oracle() {
+        // The 8-wide unrolled body must perform the exact per-element
+        // operation of the scalar loop — including at awkward lengths that
+        // exercise the tail (0..=9, 15, 16, 17, 1003).
+        for p in (0..=9).chain([15usize, 16, 17, 1003]) {
+            let xs = client_vec(7, p);
+            let mut rng = Pcg::new(0xF01D, p as u64);
+            let base: Vec<f64> = (0..p).map(|_| rng.f32() as f64).collect();
+            for alpha in [0.0, 0.25, 1.0 / 3.0, 1.0] {
+                let mut fast = base.clone();
+                fold_step(&mut fast, &xs, alpha);
+                let mut slow = base.clone();
+                for (m, &x) in slow.iter_mut().zip(&xs) {
+                    *m += alpha * (x as f64 - *m);
+                }
+                for (a, b) in fast.iter().zip(&slow) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "p={p} alpha={alpha}");
+                }
+            }
         }
     }
 

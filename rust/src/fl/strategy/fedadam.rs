@@ -6,7 +6,9 @@ use crate::runtime::ModelExecutor;
 
 use super::super::client::FitResult;
 use super::super::params::{ParamScratch, ParamVector};
-use super::{weighted_average, AccOutput, AggAccumulator, Strategy, StreamingMean};
+use super::{
+    weighted_average, AccOutput, AggAccumulator, FoldPlan, Strategy, StreamingMean, TreeMean,
+};
 
 /// Server-side Adam over round updates.
 #[derive(Debug)]
@@ -72,6 +74,21 @@ impl Strategy for FedAdam {
         scratch: &ParamScratch,
     ) -> Box<dyn AggAccumulator> {
         Box::new(StreamingMean::recycled(num_params, scratch.clone()))
+    }
+
+    fn accumulator_planned(
+        &self,
+        num_params: usize,
+        expected_clients: usize,
+        scratch: &ParamScratch,
+        plan: FoldPlan,
+    ) -> Box<dyn AggAccumulator> {
+        match plan {
+            FoldPlan::Serial => self.accumulator_recycled(num_params, expected_clients, scratch),
+            FoldPlan::Tree => {
+                Box::new(TreeMean::recycled(num_params, expected_clients, scratch.clone()))
+            }
+        }
     }
 
     fn reduce(

@@ -6,7 +6,9 @@ use crate::runtime::ModelExecutor;
 
 use super::super::client::FitResult;
 use super::super::params::{ParamScratch, ParamVector};
-use super::{weighted_average, AccOutput, AggAccumulator, Strategy, StreamingMean};
+use super::{
+    weighted_average, AccOutput, AggAccumulator, FoldPlan, Strategy, StreamingMean, TreeMean,
+};
 
 /// Decode a `[n u64 LE][n x f32 LE]` blob; `None` on empty or malformed
 /// input (treated as "no state yet").
@@ -79,6 +81,21 @@ impl Strategy for FedAvgM {
         scratch: &ParamScratch,
     ) -> Box<dyn AggAccumulator> {
         Box::new(StreamingMean::recycled(num_params, scratch.clone()))
+    }
+
+    fn accumulator_planned(
+        &self,
+        num_params: usize,
+        expected_clients: usize,
+        scratch: &ParamScratch,
+        plan: FoldPlan,
+    ) -> Box<dyn AggAccumulator> {
+        match plan {
+            FoldPlan::Serial => self.accumulator_recycled(num_params, expected_clients, scratch),
+            FoldPlan::Tree => {
+                Box::new(TreeMean::recycled(num_params, expected_clients, scratch.clone()))
+            }
+        }
     }
 
     fn reduce(

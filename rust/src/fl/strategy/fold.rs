@@ -1,0 +1,609 @@
+//! Deterministic parallel reduction: per-leaf partial running means merged
+//! in a fixed binary-tree order keyed by selection index (DESIGN.md §16).
+//!
+//! The serial [`StreamingMean`](super::StreamingMean) left fold is O(P) per
+//! client *on the server thread* — the per-round floor at population
+//! scale.  The tree fold shards that work: the selection is split into
+//! [`TREE_LEAVES`] contiguous index ranges, each leaf keeps its own f64
+//! running mean (folded with the exact same [`fold_step`] arithmetic as
+//! the serial path), and `finish` merges the leaf partials pairwise,
+//! level by level, in leaf-index order.
+//!
+//! Two properties make this deterministic under parallelism:
+//!
+//! 1. **Leaf folds are selection-ordered.**  Each leaf owns a `next`
+//!    cursor; an update for a later index parks in a `BTreeMap` until the
+//!    gap closes, so every leaf folds its range in ascending selection
+//!    index no matter which worker delivered what first.
+//! 2. **The merge topology is fixed.**  Pairing is by leaf index, never by
+//!    arrival, so the full reduction is a pure function of (selection,
+//!    updates) — bit-identical across `--workers {1,2,4,8}` and across a
+//!    durable-log replay.
+//!
+//! The result is bit-*different* from the serial left fold (different
+//! summation tree), which is why the topology is an explicit, opt-in
+//! [`FoldPlan`] seam rather than a silent swap: `--fold-plan tree` changes
+//! the aggregate within the documented 1e-6 envelope (property-tested in
+//! `tests/properties.rs`), `--fold-plan serial` (the default) is the
+//! historical byte stream.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::error::FlError;
+
+use super::super::client::FitResult;
+use super::super::params::{ParamScratch, ParamVector};
+use super::accumulator::{fold_step, AccOutput, AggAccumulator, MeanAggregate};
+
+/// Which reduction topology the mean-family accumulators use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FoldPlan {
+    /// The historical serial left fold in selection order (bit-stable
+    /// default).
+    #[default]
+    Serial,
+    /// Fixed binary tree over selection-index leaves; folds can run on
+    /// pool workers.
+    Tree,
+}
+
+impl FoldPlan {
+    /// Parse a plan name as used by `--fold-plan` / `[federation] fold_plan`.
+    pub fn parse(name: &str) -> Option<FoldPlan> {
+        match name {
+            "serial" => Some(FoldPlan::Serial),
+            "tree" => Some(FoldPlan::Tree),
+            _ => None,
+        }
+    }
+
+    /// The registry name (`parse` round-trips it).
+    pub fn name(&self) -> &'static str {
+        match self {
+            FoldPlan::Serial => "serial",
+            FoldPlan::Tree => "tree",
+        }
+    }
+
+    /// Every registered plan name, for `bouquetfl list` and config errors.
+    pub fn names() -> [&'static str; 2] {
+        ["serial", "tree"]
+    }
+
+    /// One-line description per plan, for `bouquetfl list`.
+    pub fn describe(&self) -> &'static str {
+        match self {
+            FoldPlan::Serial => "serial left fold in selection order (bit-stable default)",
+            FoldPlan::Tree => "8-leaf binary tree, worker-side partial folds (1e-6 of serial)",
+        }
+    }
+}
+
+/// Leaf count of the fixed reduction tree.  Constant (not worker-derived!)
+/// so the topology — and therefore the aggregate — is independent of
+/// `--workers`.
+pub const TREE_LEAVES: usize = 8;
+
+/// An update parked in a leaf until the selection indices before it have
+/// folded.
+struct PendingUpdate {
+    client: u32,
+    num_examples: usize,
+    params: ParamVector,
+}
+
+/// One leaf: a selection-index range folding into its own running mean.
+struct LeafSlot {
+    /// Absolute selection index this leaf folds next.
+    next: usize,
+    /// Out-of-order arrivals parked until `next` reaches them; `None`
+    /// marks a skipped (failed/filtered) index so the cursor can advance
+    /// past it.
+    pending: BTreeMap<usize, Option<PendingUpdate>>,
+    /// Lazily allocated on the leaf's first fold (empty leaves cost
+    /// nothing).
+    mean: Vec<f64>,
+    total_weight: f64,
+    total_examples: usize,
+    clients: usize,
+}
+
+/// Shared fold state: the engine hands an `Arc` of this to pool workers on
+/// eligible rounds so each worker folds its own completions in place, and
+/// the server merges the leaf partials at `finish`.
+pub struct TreeFoldState {
+    num_params: usize,
+    /// Selection indices per leaf (`ceil(expected / leaves)`).
+    width: usize,
+    slots: Vec<Mutex<LeafSlot>>,
+    /// Successful folds so far (worker- and server-side combined).
+    pushed: AtomicUsize,
+    scratch: Option<ParamScratch>,
+}
+
+/// A drained leaf, mid-merge.
+#[derive(Default)]
+struct Partial {
+    mean: Vec<f64>,
+    total_weight: f64,
+    total_examples: usize,
+    clients: usize,
+}
+
+impl TreeFoldState {
+    fn new(num_params: usize, expected_clients: usize, scratch: Option<ParamScratch>) -> Self {
+        let expected = expected_clients.max(1);
+        let leaves = TREE_LEAVES.min(expected);
+        let width = expected.div_ceil(leaves);
+        let slots = (0..leaves)
+            .map(|l| {
+                Mutex::new(LeafSlot {
+                    next: l * width,
+                    pending: BTreeMap::new(),
+                    mean: Vec::new(),
+                    total_weight: 0.0,
+                    total_examples: 0,
+                    clients: 0,
+                })
+            })
+            .collect();
+        TreeFoldState { num_params, width, slots, pushed: AtomicUsize::new(0), scratch }
+    }
+
+    fn leaf_of(&self, pos: usize) -> usize {
+        (pos / self.width).min(self.slots.len() - 1)
+    }
+
+    fn lock(&self, leaf: usize) -> std::sync::MutexGuard<'_, LeafSlot> {
+        self.slots[leaf].lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Fold one update at selection index `pos` into its leaf.  Validation
+    /// happens *before* any state changes, so a caller that sees `Err` may
+    /// still [`TreeFoldState::skip`] the index.
+    pub fn fold_update(
+        &self,
+        pos: usize,
+        client: u32,
+        num_examples: usize,
+        params: ParamVector,
+    ) -> Result<(), FlError> {
+        if params.len() != self.num_params {
+            return Err(FlError::ParamMismatch {
+                expected: self.num_params,
+                got: params.len(),
+            });
+        }
+        if num_examples == 0 {
+            return Err(FlError::Strategy(format!(
+                "client {client} reported zero examples"
+            )));
+        }
+        let mut slot = self.lock(self.leaf_of(pos));
+        if pos == slot.next {
+            self.fold_into(&mut slot, client, num_examples, params);
+            slot.next += 1;
+            self.drain(&mut slot);
+        } else {
+            slot.pending
+                .insert(pos, Some(PendingUpdate { client, num_examples, params }));
+        }
+        self.pushed.fetch_add(1, Ordering::SeqCst);
+        Ok(())
+    }
+
+    /// Mark selection index `pos` as never arriving (failure, dropout,
+    /// gate filter) so the leaf cursor can advance past it.  Idempotent,
+    /// and a no-op for already-passed indices — a worker and the server
+    /// may both skip the same failed position (the worker when the fit
+    /// errs, the server when it records the failure).
+    pub fn skip(&self, pos: usize) {
+        let mut slot = self.lock(self.leaf_of(pos));
+        if pos == slot.next {
+            slot.next += 1;
+            self.drain(&mut slot);
+        } else if pos > slot.next {
+            slot.pending.insert(pos, None);
+        }
+    }
+
+    /// Successful folds so far.
+    pub fn folded(&self) -> usize {
+        self.pushed.load(Ordering::SeqCst)
+    }
+
+    /// Updates currently parked out-of-order across all leaves.
+    pub fn parked(&self) -> usize {
+        (0..self.slots.len())
+            .map(|l| self.lock(l).pending.values().filter(|p| p.is_some()).count())
+            .sum()
+    }
+
+    fn drain(&self, slot: &mut LeafSlot) {
+        while let Some(entry) = slot.pending.remove(&slot.next) {
+            if let Some(u) = entry {
+                self.fold_into(slot, u.client, u.num_examples, u.params);
+            }
+            slot.next += 1;
+        }
+    }
+
+    fn fold_into(&self, slot: &mut LeafSlot, _client: u32, num_examples: usize, params: ParamVector) {
+        if slot.mean.is_empty() && self.num_params > 0 {
+            slot.mean = match &self.scratch {
+                Some(s) => s.take_f64_zeroed(self.num_params),
+                None => vec![0.0; self.num_params],
+            };
+        }
+        let w = num_examples as f64;
+        slot.total_weight += w;
+        let alpha = w / slot.total_weight;
+        // Same arithmetic sequence as StreamingMean::push — a leaf fold is
+        // bit-identical whether it ran inline or inside a pool worker.
+        fold_step(&mut slot.mean, params.as_slice(), alpha);
+        slot.total_examples += num_examples;
+        slot.clients += 1;
+        if let Some(s) = &self.scratch {
+            s.recycle(params);
+        }
+    }
+
+    /// Drain every leaf and merge pairwise, level by level, in leaf-index
+    /// order: `((L0 L1) (L2 L3)) ((L4 L5) (L6 L7))`; an odd tail carries up
+    /// unmerged.  The topology depends only on the leaf count, never on
+    /// arrival order or worker count.
+    fn finish_merge(&self) -> Result<AccOutput, FlError> {
+        let mut level: Vec<Partial> = Vec::with_capacity(self.slots.len());
+        for l in 0..self.slots.len() {
+            let mut slot = self.lock(l);
+            if !slot.pending.is_empty() {
+                return Err(FlError::Strategy(
+                    "tree fold finished with unresolved selection gaps".into(),
+                ));
+            }
+            level.push(Partial {
+                mean: std::mem::take(&mut slot.mean),
+                total_weight: slot.total_weight,
+                total_examples: slot.total_examples,
+                clients: slot.clients,
+            });
+            slot.total_weight = 0.0;
+            slot.total_examples = 0;
+            slot.clients = 0;
+        }
+        while level.len() > 1 {
+            let mut next = Vec::with_capacity(level.len().div_ceil(2));
+            let mut it = level.into_iter();
+            while let Some(a) = it.next() {
+                match it.next() {
+                    Some(b) => next.push(self.merge(a, b)),
+                    None => next.push(a),
+                }
+            }
+            level = next;
+        }
+        let root = level.pop().unwrap_or_default();
+        if root.clients == 0 {
+            return Err(FlError::Strategy("aggregate over zero clients".into()));
+        }
+        let Partial { mean, total_examples, clients, .. } = root;
+        let params = match &self.scratch {
+            Some(s) => {
+                let mut out = s.take_f32();
+                out.extend(mean.iter().map(|&x| x as f32));
+                let pv = ParamVector::from_vec(out);
+                s.recycle_f64(mean);
+                pv
+            }
+            None => ParamVector::from_vec(mean.iter().map(|&x| x as f32).collect()),
+        };
+        Ok(AccOutput::Mean(MeanAggregate { params, total_examples, clients }))
+    }
+
+    /// Weighted merge of two partials:
+    /// `W = W_a + W_b;  m_a[i] += (W_b / W) * (m_b[i] - m_a[i])` — the
+    /// two-sample generalisation of the streaming fold step, in pure f64.
+    fn merge(&self, mut a: Partial, b: Partial) -> Partial {
+        if b.clients == 0 {
+            return a;
+        }
+        if a.clients == 0 {
+            return b;
+        }
+        let w = a.total_weight + b.total_weight;
+        let beta = b.total_weight / w;
+        for (m, &x) in a.mean.iter_mut().zip(&b.mean) {
+            *m += beta * (x - *m);
+        }
+        a.total_weight = w;
+        a.total_examples += b.total_examples;
+        a.clients += b.clients;
+        if let Some(s) = &self.scratch {
+            s.recycle_f64(b.mean);
+        }
+        a
+    }
+}
+
+/// The mean-family accumulator for [`FoldPlan::Tree`]: a thin handle over
+/// a shared [`TreeFoldState`].
+///
+/// On rounds the engine deems eligible (no gate/netsim/attack stage) it
+/// clones the state into every `FitTask`, workers fold their completions
+/// in place and strip the params as a fold receipt, and the server's
+/// `push_indexed` sees the empty vector and does nothing.  On every other
+/// round (and on `round_inline`) the server folds here directly — either
+/// way each update is folded exactly once, into the leaf its selection
+/// index owns.
+pub struct TreeMean {
+    state: Arc<TreeFoldState>,
+    /// Fallback cursor so plain `push` (no index) still lands updates in
+    /// arrival order; the engine always uses `push_indexed`.
+    seq: usize,
+}
+
+impl TreeMean {
+    /// A tree fold with freshly allocated leaf buffers.
+    pub fn new(num_params: usize, expected_clients: usize) -> Self {
+        TreeMean {
+            state: Arc::new(TreeFoldState::new(num_params, expected_clients, None)),
+            seq: 0,
+        }
+    }
+
+    /// A tree fold whose leaf/output buffers cycle through `scratch`, like
+    /// [`StreamingMean::recycled`](super::StreamingMean::recycled).
+    pub fn recycled(num_params: usize, expected_clients: usize, scratch: ParamScratch) -> Self {
+        TreeMean {
+            state: Arc::new(TreeFoldState::new(num_params, expected_clients, Some(scratch))),
+            seq: 0,
+        }
+    }
+}
+
+impl AggAccumulator for TreeMean {
+    fn name(&self) -> &'static str {
+        "tree-mean"
+    }
+
+    fn push(&mut self, result: FitResult) -> Result<(), FlError> {
+        let pos = self.seq;
+        self.push_indexed(pos, result)
+    }
+
+    fn push_indexed(&mut self, pos: usize, result: FitResult) -> Result<(), FlError> {
+        self.seq = self.seq.max(pos + 1);
+        if result.params.is_empty() && self.state.num_params > 0 {
+            // Empty params on a non-empty model: the update was already
+            // folded worker-side (the worker strips the vector as its
+            // receipt), so there is nothing left to do here.
+            return Ok(());
+        }
+        let FitResult { client, params, num_examples, .. } = result;
+        self.state.fold_update(pos, client, num_examples, params)
+    }
+
+    fn skip_indexed(&mut self, pos: usize) {
+        self.seq = self.seq.max(pos + 1);
+        self.state.skip(pos);
+    }
+
+    fn worker_fold_handle(&self) -> Option<Arc<TreeFoldState>> {
+        Some(Arc::clone(&self.state))
+    }
+
+    fn len(&self) -> usize {
+        self.state.folded()
+    }
+
+    fn buffered_updates(&self) -> usize {
+        self.state.parked()
+    }
+
+    fn finish(self: Box<Self>) -> Result<AccOutput, FlError> {
+        self.state.finish_merge()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::StreamingMean;
+    use super::*;
+    use crate::emu::FitReport;
+    use crate::util::rng::Pcg;
+
+    fn result(client: u32, vals: Vec<f32>, n: usize) -> FitResult {
+        FitResult {
+            client,
+            params: ParamVector::from_vec(vals),
+            num_examples: n,
+            mean_loss: 1.0,
+            emu: FitReport::synthetic(1, 1, 0.1),
+            comm_s: 0.0,
+        }
+    }
+
+    fn client_vec(k: u32, p: usize) -> Vec<f32> {
+        let mut rng = Pcg::new(0xACC, k as u64);
+        (0..p).map(|_| rng.f32()).collect()
+    }
+
+    fn finish_mean(acc: Box<dyn AggAccumulator>) -> MeanAggregate {
+        match acc.finish().unwrap() {
+            AccOutput::Mean(m) => m,
+            AccOutput::Buffered(_) => panic!("mean accumulator must emit Mean"),
+        }
+    }
+
+    #[test]
+    fn fold_plan_names_round_trip() {
+        for name in FoldPlan::names() {
+            let plan = FoldPlan::parse(name).unwrap();
+            assert_eq!(plan.name(), name);
+            assert!(!plan.describe().is_empty());
+        }
+        assert_eq!(FoldPlan::default(), FoldPlan::Serial);
+        assert!(FoldPlan::parse("binary-tree").is_none());
+    }
+
+    #[test]
+    fn tree_matches_serial_within_tolerance() {
+        let p = 4096;
+        let k = 23u32; // not a multiple of the leaf count
+        let mut serial = Box::new(StreamingMean::new(p));
+        let mut tree = Box::new(TreeMean::new(p, k as usize));
+        for c in 0..k {
+            serial.push(result(c, client_vec(c, p), 8 + c as usize)).unwrap();
+            tree.push_indexed(c as usize, result(c, client_vec(c, p), 8 + c as usize))
+                .unwrap();
+        }
+        let s = finish_mean(serial);
+        let t = finish_mean(tree);
+        assert_eq!(s.clients, t.clients);
+        assert_eq!(s.total_examples, t.total_examples);
+        for (a, b) in s.params.as_slice().iter().zip(t.params.as_slice()) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn delivery_order_cannot_change_the_tree_aggregate() {
+        // Same updates, three delivery orders (in-order, reversed, and an
+        // interleave that mimics two workers racing): bit-identical roots.
+        let p = 777;
+        let k = 19usize;
+        let orders: [Vec<usize>; 3] = [
+            (0..k).collect(),
+            (0..k).rev().collect(),
+            (0..k).map(|i| if i % 2 == 0 { i / 2 } else { k - 1 - i / 2 }).collect(),
+        ];
+        let mut roots: Vec<Vec<u32>> = Vec::new();
+        for order in &orders {
+            let mut tree = Box::new(TreeMean::new(p, k));
+            for &pos in order {
+                tree.push_indexed(pos, result(pos as u32, client_vec(pos as u32, p), 4 + pos))
+                    .unwrap();
+            }
+            assert_eq!(tree.buffered_updates(), 0, "all gaps must have drained");
+            roots.push(
+                finish_mean(tree).params.as_slice().iter().map(|x| x.to_bits()).collect(),
+            );
+        }
+        assert_eq!(roots[0], roots[1]);
+        assert_eq!(roots[0], roots[2]);
+    }
+
+    #[test]
+    fn worker_side_folds_are_bit_identical_to_server_side_folds() {
+        // Half the updates fold through the shared state handle (as a pool
+        // worker would), leaving an empty-params receipt for the server;
+        // the other half fold through push_indexed.  Root must be
+        // bit-identical to the all-server fold.
+        let p = 513;
+        let k = 17usize;
+        let mut inline = Box::new(TreeMean::new(p, k));
+        for pos in 0..k {
+            inline
+                .push_indexed(pos, result(pos as u32, client_vec(pos as u32, p), 4 + pos))
+                .unwrap();
+        }
+        let expect = finish_mean(inline);
+
+        let mut split = Box::new(TreeMean::new(p, k));
+        let handle = split.worker_fold_handle().unwrap();
+        for pos in (0..k).rev() {
+            if pos % 2 == 0 {
+                handle
+                    .fold_update(pos, pos as u32, 4 + pos, ParamVector::from_vec(client_vec(pos as u32, p)))
+                    .unwrap();
+                // The receipt the server sees: params stripped.
+                split.push_indexed(pos, result(pos as u32, Vec::new(), 4 + pos)).unwrap();
+            } else {
+                split
+                    .push_indexed(pos, result(pos as u32, client_vec(pos as u32, p), 4 + pos))
+                    .unwrap();
+            }
+        }
+        assert_eq!(split.len(), k);
+        let got = finish_mean(split);
+        assert_eq!(got.clients, expect.clients);
+        for (a, b) in got.params.as_slice().iter().zip(expect.params.as_slice()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "fold location changed the root");
+        }
+    }
+
+    #[test]
+    fn skipped_indices_leave_no_residue() {
+        // Failures at arbitrary positions (skip before, between, and after
+        // arrivals) must yield the same root as never selecting them.
+        let p = 64;
+        let survivors = [1usize, 3, 4, 8, 9];
+        let mut dense = Box::new(TreeMean::new(p, survivors.len()));
+        for (slot, &c) in survivors.iter().enumerate() {
+            dense.push_indexed(slot, result(c as u32, client_vec(c as u32, p), 4 + c)).unwrap();
+        }
+        let expect = finish_mean(dense);
+
+        let mut gappy = Box::new(TreeMean::new(p, 10));
+        let h = gappy.worker_fold_handle().unwrap();
+        for pos in (0..10usize).rev() {
+            if survivors.contains(&pos) {
+                gappy
+                    .push_indexed(pos, result(pos as u32, client_vec(pos as u32, p), 4 + pos))
+                    .unwrap();
+            } else {
+                h.skip(pos);
+            }
+        }
+        let got = finish_mean(gappy);
+        assert_eq!(got.clients, expect.clients);
+        assert_eq!(got.total_examples, expect.total_examples);
+        // Same survivors folded — values agree to the merge envelope (the
+        // leaf boundaries differ between the two trees, so bit-identity is
+        // not expected here; determinism across deliveries is tested above).
+        for (a, b) in got.params.as_slice().iter().zip(expect.params.as_slice()) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn unresolved_gap_and_zero_clients_are_errors() {
+        // 16 expected over 8 leaves → width 2: index 3 parks behind its
+        // leaf-mate at index 2, which never arrives.
+        let mut tree = Box::new(TreeMean::new(8, 16));
+        tree.push_indexed(3, result(3, client_vec(3, 8), 5)).unwrap();
+        assert_eq!(tree.buffered_updates(), 1, "index 3 must park behind the gap");
+        let err = tree.finish().unwrap_err();
+        assert!(format!("{err}").contains("gap"), "{err}");
+
+        let empty = Box::new(TreeMean::new(8, 4));
+        assert!(empty.finish().is_err());
+
+        let mut bad = TreeMean::new(8, 4);
+        assert!(bad.push_indexed(0, result(0, vec![1.0], 5)).is_err());
+        assert!(bad.push_indexed(0, result(0, client_vec(0, 8), 0)).is_err());
+    }
+
+    #[test]
+    fn recycled_tree_is_bit_identical_and_recycles() {
+        let p = 256;
+        let scratch = crate::fl::params::ParamScratch::default();
+        for round in 0..2u32 {
+            let mut plain = Box::new(TreeMean::new(p, 6));
+            let mut rec = Box::new(TreeMean::recycled(p, 6, scratch.clone()));
+            for c in 0..6u32 {
+                let mk = || result(c, client_vec(c + round * 16, p), 8 + c as usize);
+                plain.push_indexed(c as usize, mk()).unwrap();
+                rec.push_indexed(c as usize, mk()).unwrap();
+            }
+            let a = finish_mean(plain);
+            let b = finish_mean(rec);
+            for (x, y) in a.params.as_slice().iter().zip(b.params.as_slice()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "recycling changed the fold");
+            }
+        }
+        assert!(scratch.stashed() > 0, "nothing was recycled");
+    }
+}

@@ -24,10 +24,12 @@ mod fedadam;
 mod fedavg;
 mod fedavgm;
 mod fedprox;
+mod fold;
 mod krum;
 mod trimmed;
 
 pub use accumulator::{AccOutput, AggAccumulator, BoundedBuffer, MeanAggregate, StreamingMean};
+pub use fold::{FoldPlan, TreeFoldState, TreeMean, TREE_LEAVES};
 pub use fedadam::FedAdam;
 pub use fedavg::FedAvg;
 pub use fedavgm::FedAvgM;
@@ -176,6 +178,23 @@ pub trait Strategy {
         _scratch: &ParamScratch,
     ) -> Box<dyn AggAccumulator> {
         self.accumulator(num_params, expected_clients)
+    }
+
+    /// Like [`Strategy::accumulator_recycled`], additionally told which
+    /// [`FoldPlan`] the run selected (`--fold-plan`).  The default ignores
+    /// the plan — correct for any strategy whose aggregate is not a
+    /// reorderable fold (the robust family buffers everything, so there is
+    /// nothing to shard).  The mean family overrides this: `Serial` keeps
+    /// the historical [`StreamingMean`] byte stream, `Tree` swaps in the
+    /// deterministic parallel reduction ([`TreeMean`], DESIGN.md §16).
+    fn accumulator_planned(
+        &self,
+        num_params: usize,
+        expected_clients: usize,
+        scratch: &ParamScratch,
+        _plan: FoldPlan,
+    ) -> Box<dyn AggAccumulator> {
+        self.accumulator_recycled(num_params, expected_clients, scratch)
     }
 
     /// Combine a finished accumulator into the next global model.

@@ -141,6 +141,11 @@ fn cmd_list(raw: &[String]) -> Result<()> {
         let cfg = NetSimConfig::preset(name).expect("preset exists");
         println!("  {:<16} {}", name, cfg.describe());
     }
+    println!("\nfold plans (--fold-plan / [federation] fold_plan, DESIGN.md §16):");
+    for name in strategy::FoldPlan::names() {
+        let plan = strategy::FoldPlan::parse(name).expect("registered name parses");
+        println!("  {:<8} {}", name, plan.describe());
+    }
     println!("\nattack models (--attack / [attack] model, DESIGN.md §13):");
     for name in attack::names() {
         match AttackConfig::preset(&name) {
@@ -223,6 +228,7 @@ fn run_specs() -> Vec<OptSpec> {
         OptSpec { name: "fraction", help: "client fraction per round", takes_value: true, default: Some("1.0") },
         OptSpec { name: "parallel", help: "max concurrent clients on the EMULATED timeline (1 = sequential)", takes_value: true, default: Some("1") },
         OptSpec { name: "workers", help: "REAL fit concurrency: pool threads with their own executors (1 = in-thread)", takes_value: true, default: Some("1") },
+        OptSpec { name: "fold-plan", help: "mean-family reduction topology: serial|tree (`bouquetfl list` prints them; DESIGN.md §16)", takes_value: true, default: Some("serial") },
         OptSpec { name: "seed", help: "experiment seed", takes_value: true, default: Some("42") },
         OptSpec { name: "scenario", help: "federation dynamics: stable|diurnal-mobile|high-churn or a .toml/.json scenario file (see SCENARIOS.md)", takes_value: true, default: None },
         OptSpec { name: "network", help: "attach network-latency profiles", takes_value: false, default: None },
@@ -264,6 +270,7 @@ fn cmd_run(raw: &[String]) -> Result<()> {
         opts.selection = if fraction >= 1.0 { Selection::All } else { Selection::Fraction(fraction) };
         opts.max_parallel = args.get_u64("parallel")?.unwrap() as usize;
         opts.workers = (args.get_u64("workers")?.unwrap() as usize).max(1);
+        opts.fold_plan = args.get("fold-plan").unwrap().to_string();
         opts.seed = args.get_u64("seed")?.unwrap();
         opts.network = args.get_bool("network");
         if let Some(profiles) = args.get("profiles") {
@@ -327,8 +334,9 @@ fn cmd_run(raw: &[String]) -> Result<()> {
     println!("host: {}", opts.host.describe());
     println!(
         "federation: {} clients, {} rounds, strategy {}, batch {}, {} local steps, \
-         {} fit worker(s)",
-        opts.clients, opts.rounds, opts.strategy, opts.batch, opts.local_steps, opts.workers
+         {} fit worker(s), {} fold",
+        opts.clients, opts.rounds, opts.strategy, opts.batch, opts.local_steps, opts.workers,
+        opts.fold_plan
     );
     if let Some(sc) = &opts.scenario {
         println!("scenario: {}", sc.describe());

@@ -20,6 +20,18 @@
 //! [`upload_s`](crate::net::NetworkProfile::upload_s) costs — the
 //! contention-free fast path the engine uses when netsim is disabled
 //! (property-tested to 1e-9 in `rust/tests/netsim.rs`).
+//!
+//! Two implementations live here.  [`simulate`] is the production loop:
+//! flows are grouped by their (few, discrete) link caps, each group keeps
+//! a completion-ordered binary heap of service targets over a cumulative
+//! per-flow service clock, and rates are maintained group-collapsed — the
+//! per-event cost is O(D + log F) for D distinct caps instead of the
+//! O(F log F) full rescan.  [`simulate_reference`] is the historical
+//! rescan loop, kept verbatim as the oracle the grouped loop is
+//! differential-tested against (DESIGN.md §16 documents why the two are
+//! tolerance-equal rather than bit-equal).
+
+use std::collections::BinaryHeap;
 
 /// Remaining-bits tolerance below which a transfer counts as finished
 /// (guards the event loop against f64 residue after a subtraction chain).
@@ -80,6 +92,95 @@ fn fair_rates(caps_bps: &[f64], capacity_bps: f64, order: &mut Vec<usize>, out: 
     }
 }
 
+/// One cap-class of active flows in the grouped event loop.
+///
+/// Every flow whose link cap is bit-identical shares a group; max-min
+/// fairness gives all of them the *same* instantaneous rate, so the group
+/// needs one rate, one cumulative service clock `s` (bits a flow admitted
+/// at `s = 0` would have received so far), and a min-heap of completion
+/// targets (`s` at admission + payload bits).  A flow finishes when the
+/// group clock reaches its target — the classic virtual-time trick.
+#[derive(Debug)]
+struct Group {
+    /// The shared link cap, bit/s (groups are keyed by its exact bits).
+    cap_bps: f64,
+    /// Cumulative per-flow service, bits.
+    s: f64,
+    /// Current per-flow max-min rate, bit/s (stale when `dirty`).
+    rate: f64,
+    /// Completion targets; the heap pops the smallest target first.
+    heap: BinaryHeap<HeapEntry>,
+}
+
+/// A completion target in a [`Group`] heap: finish when the group clock
+/// reaches `target` bits.  Ordered *reversed* (and totally, via
+/// `total_cmp` + the input index) so `BinaryHeap`'s max-pop yields the
+/// smallest target deterministically.
+#[derive(Debug, Clone, Copy)]
+struct HeapEntry {
+    target: f64,
+    idx: u32,
+}
+
+impl PartialEq for HeapEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+impl Eq for HeapEntry {}
+impl PartialOrd for HeapEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for HeapEntry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        other.target.total_cmp(&self.target).then(other.idx.cmp(&self.idx))
+    }
+}
+
+/// Reusable buffers for [`simulate_with`]: the pending-order index vector
+/// and the cap-class groups (heap allocations included) survive across
+/// calls, so a [`NetSim`](crate::netsim::NetSim) simulating two transfer
+/// legs per round allocates only on the first round instead of building
+/// and dropping a sorted `Vec` (and every group heap) per call.
+#[derive(Debug, Default)]
+pub struct FairshareScratch {
+    pending: Vec<usize>,
+    groups: Vec<Group>,
+    spare_heaps: Vec<BinaryHeap<HeapEntry>>,
+}
+
+/// Max-min per-group rates by progressive filling over groups sorted
+/// ascending by cap — collapsed: a group of `k` equal-cap flows takes
+/// `k · min(cap, remaining/left)` in one step.  Per-flow filling gives
+/// every equal-cap flow that exact share too (if the cap binds, each
+/// takes `cap`; if not, `remaining/left` is invariant under removing one
+/// average-taker), so the collapse changes only f64 rounding, not the
+/// water level.
+fn recompute_rates(groups: &mut [Group], capacity_bps: f64) {
+    let mut remaining = capacity_bps;
+    let mut left: usize = groups.iter().map(|g| g.heap.len()).sum();
+    for g in groups.iter_mut() {
+        let k = g.heap.len();
+        if k == 0 {
+            g.rate = 0.0;
+            continue;
+        }
+        if remaining.is_infinite() {
+            // Unlimited pipe: everyone at their own cap (possibly ∞);
+            // no subtraction — ∞ − ∞ would poison `remaining` with NaN.
+            g.rate = g.cap_bps;
+            continue;
+        }
+        let share = (remaining / left as f64).max(0.0);
+        let r = g.cap_bps.min(share);
+        g.rate = r;
+        remaining -= r * k as f64;
+        left -= k;
+    }
+}
+
 /// Simulate the shared pipe: every transfer's completion, **returned in
 /// input order** (`out[i]` belongs to `transfers[i]`).
 ///
@@ -87,7 +188,170 @@ fn fair_rates(caps_bps: &[f64], capacity_bps: f64, order: &mut Vec<usize>, out: 
 /// removes the shared constraint entirely, reducing each flow to its own
 /// link's closed-form cost.  Capacities and link caps must be positive
 /// (the config layer validates; a zero-rate flow would never finish).
+///
+/// This is the grouped O(events · (D + log F)) loop; allocates fresh
+/// scratch per call — use [`simulate_with`] on hot paths.
 pub fn simulate(transfers: &[Transfer], capacity_mbps: f64) -> Vec<Completion> {
+    simulate_with(transfers, capacity_mbps, &mut FairshareScratch::default())
+}
+
+/// [`simulate`] with caller-owned scratch buffers (see
+/// [`FairshareScratch`]).  Buffer reuse changes no arithmetic — the
+/// scratch is fully reset on entry — so the result is bit-identical to a
+/// fresh-scratch call.
+pub fn simulate_with(
+    transfers: &[Transfer],
+    capacity_mbps: f64,
+    scratch: &mut FairshareScratch,
+) -> Vec<Completion> {
+    assert!(capacity_mbps > 0.0, "pipe capacity must be positive");
+    let n = transfers.len();
+    let mut out: Vec<Completion> = transfers
+        .iter()
+        .map(|t| Completion {
+            id: t.id,
+            start_s: t.arrival_s + t.latency_s,
+            finish_s: f64::NAN,
+        })
+        .collect();
+    if n == 0 {
+        return out;
+    }
+    for t in transfers {
+        assert!(t.link_mbps > 0.0, "link rate must be positive");
+        assert!(t.arrival_s >= 0.0 && t.latency_s >= 0.0, "negative time");
+    }
+
+    let FairshareScratch { pending, groups, spare_heaps } = scratch;
+    // Reset (a poisoned-lock unwind may have left a previous call's
+    // state behind); keep the heap allocations.
+    for mut g in groups.drain(..) {
+        g.heap.clear();
+        spare_heaps.push(g.heap);
+    }
+    pending.clear();
+    pending.extend(0..n);
+    pending.sort_by(|&a, &b| out[a].start_s.total_cmp(&out[b].start_s).then(a.cmp(&b)));
+
+    let capacity_bps = capacity_mbps * 1e6;
+    let mut next_pending = 0usize;
+    let mut active = 0usize;
+    let mut dirty = true;
+    let mut now = out[pending[0]].start_s;
+    loop {
+        // Admit everything that has started by `now` into its cap group
+        // (created on first use; groups stay sorted ascending by cap so
+        // progressive filling walks them in water-fill order).
+        while next_pending < n && out[pending[next_pending]].start_s <= now {
+            let i = pending[next_pending];
+            next_pending += 1;
+            let cap = transfers[i].link_mbps * 1e6;
+            let gi = match groups.binary_search_by(|g| g.cap_bps.total_cmp(&cap)) {
+                Ok(gi) => gi,
+                Err(gi) => {
+                    groups.insert(
+                        gi,
+                        Group {
+                            cap_bps: cap,
+                            s: 0.0,
+                            rate: 0.0,
+                            heap: spare_heaps.pop().unwrap_or_default(),
+                        },
+                    );
+                    gi
+                }
+            };
+            let g = &mut groups[gi];
+            g.heap.push(HeapEntry {
+                target: g.s + transfers[i].bytes as f64 * 8.0,
+                idx: i as u32,
+            });
+            active += 1;
+            dirty = true;
+        }
+        if active == 0 {
+            if next_pending >= n {
+                break; // everything finished
+            }
+            now = out[pending[next_pending]].start_s;
+            continue;
+        }
+        if dirty {
+            recompute_rates(groups, capacity_bps);
+            dirty = false;
+        }
+
+        // Next event: the earliest group-front completion (O(D) peeks —
+        // within a group the heap front finishes first, rates being
+        // equal) or the next admission.  An infinite-rate group drains
+        // instantly.
+        let mut dt = f64::INFINITY;
+        for g in groups.iter() {
+            let Some(front) = g.heap.peek() else { continue };
+            let t_fin = if g.rate.is_infinite() {
+                0.0
+            } else {
+                ((front.target - g.s) / g.rate).max(0.0)
+            };
+            if t_fin < dt {
+                dt = t_fin;
+            }
+        }
+        if next_pending < n {
+            let t_arr = out[pending[next_pending]].start_s - now;
+            if t_arr < dt {
+                dt = t_arr;
+            }
+        }
+        debug_assert!(dt.is_finite() && dt >= 0.0, "event loop stalled (dt={dt})");
+
+        // Advance every non-empty group's service clock by dt.
+        for g in groups.iter_mut() {
+            if !g.heap.is_empty() && g.rate.is_finite() {
+                g.s += g.rate * dt;
+            }
+        }
+        now += dt;
+
+        // Retire reached targets (heap-ordered, O(log F) per pop); an
+        // infinite-rate group drains wholesale.
+        for g in groups.iter_mut() {
+            if g.rate.is_infinite() {
+                while let Some(e) = g.heap.pop() {
+                    out[e.idx as usize].finish_s = now;
+                    active -= 1;
+                    dirty = true;
+                }
+                continue;
+            }
+            while let Some(e) = g.heap.peek() {
+                if e.target - g.s <= DONE_EPS_BITS {
+                    out[e.idx as usize].finish_s = now;
+                    g.heap.pop();
+                    active -= 1;
+                    dirty = true;
+                } else {
+                    break;
+                }
+            }
+        }
+        if active == 0 && next_pending >= n {
+            break;
+        }
+    }
+    // Recycle the group heaps for the next call.
+    for mut g in groups.drain(..) {
+        g.heap.clear();
+        spare_heaps.push(g.heap);
+    }
+    out
+}
+
+/// The historical per-event full-rescan loop, kept verbatim as the
+/// differential oracle for [`simulate`].  O(events · F log F): every
+/// event rebuilds the cap vector, re-sorts it and rescans all active
+/// flows.  Not used on any production path.
+pub fn simulate_reference(transfers: &[Transfer], capacity_mbps: f64) -> Vec<Completion> {
     assert!(capacity_mbps > 0.0, "pipe capacity must be positive");
     let n = transfers.len();
     let mut out: Vec<Completion> = transfers
@@ -315,6 +579,82 @@ mod tests {
     #[test]
     fn empty_input_is_empty_output() {
         assert!(simulate(&[], 10.0).is_empty());
+    }
+
+    /// Seeded flow soup: 10k transfers in overlapping waves over a small
+    /// set of link caps — the shape a population-scale round produces.
+    fn flow_soup(n: usize, seed: u64) -> Vec<Transfer> {
+        let caps = [5.0, 20.0, 50.0, f64::INFINITY];
+        let mut rng = crate::util::rng::Pcg::new(seed, 0xFA15);
+        (0..n)
+            .map(|i| Transfer {
+                id: i as u32,
+                // Waves: ~64 flows share each arrival neighbourhood, so
+                // the reference loop's active set stays test-sized while
+                // the total flow count is population-sized.
+                arrival_s: (i / 64) as f64 * 0.5 + rng.range_f64(0.0, 0.4),
+                latency_s: rng.range_f64(0.0, 0.08),
+                bytes: 64 * 1024 + rng.below(4 * 1024 * 1024) as u64,
+                link_mbps: *rng.choice(&caps),
+            })
+            .collect()
+    }
+
+    fn assert_close(a: &[Completion], b: &[Completion]) {
+        for (x, y) in a.iter().zip(b) {
+            assert_eq!(x.id, y.id);
+            assert!(
+                (x.finish_s - y.finish_s).abs() <= 1e-6 * y.finish_s.abs().max(1.0),
+                "flow {}: grouped {} vs reference {}",
+                x.id,
+                x.finish_s,
+                y.finish_s
+            );
+        }
+    }
+
+    #[test]
+    fn grouped_loop_matches_the_reference_on_10k_flows() {
+        // The O(D + log F) loop against the historical rescan oracle:
+        // group-collapsed water filling and the cumulative service clock
+        // change f64 rounding, never the water level, so finishes agree
+        // to relative 1e-6 (DESIGN.md §16).
+        let ts = flow_soup(10_000, 0x10F);
+        assert_close(&simulate(&ts, 800.0), &simulate_reference(&ts, 800.0));
+    }
+
+    #[test]
+    fn grouped_loop_matches_the_reference_under_full_congestion() {
+        // Everyone piles on at once: maximum contention, every rate far
+        // below its cap, rates reshaped at every completion.
+        let mut ts = flow_soup(512, 0xC091);
+        for t in &mut ts {
+            t.arrival_s *= 0.01;
+        }
+        assert_close(&simulate(&ts, 200.0), &simulate_reference(&ts, 200.0));
+        // And with an unlimited pipe, where infinite-rate groups drain
+        // wholesale.
+        assert_close(
+            &simulate(&ts, f64::INFINITY),
+            &simulate_reference(&ts, f64::INFINITY),
+        );
+    }
+
+    #[test]
+    fn grouped_loop_is_bit_deterministic_and_scratch_reuse_is_free() {
+        let ts = flow_soup(10_000, 0xD37);
+        let a = simulate(&ts, 800.0);
+        let b = simulate(&ts, 800.0);
+        // Same inputs through a *reused* scratch: identical arithmetic.
+        let mut scratch = FairshareScratch::default();
+        let c = simulate_with(&ts, 800.0, &mut scratch);
+        let d = simulate_with(&ts, 800.0, &mut scratch);
+        for (((x, y), z), w) in a.iter().zip(&b).zip(&c).zip(&d) {
+            assert_eq!(x.finish_s.to_bits(), y.finish_s.to_bits());
+            assert_eq!(x.finish_s.to_bits(), z.finish_s.to_bits());
+            assert_eq!(x.finish_s.to_bits(), w.finish_s.to_bits());
+            assert!(x.finish_s.is_finite() && x.finish_s >= x.start_s);
+        }
     }
 
     #[test]

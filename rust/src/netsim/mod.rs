@@ -32,14 +32,16 @@
 pub mod codec;
 pub mod fairshare;
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use crate::error::ConfigError;
 use crate::net::NetworkProfile;
 use crate::util::cfg::Cfg;
 
 pub use codec::{by_name as codec_by_name, names as codec_names, Codec, CodecFactory};
-pub use fairshare::{simulate, Completion, Transfer};
+pub use fairshare::{
+    simulate, simulate_reference, simulate_with, Completion, FairshareScratch, Transfer,
+};
 
 /// Names accepted by [`NetSimConfig::preset`] (and `--netsim`).
 pub const NETSIM_PRESETS: &[&str] = &["uncapped", "congested-cell"];
@@ -213,6 +215,10 @@ pub struct NetSim {
     pub cfg: NetSimConfig,
     codec: Arc<dyn Codec>,
     payload_bytes: u64,
+    /// Event-loop buffers reused across the two transfer legs of every
+    /// round (shared by clones — the engine simulates one leg at a time).
+    /// Reuse changes no arithmetic; see [`simulate_with`].
+    scratch: Arc<Mutex<FairshareScratch>>,
 }
 
 impl NetSim {
@@ -225,7 +231,12 @@ impl NetSim {
         cfg.validate()?;
         let codec = codec::by_name(&cfg.codec, cfg.codec_knob).expect("validated above");
         let payload_bytes = cfg.payload_bytes.unwrap_or(default_payload).max(1);
-        Ok(NetSim { cfg: cfg.clone(), codec, payload_bytes })
+        Ok(NetSim {
+            cfg: cfg.clone(),
+            codec,
+            payload_bytes,
+            scratch: Arc::new(Mutex::new(FairshareScratch::default())),
+        })
     }
 
     /// Raw fp32 payload of one model/update transfer, bytes.
@@ -264,7 +275,8 @@ impl NetSim {
                 link_mbps: link.down_mbps,
             })
             .collect();
-        simulate(&transfers, self.egress_mbps)
+        let mut scratch = self.scratch.lock().unwrap_or_else(|e| e.into_inner());
+        simulate_with(&transfers, self.cfg.egress_mbps, &mut scratch)
             .into_iter()
             .map(|c| c.finish_s)
             .collect()
@@ -286,7 +298,8 @@ impl NetSim {
                 link_mbps: link.up_mbps,
             })
             .collect();
-        simulate(&transfers, self.ingress_mbps)
+        let mut scratch = self.scratch.lock().unwrap_or_else(|e| e.into_inner());
+        simulate_with(&transfers, self.cfg.ingress_mbps, &mut scratch)
             .into_iter()
             .map(|c| c.finish_s)
             .collect()

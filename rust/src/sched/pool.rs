@@ -35,6 +35,7 @@ use crate::error::{EmuError, FlError, RuntimeError};
 use crate::fl::bouquet::BouquetContext;
 use crate::fl::client::{ClientApp, ClientId, FitConfig, FitResult};
 use crate::fl::params::{ParamScratch, ParamVector};
+use crate::fl::strategy::TreeFoldState;
 use crate::hardware::profile::HardwareProfile;
 use crate::runtime::ModelExecutor;
 
@@ -53,6 +54,11 @@ pub struct FitTask {
     pub cfg: FitConfig,
     pub host: HardwareProfile,
     pub env_cfg: EnvConfig,
+    /// `Some` on tree-fold rounds with no gate/netsim/attack stage: the
+    /// worker folds its own successful fit straight into the shared
+    /// reduction state (stripping the params as its receipt) instead of
+    /// shipping the full vector to the server thread (DESIGN.md §16).
+    pub fold: Option<Arc<TreeFoldState>>,
 }
 
 /// A finished fit, in completion order.  Returns the client to the server.
@@ -178,8 +184,8 @@ fn worker_loop(
                 Err(_) => break,
             }
         };
-        let FitTask { index, mut client, global, cfg, host, env_cfg } = task;
-        let result = if let Some(err) = &factory_err {
+        let FitTask { index, mut client, global, cfg, host, env_cfg, fold } = task;
+        let mut result = if let Some(err) = &factory_err {
             Err(EmuError::Lifecycle(format!(
                 "fit worker could not build its executor: {err}"
             )))
@@ -211,6 +217,28 @@ fn worker_loop(
                 Err(EmuError::Lifecycle(format!("fit panicked: {msg}")))
             })
         };
+        if let Some(tree) = &fold {
+            match &mut result {
+                Ok(r) => {
+                    // Fold here, on the worker, and strip the params as the
+                    // receipt the server recognises.  `fold_update`
+                    // validates before touching any state, so on error the
+                    // index can still be skipped and the leaf cursor keeps
+                    // advancing; the server turns the error outcome into a
+                    // round failure as usual.
+                    let params = std::mem::replace(
+                        &mut r.params,
+                        ParamVector::from_vec(Vec::new()),
+                    );
+                    if let Err(e) = tree.fold_update(index, r.client, r.num_examples, params)
+                    {
+                        tree.skip(index);
+                        result = Err(EmuError::Lifecycle(format!("worker fold failed: {e}")));
+                    }
+                }
+                Err(_) => tree.skip(index),
+            }
+        }
         let outcome = FitOutcome { index, client_id: client.id(), client, result };
         if outcome_tx.send(outcome).is_err() {
             break; // pool dropped while we were fitting
@@ -313,6 +341,7 @@ mod tests {
                 cfg: FitConfig::default(),
                 host: host.clone(),
                 env_cfg: env_cfg(),
+                fold: None,
             })
             .unwrap();
         }
@@ -355,6 +384,7 @@ mod tests {
             cfg: FitConfig::default(),
             host: host.clone(),
             env_cfg: env_cfg(),
+            fold: None,
         })
         .unwrap();
         let p = pool.recv().unwrap().result.unwrap();

@@ -231,6 +231,29 @@ fn self_lint_tree_is_clean() {
     );
 }
 
+/// The parallel-reduction seam arrived suppression-free: the tree fold
+/// (fl/strategy/fold.rs), the grouped fair-share loop and the benchdiff
+/// gate each lint clean under R1-R4 with zero `detlint: allow` comments,
+/// so the sanctioned-suppression count above stays at exactly four.
+/// (They are also inside the `self_lint_tree_is_clean` walk; this pins
+/// the per-file zero-allow claim explicitly.)
+#[test]
+fn fold_fairshare_and_benchdiff_lint_clean_without_suppressions() {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    for rel in ["fl/strategy/fold.rs", "netsim/fairshare.rs", "bin/benchdiff.rs"] {
+        let src = std::fs::read_to_string(root.join(rel))
+            .unwrap_or_else(|e| panic!("{rel}: {e}"));
+        let rep = lint_source(rel, &src);
+        assert!(rep.is_clean(), "{rel} has hazards:\n{}", rep.render_text());
+        assert_eq!(
+            rep.suppressed_count(),
+            0,
+            "{rel} grew a suppression:\n{}",
+            rep.render_text()
+        );
+    }
+}
+
 /// The JSON artifact CI uploads parses back and agrees with the report.
 #[test]
 fn report_json_matches_report() {

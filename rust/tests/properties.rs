@@ -6,9 +6,10 @@
 use bouquetfl::analysis::correlation::{kendall_tau_b, pearson, spearman};
 use bouquetfl::data::{generate, partition, PartitionScheme, SyntheticConfig};
 use bouquetfl::emu::{FitReport, GpuTimingModel, MpsPartition, Optimizer, VramAllocator};
+use bouquetfl::durable::DurableOptions;
 use bouquetfl::fl::{
-    AccOutput, AggAccumulator, ClientManager, Experiment, FitResult, ParamVector, Selection,
-    StreamingMean, SCENARIO_PRESETS,
+    AccOutput, AggAccumulator, ClientManager, Experiment, ExperimentReport, FitResult,
+    ParamVector, Selection, StreamingMean, TreeMean, SCENARIO_PRESETS,
 };
 use bouquetfl::hardware::GPU_DB;
 use bouquetfl::modelcost::resnet18_cifar;
@@ -716,4 +717,197 @@ fn prop_profile_table_streams_bit_identical() {
         assert_that(a.weights() == b.weights(), || "weights diverged".to_string())?;
         assert_that(a.cdf() == b.cdf(), || "cdf diverged".to_string())
     });
+}
+
+// --- fold-plan satellite: the tree reduction's contracts ------------
+// --- (`--fold-plan tree`, DESIGN.md §16) ----------------------------
+
+/// The tree fold must land within 1e-6 of the serial streaming mean on
+/// random cohorts — the tolerance `--fold-plan tree` documents.  Exact
+/// equality is NOT promised (the pairwise merges re-associate the f64
+/// accumulation), which is why the plan is opt-in.
+#[test]
+fn prop_tree_fold_matches_serial_within_tolerance() {
+    check(40, |rng| {
+        let p = rng.range_i64(1, 400) as usize;
+        let k = rng.range_i64(1, 40) as usize;
+        let mut serial = StreamingMean::new(p);
+        let mut tree = TreeMean::new(p, k);
+        for c in 0..k {
+            let vals: Vec<f32> = (0..p).map(|_| rng.f32() * 2.0 - 1.0).collect();
+            let examples = rng.range_i64(1, 400) as usize;
+            let result = |params| FitResult {
+                client: c as u32,
+                params,
+                num_examples: examples,
+                mean_loss: 0.0,
+                emu: FitReport::synthetic(1, 1, 0.0),
+                comm_s: 0.0,
+            };
+            serial
+                .push(result(ParamVector::from_vec(vals.clone())))
+                .map_err(|e| e.to_string())?;
+            tree.push(result(ParamVector::from_vec(vals))).map_err(|e| e.to_string())?;
+        }
+        let finish = |acc: Box<dyn AggAccumulator>| match acc.finish() {
+            Ok(AccOutput::Mean(m)) => Ok(m.params),
+            Ok(AccOutput::Buffered(_)) => Err("expected Mean output".to_string()),
+            Err(e) => Err(e.to_string()),
+        };
+        let s = finish(Box::new(serial))?;
+        let t = finish(Box::new(tree))?;
+        for (a, b) in s.as_slice().iter().zip(t.as_slice()) {
+            assert_close(*a as f64, *b as f64, 1e-6)?;
+        }
+        Ok(())
+    });
+}
+
+/// One federation under the tree plan; `axis` switches on the feature
+/// that constrains where the folds may run (netsim/attack force the
+/// folds back onto the server thread — worker-side folding is gated off).
+fn tree_run(preset: &str, workers: usize, plan: &str, axis: &str, seed: u64) -> ExperimentReport {
+    let mut b = Experiment::builder()
+        .clients(8)
+        .rounds(5)
+        .samples_per_client(40)
+        .batch(16)
+        .selection(Selection::Fraction(0.75))
+        .network(true)
+        .seed(seed)
+        .workers(workers)
+        .fold_plan(plan)
+        .scenario_named(preset)
+        .eval_every(0)
+        .fail_on_empty_round(false)
+        .simulated(96);
+    match axis {
+        "netsim" => b = b.netsim_named("congested-cell"),
+        "attack" => b = b.attack_named("sign-flip"),
+        _ => {}
+    }
+    b.build()
+        .unwrap_or_else(|e| panic!("{preset}/{axis}: build failed: {e}"))
+        .run()
+        .unwrap_or_else(|e| panic!("{preset}/{axis}: run failed: {e}"))
+}
+
+fn assert_bit_identical_runs(label: &str, a: &ExperimentReport, b: &ExperimentReport) {
+    assert_eq!(a.global.len(), b.global.len(), "{label}: aggregate length");
+    for (x, y) in a.global.as_slice().iter().zip(b.global.as_slice()) {
+        assert_eq!(x.to_bits(), y.to_bits(), "{label}: aggregate diverged");
+    }
+    assert_eq!(a.history.rounds.len(), b.history.rounds.len(), "{label}: round count");
+    for (r1, r2) in a.history.rounds.iter().zip(&b.history.rounds) {
+        assert_eq!(r1.selected, r2.selected, "{label}: round {}", r1.round);
+        assert_eq!(
+            r1.train_loss.to_bits(),
+            r2.train_loss.to_bits(),
+            "{label}: round {}",
+            r1.round
+        );
+        assert_eq!(
+            r1.emu_round_s.to_bits(),
+            r2.emu_round_s.to_bits(),
+            "{label}: round {}",
+            r1.round
+        );
+        assert_eq!(r1.failures.len(), r2.failures.len(), "{label}: round {}", r1.round);
+        for (f1, f2) in r1.failures.iter().zip(&r2.failures) {
+            assert_eq!((f1.client, &f1.reason), (f2.client, &f2.reason), "{label}");
+        }
+    }
+}
+
+/// The tree plan's headline: the fold result is a function of the
+/// selection, never of completion order — so the aggregate is
+/// bit-identical across `--workers {1, 2, 4, 8}`, for every scenario
+/// preset, and with the netsim/attack axes on (where the folds fall
+/// back to the server thread).
+#[test]
+fn tree_fold_is_bit_identical_across_workers_scenarios_and_axes() {
+    for &preset in SCENARIO_PRESETS {
+        let reference = tree_run(preset, 1, "tree", "plain", 29);
+        for workers in [2usize, 4, 8] {
+            let w = tree_run(preset, workers, "tree", "plain", 29);
+            assert_bit_identical_runs(&format!("{preset}/workers={workers}"), &reference, &w);
+        }
+    }
+    for axis in ["netsim", "attack"] {
+        let reference = tree_run("stable", 1, "tree", axis, 31);
+        for workers in [2usize, 4, 8] {
+            let w = tree_run("stable", workers, "tree", axis, 31);
+            assert_bit_identical_runs(&format!("{axis}/workers={workers}"), &reference, &w);
+        }
+    }
+}
+
+/// Switching the fold plan changes aggregation arithmetic ONLY: the
+/// selection stream, timeline and failure set are untouched, and the
+/// global model tracks the serial plan within the documented 1e-6.
+#[test]
+fn tree_fold_tracks_the_serial_plan_within_tolerance() {
+    let serial = tree_run("stable", 1, "serial", "plain", 47);
+    let tree = tree_run("stable", 4, "tree", "plain", 47);
+    assert_eq!(serial.history.rounds.len(), tree.history.rounds.len());
+    for (r1, r2) in serial.history.rounds.iter().zip(&tree.history.rounds) {
+        assert_eq!(r1.selected, r2.selected, "selection depends on the fold plan");
+        assert_eq!(r1.failures.len(), r2.failures.len(), "failures depend on the fold plan");
+    }
+    assert_eq!(serial.global.len(), tree.global.len());
+    for (a, b) in serial.global.as_slice().iter().zip(tree.global.as_slice()) {
+        let (a, b) = (*a as f64, *b as f64);
+        assert!(
+            (a - b).abs() <= 1e-6 * a.abs().max(1.0),
+            "fold plans diverged past tolerance: {a} vs {b}"
+        );
+    }
+}
+
+/// A tree-plan run crashed at a checkpoint boundary and resumed must be
+/// bit-identical to the uninterrupted run — the fold topology is part of
+/// the durable manifest, so the resumed half re-folds the same shape.
+#[test]
+fn tree_fold_resumed_from_checkpoint_is_bit_identical() {
+    let dir = std::env::temp_dir()
+        .join(format!("bouquetfl-fold-resume-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mk = || {
+        Experiment::builder()
+            .clients(8)
+            .rounds(6)
+            .samples_per_client(40)
+            .batch(16)
+            .selection(Selection::Fraction(0.75))
+            .network(true)
+            .seed(53)
+            .workers(4)
+            .fold_plan("tree")
+            .scenario_named("diurnal-mobile")
+            .eval_every(0)
+            .fail_on_empty_round(false)
+            .simulated(96)
+    };
+    let crashed = mk()
+        .durable_options(DurableOptions::new(&dir).crash_after(3))
+        .build()
+        .expect("crash-point run builds")
+        .run();
+    match crashed {
+        Ok(_) => panic!("crash-point run unexpectedly succeeded"),
+        Err(e) => {
+            let msg = format!("{e}");
+            assert!(msg.contains("crash point"), "unexpected error: {msg}");
+        }
+    }
+
+    let resumed = mk()
+        .resume(&dir)
+        .build()
+        .expect("resume builds")
+        .run()
+        .expect("resume runs");
+    let unbroken = mk().build().expect("clean builds").run().expect("clean runs");
+    assert_bit_identical_runs("tree fold resume", &resumed, &unbroken);
+    let _ = std::fs::remove_dir_all(&dir);
 }

@@ -626,6 +626,7 @@ fn worker_pool_drop_joins_cleanly_mid_stream() {
             cfg: FitConfig::default(),
             host: HardwareProfile::paper_host(),
             env_cfg: Default::default(),
+            fold: None,
         })
         .unwrap();
     }
