@@ -48,7 +48,7 @@ pub use eventlog::{
     crc32, parse_log, read_log, EventLogObserver, EventLogWriter, LogMeta, LogRead,
     OwnedFlEvent,
 };
-pub use replay::{replay, replay_events, Replay};
+pub use replay::{replay, replay_events, replay_metrics, Replay};
 
 /// File name of the event log inside a durable run directory.
 pub const EVENT_LOG_FILE: &str = "events.log";

@@ -54,6 +54,23 @@ pub fn replay_events(events: &[OwnedFlEvent]) -> (History, Trace, bool) {
     (recorder.into_history(), tracer.into_trace(), complete)
 }
 
+/// Recompute the full simulated-domain metric set from decoded log
+/// events — the offline half of `bouquetfl stats`.  Feeds the same
+/// [`MetricsObserver`](crate::obs::MetricsObserver) a live run attaches,
+/// so the returned registry's `sim_json()` is byte-identical to the live
+/// run's `metrics.json` (DESIGN.md §17).  The host registry stays empty:
+/// host-domain metrics are not reconstructable from the log, by contract.
+pub fn replay_metrics(events: &[OwnedFlEvent]) -> crate::obs::RunMetrics {
+    let hub = crate::obs::MetricsHub::new();
+    let mut metrics = crate::obs::MetricsObserver::new(hub.clone());
+    for owned in events {
+        if let Some(event) = owned.as_event() {
+            metrics.on_event(&event);
+        }
+    }
+    hub.snapshot()
+}
+
 /// Read an event log and reconstruct the run's outputs from it.
 pub fn replay(path: &Path) -> io::Result<Replay> {
     let log = read_log(path)?;

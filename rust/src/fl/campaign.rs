@@ -408,6 +408,7 @@ impl Campaign {
                         eval_accuracy: None,
                         total_emu_s: 0.0,
                         failures: 0,
+                        metrics: None,
                         error: Some(format!(
                             "unknown attack preset '{name}' ({})",
                             ATTACK_PRESETS.join("|")
@@ -416,7 +417,11 @@ impl Campaign {
                 }
             }
         }
-        let mut builder = ExperimentBuilder::from_options(opts).strict();
+        // Every cell collects metrics: the simulated-domain registry is a
+        // deterministic fold over the cell's event stream, so the JSONL
+        // metric columns stay byte-identical across worker counts and
+        // across campaign resume (DESIGN.md §17).
+        let mut builder = ExperimentBuilder::from_options(opts).strict().metrics();
         if let ExecutionMode::Simulated { param_dim } = self.mode {
             builder = builder.simulated(param_dim);
         }
@@ -428,6 +433,7 @@ impl Campaign {
             eval_accuracy: None,
             total_emu_s: 0.0,
             failures: 0,
+            metrics: None,
             error: Some(msg),
         };
         let experiment = match builder.build() {
@@ -448,6 +454,7 @@ impl Campaign {
                     eval_accuracy,
                     total_emu_s: report.total_emu_s(),
                     failures: report.failures(),
+                    metrics: report.metrics,
                     error: None,
                 }
             }
@@ -474,6 +481,10 @@ pub struct CellOutcome {
     pub total_emu_s: f64,
     /// Total client failures across rounds.
     pub failures: usize,
+    /// The cell's run metrics (`None` for error rows).  Only the
+    /// simulated-domain headline counters reach the JSONL row; the full
+    /// registries stay here for programmatic consumers.
+    pub metrics: Option<crate::obs::RunMetrics>,
     /// Build/run error, if the cell did not finish.
     pub error: Option<String>,
 }
@@ -505,6 +516,31 @@ impl CellOutcome {
             ("eval_accuracy", opt_finite(self.eval_accuracy)),
             ("total_emu_s", Json::num(self.total_emu_s)),
             ("failures", Json::num(self.failures as f64)),
+            (
+                "metrics",
+                self.metrics
+                    .as_ref()
+                    .map(|m| {
+                        // The simulated-domain headline set only — every
+                        // value is a deterministic fold over the cell's
+                        // event stream, so resumed and uninterrupted
+                        // campaigns export byte-identical rows.
+                        let c = |n: &str| Json::num(m.sim.counter(n) as f64);
+                        Json::obj(vec![
+                            ("attack_injections", c("attack_injections")),
+                            ("clients_done", c("clients_done")),
+                            ("clients_failed", c("clients_failed")),
+                            ("clients_selected", c("clients_selected")),
+                            ("comm_bytes_download", c("comm_bytes_download")),
+                            ("comm_bytes_upload", c("comm_bytes_upload")),
+                            (
+                                "emu_seconds_total",
+                                finite_num(m.sim.gauge("emu_seconds_total").unwrap_or(0.0)),
+                            ),
+                        ])
+                    })
+                    .unwrap_or(Json::Null),
+            ),
             (
                 "error",
                 self.error.clone().map(Json::str).unwrap_or(Json::Null),
@@ -666,6 +702,14 @@ mod tests {
         assert_eq!(honest.get("attack").unwrap().as_str(), Some("none"));
         let attacked = report.cells[1].to_json();
         assert_eq!(attacked.get("attack").unwrap().as_str(), Some("gauss"));
+        // Every finished cell carries its simulated-domain metric row.
+        let m = honest.get("metrics").expect("metrics row");
+        assert!(m.get("clients_selected").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(m.get("attack_injections").unwrap().as_f64(), Some(0.0));
+        assert!(
+            attacked.get("metrics").unwrap().get("attack_injections").unwrap().as_f64()
+                > Some(0.0)
+        );
         // Unknown presets become error rows, not aborts.
         let bad = Campaign::new("adv", LaunchOptions::default())
             .attacks(&["rootkit"])
@@ -688,5 +732,6 @@ mod tests {
         assert_eq!(report.succeeded(), 0);
         let row = report.cells[0].to_json();
         assert!(row.get("error").unwrap().as_str().unwrap().contains("no-such-strategy"));
+        assert!(matches!(row.get("metrics"), Some(Json::Null)), "error rows carry no metrics");
     }
 }

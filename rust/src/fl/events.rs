@@ -230,11 +230,25 @@ impl FlObserver for HistoryObserver {
     }
 }
 
-/// Built-in subscriber that collects the emulated-timeline [`Trace`] from
-/// [`FlEvent::RoundScheduled`] events (Chrome-trace ready).
+/// Built-in subscriber that collects the emulated-timeline [`Trace`]
+/// (Chrome-trace ready): schedule slots from [`FlEvent::RoundScheduled`]
+/// (category `fit`), netsim transfers from [`FlEvent::CommStarted`] /
+/// [`FlEvent::CommFinished`] pairs (category `comm`), and attack-injection
+/// markers from [`FlEvent::AttackInjected`] (category `attack`).
+///
+/// Comm and attack events arrive round-relative before the round's
+/// schedule is known, so they buffer until [`FlEvent::RoundScheduled`]
+/// supplies the round base; rounds that never schedule (empty rounds)
+/// drop their buffers at [`FlEvent::RoundEnd`].
 #[derive(Debug, Default)]
 pub struct TraceObserver {
     trace: Trace,
+    /// Open transfers of the current round: (client, direction, start).
+    comm_open: Vec<(u32, CommDirection, f64)>,
+    /// Completed transfers of the current round, round-relative.
+    comm_done: Vec<(u32, CommDirection, f64, f64)>,
+    /// Attack injections of the current round: (client, model name).
+    attacks: Vec<(u32, String)>,
 }
 
 impl TraceObserver {
@@ -246,39 +260,126 @@ impl TraceObserver {
 
 impl FlObserver for TraceObserver {
     fn on_event(&mut self, event: &FlEvent<'_>) {
-        if let FlEvent::RoundScheduled { round, base_s, schedule } = event {
-            for &(c, s, e) in &schedule.spans {
-                self.trace.add(c, format!("round{round}"), base_s + s, base_s + e);
+        match event {
+            FlEvent::CommStarted { client, direction, at_s, .. } => {
+                self.comm_open.push((*client, *direction, *at_s));
             }
+            FlEvent::CommFinished { client, direction, at_s, .. } => {
+                if let Some(i) = self
+                    .comm_open
+                    .iter()
+                    .position(|&(c, d, _)| c == *client && d == *direction)
+                {
+                    let (c, d, start) = self.comm_open.remove(i);
+                    self.comm_done.push((c, d, start, *at_s));
+                }
+            }
+            FlEvent::AttackInjected { client, model, .. } => {
+                self.attacks.push((*client, (*model).to_string()));
+            }
+            FlEvent::RoundScheduled { round, base_s, schedule } => {
+                for &(c, s, e) in &schedule.spans {
+                    self.trace.add(c, format!("round{round}"), base_s + s, base_s + e);
+                }
+                for (c, d, start, end) in self.comm_done.drain(..) {
+                    let label = match d {
+                        CommDirection::Download => "downlink",
+                        CommDirection::Upload => "uplink",
+                    };
+                    self.trace.add_cat(c, label, "comm", base_s + start, base_s + end);
+                }
+                let close_s = base_s + schedule.round_s;
+                for (c, model) in self.attacks.drain(..) {
+                    self.trace.add_cat(c, model, "attack", close_s, close_s);
+                }
+            }
+            FlEvent::RoundEnd { .. } => {
+                self.comm_open.clear();
+                self.comm_done.clear();
+                self.attacks.clear();
+            }
+            _ => {}
         }
     }
 }
 
+/// How often (in finished rounds) [`ProgressLogger`] emits a metric
+/// snapshot line alongside the per-round lines.
+const PROGRESS_SNAPSHOT_EVERY: u32 = 10;
+
 /// Built-in subscriber that logs round progress through the crate logger
 /// (`BOUQUET_LOG=info`); attach via `ExperimentBuilder::progress(true)`.
+///
+/// Tracks the emulated clock to report rounds/s throughput and an ETA for
+/// the remaining rounds, emits a counters snapshot every
+/// [`PROGRESS_SNAPSHOT_EVERY`] rounds, and flushes stderr at
+/// [`FlEvent::RunEnd`] so the final summary line survives an immediate
+/// process exit.
 #[derive(Debug, Default)]
-pub struct ProgressLogger;
+pub struct ProgressLogger {
+    rounds_planned: u32,
+    rounds_done: u32,
+    emu_s: f64,
+    selected: u64,
+    done: u64,
+    failed: u64,
+    injected: u64,
+}
 
 impl FlObserver for ProgressLogger {
     fn on_event(&mut self, event: &FlEvent<'_>) {
         match event {
             FlEvent::RunBegin { rounds, clients } => {
+                self.rounds_planned = *rounds;
                 crate::log_info!("run: {clients} clients, {rounds} rounds");
             }
+            FlEvent::RoundBegin { selected, .. } => {
+                self.selected += selected.len() as u64;
+            }
+            FlEvent::ClientDone { .. } => {
+                self.done += 1;
+            }
             FlEvent::RoundEnd { record } => {
+                self.rounds_done += 1;
+                self.emu_s += record.emu_round_s;
+                // Throughput and ETA on the EMULATED clock: rounds per
+                // emulated second and emulated seconds left at the
+                // average round length so far.
+                let rps = if self.emu_s > 0.0 { self.rounds_done as f64 / self.emu_s } else { 0.0 };
+                let remaining = self.rounds_planned.saturating_sub(self.rounds_done);
+                let eta_s =
+                    if rps > 0.0 { remaining as f64 / rps } else { 0.0 };
                 crate::log_info!(
-                    "round {}: {} selected, {} failed, train loss {:.4}, {:.2}s emulated",
+                    "round {}: {} selected, {} failed, train loss {:.4}, {:.2}s emulated \
+                     ({:.3} rounds/s emu, eta {:.0}s emu)",
                     record.round,
                     record.selected.len(),
                     record.failures.len(),
                     record.train_loss,
-                    record.emu_round_s
+                    record.emu_round_s,
+                    rps,
+                    eta_s
                 );
+                if self.rounds_done % PROGRESS_SNAPSHOT_EVERY == 0 {
+                    crate::log_info!(
+                        "progress: {}/{} rounds, {:.2}s emulated; clients {} selected, \
+                         {} done, {} failed, {} injected",
+                        self.rounds_done,
+                        self.rounds_planned,
+                        self.emu_s,
+                        self.selected,
+                        self.done,
+                        self.failed,
+                        self.injected
+                    );
+                }
             }
             FlEvent::ClientFailed { round, client, kind, .. } => {
+                self.failed += 1;
                 crate::log_debug!("round {round}: client {client} failed ({kind:?})");
             }
             FlEvent::AttackInjected { round, client, model } => {
+                self.injected += 1;
                 crate::log_debug!("round {round}: client {client} injected ({model})");
             }
             FlEvent::Evaluated { round, loss, accuracy } => {
@@ -286,6 +387,21 @@ impl FlObserver for ProgressLogger {
                     "round {round}: eval loss {loss:.4}, accuracy {:.1}%",
                     accuracy * 100.0
                 );
+            }
+            FlEvent::RunEnd { rounds } => {
+                crate::log_info!(
+                    "run done: {rounds} rounds, {:.2}s emulated; clients {} selected, \
+                     {} done, {} failed, {} injected",
+                    self.emu_s,
+                    self.selected,
+                    self.done,
+                    self.failed,
+                    self.injected
+                );
+                // The logger macros write line-buffered stderr; flush so
+                // the final line is not dropped when the process exits
+                // right after the run.
+                let _ = std::io::Write::flush(&mut std::io::stderr());
             }
             _ => {}
         }
@@ -337,6 +453,87 @@ mod tests {
         assert_eq!(t.events[0].label, "round2");
         assert_eq!(t.events[1].t_start_s, 11.0);
         assert_eq!(t.events[1].t_end_s, 13.0);
+    }
+
+    #[test]
+    fn trace_observer_emits_comm_and_attack_rows_in_chrome_json() {
+        let schedule = Schedule {
+            round_s: 5.0,
+            spans: vec![(0, 0.0, 5.0)],
+        };
+        let mut obs = TraceObserver::default();
+        obs.on_event(&FlEvent::CommStarted {
+            round: 1,
+            client: 0,
+            direction: CommDirection::Download,
+            at_s: 0.0,
+            wire_bytes: 1000,
+        });
+        obs.on_event(&FlEvent::CommFinished {
+            round: 1,
+            client: 0,
+            direction: CommDirection::Download,
+            at_s: 1.0,
+        });
+        obs.on_event(&FlEvent::CommStarted {
+            round: 1,
+            client: 0,
+            direction: CommDirection::Upload,
+            at_s: 3.0,
+            wire_bytes: 200,
+        });
+        obs.on_event(&FlEvent::CommFinished {
+            round: 1,
+            client: 0,
+            direction: CommDirection::Upload,
+            at_s: 4.5,
+        });
+        obs.on_event(&FlEvent::AttackInjected { round: 1, client: 0, model: "sign-flip" });
+        obs.on_event(&FlEvent::RoundScheduled { round: 1, base_s: 10.0, schedule: &schedule });
+        let rows = obs.into_trace().to_chrome_json();
+        let rows = rows.as_arr().unwrap();
+        // One schedule slot + two comm spans + one attack marker.
+        assert_eq!(rows.len(), 4);
+        let cat = |i: usize| rows[i].get("cat").unwrap().as_str().unwrap().to_string();
+        let name = |i: usize| rows[i].get("name").unwrap().as_str().unwrap().to_string();
+        let ts = |i: usize| rows[i].get("ts").unwrap().as_f64().unwrap();
+        let dur = |i: usize| rows[i].get("dur").unwrap().as_f64().unwrap();
+        assert_eq!((cat(0), name(0)), ("fit".into(), "round1".into()));
+        // Downlink rebased to the round base: [10.0, 11.0].
+        assert_eq!((cat(1), name(1)), ("comm".into(), "downlink".into()));
+        assert_eq!((ts(1), dur(1)), (10.0 * 1e6, 1.0 * 1e6));
+        assert_eq!((cat(2), name(2)), ("comm".into(), "uplink".into()));
+        assert_eq!((ts(2), dur(2)), (13.0 * 1e6, 1.5 * 1e6));
+        // Attack marker: zero-length at the round close (10 + 5).
+        assert_eq!((cat(3), name(3)), ("attack".into(), "sign-flip".into()));
+        assert_eq!((ts(3), dur(3)), (15.0 * 1e6, 0.0));
+    }
+
+    #[test]
+    fn trace_observer_drops_buffers_of_rounds_that_never_schedule() {
+        let mut obs = TraceObserver::default();
+        obs.on_event(&FlEvent::CommStarted {
+            round: 0,
+            client: 0,
+            direction: CommDirection::Download,
+            at_s: 0.0,
+            wire_bytes: 10,
+        });
+        obs.on_event(&FlEvent::CommFinished {
+            round: 0,
+            client: 0,
+            direction: CommDirection::Download,
+            at_s: 1.0,
+        });
+        obs.on_event(&FlEvent::AttackInjected { round: 0, client: 0, model: "gauss" });
+        // Empty round: RoundEnd arrives without RoundScheduled.
+        let r = record(0);
+        obs.on_event(&FlEvent::RoundEnd { record: &r });
+        let schedule = Schedule { round_s: 1.0, spans: vec![(1, 0.0, 1.0)] };
+        obs.on_event(&FlEvent::RoundScheduled { round: 1, base_s: 2.0, schedule: &schedule });
+        let t = obs.into_trace();
+        assert_eq!(t.events.len(), 1, "stale comm/attack rows leaked into the next round");
+        assert_eq!(t.events[0].label, "round1");
     }
 
     #[test]

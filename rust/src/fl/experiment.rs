@@ -35,6 +35,7 @@ use crate::error::{ConfigError, FlError};
 use crate::hardware::profile::HardwareProfile;
 use crate::net::sample_network;
 use crate::netsim::{NetSim, NetSimConfig, NETSIM_PRESETS};
+use crate::obs::{MetricsHub, MetricsObserver, PhaseRecorder, RunMetrics};
 use crate::runtime::ModelExecutor;
 use crate::sched::{self, Scheduler, Trace};
 use crate::util::cfg::Cfg;
@@ -86,6 +87,7 @@ pub struct ExperimentBuilder {
     observers: Vec<Box<dyn FlObserver>>,
     mode: ExecutionMode,
     progress: bool,
+    metrics: bool,
     permissive: bool,
 }
 
@@ -101,6 +103,7 @@ impl Default for ExperimentBuilder {
             observers: Vec::new(),
             mode: ExecutionMode::Real,
             progress: false,
+            metrics: false,
             permissive: false,
         }
     }
@@ -379,6 +382,19 @@ impl ExperimentBuilder {
     /// Log round progress through the crate logger while running.
     pub fn progress(mut self, on: bool) -> Self {
         self.progress = on;
+        self
+    }
+
+    /// Collect run metrics (DESIGN.md §17): a [`MetricsObserver`] folds
+    /// the event stream into the simulated-domain registry (bit-identical
+    /// across worker counts and across crash/resume), and a
+    /// [`PhaseRecorder`] times the round loop's phases on the host clock.
+    /// The report's [`ExperimentReport::metrics`] carries the result, and
+    /// host phase spans are merged into the Chrome trace under the
+    /// `"phase"` category — so a metrics-enabled run's trace is *not*
+    /// comparable across runs (the simulated rows still are).
+    pub fn metrics(mut self) -> Self {
+        self.metrics = true;
         self
     }
 
@@ -699,6 +715,7 @@ impl ExperimentBuilder {
             observers: self.observers,
             mode: self.mode,
             progress: self.progress,
+            metrics: self.metrics,
         })
     }
 }
@@ -760,6 +777,7 @@ pub struct Experiment {
     observers: Vec<Box<dyn FlObserver>>,
     mode: ExecutionMode,
     progress: bool,
+    metrics: bool,
 }
 
 impl Experiment {
@@ -812,10 +830,21 @@ impl Experiment {
             mut observers,
             mode,
             progress,
+            metrics,
         } = self;
         if progress {
-            observers.push(Box::new(ProgressLogger));
+            observers.push(Box::new(ProgressLogger::default()));
         }
+        // Metrics ride the observer list so a durable resume's replayed
+        // event prefix reaches them exactly like a live event would —
+        // the simulated registry stays bit-identical across crash/resume.
+        let hub = if metrics {
+            let hub = MetricsHub::new();
+            observers.push(Box::new(MetricsObserver::new(hub.clone())));
+            Some(hub)
+        } else {
+            None
+        };
         let strategy_name = strategy.name().to_string();
         let scenario_name = opts
             .scenario
@@ -927,6 +956,9 @@ impl Experiment {
         for observer in observers {
             server = server.with_observer(observer);
         }
+        if let Some(hub) = &hub {
+            server = server.with_phase_recorder(PhaseRecorder::new(hub.clone()));
+        }
         if opts.workers > 1 {
             // Each pool worker builds (and caches) its own executor over
             // the same artifact directory; real fits then overlap while
@@ -978,12 +1010,34 @@ impl Experiment {
                 server.run_from(ParamVector::zeros(param_dim), None, &mut clock)?
             }
         };
-        let trace = std::mem::take(&mut server.trace);
+        let mut trace = std::mem::take(&mut server.trace);
+        let metrics = hub.map(|hub| {
+            hub.with(|m| {
+                m.host
+                    .set("peak_rss_bytes", crate::util::benchkit::peak_rss_bytes() as f64)
+            });
+            let snapshot = hub.snapshot();
+            // Host phase spans join the Chrome trace on their own pseudo
+            // row (tid u32::MAX) under the "phase" category.  Host-clock
+            // timestamps, so a metrics-enabled trace varies run to run —
+            // the simulated fit/comm/attack rows do not.
+            for span in &snapshot.phase_spans {
+                trace.add_cat(
+                    u32::MAX,
+                    format!("phase:{}", span.phase.name()),
+                    "phase",
+                    span.start_s,
+                    span.end_s,
+                );
+            }
+            snapshot
+        });
         Ok(ExperimentReport {
             global,
             history,
             profiles,
             trace,
+            metrics,
             strategy: strategy_name,
             scenario: scenario_name,
             seed: opts.seed,
@@ -1004,6 +1058,10 @@ pub struct ExperimentReport {
     pub profiles: Vec<HardwareProfile>,
     /// Per-client fit spans on the emulated timeline (Chrome-trace ready).
     pub trace: Trace,
+    /// Run metrics (`Some` iff [`ExperimentBuilder::metrics`] was set):
+    /// the simulated-domain registry (bit-identical, DESIGN.md §17), the
+    /// host-domain registry and the host phase spans.
+    pub metrics: Option<RunMetrics>,
     /// Resolved strategy name.
     pub strategy: String,
     /// Scenario name (`"stable"` for static federations).
@@ -1082,6 +1140,14 @@ impl ExperimentReport {
             ("total_emu_s", finite_num(self.total_emu_s())),
             ("failures", Json::num(self.failures() as f64)),
         ])
+    }
+
+    /// The `metrics.json` document (the simulated-domain registry plus
+    /// derived rates) — `None` unless the run was built with
+    /// [`ExperimentBuilder::metrics`].  This is the byte-identity surface
+    /// `bouquetfl stats` reproduces from a durable run's event log.
+    pub fn metrics_json(&self) -> Option<Json> {
+        self.metrics.as_ref().map(|m| m.sim_json())
     }
 }
 

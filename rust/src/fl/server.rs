@@ -37,6 +37,7 @@ use crate::sched::{
 };
 
 use crate::durable::{Checkpoint, EventLogObserver, RunDurability, CHECKPOINT_FILE};
+use crate::obs::{Phase, PhaseGuard, PhaseRecorder};
 
 use super::attack::Attack;
 use super::bouquet::BouquetContext;
@@ -218,6 +219,9 @@ pub struct ServerApp {
     /// cadence, and — on resume — the restored state to continue from.
     /// Consumed by the next run (one run per attachment).
     durable: Option<RunDurability>,
+    /// Host-domain phase timer (DESIGN.md §17); `None` keeps the round
+    /// loop free of wall-clock reads beyond `host_round_s`.
+    phase_recorder: Option<PhaseRecorder>,
     pub trace: Trace,
 }
 
@@ -293,6 +297,7 @@ impl ServerApp {
             scratch: ParamScratch::default(),
             fold_plan: FoldPlan::default(),
             durable: None,
+            phase_recorder: None,
             trace: Trace::default(),
         }
     }
@@ -402,6 +407,16 @@ impl ServerApp {
         self
     }
 
+    /// Attach a host-domain phase timer (DESIGN.md §17): the round loop's
+    /// select → dispatch → fit → comm → gate → fold → eval → checkpoint
+    /// phases are timed on the wall clock into the recorder's hub (and
+    /// its span list).  Host telemetry only — attaching one changes no
+    /// event, aggregate, or simulated-domain metric.
+    pub fn with_phase_recorder(mut self, recorder: PhaseRecorder) -> Self {
+        self.phase_recorder = Some(recorder);
+        self
+    }
+
     /// Attach durable-run infrastructure (DESIGN.md §14): every event the
     /// round loop emits is appended to a CRC-framed log, and the server's
     /// cross-round state is checkpointed at the harness's cadence.  The
@@ -500,6 +515,10 @@ impl ServerApp {
         // and only then subscribe the log writer — replayed events must
         // not be re-appended.
         let mut durable = self.durable.take();
+        // Host-domain phase timer (DESIGN.md §17), taken like the durable
+        // harness so guards never borrow `self` across the loop's mutable
+        // uses.  `None` compiles every `pstart` below to nothing.
+        let phases = self.phase_recorder.take();
         let start_round = match durable.as_mut().and_then(|d| d.take_resume()) {
             Some(ckpt) => {
                 if ckpt.global.len() != global.len() {
@@ -568,6 +587,7 @@ impl ServerApp {
             let host_t0 = Instant::now();
 
             // --- dynamics: churn + eligibility ---------------------------
+            let select_span = pstart(&phases, Phase::Select);
             if let Some(d) = self.dynamics.as_mut() {
                 d.begin_round();
             }
@@ -625,6 +645,8 @@ impl ServerApp {
                             FlEvent::RoundSkipped { round, wait_s: wait },
                         );
                         notify_round_end(recorder, tracer, &mut self.observers, record);
+                        let _ckpt_span =
+                            if durable.is_some() { pstart(&phases, Phase::Checkpoint) } else { None };
                         durable_round_boundary(
                             durable.as_ref(),
                             Some(&*d),
@@ -645,6 +667,7 @@ impl ServerApp {
                 None => Cow::Borrowed(manager.select(roster_len)),
             };
             let selected: &[usize] = cohort.as_ref();
+            drop(select_span);
             let fit_cfg = self.strategy.configure(round, &self.cfg.fit);
             notify(
                 recorder,
@@ -680,6 +703,7 @@ impl ServerApp {
             let round_t0 = clock.now_s();
             let mut gate = self.dynamics.as_ref().map(|d| d.begin_gate(d.now_s()));
             let mut dyn_gate = self.dynamics.as_mut().zip(gate.as_mut());
+            let fit_span = pstart(&phases, Phase::Fit);
             match &pool {
                 Some(pool) => round_pooled(
                     &mut self.roster,
@@ -695,6 +719,7 @@ impl ServerApp {
                     &mut dyn_gate,
                     &mut netsim_round,
                     &mut self.attack,
+                    phases.as_ref(),
                 )?,
                 None => round_inline(
                     &mut self.roster,
@@ -713,6 +738,7 @@ impl ServerApp {
                     &self.scratch,
                 )?,
             }
+            drop(fit_span);
 
             // --- netsim: solve the upload timeline, gate and fold --------
             // With netsim on, per-client comm windows come from the shared
@@ -731,6 +757,7 @@ impl ServerApp {
                     &mut gate,
                     recorder,
                     tracer,
+                    phases.as_ref(),
                 )?),
                 None => None,
             };
@@ -831,6 +858,8 @@ impl ServerApp {
                     host_round_s: host_t0.elapsed().as_secs_f64(),
                 };
                 notify_round_end(recorder, tracer, &mut self.observers, record);
+                let _ckpt_span =
+                    if durable.is_some() { pstart(&phases, Phase::Checkpoint) } else { None };
                 durable_round_boundary(
                     durable.as_ref(),
                     self.dynamics.as_ref(),
@@ -869,10 +898,12 @@ impl ServerApp {
             );
 
             // --- aggregate ------------------------------------------------
+            let fold_span = pstart(&phases, Phase::Fold);
             let output = acc.finish()?;
             global = self
                 .strategy
                 .reduce(&global, output, executor.as_deref_mut())?;
+            drop(fold_span);
             notify(
                 recorder,
                 tracer,
@@ -893,6 +924,7 @@ impl ServerApp {
             let (eval_loss, eval_accuracy) = if self.cfg.eval_every > 0
                 && (round + 1) % self.cfg.eval_every == 0
             {
+                let _eval_span = pstart(&phases, Phase::Eval);
                 match executor
                     .as_deref_mut()
                     .and_then(|ex| self.evaluate(ex, &global))
@@ -933,6 +965,8 @@ impl ServerApp {
                 host_round_s: host_t0.elapsed().as_secs_f64(),
             };
             notify_round_end(recorder, tracer, &mut self.observers, record);
+            let _ckpt_span =
+                if durable.is_some() { pstart(&phases, Phase::Checkpoint) } else { None };
             durable_round_boundary(
                 durable.as_ref(),
                 self.dynamics.as_ref(),
@@ -982,11 +1016,13 @@ impl ServerApp {
         gate: &mut Option<RoundGate>,
         recorder: &mut HistoryObserver,
         tracer: &mut TraceObserver,
+        phases: Option<&PhaseRecorder>,
     ) -> Result<Schedule, FlError> {
         // Borrowed, not cloned: `netsim`, `observers` and `dynamics` are
         // disjoint fields, so the long-lived shared borrow here coexists
         // with the mutable borrows the notify/gate calls below take.
         let ns = self.netsim.as_ref().expect("netsim round implies netsim");
+        let comm_span = phases.map(|p| p.start(Phase::Comm));
         let NetsimRound { links, download_s, buffered } = nr;
         let uploads: Vec<(f64, NetworkProfile)> = buffered
             .iter()
@@ -1027,9 +1063,12 @@ impl ServerApp {
             );
         }
 
+        drop(comm_span);
+
         // Kept spans for the schedule — only tracked when no dynamics
         // gate is active (an active gate records the very same windows
         // via `admit_window` and renders them itself below).
+        let gate_span = phases.map(|p| p.start(Phase::Gate));
         let gated = gate.is_some();
         let mut spans: Vec<(u32, f64, f64)> =
             if gated { Vec::new() } else { Vec::with_capacity(buffered.len()) };
@@ -1110,6 +1149,7 @@ impl ServerApp {
                 .failures
                 .sort_by_key(|f| position.get(&f.client).copied().unwrap_or(usize::MAX));
         }
+        drop(gate_span);
 
         // Round clock: the gate's view when dynamics are on (it recorded
         // the same kept windows and holds a late round open until the
@@ -1165,6 +1205,12 @@ impl ServerApp {
 /// round as one unit — either both present (scenario active) or neither,
 /// so gating can never be half-wired.
 type DynGate<'a> = Option<(&'a mut FederationDynamics, &'a mut RoundGate)>;
+
+/// Open a host-domain phase span iff a recorder is attached — the guard
+/// records on drop; without one this is a no-op on the hot path.
+fn pstart(phases: &Option<PhaseRecorder>, phase: Phase) -> Option<PhaseGuard> {
+    phases.as_ref().map(|p| p.start(phase))
+}
 
 /// Deliver one event to the built-in subscribers (history first, then
 /// trace) and then to every user observer in attach order.
@@ -1320,6 +1366,7 @@ fn round_pooled(
     dyn_gate: &mut DynGate<'_>,
     netsim: &mut Option<NetsimRound>,
     attack: &mut Option<Attack>,
+    phases: Option<&PhaseRecorder>,
 ) -> Result<(), FlError> {
     let shared = Arc::new(global.clone());
     // Worker-side folding: only when nothing stands between a successful
@@ -1334,17 +1381,20 @@ fn round_pooled(
     } else {
         None
     };
-    for (pos, &ci) in selected.iter().enumerate() {
-        let client = roster.checkout(ci);
-        pool.submit(FitTask {
-            index: pos,
-            client,
-            global: Arc::clone(&shared),
-            cfg: fit_cfg.clone(),
-            host: host.clone(),
-            env_cfg: env_cfg.clone(),
-            fold: worker_fold.clone(),
-        })?;
+    {
+        let _dispatch_span = phases.map(|p| p.start(Phase::Dispatch));
+        for (pos, &ci) in selected.iter().enumerate() {
+            let client = roster.checkout(ci);
+            pool.submit(FitTask {
+                index: pos,
+                client,
+                global: Arc::clone(&shared),
+                cfg: fit_cfg.clone(),
+                host: host.clone(),
+                env_cfg: env_cfg.clone(),
+                fold: worker_fold.clone(),
+            })?;
+        }
     }
 
     let mut reorder = ReorderBuffer::new(selected.len());
@@ -1401,6 +1451,9 @@ fn round_pooled(
                 }
             }
         }
+    }
+    if let Some(p) = phases {
+        p.gauge_max("reorder_peak_held_back", reorder.peak_held_back() as f64);
     }
     // All clients are checked back in; only now surface a fatal error
     // (same observable as the inline engine's early return).

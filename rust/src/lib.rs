@@ -12,9 +12,10 @@
 //!   communication simulator with update codecs ([`netsim`]), the
 //!   durable-run infrastructure — CRC-framed event logs,
 //!   checkpoint/resume, offline replay ([`durable`]) — the
-//!   analysis/figure harness ([`analysis`]), and detlint, the
-//!   determinism static-analysis pass that lints this very source
-//!   tree for bit-identity hazards ([`lint`]).
+//!   observability layer with its deterministic metrics registry and
+//!   phase-span tracing ([`obs`]), the analysis/figure harness
+//!   ([`analysis`]), and detlint, the determinism static-analysis pass
+//!   that lints this very source tree for bit-identity hazards ([`lint`]).
 //! * **L2** — the training computation (a compact CNN) written in JAX
 //!   (`python/compile/model.py`), AOT-lowered once to HLO text.
 //! * **L1** — Pallas kernels for the dense layer (fwd + custom-VJP bwd),
@@ -39,6 +40,7 @@ pub mod lint;
 pub mod modelcost;
 pub mod net;
 pub mod netsim;
+pub mod obs;
 pub mod runtime;
 pub mod sched;
 pub mod util;

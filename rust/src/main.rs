@@ -10,6 +10,7 @@
 //!   list-hw          list GPUs / CPUs / presets in the databases
 //!   replay           rebuild history/trace/report from a durable run's event log
 //!   resume           continue a killed durable run from its directory
+//!   stats            compute the simulated-domain metric set from a durable run's event log
 //!   lint             run detlint, the determinism static-analysis pass, over a source tree
 //!
 //! `bouquetfl <cmd> --help` shows per-command options.
@@ -24,11 +25,12 @@ use bouquetfl::durable::{self, DurableOptions};
 use bouquetfl::emu::EmulationMode;
 use bouquetfl::fl::attack::{self, AttackConfig, ATTACK_PRESETS};
 use bouquetfl::fl::experiment::ExperimentBuilder;
-use bouquetfl::fl::launcher::{launch, HardwareSource, LaunchOptions};
+use bouquetfl::fl::launcher::{launch, HardwareSource, LaunchOptions, LaunchOutcome};
 use bouquetfl::fl::{strategy, Scenario, Selection, MODEL_KINDS, SCENARIO_PRESETS};
 use bouquetfl::hardware::profile::PRESET_NAMES;
 use bouquetfl::lint;
 use bouquetfl::net::NET_TIERS;
+use bouquetfl::obs::exporters;
 use bouquetfl::netsim::{self, NetSimConfig, NETSIM_PRESETS};
 use bouquetfl::sched;
 use bouquetfl::hardware::sampler::{HardwareSampler, SamplerConfig};
@@ -51,6 +53,7 @@ fn main() -> Result<()> {
         "list-hw" => cmd_list_hw(&raw),
         "replay" => cmd_replay(&raw),
         "resume" => cmd_resume(&raw),
+        "stats" => cmd_stats(&raw),
         "lint" => cmd_lint(&raw),
         "help" | "--help" | "-h" => {
             print_global_help();
@@ -78,6 +81,7 @@ fn print_global_help() {
          \x20 list-hw          list known GPUs / CPUs / profile presets\n\
          \x20 replay           rebuild history/trace/report from a durable run's event log (DESIGN.md §14)\n\
          \x20 resume           continue a killed durable run from its directory\n\
+         \x20 stats            simulated-domain metrics from a durable run's event log (DESIGN.md §17)\n\
          \x20 lint             detlint: flag determinism hazards in a Rust source tree (DESIGN.md §15)"
     );
 }
@@ -163,6 +167,12 @@ fn cmd_list(raw: &[String]) -> Result<()> {
             println!("  {:<4} {:<20} {}", id, rule.name(), rule.describe());
         }
     }
+    println!("\nmetric exporters (bouquetfl stats --format / run --metrics-out, DESIGN.md §17):");
+    for name in exporters::names() {
+        if let Some(exporter) = exporters::by_name(&name) {
+            println!("  {:<12} {}", name, exporter.describe());
+        }
+    }
     Ok(())
 }
 
@@ -235,11 +245,14 @@ fn run_specs() -> Vec<OptSpec> {
         OptSpec { name: "netsim", help: "contention-aware comm simulation: uncapped|congested-cell preset (implies --network; DESIGN.md §12)", takes_value: true, default: None },
         OptSpec { name: "attack", help: "adversarial participants: sign-flip|gauss|scaled|label-flip|backdoor|colluding|adaptive preset (`bouquetfl list` prints them; DESIGN.md §13)", takes_value: true, default: None },
         OptSpec { name: "profiles", help: "comma-separated preset/GPU names (manual hardware)", takes_value: true, default: None },
+        OptSpec { name: "simulated", help: "skip real training: simulated executor with this parameter dimension (fast; for CI and metric plumbing)", takes_value: true, default: None },
         OptSpec { name: "history-out", help: "write round history JSON here", takes_value: true, default: None },
         OptSpec { name: "trace-out", help: "write Chrome-trace JSON of client fits here", takes_value: true, default: None },
+        OptSpec { name: "metrics-out", help: "enable the metrics observer and write metrics.json here (sim rows byte-equal to `bouquetfl stats`; DESIGN.md §17)", takes_value: true, default: None },
         OptSpec { name: "pace", help: "real-time pacing scale (e.g. 0.1 sleeps 0.1s per emulated second)", takes_value: true, default: None },
         OptSpec { name: "durable", help: "record the run durably into this directory (event log + checkpoints + manifest; resumable via `bouquetfl resume`)", takes_value: true, default: None },
         OptSpec { name: "durable-every", help: "checkpoint every K rounds (0 = log only, unresumable)", takes_value: true, default: Some("1") },
+        OptSpec { name: "durable-crash-after", help: "abort on purpose after round K (crash-recovery drills; needs --durable)", takes_value: true, default: None },
         OptSpec { name: "help", help: "show help", takes_value: false, default: None },
     ]
 }
@@ -304,13 +317,18 @@ fn cmd_run(raw: &[String]) -> Result<()> {
         })?);
     }
 
+    let simulated = args.get_u64("simulated")?.map(|dim| dim as usize);
     if let Some(dir) = args.get("durable") {
         let every_k = args.get_u64("durable-every")?.unwrap() as u32;
-        opts.durable = Some(DurableOptions::new(dir).every(every_k));
+        let mut dopts = DurableOptions::new(dir).every(every_k);
+        if let Some(after) = args.get_u64("durable-crash-after")? {
+            dopts = dopts.crash_after(after as u32);
+        }
+        opts.durable = Some(dopts);
         // The manifest is what `bouquetfl resume` rebuilds the launch
         // options from — written before the run so even a round-0 crash
         // leaves a resumable directory.
-        durable::write_manifest(Path::new(dir), &durable::manifest_from_options(&opts, None))?;
+        durable::write_manifest(Path::new(dir), &durable::manifest_from_options(&opts, simulated))?;
         println!("durable: recording into {dir} (checkpoint every {every_k} round(s))");
         // A durable run is a reproducibility artifact, so stamp the header
         // with the tree's determinism state when a lint report is at hand
@@ -347,7 +365,29 @@ fn cmd_run(raw: &[String]) -> Result<()> {
     if let Some(a) = &opts.attack {
         println!("attack: {}", a.describe());
     }
-    let outcome = launch(&opts)?;
+    // The plain path stays on the `launch` shim; `--simulated` and
+    // `--metrics-out` need builder-only switches, so they take the
+    // builder (identical assembly, asserted in tests/experiment_api.rs).
+    let (outcome, metrics) = if simulated.is_some() || args.get("metrics-out").is_some() {
+        let mut builder = ExperimentBuilder::from_options(opts.clone());
+        if let Some(dim) = simulated {
+            builder = builder.simulated(dim);
+        }
+        if args.get("metrics-out").is_some() {
+            builder = builder.metrics();
+        }
+        let report = builder.build()?.run()?;
+        let metrics = report.metrics;
+        let outcome = LaunchOutcome {
+            global: report.global,
+            history: report.history,
+            profiles: report.profiles,
+            trace: report.trace,
+        };
+        (outcome, metrics)
+    } else {
+        (launch(&opts)?, None)
+    };
 
     let mut t = Table::new(&["client", "hardware"]).aligns(&[Align::Right, Align::Left]);
     for (i, p) in outcome.profiles.iter().enumerate() {
@@ -380,6 +420,12 @@ fn cmd_run(raw: &[String]) -> Result<()> {
     if let Some(path) = args.get("trace-out") {
         std::fs::write(path, outcome.trace.to_chrome_json().pretty())?;
         println!("wrote Chrome trace to {path} (open in chrome://tracing or Perfetto)");
+    }
+    if let Some(path) = args.get("metrics-out") {
+        let m = metrics.as_ref().expect("--metrics-out enables the metrics observer");
+        let exporter = exporters::by_name("json").expect("json exporter is built in");
+        std::fs::write(path, exporter.render(m))?;
+        println!("wrote metrics to {path} (sim rows byte-equal to `bouquetfl stats`)");
     }
     Ok(())
 }
@@ -603,6 +649,61 @@ fn cmd_replay(raw: &[String]) -> Result<()> {
     if let Some(out) = args.get("trace-out") {
         std::fs::write(out, replayed.trace.to_chrome_json().pretty())?;
         println!("wrote Chrome trace to {out} (open in chrome://tracing or Perfetto)");
+    }
+    Ok(())
+}
+
+fn cmd_stats(raw: &[String]) -> Result<()> {
+    let specs = vec![
+        OptSpec { name: "format", help: "exporter name: json | prometheus (`bouquetfl list` prints them)", takes_value: true, default: Some("json") },
+        OptSpec { name: "out", help: "write the rendered metrics here instead of stdout", takes_value: true, default: None },
+        OptSpec { name: "help", help: "show help", takes_value: false, default: None },
+    ];
+    let args = Args::parse(&raw[1..], &specs)?;
+    if args.get_bool("help") || args.positional.is_empty() {
+        println!(
+            "{}",
+            render_help(
+                "bouquetfl stats <run-dir-or-log>",
+                "compute the full simulated-domain metric set from a durable \
+                 run's event log — byte-equal to the live run's metrics.json \
+                 (no re-execution; DESIGN.md §17)",
+                &specs
+            )
+        );
+        if args.get_bool("help") {
+            return Ok(());
+        }
+        bail!("expected a durable run directory or an event-log path");
+    }
+    let arg = Path::new(&args.positional[0]);
+    let path =
+        if arg.is_dir() { arg.join(durable::EVENT_LOG_FILE) } else { arg.to_path_buf() };
+    let log = durable::read_log(&path)?;
+    if let Some(meta) = &log.meta {
+        eprintln!(
+            "log: strategy {}, scenario {}, seed {}, {} round(s) planned, {} client(s)",
+            meta.strategy, meta.scenario, meta.seed, meta.rounds, meta.clients
+        );
+    }
+    if log.truncated {
+        eprintln!("torn tail discarded — clean prefix ends at byte {}", log.clean_offset);
+    }
+    let metrics = durable::replay_metrics(&log.events);
+    let format = args.get("format").unwrap();
+    let exporter = exporters::by_name(format).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown metrics format '{format}' ({})",
+            exporters::names().join("|")
+        )
+    })?;
+    let rendered = exporter.render(&metrics);
+    match args.get("out") {
+        Some(out) => {
+            std::fs::write(out, rendered)?;
+            eprintln!("wrote metrics to {out}");
+        }
+        None => print!("{rendered}"),
     }
     Ok(())
 }

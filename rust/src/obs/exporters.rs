@@ -1,0 +1,188 @@
+//! The metric-exporter registry and the two built-in exposition formats.
+//!
+//! Exporters render a [`RunMetrics`] snapshot to text.  Like the strategy,
+//! scheduler and lint-rule registries, exporters register by name at
+//! runtime (`bouquetfl list` prints them; `bouquetfl stats --format`
+//! selects one):
+//!
+//! * `json` — the simulated-domain `metrics.json` document.  This is the
+//!   byte-identity surface: a live run's `--metrics-out` file and
+//!   `bouquetfl stats` over its event log render through this same
+//!   function, so they compare with `cmp`.
+//! * `prometheus` — Prometheus text exposition of BOTH domains, prefixed
+//!   `bouquetfl_sim_` / `bouquetfl_host_` so the separation survives
+//!   scraping.  Host values vary run to run by design; never diff them.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, OnceLock, RwLock};
+
+use super::registry::MetricsRegistry;
+use super::RunMetrics;
+
+/// Renders a metrics snapshot to an exposition format.
+pub trait MetricsExporter: Send + Sync {
+    /// Registered name (`bouquetfl stats --format <name>`).
+    fn name(&self) -> &'static str;
+    /// One-line description for `bouquetfl list`.
+    fn describe(&self) -> &'static str;
+    /// Render the snapshot.
+    fn render(&self, metrics: &RunMetrics) -> String;
+}
+
+type Factory = Arc<dyn Fn() -> Box<dyn MetricsExporter> + Send + Sync>;
+
+static REG: OnceLock<RwLock<BTreeMap<String, Factory>>> = OnceLock::new();
+
+fn reg() -> &'static RwLock<BTreeMap<String, Factory>> {
+    REG.get_or_init(|| RwLock::new(BTreeMap::new()))
+}
+
+/// Register (or replace) an exporter factory under `name`.
+pub fn register(name: &str, factory: Factory) {
+    let lock = reg();
+    let mut map = lock.write().unwrap_or_else(|e| e.into_inner());
+    map.insert(name.to_string(), factory);
+}
+
+/// Instantiate the exporter registered under `name`.
+pub fn by_name(name: &str) -> Option<Box<dyn MetricsExporter>> {
+    ensure_builtin();
+    let lock = reg();
+    let map = lock.read().unwrap_or_else(|e| e.into_inner());
+    map.get(name).map(|f| f())
+}
+
+/// Registered exporter names, sorted.
+pub fn names() -> Vec<String> {
+    ensure_builtin();
+    let lock = reg();
+    let map = lock.read().unwrap_or_else(|e| e.into_inner());
+    map.keys().cloned().collect()
+}
+
+/// Idempotently register the built-in exporters.
+pub fn ensure_builtin() {
+    let lock = reg();
+    {
+        let map = lock.read().unwrap_or_else(|e| e.into_inner());
+        if map.contains_key("json") && map.contains_key("prometheus") {
+            return;
+        }
+    }
+    let mut map = lock.write().unwrap_or_else(|e| e.into_inner());
+    map.entry("json".to_string())
+        .or_insert_with(|| Arc::new(|| Box::new(JsonExporter) as Box<dyn MetricsExporter>));
+    map.entry("prometheus".to_string())
+        .or_insert_with(|| Arc::new(|| Box::new(PrometheusExporter) as Box<dyn MetricsExporter>));
+}
+
+/// The `metrics.json` renderer (simulated domain only — see module docs).
+struct JsonExporter;
+
+impl MetricsExporter for JsonExporter {
+    fn name(&self) -> &'static str {
+        "json"
+    }
+    fn describe(&self) -> &'static str {
+        "simulated-domain metrics.json (bit-identical live vs `stats` replay)"
+    }
+    fn render(&self, metrics: &RunMetrics) -> String {
+        let mut out = metrics.sim_json().pretty();
+        out.push('\n');
+        out
+    }
+}
+
+/// Prometheus text-format number: integral finite values print without a
+/// fraction (mirroring `util::json`'s formatter), others via `Display`.
+fn prom_num(x: f64) -> String {
+    if x.is_finite() && x.fract() == 0.0 && x.abs() < 1e15 {
+        format!("{}", x as i64)
+    } else if x.is_finite() {
+        format!("{x}")
+    } else {
+        "NaN".to_string()
+    }
+}
+
+fn prom_registry(out: &mut String, prefix: &str, r: &MetricsRegistry) {
+    for (name, v) in r.counters() {
+        out.push_str(&format!("# TYPE {prefix}{name} counter\n{prefix}{name} {v}\n"));
+    }
+    for (name, v) in r.gauges() {
+        out.push_str(&format!("# TYPE {prefix}{name} gauge\n{prefix}{name} {}\n", prom_num(v)));
+    }
+    for (name, h) in r.histograms() {
+        out.push_str(&format!("# TYPE {prefix}{name} histogram\n"));
+        let mut cum = 0u64;
+        for (i, &c) in h.counts.iter().enumerate() {
+            cum += c;
+            let le = match h.bounds.get(i) {
+                Some(&b) => prom_num(b),
+                None => "+Inf".to_string(),
+            };
+            out.push_str(&format!("{prefix}{name}_bucket{{le=\"{le}\"}} {cum}\n"));
+        }
+        out.push_str(&format!("{prefix}{name}_sum {}\n", prom_num(h.sum)));
+        out.push_str(&format!("{prefix}{name}_count {}\n", h.count));
+    }
+}
+
+/// Prometheus text exposition of both domains.
+struct PrometheusExporter;
+
+impl MetricsExporter for PrometheusExporter {
+    fn name(&self) -> &'static str {
+        "prometheus"
+    }
+    fn describe(&self) -> &'static str {
+        "Prometheus text exposition, both domains (bouquetfl_sim_* / bouquetfl_host_*)"
+    }
+    fn render(&self, metrics: &RunMetrics) -> String {
+        let mut out = String::new();
+        prom_registry(&mut out, "bouquetfl_sim_", &metrics.sim);
+        prom_registry(&mut out, "bouquetfl_host_", &metrics.host);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtins_are_registered_and_sorted() {
+        let names = names();
+        assert!(names.contains(&"json".to_string()));
+        assert!(names.contains(&"prometheus".to_string()));
+        let mut sorted = names.clone();
+        sorted.sort();
+        assert_eq!(names, sorted);
+    }
+
+    #[test]
+    fn prometheus_renders_both_domains_with_cumulative_buckets() {
+        let mut m = RunMetrics::default();
+        m.sim.inc("clients_done", 3);
+        m.sim.observe("fit_seconds", &[1.0, 5.0], 0.5);
+        m.sim.observe("fit_seconds", &[1.0, 5.0], 9.0);
+        m.host.set("peak_rss_bytes", 1024.0);
+        let text = by_name("prometheus").unwrap().render(&m);
+        assert!(text.contains("bouquetfl_sim_clients_done 3\n"));
+        assert!(text.contains("bouquetfl_sim_fit_seconds_bucket{le=\"1\"} 1\n"));
+        assert!(text.contains("bouquetfl_sim_fit_seconds_bucket{le=\"+Inf\"} 2\n"));
+        assert!(text.contains("bouquetfl_sim_fit_seconds_count 2\n"));
+        assert!(text.contains("bouquetfl_host_peak_rss_bytes 1024\n"));
+    }
+
+    #[test]
+    fn json_exporter_is_sim_domain_only() {
+        let mut m = RunMetrics::default();
+        m.sim.inc("rounds_total", 2);
+        m.host.set("peak_rss_bytes", 4096.0);
+        let text = by_name("json").unwrap().render(&m);
+        assert!(text.contains("rounds_total"));
+        assert!(!text.contains("peak_rss_bytes"), "host domain must not leak into metrics.json");
+        assert!(text.ends_with('\n'));
+    }
+}

@@ -1,0 +1,113 @@
+//! Host-domain instrumentation: the wall-clock phase recorder and peak-RSS
+//! capture.
+//!
+//! Everything in this file writes ONLY into the host registry and the
+//! phase-span list — never into the simulated domain.  The single wall
+//! clock read lives in [`wall_now`], the one audited detlint R2 carve-out
+//! for the observability layer (DESIGN.md §15, §17): host timings are
+//! diagnostic telemetry and never feed the simulated clock, the event
+//! stream, or any aggregate.
+
+use std::time::Instant;
+
+use super::span::{Phase, PhaseSpan};
+use super::MetricsHub;
+
+/// The observability layer's only wall-clock read.  Every host-domain
+/// timestamp flows through here so the R2 carve-out stays a single
+/// audited site.
+fn wall_now() -> Instant {
+    // detlint: allow(R2) — host-domain phase clock: spans and wall timings live in the host metrics namespace and never feed the simulated clock, events, or aggregates (DESIGN.md §17)
+    Instant::now()
+}
+
+/// Times server round-loop phases on the host clock and records them into
+/// a [`MetricsHub`]'s host registry (counter `phase_<name>_calls`, gauge
+/// `phase_<name>_seconds`) plus the run's [`PhaseSpan`] list.
+///
+/// Cheap to clone-free share: the server holds it by value and hands out
+/// RAII [`PhaseGuard`]s; dropping a guard records the span.
+#[derive(Debug)]
+pub struct PhaseRecorder {
+    hub: MetricsHub,
+    epoch: Instant,
+}
+
+impl PhaseRecorder {
+    /// A recorder whose span timestamps are relative to "now".
+    pub fn new(hub: MetricsHub) -> PhaseRecorder {
+        PhaseRecorder { hub, epoch: wall_now() }
+    }
+
+    /// Begin timing `phase`; the returned guard records on drop.
+    pub fn start(&self, phase: Phase) -> PhaseGuard {
+        PhaseGuard { hub: self.hub.clone(), phase, epoch: self.epoch, t0: wall_now() }
+    }
+
+    /// Raise host gauge `name` to `v` if it exceeds the current value
+    /// (e.g. the reorder buffer's peak occupancy).
+    pub fn gauge_max(&self, name: &str, v: f64) {
+        self.hub.with(|m| m.host.set_max(name, v));
+    }
+
+    /// Record the process's peak RSS (bytes) into the host registry.
+    /// Zero on platforms where `VmHWM` is unavailable.
+    pub fn record_peak_rss(&self) {
+        let rss = crate::util::benchkit::peak_rss_bytes();
+        self.hub.with(|m| m.host.set("peak_rss_bytes", rss as f64));
+    }
+}
+
+/// RAII guard for one phase execution; records the span when dropped.
+#[derive(Debug)]
+pub struct PhaseGuard {
+    hub: MetricsHub,
+    phase: Phase,
+    epoch: Instant,
+    t0: Instant,
+}
+
+impl Drop for PhaseGuard {
+    fn drop(&mut self) {
+        let start_s = self.t0.duration_since(self.epoch).as_secs_f64();
+        let end_s = wall_now().duration_since(self.epoch).as_secs_f64();
+        let name = self.phase.name();
+        self.hub.with(|m| {
+            m.host.inc(&format!("phase_{name}_calls"), 1);
+            m.host.add(&format!("phase_{name}_seconds"), end_s - start_s);
+            m.phase_spans.push(PhaseSpan { phase: self.phase, start_s, end_s });
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn guard_records_call_count_seconds_and_span() {
+        let hub = MetricsHub::default();
+        let rec = PhaseRecorder::new(hub.clone());
+        {
+            let _g = rec.start(Phase::Fold);
+        }
+        {
+            let _g = rec.start(Phase::Fold);
+        }
+        let m = hub.snapshot();
+        assert_eq!(m.host.counter("phase_fold_calls"), 2);
+        assert!(m.host.gauge("phase_fold_seconds").unwrap() >= 0.0);
+        assert_eq!(m.phase_spans.len(), 2);
+        assert!(m.phase_spans[0].end_s >= m.phase_spans[0].start_s);
+        assert!(m.sim.is_empty(), "phase timing must never touch the simulated domain");
+    }
+
+    #[test]
+    fn gauge_max_tracks_the_peak() {
+        let hub = MetricsHub::default();
+        let rec = PhaseRecorder::new(hub.clone());
+        rec.gauge_max("reorder_peak_held_back", 2.0);
+        rec.gauge_max("reorder_peak_held_back", 1.0);
+        assert_eq!(hub.snapshot().host.gauge("reorder_peak_held_back"), Some(2.0));
+    }
+}

@@ -1,0 +1,164 @@
+//! Observability: the deterministic metrics registry, phase-span tracing
+//! and exposition surfaces (DESIGN.md §17).
+//!
+//! Two strictly separated metric domains:
+//!
+//! * **Simulated domain** ([`RunMetrics::sim`]) — a pure fold over the
+//!   [`FlEvent`](crate::fl::FlEvent) stream by [`MetricsObserver`]:
+//!   selection/failure counts, per-kind failure rates, comm bytes up/down,
+//!   attack injections, emulated seconds, staleness.  Bit-identical across
+//!   `--workers N`, across crash/resume, and across a live run vs
+//!   `bouquetfl stats` replaying its event log ([`crate::durable::replay_metrics`]).
+//! * **Host domain** ([`RunMetrics::host`]) — wall-clock phase timings
+//!   from [`PhaseRecorder`] and peak RSS.  Diagnostic only; never compared
+//!   across runs and never mixed into the simulated namespace.
+//!
+//! Exposition: the `json` exporter renders the simulated domain as
+//! `metrics.json` (the byte-identity surface), `prometheus` renders both
+//! domains with `bouquetfl_sim_` / `bouquetfl_host_` prefixes
+//! ([`exporters`]); campaigns embed per-cell simulated rows in
+//! `cells.jsonl`; phase spans export as Chrome-trace rows.
+#![deny(missing_docs)]
+
+pub mod exporters;
+mod host;
+mod observer;
+mod registry;
+mod span;
+
+use std::sync::{Arc, Mutex};
+
+pub use host::{PhaseGuard, PhaseRecorder};
+pub use observer::MetricsObserver;
+pub use registry::{Histogram, MetricsRegistry, TIME_BUCKETS_S};
+pub use span::{Phase, PhaseSpan};
+
+use crate::util::json::Json;
+
+/// A run's full metric state: both domain registries plus the host-domain
+/// phase spans.
+#[derive(Debug, Clone, Default)]
+pub struct RunMetrics {
+    /// Simulated-domain registry (event-derived, bit-identical).
+    pub sim: MetricsRegistry,
+    /// Host-domain registry (wall-clock, varies run to run).
+    pub host: MetricsRegistry,
+    /// Timed round-loop phases, host seconds since the recorder epoch.
+    pub phase_spans: Vec<PhaseSpan>,
+}
+
+impl RunMetrics {
+    /// The `metrics.json` document: the simulated domain plus derived
+    /// per-kind failure rates.  Everything here is a deterministic
+    /// function of the event stream — this is the surface `bouquetfl
+    /// stats` reproduces byte-identically from the log.
+    pub fn sim_json(&self) -> Json {
+        let selected = self.sim.counter("clients_selected");
+        let rate = |n: &str| {
+            if selected == 0 {
+                Json::num(0.0)
+            } else {
+                Json::num(self.sim.counter(n) as f64 / selected as f64)
+            }
+        };
+        let mut base = match self.sim.to_json() {
+            Json::Obj(map) => map,
+            _ => unreachable!("registry JSON is an object"),
+        };
+        base.insert(
+            "derived".to_string(),
+            Json::obj(vec![
+                ("failure_rate_dropout", rate("failures_dropout")),
+                ("failure_rate_fault", rate("failures_fault")),
+                ("failure_rate_late", rate("failures_late")),
+            ]),
+        );
+        Json::Obj(base)
+    }
+
+    /// Both domains and the phase spans in one document (diagnostic; the
+    /// host half varies run to run by design).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("host", self.host.to_json()),
+            (
+                "phase_spans",
+                Json::Arr(
+                    self.phase_spans
+                        .iter()
+                        .map(|s| {
+                            Json::obj(vec![
+                                ("end_s", Json::num(s.end_s)),
+                                ("phase", Json::str(s.phase.name())),
+                                ("start_s", Json::num(s.start_s)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("sim", self.sim_json()),
+        ])
+    }
+}
+
+/// Shared handle to a run's [`RunMetrics`]: the server's phase recorder,
+/// the metrics observer and the final report all write through clones of
+/// the same hub.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsHub {
+    inner: Arc<Mutex<RunMetrics>>,
+}
+
+impl MetricsHub {
+    /// A fresh hub with empty registries.
+    pub fn new() -> MetricsHub {
+        MetricsHub::default()
+    }
+
+    /// Run `f` with exclusive access to the metrics (poison-tolerant: a
+    /// panicking observer elsewhere must not kill telemetry).
+    pub fn with<R>(&self, f: impl FnOnce(&mut RunMetrics) -> R) -> R {
+        let mut guard = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        f(&mut guard)
+    }
+
+    /// Clone out the current metric state.
+    pub fn snapshot(&self) -> RunMetrics {
+        self.with(|m| m.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sim_json_includes_derived_failure_rates() {
+        let hub = MetricsHub::new();
+        hub.with(|m| {
+            m.sim.inc("clients_selected", 4);
+            m.sim.inc("failures_dropout", 1);
+        });
+        let j = hub.snapshot().sim_json();
+        let derived = j.get("derived").expect("derived block");
+        assert_eq!(
+            derived.get("failure_rate_dropout").and_then(|x| x.as_f64()),
+            Some(0.25)
+        );
+        assert_eq!(derived.get("failure_rate_late").and_then(|x| x.as_f64()), Some(0.0));
+    }
+
+    #[test]
+    fn sim_json_of_equal_folds_is_byte_identical() {
+        let build = || {
+            let hub = MetricsHub::new();
+            hub.with(|m| {
+                m.sim.inc("rounds_total", 3);
+                m.sim.add("emu_seconds_total", 1.5);
+                m.sim.observe("round_seconds", TIME_BUCKETS_S, 0.5);
+            });
+            hub.snapshot().sim_json().pretty()
+        };
+        assert_eq!(build(), build());
+    }
+}

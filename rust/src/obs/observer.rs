@@ -1,0 +1,237 @@
+//! The simulated-domain metrics fold over the [`FlEvent`] stream.
+//!
+//! [`MetricsObserver`] is a pure function of the event sequence: it reads
+//! nothing but the events and writes nothing but the hub's *sim* registry.
+//! Because the engine emits events in selection order for any `--workers N`
+//! (DESIGN.md §8), the resulting registry — and its JSON — is bit-identical
+//! across worker counts, across crash/resume, and across a live run vs an
+//! offline `bouquetfl stats` replay of its event log.
+//!
+//! The one host-domain field in the stream, `RoundRecord::host_round_s`,
+//! is deliberately ignored here (DESIGN.md §17's domain-separation
+//! contract).
+
+use crate::fl::events::{CommDirection, FailureKind, FlEvent, FlObserver};
+
+use super::registry::TIME_BUCKETS_S;
+use super::MetricsHub;
+
+/// Observer deriving the full simulated-domain metric set from the event
+/// stream; attach via `ExperimentBuilder::metrics()` or
+/// `ServerApp::with_observer`.
+#[derive(Debug)]
+pub struct MetricsObserver {
+    hub: MetricsHub,
+    /// Fit durations of this round's completed clients (selection order),
+    /// buffered for the staleness computation at `RoundScheduled` and
+    /// cleared at `RoundEnd` (empty rounds never schedule).
+    fit_pending: Vec<f64>,
+}
+
+impl MetricsObserver {
+    /// An observer recording into `hub`'s simulated registry.
+    pub fn new(hub: MetricsHub) -> MetricsObserver {
+        MetricsObserver { hub, fit_pending: Vec::new() }
+    }
+}
+
+fn direction_name(d: CommDirection) -> &'static str {
+    match d {
+        CommDirection::Download => "download",
+        CommDirection::Upload => "upload",
+    }
+}
+
+impl FlObserver for MetricsObserver {
+    fn on_event(&mut self, event: &FlEvent<'_>) {
+        match event {
+            FlEvent::RunBegin { rounds, clients } => self.hub.with(|m| {
+                m.sim.set("rounds_planned", *rounds as f64);
+                m.sim.set("federation_clients", *clients as f64);
+            }),
+            FlEvent::RoundBegin { selected, .. } => self.hub.with(|m| {
+                m.sim.inc("rounds_total", 1);
+                m.sim.inc("clients_selected", selected.len() as u64);
+            }),
+            FlEvent::RoundSkipped { wait_s, .. } => self.hub.with(|m| {
+                m.sim.inc("rounds_skipped", 1);
+                m.sim.add("emu_wait_seconds", *wait_s);
+            }),
+            FlEvent::ClientDone { fit_s, .. } => {
+                self.fit_pending.push(*fit_s);
+                self.hub.with(|m| {
+                    m.sim.inc("clients_done", 1);
+                    m.sim.add("fit_seconds_total", *fit_s);
+                    m.sim.observe("fit_seconds", TIME_BUCKETS_S, *fit_s);
+                });
+            }
+            FlEvent::ClientFailed { kind, .. } => self.hub.with(|m| {
+                m.sim.inc("clients_failed", 1);
+                let name = match kind {
+                    FailureKind::Dropout => "failures_dropout",
+                    FailureKind::Late => "failures_late",
+                    FailureKind::Fault => "failures_fault",
+                };
+                m.sim.inc(name, 1);
+            }),
+            FlEvent::AttackInjected { .. } => {
+                self.hub.with(|m| m.sim.inc("attack_injections", 1));
+            }
+            FlEvent::CommStarted { direction, wire_bytes, .. } => self.hub.with(|m| {
+                let dir = direction_name(*direction);
+                m.sim.inc(&format!("comm_transfers_{dir}"), 1);
+                m.sim.inc(&format!("comm_bytes_{dir}"), *wire_bytes);
+            }),
+            FlEvent::CommFinished { .. } => {}
+            FlEvent::RoundScheduled { schedule, .. } => {
+                // Staleness: how long a finished update waited for the
+                // round to close (the slowest participant's makespan).
+                let fits = std::mem::take(&mut self.fit_pending);
+                self.hub.with(|m| {
+                    m.sim.inc("rounds_scheduled", 1);
+                    for fit_s in &fits {
+                        let stale = (schedule.round_s - fit_s).max(0.0);
+                        m.sim.add("staleness_seconds_total", stale);
+                        m.sim.observe("staleness_seconds", TIME_BUCKETS_S, stale);
+                    }
+                });
+            }
+            FlEvent::Aggregated { survivors, .. } => self.hub.with(|m| {
+                m.sim.inc("aggregations", 1);
+                m.sim.inc("survivors_total", *survivors as u64);
+            }),
+            FlEvent::Evaluated { loss, accuracy, .. } => self.hub.with(|m| {
+                m.sim.inc("evaluations", 1);
+                m.sim.set("last_eval_loss", f64::from(*loss));
+                m.sim.set("last_eval_accuracy", f64::from(*accuracy));
+            }),
+            FlEvent::RoundEnd { record } => {
+                self.fit_pending.clear();
+                self.hub.with(|m| {
+                    m.sim.add("emu_seconds_total", record.emu_round_s);
+                    m.sim.observe("round_seconds", TIME_BUCKETS_S, record.emu_round_s);
+                    if record.train_loss.is_finite() && !record.selected.is_empty() {
+                        m.sim.set("last_train_loss", f64::from(record.train_loss));
+                    }
+                    // record.host_round_s is host-domain data riding in the
+                    // event stream; it must never enter this registry.
+                });
+            }
+            FlEvent::RunEnd { .. } => {
+                self.hub.with(|m| m.sim.inc("runs_completed", 1));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fl::history::RoundRecord;
+    use crate::sched::Schedule;
+
+    fn feed(obs: &mut MetricsObserver, events: &[FlEvent<'_>]) {
+        for e in events {
+            obs.on_event(e);
+        }
+    }
+
+    #[test]
+    fn counts_follow_the_event_stream() {
+        let hub = MetricsHub::default();
+        let mut obs = MetricsObserver::new(hub.clone());
+        let schedule = Schedule { round_s: 4.0, spans: vec![(0, 0.0, 1.0), (1, 0.0, 4.0)] };
+        let record = RoundRecord {
+            round: 0,
+            selected: vec![0, 1, 2],
+            failures: vec![],
+            train_loss: 0.5,
+            eval_loss: None,
+            eval_accuracy: None,
+            emu_round_s: 4.0,
+            host_round_s: 123.0,
+        };
+        feed(
+            &mut obs,
+            &[
+                FlEvent::RunBegin { rounds: 1, clients: 3 },
+                FlEvent::RoundBegin { round: 0, selected: &[0, 1, 2] },
+                FlEvent::CommStarted {
+                    round: 0,
+                    client: 0,
+                    direction: CommDirection::Download,
+                    at_s: 0.0,
+                    wire_bytes: 100,
+                },
+                FlEvent::CommFinished {
+                    round: 0,
+                    client: 0,
+                    direction: CommDirection::Download,
+                    at_s: 0.5,
+                },
+                FlEvent::CommStarted {
+                    round: 0,
+                    client: 0,
+                    direction: CommDirection::Upload,
+                    at_s: 0.5,
+                    wire_bytes: 40,
+                },
+                FlEvent::ClientDone { round: 0, client: 0, fit_s: 1.0 },
+                FlEvent::ClientDone { round: 0, client: 1, fit_s: 4.0 },
+                FlEvent::ClientFailed {
+                    round: 0,
+                    client: 2,
+                    kind: FailureKind::Dropout,
+                    reason: "dropout: offline",
+                },
+                FlEvent::AttackInjected { round: 0, client: 1, model: "sign-flip" },
+                FlEvent::RoundScheduled { round: 0, base_s: 0.0, schedule: &schedule },
+                FlEvent::Aggregated { round: 0, survivors: 2 },
+                FlEvent::Evaluated { round: 0, loss: 0.4, accuracy: 0.9 },
+                FlEvent::RoundEnd { record: &record },
+                FlEvent::RunEnd { rounds: 1 },
+            ],
+        );
+        let m = hub.snapshot();
+        assert_eq!(m.sim.counter("rounds_total"), 1);
+        assert_eq!(m.sim.counter("clients_selected"), 3);
+        assert_eq!(m.sim.counter("clients_done"), 2);
+        assert_eq!(m.sim.counter("clients_failed"), 1);
+        assert_eq!(m.sim.counter("failures_dropout"), 1);
+        assert_eq!(m.sim.counter("attack_injections"), 1);
+        assert_eq!(m.sim.counter("comm_transfers_download"), 1);
+        assert_eq!(m.sim.counter("comm_bytes_download"), 100);
+        assert_eq!(m.sim.counter("comm_bytes_upload"), 40);
+        assert_eq!(m.sim.counter("survivors_total"), 2);
+        assert_eq!(m.sim.counter("runs_completed"), 1);
+        // Staleness: client 0 finished at 1.0 into a 4.0 s round (3.0
+        // stale); client 1 set the makespan (0.0 stale).
+        assert_eq!(m.sim.gauge("staleness_seconds_total"), Some(3.0));
+        assert_eq!(m.sim.gauge("emu_seconds_total"), Some(4.0));
+        // host_round_s must not leak into the simulated domain.
+        assert!(m.sim.gauge("host_round_s").is_none());
+        assert!(m.host.is_empty());
+    }
+
+    #[test]
+    fn round_end_without_schedule_drops_the_staleness_buffer() {
+        let hub = MetricsHub::default();
+        let mut obs = MetricsObserver::new(hub.clone());
+        let record = RoundRecord {
+            round: 0,
+            selected: vec![0],
+            failures: vec![],
+            train_loss: f32::NAN,
+            eval_loss: None,
+            eval_accuracy: None,
+            emu_round_s: 0.0,
+            host_round_s: 0.0,
+        };
+        obs.on_event(&FlEvent::ClientDone { round: 0, client: 0, fit_s: 1.0 });
+        obs.on_event(&FlEvent::RoundEnd { record: &record });
+        assert!(obs.fit_pending.is_empty());
+        let m = hub.snapshot();
+        assert!(m.sim.gauge("staleness_seconds_total").is_none());
+        assert!(m.sim.gauge("last_train_loss").is_none(), "NaN loss must not be recorded");
+    }
+}

@@ -1,0 +1,217 @@
+//! The metrics registry: counters, gauges and fixed-bucket histograms
+//! with deterministic (sorted-key) JSON export.
+//!
+//! A [`MetricsRegistry`] is a plain value — no interior mutability, no
+//! global state.  Determinism falls out of three properties: all maps are
+//! `BTreeMap` (sorted iteration), floating-point accumulation happens in
+//! event order (which the engine already fixes to selection order,
+//! DESIGN.md §8), and JSON numbers render through `util::json`'s single
+//! formatter.  Two registries with the same update sequence therefore
+//! serialize byte-identically.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+/// Fixed bucket upper bounds (seconds) shared by the time histograms, so
+/// `fit_seconds`, `round_seconds` and `staleness_seconds` are comparable.
+/// An implicit `+Inf` overflow bucket follows the last bound.
+pub const TIME_BUCKETS_S: &[f64] = &[0.5, 1.0, 2.0, 5.0, 10.0, 30.0, 60.0, 120.0, 300.0, 600.0];
+
+/// A fixed-bucket histogram: cumulative-free per-bucket counts plus the
+/// running sum and count (Prometheus renders the cumulative form).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Histogram {
+    /// Sorted finite bucket upper bounds; observations above the last
+    /// bound land in the implicit overflow bucket.
+    pub bounds: Vec<f64>,
+    /// Per-bucket observation counts, `bounds.len() + 1` long (the last
+    /// entry is the overflow bucket).
+    pub counts: Vec<u64>,
+    /// Sum of all observed values, accumulated in observation order.
+    pub sum: f64,
+    /// Total number of observations.
+    pub count: u64,
+}
+
+impl Histogram {
+    /// An empty histogram over `bounds` (must be sorted ascending).
+    pub fn new(bounds: &[f64]) -> Histogram {
+        debug_assert!(bounds.windows(2).all(|w| w[0] < w[1]), "bounds must be sorted");
+        Histogram {
+            bounds: bounds.to_vec(),
+            counts: vec![0; bounds.len() + 1],
+            sum: 0.0,
+            count: 0,
+        }
+    }
+
+    /// Record one observation.
+    pub fn observe(&mut self, x: f64) {
+        let idx = self.bounds.iter().position(|&b| x <= b).unwrap_or(self.bounds.len());
+        self.counts[idx] += 1;
+        self.sum += x;
+        self.count += 1;
+    }
+
+    /// JSON shape: `{"bounds": [...], "count": N, "counts": [...], "sum": S}`.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("bounds", Json::Arr(self.bounds.iter().map(|&b| Json::num(b)).collect())),
+            ("count", Json::num(self.count as f64)),
+            ("counts", Json::Arr(self.counts.iter().map(|&c| Json::num(c as f64)).collect())),
+            ("sum", Json::num(self.sum)),
+        ])
+    }
+}
+
+/// A named set of counters, gauges and histograms.
+///
+/// One registry per *domain*: the simulated domain (derived purely from
+/// the event stream, bit-identical across `--workers N`) and the host
+/// domain (wall-clock phase timings, peak RSS) each get their own, and
+/// they are never mixed (DESIGN.md §17).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MetricsRegistry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    histograms: BTreeMap<String, Histogram>,
+}
+
+impl MetricsRegistry {
+    /// Increment counter `name` by `by` (created at zero on first use).
+    pub fn inc(&mut self, name: &str, by: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    /// Set gauge `name` to `v`.
+    pub fn set(&mut self, name: &str, v: f64) {
+        self.gauges.insert(name.to_string(), v);
+    }
+
+    /// Accumulate `v` into gauge `name` (created at zero on first use).
+    pub fn add(&mut self, name: &str, v: f64) {
+        *self.gauges.entry(name.to_string()).or_insert(0.0) += v;
+    }
+
+    /// Raise gauge `name` to `v` if `v` exceeds the current value.
+    pub fn set_max(&mut self, name: &str, v: f64) {
+        let slot = self.gauges.entry(name.to_string()).or_insert(v);
+        if v > *slot {
+            *slot = v;
+        }
+    }
+
+    /// Record `x` into histogram `name`, creating it over `bounds` on
+    /// first use.
+    pub fn observe(&mut self, name: &str, bounds: &[f64], x: f64) {
+        self.histograms
+            .entry(name.to_string())
+            .or_insert_with(|| Histogram::new(bounds))
+            .observe(x);
+    }
+
+    /// Current value of counter `name` (0 when absent).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Current value of gauge `name`, when set.
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    /// Histogram `name`, when any observation created it.
+    pub fn histogram(&self, name: &str) -> Option<&Histogram> {
+        self.histograms.get(name)
+    }
+
+    /// Iterate counters in sorted name order.
+    pub fn counters(&self) -> impl Iterator<Item = (&str, u64)> {
+        self.counters.iter().map(|(k, &v)| (k.as_str(), v))
+    }
+
+    /// Iterate gauges in sorted name order.
+    pub fn gauges(&self) -> impl Iterator<Item = (&str, f64)> {
+        self.gauges.iter().map(|(k, &v)| (k.as_str(), v))
+    }
+
+    /// Iterate histograms in sorted name order.
+    pub fn histograms(&self) -> impl Iterator<Item = (&str, &Histogram)> {
+        self.histograms.iter().map(|(k, v)| (k.as_str(), v))
+    }
+
+    /// True when nothing was ever recorded.
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty() && self.gauges.is_empty() && self.histograms.is_empty()
+    }
+
+    /// JSON shape: `{"counters": {..}, "gauges": {..}, "histograms": {..}}`
+    /// — keys sorted, numbers through `util::json`'s formatter, so equal
+    /// registries serialize byte-identically.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "counters",
+                Json::Obj(
+                    self.counters
+                        .iter()
+                        .map(|(k, &v)| (k.clone(), Json::num(v as f64)))
+                        .collect(),
+                ),
+            ),
+            (
+                "gauges",
+                Json::Obj(self.gauges.iter().map(|(k, &v)| (k.clone(), Json::num(v))).collect()),
+            ),
+            (
+                "histograms",
+                Json::Obj(
+                    self.histograms.iter().map(|(k, h)| (k.clone(), h.to_json())).collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_and_overflow() {
+        let mut h = Histogram::new(&[1.0, 5.0]);
+        h.observe(0.5); // bucket 0 (<= 1.0)
+        h.observe(1.0); // bucket 0 (inclusive upper bound)
+        h.observe(3.0); // bucket 1
+        h.observe(99.0); // overflow
+        assert_eq!(h.counts, vec![2, 1, 1]);
+        assert_eq!(h.count, 4);
+        assert_eq!(h.sum, 103.5);
+    }
+
+    #[test]
+    fn registry_json_is_sorted_and_stable() {
+        let mut r = MetricsRegistry::default();
+        r.inc("zebra", 2);
+        r.inc("apple", 1);
+        r.set("g", 1.5);
+        r.observe("h", &[1.0], 0.5);
+        let a = r.to_json().dump();
+        let b = r.clone().to_json().dump();
+        assert_eq!(a, b);
+        let apple = a.find("apple").unwrap();
+        let zebra = a.find("zebra").unwrap();
+        assert!(apple < zebra, "counters must serialize in sorted order");
+    }
+
+    #[test]
+    fn set_max_only_raises() {
+        let mut r = MetricsRegistry::default();
+        r.set_max("peak", 3.0);
+        r.set_max("peak", 1.0);
+        assert_eq!(r.gauge("peak"), Some(3.0));
+        r.set_max("peak", 7.0);
+        assert_eq!(r.gauge("peak"), Some(7.0));
+    }
+}

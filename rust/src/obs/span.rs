@@ -1,0 +1,82 @@
+//! The phase model for span-based tracing of the server round loop.
+//!
+//! Each round passes through the same fixed sequence of phases
+//! (select → dispatch → fit → comm → gate → fold → eval → checkpoint);
+//! the [`PhaseRecorder`](super::PhaseRecorder) times them on the host
+//! clock and records [`PhaseSpan`]s into the host-domain registry.
+
+/// A phase of the server round loop (DESIGN.md §17's span model).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Dynamics churn + participant selection.
+    Select,
+    /// Submitting fit tasks to the worker pool.
+    Dispatch,
+    /// Running (or draining) the round's client fits.
+    Fit,
+    /// Solving the netsim communication timeline and emitting comm events.
+    Comm,
+    /// Applying deadline/dropout verdicts to buffered fits.
+    Gate,
+    /// The aggregation fold (`acc.finish` + strategy reduce).
+    Fold,
+    /// Centralised evaluation.
+    Eval,
+    /// The durable round boundary (event-log sync + checkpoint).
+    Checkpoint,
+}
+
+impl Phase {
+    /// Every phase, in round-loop order.
+    pub const ALL: [Phase; 8] = [
+        Phase::Select,
+        Phase::Dispatch,
+        Phase::Fit,
+        Phase::Comm,
+        Phase::Gate,
+        Phase::Fold,
+        Phase::Eval,
+        Phase::Checkpoint,
+    ];
+
+    /// Stable lower-case name used in metric names and trace labels.
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Select => "select",
+            Phase::Dispatch => "dispatch",
+            Phase::Fit => "fit",
+            Phase::Comm => "comm",
+            Phase::Gate => "gate",
+            Phase::Fold => "fold",
+            Phase::Eval => "eval",
+            Phase::Checkpoint => "checkpoint",
+        }
+    }
+}
+
+/// One timed phase execution, in host seconds relative to the recorder's
+/// epoch (host domain — never compared across runs).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PhaseSpan {
+    /// Which phase ran.
+    pub phase: Phase,
+    /// Host seconds since the recorder epoch when the phase began.
+    pub start_s: f64,
+    /// Host seconds since the recorder epoch when the phase ended.
+    pub end_s: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_are_unique_and_lowercase() {
+        let mut seen = std::collections::BTreeSet::new();
+        for p in Phase::ALL {
+            assert!(seen.insert(p.name()), "duplicate phase name {}", p.name());
+            assert_eq!(p.name(), p.name().to_lowercase());
+        }
+        assert_eq!(seen.len(), 8);
+    }
+}

@@ -254,6 +254,10 @@ pub struct ReorderBuffer {
     pending: Vec<Option<FitOutcomeSlim>>,
     next: usize,
     ready: VecDeque<FitOutcomeSlim>,
+    /// Outcomes currently held waiting for an earlier client (kept in
+    /// lockstep with `held_back()` so the peak is O(1) to track).
+    held: usize,
+    peak_held: usize,
 }
 
 /// The outcome fields the server folds (the client box has already been
@@ -270,6 +274,8 @@ impl ReorderBuffer {
             pending: (0..expected).map(|_| None).collect(),
             next: 0,
             ready: VecDeque::new(),
+            held: 0,
+            peak_held: 0,
         }
     }
 
@@ -280,15 +286,18 @@ impl ReorderBuffer {
         assert!(i < self.pending.len(), "outcome index {i} out of range");
         assert!(self.pending[i].is_none(), "duplicate outcome for index {i}");
         self.pending[i] = Some(outcome);
+        self.held += 1;
         while self.next < self.pending.len() {
             match self.pending[self.next].take() {
                 Some(o) => {
                     self.ready.push_back(o);
                     self.next += 1;
+                    self.held -= 1;
                 }
                 None => break,
             }
         }
+        self.peak_held = self.peak_held.max(self.held);
     }
 
     pub fn pop_ready(&mut self) -> Option<FitOutcomeSlim> {
@@ -300,6 +309,14 @@ impl ReorderBuffer {
     /// skew, not federation size).
     pub fn held_back(&self) -> usize {
         self.pending[self.next..].iter().filter(|o| o.is_some()).count()
+    }
+
+    /// High-water mark of [`ReorderBuffer::held_back`] over the buffer's
+    /// lifetime — what the determinism contract's transient buffering
+    /// actually cost this round (exported as the host-domain gauge
+    /// `reorder_peak_held_back`).
+    pub fn peak_held_back(&self) -> usize {
+        self.peak_held
     }
 }
 
@@ -420,5 +437,7 @@ mod tests {
         buf.accept(slim(3));
         assert_eq!(buf.pop_ready().unwrap().index, 3);
         assert_eq!(buf.held_back(), 0);
+        // index 2 waited alone for 0 and 1; nothing else was ever held.
+        assert_eq!(buf.peak_held_back(), 1);
     }
 }

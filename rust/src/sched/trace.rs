@@ -8,6 +8,10 @@ use crate::util::json::Json;
 pub struct TraceEvent {
     pub client: u32,
     pub label: String,
+    /// Chrome-trace category: "fit" for schedule slots, "comm" for netsim
+    /// transfers, "attack" for injection markers, "phase" for host-domain
+    /// round-loop phases.
+    pub cat: &'static str,
     pub t_start_s: f64,
     pub t_end_s: f64,
 }
@@ -20,10 +24,23 @@ pub struct Trace {
 
 impl Trace {
     pub fn add(&mut self, client: u32, label: impl Into<String>, t_start_s: f64, t_end_s: f64) {
+        self.add_cat(client, label, "fit", t_start_s, t_end_s);
+    }
+
+    /// Like [`Trace::add`] with an explicit Chrome-trace category.
+    pub fn add_cat(
+        &mut self,
+        client: u32,
+        label: impl Into<String>,
+        cat: &'static str,
+        t_start_s: f64,
+        t_end_s: f64,
+    ) {
         assert!(t_end_s >= t_start_s, "span ends before it starts");
         self.events.push(TraceEvent {
             client,
             label: label.into(),
+            cat,
             t_start_s,
             t_end_s,
         });
@@ -63,7 +80,7 @@ impl Trace {
                 .map(|e| {
                     Json::obj(vec![
                         ("name", Json::str(e.label.clone())),
-                        ("cat", Json::str("fit")),
+                        ("cat", Json::str(e.cat)),
                         ("ph", Json::str("X")),
                         ("ts", Json::num(e.t_start_s * 1e6)),
                         ("dur", Json::num((e.t_end_s - e.t_start_s) * 1e6)),
@@ -100,6 +117,16 @@ mod tests {
         let e = &j.as_arr().unwrap()[0];
         assert_eq!(e.get("tid").unwrap().as_f64().unwrap(), 3.0);
         assert_eq!(e.get("dur").unwrap().as_f64().unwrap(), 0.75 * 1e6);
+        assert_eq!(e.get("cat").unwrap().as_str().unwrap(), "fit");
+    }
+
+    #[test]
+    fn categories_flow_through_to_chrome_json() {
+        let mut t = Trace::default();
+        t.add_cat(1, "downlink", "comm", 0.0, 2.0);
+        let e = &t.to_chrome_json().as_arr().unwrap()[0];
+        assert_eq!(e.get("cat").unwrap().as_str().unwrap(), "comm");
+        assert_eq!(e.get("name").unwrap().as_str().unwrap(), "downlink");
     }
 
     #[test]

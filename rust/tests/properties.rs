@@ -6,7 +6,7 @@
 use bouquetfl::analysis::correlation::{kendall_tau_b, pearson, spearman};
 use bouquetfl::data::{generate, partition, PartitionScheme, SyntheticConfig};
 use bouquetfl::emu::{FitReport, GpuTimingModel, MpsPartition, Optimizer, VramAllocator};
-use bouquetfl::durable::DurableOptions;
+use bouquetfl::durable::{self, DurableOptions};
 use bouquetfl::fl::{
     AccOutput, AggAccumulator, ClientManager, Experiment, ExperimentReport, FitResult,
     ParamVector, Selection, StreamingMean, TreeMean, SCENARIO_PRESETS,
@@ -909,5 +909,137 @@ fn tree_fold_resumed_from_checkpoint_is_bit_identical() {
         .expect("resume runs");
     let unbroken = mk().build().expect("clean builds").run().expect("clean runs");
     assert_bit_identical_runs("tree fold resume", &resumed, &unbroken);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// One metrics-enabled federation; `axis` composes the comm and attack
+/// layers on top of the scenario like `tree_run` above.  The returned
+/// report's `sim_json().pretty()` string is the byte-identity surface
+/// DESIGN.md §17 promises.
+fn metrics_run(preset: &str, workers: usize, axis: &str, seed: u64) -> ExperimentReport {
+    let mut b = Experiment::builder()
+        .clients(8)
+        .rounds(5)
+        .samples_per_client(40)
+        .batch(16)
+        .selection(Selection::Fraction(0.75))
+        .network(true)
+        .seed(seed)
+        .workers(workers)
+        .scenario_named(preset)
+        .eval_every(0)
+        .fail_on_empty_round(false)
+        .metrics()
+        .simulated(96);
+    match axis {
+        "netsim" => b = b.netsim_named("congested-cell"),
+        "attack" => b = b.attack_named("sign-flip"),
+        _ => {}
+    }
+    b.build()
+        .unwrap_or_else(|e| panic!("{preset}/{axis}: build failed: {e}"))
+        .run()
+        .unwrap_or_else(|e| panic!("{preset}/{axis}: run failed: {e}"))
+}
+
+/// The rendered simulated-domain metrics document from a report.
+fn sim_doc(report: &ExperimentReport, label: &str) -> String {
+    report
+        .metrics
+        .as_ref()
+        .unwrap_or_else(|| panic!("{label}: .metrics() run carries no metrics"))
+        .sim_json()
+        .pretty()
+}
+
+/// Simulated-domain metrics are a pure fold over the event stream, and
+/// events are emitted in selection order for any worker count — so the
+/// whole metrics.json document is bit-identical across `--workers {1,4}`
+/// for every scenario preset, with and without the netsim and attack
+/// axes stacked on.  (Host-domain metrics are excluded by construction:
+/// `sim_json` never touches them.)
+#[test]
+fn sim_metrics_bit_identical_across_workers_scenarios_and_axes() {
+    for &preset in SCENARIO_PRESETS {
+        for axis in ["plain", "netsim", "attack"] {
+            let a = metrics_run(preset, 1, axis, 61);
+            let b = metrics_run(preset, 4, axis, 61);
+            let label = format!("{preset}/{axis}");
+            let doc = sim_doc(&a, &label);
+            assert_eq!(doc, sim_doc(&b, &label), "{label}: sim metrics diverged across workers");
+            assert!(
+                doc.contains("\"clients_selected\""),
+                "{label}: the fold saw no selections:\n{doc}"
+            );
+            if axis == "netsim" {
+                assert!(
+                    doc.contains("\"comm_bytes_upload\""),
+                    "{label}: netsim run recorded no comm bytes:\n{doc}"
+                );
+            }
+            if axis == "attack" {
+                assert!(
+                    doc.contains("\"attack_injections\""),
+                    "{label}: armed run recorded no injections:\n{doc}"
+                );
+            }
+        }
+    }
+}
+
+/// `bouquetfl stats` is the live observer run offline: folding a durable
+/// run's event log through `durable::replay_metrics` must reproduce the
+/// live run's metrics.json byte-for-byte — even when the live run is
+/// itself a crash-and-resume stitched from a replayed prefix plus a
+/// fresh tail, and the clean uninterrupted run must agree with both.
+#[test]
+fn stats_replay_matches_live_metrics_byte_for_byte() {
+    let dir = std::env::temp_dir()
+        .join(format!("bouquetfl-stats-replay-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mk = || {
+        Experiment::builder()
+            .clients(8)
+            .rounds(6)
+            .samples_per_client(40)
+            .batch(16)
+            .selection(Selection::Fraction(0.75))
+            .network(true)
+            .seed(67)
+            .workers(4)
+            .scenario_named("diurnal-mobile")
+            .netsim_named("congested-cell")
+            .eval_every(0)
+            .fail_on_empty_round(false)
+            .metrics()
+            .simulated(96)
+    };
+    let crashed = mk()
+        .durable_options(DurableOptions::new(&dir).crash_after(3))
+        .build()
+        .expect("crash-point run builds")
+        .run();
+    match crashed {
+        Ok(_) => panic!("crash-point run unexpectedly succeeded"),
+        Err(e) => {
+            let msg = format!("{e}");
+            assert!(msg.contains("crash point"), "unexpected error: {msg}");
+        }
+    }
+
+    let resumed = mk().resume(&dir).build().expect("resume builds").run().expect("resume runs");
+    let live = sim_doc(&resumed, "resumed");
+
+    let log = durable::read_log(&dir.join(durable::EVENT_LOG_FILE)).expect("log reads");
+    assert!(!log.truncated, "durable log has a torn tail");
+    let stats = durable::replay_metrics(&log.events).sim_json().pretty();
+    assert_eq!(stats, live, "stats fold diverged from the live observer");
+
+    let unbroken = mk().build().expect("clean builds").run().expect("clean runs");
+    assert_eq!(
+        sim_doc(&unbroken, "unbroken"),
+        live,
+        "resumed metrics diverged from the uninterrupted run"
+    );
     let _ = std::fs::remove_dir_all(&dir);
 }
